@@ -1,0 +1,50 @@
+//! Byzantine gauntlet demo: every GAR against every attack on the
+//! quadratic workload — the "who survives what" matrix of the paper's
+//! resilience claims (weak rules fall to little-is-enough; MULTI-BULYAN
+//! survives everything at n ≥ 4f+3).
+//!
+//! ```bash
+//! cargo run --release --example byzantine_gauntlet
+//! ```
+
+use multibulyan::bench::resilience::{run, GauntletConfig};
+use multibulyan::Result;
+
+fn main() -> Result<()> {
+    let cfg = GauntletConfig {
+        steps: 300,
+        dim: 256,
+        ..Default::default()
+    };
+    println!(
+        "resilience gauntlet: n={}, f={}, quadratic dim={}, {} steps\n",
+        cfg.n, cfg.f, cfg.dim, cfg.steps
+    );
+    let rows = run(&cfg, false)?;
+
+    // Headline checks, mirroring the paper's claims.
+    let get = |gar: &str, attack: &str| {
+        rows.iter()
+            .find(|r| r.gar.as_str() == gar && r.attack == attack)
+            .map(|r| r.converged)
+            .unwrap_or(false)
+    };
+    println!("\npaper-claim checklist:");
+    println!(
+        "  averaging breaks under sign-flip:        {}",
+        if !get("average", "sign-flip") { "✓" } else { "✗ (unexpected)" }
+    );
+    println!(
+        "  multi-krum survives sign-flip:           {}",
+        if get("multi-krum", "sign-flip") { "✓" } else { "✗" }
+    );
+    println!(
+        "  multi-bulyan survives little-is-enough:  {}",
+        if get("multi-bulyan", "little-is-enough") { "✓" } else { "✗" }
+    );
+    println!(
+        "  multi-bulyan survives omniscient:        {}",
+        if get("multi-bulyan", "omniscient") { "✓" } else { "✗" }
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: aggregate gradients with every GAR, then run a short
+//! Byzantine-free distributed training on the rust-native workload.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No AOT artifacts required — this exercises the pure-rust path. For the
+//! full three-layer stack (JAX/Pallas artifacts via PJRT), see
+//! `examples/e2e_train.rs` after `make artifacts`.
+
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::launch;
+use multibulyan::gar::GarKind;
+use multibulyan::tensor::GradMatrix;
+use multibulyan::util::Rng64;
+use multibulyan::Result;
+
+fn main() -> Result<()> {
+    // --- 1. One-shot aggregation with each rule -------------------------
+    let (n, f, d) = (11, 2, 10_000);
+    let mut rng = Rng64::seed_from_u64(0);
+    let grads = GradMatrix::uniform(n, d, -1.0, 1.0, &mut rng);
+    println!("aggregating {n} random gradients of dimension {d} (f = {f}):");
+    for kind in GarKind::ALL {
+        let gar = kind.instantiate(n, f)?;
+        let sw = multibulyan::metrics::Stopwatch::start();
+        let out = gar.aggregate(&grads)?;
+        println!(
+            "  {:<13} {:>8.3} ms   ‖out‖ = {:.4}   gradients used: {}",
+            gar.name(),
+            sw.elapsed_ms(),
+            multibulyan::tensor::l2_norm(&out),
+            gar.gradients_used()
+        );
+    }
+
+    // --- 2. A short distributed training run ----------------------------
+    let config = ExperimentConfig {
+        cluster: ClusterConfig {
+            n,
+            f,
+            actual_byzantine: Some(0),
+            net_delay_us: 50,
+            drop_prob: 0.0,
+            round_timeout_ms: 60_000,
+        },
+        gar: GarKind::MultiBulyan,
+        attack: multibulyan::attacks::AttackKind::None,
+        model: ModelConfig::Quadratic {
+            dim: 1_000,
+            noise: 0.5,
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.9,
+            steps: 200,
+            batch_size: 16,
+            eval_every: 40,
+            seed: 1,
+        },
+        output_dir: None,
+    };
+    println!("\ntraining the quadratic workload with MULTI-BULYAN (n={n}, f={f}, no attack):");
+    let cluster = launch(&config, None)?;
+    let mut coordinator = cluster.coordinator;
+    let mut evaluator = cluster.evaluator;
+    coordinator.train(200, 40, &mut evaluator)?;
+    for p in coordinator.metrics.curve() {
+        println!("  step {:>4}   loss {:.6}", p.step, p.loss);
+    }
+    let final_loss = coordinator.metrics.final_loss().unwrap();
+    coordinator.shutdown();
+    println!("final loss: {final_loss:.6} (converged: {})", final_loss < 1e-3);
+    Ok(())
+}

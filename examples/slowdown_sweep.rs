@@ -1,0 +1,34 @@
+//! Slowdown sweep: measure the m̃/n slowdown of Theorem 1.ii / 2.iii by
+//! comparing steps-to-convergence against averaging in the Byzantine-free
+//! setting, across m values for MULTI-KRUM plus MULTI-BULYAN and MEDIAN.
+//!
+//! ```bash
+//! cargo run --release --example slowdown_sweep
+//! ```
+
+use multibulyan::bench::slowdown::{run, SlowdownConfig};
+use multibulyan::Result;
+
+fn main() -> Result<()> {
+    let cfg = SlowdownConfig::default();
+    println!(
+        "slowdown sweep on the quadratic workload: n={}, f={}, d={}, σ={} (b={})\n\
+         slowdown := steps(average)/steps(rule); theory predicts m̃/n\n",
+        cfg.n, cfg.f, cfg.dim, cfg.noise, cfg.batch_size
+    );
+    let rows = run(&cfg, false)?;
+    println!("\nmeasured-vs-predicted:");
+    for r in rows {
+        if let Some(s) = r.slowdown_vs_average {
+            println!(
+                "  {:<18} measured {:.3} vs predicted {:.3} (×n: {:.1} vs {})",
+                r.label,
+                s,
+                r.predicted,
+                s * cfg.n as f64,
+                r.gradients_used
+            );
+        }
+    }
+    Ok(())
+}

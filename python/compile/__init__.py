@@ -1,0 +1,4 @@
+"""Build-time Python for the multibulyan repro: Layer-1 Pallas kernels
+(`kernels/`), Layer-2 JAX models and GAR graphs (`model.py`, `gar.py`),
+and the AOT pipeline (`aot.py`) that lowers everything to the HLO-text
+artifacts the rust runtime executes. Never imported at serving time."""

@@ -1,0 +1,174 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO **text** artifacts +
+manifest.json + initial-parameter binaries.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick] [--full-cnn]
+
+``--quick`` builds the minimal artifact set for smoke tests; the default
+builds everything the benches need. Incrementality is handled by the
+Makefile (mtime comparison), not here.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import gar as gar_graphs
+from . import model as models
+from .kernels.sgd import sgd_momentum_update
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side always unpacks a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = {}
+        self.models = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add_artifact(self, name: str, fn, example_args, outputs: int):
+        """Lower ``fn`` at ``example_args`` (ShapeDtypeStructs) and record
+        the manifest entry."""
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": [
+                {
+                    "dtype": {"float32": "f32", "int32": "i32"}[str(a.dtype)],
+                    "shape": list(a.shape),
+                }
+                for a in example_args
+            ],
+            "outputs": outputs,
+        }
+        print(f"  {name}: {len(text)} chars")
+
+    def write_init(self, fname: str, flat) -> None:
+        np.asarray(flat, dtype="<f4").tofile(os.path.join(self.out_dir, fname))
+
+    def finish(self):
+        manifest = {"artifacts": self.artifacts, "models": self.models}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print(
+            f"manifest: {len(self.artifacts)} artifacts, "
+            f"{len(self.models)} models → {self.out_dir}/manifest.json"
+        )
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_model(b: Builder, name: str, batch_sizes, eval_batch: int):
+    """Gradient artifacts (one per batch size) + eval artifact + init."""
+    mdef = models.MODELS[name]
+    flat, _ = mdef.flat_init(seed=0)
+    d = int(flat.shape[0])
+    print(f"model {name}: d = {d}")
+    init_file = f"{name}_init.f32bin"
+    b.write_init(init_file, flat)
+
+    grad_fn = mdef.make_grad_fn()
+    feat = mdef.feature_shape
+    label_dtype = jnp.int32
+    grad_map = {}
+    for bs in batch_sizes:
+        art = f"{name}_grad_b{bs}"
+        if mdef.is_lm:
+            args = (sds((d,)), sds((bs,) + feat, label_dtype), sds((bs,) + feat, label_dtype))
+        else:
+            args = (sds((d,)), sds((bs,) + feat), sds((bs,), label_dtype))
+        b.add_artifact(art, grad_fn, args, outputs=2)
+        grad_map[str(bs)] = art
+
+    eval_art = None
+    if eval_batch and not mdef.is_lm:
+        eval_art = f"{name}_eval_b{eval_batch}"
+        eval_fn = mdef.make_eval_fn()
+        args = (sds((d,)), sds((eval_batch,) + feat), sds((eval_batch,), label_dtype))
+        b.add_artifact(eval_art, eval_fn, args, outputs=2)
+
+    b.models[name] = {
+        "dim": d,
+        "init_file": init_file,
+        "grad": grad_map,
+        "eval": eval_art,
+        "eval_batch": eval_batch if eval_art else 0,
+        "feature_dim": int(np.prod(feat)),
+        "num_classes": mdef.num_classes,
+    }
+
+
+def build_gars(b: Builder, n: int, f: int, d: int):
+    """GAR artifacts at a fixed (n, f, d) — the rust↔python cross-check
+    set and the `gar-demo` path."""
+    for rule in ["average", "median", "krum", "multi-krum", "bulyan", "multi-bulyan"]:
+        fn = gar_graphs.RULES[rule]
+        name = f"gar_{rule.replace('-', '_')}_n{n}_f{f}_d{d}"
+        b.add_artifact(
+            name, lambda g, _fn=fn: (_fn(g, f),), (sds((n, d)),), outputs=1
+        )
+
+
+def build_sgd(b: Builder, d: int):
+    """Fused SGD+momentum update artifact at dimension d."""
+    b.add_artifact(
+        f"sgd_d{d}",
+        sgd_momentum_update,
+        (sds((d,)), sds((d,)), sds((d,)), sds((1,)), sds((1,))),
+        outputs=2,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="minimal artifact set")
+    ap.add_argument(
+        "--full-cnn", action="store_true", help="paper-width CNN (d=431,080)"
+    )
+    args = ap.parse_args()
+    b = Builder(args.out_dir)
+
+    if args.quick:
+        build_model(b, "mlp", [5, 25], eval_batch=200)
+        build_gars(b, n=11, f=2, d=1024)
+        build_sgd(b, d=1024)
+    else:
+        build_model(b, "mlp", [5, 10, 15, 20, 25, 30, 35, 40, 45, 50], eval_batch=200)
+        build_model(b, "cnn", [5, 25, 50], eval_batch=200)
+        build_model(b, "transformer", [8], eval_batch=0)
+        if args.full_cnn:
+            build_model(b, "cnn_paper", [25], eval_batch=200)
+        build_gars(b, n=11, f=2, d=1024)
+        build_gars(b, n=7, f=1, d=1024)
+        build_sgd(b, d=1024)
+
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

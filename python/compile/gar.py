@@ -1,0 +1,144 @@
+"""Layer-2 GAR computation graphs — the paper's Algorithm 1 in JAX,
+built on the Layer-1 Pallas kernels (`kernels/pairwise.py`,
+`kernels/coordwise.py`).
+
+These graphs are AOT-lowered per (n, f, d) to HLO artifacts
+(``gar_<rule>_n{n}_f{f}_d{d}``) that the rust runtime cross-checks
+against its native implementations — three independent implementations
+(jnp oracle ↔ Pallas/JAX graph ↔ native rust) of the same algorithm.
+
+Static-shape notes: BULYAN's θ iterations remove one gradient from the
+pool each time, so the per-iteration MULTI-KRUM runs with a *traced*
+pool size k. Dynamic counts (neighbors = k−f−2, selection size m = k−f−2)
+are expressed with `arange < k` masks over sorted/argsorted arrays, which
+keeps every shape static while matching the dynamic-pool semantics of
+the rust implementation exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.coordwise import bulyan_coordwise
+from .kernels.pairwise import pairwise_sq_distances
+
+_INF = jnp.float32(jnp.inf)
+
+
+def average(grads):
+    """The non-resilient baseline: coordinate-wise mean. (n, d) → (d,)."""
+    return jnp.mean(grads, axis=0)
+
+
+def coord_median(grads):
+    """Coordinate-wise median (the paper's MEDIAN comparator)."""
+    return jnp.median(grads, axis=0)
+
+
+def _krum_scores_static(dists, f):
+    """Krum scores with the full pool (static neighbor count n−f−2)."""
+    n = dists.shape[0]
+    neighbors = n - f - 2
+    masked = dists + jnp.where(jnp.eye(n, dtype=bool), _INF, 0.0)
+    sorted_d = jnp.sort(masked, axis=1)
+    return jnp.sum(sorted_d[:, :neighbors], axis=1)
+
+
+def multi_krum(grads, f, m=None):
+    """MULTI-KRUM: average of the m = n−f−2 smallest-scoring gradients.
+
+    Uses the Pallas pairwise-distance kernel for the O(n²d) hot spot.
+    """
+    n = grads.shape[0]
+    if m is None:
+        m = n - f - 2
+    assert 1 <= m <= n - f - 2, (n, f, m)
+    dists = pairwise_sq_distances(grads)
+    scores = _krum_scores_static(dists, f)
+    selected = jnp.argsort(scores)[:m]  # static m → static shapes
+    return jnp.mean(grads[selected], axis=0)
+
+
+def krum(grads, f):
+    """KRUM: the single smallest-scoring gradient."""
+    return multi_krum(grads, f, m=1)
+
+
+def _masked_krum_scores(dists, alive, k, f):
+    """Krum scores over the alive sub-pool of (traced) size k.
+
+    Dead rows/columns are masked to +inf; the neighbor count k−f−2 is a
+    traced scalar handled with an `arange < count` mask over the sorted
+    distances.
+    """
+    n = dists.shape[0]
+    neighbors = k - f - 2  # traced i32
+    pair_alive = alive[:, None] * alive[None, :]
+    masked = jnp.where(pair_alive > 0, dists, _INF)
+    masked = masked + jnp.where(jnp.eye(n, dtype=bool), _INF, 0.0)
+    sorted_d = jnp.sort(masked, axis=1)
+    take = (jnp.arange(n)[None, :] < neighbors).astype(dists.dtype)
+    # +inf entries can only be hit if take already zero there (alive pool
+    # has ≥ neighbors finite distances by construction) — but 0·inf = nan,
+    # so zero them out before weighting.
+    finite = jnp.where(jnp.isfinite(sorted_d), sorted_d, 0.0)
+    scores = jnp.sum(finite * take, axis=1)
+    return jnp.where(alive > 0, scores, _INF)
+
+
+def multi_bulyan(grads, f, multi=True):
+    """MULTI-BULYAN (Algorithm 1). ``multi=False`` gives classic BULYAN
+    over KRUM (G^agr = G^ext)."""
+    n, d = grads.shape
+    assert n >= 4 * f + 3, (n, f)
+    theta = n - 2 * f - 2
+    beta = theta - 2 * f
+    dists = pairwise_sq_distances(grads)  # computed ONCE (paper §V-B)
+
+    def body(t, state):
+        alive, ext, agr = state
+        k = n - t  # traced pool size
+        scores = _masked_krum_scores(dists, alive, k, f)
+        winner = jnp.argmin(scores)
+        m_round = k - f - 2
+        # Selection mask: the m_round smallest-scoring alive gradients.
+        order = jnp.argsort(scores)
+        sel = jnp.zeros((n,), jnp.float32).at[order].set(
+            (jnp.arange(n) < m_round).astype(jnp.float32)
+        )
+        agr_row = (sel @ grads) / m_round.astype(jnp.float32)
+        ext_row = grads[winner]
+        ext = jax.lax.dynamic_update_slice(ext, ext_row[None, :], (t, 0))
+        agr = jax.lax.dynamic_update_slice(agr, agr_row[None, :], (t, 0))
+        alive = alive.at[winner].set(0.0)
+        return alive, ext, agr
+
+    alive0 = jnp.ones((n,), jnp.float32)
+    ext0 = jnp.zeros((theta, d), jnp.float32)
+    agr0 = jnp.zeros((theta, d), jnp.float32)
+    alive, ext, agr = jax.lax.fori_loop(0, theta, body, (alive0, ext0, agr0))
+    src = agr if multi else ext
+    return bulyan_coordwise(ext, src, beta)
+
+
+def bulyan(grads, f):
+    """Classic BULYAN over KRUM winners."""
+    return multi_bulyan(grads, f, multi=False)
+
+
+#: name → (fn(grads, f), needs_f) registry used by aot.py and the tests.
+RULES = {
+    "average": lambda g, f: average(g),
+    "median": lambda g, f: coord_median(g),
+    "krum": krum,
+    "multi-krum": multi_krum,
+    "bulyan": bulyan,
+    "multi-bulyan": multi_bulyan,
+}
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def aggregate_jit(grads, rule: str, f: int):
+    """Jitted dispatch (test convenience)."""
+    return RULES[rule](grads, f)

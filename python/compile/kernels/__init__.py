@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the MULTI-BULYAN aggregation hot spots.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernel body to
+plain HLO ops that any backend runs (see /opt/xla-example/README.md).
+The BlockSpec structure — how HBM tiles stream through VMEM — is the TPU
+design being expressed; DESIGN.md §Hardware-Adaptation maps it back to
+the paper's CUDA formulation.
+"""
+
+from .pairwise import pairwise_sq_distances
+from .coordwise import bulyan_coordwise
+from .sgd import sgd_momentum_update
+
+__all__ = [
+    "pairwise_sq_distances",
+    "bulyan_coordwise",
+    "sgd_momentum_update",
+]

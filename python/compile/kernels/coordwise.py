@@ -1,0 +1,76 @@
+"""BULYAN's coordinate-wise median + closest-β average as a Pallas kernel
+(lines 21–24 of the paper's Algorithm 1 — the "single loop through the
+coordinates" behind the O(d) complexity claim).
+
+Grid: d is tiled into BLOCK_D-wide column stripes. Each grid step loads
+the (θ, BLOCK_D) stripes of G^ext (the per-iteration MULTI-KRUM winners)
+and G^agr (the per-iteration MULTI-KRUM averages), computes the
+per-column median of ext, ranks |agr − median| per column, and averages
+the β closest agr values. θ ≤ 64, so the per-column sort vectorises on
+the VPU's 8×128 lanes — no shared-memory bitonic network needed
+(DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 2048
+
+
+def _make_kernel(beta: int):
+    def kernel(ext_ref, agr_ref, out_ref):
+        ext = ext_ref[...].astype(jnp.float32)  # (theta, block_d)
+        agr = agr_ref[...].astype(jnp.float32)  # (theta, block_d)
+        med = jnp.median(ext, axis=0)  # (block_d,)
+        dev = jnp.abs(agr - med[None, :])
+        # Rank each column by deviation; keep the β smallest.
+        order = jnp.argsort(dev, axis=0)  # (theta, block_d)
+        closest = jnp.take_along_axis(agr, order[:beta, :], axis=0)
+        out_ref[...] = jnp.mean(closest, axis=0)
+
+    return kernel
+
+
+def bulyan_coordwise(
+    ext: jax.Array,
+    agr: jax.Array,
+    beta: int,
+    block_d: int = DEFAULT_BLOCK_D,
+) -> jax.Array:
+    """Per coordinate: average of the ``beta`` values of ``agr`` closest
+    to the median of ``ext`` (classic BULYAN passes ``agr = ext``).
+
+    ``ext``/``agr``: (θ, d). Returns (d,).
+    """
+    theta, d = ext.shape
+    assert agr.shape == (theta, d), (ext.shape, agr.shape)
+    assert 1 <= beta <= theta, (beta, theta)
+    pad = (-d) % block_d
+    if pad:
+        # Zero-padding is safe: padded columns produce garbage that the
+        # final slice drops.
+        ext = jnp.pad(ext, ((0, 0), (0, pad)))
+        agr = jnp.pad(agr, ((0, 0), (0, pad)))
+    d_padded = d + pad
+    steps = d_padded // block_d
+
+    out = pl.pallas_call(
+        _make_kernel(beta),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((theta, block_d), lambda i: (0, i)),
+            pl.BlockSpec((theta, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_padded,), jnp.float32),
+        interpret=True,
+    )(ext, agr)
+    return out[:d]
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def bulyan_coordwise_jit(ext, agr, beta: int, block_d: int = DEFAULT_BLOCK_D):
+    return bulyan_coordwise(ext, agr, beta, block_d)

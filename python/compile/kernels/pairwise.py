@@ -1,0 +1,74 @@
+"""Pairwise squared ℓ2 distances — the O(n²d) MULTI-KRUM hot spot as a
+Pallas kernel.
+
+TPU formulation (DESIGN.md §Hardware-Adaptation): the distance matrix is
+computed via the Gram trick ‖Gᵢ−Gⱼ‖² = ‖Gᵢ‖² + ‖Gⱼ‖² − 2⟨Gᵢ,Gⱼ⟩, so the
+dominant work is the (n×BLOCK_D)·(BLOCK_D×n) stripe matmul which maps
+straight onto the MXU systolic array. The grid iterates over d in
+BLOCK_D-wide stripes; each grid step streams one stripe of all n rows
+through VMEM (n·BLOCK_D·4 B ≈ 1 MiB at n=64, BLOCK_D=4096) and
+accumulates into the (n, n) output block, which stays resident across
+the whole grid (Pallas keeps same-index output blocks in VMEM between
+steps). This is the HBM↔VMEM schedule the paper's CUDA kernel expressed
+with threadblocks + shared memory.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Stripe width in elements. See the VMEM budget above.
+DEFAULT_BLOCK_D = 4096
+
+
+def _pairwise_kernel(g_ref, out_ref):
+    """One grid step: accumulate the stripe's partial distances."""
+    step = pl.program_id(0)
+    g = g_ref[...].astype(jnp.float32)  # (n, block_d) stripe
+    sq = jnp.sum(g * g, axis=1)  # ‖Gᵢ‖² over the stripe
+    gram = jnp.dot(g, g.T)  # MXU: (n, n) stripe Gram
+    partial = sq[:, None] + sq[None, :] - 2.0 * gram
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+def pairwise_sq_distances(grads: jax.Array, block_d: int = DEFAULT_BLOCK_D) -> jax.Array:
+    """All-pairs squared distances of the rows of ``grads`` (n, d).
+
+    Returns an (n, n) symmetric matrix with zero diagonal. ``d`` is padded
+    to a multiple of ``block_d`` with zeros — padding both operands with
+    equal values adds (0−0)² = 0 to every distance, so the result is
+    exact.
+    """
+    n, d = grads.shape
+    pad = (-d) % block_d
+    if pad:
+        grads = jnp.pad(grads, ((0, 0), (0, pad)))
+    d_padded = d + pad
+    steps = d_padded // block_d
+
+    out = pl.pallas_call(
+        _pairwise_kernel,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((n, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(grads)
+    # Numerical hygiene: the Gram trick can produce tiny negatives for
+    # near-identical rows; distances are non-negative by definition.
+    out = jnp.maximum(out, 0.0)
+    # Exact-zero diagonal (the Gram trick leaves ~1e-6 residue there).
+    return out * (1.0 - jnp.eye(n, dtype=out.dtype))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def pairwise_sq_distances_jit(grads: jax.Array, block_d: int = DEFAULT_BLOCK_D) -> jax.Array:
+    """Jitted wrapper (used by the pytest benchmarks)."""
+    return pairwise_sq_distances(grads, block_d)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness reference
+the pytest suite asserts against (`python/tests/test_kernels.py`), and
+the baseline for the roofline comparison in EXPERIMENTS.md §Perf."""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_distances_ref(grads):
+    """Naive all-pairs squared distances: (n, d) → (n, n)."""
+    diff = grads[:, None, :] - grads[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def bulyan_coordwise_ref(ext, agr, beta):
+    """Per coordinate: average of the beta values of ``agr`` closest to
+    the median of ``ext``. (θ, d) × (θ, d) → (d,)."""
+    med = jnp.median(ext, axis=0)
+    dev = jnp.abs(agr - med[None, :])
+    order = jnp.argsort(dev, axis=0)
+    closest = jnp.take_along_axis(agr, order[:beta, :], axis=0)
+    return jnp.mean(closest, axis=0)
+
+
+def sgd_momentum_update_ref(params, velocity, grad, lr, momentum):
+    """PyTorch-convention SGD+momentum (matches rust `training::Sgd`)."""
+    v_new = momentum * velocity + grad
+    p_new = params - lr * v_new
+    return p_new, v_new
+
+
+def krum_scores_ref(dists, f):
+    """Krum scores from a (n, n) distance matrix: sum of the n−f−2
+    smallest distances to *other* gradients (paper Equation 4)."""
+    n = dists.shape[0]
+    neighbors = n - f - 2
+    # Exclude self-distance by masking the diagonal to +inf.
+    masked = dists + jnp.where(jnp.eye(n, dtype=bool), jnp.inf, 0.0)
+    sorted_d = jnp.sort(masked, axis=1)
+    return jnp.sum(sorted_d[:, :neighbors], axis=1)

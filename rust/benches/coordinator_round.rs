@@ -1,0 +1,71 @@
+//! End-to-end round latency: broadcast → collect → forge → aggregate →
+//! update on the rust-native workload. This is the L3 latency budget the
+//! perf pass tracks — the coordinator overhead must stay negligible next
+//! to the gradient computation + aggregation itself.
+
+use multibulyan::attacks::AttackKind;
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::launch;
+use multibulyan::gar::GarKind;
+use multibulyan::metrics::TimingProtocol;
+
+fn main() {
+    let protocol = TimingProtocol::default();
+    println!("coordinator_round — {protocol:?}");
+    println!(
+        "{:<14} {:>10} {:>12} {:>10} {:>14}",
+        "gar", "d", "mean_ms", "std_ms", "agg_share"
+    );
+    for (gar, dim) in [
+        (GarKind::Average, 100_000usize),
+        (GarKind::MultiKrum, 100_000),
+        (GarKind::MultiBulyan, 100_000),
+    ] {
+        let config = ExperimentConfig {
+            cluster: ClusterConfig {
+                n: 11,
+                f: if gar == GarKind::Average { 0 } else { 2 },
+                actual_byzantine: Some(if gar == GarKind::Average { 0 } else { 2 }),
+                net_delay_us: 0,
+                drop_prob: 0.0,
+                round_timeout_ms: 60_000,
+            },
+            gar,
+            attack: if gar == GarKind::Average {
+                AttackKind::None
+            } else {
+                AttackKind::LittleIsEnough { z: None }
+            },
+            model: ModelConfig::Quadratic { dim, noise: 0.1 },
+            train: TrainConfig {
+                learning_rate: 0.01,
+                momentum: 0.9,
+                steps: 1,
+                batch_size: 8,
+                eval_every: 0,
+                seed: 1,
+            },
+            output_dir: None,
+        };
+        let mut cluster = launch(&config, None).unwrap();
+        let (mean_ms, std_ms) = protocol.measure(|| {
+            cluster.coordinator.run_round().unwrap();
+        });
+        // Fraction of the round spent inside the GAR itself.
+        let agg_ms = cluster
+            .coordinator
+            .metrics
+            .timer("aggregate")
+            .map(|t| t.mean() * 1e3)
+            .unwrap_or(0.0);
+        println!(
+            "{:<14} {:>10} {:>12.3} {:>10.3} {:>13.1}%",
+            gar.as_str(),
+            dim,
+            mean_ms,
+            std_ms,
+            100.0 * agg_ms / mean_ms.max(1e-9)
+        );
+        cluster.coordinator.shutdown();
+    }
+}

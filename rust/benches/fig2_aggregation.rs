@@ -1,0 +1,61 @@
+//! Bench mirroring the paper's Fig. 2: aggregation time of MULTI-KRUM /
+//! MULTI-BULYAN / MEDIAN over (n, d) points, using the in-repo
+//! `TimingProtocol` harness (criterion is unavailable offline; the
+//! protocol is the paper's own — 7 runs, keep the 5 closest to the
+//! median, report mean ± std).
+//!
+//! Run with `cargo bench --bench fig2_aggregation`. The CLI harness
+//! (`multibulyan bench fig2 [--full]`) runs the full grid and writes CSV.
+
+use multibulyan::bench::fig2_f;
+use multibulyan::gar::{GarKind, GarScratch};
+use multibulyan::metrics::TimingProtocol;
+use multibulyan::tensor::GradMatrix;
+use multibulyan::util::Rng64;
+
+fn main() {
+    let fast = std::env::var("MB_BENCH_FAST").is_ok();
+    let dims: &[usize] = if fast {
+        &[10_000]
+    } else {
+        &[100_000, 1_000_000]
+    };
+    let ns: &[usize] = if fast { &[7, 15] } else { &[7, 15, 23] };
+    let protocol = TimingProtocol::default();
+    println!("fig2_aggregation — {protocol:?}");
+    println!(
+        "{:<14} {:>4} {:>4} {:>10} {:>12} {:>10} {:>14}",
+        "gar", "n", "f", "d", "mean_ms", "std_ms", "GB/s(read)"
+    );
+    for &d in dims {
+        for &n in ns {
+            let f = fig2_f(n);
+            let mut rng = Rng64::seed_from_u64(1);
+            let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+            for kind in [GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median] {
+                if n < kind.min_n(f) {
+                    continue;
+                }
+                let gar = kind.instantiate(n, f).unwrap();
+                let mut out = vec![0.0f32; d];
+                let mut scratch = GarScratch::new();
+                let (mean_ms, std_ms) = protocol.measure(|| {
+                    gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
+                        .unwrap()
+                });
+                // Effective read bandwidth over the n·d input matrix.
+                let gbs = (n * d * 4) as f64 / (mean_ms / 1e3) / 1e9;
+                println!(
+                    "{:<14} {:>4} {:>4} {:>10} {:>12.3} {:>10.3} {:>14.2}",
+                    kind.as_str(),
+                    n,
+                    f,
+                    d,
+                    mean_ms,
+                    std_ms,
+                    gbs
+                );
+            }
+        }
+    }
+}

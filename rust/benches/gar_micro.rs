@@ -1,0 +1,57 @@
+//! Micro-benchmarks of the GAR building blocks: the pairwise-distance
+//! kernel (the O(n²d) hot spot), Krum scoring from cached distances, and
+//! the per-coordinate median pass — the three loops the perf pass
+//! optimises (EXPERIMENTS.md §Perf).
+
+use multibulyan::gar::{
+    krum_scores_from_distances, pairwise_sq_distances_into, GarKind, GarScratch,
+};
+use multibulyan::metrics::TimingProtocol;
+use multibulyan::tensor::GradMatrix;
+use multibulyan::util::Rng64;
+
+fn main() {
+    let protocol = TimingProtocol::default();
+    println!("gar_micro — {protocol:?}\n");
+
+    println!("pairwise squared distances (the O(n²d) hot spot):");
+    for (n, d) in [(11usize, 100_000usize), (25, 100_000), (11, 1_000_000)] {
+        let mut rng = Rng64::seed_from_u64(7);
+        let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+        let mut out = vec![0.0f32; n * n];
+        let (mean_ms, std_ms) = protocol.measure(|| pairwise_sq_distances_into(&grads, &mut out));
+        let gbs = (n * d * 4) as f64 / (mean_ms / 1e3) / 1e9;
+        println!(
+            "  n={n:<3} d={d:<9} {mean_ms:>10.3} ± {std_ms:<8.3} ms   {gbs:>6.2} GB/s(read)"
+        );
+    }
+
+    println!("\nkrum scoring from cached distances (O(n²), must be negligible):");
+    {
+        let n = 39;
+        let dist: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32).collect();
+        let pool: Vec<usize> = (0..n).collect();
+        let mut scores = Vec::new();
+        let (mean_ms, std_ms) =
+            protocol.measure(|| krum_scores_from_distances(&dist, n, &pool, 9, &mut scores));
+        println!("  n=39            {mean_ms:>10.4} ± {std_ms:<8.4} ms");
+    }
+
+    println!("\ncoordinate-wise median (O(nd) column pass):");
+    for d in [100_000usize, 1_000_000] {
+        let n = 11;
+        let mut rng = Rng64::seed_from_u64(3);
+        let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+        let gar = GarKind::Median.instantiate(n, 2).unwrap();
+        let mut out = vec![0.0f32; d];
+        let mut scratch = GarScratch::new();
+        let (mean_ms, std_ms) = protocol.measure(|| {
+            gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
+                .unwrap()
+        });
+        let gbs = (n * d * 4) as f64 / (mean_ms / 1e3) / 1e9;
+        println!(
+            "  n={n:<3} d={d:<9} {mean_ms:>10.3} ± {std_ms:<8.3} ms   {gbs:>6.2} GB/s(read)"
+        );
+    }
+}

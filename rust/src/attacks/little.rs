@@ -1,0 +1,139 @@
+//! "A Little Is Enough" [Baruch, Baruch & Goldberg, NeurIPS 2019 — ref [3]
+//! of the paper]: the coalition shifts every coordinate by `z` standard
+//! deviations of the correct gradients' empirical distribution.
+//!
+//! The shift per coordinate is small enough that each Byzantine vector
+//! stays inside the correct cluster (so distance-based weak GARs select
+//! it), yet across `d` coordinates the accumulated deviation is `z·σ·√d` —
+//! exactly the `√d` leeway the paper's Fig. 1 illustrates and BULYAN's
+//! median step removes. This is the canonical attack separating *weak*
+//! from *strong* Byzantine resilience.
+
+use super::{Attack, AttackCtx};
+use crate::tensor::GradMatrix;
+use crate::Result;
+use crate::util::Rng64;
+
+/// Coalition sends `mean(correct) − z · std(correct)` (coordinate-wise).
+#[derive(Debug, Clone)]
+pub struct LittleIsEnough {
+    /// Explicit z; `None` derives `z_max` from the original paper's
+    /// formula at forge time.
+    z: Option<f32>,
+}
+
+impl LittleIsEnough {
+    pub fn new(z: Option<f32>) -> Self {
+        Self { z }
+    }
+
+    /// z_max of Baruch et al.: the largest shift such that the Byzantine
+    /// vectors remain "inside the pack" — the normal quantile at
+    /// `(n − f − s)/(n − f)` with `s = ⌊n/2⌋ + 1 − f` supporters.
+    /// We use the common closed-form approximation via Acklam's inverse
+    /// normal CDF.
+    pub fn z_max(n: usize, f: usize) -> f32 {
+        let nf = (n - f) as f64;
+        let s = (n / 2 + 1).saturating_sub(f) as f64;
+        let phi = ((nf - s) / nf).clamp(1e-6, 1.0 - 1e-6);
+        inverse_normal_cdf(phi) as f32
+    }
+}
+
+impl Attack for LittleIsEnough {
+    fn name(&self) -> &'static str {
+        "little-is-enough"
+    }
+
+    fn forge(&self, ctx: &AttackCtx<'_>, _rng: &mut Rng64) -> Result<GradMatrix> {
+        let z = self.z.unwrap_or_else(|| Self::z_max(ctx.n, ctx.f)).max(0.0);
+        let mean = ctx.correct_mean();
+        let std = ctx.correct_std();
+        let row: Vec<f32> = mean
+            .iter()
+            .zip(&std)
+            .map(|(m, s)| m - z * s)
+            .collect();
+        Ok(GradMatrix::from_rows(&vec![row; ctx.f]))
+    }
+}
+
+/// Acklam's rational approximation to the inverse normal CDF (|ε| < 1.15e-9
+/// over (0,1)). Self-contained to keep the crate dependency-free.
+fn inverse_normal_cdf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inverse_normal_cdf(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+        #[test]
+    fn inverse_cdf_sanity() {
+        assert!((inverse_normal_cdf(0.5)).abs() < 1e-9);
+        assert!((inverse_normal_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inverse_normal_cdf(0.025) + 1.959964).abs() < 1e-4);
+    }
+
+    #[test]
+    fn z_max_reasonable_for_fig3_setting() {
+        // n=11, f=2: s = 4, phi = 5/9 ≈ 0.556 → z ≈ 0.14.
+        let z = LittleIsEnough::z_max(11, 2);
+        assert!(z > 0.0 && z < 1.0, "z={z}");
+    }
+
+    #[test]
+    fn forged_vector_stays_near_the_pack() {
+        // With z=1, every coordinate deviates by exactly one empirical σ.
+        let correct = GradMatrix::from_rows(&[
+            vec![0.0, 10.0],
+            vec![2.0, 10.0],
+        ]);
+        let ctx = AttackCtx::new(&correct, 1, 3);
+        let mut rng = Rng64::seed_from_u64(0);
+        let forged = LittleIsEnough::new(Some(1.0)).forge(&ctx, &mut rng).unwrap();
+        // mean = [1, 10], std = [1, 0] → forged = [0, 10]
+        assert_eq!(forged.row(0), &[0.0, 10.0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Byzantine attack library.
+//!
+//! An [`Attack`] is what a coalition of `f` colluding Byzantine workers
+//! sends to the parameter server in one round, given full knowledge of the
+//! correct workers' gradients (the strongest, omniscient threat model of
+//! the paper's §II-C: "the Byzantine worker is always assumed to follow
+//! arbitrarily bad policies and the analysis is a worst-case one").
+//!
+//! Implemented attacks:
+//!
+//! | Attack | Reference | Breaks |
+//! |---|---|---|
+//! | [`SignFlip`] | classic reversed gradient | averaging |
+//! | [`RandomGauss`] | noise blasting | averaging |
+//! | [`Infinity`] | magnitude blow-up (also NaN mode) | averaging, naive code |
+//! | [`LittleIsEnough`] | Baruch et al. 2019 [3] | weakly-resilient GARs in high d |
+//! | [`Omniscient`] | El Mhamdi et al. 2018 [12] §"hidden vulnerability" | distance-based selection w/o median |
+//! | [`Mimic`] | consistency attack | (selection-bias probe, convergence-safe) |
+//! | [`Zero`] | stalling | progress of mean-style GARs |
+
+mod little;
+mod omniscient;
+mod simple;
+
+pub use little::LittleIsEnough;
+pub use omniscient::Omniscient;
+pub use simple::{Infinity, Mimic, RandomGauss, SignFlip, Zero};
+
+use crate::tensor::GradMatrix;
+use crate::Result;
+use crate::util::Rng64;
+
+/// Everything the Byzantine coalition observes in one round.
+pub struct AttackCtx<'a> {
+    /// Gradients of the `n − f` correct workers this round (the coalition
+    /// is omniscient: it sees them before the server does).
+    pub correct: &'a GradMatrix,
+    /// Coalition size (number of Byzantine gradients to forge).
+    pub f: usize,
+    /// Total number of workers `n` (the server will see `correct.n() + f`
+    /// gradients).
+    pub n: usize,
+}
+
+impl<'a> AttackCtx<'a> {
+    pub fn new(correct: &'a GradMatrix, f: usize, n: usize) -> Self {
+        debug_assert_eq!(correct.n() + f, n);
+        Self { correct, f, n }
+    }
+
+    /// Coordinate-wise mean of the correct gradients (the coalition's best
+    /// estimate of the true gradient `g`).
+    pub fn correct_mean(&self) -> Vec<f32> {
+        self.correct.mean_rows()
+    }
+
+    /// Coordinate-wise (population) standard deviation of the correct
+    /// gradients.
+    pub fn correct_std(&self) -> Vec<f32> {
+        let k = self.correct.n();
+        let mean = self.correct_mean();
+        let d = self.correct.d();
+        let mut var = vec![0.0f32; d];
+        for i in 0..k {
+            let row = self.correct.row(i);
+            for j in 0..d {
+                let dev = row[j] - mean[j];
+                var[j] += dev * dev;
+            }
+        }
+        var.iter_mut().for_each(|v| *v = (*v / k as f32).sqrt());
+        var
+    }
+}
+
+/// A Byzantine coalition strategy: forge the `f` gradients for one round.
+pub trait Attack: Send + Sync {
+    /// Stable name for configs/CSV.
+    fn name(&self) -> &'static str;
+
+    /// Produce the `f × d` matrix of Byzantine proposals.
+    fn forge(&self, ctx: &AttackCtx<'_>, rng: &mut Rng64) -> Result<GradMatrix>;
+}
+
+/// Config/CLI surface for attack selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttackKind {
+    None,
+    SignFlip { scale: f32 },
+    RandomGauss { scale: f32 },
+    Infinity { nan: bool },
+    /// `z`: deviation in per-coordinate std-devs; `None` derives the
+    /// z_max of the original paper from (n, f).
+    LittleIsEnough { z: Option<f32> },
+    Omniscient { epsilon: f32 },
+    Mimic,
+    Zero,
+}
+
+impl AttackKind {
+    /// All non-trivial attacks with default parameters (the resilience
+    /// gauntlet sweep).
+    pub fn gauntlet() -> Vec<AttackKind> {
+        vec![
+            AttackKind::SignFlip { scale: 10.0 },
+            AttackKind::RandomGauss { scale: 10.0 },
+            AttackKind::Infinity { nan: false },
+            AttackKind::LittleIsEnough { z: None },
+            AttackKind::Omniscient { epsilon: 0.1 },
+            AttackKind::Mimic,
+            AttackKind::Zero,
+        ]
+    }
+
+    /// Instantiate the strategy. Returns `None` for `AttackKind::None`.
+    pub fn instantiate(self) -> Option<Box<dyn Attack>> {
+        match self {
+            AttackKind::None => None,
+            AttackKind::SignFlip { scale } => Some(Box::new(SignFlip::new(scale))),
+            AttackKind::RandomGauss { scale } => Some(Box::new(RandomGauss::new(scale))),
+            AttackKind::Infinity { nan } => Some(Box::new(Infinity::new(nan))),
+            AttackKind::LittleIsEnough { z } => Some(Box::new(LittleIsEnough::new(z))),
+            AttackKind::Omniscient { epsilon } => Some(Box::new(Omniscient::new(epsilon))),
+            AttackKind::Mimic => Some(Box::new(Mimic)),
+            AttackKind::Zero => Some(Box::new(Zero)),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttackKind::None => "none",
+            AttackKind::SignFlip { .. } => "sign-flip",
+            AttackKind::RandomGauss { .. } => "random-gauss",
+            AttackKind::Infinity { .. } => "infinity",
+            AttackKind::LittleIsEnough { .. } => "little-is-enough",
+            AttackKind::Omniscient { .. } => "omniscient",
+            AttackKind::Mimic => "mimic",
+            AttackKind::Zero => "zero",
+        }
+    }
+}
+
+impl std::str::FromStr for AttackKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "none" => Ok(AttackKind::None),
+            "sign-flip" | "signflip" => Ok(AttackKind::SignFlip { scale: 1.0 }),
+            "random-gauss" | "random" | "gauss" => Ok(AttackKind::RandomGauss { scale: 10.0 }),
+            "infinity" | "inf" => Ok(AttackKind::Infinity { nan: false }),
+            "nan" => Ok(AttackKind::Infinity { nan: true }),
+            "little-is-enough" | "lie" | "little" => Ok(AttackKind::LittleIsEnough { z: None }),
+            "omniscient" | "optimal" => Ok(AttackKind::Omniscient { epsilon: 0.1 }),
+            "mimic" => Ok(AttackKind::Mimic),
+            "zero" => Ok(AttackKind::Zero),
+            other => anyhow::bail!(
+                "unknown attack '{other}' (expected: none, sign-flip, random-gauss, \
+                 infinity, nan, little-is-enough, omniscient, mimic, zero)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+        #[test]
+    fn ctx_mean_and_std() {
+        let correct = GradMatrix::from_rows(&[vec![0.0, 2.0], vec![2.0, 2.0]]);
+        let ctx = AttackCtx::new(&correct, 1, 3);
+        assert_eq!(ctx.correct_mean(), vec![1.0, 2.0]);
+        assert_eq!(ctx.correct_std(), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn every_gauntlet_attack_forges_f_rows() {
+        let correct = GradMatrix::from_fn(9, 16, |i, j| (i as f32 * 0.1) + (j as f32 * 0.01));
+        let ctx = AttackCtx::new(&correct, 2, 11);
+        let mut rng = Rng64::seed_from_u64(1);
+        for kind in AttackKind::gauntlet() {
+            let attack = kind.instantiate().unwrap();
+            let forged = attack.forge(&ctx, &mut rng).unwrap();
+            assert_eq!(forged.n(), 2, "{}", attack.name());
+            assert_eq!(forged.d(), 16, "{}", attack.name());
+        }
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!("lie".parse::<AttackKind>().unwrap().label(), "little-is-enough");
+        assert_eq!("sign_flip".parse::<AttackKind>().unwrap().label(), "sign-flip");
+        assert!("bogus".parse::<AttackKind>().is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! The omniscient attack of "The Hidden Vulnerability of Distributed
+//! Learning in Byzantium" [El Mhamdi et al., ICML 2018 — ref [12]]: the
+//! coalition knows every correct gradient and crafts the *most legitimate
+//! but harmful vector possible* (paper §II-C-b).
+//!
+//! Strategy: pick a harmful direction `a` (here: the opposite of the true
+//! gradient estimate, the worst direction for convergence), then binary-
+//! search the largest deviation `λ` such that the forged vector
+//! `mean(correct) + λ·a` would still be selected by Krum against the
+//! actual correct gradients of this round. With `f` colluders proposing
+//! the same vector, their mutual distance is 0, which shrinks their Krum
+//! score — the coalition exploits exactly the weakness the paper's Fig. 1
+//! depicts, and the deviation it achieves grows with `√d` (the leeway
+//! BULYAN's median then removes).
+
+use super::{Attack, AttackCtx};
+use crate::gar::{krum_scores_from_distances, pairwise_sq_distances_into};
+use crate::tensor::{l2_norm, GradMatrix};
+use crate::Result;
+use crate::util::Rng64;
+
+/// Omniscient coalition: harmful direction with Krum-selectability check.
+#[derive(Debug, Clone)]
+pub struct Omniscient {
+    /// Binary-search precision on λ, relative to ‖mean(correct)‖.
+    epsilon: f32,
+}
+
+impl Omniscient {
+    pub fn new(epsilon: f32) -> Self {
+        Self {
+            epsilon: epsilon.max(1e-6),
+        }
+    }
+
+    /// Would a coalition proposing `byz` (f identical copies) win Krum
+    /// against `correct`? Builds the full (n×n) view the server would see.
+    fn coalition_wins_krum(&self, ctx: &AttackCtx<'_>, byz: &[f32]) -> bool {
+        let k = ctx.correct.n();
+        let n = ctx.n;
+        let mut rows: Vec<Vec<f32>> = (0..k).map(|i| ctx.correct.row(i).to_vec()).collect();
+        rows.extend(std::iter::repeat(byz.to_vec()).take(ctx.f));
+        let all = GradMatrix::from_rows(&rows);
+        let mut dist = vec![0.0f32; n * n];
+        pairwise_sq_distances_into(&all, &mut dist);
+        let pool: Vec<usize> = (0..n).collect();
+        let mut scores = Vec::new();
+        krum_scores_from_distances(&dist, n, &pool, ctx.f, &mut scores);
+        let winner = crate::tensor::argselect_smallest(&scores, 1)[0];
+        winner >= k // a Byzantine index won
+    }
+}
+
+impl Attack for Omniscient {
+    fn name(&self) -> &'static str {
+        "omniscient"
+    }
+
+    fn forge(&self, ctx: &AttackCtx<'_>, _rng: &mut Rng64) -> Result<GradMatrix> {
+        let mean = ctx.correct_mean();
+        let norm = l2_norm(&mean).max(1e-12);
+        // Harmful direction: against the descent direction, unit norm.
+        let dir: Vec<f32> = mean.iter().map(|v| -v / norm).collect();
+
+        // Binary search the largest selectable deviation λ ∈ [0, λ_hi].
+        let mut lo = 0.0f32;
+        let mut hi = 4.0 * norm;
+        let mut byz = mean.clone();
+        let build = |lambda: f32| -> Vec<f32> {
+            mean.iter()
+                .zip(&dir)
+                .map(|(m, a)| m + lambda * a)
+                .collect()
+        };
+        // If even λ=0 (pure mean replay) does not win, still send it: the
+        // coalition at worst mimics the mean, which remains the most
+        // harmful *selectable* choice under this parametrisation.
+        if self.coalition_wins_krum(ctx, &build(hi)) {
+            byz = build(hi);
+        } else {
+            let tol = self.epsilon * norm;
+            while hi - lo > tol {
+                let mid = 0.5 * (lo + hi);
+                if self.coalition_wins_krum(ctx, &build(mid)) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            byz = if lo > 0.0 { build(lo) } else { byz };
+        }
+        Ok(GradMatrix::from_rows(&vec![byz; ctx.f]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    fn correct_cluster(k: usize, d: usize, seed: u64) -> GradMatrix {
+        let mut rng = Rng64::seed_from_u64(seed);
+        GradMatrix::from_fn(k, d, |_, j| {
+            1.0 + (j as f32 * 0.001) + rng.gen_range_f32(-0.05, 0.05)
+        })
+    }
+
+    #[test]
+    fn forged_vector_is_selectable_by_krum() {
+        let correct = correct_cluster(9, 32, 11);
+        let ctx = AttackCtx::new(&correct, 2, 11);
+        let mut rng = Rng64::seed_from_u64(0);
+        let forged = Omniscient::new(0.05).forge(&ctx, &mut rng).unwrap();
+        // The produced vector either wins Krum or degenerates to the mean.
+        let att = Omniscient::new(0.05);
+        let wins = att.coalition_wins_krum(&ctx, forged.row(0));
+        let mean = ctx.correct_mean();
+        let is_mean = forged
+            .row(0)
+            .iter()
+            .zip(&mean)
+            .all(|(a, b)| (a - b).abs() < 1e-5);
+        assert!(wins || is_mean);
+    }
+
+    #[test]
+    fn deviation_is_against_the_gradient() {
+        let correct = correct_cluster(9, 32, 5);
+        let ctx = AttackCtx::new(&correct, 2, 11);
+        let mut rng = Rng64::seed_from_u64(0);
+        let forged = Omniscient::new(0.05).forge(&ctx, &mut rng).unwrap();
+        let mean = ctx.correct_mean();
+        // ⟨forged − mean, mean⟩ ≤ 0: the deviation opposes descent.
+        let dot: f32 = forged
+            .row(0)
+            .iter()
+            .zip(&mean)
+            .map(|(b, m)| (b - m) * m)
+            .sum();
+        assert!(dot <= 1e-3);
+    }
+}

@@ -1,0 +1,175 @@
+//! Baseline attacks: cheap strategies that suffice to break averaging
+//! (the paper's §II-C "weak vs strong" discussion — these cost O(n·d) per
+//! round, within the workload of an ordinary worker).
+
+use super::{Attack, AttackCtx};
+use crate::tensor::GradMatrix;
+use crate::Result;
+use crate::util::Rng64;
+
+/// Send `−scale · mean(correct)` — the classic reversed-gradient collusion.
+/// Pulls the average backwards along the descent direction; trivially
+/// filtered by any distance- or median-based rule.
+#[derive(Debug, Clone)]
+pub struct SignFlip {
+    scale: f32,
+}
+
+impl SignFlip {
+    pub fn new(scale: f32) -> Self {
+        Self { scale }
+    }
+}
+
+impl Attack for SignFlip {
+    fn name(&self) -> &'static str {
+        "sign-flip"
+    }
+
+    fn forge(&self, ctx: &AttackCtx<'_>, _rng: &mut Rng64) -> Result<GradMatrix> {
+        let mut row = ctx.correct_mean();
+        crate::tensor::scale(&mut row, -self.scale);
+        Ok(GradMatrix::from_rows(&vec![row; ctx.f]))
+    }
+}
+
+/// Independent N(0, scale²) noise per coordinate — breaks averaging when
+/// `scale` dominates the true gradient's magnitude.
+#[derive(Debug, Clone)]
+pub struct RandomGauss {
+    scale: f32,
+}
+
+impl RandomGauss {
+    pub fn new(scale: f32) -> Self {
+        Self { scale }
+    }
+}
+
+impl Attack for RandomGauss {
+    fn name(&self) -> &'static str {
+        "random-gauss"
+    }
+
+    fn forge(&self, ctx: &AttackCtx<'_>, rng: &mut Rng64) -> Result<GradMatrix> {
+        let d = ctx.correct.d();
+        Ok(GradMatrix::from_fn(ctx.f, d, |_, _| {
+            rng.gaussian() * self.scale
+        }))
+    }
+}
+
+/// Magnitude blow-up: ±∞-like huge values (or NaN when `nan` is set).
+/// Instantly corrupts any rule that sums Byzantine inputs, and exercises
+/// the NaN-ordering paths of the selection rules.
+#[derive(Debug, Clone)]
+pub struct Infinity {
+    nan: bool,
+}
+
+impl Infinity {
+    pub fn new(nan: bool) -> Self {
+        Self { nan }
+    }
+}
+
+impl Attack for Infinity {
+    fn name(&self) -> &'static str {
+        if self.nan {
+            "nan"
+        } else {
+            "infinity"
+        }
+    }
+
+    fn forge(&self, ctx: &AttackCtx<'_>, _rng: &mut Rng64) -> Result<GradMatrix> {
+        let v = if self.nan { f32::NAN } else { 1e30 };
+        Ok(GradMatrix::from_fn(ctx.f, ctx.correct.d(), |i, _| {
+            if self.nan || i % 2 == 0 {
+                v
+            } else {
+                -v
+            }
+        }))
+    }
+}
+
+/// All Byzantines replay correct worker 0's gradient verbatim. Harmless to
+/// convergence but biases selection frequency — a probe for the
+/// selection-diagnostics path, and the building block of "mimic"-style
+/// heterogeneity attacks.
+#[derive(Debug, Clone)]
+pub struct Mimic;
+
+impl Attack for Mimic {
+    fn name(&self) -> &'static str {
+        "mimic"
+    }
+
+    fn forge(&self, ctx: &AttackCtx<'_>, _rng: &mut Rng64) -> Result<GradMatrix> {
+        let row = ctx.correct.row(0).to_vec();
+        Ok(GradMatrix::from_rows(&vec![row; ctx.f]))
+    }
+}
+
+/// Send exactly zero: attempts to stall progress by diluting the average.
+#[derive(Debug, Clone)]
+pub struct Zero;
+
+impl Attack for Zero {
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+
+    fn forge(&self, ctx: &AttackCtx<'_>, _rng: &mut Rng64) -> Result<GradMatrix> {
+        Ok(GradMatrix::zeros(ctx.f, ctx.correct.d()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+        fn ctx_fixture() -> GradMatrix {
+        GradMatrix::from_rows(&[vec![1.0, -2.0], vec![3.0, -4.0]])
+    }
+
+    #[test]
+    fn sign_flip_negates_mean() {
+        let correct = ctx_fixture();
+        let ctx = AttackCtx::new(&correct, 2, 4);
+        let mut rng = Rng64::seed_from_u64(0);
+        let forged = SignFlip::new(2.0).forge(&ctx, &mut rng).unwrap();
+        assert_eq!(forged.row(0), &[-4.0, 6.0]);
+        assert_eq!(forged.row(1), forged.row(0));
+    }
+
+    #[test]
+    fn random_gauss_has_roughly_right_scale() {
+        let correct = GradMatrix::zeros(2, 4096);
+        let ctx = AttackCtx::new(&correct, 1, 3);
+        let mut rng = Rng64::seed_from_u64(3);
+        let forged = RandomGauss::new(5.0).forge(&ctx, &mut rng).unwrap();
+        let std = crate::tensor::std_dev(forged.row(0));
+        assert!((std - 5.0).abs() < 0.5, "std {std}");
+    }
+
+    #[test]
+    fn infinity_and_nan_modes() {
+        let correct = ctx_fixture();
+        let ctx = AttackCtx::new(&correct, 2, 4);
+        let mut rng = Rng64::seed_from_u64(0);
+        let inf = Infinity::new(false).forge(&ctx, &mut rng).unwrap();
+        assert!(inf.row(0)[0] > 1e29 && inf.row(1)[0] < -1e29);
+        let nan = Infinity::new(true).forge(&ctx, &mut rng).unwrap();
+        assert!(nan.row(0)[0].is_nan());
+    }
+
+    #[test]
+    fn mimic_copies_worker_zero() {
+        let correct = ctx_fixture();
+        let ctx = AttackCtx::new(&correct, 1, 3);
+        let mut rng = Rng64::seed_from_u64(0);
+        let forged = Mimic.forge(&ctx, &mut rng).unwrap();
+        assert_eq!(forged.row(0), correct.row(0));
+    }
+}

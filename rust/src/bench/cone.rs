@@ -1,0 +1,177 @@
+//! (α,f)-cone + √d-leeway measurement — the empirical counterpart of
+//! Lemma 1 (weak resilience: E GAR stays in the correct cone) and
+//! Definition 2 (strong resilience: per-coordinate deviation O(1/√d)).
+//!
+//! Setup: correct gradients are `g + N(0, σ²I)` with `g` the all-ones
+//! direction normalised to ‖g‖ = 1 (so per-coordinate scale is 1/√d, the
+//! high-dimensional regime of Fig. 1). The coalition plays
+//! little-is-enough — the attack strong resilience exists to stop. For
+//! each GAR and d we estimate, over many trials:
+//!
+//! * `cos_angle` = ⟨Ē GAR, g⟩ / ‖g‖² — Lemma 1's condition (i); must stay
+//!   bounded away from 0 for every resilient rule (weak resilience);
+//! * `leeway` = √d · mean_i |GAR_i − nearest correct G_i| — Definition 2's
+//!   per-coordinate deviation, scaled by √d. Bounded in d for
+//!   BULYAN/MULTI-BULYAN (strong); growing for the weak rules, reflecting
+//!   the √d attacker budget.
+
+use crate::attacks::{Attack, AttackCtx, LittleIsEnough};
+use crate::gar::GarKind;
+use crate::tensor::GradMatrix;
+use crate::Result;
+use crate::util::Rng64;
+
+#[derive(Debug, Clone)]
+pub struct ConeRow {
+    pub gar: GarKind,
+    pub d: usize,
+    pub cos_angle: f64,
+    pub leeway_sqrt_d: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConeConfig {
+    pub n: usize,
+    pub f: usize,
+    pub dims: Vec<usize>,
+    /// Noise as a multiple of the per-coordinate signal 1/√d.
+    pub sigma_rel: f32,
+    pub trials: usize,
+    pub seed: u64,
+    pub gars: Vec<GarKind>,
+}
+
+impl Default for ConeConfig {
+    fn default() -> Self {
+        Self {
+            n: 11,
+            f: 2,
+            dims: vec![16, 64, 256, 1024, 4096],
+            sigma_rel: 0.5,
+            trials: 64,
+            seed: 1,
+            gars: vec![
+                GarKind::Average,
+                GarKind::Median,
+                GarKind::MultiKrum,
+                GarKind::MultiBulyan,
+            ],
+        }
+    }
+}
+
+pub fn run(cfg: &ConeConfig, quiet: bool) -> Result<Vec<ConeRow>> {
+    let (n, f) = (cfg.n, cfg.f);
+    let honest = n - f;
+    let attack = LittleIsEnough::new(Some(1.5));
+    let mut rows = Vec::new();
+    for &kind in &cfg.gars {
+        let gar_f = if kind == GarKind::Average { 0 } else { f };
+        let gar = kind.instantiate(n, gar_f)?;
+        for &d in &cfg.dims {
+            let coord = 1.0 / (d as f32).sqrt(); // g_i so that ‖g‖ = 1
+            let sigma = cfg.sigma_rel * coord;
+            let mut rng =
+                Rng64::seed_from_u64(cfg.seed ^ ((d as u64) << 8) ^ (kind as u64));
+            let mut mean_out = vec![0.0f64; d];
+            let mut leeway_acc = 0.0f64;
+            for _ in 0..cfg.trials {
+                let mut grads = GradMatrix::zeros(n, d);
+                for i in 0..honest {
+                    let row = grads.row_mut(i);
+                    for v in row.iter_mut() {
+                        *v = coord + sigma * rng.gaussian();
+                    }
+                }
+                let correct = grads.gather_rows(&(0..honest).collect::<Vec<_>>());
+                let ctx = AttackCtx::new(&correct, f, n);
+                let forged = attack.forge(&ctx, &mut rng)?;
+                for b in 0..f {
+                    grads.set_row(honest + b, forged.row(b));
+                }
+                let out = gar.aggregate(&grads)?;
+                // Leeway: per-coordinate distance to the *nearest correct
+                // worker's value* at that coordinate (Definition 2 asks
+                // for existence of a close correct gradient).
+                let mut dev_sum = 0.0f64;
+                for j in 0..d {
+                    let mut best = f32::INFINITY;
+                    for i in 0..honest {
+                        best = best.min((out[j] - correct.row(i)[j]).abs());
+                    }
+                    dev_sum += best as f64;
+                    mean_out[j] += out[j] as f64;
+                }
+                leeway_acc += dev_sum / d as f64;
+            }
+            for v in mean_out.iter_mut() {
+                *v /= cfg.trials as f64;
+            }
+            // ⟨E GAR, g⟩ with g_j = 1/√d and ‖g‖ = 1.
+            let cos_angle: f64 = mean_out.iter().map(|&v| v * coord as f64).sum();
+            let leeway_sqrt_d = (d as f64).sqrt() * leeway_acc / cfg.trials as f64;
+            if !quiet {
+                println!(
+                    "cone gar={:<13} d={:<6} ⟨E GAR, g⟩/‖g‖²={:>7.4}  √d·leeway={:>8.4}",
+                    kind.as_str(),
+                    d,
+                    cos_angle,
+                    leeway_sqrt_d
+                );
+            }
+            rows.push(ConeRow {
+                gar: kind,
+                d,
+                cos_angle,
+                leeway_sqrt_d,
+            });
+        }
+    }
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| format!("{},{},{:.6},{:.6}", r.gar, r.d, r.cos_angle, r.leeway_sqrt_d))
+        .collect();
+    super::write_csv("cone.csv", "gar,d,cos_angle,leeway_sqrt_d", &csv)?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resilient_rules_stay_in_the_cone() {
+        std::env::set_var("MB_RESULTS_DIR", std::env::temp_dir().join("mb_cone_test"));
+        let cfg = ConeConfig {
+            dims: vec![64, 512],
+            trials: 24,
+            ..Default::default()
+        };
+        let rows = run(&cfg, true).unwrap();
+        for r in &rows {
+            // Lemma 1 condition (i): positive scalar product with g.
+            assert!(
+                r.cos_angle > 0.2,
+                "{} at d={} left the cone: {}",
+                r.gar,
+                r.d,
+                r.cos_angle
+            );
+        }
+        // Strong vs weak: at the largest d, MULTI-BULYAN's √d-scaled
+        // leeway must be below MULTI-KRUM's (the median step removes the
+        // LIE shift; multi-krum averages it in).
+        let at = |g: GarKind, d: usize| {
+            rows.iter()
+                .find(|r| r.gar == g && r.d == d)
+                .unwrap()
+                .leeway_sqrt_d
+        };
+        assert!(
+            at(GarKind::MultiBulyan, 512) < at(GarKind::MultiKrum, 512),
+            "strong resilience should shrink the leeway"
+        );
+        std::fs::remove_dir_all(super::super::results_dir()).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+}

@@ -1,0 +1,137 @@
+//! O(d) scaling check — Theorem 2.ii ("MULTI-BULYAN's cost in local
+//! computation is O(d), like averaging").
+//!
+//! Fixed n, sweep d over decades, fit the log–log slope of aggregation
+//! time vs d. A slope ≈ 1.0 is linear; robust alternatives from classical
+//! statistics (PCA-based, §I footnote 2) would show ≥ 2.
+
+use crate::gar::{GarKind, GarScratch};
+use crate::metrics::TimingProtocol;
+use crate::tensor::GradMatrix;
+use crate::Result;
+use crate::util::Rng64;
+
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub gar: GarKind,
+    pub d: usize,
+    pub mean_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScalingResult {
+    pub gar: GarKind,
+    pub points: Vec<ScalingPoint>,
+    /// Log–log slope of time vs d.
+    pub slope: f64,
+}
+
+/// Least-squares slope of ln(time) vs ln(d).
+pub fn loglog_slope(points: &[(f64, f64)]) -> f64 {
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in points {
+        let (lx, ly) = (x.ln(), y.ln());
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+pub fn run(n: usize, dims: &[usize], gars: &[GarKind], quiet: bool) -> Result<Vec<ScalingResult>> {
+    let f = super::fig2_f(n);
+    let protocol = TimingProtocol::default();
+    let mut results = Vec::new();
+    for &kind in gars {
+        anyhow::ensure!(n >= kind.min_n(f), "{kind}: n={n} too small for f={f}");
+        let gar = kind.instantiate(n, f)?;
+        let mut points = Vec::new();
+        for &d in dims {
+            let mut rng = Rng64::seed_from_u64(99 ^ d as u64);
+            let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+            let mut out = vec![0.0f32; d];
+            let mut scratch = GarScratch::new();
+            let (mean_ms, _) = protocol.measure(|| {
+                gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
+                    .unwrap();
+            });
+            points.push(ScalingPoint {
+                gar: kind,
+                d,
+                mean_ms,
+            });
+            if !quiet {
+                println!("dscaling gar={kind:<13} d={d:<9} {mean_ms:.3} ms");
+            }
+        }
+        let slope = loglog_slope(
+            &points
+                .iter()
+                .map(|p| (p.d as f64, p.mean_ms.max(1e-6)))
+                .collect::<Vec<_>>(),
+        );
+        if !quiet {
+            println!("dscaling gar={kind:<13} log-log slope = {slope:.3} (1.0 = linear in d)\n");
+        }
+        results.push(ScalingResult {
+            gar: kind,
+            points,
+            slope,
+        });
+    }
+    let rows: Vec<String> = results
+        .iter()
+        .flat_map(|r| {
+            r.points
+                .iter()
+                .map(move |p| format!("{},{},{:.6},{:.4}", r.gar, p.d, p.mean_ms, r.slope))
+        })
+        .collect();
+    super::write_csv("dscaling.csv", "gar,d,mean_ms,slope", &rows)?;
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_of_exact_linear_data_is_one() {
+        let pts: Vec<(f64, f64)> = (1..6).map(|k| (10f64.powi(k), 3.0 * 10f64.powi(k))).collect();
+        assert!((loglog_slope(&pts) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slope_of_quadratic_data_is_two() {
+        let pts: Vec<(f64, f64)> = (1..6)
+            .map(|k| {
+                let d = 10f64.powi(k);
+                (d, d * d)
+            })
+            .collect();
+        assert!((loglog_slope(&pts) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multibulyan_measures_linear_in_d() {
+        // Small but decade-spanning grid; slope should be ≈ 1, certainly
+        // far from 2. Generous tolerance to absorb timer noise at small d.
+        std::env::set_var(
+            "MB_RESULTS_DIR",
+            std::env::temp_dir().join("mb_dscaling_test"),
+        );
+        let res = run(
+            11,
+            &[20_000, 200_000, 2_000_000],
+            &[GarKind::MultiBulyan],
+            true,
+        )
+        .unwrap();
+        let slope = res[0].slope;
+        assert!(slope > 0.6 && slope < 1.5, "slope {slope}");
+        std::fs::remove_dir_all(super::super::results_dir()).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+}

@@ -1,0 +1,177 @@
+//! Fig. 2 — aggregation time as a function of the number of gradients.
+//!
+//! Paper protocol (§V-A): `n ∈ {7, 9, …, 39}`, `f = ⌊(n−3)/4⌋`,
+//! `d ∈ {10⁵, 10⁶, 10⁷}`, gradients i.i.d. `U(0,1)^d`; 7 runs per point,
+//! keep the 5 closest to the median, report mean ± std. GARs: MULTI-KRUM,
+//! MULTI-BULYAN, MEDIAN (the PyTorch baseline of the paper → our native
+//! `CoordMedian`).
+//!
+//! Our default grid scales `d` down one decade (CPU testbed, see DESIGN.md
+//! §Substitutions); `--full` restores the paper's exact grid.
+
+use crate::gar::{GarKind, GarScratch};
+use crate::metrics::TimingProtocol;
+use crate::tensor::GradMatrix;
+use crate::Result;
+use crate::util::Rng64;
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub gar: GarKind,
+    pub n: usize,
+    pub f: usize,
+    pub d: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+}
+
+/// Grid parameters.
+#[derive(Debug, Clone)]
+pub struct Fig2Config {
+    pub dims: Vec<usize>,
+    pub ns: Vec<usize>,
+    pub gars: Vec<GarKind>,
+    pub protocol: TimingProtocol,
+    pub seed: u64,
+}
+
+impl Fig2Config {
+    /// CPU-scaled default grid (see DESIGN.md §Substitutions).
+    pub fn default_grid() -> Self {
+        Self {
+            dims: vec![10_000, 100_000, 1_000_000],
+            ns: (7..=39).step_by(4).collect(),
+            gars: vec![GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median],
+            protocol: TimingProtocol::default(),
+            seed: 1,
+        }
+    }
+
+    /// The paper's exact grid (minutes of runtime on CPU).
+    pub fn full_grid() -> Self {
+        Self {
+            dims: vec![100_000, 1_000_000, 10_000_000],
+            ns: (7..=39).step_by(2).collect(),
+            ..Self::default_grid()
+        }
+    }
+
+    /// Tiny grid for tests.
+    pub fn smoke() -> Self {
+        Self {
+            dims: vec![1_000],
+            ns: vec![7, 11],
+            gars: vec![GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median],
+            protocol: TimingProtocol::quick(),
+            seed: 1,
+        }
+    }
+}
+
+/// Run the sweep, print the series, write `results/fig2.csv`.
+pub fn run(cfg: &Fig2Config, quiet: bool) -> Result<Vec<Point>> {
+    let mut points = Vec::new();
+    for &d in &cfg.dims {
+        if !quiet {
+            println!("\n== Fig. 2 series: d = {d} ==");
+            println!("{:>4} {:>3}  {}", "n", "f", cfg
+                .gars
+                .iter()
+                .map(|g| format!("{:>22}", g.as_str()))
+                .collect::<String>());
+        }
+        for &n in &cfg.ns {
+            let f = super::fig2_f(n);
+            let mut rng = Rng64::seed_from_u64(cfg.seed ^ (d as u64) ^ ((n as u64) << 32));
+            let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+            let mut line = format!("{n:>4} {f:>3}  ");
+            for &kind in &cfg.gars {
+                if n < kind.min_n(f) {
+                    line.push_str(&format!("{:>22}", "-"));
+                    continue;
+                }
+                let gar = kind.instantiate(n, f)?;
+                let mut out = vec![0.0f32; d];
+                let mut scratch = GarScratch::new();
+                let (mean_ms, std_ms) = cfg.protocol.measure(|| {
+                    gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
+                        .expect("aggregation failed");
+                });
+                line.push_str(&format!("{:>14.3}±{:>6.3}ms", mean_ms, std_ms));
+                points.push(Point {
+                    gar: kind,
+                    n,
+                    f,
+                    d,
+                    mean_ms,
+                    std_ms,
+                });
+            }
+            if !quiet {
+                println!("{line}");
+            }
+        }
+    }
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{},{},{},{},{:.6},{:.6}",
+                p.gar, p.n, p.f, p.d, p.mean_ms, p.std_ms
+            )
+        })
+        .collect();
+    let path = super::write_csv("fig2.csv", "gar,n,f,d,mean_ms,std_ms", &rows)?;
+    if !quiet {
+        println!("\nwrote {path:?}");
+        summarize_crossovers(&points);
+    }
+    Ok(points)
+}
+
+/// Print, per d, up to which n MULTI-KRUM / MULTI-BULYAN beat MEDIAN —
+/// the crossover structure that is Fig. 2's headline observation.
+pub fn summarize_crossovers(points: &[Point]) {
+    let dims: std::collections::BTreeSet<usize> = points.iter().map(|p| p.d).collect();
+    for d in dims {
+        let med: std::collections::BTreeMap<usize, f64> = points
+            .iter()
+            .filter(|p| p.d == d && p.gar == GarKind::Median)
+            .map(|p| (p.n, p.mean_ms))
+            .collect();
+        for kind in [GarKind::MultiKrum, GarKind::MultiBulyan] {
+            let mut best: Option<usize> = None;
+            for p in points.iter().filter(|p| p.d == d && p.gar == kind) {
+                if let Some(&m) = med.get(&p.n) {
+                    if p.mean_ms <= m {
+                        best = Some(best.map_or(p.n, |b: usize| b.max(p.n)));
+                    }
+                }
+            }
+            match best {
+                Some(n) => println!("d={d}: {kind} faster than median up to n ≤ {n}"),
+                None => println!("d={d}: {kind} never beats median on this grid"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_produces_all_points() {
+        std::env::set_var(
+            "MB_RESULTS_DIR",
+            std::env::temp_dir().join("mb_fig2_test"),
+        );
+        let points = run(&Fig2Config::smoke(), true).unwrap();
+        // 1 dim × 2 n × 3 gars = 6 points.
+        assert_eq!(points.len(), 6);
+        assert!(points.iter().all(|p| p.mean_ms >= 0.0));
+        std::fs::remove_dir_all(super::super::results_dir()).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+}

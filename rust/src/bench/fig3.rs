@@ -1,0 +1,173 @@
+//! Fig. 3 — maximum top-1 cross-accuracy per GAR and batch size.
+//!
+//! Paper protocol (§V-A): n = 11 workers, f = 2, **no attack**; conv model
+//! on Fashion-MNIST; 3000 steps, lr 0.1, momentum 0.9; batch sizes
+//! b ∈ {5, 10, …, 50}; 5 seeded repetitions; metric = max top-1 accuracy
+//! over the run. GARs: averaging, MEDIAN, MULTI-KRUM, MULTI-BULYAN.
+//!
+//! The expected shape (the paper's headline for this figure): MEDIAN —
+//! which keeps the informational equivalent of a single gradient — loses
+//! tangible accuracy vs. averaging, while MULTI-KRUM and MULTI-BULYAN sit
+//! at ≈ averaging. Defaults are CPU-scaled (fewer batch sizes/seeds/steps,
+//! reduced-width model); `--full` restores the paper's grid.
+
+use crate::config::{ExperimentConfig, ModelConfig};
+use crate::coordinator::launch;
+use crate::gar::GarKind;
+use crate::runtime::{ComputeHandle, Manifest};
+use crate::Result;
+
+/// One cell of the Fig. 3 sweep.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub gar: GarKind,
+    pub batch_size: usize,
+    pub seed: u64,
+    pub max_accuracy: f32,
+    pub final_loss: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig3Config {
+    pub model: String,
+    pub n: usize,
+    pub f: usize,
+    pub gars: Vec<GarKind>,
+    pub batch_sizes: Vec<usize>,
+    pub seeds: Vec<u64>,
+    pub steps: usize,
+    pub eval_every: usize,
+}
+
+impl Fig3Config {
+    /// CPU-scaled default (see DESIGN.md §Substitutions).
+    pub fn default_sweep() -> Self {
+        Self {
+            model: "mlp".into(),
+            n: 11,
+            f: 2,
+            gars: vec![
+                GarKind::Average,
+                GarKind::Median,
+                GarKind::MultiKrum,
+                GarKind::MultiBulyan,
+            ],
+            batch_sizes: vec![5, 25, 50],
+            seeds: vec![1],
+            steps: 150,
+            eval_every: 25,
+        }
+    }
+
+    /// The paper's protocol (hours of CPU runtime).
+    pub fn full_sweep() -> Self {
+        Self {
+            model: "cnn".into(),
+            batch_sizes: (1..=10).map(|k| 5 * k).collect(),
+            seeds: (1..=5).collect(),
+            steps: 3000,
+            eval_every: 100,
+            ..Self::default_sweep()
+        }
+    }
+}
+
+/// Run the sweep. Requires artifacts (`make artifacts`).
+pub fn run(
+    cfg: &Fig3Config,
+    handle: ComputeHandle,
+    manifest: &Manifest,
+    quiet: bool,
+) -> Result<Vec<Cell>> {
+    // Check the requested batch sizes exist before burning time.
+    let model = manifest.model(&cfg.model)?;
+    let available = model.batch_sizes();
+    for &b in &cfg.batch_sizes {
+        anyhow::ensure!(
+            available.contains(&b),
+            "model '{}' has no b={b} gradient artifact (available {available:?}); \
+             re-run `make artifacts`",
+            cfg.model
+        );
+    }
+
+    let mut cells = Vec::new();
+    for &gar in &cfg.gars {
+        for &b in &cfg.batch_sizes {
+            for &seed in &cfg.seeds {
+                let mut exp = ExperimentConfig::fig3_default(gar);
+                exp.cluster.n = cfg.n;
+                exp.cluster.f = if gar == GarKind::Average { 0 } else { cfg.f };
+                exp.cluster.actual_byzantine = Some(0);
+                exp.model = ModelConfig::Artifact {
+                    name: cfg.model.clone(),
+                    dir: manifest.dir.to_string_lossy().into_owned(),
+                };
+                exp.train.batch_size = b;
+                exp.train.steps = cfg.steps;
+                exp.train.eval_every = cfg.eval_every;
+                exp.train.seed = seed;
+
+                let mut cluster = launch(&exp, Some((handle.clone(), manifest.clone())))?;
+                let mut evaluator = cluster.evaluator;
+                cluster
+                    .coordinator
+                    .train(cfg.steps, cfg.eval_every, &mut evaluator)
+                    ?;
+                let max_accuracy = cluster.coordinator.metrics.max_accuracy();
+                let final_loss = cluster.coordinator.metrics.final_loss().unwrap_or(f32::NAN);
+                cluster.coordinator.shutdown();
+                if !quiet {
+                    println!(
+                        "fig3 gar={gar:<13} b={b:<3} seed={seed} max_acc={max_accuracy:.4} final_loss={final_loss:.4}"
+                    );
+                }
+                cells.push(Cell {
+                    gar,
+                    batch_size: b,
+                    seed,
+                    max_accuracy,
+                    final_loss,
+                });
+            }
+        }
+    }
+
+    let rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{},{},{},{:.6},{:.6}",
+                c.gar, c.batch_size, c.seed, c.max_accuracy, c.final_loss
+            )
+        })
+        .collect();
+    let path = super::write_csv("fig3.csv", "gar,batch_size,seed,max_accuracy,final_loss", &rows)?;
+    if !quiet {
+        println!("\nwrote {path:?}");
+        print_summary(&cells);
+    }
+    Ok(cells)
+}
+
+/// Mean max-accuracy per (gar, batch size) — the Fig. 3 series.
+pub fn print_summary(cells: &[Cell]) {
+    use std::collections::BTreeMap;
+    let mut by_key: BTreeMap<(String, usize), Vec<f32>> = BTreeMap::new();
+    for c in cells {
+        by_key
+            .entry((c.gar.to_string(), c.batch_size))
+            .or_default()
+            .push(c.max_accuracy);
+    }
+    println!("\n{:<14} {:>5} {:>10} {:>8}", "gar", "b", "mean_acc", "std");
+    for ((gar, b), accs) in by_key {
+        println!(
+            "{:<14} {:>5} {:>10.4} {:>8.4}",
+            gar,
+            b,
+            crate::tensor::mean(&accs),
+            crate::tensor::std_dev(&accs)
+        );
+    }
+}

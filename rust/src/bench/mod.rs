@@ -1,0 +1,73 @@
+//! Benchmark harnesses — one per paper table/figure plus the ablations
+//! DESIGN.md's experiment index lists. Each harness prints the same
+//! rows/series the paper reports and writes a CSV under `results/`.
+//!
+//! | id | paper artefact | function |
+//! |---|---|---|
+//! | fig2 | Fig. 2 aggregation time vs (n, d) | [`fig2::run`] |
+//! | fig3 | Fig. 3 max top-1 accuracy vs batch size | [`fig3::run`] |
+//! | dscaling | Theorem 2.ii O(d) claim | [`dscaling::run`] |
+//! | slowdown | Theorems 1.ii/2.iii m̃/n slowdown | [`slowdown::run`] |
+//! | resilience | weak/strong resilience under the attack gauntlet | [`resilience::run`] |
+//! | cone | (α,f) cone + √d leeway | [`cone::run`] |
+
+pub mod cone;
+pub mod dscaling;
+pub mod fig2;
+pub mod fig3;
+pub mod resilience;
+pub mod slowdown;
+
+use crate::Result;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Where bench CSVs land.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("MB_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Write a CSV with a header line.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(w, "{header}")?;
+    for r in rows {
+        writeln!(w, "{r}")?;
+    }
+    Ok(path)
+}
+
+/// Fig. 2's f rule: `f = ⌊(n−3)/4⌋`.
+pub fn fig2_f(n: usize) -> usize {
+    (n - 3) / 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_f_matches_paper_rule() {
+        assert_eq!(fig2_f(7), 1);
+        assert_eq!(fig2_f(11), 2);
+        assert_eq!(fig2_f(39), 9);
+        // n ≥ 4f+3 always holds under this rule.
+        for n in (7..=39).step_by(2) {
+            assert!(n >= 4 * fig2_f(n) + 3);
+        }
+    }
+
+    #[test]
+    fn csv_writes_under_results_dir() {
+        std::env::set_var("MB_RESULTS_DIR", std::env::temp_dir().join("mb_results_test"));
+        let p = write_csv("t.csv", "a,b", &["1,2".into()]).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b\n1,2\n");
+        std::fs::remove_dir_all(results_dir()).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+}

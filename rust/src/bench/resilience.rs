@@ -1,0 +1,145 @@
+//! Resilience gauntlet — the weak/strong Byzantine-resilience claims.
+//!
+//! Every GAR × every attack on the quadratic workload (known optimum, so
+//! "converged" is unambiguous). Expected shape:
+//!
+//! * averaging breaks under every value attack (one Byzantine suffices, §I);
+//! * weakly-resilient rules (KRUM, MULTI-KRUM, MEDIAN, trimmed mean)
+//!   survive the cheap attacks but drift under little-is-enough (the √d
+//!   leeway of Fig. 1);
+//! * BULYAN / MULTI-BULYAN converge under everything (strong resilience,
+//!   Theorem 2.i) as long as n ≥ 4f+3.
+
+use crate::attacks::AttackKind;
+use crate::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use crate::coordinator::launch;
+use crate::gar::GarKind;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct GauntletRow {
+    pub gar: GarKind,
+    pub attack: &'static str,
+    pub final_loss: f32,
+    pub converged: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct GauntletConfig {
+    pub n: usize,
+    pub f: usize,
+    pub dim: usize,
+    pub noise: f32,
+    pub steps: usize,
+    pub threshold: f32,
+    pub seed: u64,
+    pub gars: Vec<GarKind>,
+    pub attacks: Vec<AttackKind>,
+}
+
+impl Default for GauntletConfig {
+    fn default() -> Self {
+        Self {
+            n: 11,
+            f: 2,
+            dim: 512,
+            noise: 0.5,
+            steps: 400,
+            threshold: 5e-3,
+            seed: 1,
+            gars: vec![
+                GarKind::Average,
+                GarKind::Median,
+                GarKind::TrimmedMean,
+                GarKind::Krum,
+                GarKind::MultiKrum,
+                GarKind::Bulyan,
+                GarKind::MultiBulyan,
+            ],
+            attacks: {
+                let mut a = vec![AttackKind::None];
+                a.extend(AttackKind::gauntlet());
+                a
+            },
+        }
+    }
+}
+
+pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
+    let mut rows = Vec::new();
+    if !quiet {
+        println!(
+            "{:<14} {}",
+            "gar \\ attack",
+            cfg.attacks
+                .iter()
+                .map(|a| format!("{:>18}", a.label()))
+                .collect::<String>()
+        );
+    }
+    for &gar in &cfg.gars {
+        let mut line = format!("{:<14} ", gar.as_str());
+        for &attack in &cfg.attacks {
+            let byz = if attack == AttackKind::None { 0 } else { cfg.f };
+            let exp = ExperimentConfig {
+                cluster: ClusterConfig {
+                    n: cfg.n,
+                    // Averaging declares f=0 (it has no resilience
+                    // contract) but still suffers `byz` actual attackers.
+                    f: if gar == GarKind::Average { 0 } else { cfg.f },
+                    actual_byzantine: Some(byz),
+                    net_delay_us: 0,
+                    drop_prob: 0.0,
+                    round_timeout_ms: 60_000,
+                },
+                gar,
+                attack,
+                model: ModelConfig::Quadratic {
+                    dim: cfg.dim,
+                    noise: cfg.noise,
+                },
+                train: TrainConfig {
+                    learning_rate: 0.1,
+                    momentum: 0.0,
+                    steps: cfg.steps,
+                    batch_size: 8,
+                    eval_every: 0,
+                    seed: cfg.seed,
+                },
+                output_dir: None,
+            };
+            let cluster = launch(&exp, None)?;
+            let mut coordinator = cluster.coordinator;
+            let mut evaluator = cluster.evaluator;
+            coordinator.train(cfg.steps, 0, &mut evaluator)?;
+            let final_loss = coordinator.metrics.final_loss().unwrap_or(f32::INFINITY);
+            coordinator.shutdown();
+            let converged = final_loss.is_finite() && final_loss < cfg.threshold;
+            line.push_str(&format!(
+                "{:>11.2e}{:>7}",
+                final_loss,
+                if converged { " ok" } else { " FAIL" }
+            ));
+            rows.push(GauntletRow {
+                gar,
+                attack: attack.label(),
+                final_loss,
+                converged,
+            });
+        }
+        if !quiet {
+            println!("{line}");
+        }
+    }
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{}",
+                r.gar, r.attack, r.final_loss, r.converged
+            )
+        })
+        .collect();
+    super::write_csv("resilience.csv", "gar,attack,final_loss,converged", &csv)?;
+    Ok(rows)
+}

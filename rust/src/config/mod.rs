@@ -1,0 +1,429 @@
+//! Configuration system: TOML-subset files + CLI overrides.
+//!
+//! A single [`ExperimentConfig`] describes one distributed-training run —
+//! cluster shape `(n, f)`, GAR, attack, model/workload, optimizer and
+//! schedule — and is consumed by the launcher (`main.rs`), the bench
+//! harnesses and the examples. `validate()` enforces the paper's
+//! resilience preconditions (e.g. MULTI-BULYAN needs `n ≥ 4f+3`) before
+//! any worker is spawned.
+//!
+//! File format: the TOML subset of [`parser`] —
+//!
+//! ```toml
+//! gar = "multi-bulyan"
+//! attack = "little-is-enough"
+//! [cluster]
+//! n = 11
+//! f = 2
+//! [model]
+//! kind = "quadratic"     # or "mlp" / "cnn" / "transformer" (artifacts)
+//! dim = 1000
+//! [train]
+//! steps = 600
+//! batch_size = 25
+//! ```
+
+pub mod parser;
+
+use crate::attacks::AttackKind;
+use crate::gar::GarKind;
+use crate::Result;
+use parser::Document;
+use std::path::Path;
+
+/// Default server-side round timeout (generous: PJRT gradient computation
+/// on CPU can take seconds for large models/batches).
+pub fn default_round_timeout_ms() -> u64 {
+    60_000
+}
+
+/// Cluster shape: the `(n, f)` contract of §II-C-c.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Total number of workers.
+    pub n: usize,
+    /// Declared number of tolerated Byzantine workers (the contract).
+    pub f: usize,
+    /// Actual number of Byzantine workers simulated (≤ f for an honest
+    /// adversary model; > f to demonstrate contract violation).
+    pub actual_byzantine: Option<usize>,
+    /// Simulated per-message network delay in microseconds (mean).
+    pub net_delay_us: u64,
+    /// Probability of dropping a worker's gradient in a round (the server
+    /// then falls back to the round-timeout path).
+    pub drop_prob: f64,
+    /// Round collection timeout in milliseconds (how long the server
+    /// waits for stragglers before the last-known-gradient fallback).
+    pub round_timeout_ms: u64,
+}
+
+impl ClusterConfig {
+    /// Raw count; `None` is resolved at the experiment level (where the
+    /// attack is known) by [`ExperimentConfig::byzantine_count`].
+    pub fn byzantine_count_or(&self, default: usize) -> usize {
+        self.actual_byzantine.unwrap_or(default)
+    }
+}
+
+/// Which model/workload the workers compute gradients for.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelConfig {
+    /// Rust-native synthetic least-squares problem (no PJRT needed):
+    /// workers hold shards of a linear-regression-style dataset. Used by
+    /// unit tests and the fast ablation benches.
+    Quadratic { dim: usize, noise: f32 },
+    /// AOT-compiled JAX model executed via PJRT; `name` selects the
+    /// artifact family from `artifacts/manifest.json` (e.g. "mlp",
+    /// "cnn", "transformer").
+    Artifact { name: String, dir: String },
+}
+
+/// Optimizer + schedule (the paper's Fig. 3 protocol: lr 0.1, momentum
+/// 0.9, 3000 steps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub learning_rate: f32,
+    pub momentum: f32,
+    pub steps: usize,
+    /// Per-worker minibatch size (Fig. 3 sweeps 5..=50).
+    pub batch_size: usize,
+    /// Evaluate accuracy/loss every `eval_every` steps (0 = only at end).
+    pub eval_every: usize,
+    /// RNG seed (Fig. 3 uses seeds 1..=5).
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            learning_rate: 0.1,
+            momentum: 0.9,
+            steps: 600,
+            batch_size: 25,
+            eval_every: 100,
+            seed: 1,
+        }
+    }
+}
+
+/// The full experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub gar: GarKind,
+    pub attack: AttackKind,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    /// Where to write metrics CSV (None = stdout summary only).
+    pub output_dir: Option<String>,
+}
+
+impl ExperimentConfig {
+    /// The paper's Fig. 3 base configuration (n=11, f=2, no attack).
+    pub fn fig3_default(gar: GarKind) -> Self {
+        Self {
+            cluster: ClusterConfig {
+                n: 11,
+                f: 2,
+                actual_byzantine: Some(0),
+                net_delay_us: 0,
+                drop_prob: 0.0,
+                round_timeout_ms: default_round_timeout_ms(),
+            },
+            gar,
+            attack: AttackKind::None,
+            model: ModelConfig::Artifact {
+                name: "cnn".into(),
+                dir: "artifacts".into(),
+            },
+            train: TrainConfig::default(),
+            output_dir: None,
+        }
+    }
+
+    /// Load from a TOML-subset file.
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading config {:?}: {e}", path.as_ref()))?;
+        Self::from_text(&text)
+    }
+
+    /// Parse from config text.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let doc = parser::parse(text)?;
+        let cfg = Self::from_document(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn from_document(doc: &Document) -> Result<Self> {
+        let root = doc.get("").cloned().unwrap_or_default();
+        let get_str = |sec: &str, key: &str| -> Option<String> {
+            doc.get(sec)
+                .and_then(|s| s.get(key))
+                .and_then(|v| v.as_str().ok().map(str::to_string))
+        };
+
+        let gar: GarKind = root
+            .get("gar")
+            .map(|v| v.as_str())
+            .transpose()?
+            .unwrap_or("multi-bulyan")
+            .parse()?;
+        let attack: AttackKind = root
+            .get("attack")
+            .map(|v| v.as_str())
+            .transpose()?
+            .unwrap_or("none")
+            .parse()?;
+
+        let cluster_sec = doc
+            .get("cluster")
+            .ok_or_else(|| anyhow::anyhow!("missing [cluster] section"))?;
+        let cluster = ClusterConfig {
+            n: cluster_sec
+                .get("n")
+                .ok_or_else(|| anyhow::anyhow!("missing cluster.n"))?
+                .as_usize()?,
+            f: cluster_sec
+                .get("f")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            actual_byzantine: cluster_sec
+                .get("actual_byzantine")
+                .map(|v| v.as_usize())
+                .transpose()?,
+            net_delay_us: cluster_sec
+                .get("net_delay_us")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(0),
+            drop_prob: cluster_sec
+                .get("drop_prob")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(0.0),
+            round_timeout_ms: cluster_sec
+                .get("round_timeout_ms")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or_else(default_round_timeout_ms),
+        };
+
+        let model_kind = get_str("model", "kind").unwrap_or_else(|| "quadratic".into());
+        let model = if model_kind == "quadratic" {
+            let sec = doc.get("model");
+            ModelConfig::Quadratic {
+                dim: sec
+                    .and_then(|s| s.get("dim"))
+                    .map(|v| v.as_usize())
+                    .transpose()?
+                    .unwrap_or(1000),
+                noise: sec
+                    .and_then(|s| s.get("noise"))
+                    .map(|v| v.as_f32())
+                    .transpose()?
+                    .unwrap_or(0.1),
+            }
+        } else {
+            ModelConfig::Artifact {
+                name: model_kind,
+                dir: get_str("model", "dir").unwrap_or_else(|| "artifacts".into()),
+            }
+        };
+
+        let defaults = TrainConfig::default();
+        let tsec = doc.get("train");
+        let field_f32 = |key: &str, dflt: f32| -> Result<f32> {
+            tsec.and_then(|s| s.get(key))
+                .map(|v| v.as_f32())
+                .transpose()
+                .map(|o| o.unwrap_or(dflt))
+        };
+        let field_usize = |key: &str, dflt: usize| -> Result<usize> {
+            tsec.and_then(|s| s.get(key))
+                .map(|v| v.as_usize())
+                .transpose()
+                .map(|o| o.unwrap_or(dflt))
+        };
+        let train = TrainConfig {
+            learning_rate: field_f32("learning_rate", defaults.learning_rate)?,
+            momentum: field_f32("momentum", defaults.momentum)?,
+            steps: field_usize("steps", defaults.steps)?,
+            batch_size: field_usize("batch_size", defaults.batch_size)?,
+            eval_every: field_usize("eval_every", defaults.eval_every)?,
+            seed: tsec
+                .and_then(|s| s.get("seed"))
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(defaults.seed),
+        };
+
+        Ok(Self {
+            cluster,
+            gar,
+            attack,
+            model,
+            train,
+            output_dir: get_str("", "output_dir"),
+        })
+    }
+
+    /// Number of Byzantine workers actually simulated: explicit
+    /// `actual_byzantine`, else `f` when an attack is configured, else 0.
+    pub fn byzantine_count(&self) -> usize {
+        let default = if self.attack == AttackKind::None {
+            0
+        } else {
+            self.cluster.f
+        };
+        self.cluster.byzantine_count_or(default)
+    }
+
+    /// Enforce every precondition before launching.
+    pub fn validate(&self) -> Result<()> {
+        let (n, f) = (self.cluster.n, self.cluster.f);
+        anyhow::ensure!(n >= 1, "cluster.n must be ≥ 1");
+        let min_n = self.gar.min_n(f);
+        anyhow::ensure!(
+            n >= min_n,
+            "GAR {} with f={f} requires n ≥ {min_n}, got n={n}",
+            self.gar
+        );
+        let byz = self.byzantine_count();
+        anyhow::ensure!(byz <= n, "actual_byzantine={byz} exceeds cluster size n={n}");
+        anyhow::ensure!(
+            byz == 0 || self.attack != AttackKind::None,
+            "cluster has {byz} Byzantine workers but attack = none; \
+             set an attack or actual_byzantine = 0"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.cluster.drop_prob),
+            "drop_prob must be in [0,1]"
+        );
+        anyhow::ensure!(
+            self.cluster.round_timeout_ms >= 1,
+            "round_timeout_ms must be ≥ 1"
+        );
+        anyhow::ensure!(self.train.batch_size >= 1, "batch_size must be ≥ 1");
+        anyhow::ensure!(self.train.steps >= 1, "steps must be ≥ 1");
+        anyhow::ensure!(self.train.learning_rate > 0.0, "learning_rate must be > 0");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.train.momentum),
+            "momentum must be in [0,1)"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::fig3_default(GarKind::MultiBulyan);
+        cfg.model = ModelConfig::Quadratic {
+            dim: 100,
+            noise: 0.1,
+        };
+        cfg
+    }
+
+    #[test]
+    fn fig3_default_validates() {
+        base().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_undersized_cluster() {
+        let mut cfg = base();
+        cfg.cluster.n = 10; // multi-bulyan needs 4*2+3 = 11
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_byzantine_without_attack() {
+        let mut cfg = base();
+        cfg.cluster.actual_byzantine = Some(2);
+        cfg.attack = AttackKind::None;
+        assert!(cfg.validate().is_err());
+        cfg.attack = AttackKind::SignFlip { scale: 1.0 };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_minimal_config() {
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-krum"
+            [cluster]
+            n = 7
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.gar, GarKind::MultiKrum);
+        assert_eq!(cfg.train.learning_rate, 0.1);
+        match cfg.model {
+            ModelConfig::Quadratic { dim, .. } => assert_eq!(dim, 1000),
+            _ => panic!("wrong model"),
+        }
+    }
+
+    #[test]
+    fn parse_full_config_with_artifact_model() {
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-bulyan"
+            attack = "little-is-enough"
+            [cluster]
+            n = 11
+            f = 2
+            actual_byzantine = 2
+            net_delay_us = 100
+            drop_prob = 0.01
+            [model]
+            kind = "mlp"
+            dir = "artifacts"
+            [train]
+            learning_rate = 0.05
+            momentum = 0.8
+            steps = 100
+            batch_size = 10
+            eval_every = 20
+            seed = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.byzantine_count(), 2);
+        assert_eq!(cfg.train.seed, 3);
+        match &cfg.model {
+            ModelConfig::Artifact { name, dir } => {
+                assert_eq!(name, "mlp");
+                assert_eq!(dir, "artifacts");
+            }
+            _ => panic!("wrong model"),
+        }
+    }
+
+    #[test]
+    fn missing_cluster_section_is_an_error() {
+        assert!(ExperimentConfig::from_text("gar = \"average\"").is_err());
+    }
+
+    #[test]
+    fn bad_hyperparams_rejected() {
+        let mut cfg = base();
+        cfg.train.momentum = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = base();
+        cfg.train.learning_rate = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = base();
+        cfg.cluster.drop_prob = 2.0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal TOML-subset parser for experiment configs (the offline build
+//! has no `toml` crate). Supported grammar — exactly what the config
+//! surface needs:
+//!
+//! ```toml
+//! # comments
+//! key = "string"        # strings (double-quoted, \" \\ escapes)
+//! key = 42              # integers
+//! key = 0.5             # floats
+//! key = true            # booleans
+//! [section]             # single-level sections
+//! key = 1
+//! ```
+
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => anyhow::bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => anyhow::bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(
+            n >= 0.0 && n.fract() == 0.0 && n <= 9e15,
+            "expected non-negative integer, got {n}"
+        );
+        Ok(n as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_usize()? as u64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => anyhow::bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Sections → keys → values. Top-level keys live under the `""` section.
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a config document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc: Document = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            anyhow::ensure!(
+                !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_' || c == '.'),
+                "line {}: bad section name '{name}'",
+                lineno + 1
+            );
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("line {}: expected 'key = value', got '{line}'", lineno + 1)
+        })?;
+        let key = key.trim();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    anyhow::ensure!(!text.is_empty(), "missing value");
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = text.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        let mut s = String::new();
+        let mut chars = body.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    other => anyhow::bail!("bad escape '\\{other:?}'"),
+                }
+            } else if c == '"' {
+                anyhow::bail!("unescaped quote inside string");
+            } else {
+                s.push(c);
+            }
+        }
+        return Ok(Value::Str(s));
+    }
+    // Numbers (allow underscores like 10_000).
+    let cleaned = text.replace('_', "");
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow::anyhow!("cannot parse value '{text}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            # experiment
+            gar = "multi-krum"
+            verbose = true
+            [cluster]
+            n = 11
+            f = 2
+            drop_prob = 0.25   # inline comment
+            [train]
+            steps = 10_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["gar"], Value::Str("multi-krum".into()));
+        assert_eq!(doc[""]["verbose"], Value::Bool(true));
+        assert_eq!(doc["cluster"]["n"].as_usize().unwrap(), 11);
+        assert_eq!(doc["cluster"]["drop_prob"].as_f64().unwrap(), 0.25);
+        assert_eq!(doc["train"]["steps"].as_usize().unwrap(), 10_000);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let doc = parse(r#"msg = "a # not comment \"quoted\" \n""#).unwrap();
+        assert_eq!(
+            doc[""]["msg"].as_str().unwrap(),
+            "a # not comment \"quoted\" \n"
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+        let err = parse("[unterminated\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+    }
+
+    #[test]
+    fn type_accessors_guard() {
+        let doc = parse("x = 1.5\ny = \"s\"\n").unwrap();
+        assert!(doc[""]["x"].as_str().is_err());
+        assert!(doc[""]["x"].as_usize().is_err());
+        assert!(doc[""]["y"].as_f64().is_err());
+        assert_eq!(doc[""]["x"].as_f32().unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,213 @@
+//! Cluster launcher: wire transport + workers + coordinator + evaluator
+//! from an [`ExperimentConfig`].
+
+use crate::config::{ExperimentConfig, ModelConfig};
+use crate::data::{FashionLike, QuadraticProblem, TokenStream};
+use crate::runtime::{ComputeHandle, Manifest};
+use crate::training::LrSchedule;
+use crate::transport::{star, FaultModel};
+use crate::worker::{spawn_workers, GradSource};
+use crate::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::core::{Coordinator, CoordinatorOptions};
+use super::evaluator::Evaluator;
+
+/// A running cluster, ready to train.
+pub struct LaunchedCluster {
+    pub coordinator: Coordinator,
+    pub evaluator: Evaluator,
+    /// The declared experiment (for reporting).
+    pub config: ExperimentConfig,
+}
+
+/// Build and launch everything described by `config`.
+///
+/// `compute` must be `Some` when the model is [`ModelConfig::Artifact`];
+/// the quadratic workload runs entirely in rust.
+pub fn launch(
+    config: &ExperimentConfig,
+    compute: Option<(ComputeHandle, Manifest)>,
+) -> Result<LaunchedCluster> {
+    config.validate()?;
+    let n = config.cluster.n;
+    let byz = config.byzantine_count();
+    let honest = n - byz;
+    let seed = config.train.seed;
+
+    let faults = FaultModel {
+        delay_us: config.cluster.net_delay_us,
+        drop_prob: config.cluster.drop_prob,
+        seed,
+    };
+    let (server, endpoints) = star(honest, faults);
+
+    let (initial_params, evaluator) = match &config.model {
+        ModelConfig::Quadratic { dim, noise } => {
+            let problem = Arc::new(QuadraticProblem::new(*dim, *noise, seed));
+            let pairs = endpoints
+                .into_iter()
+                .enumerate()
+                .map(|(i, ep)| {
+                    (
+                        ep,
+                        GradSource::quadratic(Arc::clone(&problem), i, config.train.batch_size),
+                    )
+                })
+                .collect();
+            spawn_workers(pairs);
+            (
+                vec![0.0f32; *dim],
+                Evaluator::Quadratic(Arc::clone(&problem)),
+            )
+        }
+        ModelConfig::Artifact { name, dir: _ } => {
+            let (handle, manifest) = compute.ok_or_else(|| {
+                anyhow::anyhow!("model '{name}' needs a PJRT compute handle + manifest")
+            })?;
+            let model = manifest.model(name)?.clone();
+            let grad_artifact = model.grad_artifact(config.train.batch_size)?.to_string();
+            // Pre-compile once so round 1 isn't a compile stall.
+            handle.warmup(&grad_artifact)?;
+
+            let init = crate::runtime::read_f32_bin(manifest.dir.join(&model.init_file))?;
+            anyhow::ensure!(
+                init.len() == model.dim,
+                "init file has {} params; manifest says {}",
+                init.len(),
+                model.dim
+            );
+
+            if name == "transformer" {
+                // LM workload over the synthetic bigram corpus.
+                let stream = Arc::new(TokenStream::new(model.num_classes, 4, seed));
+                let seq_len = model.feature_dim;
+                let pairs = endpoints
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, ep)| {
+                        (
+                            ep,
+                            GradSource::lm(
+                                handle.clone(),
+                                grad_artifact.clone(),
+                                Arc::clone(&stream),
+                                seq_len,
+                                i,
+                                honest,
+                                config.train.batch_size,
+                                seed.wrapping_add(1000 + i as u64),
+                            ),
+                        )
+                    })
+                    .collect();
+                spawn_workers(pairs);
+                let evaluator = Evaluator::Lm {
+                    handle,
+                    artifact: grad_artifact,
+                    stream,
+                    seq_len,
+                    batch_size: config.train.batch_size,
+                    batches: 4,
+                };
+                (init, evaluator)
+            } else {
+                let dataset = Arc::new(FashionLike::small(seed));
+                let pairs = endpoints
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, ep)| {
+                        (
+                            ep,
+                            GradSource::artifact(
+                                handle.clone(),
+                                grad_artifact.clone(),
+                                Arc::clone(&dataset),
+                                i,
+                                honest,
+                                config.train.batch_size,
+                                seed.wrapping_add(1000 + i as u64),
+                            ),
+                        )
+                    })
+                    .collect();
+                spawn_workers(pairs);
+                let evaluator = match &model.eval {
+                    Some(eval_artifact) => Evaluator::Artifact {
+                        handle,
+                        artifact: eval_artifact.clone(),
+                        dataset,
+                        eval_batch: model.eval_batch,
+                    },
+                    None => Evaluator::Disabled,
+                };
+                (init, evaluator)
+            }
+        }
+    };
+
+    let options = CoordinatorOptions {
+        round_timeout: Duration::from_millis(config.cluster.round_timeout_ms),
+        schedule: LrSchedule::Fixed {
+            base: config.train.learning_rate,
+        },
+        seed,
+    };
+    let coordinator = Coordinator::new(
+        config.gar.instantiate(n, config.cluster.f)?,
+        config.attack.instantiate(),
+        byz,
+        server,
+        initial_params,
+        config.train.learning_rate,
+        config.train.momentum,
+        options,
+    )?;
+
+    Ok(LaunchedCluster {
+        coordinator,
+        evaluator,
+        config: config.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attacks::AttackKind;
+    use crate::gar::GarKind;
+
+    #[test]
+    fn launch_quadratic_and_train() {
+        let mut cfg = ExperimentConfig::fig3_default(GarKind::MultiKrum);
+        cfg.model = ModelConfig::Quadratic {
+            dim: 24,
+            noise: 0.05,
+        };
+        cfg.cluster.n = 7;
+        cfg.cluster.f = 1;
+        cfg.cluster.actual_byzantine = Some(1);
+        cfg.attack = AttackKind::SignFlip { scale: 5.0 };
+        cfg.train.steps = 40;
+        cfg.train.batch_size = 8;
+        let mut cluster = launch(&cfg, None).unwrap();
+        let mut evaluator = cluster.evaluator;
+        cluster
+            .coordinator
+            .train(40, 10, &mut evaluator)
+            .unwrap();
+        let loss = cluster.coordinator.metrics.final_loss().unwrap();
+        assert!(loss < 0.01, "loss {loss}");
+        cluster.coordinator.shutdown();
+    }
+
+    #[test]
+    fn artifact_model_requires_compute() {
+        let cfg = ExperimentConfig::fig3_default(GarKind::MultiBulyan);
+        match launch(&cfg, None) {
+            Err(err) => assert!(err.to_string().contains("compute")),
+            Ok(_) => panic!("expected launch to fail without a compute handle"),
+        }
+    }
+}

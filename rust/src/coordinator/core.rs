@@ -1,0 +1,455 @@
+//! The round loop: broadcast → collect → forge → aggregate → update.
+
+use crate::attacks::{Attack, AttackCtx};
+use crate::gar::{Gar, GarScratch};
+use crate::metrics::{MetricsRecorder, Stopwatch, TrainPoint};
+use crate::tensor::GradMatrix;
+use crate::training::{LrSchedule, Sgd};
+use crate::transport::ServerEndpoint;
+use crate::util::Rng64;
+use crate::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::evaluator::Evaluator;
+
+/// Tunables not covered by the experiment config.
+#[derive(Debug, Clone)]
+pub struct CoordinatorOptions {
+    /// How long to wait for a round's gradients before falling back.
+    pub round_timeout: Duration,
+    /// LR schedule (defaults to the paper's fixed rate).
+    pub schedule: LrSchedule,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        Self {
+            round_timeout: Duration::from_secs(30),
+            schedule: LrSchedule::Fixed { base: 0.1 },
+            seed: 1,
+        }
+    }
+}
+
+/// What one round produced (for logs/benches).
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    pub round: u64,
+    /// Honest gradients received before the timeout.
+    pub collected: usize,
+    /// Honest gradients substituted from the last-known cache.
+    pub missing: usize,
+    /// GAR aggregation wall time, seconds.
+    pub agg_seconds: f64,
+}
+
+/// The parameter server.
+pub struct Coordinator {
+    n: usize,
+    /// Number of Byzantine workers actually simulated this run.
+    byz: usize,
+    gar: Box<dyn Gar>,
+    attack: Option<Box<dyn Attack>>,
+    server: ServerEndpoint,
+    params: Vec<f32>,
+    opt: Sgd,
+    options: CoordinatorOptions,
+    grads: GradMatrix,
+    agg: Vec<f32>,
+    /// Last successfully received gradient per honest worker (straggler
+    /// fallback — reusing a stale gradient keeps the GAR's input square
+    /// and is the standard synchronous-PS recovery).
+    last_good: Vec<Option<Vec<f32>>>,
+    scratch: GarScratch,
+    rng: Rng64,
+    round: u64,
+    pub metrics: MetricsRecorder,
+}
+
+impl Coordinator {
+    /// `server` must be a star over exactly `n − byz` honest workers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        gar: Box<dyn Gar>,
+        attack: Option<Box<dyn Attack>>,
+        byz: usize,
+        server: ServerEndpoint,
+        initial_params: Vec<f32>,
+        lr: f32,
+        momentum: f32,
+        options: CoordinatorOptions,
+    ) -> Result<Self> {
+        let n = gar.n();
+        anyhow::ensure!(byz <= n, "byzantine count {byz} > n {n}");
+        anyhow::ensure!(
+            server.num_workers() == n - byz,
+            "transport has {} honest workers; expected n − byz = {}",
+            server.num_workers(),
+            n - byz
+        );
+        anyhow::ensure!(
+            byz == 0 || attack.is_some(),
+            "byz={byz} workers but no attack configured"
+        );
+        let d = initial_params.len();
+        let opt = Sgd::new(d, lr, momentum)?;
+        Ok(Self {
+            n,
+            byz,
+            gar,
+            attack,
+            server,
+            params: initial_params,
+            opt,
+            grads: GradMatrix::zeros(n, d),
+            agg: vec![0.0; d],
+            last_good: vec![None; n - byz],
+            scratch: GarScratch::new(),
+            rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
+            round: 0,
+            metrics: MetricsRecorder::new(n),
+            options,
+        })
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn gar_name(&self) -> &'static str {
+        self.gar.name()
+    }
+
+    /// The aggregated gradient of the last completed round.
+    pub fn last_aggregate(&self) -> &[f32] {
+        &self.agg
+    }
+
+    /// Replace the GAR instance (must share the same `n` contract) —
+    /// used by the ablation benches to test custom-m MULTI-KRUM variants
+    /// that the `GarKind` registry does not expose.
+    pub fn with_gar(mut self, gar: Box<dyn Gar>) -> Result<Self> {
+        anyhow::ensure!(
+            gar.n() == self.n,
+            "replacement GAR is for n={}, coordinator has n={}",
+            gar.n(),
+            self.n
+        );
+        self.gar = gar;
+        Ok(self)
+    }
+
+    /// Drive one synchronous SGD round.
+    pub fn run_round(&mut self) -> Result<RoundOutcome> {
+        self.round += 1;
+        let round = self.round;
+        let honest = self.n - self.byz;
+
+        // 1. Broadcast current parameters.
+        let params = Arc::new(self.params.clone());
+        self.server.broadcast(round, params);
+
+        // 2. Collect honest gradients (timeout-bounded).
+        let msgs = self
+            .server
+            .collect(round, honest, self.options.round_timeout);
+        let collected = msgs.len();
+        let mut have = vec![false; honest];
+        for msg in msgs {
+            anyhow::ensure!(
+                msg.gradient.len() == self.dim(),
+                "worker {} sent gradient of length {} (d = {})",
+                msg.worker,
+                msg.gradient.len(),
+                self.dim()
+            );
+            self.grads.set_row(msg.worker, &msg.gradient);
+            self.last_good[msg.worker] = Some(msg.gradient);
+            have[msg.worker] = true;
+        }
+
+        // 3. Straggler fallback: last known gradient, else zero.
+        let mut missing = 0;
+        for (w, ok) in have.iter().enumerate() {
+            if !ok {
+                missing += 1;
+                match self.last_good[w].clone() {
+                    Some(g) => self.grads.set_row(w, &g),
+                    None => self.grads.row_mut(w).fill(0.0),
+                }
+            }
+        }
+        self.metrics.add("gradients_missing", missing as u64);
+
+        // 4. Byzantine coalition forges its rows with full knowledge of
+        //    the honest proposals.
+        if self.byz > 0 {
+            let attack = self.attack.as_ref().expect("checked in new()");
+            let correct = self.grads.gather_rows(&(0..honest).collect::<Vec<_>>());
+            let ctx = AttackCtx::new(&correct, self.byz, self.n);
+            let forged = attack.forge(&ctx, &mut self.rng)?;
+            anyhow::ensure!(
+                forged.n() == self.byz && forged.d() == self.dim(),
+                "attack '{}' forged a {}×{} matrix; expected {}×{}",
+                attack.name(),
+                forged.n(),
+                forged.d(),
+                self.byz,
+                self.dim()
+            );
+            for b in 0..self.byz {
+                self.grads.set_row(honest + b, forged.row(b));
+            }
+        }
+
+        // 5. Aggregate (the timed hot path) and update.
+        let sw = Stopwatch::start();
+        self.gar
+            .aggregate_with_scratch(&self.grads, &mut self.agg, &mut self.scratch)?;
+        let agg_seconds = sw.elapsed_s();
+        self.metrics.time("aggregate", agg_seconds);
+
+        let lr = self.options.schedule.at((round - 1) as usize);
+        self.opt.set_lr(lr);
+        // Defensive: never apply a non-finite update (a GAR bug or an
+        // un-filtered NaN attack would otherwise destroy the model).
+        if self.agg.iter().any(|v| !v.is_finite()) {
+            self.metrics.incr("non_finite_aggregate_skipped");
+        } else {
+            let agg = std::mem::take(&mut self.agg);
+            self.opt.step(&mut self.params, &agg);
+            self.agg = agg;
+        }
+        self.metrics.incr("rounds");
+
+        Ok(RoundOutcome {
+            round,
+            collected,
+            missing,
+            agg_seconds,
+        })
+    }
+
+    /// Run `steps` rounds, evaluating every `eval_every` (0 = only at the
+    /// end). Records the training curve in `self.metrics`.
+    pub fn train(
+        &mut self,
+        steps: usize,
+        eval_every: usize,
+        evaluator: &mut Evaluator,
+    ) -> Result<()> {
+        for step in 0..steps {
+            self.run_round()?;
+            let is_last = step + 1 == steps;
+            if is_last || (eval_every > 0 && (step + 1) % eval_every == 0) {
+                let (loss, acc) = evaluator.evaluate(&self.params)?;
+                self.metrics.record_point(TrainPoint {
+                    step: step + 1,
+                    loss,
+                    accuracy: acc,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop all workers.
+    pub fn shutdown(&self) {
+        self.server.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attacks::AttackKind;
+    use crate::data::QuadraticProblem;
+    use crate::gar::GarKind;
+    use crate::transport::{star, FaultModel};
+    use crate::worker::{spawn_workers, GradSource};
+
+    fn quadratic_cluster(
+        n: usize,
+        f: usize,
+        byz: usize,
+        gar: GarKind,
+        attack: AttackKind,
+        dim: usize,
+        noise: f32,
+    ) -> (Coordinator, Arc<QuadraticProblem>) {
+        let problem = Arc::new(QuadraticProblem::new(dim, noise, 7));
+        let honest = n - byz;
+        let (server, workers) = star(honest, FaultModel::default());
+        let pairs = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
+            .collect();
+        spawn_workers(pairs);
+        let coordinator = Coordinator::new(
+            gar.instantiate(n, f).unwrap(),
+            attack.instantiate(),
+            byz,
+            server,
+            vec![0.0; dim],
+            0.2,
+            0.0,
+            CoordinatorOptions {
+                round_timeout: Duration::from_secs(10),
+                schedule: LrSchedule::Fixed { base: 0.2 },
+                seed: 3,
+            },
+        )
+        .unwrap();
+        (coordinator, problem)
+    }
+
+    #[test]
+    fn byzantine_free_round_runs() {
+        let (mut coord, _p) =
+            quadratic_cluster(7, 1, 0, GarKind::MultiKrum, AttackKind::None, 32, 0.05);
+        let out = coord.run_round().unwrap();
+        assert_eq!(out.collected, 7);
+        assert_eq!(out.missing, 0);
+        assert!(out.agg_seconds >= 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn training_converges_without_byzantine() {
+        let (mut coord, problem) =
+            quadratic_cluster(7, 1, 0, GarKind::MultiKrum, AttackKind::None, 32, 0.05);
+        let mut eval = Evaluator::Quadratic(Arc::clone(&problem));
+        coord.train(60, 10, &mut eval).unwrap();
+        let final_loss = coord.metrics.final_loss().unwrap();
+        assert!(final_loss < 1e-3, "loss {final_loss}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn multi_bulyan_survives_sign_flip() {
+        let (mut coord, problem) = quadratic_cluster(
+            11,
+            2,
+            2,
+            GarKind::MultiBulyan,
+            AttackKind::SignFlip { scale: 10.0 },
+            32,
+            0.05,
+        );
+        let mut eval = Evaluator::Quadratic(Arc::clone(&problem));
+        coord.train(60, 10, &mut eval).unwrap();
+        let final_loss = coord.metrics.final_loss().unwrap();
+        assert!(final_loss < 1e-3, "loss {final_loss}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn averaging_is_destroyed_by_sign_flip() {
+        let (mut coord, problem) = quadratic_cluster(
+            11,
+            0,
+            2,
+            GarKind::Average,
+            AttackKind::SignFlip { scale: 10.0 },
+            32,
+            0.05,
+        );
+        let mut eval = Evaluator::Quadratic(Arc::clone(&problem));
+        coord.train(30, 10, &mut eval).unwrap();
+        let byz_loss = coord.metrics.final_loss().unwrap();
+        coord.shutdown();
+
+        let (mut clean, problem2) =
+            quadratic_cluster(11, 0, 0, GarKind::Average, AttackKind::None, 32, 0.05);
+        let mut eval2 = Evaluator::Quadratic(Arc::clone(&problem2));
+        clean.train(30, 10, &mut eval2).unwrap();
+        let clean_loss = clean.metrics.final_loss().unwrap();
+        clean.shutdown();
+
+        assert!(
+            byz_loss > 10.0 * clean_loss.max(1e-9),
+            "sign-flip should cripple averaging: byz {byz_loss} vs clean {clean_loss}"
+        );
+    }
+
+    #[test]
+    fn nan_attack_never_corrupts_params() {
+        let (mut coord, _p) = quadratic_cluster(
+            11,
+            2,
+            2,
+            GarKind::MultiBulyan,
+            AttackKind::Infinity { nan: true },
+            16,
+            0.05,
+        );
+        for _ in 0..10 {
+            coord.run_round().unwrap();
+        }
+        assert!(coord.params().iter().all(|v| v.is_finite()));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn straggler_fallback_keeps_round_square() {
+        // All messages dropped: round must still complete via fallback.
+        let problem = Arc::new(QuadraticProblem::new(8, 0.05, 1));
+        let (server, workers) = star(
+            7,
+            FaultModel {
+                drop_prob: 1.0,
+                ..Default::default()
+            },
+        );
+        let pairs = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 4)))
+            .collect();
+        spawn_workers(pairs);
+        let mut coord = Coordinator::new(
+            GarKind::MultiKrum.instantiate(7, 1).unwrap(),
+            None,
+            0,
+            server,
+            vec![0.0; 8],
+            0.1,
+            0.0,
+            CoordinatorOptions {
+                round_timeout: Duration::from_millis(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let out = coord.run_round().unwrap();
+        assert_eq!(out.collected, 0);
+        assert_eq!(out.missing, 7);
+        assert_eq!(coord.metrics.counter("gradients_missing"), 7);
+        // Zero-gradient fallback: params unchanged.
+        assert!(coord.params().iter().all(|&v| v == 0.0));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn with_gar_swaps_rule() {
+        let (coord, _p) =
+            quadratic_cluster(7, 1, 0, GarKind::MultiKrum, AttackKind::None, 8, 0.05);
+        let swapped = coord
+            .with_gar(GarKind::Median.instantiate(7, 1).unwrap())
+            .unwrap();
+        assert_eq!(swapped.gar_name(), "median");
+        let bad = GarKind::Median.instantiate(9, 1).unwrap();
+        assert!(swapped.with_gar(bad).is_err());
+    }
+}

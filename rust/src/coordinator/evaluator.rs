@@ -1,0 +1,160 @@
+//! Model evaluation: the Fig. 3 metric (top-1 cross-accuracy on the held-
+//! out split) plus loss curves for the quadratic and LM workloads.
+
+use crate::data::{Batch, FashionLike, QuadraticProblem, TokenStream, IMAGE_DIM};
+use crate::runtime::{ArgValue, ComputeHandle};
+use crate::Result;
+use std::sync::Arc;
+
+/// How to score the current parameters. Returns `(loss, accuracy)`;
+/// accuracy is NaN for workloads without a classification metric.
+pub enum Evaluator {
+    /// Closed-form loss of the quadratic problem.
+    Quadratic(Arc<QuadraticProblem>),
+    /// Classifier accuracy+loss over the FashionLike test split via the
+    /// AOT eval artifact (fixed chunk size `eval_batch`).
+    Artifact {
+        handle: ComputeHandle,
+        artifact: String,
+        dataset: Arc<FashionLike>,
+        eval_batch: usize,
+    },
+    /// LM held-out loss via the gradient artifact's loss output (the
+    /// gradient itself is discarded).
+    Lm {
+        handle: ComputeHandle,
+        artifact: String,
+        stream: Arc<TokenStream>,
+        seq_len: usize,
+        batch_size: usize,
+        batches: usize,
+    },
+    /// No evaluation (returns NaN/NaN).
+    Disabled,
+}
+
+impl Evaluator {
+    pub fn evaluate(&mut self, params: &[f32]) -> Result<(f32, f32)> {
+        match self {
+            Evaluator::Quadratic(problem) => Ok((problem.loss(params), f32::NAN)),
+            Evaluator::Artifact {
+                handle,
+                artifact,
+                dataset,
+                eval_batch,
+            } => {
+                let e = *eval_batch;
+                let total = dataset.test_len();
+                anyhow::ensure!(e > 0 && total > 0, "empty eval configuration");
+                let mut correct = 0.0f64;
+                let mut loss_sum = 0.0f64;
+                let mut chunks = 0usize;
+                let mut batch = Batch::new(e, IMAGE_DIM);
+                let mut idx = Vec::with_capacity(e);
+                let mut start = 0;
+                while start < total {
+                    idx.clear();
+                    // Wrap the final partial chunk (duplicates score
+                    // identically; counts use `seen`, not `e`).
+                    let seen = e.min(total - start);
+                    for k in 0..e {
+                        idx.push((start + k) % total);
+                    }
+                    dataset.fill_batch(1, &idx, &mut batch);
+                    let out = handle
+                        .execute(
+                            artifact,
+                            vec![
+                                ArgValue::f32_vec(params.to_vec()),
+                                ArgValue::F32(batch.features.clone(), vec![e, IMAGE_DIM]),
+                                ArgValue::I32(batch.labels.clone(), vec![e]),
+                            ],
+                        )?;
+                    // Output 0: per-example correctness (f32 0/1, length e).
+                    // Output 1: mean loss over the chunk.
+                    let flags = out
+                        .first()
+                        .ok_or_else(|| anyhow::anyhow!("eval artifact returned no outputs"))?;
+                    anyhow::ensure!(
+                        flags.len() == e,
+                        "eval artifact output 0 has length {}, expected {e}",
+                        flags.len()
+                    );
+                    correct += flags[..seen].iter().map(|&v| v as f64).sum::<f64>();
+                    loss_sum += out
+                        .get(1)
+                        .and_then(|l| l.first())
+                        .copied()
+                        .unwrap_or(f32::NAN) as f64;
+                    chunks += 1;
+                    start += seen;
+                }
+                Ok((
+                    (loss_sum / chunks as f64) as f32,
+                    (correct / total as f64) as f32,
+                ))
+            }
+            Evaluator::Lm {
+                handle,
+                artifact,
+                stream,
+                seq_len,
+                batch_size,
+                batches,
+            } => {
+                let (b, l) = (*batch_size, *seq_len);
+                let mut loss_sum = 0.0f64;
+                for chunk in 0..*batches {
+                    let mut tokens = Vec::with_capacity(b * l);
+                    let mut targets = Vec::with_capacity(b * l);
+                    for row in 0..b {
+                        // Held-out stream ids: odd ids reserved for eval.
+                        let sid = 0x8000_0000_0000_0000u64 | ((chunk * b + row) as u64);
+                        let (inp, tgt) = stream.sequence(sid, l);
+                        tokens.extend(inp);
+                        targets.extend(tgt);
+                    }
+                    let out = handle
+                        .execute(
+                            artifact,
+                            vec![
+                                ArgValue::f32_vec(params.to_vec()),
+                                ArgValue::I32(tokens, vec![b, l]),
+                                ArgValue::I32(targets, vec![b, l]),
+                            ],
+                        )?;
+                    loss_sum += out
+                        .get(1)
+                        .and_then(|o| o.first())
+                        .copied()
+                        .unwrap_or(f32::NAN) as f64;
+                }
+                Ok(((loss_sum / *batches as f64) as f32, f32::NAN))
+            }
+            Evaluator::Disabled => Ok((f32::NAN, f32::NAN)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_evaluator_reports_loss() {
+        let p = Arc::new(QuadraticProblem::new(10, 0.1, 2));
+        let mut e = Evaluator::Quadratic(Arc::clone(&p));
+        let (loss_at_opt, acc) = e.evaluate(p.optimum()).unwrap();
+        assert!(loss_at_opt < 1e-9);
+        assert!(acc.is_nan());
+        let (loss_away, _) = e.evaluate(&vec![5.0; 10]).unwrap();
+        assert!(loss_away > loss_at_opt);
+    }
+
+    #[test]
+    fn disabled_evaluator_is_nan() {
+        let mut e = Evaluator::Disabled;
+        let (l, a) = e.evaluate(&[1.0]).unwrap();
+        assert!(l.is_nan() && a.is_nan());
+    }
+}

@@ -1,0 +1,18 @@
+//! The parameter-server coordinator — Layer 3's core.
+//!
+//! One [`Coordinator`] owns the model state and drives synchronous
+//! distributed SGD rounds (the parameter-server setting of the paper's
+//! §I): broadcast parameters, collect the honest gradients over the
+//! simulated transport (with timeout + last-known-gradient fallback for
+//! stragglers/drops), let the Byzantine coalition forge its `f` rows
+//! (omniscient threat model, §II-C), aggregate with the configured GAR,
+//! and apply the SGD update. [`launch`] wires a full cluster from an
+//! [`crate::config::ExperimentConfig`].
+
+mod builder;
+mod core;
+mod evaluator;
+
+pub use builder::{launch, LaunchedCluster};
+pub use core::{Coordinator, CoordinatorOptions, RoundOutcome};
+pub use evaluator::Evaluator;

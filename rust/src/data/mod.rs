@@ -1,0 +1,96 @@
+//! Synthetic datasets and sharding.
+//!
+//! The evaluation environment has no dataset downloads, so every workload
+//! is generated procedurally with seeded RNGs (DESIGN.md §Substitutions):
+//!
+//! * [`FashionLike`] — the Fashion-MNIST substitute for the Fig. 3
+//!   experiment: 10 classes of 28×28 grayscale "garment-like" images
+//!   (structured class templates + per-sample deformation + noise).
+//! * [`QuadraticProblem`] — a rust-native linear least-squares task whose
+//!   exact minimiser and true gradient are known in closed form; the
+//!   workhorse of the unit/integration tests and the cone/slowdown
+//!   ablations (no PJRT required).
+//! * [`TokenStream`] — a seeded bigram language for the end-to-end
+//!   transformer driver.
+//!
+//! Sharding follows the parameter-server model: worker `i` of `k` sees the
+//! samples `{ j : j ≡ i mod k }` of the training split.
+
+mod fashion;
+mod quadratic;
+mod tokens;
+
+pub use fashion::{FashionLike, IMAGE_DIM, NUM_CLASSES};
+pub use quadratic::QuadraticProblem;
+pub use tokens::TokenStream;
+
+/// A contiguous batch of flattened examples.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `batch_size × feature_dim`, row-major.
+    pub features: Vec<f32>,
+    /// One label per row (class index or next-token id).
+    pub labels: Vec<i32>,
+    pub batch_size: usize,
+    pub feature_dim: usize,
+}
+
+impl Batch {
+    pub fn new(batch_size: usize, feature_dim: usize) -> Self {
+        Self {
+            features: vec![0.0; batch_size * feature_dim],
+            labels: vec![0; batch_size],
+            batch_size,
+            feature_dim,
+        }
+    }
+
+    pub fn feature_row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.feature_dim..(i + 1) * self.feature_dim]
+    }
+}
+
+/// Deterministic shard membership: which global indices worker `shard` of
+/// `num_shards` owns within a dataset of `len` samples.
+pub fn shard_indices(len: usize, shard: usize, num_shards: usize) -> impl Iterator<Item = usize> {
+    assert!(num_shards > 0 && shard < num_shards);
+    (shard..len).step_by(num_shards)
+}
+
+/// Size of a shard produced by [`shard_indices`].
+pub fn shard_len(len: usize, shard: usize, num_shards: usize) -> usize {
+    if shard >= len % num_shards {
+        len / num_shards
+    } else {
+        len / num_shards + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_partition_the_dataset() {
+        let len = 103;
+        let k = 7;
+        let mut seen = vec![false; len];
+        for s in 0..k {
+            let idx: Vec<usize> = shard_indices(len, s, k).collect();
+            assert_eq!(idx.len(), shard_len(len, s, k));
+            for i in idx {
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn batch_views() {
+        let mut b = Batch::new(2, 3);
+        b.features[3..6].copy_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(b.feature_row(1), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.feature_row(0), &[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,144 @@
+//! TokenStream — a seeded synthetic "language" for the end-to-end
+//! transformer driver (`examples/e2e_train.rs`).
+//!
+//! Tokens are drawn from a sparse random bigram chain: each token has a
+//! small set of likely successors, so a next-token predictor has real
+//! signal (cross-entropy well below `ln(vocab)`) while the entropy floor
+//! keeps the task non-degenerate. Deterministic in `(seed, position)`
+//! via jump-ahead hashing, so shards/batches can be sliced anywhere
+//! without replaying the chain.
+
+use crate::util::Rng64;
+
+/// Synthetic bigram corpus.
+#[derive(Debug, Clone)]
+pub struct TokenStream {
+    vocab: usize,
+    /// For each token, `fanout` likely successors (probability mass
+    /// `1 − eps` spread uniformly among them; `eps` to the full vocab).
+    successors: Vec<Vec<u32>>,
+    eps: f64,
+    seed: u64,
+}
+
+impl TokenStream {
+    pub fn new(vocab: usize, fanout: usize, seed: u64) -> Self {
+        assert!(vocab >= 2 && fanout >= 1 && fanout <= vocab);
+        let mut rng = Rng64::seed_from_u64(seed ^ 0x7065_6e63_696c);
+        let successors = (0..vocab)
+            .map(|_| (0..fanout).map(|_| rng.gen_range_usize(vocab) as u32).collect())
+            .collect();
+        Self {
+            vocab,
+            successors,
+            eps: 0.05,
+            seed,
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Generate a sequence of `len + 1` tokens starting from a position
+    /// hash, returning `(inputs[len], targets[len])` for next-token
+    /// prediction.
+    pub fn sequence(&self, stream_id: u64, len: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut rng =
+            Rng64::seed_from_u64(self.seed ^ stream_id.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut tokens = Vec::with_capacity(len + 1);
+        tokens.push(rng.gen_range_usize(self.vocab) as i32);
+        for _ in 0..len {
+            let prev = *tokens.last().unwrap() as usize;
+            let next = if rng.gen_bool(self.eps) {
+                rng.gen_range_usize(self.vocab) as u32
+            } else {
+                let succ = &self.successors[prev];
+                succ[rng.gen_range_usize(succ.len())]
+            };
+            tokens.push(next as i32);
+        }
+        let inputs = tokens[..len].to_vec();
+        let targets = tokens[1..].to_vec();
+        (inputs, targets)
+    }
+
+    /// Theoretical cross-entropy floor (nats) of the chain — the loss a
+    /// perfect model converges to. Used by the e2e driver to sanity-check
+    /// the loss curve.
+    pub fn entropy_floor(&self, fanout: usize) -> f32 {
+        let v = self.vocab as f64;
+        let f = fanout as f64;
+        let p_likely = (1.0 - self.eps) / f + self.eps / v;
+        let h = -(1.0 - self.eps) * p_likely.ln() - self.eps * (self.eps / v).ln();
+        h as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequences() {
+        let ts = TokenStream::new(64, 4, 9);
+        let (a, ta) = ts.sequence(3, 32);
+        let (b, tb) = ts.sequence(3, 32);
+        assert_eq!(a, b);
+        assert_eq!(ta, tb);
+        let (c, _) = ts.sequence(4, 32);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let ts = TokenStream::new(32, 2, 1);
+        let (inp, tgt) = ts.sequence(0, 16);
+        assert_eq!(inp.len(), 16);
+        assert_eq!(tgt.len(), 16);
+        assert_eq!(&inp[1..], &tgt[..15]);
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // Empirical successor distribution must be concentrated: the top-4
+        // successors of a token should carry most of the mass.
+        let ts = TokenStream::new(32, 3, 5);
+        let mut counts = vec![vec![0u32; 32]; 32];
+        for sid in 0..200 {
+            let (inp, tgt) = ts.sequence(sid, 64);
+            for (a, b) in inp.iter().zip(&tgt) {
+                counts[*a as usize][*b as usize] += 1;
+            }
+        }
+        // Aggregate: fraction of transitions landing in the declared
+        // successor sets.
+        let mut hits = 0u32;
+        let mut total = 0u32;
+        for (a, row) in counts.iter().enumerate() {
+            for (b, &c) in row.iter().enumerate() {
+                total += c;
+                if ts.successors[a].contains(&(b as u32)) {
+                    hits += c;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.85, "successor mass {frac}");
+    }
+
+    #[test]
+    fn entropy_floor_below_uniform() {
+        let ts = TokenStream::new(256, 4, 0);
+        let floor = ts.entropy_floor(4);
+        assert!(floor < (256f32).ln());
+        assert!(floor > 0.0);
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let ts = TokenStream::new(16, 2, 2);
+        let (inp, tgt) = ts.sequence(7, 100);
+        assert!(inp.iter().chain(&tgt).all(|&t| (0..16).contains(&t)));
+    }
+}

@@ -1,0 +1,90 @@
+//! Averaging — the optimal but non-Byzantine-resilient baseline
+//! (the GAR of the mainstream parameter server [Dean et al. 2012, Li et
+//! al. 2014]; the reference point of both the slowdown theorems and
+//! Fig. 3).
+
+use super::{check_shape, Gar, GarScratch};
+use crate::tensor::GradMatrix;
+use crate::Result;
+
+/// Coordinate-wise arithmetic mean of all `n` gradients.
+#[derive(Debug, Clone)]
+pub struct Average {
+    n: usize,
+}
+
+impl Average {
+    pub fn new(n: usize) -> Result<Self> {
+        anyhow::ensure!(n >= 1, "average: need at least one worker, got {n}");
+        Ok(Self { n })
+    }
+}
+
+impl Gar for Average {
+    fn name(&self) -> &'static str {
+        "average"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn f(&self) -> usize {
+        0
+    }
+
+    fn gradients_used(&self) -> usize {
+        self.n
+    }
+
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        _scratch: &mut GarScratch,
+    ) -> Result<()> {
+        check_shape("average", grads, self.n, out)?;
+        out.fill(0.0);
+        for i in 0..self.n {
+            crate::tensor::add_assign(out, grads.row(i));
+        }
+        crate::tensor::scale(out, 1.0 / self.n as f32);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_rows() {
+        let g = GradMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 6.0]]);
+        let gar = Average::new(2).unwrap();
+        assert_eq!(gar.aggregate(&g).unwrap(), vec![2.0, 4.0]);
+        assert_eq!(gar.gradients_used(), 2);
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let g = GradMatrix::from_rows(&[vec![7.0, -1.0]]);
+        assert_eq!(Average::new(1).unwrap().aggregate(&g).unwrap(), vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_n() {
+        let g = GradMatrix::zeros(3, 4);
+        assert!(Average::new(2).unwrap().aggregate(&g).is_err());
+    }
+
+    #[test]
+    fn not_byzantine_resilient_by_construction() {
+        // Documents the vulnerability the paper opens with: one worker
+        // proposing an outlier drags the average arbitrarily far.
+        let mut rows = vec![vec![0.0f32; 4]; 9];
+        rows.push(vec![1e9; 4]);
+        let g = GradMatrix::from_rows(&rows);
+        let out = Average::new(10).unwrap().aggregate(&g).unwrap();
+        assert!(out[0] > 1e7);
+    }
+}

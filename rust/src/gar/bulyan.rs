@@ -1,0 +1,376 @@
+//! BULYAN and MULTI-BULYAN [El Mhamdi et al., ICML 2018; this paper §IV].
+//!
+//! BULYAN runs a weakly-resilient selection rule `θ = n − 2f − 2` times
+//! (removing the winner from the pool each time), then takes — per
+//! coordinate — the average of the `β = θ − 2f` values closest to the
+//! coordinate-wise median. The median step is what cuts the attacker's
+//! `√d` leeway down to `O(1/√d)` per coordinate (strong Byzantine
+//! resilience, Definition 2 / Theorem 2).
+//!
+//! * [`Bulyan`] — the classic composition over KRUM: each iteration keeps
+//!   the single Krum winner, and the final trimmed average runs over the
+//!   θ winners.
+//! * [`MultiBulyan`] — the paper's contribution (Algorithm 1): each
+//!   iteration additionally records the MULTI-KRUM *average* of the
+//!   iteration's selection (`G^agr`), the median is taken over the
+//!   extracted winners (`G^ext`), and the final per-coordinate trimmed
+//!   average runs over `G^agr` — recovering the `m̃/n` slowdown while
+//!   keeping the strong-resilience bound.
+//!
+//! Both implementations compute the `n × n` distance matrix **once** and
+//! re-score the shrinking pool from the cached matrix (O(k²) per
+//! iteration), the optimisation the paper's §V-B highlights; total cost is
+//! O(n²d) — linear in `d`, the paper's Theorem 2(ii).
+
+use super::krum::krum_scores_from_distances;
+use super::{check_shape, pairwise_sq_distances_into, Gar, GarScratch};
+use crate::tensor::{argselect_smallest, small_median_sorting, GradMatrix};
+use crate::Result;
+
+/// Shared BULYAN parameters and buffers logic.
+#[derive(Debug, Clone)]
+struct BulyanCore {
+    n: usize,
+    f: usize,
+    /// Number of selection iterations, θ = n − 2f − 2.
+    theta: usize,
+    /// Per-coordinate kept values, β = θ − 2f.
+    beta: usize,
+}
+
+impl BulyanCore {
+    fn new(rule: &'static str, n: usize, f: usize) -> Result<Self> {
+        anyhow::ensure!(
+            n >= 4 * f + 3,
+            "{rule}: requires n ≥ 4f+3 (got n={n}, f={f})"
+        );
+        let theta = n - 2 * f - 2;
+        let beta = theta - 2 * f;
+        debug_assert!(beta >= 1);
+        Ok(Self { n, f, theta, beta })
+    }
+
+    /// Run the θ selection iterations.
+    ///
+    /// Fills `scratch.ext` (θ×d winners) and — when `multi` — `scratch.agr`
+    /// (θ×d MULTI-KRUM averages). Returns nothing; results live in scratch.
+    fn select_iterations(&self, grads: &GradMatrix, scratch: &mut GarScratch, multi: bool) {
+        let (n, d) = (self.n, grads.d());
+        let dist = scratch.distances_mut(n);
+        pairwise_sq_distances_into(grads, dist);
+        let dist = std::mem::take(&mut scratch.distances);
+
+        scratch.pool.clear();
+        scratch.pool.extend(0..n);
+        scratch.ext.clear();
+        scratch.ext.resize(self.theta * d, 0.0);
+        if multi {
+            scratch.agr.clear();
+            scratch.agr.resize(self.theta * d, 0.0);
+        }
+        let mut pool = std::mem::take(&mut scratch.pool);
+        let mut scores = std::mem::take(&mut scratch.scores);
+
+        // NOTE on a rejected "optimization": computing each round's
+        // average as (running_sum − Σ non-selected)/m would cut the row
+        // reads from m_round to f+2, but the running sum suffers
+        // catastrophic f32 cancellation when a Byzantine row carries
+        // ±1e30-scale values (the `infinity` attack) — the direct sum
+        // over the *selected* rows never touches those. Correctness under
+        // adversarial inputs beats the constant factor here.
+        for t in 0..self.theta {
+            let k = pool.len();
+            let m_round = k - self.f - 2;
+            krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
+            // Indices *into the pool*, ascending score.
+            let selected = argselect_smallest(&scores, m_round.max(1));
+            let winner_pos = selected[0];
+            let winner = pool[winner_pos];
+            scratch.ext[t * d..(t + 1) * d].copy_from_slice(grads.row(winner));
+            if multi {
+                let agr_row = &mut scratch.agr[t * d..(t + 1) * d];
+                agr_row.fill(0.0);
+                for &p in &selected {
+                    crate::tensor::add_assign(agr_row, grads.row(pool[p]));
+                }
+                crate::tensor::scale(agr_row, 1.0 / selected.len() as f32);
+            }
+            pool.swap_remove(winner_pos);
+        }
+
+        scratch.pool = pool;
+        scratch.scores = scores;
+        scratch.distances = dist;
+    }
+
+    /// Per-coordinate: median of `ext`, then average of the `β` values of
+    /// `src` (`ext` for BULYAN, `agr` for MULTI-BULYAN) closest to it.
+    ///
+    /// Hot loop (runs d times): insertion-sort median over θ ≤ 64 values
+    /// and a β-step partial selection sort over reused `(deviation,
+    /// value)` pairs — zero allocation, no introselect overhead (the
+    /// EXPERIMENTS.md §Perf "coordinate loop" item; the naive version
+    /// allocated an index vector per coordinate).
+    fn trimmed_average(&self, d: usize, scratch: &mut GarScratch, multi: bool, out: &mut [f32]) {
+        let theta = self.theta;
+        let beta = self.beta;
+        scratch.column.clear();
+        scratch.column.resize(theta, 0.0);
+        scratch.pairs.clear();
+        scratch.pairs.resize(theta, (0.0, 0.0));
+        let mut col = std::mem::take(&mut scratch.column);
+        let mut pairs = std::mem::take(&mut scratch.pairs);
+
+        for j in 0..d {
+            for t in 0..theta {
+                col[t] = scratch.ext[t * d + j];
+            }
+            let median = small_median_sorting(&mut col);
+            let src = if multi { &scratch.agr } else { &scratch.ext };
+            for t in 0..theta {
+                let v = src[t * d + j];
+                pairs[t] = ((v - median).abs(), v);
+            }
+            // Partial selection sort: move the β smallest deviations to
+            // the front (β·θ compares; β and θ are both ≤ n ≤ 64 here).
+            let mut acc = 0.0f32;
+            for b in 0..beta {
+                let mut best = b;
+                for t in (b + 1)..theta {
+                    if pairs[t].0 < pairs[best].0 {
+                        best = t;
+                    }
+                }
+                pairs.swap(b, best);
+                acc += pairs[b].1;
+            }
+            out[j] = acc / beta as f32;
+        }
+
+        scratch.column = col;
+        scratch.pairs = pairs;
+    }
+
+    fn aggregate(
+        &self,
+        rule: &'static str,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+        multi: bool,
+    ) -> Result<()> {
+        check_shape(rule, grads, self.n, out)?;
+        self.select_iterations(grads, scratch, multi);
+        self.trimmed_average(grads.d(), scratch, multi, out);
+        Ok(())
+    }
+}
+
+/// Classic BULYAN over KRUM (strongly resilient, 1-gradient slowdown).
+#[derive(Debug, Clone)]
+pub struct Bulyan {
+    core: BulyanCore,
+}
+
+impl Bulyan {
+    pub fn new(n: usize, f: usize) -> Result<Self> {
+        Ok(Self {
+            core: BulyanCore::new("bulyan", n, f)?,
+        })
+    }
+
+    /// θ = n − 2f − 2 selection iterations.
+    pub fn theta(&self) -> usize {
+        self.core.theta
+    }
+
+    /// β = θ − 2f values averaged per coordinate.
+    pub fn beta(&self) -> usize {
+        self.core.beta
+    }
+}
+
+impl Gar for Bulyan {
+    fn name(&self) -> &'static str {
+        "bulyan"
+    }
+
+    fn n(&self) -> usize {
+        self.core.n
+    }
+
+    fn f(&self) -> usize {
+        self.core.f
+    }
+
+    fn gradients_used(&self) -> usize {
+        self.core.beta
+    }
+
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+    ) -> Result<()> {
+        self.core.aggregate("bulyan", grads, out, scratch, false)
+    }
+}
+
+/// MULTI-BULYAN — Algorithm 1 of the paper: BULYAN over MULTI-KRUM.
+///
+/// Strong Byzantine resilience (Theorem 2.i), O(d) local computation
+/// (Theorem 2.ii) and an `m̃/n = (n−2f−2)/n` slowdown relative to averaging
+/// in the Byzantine-free case (Theorem 2.iii).
+#[derive(Debug, Clone)]
+pub struct MultiBulyan {
+    core: BulyanCore,
+}
+
+impl MultiBulyan {
+    pub fn new(n: usize, f: usize) -> Result<Self> {
+        Ok(Self {
+            core: BulyanCore::new("multi-bulyan", n, f)?,
+        })
+    }
+
+    pub fn theta(&self) -> usize {
+        self.core.theta
+    }
+
+    pub fn beta(&self) -> usize {
+        self.core.beta
+    }
+}
+
+impl Gar for MultiBulyan {
+    fn name(&self) -> &'static str {
+        "multi-bulyan"
+    }
+
+    fn n(&self) -> usize {
+        self.core.n
+    }
+
+    fn f(&self) -> usize {
+        self.core.f
+    }
+
+    /// m̃ = n − 2f − 2 — each kept coordinate is an average of MULTI-KRUM
+    /// averages over ≥ m̃ distinct correct gradients (Theorem 2.iii).
+    fn gradients_used(&self) -> usize {
+        self.core.theta
+    }
+
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+    ) -> Result<()> {
+        self.core.aggregate("multi-bulyan", grads, out, scratch, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    /// n=11, f=2: θ=5, β=1 — the paper's Fig. 3 configuration.
+    fn fig3_config() -> (usize, usize) {
+        (11, 2)
+    }
+
+    #[test]
+    fn parameters_match_algorithm_1() {
+        let (n, f) = fig3_config();
+        let mb = MultiBulyan::new(n, f).unwrap();
+        assert_eq!(mb.theta(), n - 2 * f - 2);
+        assert_eq!(mb.beta(), mb.theta() - 2 * f);
+        assert!(MultiBulyan::new(10, 2).is_err()); // n < 4f+3
+    }
+
+    #[test]
+    fn identical_gradients_are_a_fixed_point() {
+        let (n, f) = fig3_config();
+        let g_row: Vec<f32> = (0..40).map(|i| (i as f32 * 0.3).sin()).collect();
+        let grads = GradMatrix::from_rows(&vec![g_row.clone(); n]);
+        for gar in [
+            Box::new(Bulyan::new(n, f).unwrap()) as Box<dyn Gar>,
+            Box::new(MultiBulyan::new(n, f).unwrap()),
+        ] {
+            let out = gar.aggregate(&grads).unwrap();
+            for (a, b) in out.iter().zip(&g_row) {
+                assert!((a - b).abs() < 1e-5, "{}", gar.name());
+            }
+        }
+    }
+
+    #[test]
+    fn output_within_correct_coordinate_range() {
+        // Strong-resilience sanity: with f=2 Byzantine rows pushing ±1e6,
+        // every output coordinate stays inside [min, max] of the correct
+        // workers' values for that coordinate (a consequence of the
+        // median-then-closest-β step).
+        let (n, f) = fig3_config();
+        let mut rng = Rng64::seed_from_u64(42);
+        let mut grads = GradMatrix::uniform(n, 64, -1.0, 1.0, &mut rng);
+        for b in 0..f {
+            let sign = if b % 2 == 0 { 1.0 } else { -1.0 };
+            grads.row_mut(n - 1 - b).iter_mut().for_each(|v| *v = sign * 1e6);
+        }
+        for gar in [
+            Box::new(Bulyan::new(n, f).unwrap()) as Box<dyn Gar>,
+            Box::new(MultiBulyan::new(n, f).unwrap()),
+        ] {
+            let out = gar.aggregate(&grads).unwrap();
+            for j in 0..64 {
+                let correct: Vec<f32> = (0..n - f).map(|i| grads.row(i)[j]).collect();
+                let lo = correct.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = correct.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                assert!(
+                    out[j] >= lo - 1e-4 && out[j] <= hi + 1e-4,
+                    "{}: coord {j} escaped [{lo}, {hi}]: {}",
+                    gar.name(),
+                    out[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_bulyan_uses_more_gradients_than_bulyan() {
+        let (n, f) = fig3_config();
+        assert!(
+            MultiBulyan::new(n, f).unwrap().gradients_used()
+                > Bulyan::new(n, f).unwrap().gradients_used()
+        );
+    }
+
+    #[test]
+    fn f_zero_small_n() {
+        // n=3, f=0: θ=1, β=1 — degenerate but legal; BULYAN reduces to the
+        // Krum winner.
+        let grads = GradMatrix::from_rows(&[vec![1.0, 2.0], vec![1.1, 2.1], vec![5.0, 5.0]]);
+        let out = Bulyan::new(3, 0).unwrap().aggregate(&grads).unwrap();
+        // Winner must be one of the two close rows.
+        assert!(out[0] < 2.0);
+    }
+
+    #[test]
+    fn deterministic_across_calls_and_scratch_reuse() {
+        let (n, f) = fig3_config();
+        let mut rng = Rng64::seed_from_u64(7);
+        let grads = GradMatrix::uniform(n, 33, -1.0, 1.0, &mut rng);
+        let mb = MultiBulyan::new(n, f).unwrap();
+        let a = mb.aggregate(&grads).unwrap();
+        let mut scratch = GarScratch::new();
+        let mut b = vec![0.0; 33];
+        mb.aggregate_with_scratch(&grads, &mut b, &mut scratch).unwrap();
+        let mut c = vec![0.0; 33];
+        mb.aggregate_with_scratch(&grads, &mut c, &mut scratch).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+}

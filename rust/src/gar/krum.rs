@@ -1,0 +1,303 @@
+//! KRUM and MULTI-KRUM [Blanchard et al., NIPS 2017; this paper §III].
+//!
+//! Krum scores each gradient `G_i` by the sum of squared distances to its
+//! `k − f − 2` nearest neighbours (where `k` is the number of candidates)
+//! and selects the minimiser. MULTI-KRUM — whose (α,f)-Byzantine resilience
+//! is Lemma 1 of the paper — selects the `m = k − f − 2` smallest-scoring
+//! gradients and returns their average, recovering an `m̃/n` slowdown
+//! instead of Krum's `1/n` (Theorem 1).
+
+use super::{check_shape, pairwise_sq_distances_into, Gar, GarScratch};
+use crate::tensor::{argselect_smallest, GradMatrix};
+use crate::Result;
+
+/// Compute Krum scores for the candidates listed in `pool`, using the
+/// cached full `n × n` distance matrix `dist` (row stride `n`).
+///
+/// `neighbors = |pool| − f − 2` per the paper's footnote 1. The score of
+/// pool member `i` is the sum of its `neighbors` smallest squared distances
+/// to other pool members. `scores[p]` corresponds to `pool[p]`.
+///
+/// This is the primitive BULYAN re-invokes on a shrinking pool; computing
+/// scores from the cached matrix makes each re-invocation O(k²) instead of
+/// O(k²·d) — the "distance computation done only once" optimisation of the
+/// paper's §V-B.
+pub fn krum_scores_from_distances(
+    dist: &[f32],
+    n: usize,
+    pool: &[usize],
+    f: usize,
+    scores: &mut Vec<f32>,
+) {
+    let k = pool.len();
+    let neighbors = k
+        .checked_sub(f + 2)
+        .expect("krum_scores: pool too small for f (need k ≥ f+2+1)");
+    scores.clear();
+    // Scratch row of distances from i to every other pool member.
+    let mut row = Vec::with_capacity(k - 1);
+    for &i in pool {
+        row.clear();
+        for &j in pool {
+            if i != j {
+                row.push(dist[i * n + j]);
+            }
+        }
+        let mut s = 0.0f32;
+        if neighbors > 0 {
+            if neighbors < row.len() {
+                row.select_nth_unstable_by(neighbors - 1, f32::total_cmp);
+            }
+            for &v in &row[..neighbors] {
+                s += v;
+            }
+        }
+        scores.push(s);
+    }
+}
+
+/// KRUM: select the single gradient with the smallest score.
+#[derive(Debug, Clone)]
+pub struct Krum {
+    n: usize,
+    f: usize,
+}
+
+impl Krum {
+    pub fn new(n: usize, f: usize) -> Result<Self> {
+        anyhow::ensure!(
+            n >= 2 * f + 3,
+            "krum: requires n ≥ 2f+3 (got n={n}, f={f})"
+        );
+        Ok(Self { n, f })
+    }
+
+    /// Index of the Krum winner (exposed for tests and the worker-scoring
+    /// diagnostics in the coordinator).
+    pub fn select(&self, grads: &GradMatrix, scratch: &mut GarScratch) -> usize {
+        let n = self.n;
+        let dist = scratch.distances_mut(n);
+        pairwise_sq_distances_into(grads, dist);
+        let dist = std::mem::take(&mut scratch.distances);
+        let pool: Vec<usize> = (0..n).collect();
+        let mut scores = std::mem::take(&mut scratch.scores);
+        krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
+        let winner = argselect_smallest(&scores, 1)[0];
+        scratch.distances = dist;
+        scratch.scores = scores;
+        winner
+    }
+}
+
+impl Gar for Krum {
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn f(&self) -> usize {
+        self.f
+    }
+
+    fn gradients_used(&self) -> usize {
+        1
+    }
+
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+    ) -> Result<()> {
+        check_shape("krum", grads, self.n, out)?;
+        let winner = self.select(grads, scratch);
+        out.copy_from_slice(grads.row(winner));
+        Ok(())
+    }
+}
+
+/// MULTI-KRUM: average of the `m` smallest-scoring gradients
+/// (`m = n − f − 2` by default — the `m̃` that maximises the Theorem 1
+/// slowdown bound; smaller `m` supported for the ablation sweeps).
+#[derive(Debug, Clone)]
+pub struct MultiKrum {
+    n: usize,
+    f: usize,
+    m: usize,
+}
+
+impl MultiKrum {
+    /// Standard construction with `m = m̃ = n − f − 2`.
+    pub fn new(n: usize, f: usize) -> Result<Self> {
+        anyhow::ensure!(
+            n >= 2 * f + 3,
+            "multi-krum: requires n ≥ 2f+3 (got n={n}, f={f})"
+        );
+        Ok(Self { n, f, m: n - f - 2 })
+    }
+
+    /// Construction with an explicit `m ≤ n − f − 2` (slowdown ablation).
+    pub fn with_m(n: usize, f: usize, m: usize) -> Result<Self> {
+        anyhow::ensure!(
+            n >= 2 * f + 3,
+            "multi-krum: requires n ≥ 2f+3 (got n={n}, f={f})"
+        );
+        anyhow::ensure!(
+            (1..=n - f - 2).contains(&m),
+            "multi-krum: m must be in [1, n-f-2] (got m={m}, n={n}, f={f})"
+        );
+        Ok(Self { n, f, m })
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Indices of the `m` selected gradients, ascending score order.
+    pub fn select(&self, grads: &GradMatrix, scratch: &mut GarScratch) -> Vec<usize> {
+        let n = self.n;
+        let dist = scratch.distances_mut(n);
+        pairwise_sq_distances_into(grads, dist);
+        let dist = std::mem::take(&mut scratch.distances);
+        let pool: Vec<usize> = (0..n).collect();
+        let mut scores = std::mem::take(&mut scratch.scores);
+        krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
+        let selected = argselect_smallest(&scores, self.m);
+        scratch.distances = dist;
+        scratch.scores = scores;
+        selected
+    }
+}
+
+impl Gar for MultiKrum {
+    fn name(&self) -> &'static str {
+        "multi-krum"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn f(&self) -> usize {
+        self.f
+    }
+
+    fn gradients_used(&self) -> usize {
+        self.m
+    }
+
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+    ) -> Result<()> {
+        check_shape("multi-krum", grads, self.n, out)?;
+        let selected = self.select(grads, scratch);
+        out.fill(0.0);
+        for &i in &selected {
+            crate::tensor::add_assign(out, grads.row(i));
+        }
+        crate::tensor::scale(out, 1.0 / selected.len() as f32);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// n=7, f=1 ⇒ neighbors = 4, m = 4.
+    fn cluster_with_outlier() -> GradMatrix {
+        let mut rows: Vec<Vec<f32>> = (0..6)
+            .map(|i| vec![i as f32 * 0.01, 1.0 - i as f32 * 0.01, 0.5])
+            .collect();
+        rows.push(vec![100.0, -100.0, 100.0]); // the outlier
+        GradMatrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn krum_never_picks_the_outlier() {
+        let g = cluster_with_outlier();
+        let krum = Krum::new(7, 1).unwrap();
+        let mut scratch = GarScratch::new();
+        let winner = krum.select(&g, &mut scratch);
+        assert_ne!(winner, 6);
+        let out = krum.aggregate(&g).unwrap();
+        assert_eq!(out, g.row(winner));
+    }
+
+    #[test]
+    fn multi_krum_excludes_outlier_from_selection() {
+        let g = cluster_with_outlier();
+        let mk = MultiKrum::new(7, 1).unwrap();
+        assert_eq!(mk.m(), 4);
+        let mut scratch = GarScratch::new();
+        let sel = mk.select(&g, &mut scratch);
+        assert_eq!(sel.len(), 4);
+        assert!(!sel.contains(&6), "outlier must not be selected");
+        // Output is the average of the selected rows.
+        let out = mk.aggregate(&g).unwrap();
+        let expected = g.mean_of_rows(&sel);
+        for (a, b) in out.iter().zip(&expected) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn with_m_one_matches_krum() {
+        let g = cluster_with_outlier();
+        let mut scratch = GarScratch::new();
+        let krum_out = Krum::new(7, 1).unwrap().aggregate(&g).unwrap();
+        let mk1 = MultiKrum::with_m(7, 1, 1).unwrap();
+        assert_eq!(mk1.select(&g, &mut scratch).len(), 1);
+        assert_eq!(mk1.aggregate(&g).unwrap(), krum_out);
+    }
+
+    #[test]
+    fn m_bounds_enforced() {
+        assert!(MultiKrum::with_m(7, 1, 0).is_err());
+        assert!(MultiKrum::with_m(7, 1, 5).is_err());
+        assert!(MultiKrum::with_m(7, 1, 4).is_ok());
+    }
+
+    #[test]
+    fn scores_from_cached_distances_match_direct() {
+        // Scores computed on a sub-pool must equal scores computed on the
+        // gathered sub-matrix directly.
+        let g = GradMatrix::from_fn(9, 13, |i, j| ((i * 7 + j * 3) % 11) as f32);
+        let n = g.n();
+        let mut dist = vec![0.0; n * n];
+        pairwise_sq_distances_into(&g, &mut dist);
+        let pool = vec![0, 2, 3, 5, 6, 7, 8];
+        let mut scores = Vec::new();
+        krum_scores_from_distances(&dist, n, &pool, 1, &mut scores);
+
+        let sub = g.gather_rows(&pool);
+        let mut sub_dist = vec![0.0; pool.len() * pool.len()];
+        pairwise_sq_distances_into(&sub, &mut sub_dist);
+        let sub_pool: Vec<usize> = (0..pool.len()).collect();
+        let mut sub_scores = Vec::new();
+        krum_scores_from_distances(&sub_dist, pool.len(), &sub_pool, 1, &mut sub_scores);
+        for (a, b) in scores.iter().zip(&sub_scores) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn byzantine_nan_gradient_never_selected() {
+        // A NaN gradient gets NaN distances → NaN score → ranked last.
+        let mut rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32 * 0.1; 4]).collect();
+        rows.push(vec![f32::NAN; 4]);
+        let g = GradMatrix::from_rows(&rows);
+        let mk = MultiKrum::new(7, 1).unwrap();
+        let mut scratch = GarScratch::new();
+        let sel = mk.select(&g, &mut scratch);
+        assert!(!sel.contains(&6));
+        let out = mk.aggregate(&g).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

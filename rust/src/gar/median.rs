@@ -1,0 +1,122 @@
+//! Coordinate-wise median — the paper's MEDIAN comparator (Fig. 2, Fig. 3).
+//!
+//! Weakly Byzantine resilient for `n ≥ 2f+1` but, by keeping (the
+//! equivalent of) a single gradient per step, it forfeits the variance
+//! reduction of averaging — the effect Fig. 3 quantifies.
+
+use super::{check_shape, Gar, GarScratch};
+use crate::tensor::{median_of_buf, small_median_sorting, GradMatrix};
+use crate::Result;
+
+/// Below this n the per-coordinate median uses insertion sort (see
+/// `tensor::select::insertion_sort`); above, introselect.
+const SMALL_N: usize = 64;
+
+/// Coordinate-wise median over the `n` proposed gradients. Even `n`
+/// averages the two central values (the `torch.median`-style convention
+/// used by the paper's baseline is the lower median; we follow `jnp.median`
+/// to stay bit-compatible with the L1/L2 artifact — the choice does not
+/// affect any resilience property, see `tests::even_n_convention`).
+#[derive(Debug, Clone)]
+pub struct CoordMedian {
+    n: usize,
+    f: usize,
+}
+
+impl CoordMedian {
+    pub fn new(n: usize, f: usize) -> Result<Self> {
+        anyhow::ensure!(
+            n >= 2 * f + 1,
+            "median: requires n ≥ 2f+1 (got n={n}, f={f})"
+        );
+        Ok(Self { n, f })
+    }
+}
+
+impl Gar for CoordMedian {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn f(&self) -> usize {
+        self.f
+    }
+
+    /// The median keeps the informational equivalent of one gradient.
+    fn gradients_used(&self) -> usize {
+        1
+    }
+
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+    ) -> Result<()> {
+        check_shape("median", grads, self.n, out)?;
+        let col = scratch.column_mut(self.n);
+        if self.n <= SMALL_N {
+            for j in 0..grads.d() {
+                for i in 0..self.n {
+                    col[i] = grads.row(i)[j];
+                }
+                out[j] = small_median_sorting(col);
+            }
+        } else {
+            for j in 0..grads.d() {
+                for i in 0..self.n {
+                    col[i] = grads.row(i)[j];
+                }
+                out[j] = median_of_buf(col);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_coordinate_median() {
+        let g = GradMatrix::from_rows(&[
+            vec![1.0, 10.0],
+            vec![2.0, 30.0],
+            vec![9.0, 20.0],
+        ]);
+        let gar = CoordMedian::new(3, 1).unwrap();
+        assert_eq!(gar.aggregate(&g).unwrap(), vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn even_n_convention() {
+        let g = GradMatrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0], vec![10.0]]);
+        let gar = CoordMedian::new(4, 1).unwrap();
+        assert_eq!(gar.aggregate(&g).unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn resists_f_outliers() {
+        // f=2 Byzantine rows at ±1e9 cannot move the median beyond the
+        // correct values' range.
+        let mut rows: Vec<Vec<f32>> = (0..9).map(|i| vec![i as f32; 3]).collect();
+        rows.push(vec![1e9; 3]);
+        rows.push(vec![-1e9; 3]);
+        let g = GradMatrix::from_rows(&rows);
+        let out = CoordMedian::new(11, 2).unwrap().aggregate(&g).unwrap();
+        for v in out {
+            assert!((0.0..=8.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn requires_majority() {
+        assert!(CoordMedian::new(4, 2).is_err());
+        assert!(CoordMedian::new(5, 2).is_ok());
+    }
+}

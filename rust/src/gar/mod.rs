@@ -1,0 +1,238 @@
+//! Gradient Aggregation Rules (GARs) — the paper's contribution.
+//!
+//! A GAR consumes the `n × d` matrix of worker gradient proposals for one
+//! SGD step and produces the single `d`-vector the parameter server applies
+//! (Equation 2 of the paper). The rules implemented here:
+//!
+//! | Rule | Resilience | Cost | Requires |
+//! |---|---|---|---|
+//! | [`Average`] | none (one Byzantine worker suffices to break it) | O(nd) | n ≥ 1 |
+//! | [`CoordMedian`] | weak | O(nd) | n ≥ 2f+1 |
+//! | [`TrimmedMean`] | weak | O(nd) | n ≥ 2f+1 |
+//! | [`Krum`] | weak (α,f) | O(n²d) | n ≥ 2f+3 |
+//! | [`MultiKrum`] | weak (α,f), m̃/n slowdown | O(n²d) | n ≥ 2f+3 |
+//! | [`Bulyan`] | strong | O(n²d) | n ≥ 4f+3 |
+//! | [`MultiBulyan`] | strong, m̃/n slowdown | O(n²d) | n ≥ 4f+3 |
+//!
+//! All implementations follow Algorithm 1 of the paper; `MultiBulyan` is
+//! literally `BULYAN ∘ MULTI-KRUM` with the distance matrix computed once
+//! and score recomputation done on the cached matrix (the optimisation the
+//! paper's §V-B calls out).
+//!
+//! Two entry points per rule: [`Gar::aggregate`] (allocates its scratch)
+//! and [`Gar::aggregate_with_scratch`] (zero-allocation steady state — the
+//! Fig. 2 benchmark path).
+
+mod average;
+mod bulyan;
+mod krum;
+mod median;
+mod pairwise;
+mod scratch;
+mod trimmed_mean;
+
+pub use average::Average;
+pub use bulyan::{Bulyan, MultiBulyan};
+pub use krum::{krum_scores_from_distances, Krum, MultiKrum};
+pub use median::CoordMedian;
+pub use pairwise::{pairwise_sq_distances, pairwise_sq_distances_into};
+pub use scratch::GarScratch;
+pub use trimmed_mean::TrimmedMean;
+
+use crate::tensor::GradMatrix;
+use crate::Result;
+
+/// A gradient aggregation rule with a fixed `(n, f)` contract.
+///
+/// `n` is the number of workers whose gradients arrive each round and `f`
+/// the number of arbitrary (Byzantine) failures tolerated; the constructor
+/// of each rule validates its `n ≥ g(f)` requirement, so an instantiated
+/// `Gar` can assume well-formed inputs.
+pub trait Gar: Send + Sync {
+    /// Human-readable rule name (stable; used in configs, CSV and logs).
+    fn name(&self) -> &'static str;
+
+    /// Number of workers this instance was built for.
+    fn n(&self) -> usize;
+
+    /// Number of Byzantine workers tolerated.
+    fn f(&self) -> usize;
+
+    /// Aggregate `grads` (must be `n × d`) into a fresh `d`-vector.
+    fn aggregate(&self, grads: &GradMatrix) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; grads.d()];
+        let mut scratch = GarScratch::default();
+        self.aggregate_with_scratch(grads, &mut out, &mut scratch)?;
+        Ok(out)
+    }
+
+    /// Aggregate into `out`, reusing `scratch` across calls (no allocation
+    /// after the first round with a given shape).
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+    ) -> Result<()>;
+
+    /// How many of the `n` input gradients influence the output (the `m̃`
+    /// of the slowdown theorems; `n` for averaging, 1 for Krum/median).
+    fn gradients_used(&self) -> usize;
+}
+
+/// Validate the common preconditions shared by all rules.
+pub(crate) fn check_shape(rule: &str, grads: &GradMatrix, n: usize, out: &[f32]) -> Result<()> {
+    anyhow::ensure!(
+        grads.n() == n,
+        "{rule}: expected {n} gradients, got {}",
+        grads.n()
+    );
+    anyhow::ensure!(
+        out.len() == grads.d(),
+        "{rule}: output length {} != d {}",
+        out.len(),
+        grads.d()
+    );
+    anyhow::ensure!(grads.d() > 0, "{rule}: empty gradients (d = 0)");
+    Ok(())
+}
+
+/// Enumeration of the available rules — the config-file / CLI surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GarKind {
+    Average,
+    Median,
+    TrimmedMean,
+    Krum,
+    MultiKrum,
+    Bulyan,
+    MultiBulyan,
+}
+
+impl GarKind {
+    /// All kinds, in the order the paper's figures present them.
+    pub const ALL: [GarKind; 7] = [
+        GarKind::Average,
+        GarKind::Median,
+        GarKind::TrimmedMean,
+        GarKind::Krum,
+        GarKind::MultiKrum,
+        GarKind::Bulyan,
+        GarKind::MultiBulyan,
+    ];
+
+    /// Minimum `n` for a given `f` (the rule's resilience precondition).
+    pub fn min_n(self, f: usize) -> usize {
+        match self {
+            GarKind::Average => 1.max(f + 1),
+            GarKind::Median | GarKind::TrimmedMean => 2 * f + 1,
+            GarKind::Krum | GarKind::MultiKrum => 2 * f + 3,
+            GarKind::Bulyan | GarKind::MultiBulyan => 4 * f + 3,
+        }
+    }
+
+    /// Build the rule for an `(n, f)` contract.
+    pub fn instantiate(self, n: usize, f: usize) -> Result<Box<dyn Gar>> {
+        Ok(match self {
+            GarKind::Average => Box::new(Average::new(n)?),
+            GarKind::Median => Box::new(CoordMedian::new(n, f)?),
+            GarKind::TrimmedMean => Box::new(TrimmedMean::new(n, f)?),
+            GarKind::Krum => Box::new(Krum::new(n, f)?),
+            GarKind::MultiKrum => Box::new(MultiKrum::new(n, f)?),
+            GarKind::Bulyan => Box::new(Bulyan::new(n, f)?),
+            GarKind::MultiBulyan => Box::new(MultiBulyan::new(n, f)?),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GarKind::Average => "average",
+            GarKind::Median => "median",
+            GarKind::TrimmedMean => "trimmed-mean",
+            GarKind::Krum => "krum",
+            GarKind::MultiKrum => "multi-krum",
+            GarKind::Bulyan => "bulyan",
+            GarKind::MultiBulyan => "multi-bulyan",
+        }
+    }
+}
+
+impl std::fmt::Display for GarKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for GarKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "average" | "mean" | "avg" => Ok(GarKind::Average),
+            "median" | "coord-median" => Ok(GarKind::Median),
+            "trimmed-mean" | "trmean" => Ok(GarKind::TrimmedMean),
+            "krum" => Ok(GarKind::Krum),
+            "multi-krum" | "multikrum" | "mkrum" => Ok(GarKind::MultiKrum),
+            "bulyan" => Ok(GarKind::Bulyan),
+            "multi-bulyan" | "multibulyan" | "mbulyan" => Ok(GarKind::MultiBulyan),
+            other => anyhow::bail!(
+                "unknown GAR '{other}' (expected one of: average, median, \
+                 trimmed-mean, krum, multi-krum, bulyan, multi-bulyan)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip_via_str() {
+        for kind in GarKind::ALL {
+            let parsed: GarKind = kind.as_str().parse().unwrap();
+            assert_eq!(parsed, kind);
+        }
+        assert!("frobnicate".parse::<GarKind>().is_err());
+    }
+
+    #[test]
+    fn min_n_ordering() {
+        // Stronger guarantees require more workers.
+        for f in 0..5 {
+            assert!(GarKind::MultiBulyan.min_n(f) >= GarKind::MultiKrum.min_n(f));
+            assert!(GarKind::MultiKrum.min_n(f) >= GarKind::Median.min_n(f));
+        }
+        assert_eq!(GarKind::MultiKrum.min_n(2), 7);
+        assert_eq!(GarKind::MultiBulyan.min_n(2), 11);
+    }
+
+    #[test]
+    fn instantiate_rejects_undersized_n() {
+        assert!(GarKind::MultiBulyan.instantiate(10, 2).is_err());
+        assert!(GarKind::MultiBulyan.instantiate(11, 2).is_ok());
+        assert!(GarKind::Krum.instantiate(6, 2).is_err());
+        assert!(GarKind::Krum.instantiate(7, 2).is_ok());
+    }
+
+    #[test]
+    fn all_rules_agree_on_identical_gradients() {
+        // When every worker proposes the same vector, every GAR must
+        // return exactly that vector.
+        let n = 11;
+        let f = 2;
+        let g: Vec<f32> = (0..32).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let rows = vec![g.clone(); n];
+        let grads = GradMatrix::from_rows(&rows);
+        for kind in GarKind::ALL {
+            let gar = kind.instantiate(n, f).unwrap();
+            let out = gar.aggregate(&grads).unwrap();
+            for (a, b) in out.iter().zip(&g) {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "{kind}: expected identical output"
+                );
+            }
+        }
+    }
+}

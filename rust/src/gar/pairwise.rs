@@ -1,0 +1,103 @@
+//! Pairwise squared ℓ2 distances — the O(n²d) hot spot of MULTI-KRUM and
+//! MULTI-BULYAN (and the subject of the paper's Fig. 2 timing study).
+//!
+//! The computation is tiled over the dimension `d`: each `BLOCK_D`-wide
+//! stripe of all `n` rows is streamed through cache once and its partial
+//! distances accumulated into the `n × n` output. For `d = 10⁷` and
+//! `n = 39` the naive pair-major loop re-reads every row `n − 1` times
+//! from DRAM (≈ n²·d traffic); the stripe-major loop reads each element
+//! once (≈ n·d traffic) while the stripe (n·BLOCK_D·4 bytes ≤ 1.2 MiB)
+//! stays L2-resident. This mirrors the Pallas kernel's HBM↔VMEM schedule
+//! (`python/compile/kernels/pairwise.py`) — see DESIGN.md
+//! §Hardware-Adaptation.
+
+use crate::tensor::{sq_distance, GradMatrix};
+
+/// Stripe width in elements. 2048 f32 × n ≤ 39 rows ≈ 320 KiB — fits L2
+/// comfortably while long enough to amortise loop overhead.
+const BLOCK_D: usize = 2048;
+
+/// Compute all pairwise squared distances into `out` (`n*n`, row-major,
+/// symmetric, zero diagonal). No allocation.
+pub fn pairwise_sq_distances_into(grads: &GradMatrix, out: &mut [f32]) {
+    let n = grads.n();
+    let d = grads.d();
+    assert_eq!(out.len(), n * n, "pairwise: out must be n*n");
+    out.fill(0.0);
+    let mut start = 0;
+    while start < d {
+        let end = (start + BLOCK_D).min(d);
+        for i in 0..n {
+            let gi = &grads.row(i)[start..end];
+            for j in (i + 1)..n {
+                let gj = &grads.row(j)[start..end];
+                let partial = sq_distance(gi, gj);
+                out[i * n + j] += partial;
+            }
+        }
+        start = end;
+    }
+    // Mirror the upper triangle.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            out[j * n + i] = out[i * n + j];
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`pairwise_sq_distances_into`].
+pub fn pairwise_sq_distances(grads: &GradMatrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; grads.n() * grads.n()];
+    pairwise_sq_distances_into(grads, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(grads: &GradMatrix) -> Vec<f32> {
+        let n = grads.n();
+        let mut out = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                out[i * n + j] = sq_distance(grads.row(i), grads.row(j));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let g = GradMatrix::from_fn(5, 17, |i, j| ((i * 31 + j * 7) % 13) as f32 - 6.0);
+        let tiled = pairwise_sq_distances(&g);
+        let reference = naive(&g);
+        for (a, b) in tiled.iter().zip(&reference) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn matches_naive_across_block_boundary() {
+        // d > BLOCK_D exercises the multi-stripe accumulation.
+        let d = BLOCK_D + 137;
+        let g = GradMatrix::from_fn(4, d, |i, j| ((i + 1) * j % 101) as f32 * 0.01);
+        let tiled = pairwise_sq_distances(&g);
+        let reference = naive(&g);
+        for (a, b) in tiled.iter().zip(&reference) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn symmetric_zero_diagonal() {
+        let g = GradMatrix::from_fn(6, 50, |i, j| (i as f32).sin() + (j as f32).cos());
+        let d = pairwise_sq_distances(&g);
+        for i in 0..6 {
+            assert_eq!(d[i * 6 + i], 0.0);
+            for j in 0..6 {
+                assert_eq!(d[i * 6 + j], d[j * 6 + i]);
+            }
+        }
+    }
+}

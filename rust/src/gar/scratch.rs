@@ -1,0 +1,82 @@
+//! Reusable scratch buffers for the GAR hot path.
+//!
+//! The parameter server calls its GAR once per round with identical shapes;
+//! [`GarScratch`] lets every rule run allocation-free in the steady state
+//! (buffers are grown on first use and reused afterwards). One scratch may
+//! be shared across different rules — each `get_*` accessor resizes on
+//! demand.
+
+/// Grow-only scratch space shared by all GAR implementations.
+#[derive(Debug, Default)]
+pub struct GarScratch {
+    /// `n × n` pairwise squared-distance matrix.
+    pub(crate) distances: Vec<f32>,
+    /// Per-worker Krum scores.
+    pub(crate) scores: Vec<f32>,
+    /// Per-coordinate working column (n values) for median-style rules.
+    pub(crate) column: Vec<f32>,
+    /// Selection pool indices (BULYAN's shrinking candidate set).
+    pub(crate) pool: Vec<usize>,
+    /// θ × d matrix of per-iteration MULTI-KRUM averages (BULYAN's G^agr).
+    pub(crate) agr: Vec<f32>,
+    /// θ × d matrix of per-iteration winners (BULYAN's G^ext).
+    pub(crate) ext: Vec<f32>,
+    /// Per-coordinate medians (BULYAN's M).
+    pub(crate) medians: Vec<f32>,
+    /// Generic index buffer for argselect results.
+    pub(crate) indices: Vec<usize>,
+    /// Running sum of alive rows (BULYAN's incremental-average trick).
+    pub(crate) sumbuf: Vec<f32>,
+    /// (deviation, value) pairs for the per-coordinate β-selection.
+    pub(crate) pairs: Vec<(f32, f32)>,
+}
+
+impl GarScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distance matrix buffer, zeroed to `n*n`.
+    pub(crate) fn distances_mut(&mut self, n: usize) -> &mut Vec<f32> {
+        self.distances.clear();
+        self.distances.resize(n * n, 0.0);
+        &mut self.distances
+    }
+
+    pub(crate) fn column_mut(&mut self, n: usize) -> &mut Vec<f32> {
+        self.column.clear();
+        self.column.resize(n, 0.0);
+        &mut self.column
+    }
+
+    /// Total bytes currently held (for the metrics/perf reports).
+    pub fn capacity_bytes(&self) -> usize {
+        (self.distances.capacity()
+            + self.scores.capacity()
+            + self.column.capacity()
+            + self.agr.capacity()
+            + self.ext.capacity()
+            + self.medians.capacity()
+            + self.sumbuf.capacity()) * std::mem::size_of::<f32>()
+            + self.pairs.capacity() * std::mem::size_of::<(f32, f32)>()
+            + (self.pool.capacity() + self.indices.capacity()) * std::mem::size_of::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_grow_and_reuse() {
+        let mut s = GarScratch::new();
+        s.distances_mut(4);
+        assert_eq!(s.distances.len(), 16);
+        let cap = s.distances.capacity();
+        s.distances_mut(3);
+        assert_eq!(s.distances.len(), 9);
+        // No shrink: capacity retained for reuse.
+        assert_eq!(s.distances.capacity(), cap);
+        assert!(s.capacity_bytes() > 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Coordinate-wise trimmed mean [Yin et al. 2018] — a weakly resilient
+//! baseline the paper's related-work discusses; included as a comparator
+//! for the resilience and slowdown benches.
+
+use super::{check_shape, Gar, GarScratch};
+use crate::tensor::{insertion_sort, GradMatrix};
+use crate::Result;
+
+/// Below this n the per-coordinate pass insertion-sorts the column
+/// instead of double-introselecting (faster for the tiny n of the
+/// parameter-server setting).
+const SMALL_N: usize = 64;
+
+/// Per coordinate: drop the `f` largest and `f` smallest values, average
+/// the remaining `n − 2f`.
+#[derive(Debug, Clone)]
+pub struct TrimmedMean {
+    n: usize,
+    f: usize,
+}
+
+impl TrimmedMean {
+    pub fn new(n: usize, f: usize) -> Result<Self> {
+        anyhow::ensure!(
+            n >= 2 * f + 1,
+            "trimmed-mean: requires n ≥ 2f+1 (got n={n}, f={f})"
+        );
+        Ok(Self { n, f })
+    }
+}
+
+impl Gar for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn f(&self) -> usize {
+        self.f
+    }
+
+    fn gradients_used(&self) -> usize {
+        self.n - 2 * self.f
+    }
+
+    fn aggregate_with_scratch(
+        &self,
+        grads: &GradMatrix,
+        out: &mut [f32],
+        scratch: &mut GarScratch,
+    ) -> Result<()> {
+        check_shape("trimmed-mean", grads, self.n, out)?;
+        let keep = self.n - 2 * self.f;
+        let col = scratch.column_mut(self.n);
+        for j in 0..grads.d() {
+            for i in 0..self.n {
+                col[i] = grads.row(i)[j];
+            }
+            // Order so that [f, n-f) holds the middle n-2f values.
+            if self.f > 0 {
+                if self.n <= SMALL_N {
+                    insertion_sort(col);
+                } else {
+                    col.select_nth_unstable_by(self.f - 1, f32::total_cmp);
+                    col[self.f..].select_nth_unstable_by(keep - 1, f32::total_cmp);
+                }
+            }
+            out[j] = col[self.f..self.n - self.f].iter().sum::<f32>() / keep as f32;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trims_extremes() {
+        let g = GradMatrix::from_rows(&[
+            vec![-100.0],
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+            vec![100.0],
+        ]);
+        let gar = TrimmedMean::new(5, 1).unwrap();
+        assert_eq!(gar.aggregate(&g).unwrap(), vec![2.0]);
+        assert_eq!(gar.gradients_used(), 3);
+    }
+
+    #[test]
+    fn f_zero_is_plain_average() {
+        let g = GradMatrix::from_rows(&[vec![1.0, 4.0], vec![3.0, 8.0]]);
+        let gar = TrimmedMean::new(2, 0).unwrap();
+        assert_eq!(gar.aggregate(&g).unwrap(), vec![2.0, 6.0]);
+    }
+
+    #[test]
+    fn bounded_by_correct_values() {
+        // With f Byzantine entries per coordinate, output stays within the
+        // correct values' convex hull (each coordinate independently).
+        let mut rows: Vec<Vec<f32>> = (0..7).map(|i| vec![i as f32]).collect();
+        rows.push(vec![f32::MAX / 2.0]);
+        rows.push(vec![f32::MIN / 2.0]);
+        let g = GradMatrix::from_rows(&rows);
+        let out = TrimmedMean::new(9, 2).unwrap().aggregate(&g).unwrap();
+        assert!((0.0..=6.0).contains(&out[0]));
+    }
+}

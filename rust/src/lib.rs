@@ -1,0 +1,51 @@
+//! # multibulyan
+//!
+//! Reference implementation of **"Fast and Robust Distributed Learning in
+//! High Dimension"** (El-Mhamdi, Guerraoui, Rouault — CS.DC 2019): the
+//! MULTI-KRUM and MULTI-BULYAN Byzantine-resilient gradient aggregation
+//! rules (GARs), embedded in a full distributed-SGD runtime.
+//!
+//! The system is a three-layer stack:
+//!
+//! * **Layer 1 (build time)** — Pallas kernels for the aggregation hot
+//!   spots (pairwise squared distances, coordinate-wise median / trimmed
+//!   average, fused SGD update), under `python/compile/kernels/`.
+//! * **Layer 2 (build time)** — JAX model forward/backward and full GAR
+//!   graphs, lowered once to HLO text artifacts by `python/compile/aot.py`.
+//! * **Layer 3 (this crate, request path)** — the rust coordinator: a
+//!   parameter server, simulated worker cluster, Byzantine attack library,
+//!   native GAR implementations, and a PJRT runtime that loads and executes
+//!   the AOT artifacts. Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use multibulyan::gar::{Gar, GarKind};
+//! use multibulyan::tensor::GradMatrix;
+//!
+//! // 11 workers, dimension 1000, f = 2 Byzantine tolerated.
+//! let grads = GradMatrix::from_fn(11, 1000, |i, j| (i + j) as f32);
+//! let gar = GarKind::MultiBulyan.instantiate(11, 2).unwrap();
+//! let aggregated = gar.aggregate(&grads).unwrap();
+//! assert_eq!(aggregated.len(), 1000);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `DESIGN.md` for the full
+//! system inventory and experiment index.
+
+pub mod attacks;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod gar;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod training;
+pub mod transport;
+pub mod util;
+pub mod worker;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

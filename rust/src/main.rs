@@ -1,0 +1,317 @@
+//! `multibulyan` — launcher CLI (hand-rolled argument parsing; the offline
+//! build has no clap).
+//!
+//! ```text
+//! multibulyan train [--config FILE] [--gar G] [--attack A] [--n N] [--f F]
+//!                   [--byzantine B] [--model M] [--steps S] [--batch-size B]
+//!                   [--lr LR] [--momentum MU] [--eval-every K] [--seed S]
+//!                   [--artifacts DIR] [--curve-out FILE]
+//! multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D]
+//! multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|cone> [--full]
+//!                   [--artifacts DIR]
+//! multibulyan artifacts-check [--artifacts DIR]
+//! ```
+
+use multibulyan::attacks::AttackKind;
+use multibulyan::bench;
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::launch;
+use multibulyan::gar::GarKind;
+use multibulyan::runtime::{ComputeServer, Manifest};
+use multibulyan::tensor::GradMatrix;
+use multibulyan::util::Rng64;
+use multibulyan::Result;
+
+/// Minimal flag parser: `--key value` pairs plus positional arguments.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags: --full (no value or next is a flag)
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, dflt: &str) -> String {
+        self.get(key).unwrap_or(dflt).to_string()
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, dflt: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(dflt),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "\
+multibulyan — MULTI-KRUM / MULTI-BULYAN Byzantine-resilient distributed SGD
+
+USAGE:
+  multibulyan train [--config FILE] [--gar G] [--attack A] [--n N] [--f F]
+                    [--byzantine B] [--model quadratic|mlp|cnn|transformer]
+                    [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
+                    [--eval-every K] [--seed S] [--artifacts DIR]
+                    [--curve-out FILE]
+  multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D]
+  multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|cone>
+                    [--full] [--artifacts DIR]
+  multibulyan artifacts-check [--artifacts DIR]
+
+GARs:    average median trimmed-mean krum multi-krum bulyan multi-bulyan
+Attacks: none sign-flip random-gauss infinity nan little-is-enough
+         omniscient mimic zero
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        std::process::exit(if argv.is_empty() { 2 } else { 0 });
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "train" => cmd_train(&args),
+        "aggregate" => cmd_aggregate(&args),
+        "bench" => cmd_bench(&args),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let exp = match args.get("config") {
+        Some(path) => ExperimentConfig::from_path(path)?,
+        None => {
+            let gar: GarKind = args.get_or("gar", "multi-bulyan").parse()?;
+            let attack: AttackKind = args.get_or("attack", "none").parse()?;
+            let n: usize = args.parse_or("n", 11)?;
+            let f: usize = args.parse_or("f", 2)?;
+            let byz = match args.get("byzantine") {
+                Some(v) => v.parse()?,
+                None => {
+                    if attack == AttackKind::None {
+                        0
+                    } else {
+                        f
+                    }
+                }
+            };
+            let model = args.get_or("model", "quadratic");
+            ExperimentConfig {
+                cluster: ClusterConfig {
+                    n,
+                    f,
+                    actual_byzantine: Some(byz),
+                    net_delay_us: 0,
+                    drop_prob: 0.0,
+                    round_timeout_ms: 60_000,
+                },
+                gar,
+                attack,
+                model: if model == "quadratic" {
+                    ModelConfig::Quadratic {
+                        dim: args.parse_or("dim", 1000)?,
+                        noise: 0.5,
+                    }
+                } else {
+                    ModelConfig::Artifact {
+                        name: model.clone(),
+                        dir: args.get_or("artifacts", "artifacts"),
+                    }
+                },
+                train: TrainConfig {
+                    learning_rate: args.parse_or("lr", 0.1)?,
+                    momentum: args.parse_or("momentum", 0.9)?,
+                    steps: args.parse_or("steps", 300)?,
+                    batch_size: args.parse_or("batch-size", 25)?,
+                    eval_every: args.parse_or("eval-every", 50)?,
+                    seed: args.parse_or("seed", 1)?,
+                },
+                output_dir: None,
+            }
+        }
+    };
+    exp.validate()?;
+    let compute = match &exp.model {
+        ModelConfig::Artifact { dir, .. } => {
+            let manifest = Manifest::load(dir)?;
+            let server = ComputeServer::start(manifest.clone())?;
+            Some((server, manifest))
+        }
+        _ => None,
+    };
+    let handle = compute.as_ref().map(|(s, m)| (s.handle(), m.clone()));
+    println!(
+        "training: gar={} attack={} n={} f={} byz={} steps={} b={}",
+        exp.gar,
+        exp.attack.label(),
+        exp.cluster.n,
+        exp.cluster.f,
+        exp.byzantine_count(),
+        exp.train.steps,
+        exp.train.batch_size
+    );
+    let cluster = launch(&exp, handle)?;
+    let mut coordinator = cluster.coordinator;
+    let mut evaluator = cluster.evaluator;
+    coordinator.train(exp.train.steps, exp.train.eval_every, &mut evaluator)?;
+    println!("{}", coordinator.metrics.summary());
+    for p in coordinator.metrics.curve() {
+        println!(
+            "  step {:>6}  loss {:>10.5}  acc {:>7.4}",
+            p.step, p.loss, p.accuracy
+        );
+    }
+    if let Some(path) = args.get("curve-out") {
+        coordinator.metrics.write_curve_csv(path)?;
+        println!("curve written to {path}");
+    }
+    coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_aggregate(args: &Args) -> Result<()> {
+    let kind: GarKind = args.get_or("gar", "multi-bulyan").parse()?;
+    let n: usize = args.parse_or("n", 11)?;
+    let f: usize = args.parse_or("f", 2)?;
+    let dim: usize = args.parse_or("dim", 100_000)?;
+    let rule = kind.instantiate(n, f)?;
+    let mut rng = Rng64::seed_from_u64(0);
+    let grads = GradMatrix::uniform(n, dim, 0.0, 1.0, &mut rng);
+    let sw = multibulyan::metrics::Stopwatch::start();
+    let out = rule.aggregate(&grads)?;
+    println!(
+        "{} over {}×{} gradients: {:.3} ms (‖out‖ = {:.4})",
+        rule.name(),
+        n,
+        dim,
+        sw.elapsed_ms(),
+        multibulyan::tensor::l2_norm(&out)
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("bench: which figure? {USAGE}"))?;
+    let full = args.has("full");
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match which.as_str() {
+        "fig2" => {
+            let cfg = if full {
+                bench::fig2::Fig2Config::full_grid()
+            } else {
+                bench::fig2::Fig2Config::default_grid()
+            };
+            bench::fig2::run(&cfg, false)?;
+        }
+        "fig3" => {
+            let manifest = Manifest::load(&artifacts)?;
+            let server = ComputeServer::start(manifest.clone())?;
+            let cfg = if full {
+                bench::fig3::Fig3Config::full_sweep()
+            } else {
+                bench::fig3::Fig3Config::default_sweep()
+            };
+            bench::fig3::run(&cfg, server.handle(), &manifest, false)?;
+        }
+        "dscaling" => {
+            // Keep every point DRAM-resident at n=15 so the log-log fit
+            // measures the algorithm, not the cache hierarchy.
+            let dims: Vec<usize> = if full {
+                vec![300_000, 1_000_000, 3_000_000, 10_000_000]
+            } else {
+                vec![300_000, 1_000_000, 3_000_000]
+            };
+            bench::dscaling::run(
+                15,
+                &dims,
+                &[
+                    GarKind::Average,
+                    GarKind::Median,
+                    GarKind::MultiKrum,
+                    GarKind::MultiBulyan,
+                ],
+                false,
+            )?;
+        }
+        "slowdown" => {
+            let cfg = bench::slowdown::SlowdownConfig::default();
+            bench::slowdown::run(&cfg, false)?;
+        }
+        "resilience" => {
+            let cfg = bench::resilience::GauntletConfig::default();
+            bench::resilience::run(&cfg, false)?;
+        }
+        "cone" => {
+            let cfg = bench::cone::ConeConfig::default();
+            bench::cone::run(&cfg, false)?;
+        }
+        other => anyhow::bail!(
+            "unknown bench '{other}' (fig2|fig3|dscaling|slowdown|resilience|cone)"
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(&artifacts)?;
+    println!(
+        "manifest OK: {} artifacts, {} models",
+        manifest.artifacts.len(),
+        manifest.models.len()
+    );
+    let server = ComputeServer::start(manifest.clone())?;
+    let handle = server.handle();
+    for name in manifest.artifacts.keys() {
+        handle.warmup(name)?;
+        println!("  compiled {name}");
+    }
+    println!("all artifacts compile");
+    Ok(())
+}

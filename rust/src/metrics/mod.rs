@@ -1,0 +1,12 @@
+//! Metrics: timers, counters, training curves and the CSV emission that
+//! EXPERIMENTS.md is generated from.
+//!
+//! Deliberately minimal — a process-local registry, no global state, no
+//! background threads; the coordinator owns one [`MetricsRecorder`] and
+//! threads it through the round loop.
+
+mod recorder;
+mod timing;
+
+pub use recorder::{MetricsRecorder, TrainPoint};
+pub use timing::{trimmed_timing, Stopwatch, TimingProtocol};

@@ -1,0 +1,206 @@
+//! Training-run metrics: loss/accuracy curves, per-round timings, CSV and
+//! JSONL emission. One [`MetricsRecorder`] per training run.
+
+use crate::tensor::OnlineStats;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One evaluation point on the training curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainPoint {
+    pub step: usize,
+    pub loss: f32,
+    /// Top-1 accuracy in [0,1]; NaN if not evaluated at this point.
+    pub accuracy: f32,
+}
+
+/// Accumulates everything a run reports.
+#[derive(Debug, Default)]
+pub struct MetricsRecorder {
+    curve: Vec<TrainPoint>,
+    counters: BTreeMap<String, u64>,
+    timers: BTreeMap<String, OnlineStats>,
+    /// Per-worker selection counts (how often each worker's gradient was
+    /// used by the GAR — the selection-bias diagnostic).
+    selections: Vec<u64>,
+}
+
+impl MetricsRecorder {
+    pub fn new(n_workers: usize) -> Self {
+        Self {
+            selections: vec![0; n_workers],
+            ..Default::default()
+        }
+    }
+
+    pub fn record_point(&mut self, point: TrainPoint) {
+        self.curve.push(point);
+    }
+
+    pub fn incr(&mut self, counter: &str) {
+        self.add(counter, 1);
+    }
+
+    pub fn add(&mut self, counter: &str, delta: u64) {
+        *self.counters.entry(counter.to_string()).or_default() += delta;
+    }
+
+    pub fn time(&mut self, timer: &str, seconds: f64) {
+        self.timers
+            .entry(timer.to_string())
+            .or_insert_with(OnlineStats::new)
+            .push(seconds);
+    }
+
+    pub fn record_selection(&mut self, worker: usize) {
+        if let Some(s) = self.selections.get_mut(worker) {
+            *s += 1;
+        }
+    }
+
+    pub fn curve(&self) -> &[TrainPoint] {
+        &self.curve
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer(&self, name: &str) -> Option<&OnlineStats> {
+        self.timers.get(name)
+    }
+
+    pub fn selections(&self) -> &[u64] {
+        &self.selections
+    }
+
+    /// Best (max) accuracy over the run — the Fig. 3 metric ("maximum
+    /// top-1 cross-accuracy reached over the whole training").
+    pub fn max_accuracy(&self) -> f32 {
+        self.curve
+            .iter()
+            .map(|p| p.accuracy)
+            .filter(|a| a.is_finite())
+            .fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Final loss (last curve point).
+    pub fn final_loss(&self) -> Option<f32> {
+        self.curve.last().map(|p| p.loss)
+    }
+
+    /// Write the curve as CSV: `step,loss,accuracy`.
+    pub fn write_curve_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "step,loss,accuracy")?;
+        for p in &self.curve {
+            writeln!(w, "{},{},{}", p.step, p.loss, p.accuracy)?;
+        }
+        Ok(())
+    }
+
+    /// One-paragraph human summary for stdout.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        if let Some(last) = self.curve.last() {
+            s.push_str(&format!(
+                "steps={} final_loss={:.5} max_acc={:.4}",
+                last.step,
+                last.loss,
+                self.max_accuracy()
+            ));
+        }
+        for (name, st) in &self.timers {
+            s.push_str(&format!(
+                " {}={:.3}ms(n={})",
+                name,
+                st.mean() * 1e3,
+                st.count()
+            ));
+        }
+        for (name, v) in &self.counters {
+            s.push_str(&format!(" {name}={v}"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_and_max_accuracy() {
+        let mut m = MetricsRecorder::new(3);
+        m.record_point(TrainPoint {
+            step: 0,
+            loss: 2.0,
+            accuracy: 0.1,
+        });
+        m.record_point(TrainPoint {
+            step: 100,
+            loss: 1.0,
+            accuracy: 0.8,
+        });
+        m.record_point(TrainPoint {
+            step: 200,
+            loss: 0.9,
+            accuracy: 0.7,
+        });
+        assert_eq!(m.max_accuracy(), 0.8);
+        assert_eq!(m.final_loss(), Some(0.9));
+        assert_eq!(m.curve().len(), 3);
+    }
+
+    #[test]
+    fn counters_timers_selections() {
+        let mut m = MetricsRecorder::new(2);
+        m.incr("rounds");
+        m.add("rounds", 2);
+        assert_eq!(m.counter("rounds"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        m.time("aggregate", 0.5);
+        m.time("aggregate", 1.5);
+        assert_eq!(m.timer("aggregate").unwrap().count(), 2);
+        m.record_selection(0);
+        m.record_selection(0);
+        m.record_selection(1);
+        m.record_selection(99); // out of range: ignored
+        assert_eq!(m.selections(), &[2, 1]);
+    }
+
+    #[test]
+    fn csv_emission() {
+        let mut m = MetricsRecorder::new(1);
+        m.record_point(TrainPoint {
+            step: 5,
+            loss: 0.5,
+            accuracy: f32::NAN,
+        });
+        let dir = std::env::temp_dir().join("mb_metrics_test");
+        let path = dir.join("curve.csv");
+        m.write_curve_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss,accuracy\n5,0.5,NaN"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn summary_mentions_key_numbers() {
+        let mut m = MetricsRecorder::new(1);
+        m.record_point(TrainPoint {
+            step: 10,
+            loss: 0.25,
+            accuracy: 0.9,
+        });
+        m.incr("rounds");
+        let s = m.summary();
+        assert!(s.contains("final_loss=0.25"));
+        assert!(s.contains("rounds=1"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Timing utilities implementing the paper's Fig. 2 measurement protocol:
+//! "7 runs per (n, d), remove the 2 furthest execution times from the
+//! median, report mean and standard deviation of the 5 remaining".
+
+use crate::tensor::{coordinate_median, mean, std_dev};
+use std::time::Instant;
+
+/// Simple monotonic stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// The Fig. 2 protocol: `runs` repetitions, keep the `keep` closest to the
+/// median, report mean ± std of those.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingProtocol {
+    pub runs: usize,
+    pub keep: usize,
+    /// Untimed warmup iterations before the measured runs.
+    pub warmup: usize,
+}
+
+impl Default for TimingProtocol {
+    /// The paper's protocol: 7 runs, keep the 5 closest to the median.
+    fn default() -> Self {
+        Self {
+            runs: 7,
+            keep: 5,
+            warmup: 1,
+        }
+    }
+}
+
+impl TimingProtocol {
+    /// A faster protocol for smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            runs: 3,
+            keep: 3,
+            warmup: 0,
+        }
+    }
+
+    /// Time `op` per the protocol; returns `(mean_ms, std_ms)`.
+    pub fn measure(&self, mut op: impl FnMut()) -> (f64, f64) {
+        for _ in 0..self.warmup {
+            op();
+        }
+        let samples: Vec<f32> = (0..self.runs)
+            .map(|_| {
+                let sw = Stopwatch::start();
+                op();
+                sw.elapsed_ms() as f32
+            })
+            .collect();
+        trimmed_timing(&samples, self.keep)
+    }
+}
+
+/// Keep the `keep` samples closest to the median; return (mean, std).
+pub fn trimmed_timing(samples_ms: &[f32], keep: usize) -> (f64, f64) {
+    assert!(!samples_ms.is_empty());
+    let keep = keep.min(samples_ms.len());
+    let med = coordinate_median(samples_ms);
+    let mut by_dist: Vec<f32> = samples_ms.to_vec();
+    by_dist.sort_by(|a, b| (a - med).abs().total_cmp(&(b - med).abs()));
+    let kept = &by_dist[..keep];
+    (mean(kept) as f64, std_dev(kept) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_removes_outliers() {
+        // 5 samples near 10ms plus two wild outliers.
+        let samples = [10.0f32, 10.2, 9.8, 10.1, 9.9, 100.0, 0.1];
+        let (m, s) = trimmed_timing(&samples, 5);
+        assert!((m - 10.0).abs() < 0.2, "mean {m}");
+        assert!(s < 0.3, "std {s}");
+    }
+
+    #[test]
+    fn keep_larger_than_len_is_clamped() {
+        let (m, _) = trimmed_timing(&[5.0], 10);
+        assert_eq!(m, 5.0);
+    }
+
+    #[test]
+    fn measure_counts_runs() {
+        let mut calls = 0;
+        let proto = TimingProtocol {
+            runs: 4,
+            keep: 3,
+            warmup: 2,
+        };
+        let (m, s) = proto.measure(|| calls += 1);
+        assert_eq!(calls, 6);
+        assert!(m >= 0.0 && s >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+        sw.restart();
+        assert!(sw.elapsed_ms() < 100.0);
+    }
+}

@@ -1,0 +1,306 @@
+//! The compute thread: owns the PJRT client and all compiled executables,
+//! serves execution requests from the rest of the system.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so it lives
+//! on one dedicated thread; [`ComputeHandle`] (cloneable, `Send + Sync`)
+//! sends `(artifact, args)` over an mpsc queue and blocks on a per-request
+//! reply channel. The compute thread materialises literals, runs the
+//! executable and converts every output to `Vec<f32>` (the JAX graphs
+//! cast counts/scalars to f32 so one conversion path suffices).
+
+use super::manifest::Manifest;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A host-side argument for an artifact input.
+#[derive(Debug, Clone)]
+pub enum ArgValue {
+    /// f32 tensor with explicit shape.
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 tensor with explicit shape (labels/tokens).
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl ArgValue {
+    /// Flat f32 vector (rank 1).
+    pub fn f32_vec(v: Vec<f32>) -> Self {
+        let n = v.len();
+        ArgValue::F32(v, vec![n])
+    }
+
+    /// f32 scalar (rank 0).
+    pub fn f32_scalar(v: f32) -> Self {
+        ArgValue::F32(vec![v], vec![])
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            ArgValue::F32(v, _) => v.len(),
+            ArgValue::I32(v, _) => v.len(),
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            ArgValue::F32(_, s) | ArgValue::I32(_, s) => s,
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            ArgValue::F32(..) => "f32",
+            ArgValue::I32(..) => "i32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            ArgValue::F32(v, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+            ArgValue::I32(v, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+enum Request {
+    Exec {
+        artifact: String,
+        args: Vec<ArgValue>,
+        resp: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    /// Pre-compile an artifact (warmup), reply when done.
+    Warm(String, mpsc::Sender<Result<()>>),
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the compute thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+}
+
+impl ComputeHandle {
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| anyhow::anyhow!("compute handle poisoned"))?
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("compute thread is down"))
+    }
+
+    /// Execute `artifact` with `args`; returns one `Vec<f32>` per output.
+    /// Blocks until the compute thread replies (requests are served FIFO —
+    /// the single-accelerator semantics of the paper's testbed).
+    pub fn execute(&self, artifact: &str, args: Vec<ArgValue>) -> Result<Vec<Vec<f32>>> {
+        let (resp, rx) = mpsc::channel();
+        self.send(Request::Exec {
+            artifact: artifact.to_string(),
+            args,
+            resp,
+        })?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("compute thread dropped request"))?
+    }
+
+    /// Compile an artifact ahead of time (so round 1 is not a compile).
+    pub fn warmup(&self, artifact: &str) -> Result<()> {
+        let (resp, rx) = mpsc::channel();
+        self.send(Request::Warm(artifact.to_string(), resp))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("compute thread dropped request"))?
+    }
+
+    /// Ask the compute thread to exit (idempotent; best-effort).
+    pub fn shutdown(&self) {
+        let _ = self.send(Request::Shutdown);
+    }
+}
+
+/// The compute thread itself.
+pub struct ComputeServer {
+    handle: ComputeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeServer {
+    /// Spawn the compute thread for a loaded manifest.
+    pub fn start(manifest: Manifest) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || compute_loop(manifest, rx))?;
+        Ok(Self {
+            handle: ComputeHandle {
+                tx: Arc::new(Mutex::new(tx)),
+            },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ComputeServer {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn compute_loop(manifest: Manifest, rx: mpsc::Receiver<Request>) {
+    // Client creation can fail only on broken installs; surface the error
+    // on every request rather than panicking the thread.
+    let client = xla::PjRtClient::cpu();
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Warm(name, resp) => {
+                let r = match &client {
+                    Ok(c) => get_or_compile(&manifest, c, &mut cache, &name).map(|_| ()),
+                    Err(e) => Err(anyhow::anyhow!("PJRT client unavailable: {e}")),
+                };
+                let _ = resp.send(r);
+            }
+            Request::Exec {
+                artifact,
+                args,
+                resp,
+            } => {
+                let r = match &client {
+                    Ok(c) => run_one(&manifest, c, &mut cache, &artifact, &args),
+                    Err(e) => Err(anyhow::anyhow!("PJRT client unavailable: {e}")),
+                };
+                let _ = resp.send(r);
+            }
+        }
+    }
+}
+
+fn get_or_compile<'a>(
+    manifest: &Manifest,
+    client: &xla::PjRtClient,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(name) {
+        let path = manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling artifact '{name}': {e}"))?;
+        cache.insert(name.to_string(), exe);
+    }
+    Ok(cache.get(name).unwrap())
+}
+
+fn run_one(
+    manifest: &Manifest,
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    args: &[ArgValue],
+) -> Result<Vec<Vec<f32>>> {
+    // Validate against the manifest signature before touching PJRT.
+    let spec = manifest.artifact(name)?;
+    anyhow::ensure!(
+        args.len() == spec.inputs.len(),
+        "artifact '{name}': expected {} inputs, got {}",
+        spec.inputs.len(),
+        args.len()
+    );
+    for (i, (arg, want)) in args.iter().zip(&spec.inputs).enumerate() {
+        anyhow::ensure!(
+            arg.dtype() == want.dtype,
+            "artifact '{name}' input {i}: dtype {} != manifest {}",
+            arg.dtype(),
+            want.dtype
+        );
+        anyhow::ensure!(
+            arg.shape() == want.shape.as_slice(),
+            "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+            arg.shape(),
+            want.shape
+        );
+    }
+
+    let exe = get_or_compile(manifest, client, cache, name)?;
+    let literals: Vec<xla::Literal> = args
+        .iter()
+        .map(|a| a.to_literal())
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("executing '{name}': {e}"))?;
+    let out = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetching result of '{name}': {e}"))?;
+    // aot.py lowers with return_tuple=True: unpack the tuple.
+    let parts = out
+        .to_tuple()
+        .map_err(|e| anyhow::anyhow!("untupling result of '{name}': {e}"))?;
+    anyhow::ensure!(
+        parts.len() == spec.outputs,
+        "artifact '{name}': manifest says {} outputs, got {}",
+        spec.outputs,
+        parts.len()
+    );
+    parts
+        .into_iter()
+        .map(|lit| {
+            lit.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("output of '{name}' is not f32: {e}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argvalue_shapes_and_literals() {
+        let a = ArgValue::f32_vec(vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.shape(), &[3]);
+        assert_eq!(a.dtype(), "f32");
+        assert_eq!(a.element_count(), 3);
+        let s = ArgValue::f32_scalar(5.0);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        let i = ArgValue::I32(vec![1, 2, 3, 4], vec![2, 2]);
+        assert_eq!(i.dtype(), "i32");
+        // Literal conversion happens on the compute thread in production,
+        // but is safe host-side too.
+        let lit = i.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn handle_reports_thread_down_after_shutdown() {
+        let dir = std::env::temp_dir().join("mb_compute_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts":{},"models":{}}"#).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let server = ComputeServer::start(manifest).unwrap();
+        let handle = server.handle();
+        handle.shutdown();
+        // Give the thread a moment to exit, then expect an error.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(handle.execute("missing", vec![]).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

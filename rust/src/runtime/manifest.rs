@@ -1,0 +1,321 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (producer) and the rust runtime (consumer).
+//!
+//! The manifest maps artifact names to HLO files with their input/output
+//! signatures, and model names to the artifact family implementing them
+//! (gradient step per batch size, evaluation step, initial parameters).
+//! Parsed with the in-repo JSON parser ([`crate::util::json`]).
+
+use crate::util::json::Json;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor signature: dtype + shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// "f32" or "i32".
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            dtype: v.field("dtype")?.as_str()?.to_string(),
+            shape: v
+                .field("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            file: v.field("file")?.as_str()?.to_string(),
+            inputs: v
+                .field("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: v.field("outputs")?.as_usize()?,
+        })
+    }
+}
+
+/// A trainable model: its parameter dimension and artifact family.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Flat parameter count `d`.
+    pub dim: usize,
+    /// Raw little-endian f32 file with the seed-0 initial parameters,
+    /// relative to the manifest's directory.
+    pub init_file: String,
+    /// batch size → gradient artifact name.
+    /// Signature: `(params[d], features[b,F], labels[b]) → (grad[d], loss[])`.
+    pub grad: BTreeMap<usize, String>,
+    /// Evaluation artifact: `(params[d], features[E,F], labels[E]) →
+    /// (correct_flags[E], loss[])`.
+    pub eval: Option<String>,
+    /// Eval artifact's batch size `E`.
+    pub eval_batch: usize,
+    /// Flattened feature dimension `F` fed to the model (or sequence
+    /// length `L` for the LM).
+    pub feature_dim: usize,
+    /// Output classes (or vocab size for the LM).
+    pub num_classes: usize,
+}
+
+impl ModelSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let mut grad = BTreeMap::new();
+        for (k, name) in v.field("grad")?.as_obj()? {
+            grad.insert(
+                k.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad batch size key '{k}'"))?,
+                name.as_str()?.to_string(),
+            );
+        }
+        Ok(Self {
+            dim: v.field("dim")?.as_usize()?,
+            init_file: v.field("init_file")?.as_str()?.to_string(),
+            grad,
+            eval: match v.field_opt("eval") {
+                Some(e) => Some(e.as_str()?.to_string()),
+                None => None,
+            },
+            eval_batch: v
+                .field_opt("eval_batch")
+                .map(|e| e.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            feature_dim: v.field("feature_dim")?.as_usize()?,
+            num_classes: v.field("num_classes")?.as_usize()?,
+        })
+    }
+
+    /// The gradient artifact for batch size `b`.
+    pub fn grad_artifact(&self, b: usize) -> Result<&str> {
+        self.grad.get(&b).map(String::as_str).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no gradient artifact for batch size {b} (available: {:?}); \
+                 re-run `make artifacts` with this batch size added",
+                self.batch_sizes()
+            )
+        })
+    }
+
+    /// Batch sizes with compiled gradient artifacts, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.grad.keys().copied().collect()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {path:?}: {e}\nhint: run `make artifacts` to build the AOT artifacts"
+            )
+        })?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        if let Some(arts) = root.field_opt("artifacts") {
+            for (name, v) in arts.as_obj()? {
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec::from_json(v)
+                        .map_err(|e| anyhow::anyhow!("artifact '{name}': {e}"))?,
+                );
+            }
+        }
+        let mut models = BTreeMap::new();
+        if let Some(ms) = root.field_opt("models") {
+            for (name, v) in ms.as_obj()? {
+                models.insert(
+                    name.clone(),
+                    ModelSpec::from_json(v)
+                        .map_err(|e| anyhow::anyhow!("model '{name}': {e}"))?,
+                );
+            }
+        }
+        let m = Manifest {
+            artifacts,
+            models,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check internal consistency and that referenced files exist.
+    pub fn validate(&self) -> Result<()> {
+        for (name, art) in &self.artifacts {
+            let path = self.dir.join(&art.file);
+            anyhow::ensure!(path.exists(), "artifact '{name}': missing file {path:?}");
+            anyhow::ensure!(art.outputs >= 1, "artifact '{name}': zero outputs");
+            for (i, t) in art.inputs.iter().enumerate() {
+                anyhow::ensure!(
+                    t.dtype == "f32" || t.dtype == "i32",
+                    "artifact '{name}' input {i}: unsupported dtype {}",
+                    t.dtype
+                );
+            }
+        }
+        for (name, model) in &self.models {
+            let init = self.dir.join(&model.init_file);
+            anyhow::ensure!(init.exists(), "model '{name}': missing init file {init:?}");
+            for (b, art) in &model.grad {
+                anyhow::ensure!(
+                    self.artifacts.contains_key(art),
+                    "model '{name}' grad[{b}]: unknown artifact '{art}'"
+                );
+            }
+            if let Some(eval) = &model.eval {
+                anyhow::ensure!(
+                    self.artifacts.contains_key(eval),
+                    "model '{name}': unknown eval artifact '{eval}'"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown model '{name}' (available: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(dir.join("init.f32bin"), 4u32.to_le_bytes()).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "artifacts": {
+                "mlp_grad_b8": {
+                  "file": "m.hlo.txt",
+                  "inputs": [
+                    {"dtype": "f32", "shape": [10]},
+                    {"dtype": "f32", "shape": [8, 4]},
+                    {"dtype": "i32", "shape": [8]}
+                  ],
+                  "outputs": 2
+                }
+              },
+              "models": {
+                "mlp": {
+                  "dim": 10,
+                  "init_file": "init.f32bin",
+                  "grad": {"8": "mlp_grad_b8"},
+                  "eval": null,
+                  "eval_batch": 0,
+                  "feature_dim": 4,
+                  "num_classes": 2
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join("mb_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifact("mlp_grad_b8").unwrap().outputs, 2);
+        assert_eq!(m.artifact("mlp_grad_b8").unwrap().inputs[2].dtype, "i32");
+        let model = m.model("mlp").unwrap();
+        assert_eq!(model.grad_artifact(8).unwrap(), "mlp_grad_b8");
+        assert!(model.grad_artifact(16).is_err());
+        assert_eq!(model.batch_sizes(), vec![8]);
+        assert!(model.eval.is_none());
+        assert!(m.hlo_path("mlp_grad_b8").unwrap().ends_with("m.hlo.txt"));
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn validate_catches_missing_file() {
+        let dir = std::env::temp_dir().join("mb_manifest_test2");
+        write_fixture(&dir);
+        std::fs::remove_file(dir.join("m.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let dir = std::env::temp_dir().join("mb_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "x").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {"a": {"file": "m.hlo.txt",
+                "inputs": [{"dtype": "f64", "shape": [1]}], "outputs": 1}}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,68 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! rust request path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so all PJRT
+//! state lives on one dedicated **compute thread** ([`ComputeServer`]);
+//! the rest of the system talks to it through a cloneable, `Send + Sync`
+//! [`ComputeHandle`] (std-mpsc request queue + tokio-oneshot responses).
+//! This mirrors the paper's testbed anyway: a single accelerator shared by
+//! all simulated workers, requests serialised at the device.
+//!
+//! Artifacts are HLO **text** produced by `python/compile/aot.py`
+//! (serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1 —
+//! see `/opt/xla-example/README.md`), described by
+//! `artifacts/manifest.json` ([`Manifest`]), and compiled on first use
+//! (compilation cache keyed by artifact name).
+
+mod compute;
+mod manifest;
+
+pub use compute::{ArgValue, ComputeHandle, ComputeServer};
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+
+/// Read a raw little-endian f32 binary file (initial parameter vectors).
+pub fn read_f32_bin(path: impl AsRef<std::path::Path>) -> crate::Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", path.as_ref()))?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "f32 bin file {:?} has length {} not divisible by 4",
+        path.as_ref(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("mb_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.f32bin");
+        let values = [1.5f32, -2.25, 0.0, f32::MAX];
+        let mut f = std::fs::File::create(&path).unwrap();
+        for v in values {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        assert_eq!(read_f32_bin(&path).unwrap(), values);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn f32_bin_bad_length_rejected() {
+        let dir = std::env::temp_dir().join("mb_runtime_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.f32bin");
+        std::fs::write(&path, [0u8; 5]).unwrap();
+        assert!(read_f32_bin(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! [`GradMatrix`] — the `n × d` row-major matrix of worker gradients that
+//! every GAR consumes. Rows are worker proposals; `d` is the model
+//! dimension (up to 10⁷ in the Fig. 2 sweep, so the layout is flat and
+//! contiguous, never `Vec<Vec<f32>>`).
+
+use crate::util::Rng64;
+
+/// Row-major `n × d` matrix of gradients (one row per worker).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradMatrix {
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl GradMatrix {
+    /// Zero-filled `n × d` matrix.
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Self {
+            data: vec![0.0; n * d],
+            n,
+            d,
+        }
+    }
+
+    /// Build from a generator `f(row, col)`.
+    pub fn from_fn(n: usize, d: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(n * d);
+        for i in 0..n {
+            for j in 0..d {
+                data.push(f(i, j));
+            }
+        }
+        Self { data, n, d }
+    }
+
+    /// Wrap an existing flat buffer (must be exactly `n*d` long).
+    pub fn from_flat(data: Vec<f32>, n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "from_flat: buffer is not n*d");
+        Self { data, n, d }
+    }
+
+    /// Stack `n` equally-sized row vectors.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        assert!(!rows.is_empty(), "from_rows: no rows");
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "from_rows: ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self {
+            data,
+            n: rows.len(),
+            d,
+        }
+    }
+
+    /// i.i.d. `U(lo, hi)` samples — the Fig. 2 protocol uses `U(0,1)^d`.
+    pub fn uniform(n: usize, d: usize, lo: f32, hi: f32, rng: &mut Rng64) -> Self {
+        let data = (0..n * d).map(|_| rng.gen_range_f32(lo, hi)).collect();
+        Self { data, n, d }
+    }
+
+    /// i.i.d. standard-normal samples scaled by `sigma`.
+    pub fn gaussian(n: usize, d: usize, sigma: f32, rng: &mut Rng64) -> Self {
+        let data = (0..n * d).map(|_| sigma * rng.gaussian()).collect();
+        Self { data, n, d }
+    }
+
+    /// Number of rows (workers).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Row width (model dimension `d`).
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Overwrite row `i`.
+    pub fn set_row(&mut self, i: usize, values: &[f32]) {
+        assert_eq!(values.len(), self.d, "set_row: wrong width");
+        self.row_mut(i).copy_from_slice(values);
+    }
+
+    /// The full flat buffer (row-major).
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat buffer.
+    #[inline]
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_flat(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// New matrix keeping only `rows` (in the given order).
+    pub fn gather_rows(&self, rows: &[usize]) -> Self {
+        let mut data = Vec::with_capacity(rows.len() * self.d);
+        for &r in rows {
+            data.extend_from_slice(self.row(r));
+        }
+        Self {
+            data,
+            n: rows.len(),
+            d: self.d,
+        }
+    }
+
+    /// Column-wise mean of all rows (the averaging GAR's core).
+    pub fn mean_rows(&self) -> Vec<f32> {
+        self.mean_of_rows(&(0..self.n).collect::<Vec<_>>())
+    }
+
+    /// Column-wise mean of a subset of rows.
+    pub fn mean_of_rows(&self, rows: &[usize]) -> Vec<f32> {
+        assert!(!rows.is_empty(), "mean_of_rows: no rows");
+        let mut out = vec![0.0f32; self.d];
+        for &r in rows {
+            super::add_assign(&mut out, self.row(r));
+        }
+        super::scale(&mut out, 1.0 / rows.len() as f32);
+        out
+    }
+
+    /// True if any entry is NaN or infinite.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|v| !v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[test]
+    fn construction_and_views() {
+        let m = GradMatrix::from_fn(3, 4, |i, j| (10 * i + j) as f32);
+        assert_eq!(m.n(), 3);
+        assert_eq!(m.d(), 4);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.flat().len(), 12);
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let m = GradMatrix::from_rows(&rows);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        GradMatrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn gather_and_mean() {
+        let m = GradMatrix::from_fn(4, 2, |i, _| i as f32);
+        let g = m.gather_rows(&[3, 1]);
+        assert_eq!(g.n(), 2);
+        assert_eq!(g.row(0), &[3.0, 3.0]);
+        assert_eq!(m.mean_rows(), vec![1.5, 1.5]);
+        assert_eq!(m.mean_of_rows(&[0, 3]), vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn set_row_and_mut() {
+        let mut m = GradMatrix::zeros(2, 3);
+        m.set_row(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0]);
+        m.row_mut(0)[2] = 9.0;
+        assert_eq!(m.row(0), &[0.0, 0.0, 9.0]);
+    }
+
+    #[test]
+    fn random_in_unit_interval() {
+        let mut rng = Rng64::seed_from_u64(7);
+        let m = GradMatrix::uniform(5, 100, 0.0, 1.0, &mut rng);
+        assert!(m.flat().iter().all(|&v| (0.0..1.0).contains(&v)));
+        let g = GradMatrix::gaussian(3, 50, 2.0, &mut rng);
+        assert!(g.flat().iter().any(|&v| v.abs() > 0.5));
+    }
+
+    #[test]
+    fn non_finite_detection() {
+        let mut m = GradMatrix::zeros(2, 2);
+        assert!(!m.has_non_finite());
+        m.row_mut(0)[1] = f32::NAN;
+        assert!(m.has_non_finite());
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense f32 vector / matrix substrate.
+//!
+//! Everything in the aggregation path operates on flat `&[f32]` slices and
+//! the row-major [`GradMatrix`] (one row per worker gradient). The module
+//! is deliberately dependency-free: the GAR hot loops (pairwise distances,
+//! coordinate-wise selection) are implemented here with cache-tiling and
+//! no per-call allocation, which is what the Fig. 2 benchmarks time.
+
+mod grad_matrix;
+mod ops;
+mod select;
+mod stats;
+
+pub use grad_matrix::GradMatrix;
+pub use ops::{add_assign, axpy, dot, l2_norm, l2_norm_sq, scale, sq_distance, sub};
+pub use select::{
+    argselect_smallest, insertion_sort, median_inplace, select_k_smallest, small_median_sorting,
+};
+pub use stats::{coordinate_median, mean, median_of_buf, std_dev, OnlineStats};

@@ -1,0 +1,158 @@
+//! Element-wise and reduction primitives over `&[f32]`.
+//!
+//! These are the innermost loops of every GAR; they are written so that
+//! rustc/LLVM auto-vectorizes them (simple indexed loops over equal-length
+//! slices, no bounds checks after the initial `assert_eq`).
+
+/// Dot product `⟨a, b⟩`.
+///
+/// Panics if the slices have different lengths.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    // Four-way unrolled accumulation: breaks the sequential FP dependency
+    // chain so LLVM can keep multiple vector accumulators in flight.
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 4..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Squared ℓ2 distance `‖a − b‖²` — the MULTI-KRUM scoring primitive.
+#[inline]
+pub fn sq_distance(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "sq_distance: length mismatch");
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+    }
+    let mut tail = 0f32;
+    for i in chunks * 4..a.len() {
+        let d = a[i] - b[i];
+        tail += d * d;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Squared ℓ2 norm `‖a‖²`.
+#[inline]
+pub fn l2_norm_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// ℓ2 norm `‖a‖`.
+#[inline]
+pub fn l2_norm(a: &[f32]) -> f32 {
+    l2_norm_sq(a).sqrt()
+}
+
+/// `y += alpha * x` (BLAS axpy). The SGD update inner loop.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y += x`.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(x.len(), y.len(), "add_assign: length mismatch");
+    for i in 0..x.len() {
+        y[i] += x[i];
+    }
+}
+
+/// `a *= alpha` in place.
+#[inline]
+pub fn scale(a: &mut [f32], alpha: f32) {
+    for v in a.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// `out = a − b` (allocates).
+#[inline]
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len(), "sub: length mismatch");
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sq_distance_basic() {
+        assert_eq!(sq_distance(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(sq_distance(&[1.0; 7], &[1.0; 7]), 0.0);
+    }
+
+    #[test]
+    fn sq_distance_is_symmetric() {
+        let a: Vec<f32> = (0..57).map(|i| (i as f32).cos()).collect();
+        let b: Vec<f32> = (0..57).map(|i| (i as f32 * 1.3).sin()).collect();
+        assert_eq!(sq_distance(&a, &b), sq_distance(&b, &a));
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(l2_norm_sq(&[3.0, 4.0]), 25.0);
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn sub_basic() {
+        assert_eq!(sub(&[5.0, 7.0], &[2.0, 3.0]), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn dot_length_mismatch_panics() {
+        dot(&[1.0], &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Scalar statistics + coordinate-wise reductions used by the GARs and the
+//! benchmark harnesses (Fig. 2's "mean of the 5 runs closest to the
+//! median" protocol lives on these primitives).
+
+use super::select::median_inplace;
+
+/// Arithmetic mean. Returns 0 for an empty slice.
+pub fn mean(values: &[f32]) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f32>() / values.len() as f32
+}
+
+/// Sample standard deviation (n−1 denominator). Returns 0 for n < 2.
+pub fn std_dev(values: &[f32]) -> f32 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    let var = values.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / (values.len() - 1) as f32;
+    var.sqrt()
+}
+
+/// Median of a slice, averaging the two central elements for even lengths
+/// (the convention of `jnp.median` / `torch.median`-as-used-in-the-paper's
+/// MEDIAN baseline). Copies the input; panics on empty.
+pub fn coordinate_median(values: &[f32]) -> f32 {
+    assert!(!values.is_empty(), "coordinate_median: empty");
+    let mut buf = values.to_vec();
+    median_of_buf(&mut buf)
+}
+
+/// Median over a scratch buffer the caller owns (no allocation); mutates
+/// the buffer. Averages the two central elements for even lengths.
+pub fn median_of_buf(buf: &mut [f32]) -> f32 {
+    let n = buf.len();
+    let lower = median_inplace(buf);
+    if n % 2 == 1 {
+        lower
+    } else {
+        // `median_inplace` partitioned around index (n-1)/2; the upper
+        // median is the min of the right partition.
+        let upper = buf[n / 2..]
+            .iter()
+            .copied()
+            .fold(f32::INFINITY, f32::min);
+        0.5 * (lower + upper)
+    }
+}
+
+/// Welford online mean/variance accumulator — used by the metrics registry
+/// for timing series without storing all samples.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n−1); 0 when n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((std_dev(&[2.0, 4.0]) - std::f32::consts::SQRT_2).abs() < 1e-6);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn median_conventions() {
+        assert_eq!(coordinate_median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(coordinate_median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(coordinate_median(&[7.0]), 7.0);
+        assert_eq!(coordinate_median(&[1.0, 2.0]), 1.5);
+    }
+
+    #[test]
+    fn online_stats_matches_batch() {
+        let xs = [1.0f64, 2.0, 3.0, 4.0, 10.0];
+        let mut st = OnlineStats::new();
+        for &x in &xs {
+            st.push(x);
+        }
+        assert_eq!(st.count(), 5);
+        assert!((st.mean() - 4.0).abs() < 1e-12);
+        let batch_var = xs.iter().map(|x| (x - 4.0).powi(2)).sum::<f64>() / 4.0;
+        assert!((st.variance() - batch_var).abs() < 1e-12);
+        assert_eq!(st.min(), 1.0);
+        assert_eq!(st.max(), 10.0);
+    }
+}

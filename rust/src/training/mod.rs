@@ -1,0 +1,8 @@
+//! Optimizer and learning-rate schedules — the server-side update rule
+//! (Equation 2 of the paper: `x ← x − γ·GAR(G_1..G_n)`).
+
+mod optimizer;
+mod schedule;
+
+pub use optimizer::Sgd;
+pub use schedule::LrSchedule;

@@ -1,0 +1,80 @@
+//! Learning-rate schedules. The paper uses a fixed rate (Fig. 3); the
+//! other schedules support the convergence requirements of Lemma 2
+//! (`Σγ_t = ∞`, `Σγ_t² < ∞` — satisfied by `InvSqrt`/`Inv`) and the
+//! warmup ablations.
+
+/// γ_t as a function of the step index t (0-based).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// γ_t = base (the paper's Fig. 3 protocol).
+    Fixed { base: f32 },
+    /// γ_t = base / (1 + t/decay) — satisfies Lemma 2's conditions.
+    Inv { base: f32, decay: f32 },
+    /// γ_t = base / √(1 + t/decay).
+    InvSqrt { base: f32, decay: f32 },
+    /// Linear warmup over `warmup` steps, then fixed.
+    Warmup { base: f32, warmup: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Fixed { base } => base,
+            LrSchedule::Inv { base, decay } => base / (1.0 + step as f32 / decay),
+            LrSchedule::InvSqrt { base, decay } => base / (1.0 + step as f32 / decay).sqrt(),
+            LrSchedule::Warmup { base, warmup } => {
+                if warmup == 0 || step >= warmup {
+                    base
+                } else {
+                    base * (step + 1) as f32 / warmup as f32
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let s = LrSchedule::Fixed { base: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn inv_decays_harmonically() {
+        let s = LrSchedule::Inv {
+            base: 1.0,
+            decay: 10.0,
+        };
+        assert_eq!(s.at(0), 1.0);
+        assert!((s.at(10) - 0.5).abs() < 1e-6);
+        // Σγ² < ∞ requires γ_t → 0 at least as 1/t.
+        assert!(s.at(10_000) < 2e-3);
+    }
+
+    #[test]
+    fn warmup_ramps_then_holds() {
+        let s = LrSchedule::Warmup {
+            base: 0.2,
+            warmup: 4,
+        };
+        assert!((s.at(0) - 0.05).abs() < 1e-6);
+        assert!((s.at(3) - 0.2).abs() < 1e-6);
+        assert_eq!(s.at(100), 0.2);
+    }
+
+    #[test]
+    fn invsqrt_between_fixed_and_inv() {
+        let f = LrSchedule::Fixed { base: 1.0 };
+        let i = LrSchedule::Inv { base: 1.0, decay: 5.0 };
+        let h = LrSchedule::InvSqrt { base: 1.0, decay: 5.0 };
+        for t in [1usize, 10, 100] {
+            assert!(h.at(t) <= f.at(t));
+            assert!(h.at(t) >= i.at(t));
+        }
+    }
+}

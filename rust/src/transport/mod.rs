@@ -1,0 +1,264 @@
+//! In-process simulated cluster transport.
+//!
+//! The paper's evaluation runs on a single machine; what matters for
+//! Byzantine resilience is the *values* workers send, not the wire. This
+//! module provides the parameter-server ⇄ worker message fabric as
+//! std-mpsc channels between OS threads, with injectable, seeded network
+//! faults (per-message delay and drop) so the coordinator's
+//! timeout/fallback paths are exercised like they would be on a real
+//! deployment (see DESIGN.md §Substitutions).
+//!
+//! Topology: a star. The server holds one [`ServerEndpoint`]; each worker
+//! thread holds a [`WorkerEndpoint`]. Messages to workers carry the
+//! current parameter vector behind an `Arc` (no per-worker copy of a
+//! 10⁷-float model).
+
+use crate::util::Rng64;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server → worker messages.
+#[derive(Debug, Clone)]
+pub enum ToWorker {
+    /// Start round `round`: compute a gradient at `params`.
+    Round { round: u64, params: Arc<Vec<f32>> },
+    /// Terminate the worker thread.
+    Shutdown,
+}
+
+/// Worker → server message: one gradient proposal.
+#[derive(Debug, Clone)]
+pub struct FromWorker {
+    pub worker: usize,
+    pub round: u64,
+    pub gradient: Vec<f32>,
+}
+
+/// Network fault model (applied on the worker → server direction, where a
+/// loss actually affects the round; a server → worker loss manifests the
+/// same way — a missing gradient).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultModel {
+    /// Mean one-way delay, microseconds (jittered U(0.5×, 1.5×)).
+    pub delay_us: u64,
+    /// Per-message drop probability.
+    pub drop_prob: f64,
+    /// Seed for the fault RNG.
+    pub seed: u64,
+}
+
+/// Worker-side handle.
+pub struct WorkerEndpoint {
+    pub id: usize,
+    rx: mpsc::Receiver<ToWorker>,
+    tx: mpsc::Sender<FromWorker>,
+    faults: FaultModel,
+    rng: Rng64,
+}
+
+impl WorkerEndpoint {
+    /// Block until the next instruction from the server (None = channel
+    /// closed, treat as shutdown).
+    pub fn recv(&mut self) -> Option<ToWorker> {
+        self.rx.recv().ok()
+    }
+
+    /// Send a gradient back, subject to the fault model.
+    pub fn send(&mut self, round: u64, gradient: Vec<f32>) {
+        if self.faults.drop_prob > 0.0 && self.rng.gen_bool(self.faults.drop_prob) {
+            return; // dropped on the (simulated) wire
+        }
+        if self.faults.delay_us > 0 {
+            let jitter = self.rng.gen_range_f32(0.5, 1.5);
+            let us = (self.faults.delay_us as f32 * jitter) as u64;
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        let _ = self.tx.send(FromWorker {
+            worker: self.id,
+            round,
+            gradient,
+        });
+    }
+}
+
+/// Server-side handle.
+pub struct ServerEndpoint {
+    to_workers: Vec<mpsc::Sender<ToWorker>>,
+    from_workers: mpsc::Receiver<FromWorker>,
+}
+
+impl ServerEndpoint {
+    /// Broadcast the round-start message to every worker.
+    pub fn broadcast(&self, round: u64, params: Arc<Vec<f32>>) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Round {
+                round,
+                params: Arc::clone(&params),
+            });
+        }
+    }
+
+    /// Tell every worker to stop.
+    pub fn shutdown(&self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+    }
+
+    /// Collect up to `expect` gradients for `round`, or until `timeout`.
+    /// Stale-round messages are discarded. Returns messages in arrival
+    /// order (possibly fewer than `expect` on timeout/drops).
+    pub fn collect(&mut self, round: u64, expect: usize, timeout: Duration) -> Vec<FromWorker> {
+        let mut got = Vec::with_capacity(expect);
+        let deadline = Instant::now() + timeout;
+        while got.len() < expect {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match self.from_workers.recv_timeout(remaining) {
+                Ok(msg) if msg.round == round => got.push(msg),
+                Ok(_stale) => continue,
+                Err(_) => break,
+            }
+        }
+        got
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.to_workers.len()
+    }
+}
+
+/// Build a star topology for `n` workers with the given fault model.
+pub fn star(n: usize, faults: FaultModel) -> (ServerEndpoint, Vec<WorkerEndpoint>) {
+    let (up_tx, up_rx) = mpsc::channel::<FromWorker>();
+    let mut to_workers = Vec::with_capacity(n);
+    let mut endpoints = Vec::with_capacity(n);
+    for id in 0..n {
+        let (down_tx, down_rx) = mpsc::channel::<ToWorker>();
+        to_workers.push(down_tx);
+        endpoints.push(WorkerEndpoint {
+            id,
+            rx: down_rx,
+            tx: up_tx.clone(),
+            faults,
+            rng: Rng64::seed_from_u64(
+                faults
+                    .seed
+                    .wrapping_add(id as u64)
+                    .wrapping_mul(0x9E3779B97F4A7C15),
+            ),
+        });
+    }
+    (
+        ServerEndpoint {
+            to_workers,
+            from_workers: up_rx,
+        },
+        endpoints,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_without_faults() {
+        let (mut server, workers) = star(3, FaultModel::default());
+        for mut w in workers {
+            std::thread::spawn(move || {
+                while let Some(ToWorker::Round { round, params }) = w.recv() {
+                    let g: Vec<f32> = params.iter().map(|p| p + w.id as f32).collect();
+                    w.send(round, g);
+                }
+            });
+        }
+        server.broadcast(1, Arc::new(vec![1.0, 2.0]));
+        let got = server.collect(1, 3, Duration::from_secs(5));
+        assert_eq!(got.len(), 3);
+        let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stale_rounds_are_discarded() {
+        let (mut server, mut workers) = star(1, FaultModel::default());
+        let mut w = workers.pop().unwrap();
+        std::thread::spawn(move || {
+            if let Some(ToWorker::Round { .. }) = w.recv() {
+                w.send(0, vec![9.0]); // stale
+                w.send(1, vec![1.0]);
+            }
+        });
+        server.broadcast(1, Arc::new(vec![0.0]));
+        let got = server.collect(1, 1, Duration::from_secs(5));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].gradient, vec![1.0]);
+    }
+
+    #[test]
+    fn full_drop_hits_timeout() {
+        let faults = FaultModel {
+            drop_prob: 1.0,
+            ..Default::default()
+        };
+        let (mut server, workers) = star(2, faults);
+        for mut w in workers {
+            std::thread::spawn(move || {
+                while let Some(ToWorker::Round { round, .. }) = w.recv() {
+                    w.send(round, vec![1.0]);
+                }
+            });
+        }
+        server.broadcast(7, Arc::new(vec![0.0]));
+        let got = server.collect(7, 2, Duration::from_millis(50));
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn delay_is_applied_but_bounded() {
+        let faults = FaultModel {
+            delay_us: 2_000,
+            ..Default::default()
+        };
+        let (mut server, mut workers) = star(1, faults);
+        let mut w = workers.pop().unwrap();
+        std::thread::spawn(move || {
+            while let Some(ToWorker::Round { round, .. }) = w.recv() {
+                w.send(round, vec![1.0]);
+            }
+        });
+        let t0 = Instant::now();
+        server.broadcast(1, Arc::new(vec![0.0]));
+        let got = server.collect(1, 1, Duration::from_secs(5));
+        assert_eq!(got.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_micros(800));
+        server.shutdown();
+    }
+
+    #[test]
+    fn partial_drop_delivers_some() {
+        let faults = FaultModel {
+            drop_prob: 0.5,
+            seed: 3,
+            ..Default::default()
+        };
+        let (mut server, workers) = star(8, faults);
+        for mut w in workers {
+            std::thread::spawn(move || {
+                while let Some(ToWorker::Round { round, .. }) = w.recv() {
+                    w.send(round, vec![w.id as f32]);
+                }
+            });
+        }
+        server.broadcast(1, Arc::new(vec![0.0]));
+        let got = server.collect(1, 8, Duration::from_millis(200));
+        assert!(!got.is_empty() && got.len() < 8, "got {}", got.len());
+        server.shutdown();
+    }
+}

@@ -1,0 +1,10 @@
+//! In-repo substrates for the offline build environment: a seeded PRNG
+//! (no `rand`), a JSON parser/writer (no `serde_json`) and a small
+//! property-testing helper (no `proptest`). See Cargo.toml for why these
+//! exist in-tree.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use rng::Rng64;

@@ -1,0 +1,82 @@
+//! Mini property-testing harness (the offline environment has no
+//! `proptest`). [`check`] runs a property over `cases` seeded random
+//! inputs and, on failure, reports the failing case's seed so it can be
+//! replayed with [`replay`]. No shrinking — cases are kept small instead.
+
+use super::rng::Rng64;
+
+/// Number of cases for the heavier properties (overridable via the
+/// `MB_PROPTEST_CASES` environment variable).
+pub fn default_cases() -> u64 {
+    std::env::var("MB_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `property(rng, case_index)` for `cases` deterministic cases.
+/// Panics with the failing seed on the first violation.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng64, u64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000_0000 ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng64::seed_from_u64(seed);
+        if let Err(msg) = property(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, mut property: F) -> Result<(), String>
+where
+    F: FnMut(&mut Rng64, u64) -> Result<(), String>,
+{
+    let mut rng = Rng64::seed_from_u64(seed);
+    property(&mut rng, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("trivial", 10, |rng, _| {
+            ran += 1;
+            let v = rng.gen_f32();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {v}"))
+            }
+        });
+        assert_eq!(ran, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_case_zero() {
+        let mut first = None;
+        check("record", 1, |rng, _| {
+            first = Some(rng.next_u64());
+            Ok(())
+        });
+        let seed = 0x5EED_0000_0000_0000u64;
+        replay(seed, |rng, _| {
+            assert_eq!(rng.next_u64(), first.unwrap());
+            Ok(())
+        })
+        .unwrap();
+    }
+}

@@ -1,0 +1,196 @@
+//! Seeded PRNG — xoshiro256++ with a splitmix64 seeder, plus the sampling
+//! helpers the rest of the crate needs (uniform ints/floats, Bernoulli,
+//! Gaussian via Box–Muller). Deterministic across platforms; used for
+//! every seeded protocol in the experiments (Fig. 2's U(0,1)^d gradients,
+//! Fig. 3's seeds 1..5, fault injection, attack noise).
+//!
+//! References: Blackman & Vigna, "Scrambled linear pseudorandom number
+//! generators" (xoshiro256++); Steele et al. (splitmix64).
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+/// splitmix64 step — also exposed for hash-style seed mixing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng64 {
+    /// Seed the full 256-bit state from a u64 via splitmix64.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)`. Panics if `n == 0`. (Lemire-style rejection
+    /// to avoid modulo bias.)
+    pub fn gen_range_usize(&mut self, n: usize) -> usize {
+        assert!(n > 0, "gen_range_usize: empty range");
+        let n = n as u64;
+        // Rejection sampling on the top bits.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform i64 in `[lo, hi]` (inclusive).
+    pub fn gen_range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.gen_range_usize(span as usize) as i64)
+    }
+
+    /// Uniform f32 in `[0, 1)` (24-bit mantissa resolution).
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit resolution).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn gen_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.gen_f32()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self) -> f32 {
+        let u1 = self.gen_f32().max(f32::EPSILON);
+        let u2 = self.gen_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// A new independent generator split off this one (jump-free but
+    /// mixing enough for test/simulation purposes).
+    pub fn split(&mut self) -> Rng64 {
+        Rng64::seed_from_u64(self.next_u64() ^ 0xDEAD_BEEF_CAFE_F00D)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng64::seed_from_u64(42);
+        let mut b = Rng64::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng64::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_f32_in_unit_interval_with_flat_histogram() {
+        let mut rng = Rng64::seed_from_u64(1);
+        let mut buckets = [0u32; 10];
+        for _ in 0..100_000 {
+            let v = rng.gen_f32();
+            assert!((0.0..1.0).contains(&v));
+            buckets[(v * 10.0) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((8_500..11_500).contains(&b), "bucket count {b}");
+        }
+    }
+
+    #[test]
+    fn gen_range_usize_unbiased_at_small_n() {
+        let mut rng = Rng64::seed_from_u64(5);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.gen_range_usize(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((9_300..10_700).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn gen_range_i64_inclusive_bounds() {
+        let mut rng = Rng64::seed_from_u64(9);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..10_000 {
+            let v = rng.gen_range_i64(-3, 3);
+            assert!((-3..=3).contains(&v));
+            saw_lo |= v == -3;
+            saw_hi |= v == 3;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng64::seed_from_u64(11);
+        let samples: Vec<f32> = (0..50_000).map(|_| rng.gaussian()).collect();
+        let mean = samples.iter().sum::<f32>() / samples.len() as f32;
+        let var = samples.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+            / (samples.len() - 1) as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Rng64::seed_from_u64(2);
+        let hits = (0..100_000).filter(|_| rng.gen_bool(0.25)).count();
+        assert!((24_000..26_000).contains(&hits), "hits {hits}");
+    }
+
+    #[test]
+    fn split_streams_are_independent_enough() {
+        let mut base = Rng64::seed_from_u64(7);
+        let mut a = base.split();
+        let mut b = base.split();
+        let same = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,289 @@
+//! Worker runtime: the processes that compute gradient proposals.
+//!
+//! An honest worker receives the current parameters, samples a minibatch
+//! from **its own shard** of the training data, computes the gradient and
+//! sends it back (the parameter-server recipe of the paper's §I). The
+//! gradient computation is either the rust-native quadratic problem (tests
+//! and fast ablations) or an AOT-compiled JAX model executed through the
+//! PJRT compute thread ([`GradSource::Artifact`]).
+//!
+//! Byzantine workers are *not* simulated as independent threads: the
+//! paper's threat model is an omniscient coalition that observes every
+//! correct gradient before choosing its own (§II-C). The coordinator
+//! therefore collects the `n − f` honest gradients and lets the
+//! [`crate::attacks::Attack`] forge the remaining `f` rows with full
+//! knowledge — the strongest adversary the GARs must survive.
+
+use crate::data::{shard_indices, Batch, FashionLike, QuadraticProblem, TokenStream, IMAGE_DIM};
+use crate::runtime::{ArgValue, ComputeHandle};
+use crate::transport::{ToWorker, WorkerEndpoint};
+use crate::util::Rng64;
+use crate::Result;
+use std::sync::Arc;
+
+/// Where a worker's gradients come from.
+pub enum GradSource {
+    /// Rust-native synthetic quadratic problem (exact oracle available).
+    Quadratic {
+        problem: Arc<QuadraticProblem>,
+        worker_id: usize,
+        batch_size: usize,
+    },
+    /// AOT classifier artifact over a FashionLike shard.
+    Artifact {
+        handle: ComputeHandle,
+        /// Gradient artifact name (fixed batch size baked in).
+        artifact: String,
+        dataset: Arc<FashionLike>,
+        /// This worker's shard id and total shard count.
+        shard: usize,
+        num_shards: usize,
+        batch_size: usize,
+        rng: Rng64,
+    },
+    /// AOT language-model artifact over a TokenStream shard.
+    Lm {
+        handle: ComputeHandle,
+        artifact: String,
+        stream: Arc<TokenStream>,
+        seq_len: usize,
+        shard: usize,
+        num_shards: usize,
+        batch_size: usize,
+        rng: Rng64,
+    },
+}
+
+impl GradSource {
+    /// Compute `(gradient, minibatch_loss)` at `params` for round `round`.
+    pub fn gradient(&mut self, params: &[f32], round: u64) -> Result<(Vec<f32>, f32)> {
+        match self {
+            GradSource::Quadratic {
+                problem,
+                worker_id,
+                batch_size,
+            } => {
+                // Seed mixes (round, worker) so workers draw independent
+                // minibatches each round, deterministically.
+                let seed = round
+                    .wrapping_mul(0x517C_C1B7_2722_0A95)
+                    .wrapping_add(*worker_id as u64);
+                let g = problem.stochastic_gradient(params, *batch_size, seed);
+                let loss = problem.loss(params);
+                Ok((g, loss))
+            }
+            GradSource::Artifact {
+                handle,
+                artifact,
+                dataset,
+                shard,
+                num_shards,
+                batch_size,
+                rng,
+            } => {
+                // Sample batch_size indices uniformly from this shard.
+                let shard_size =
+                    crate::data::shard_len(dataset.train_len(), *shard, *num_shards);
+                anyhow::ensure!(shard_size > 0, "worker shard is empty");
+                let all: Vec<usize> =
+                    shard_indices(dataset.train_len(), *shard, *num_shards).collect();
+                let picked: Vec<usize> = (0..*batch_size)
+                    .map(|_| all[rng.gen_range_usize(shard_size)])
+                    .collect();
+                let mut batch = Batch::new(*batch_size, IMAGE_DIM);
+                dataset.fill_batch(0, &picked, &mut batch);
+                let out = handle.execute(
+                    artifact,
+                    vec![
+                        ArgValue::f32_vec(params.to_vec()),
+                        ArgValue::F32(batch.features, vec![*batch_size, IMAGE_DIM]),
+                        ArgValue::I32(batch.labels, vec![*batch_size]),
+                    ],
+                )?;
+                let grad = out
+                    .first()
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("grad artifact returned no outputs"))?;
+                let loss = out
+                    .get(1)
+                    .and_then(|l| l.first().copied())
+                    .unwrap_or(f32::NAN);
+                Ok((grad, loss))
+            }
+            GradSource::Lm {
+                handle,
+                artifact,
+                stream,
+                seq_len,
+                shard,
+                num_shards,
+                batch_size,
+                rng,
+            } => {
+                let b = *batch_size;
+                let l = *seq_len;
+                let mut tokens = Vec::with_capacity(b * l);
+                let mut targets = Vec::with_capacity(b * l);
+                for _ in 0..b {
+                    // Stream ids partitioned by shard: id ≡ shard (mod k).
+                    let base = rng.next_u64() >> 1; // keep MSB clear (eval ids)
+                    let sid = base
+                        .wrapping_mul(*num_shards as u64)
+                        .wrapping_add(*shard as u64)
+                        & 0x7FFF_FFFF_FFFF_FFFF;
+                    let (inp, tgt) = stream.sequence(sid, l);
+                    tokens.extend(inp);
+                    targets.extend(tgt);
+                }
+                let out = handle.execute(
+                    artifact,
+                    vec![
+                        ArgValue::f32_vec(params.to_vec()),
+                        ArgValue::I32(tokens, vec![b, l]),
+                        ArgValue::I32(targets, vec![b, l]),
+                    ],
+                )?;
+                let grad = out
+                    .first()
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("lm grad artifact returned no outputs"))?;
+                let loss = out
+                    .get(1)
+                    .and_then(|o| o.first().copied())
+                    .unwrap_or(f32::NAN);
+                Ok((grad, loss))
+            }
+        }
+    }
+
+    /// Quadratic source shortcut used throughout the tests.
+    pub fn quadratic(problem: Arc<QuadraticProblem>, worker_id: usize, batch_size: usize) -> Self {
+        GradSource::Quadratic {
+            problem,
+            worker_id,
+            batch_size,
+        }
+    }
+
+    /// Seeded classifier-artifact source.
+    #[allow(clippy::too_many_arguments)]
+    pub fn artifact(
+        handle: ComputeHandle,
+        artifact: String,
+        dataset: Arc<FashionLike>,
+        shard: usize,
+        num_shards: usize,
+        batch_size: usize,
+        seed: u64,
+    ) -> Self {
+        GradSource::Artifact {
+            handle,
+            artifact,
+            dataset,
+            shard,
+            num_shards,
+            batch_size,
+            rng: Rng64::seed_from_u64(seed ^ ((shard as u64) << 17)),
+        }
+    }
+
+    /// Seeded LM-artifact source.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lm(
+        handle: ComputeHandle,
+        artifact: String,
+        stream: Arc<TokenStream>,
+        seq_len: usize,
+        shard: usize,
+        num_shards: usize,
+        batch_size: usize,
+        seed: u64,
+    ) -> Self {
+        GradSource::Lm {
+            handle,
+            artifact,
+            stream,
+            seq_len,
+            shard,
+            num_shards,
+            batch_size,
+            rng: Rng64::seed_from_u64(seed ^ ((shard as u64) << 21) ^ 0x1111),
+        }
+    }
+}
+
+/// The honest worker loop: answer every round until shutdown. Run this on
+/// a dedicated thread per worker.
+pub fn run_worker(mut endpoint: WorkerEndpoint, mut source: GradSource) {
+    while let Some(msg) = endpoint.recv() {
+        match msg {
+            ToWorker::Round { round, params } => {
+                match source.gradient(&params, round) {
+                    Ok((grad, _loss)) => endpoint.send(round, grad),
+                    // A failed computation is indistinguishable from a
+                    // crashed worker: stay silent, let the server's
+                    // timeout path handle it.
+                    Err(_) => {}
+                }
+            }
+            ToWorker::Shutdown => break,
+        }
+    }
+}
+
+/// Spawn `run_worker` threads for a set of endpoints and sources.
+pub fn spawn_workers(
+    pairs: Vec<(WorkerEndpoint, GradSource)>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    pairs
+        .into_iter()
+        .map(|(ep, src)| {
+            std::thread::Builder::new()
+                .name(format!("worker-{}", ep.id))
+                .spawn(move || run_worker(ep, src))
+                .expect("spawning worker thread")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{star, FaultModel};
+    use std::time::Duration;
+
+    #[test]
+    fn quadratic_source_round_trip() {
+        let problem = Arc::new(QuadraticProblem::new(16, 0.1, 3));
+        let (mut server, workers) = star(2, FaultModel::default());
+        let pairs = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
+            .collect();
+        let _threads = spawn_workers(pairs);
+        let params = Arc::new(vec![0.5f32; 16]);
+        server.broadcast(1, Arc::clone(&params));
+        let got = server.collect(1, 2, Duration::from_secs(5));
+        assert_eq!(got.len(), 2);
+        for msg in &got {
+            assert_eq!(msg.gradient.len(), 16);
+            assert!(msg.gradient.iter().all(|v| v.is_finite()));
+        }
+        // Different workers draw different minibatches.
+        assert_ne!(got[0].gradient, got[1].gradient);
+        server.shutdown();
+    }
+
+    #[test]
+    fn worker_gradients_are_deterministic_per_round() {
+        let problem = Arc::new(QuadraticProblem::new(8, 0.2, 9));
+        let mut src = GradSource::quadratic(Arc::clone(&problem), 0, 4);
+        let p = vec![0.1f32; 8];
+        let (g1, _) = src.gradient(&p, 5).unwrap();
+        let (g2, _) = src.gradient(&p, 5).unwrap();
+        let (g3, _) = src.gradient(&p, 6).unwrap();
+        assert_eq!(g1, g2);
+        assert_ne!(g1, g3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Integration tests over the AOT artifacts: the three-implementation
+//! cross-check (jnp oracle ↔ Pallas/JAX HLO graph ↔ native rust) and the
+//! full training loop through PJRT.
+//!
+//! These tests need `make artifacts` to have run; they self-skip (with a
+//! loud message) when `artifacts/manifest.json` is absent so the pure-rust
+//! suite stays green in a fresh checkout.
+
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::launch;
+use multibulyan::gar::GarKind;
+use multibulyan::runtime::{ArgValue, ComputeServer, Manifest};
+use multibulyan::tensor::GradMatrix;
+use multibulyan::util::Rng64;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built — run `make artifacts` first");
+            None
+        }
+    }
+}
+
+/// Native rust GAR vs the AOT-lowered JAX/Pallas GAR graph, on random
+/// inputs — the strongest end-to-end correctness signal in the repo.
+#[test]
+fn native_gar_matches_aot_artifact() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let server = ComputeServer::start(manifest.clone()).unwrap();
+    let handle = server.handle();
+    let (n, f, d) = (11usize, 2usize, 1024usize);
+    let mut rng = Rng64::seed_from_u64(0xC0DE);
+    for (rule, kind) in [
+        ("average", GarKind::Average),
+        ("median", GarKind::Median),
+        ("krum", GarKind::Krum),
+        ("multi_krum", GarKind::MultiKrum),
+        ("bulyan", GarKind::Bulyan),
+        ("multi_bulyan", GarKind::MultiBulyan),
+    ] {
+        let artifact = format!("gar_{rule}_n{n}_f{f}_d{d}");
+        if !manifest.artifacts.contains_key(&artifact) {
+            eprintln!("SKIP {artifact}: not in manifest");
+            continue;
+        }
+        for trial in 0..3 {
+            let grads = GradMatrix::uniform(n, d, -1.0, 1.0, &mut rng);
+            let native = kind
+                .instantiate(n, f)
+                .unwrap()
+                .aggregate(&grads)
+                .unwrap();
+            let out = handle
+                .execute(
+                    &artifact,
+                    vec![ArgValue::F32(grads.flat().to_vec(), vec![n, d])],
+                )
+                .unwrap();
+            let aot = &out[0];
+            assert_eq!(aot.len(), d, "{artifact}");
+            let mut max_err = 0.0f32;
+            for (a, b) in native.iter().zip(aot) {
+                max_err = max_err.max((a - b).abs() / (1.0 + a.abs()));
+            }
+            assert!(
+                max_err < 1e-4,
+                "{artifact} trial {trial}: native vs AOT max rel err {max_err}"
+            );
+        }
+        println!("cross-check OK: {artifact}");
+    }
+}
+
+/// Native SGD+momentum vs the fused Pallas `sgd_d1024` artifact.
+#[test]
+fn native_sgd_matches_aot_kernel() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    if !manifest.artifacts.contains_key("sgd_d1024") {
+        eprintln!("SKIP: sgd_d1024 not in manifest");
+        return;
+    }
+    let server = ComputeServer::start(manifest).unwrap();
+    let handle = server.handle();
+    let d = 1024usize;
+    let mut rng = Rng64::seed_from_u64(7);
+    let params: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+    let grad: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+    let (lr, mu) = (0.1f32, 0.9f32);
+
+    // Native: two steps.
+    let mut native_p = params.clone();
+    let mut opt = multibulyan::training::Sgd::new(d, lr, mu).unwrap();
+    opt.step(&mut native_p, &grad);
+    opt.step(&mut native_p, &grad);
+
+    // Artifact: two steps threading velocity through.
+    let mut p = params;
+    let mut v = vec![0.0f32; d];
+    for _ in 0..2 {
+        let out = handle
+            .execute(
+                "sgd_d1024",
+                vec![
+                    ArgValue::f32_vec(p.clone()),
+                    ArgValue::f32_vec(v.clone()),
+                    ArgValue::f32_vec(grad.clone()),
+                    ArgValue::F32(vec![lr], vec![1]),
+                    ArgValue::F32(vec![mu], vec![1]),
+                ],
+            )
+            .unwrap();
+        p = out[0].clone();
+        v = out[1].clone();
+    }
+    for (a, b) in native_p.iter().zip(&p) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+}
+
+/// Full distributed training through PJRT: the MLP artifact must learn
+/// the FashionLike task under MULTI-BULYAN with a live attack.
+#[test]
+fn training_through_pjrt_learns_under_attack() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    if manifest.model("mlp").is_err() {
+        eprintln!("SKIP: mlp model not in manifest");
+        return;
+    }
+    let server = ComputeServer::start(manifest.clone()).unwrap();
+    let exp = ExperimentConfig {
+        cluster: ClusterConfig {
+            n: 11,
+            f: 2,
+            actual_byzantine: Some(2),
+            net_delay_us: 0,
+            drop_prob: 0.0,
+            round_timeout_ms: 60_000,
+        },
+        gar: GarKind::MultiBulyan,
+        attack: multibulyan::attacks::AttackKind::SignFlip { scale: 1.0 },
+        model: ModelConfig::Artifact {
+            name: "mlp".into(),
+            dir: "artifacts".into(),
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.9,
+            steps: 25,
+            batch_size: 25,
+            eval_every: 0,
+            seed: 1,
+        },
+        output_dir: None,
+    };
+    let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut evaluator = cluster.evaluator;
+    coordinator.train(25, 0, &mut evaluator).unwrap();
+    let acc = coordinator.metrics.max_accuracy();
+    coordinator.shutdown();
+    assert!(
+        acc > 0.5,
+        "MLP under multi-bulyan + sign-flip should beat 50% top-1 in 25 steps, got {acc}"
+    );
+}

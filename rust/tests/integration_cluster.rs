@@ -1,0 +1,189 @@
+//! Cluster-level integration tests on the rust-native workload: every
+//! GAR × every attack round-trips through the full coordinator/transport/
+//! worker stack, fault injection works, and the headline resilience
+//! claims hold end-to-end.
+
+use multibulyan::attacks::AttackKind;
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::launch;
+use multibulyan::gar::GarKind;
+
+fn quadratic_exp(
+    gar: GarKind,
+    attack: AttackKind,
+    n: usize,
+    f: usize,
+    steps: usize,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        cluster: ClusterConfig {
+            n,
+            f: if gar == GarKind::Average { 0 } else { f },
+            actual_byzantine: Some(if attack == AttackKind::None { 0 } else { f }),
+            net_delay_us: 0,
+            drop_prob: 0.0,
+            round_timeout_ms: 60_000,
+        },
+        gar,
+        attack,
+        model: ModelConfig::Quadratic {
+            dim: 128,
+            noise: 0.3,
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.0,
+            steps,
+            batch_size: 8,
+            eval_every: 0,
+            seed: 5,
+        },
+        output_dir: None,
+    }
+}
+
+fn final_loss(exp: &ExperimentConfig) -> f32 {
+    let cluster = launch(exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut evaluator = cluster.evaluator;
+    coordinator
+        .train(exp.train.steps, 0, &mut evaluator)
+        .unwrap();
+    let loss = coordinator.metrics.final_loss().unwrap();
+    coordinator.shutdown();
+    loss
+}
+
+#[test]
+fn every_gar_converges_without_attack() {
+    for kind in GarKind::ALL {
+        let exp = quadratic_exp(kind, AttackKind::None, 11, 2, 250);
+        let loss = final_loss(&exp);
+        assert!(loss < 5e-3, "{kind}: clean final loss {loss}");
+    }
+}
+
+#[test]
+fn resilient_gars_survive_every_attack() {
+    for kind in [
+        GarKind::Krum,
+        GarKind::MultiKrum,
+        GarKind::Median,
+        GarKind::TrimmedMean,
+        GarKind::Bulyan,
+        GarKind::MultiBulyan,
+    ] {
+        for attack in AttackKind::gauntlet() {
+            let exp = quadratic_exp(kind, attack, 11, 2, 250);
+            let loss = final_loss(&exp);
+            assert!(
+                loss.is_finite() && loss < 0.05,
+                "{kind} under {}: final loss {loss}",
+                attack.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn averaging_breaks_under_value_attacks() {
+    for attack in [
+        AttackKind::SignFlip { scale: 10.0 },
+        AttackKind::Infinity { nan: false },
+        AttackKind::RandomGauss { scale: 100.0 },
+    ] {
+        let exp = quadratic_exp(GarKind::Average, attack, 11, 2, 100);
+        let loss = final_loss(&exp);
+        assert!(
+            !loss.is_finite() || loss > 0.05,
+            "averaging unexpectedly survived {}: {loss}",
+            attack.label()
+        );
+    }
+}
+
+#[test]
+fn training_tolerates_network_faults() {
+    // 10% drop probability: rounds proceed via the last-known-gradient
+    // fallback and training still converges.
+    let mut exp = quadratic_exp(GarKind::MultiKrum, AttackKind::None, 7, 1, 300);
+    exp.cluster.drop_prob = 0.10;
+    exp.cluster.net_delay_us = 20;
+    // Short straggler timeout: a dropped gradient must cost ~ms, not the
+    // default 60 s production timeout.
+    exp.cluster.round_timeout_ms = 20;
+    let cluster = launch(&exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut evaluator = cluster.evaluator;
+    coordinator.train(300, 0, &mut evaluator).unwrap();
+    let loss = coordinator.metrics.final_loss().unwrap();
+    let missing = coordinator.metrics.counter("gradients_missing");
+    coordinator.shutdown();
+    assert!(missing > 0, "fault injection produced no missing gradients");
+    assert!(loss < 5e-3, "faulty-network final loss {loss}");
+}
+
+#[test]
+fn over_contract_byzantines_break_weak_rules() {
+    // Violating the contract (actual byzantine > f declared) must be
+    // able to break even resilient rules — the (n, f) contract of
+    // §II-C-c is meaningful.
+    let mut exp = quadratic_exp(
+        GarKind::Krum,
+        AttackKind::LittleIsEnough { z: Some(2.0) },
+        11,
+        2,
+        150,
+    );
+    exp.cluster.actual_byzantine = Some(6); // majority coalition
+    let loss = final_loss(&exp);
+    assert!(
+        loss > 1e-3,
+        "krum with a majority coalition should not fully converge: {loss}"
+    );
+}
+
+#[test]
+fn seeded_runs_are_reproducible() {
+    let exp = quadratic_exp(GarKind::MultiBulyan, AttackKind::LittleIsEnough { z: None }, 11, 2, 40);
+    let a = final_loss(&exp);
+    let b = final_loss(&exp);
+    assert_eq!(a, b, "same seed must give bit-identical runs");
+    let mut exp2 = exp.clone();
+    exp2.train.seed = 6;
+    let c = final_loss(&exp2);
+    assert_ne!(a, c, "different seeds should differ");
+}
+
+#[test]
+fn config_file_round_trip_drives_training() {
+    let dir = std::env::temp_dir().join("mb_cluster_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+        gar = "multi-bulyan"
+        attack = "sign-flip"
+        [cluster]
+        n = 11
+        f = 2
+        [model]
+        kind = "quadratic"
+        dim = 64
+        noise = 0.2
+        [train]
+        steps = 60
+        batch_size = 8
+        momentum = 0.0
+        learning_rate = 0.1
+        eval_every = 0
+        seed = 2
+        "#,
+    )
+    .unwrap();
+    let exp = ExperimentConfig::from_path(&path).unwrap();
+    let loss = final_loss(&exp);
+    assert!(loss < 0.05, "config-driven run final loss {loss}");
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,249 @@
+//! Property-based tests on GAR invariants (in-repo harness —
+//! `multibulyan::util::proptest`; see Cargo.toml for why).
+//!
+//! The invariants are the algebraic facts the paper's proofs lean on:
+//! permutation invariance (a GAR cannot depend on worker identity),
+//! translation/scale equivariance (distances and medians commute with
+//! affine maps), convex-hull confinement per coordinate for the median
+//! family, and the resilience contracts under adversarial rows.
+
+use multibulyan::gar::{Gar, GarKind, GarScratch};
+use multibulyan::tensor::GradMatrix;
+use multibulyan::util::proptest::{check, default_cases};
+use multibulyan::util::Rng64;
+
+const N: usize = 11;
+const F: usize = 2;
+
+fn random_grads(rng: &mut Rng64, n: usize, d: usize, scale: f32) -> GradMatrix {
+    GradMatrix::from_fn(n, d, |_, _| scale * rng.gaussian())
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs();
+        let bound = tol * (1.0 + x.abs().max(y.abs()));
+        if err > bound {
+            return Err(format!("coord {i}: {x} vs {y} (err {err})"));
+        }
+    }
+    Ok(())
+}
+
+/// Fisher–Yates shuffle of row indices.
+fn shuffled_rows(rng: &mut Rng64, n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = rng.gen_range_usize(i + 1);
+        idx.swap(i, j);
+    }
+    idx
+}
+
+#[test]
+fn permutation_invariance() {
+    // Every rule must return the same aggregate when workers are
+    // re-ordered (ties are measure-zero for gaussian inputs).
+    for kind in GarKind::ALL {
+        check(&format!("perm-invariance/{kind}"), default_cases(), |rng, _| {
+            let d = 1 + rng.gen_range_usize(64);
+            let grads = random_grads(rng, N, d, 1.0);
+            let perm = shuffled_rows(rng, N);
+            let shuffled = grads.gather_rows(&perm);
+            let gar = kind.instantiate(N, F).unwrap();
+            let a = gar.aggregate(&grads).map_err(|e| e.to_string())?;
+            let b = gar.aggregate(&shuffled).map_err(|e| e.to_string())?;
+            assert_close(&a, &b, 1e-4)
+        });
+    }
+}
+
+#[test]
+fn translation_equivariance() {
+    // GAR(G + c·1) = GAR(G) + c for every rule: distances and
+    // per-coordinate order statistics are translation invariant.
+    for kind in GarKind::ALL {
+        check(&format!("translation/{kind}"), default_cases(), |rng, _| {
+            let d = 1 + rng.gen_range_usize(48);
+            let grads = random_grads(rng, N, d, 1.0);
+            let shift = rng.gen_range_f32(-5.0, 5.0);
+            let mut shifted = grads.clone();
+            for v in shifted.flat_mut() {
+                *v += shift;
+            }
+            let gar = kind.instantiate(N, F).unwrap();
+            let a = gar.aggregate(&grads).map_err(|e| e.to_string())?;
+            let b = gar.aggregate(&shifted).map_err(|e| e.to_string())?;
+            let a_shift: Vec<f32> = a.iter().map(|v| v + shift).collect();
+            assert_close(&a_shift, &b, 2e-3)
+        });
+    }
+}
+
+#[test]
+fn scale_equivariance() {
+    // GAR(a·G) = a·GAR(G) for positive a.
+    for kind in GarKind::ALL {
+        check(&format!("scale/{kind}"), default_cases(), |rng, _| {
+            let d = 1 + rng.gen_range_usize(48);
+            let grads = random_grads(rng, N, d, 1.0);
+            let a = rng.gen_range_f32(0.1, 4.0);
+            let mut scaled = grads.clone();
+            for v in scaled.flat_mut() {
+                *v *= a;
+            }
+            let gar = kind.instantiate(N, F).unwrap();
+            let base = gar.aggregate(&grads).map_err(|e| e.to_string())?;
+            let got = gar.aggregate(&scaled).map_err(|e| e.to_string())?;
+            let want: Vec<f32> = base.iter().map(|v| v * a).collect();
+            assert_close(&want, &got, 2e-3)
+        });
+    }
+}
+
+#[test]
+fn coordinatewise_rules_stay_in_convex_hull() {
+    // Median / trimmed-mean / bulyan-family outputs lie within the
+    // per-coordinate min/max of ALL inputs (and of the correct inputs
+    // when f rows are wild — checked in resilience tests).
+    for kind in [
+        GarKind::Median,
+        GarKind::TrimmedMean,
+        GarKind::Bulyan,
+        GarKind::MultiBulyan,
+        GarKind::Average,
+        GarKind::MultiKrum,
+        GarKind::Krum,
+    ] {
+        check(&format!("hull/{kind}"), default_cases(), |rng, _| {
+            let d = 1 + rng.gen_range_usize(32);
+            let grads = random_grads(rng, N, d, 2.0);
+            let gar = kind.instantiate(N, F).unwrap();
+            let out = gar.aggregate(&grads).map_err(|e| e.to_string())?;
+            for j in 0..d {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for i in 0..N {
+                    lo = lo.min(grads.row(i)[j]);
+                    hi = hi.max(grads.row(i)[j]);
+                }
+                if out[j] < lo - 1e-4 || out[j] > hi + 1e-4 {
+                    return Err(format!(
+                        "coord {j}: {} outside [{lo}, {hi}]",
+                        out[j]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn strong_rules_confined_by_correct_rows_under_wild_byzantines() {
+    // With f wild rows, BULYAN-family outputs stay inside the correct
+    // rows' per-coordinate range — the strong-resilience hull property.
+    for kind in [GarKind::Bulyan, GarKind::MultiBulyan, GarKind::Median, GarKind::TrimmedMean] {
+        check(&format!("byz-hull/{kind}"), default_cases(), |rng, _| {
+            let d = 1 + rng.gen_range_usize(32);
+            let mut grads = random_grads(rng, N, d, 1.0);
+            let magnitude = 10f32.powf(rng.gen_range_f32(2.0, 8.0));
+            for b in 0..F {
+                let sign = if b % 2 == 0 { 1.0 } else { -1.0 };
+                grads.row_mut(N - 1 - b).iter_mut().for_each(|v| *v = sign * magnitude);
+            }
+            let gar = kind.instantiate(N, F).unwrap();
+            let out = gar.aggregate(&grads).map_err(|e| e.to_string())?;
+            for j in 0..d {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for i in 0..N - F {
+                    lo = lo.min(grads.row(i)[j]);
+                    hi = hi.max(grads.row(i)[j]);
+                }
+                if out[j] < lo - 1e-3 || out[j] > hi + 1e-3 {
+                    return Err(format!(
+                        "coord {j}: {} escaped correct hull [{lo}, {hi}]",
+                        out[j]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn krum_family_returns_a_correct_row_under_wild_byzantines() {
+    // KRUM's output must be one of the correct gradients when the f
+    // Byzantine rows are far away; MULTI-KRUM's must be an average of
+    // correct rows (hence inside their hull).
+    check("krum-selects-correct", default_cases(), |rng, _| {
+        let d = 2 + rng.gen_range_usize(32);
+        let mut grads = random_grads(rng, N, d, 0.5);
+        for b in 0..F {
+            grads
+                .row_mut(N - 1 - b)
+                .iter_mut()
+                .for_each(|v| *v = 1e6 + *v);
+        }
+        let krum = GarKind::Krum.instantiate(N, F).unwrap();
+        let out = krum.aggregate(&grads).map_err(|e| e.to_string())?;
+        let is_correct_row = (0..N - F).any(|i| {
+            grads
+                .row(i)
+                .iter()
+                .zip(&out)
+                .all(|(a, b)| (a - b).abs() < 1e-6)
+        });
+        if !is_correct_row {
+            return Err("krum output is not a correct worker's row".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scratch_reuse_is_deterministic() {
+    // Repeated aggregation with a shared scratch must be bit-identical —
+    // a regression guard on buffer-reuse bugs.
+    for kind in GarKind::ALL {
+        check(&format!("scratch/{kind}"), 16, |rng, _| {
+            let d = 1 + rng.gen_range_usize(64);
+            let grads = random_grads(rng, N, d, 1.0);
+            let gar = kind.instantiate(N, F).unwrap();
+            let mut scratch = GarScratch::new();
+            let mut out1 = vec![0.0; d];
+            let mut out2 = vec![0.0; d];
+            gar.aggregate_with_scratch(&grads, &mut out1, &mut scratch)
+                .map_err(|e| e.to_string())?;
+            // Interleave a different-shaped call to stress buffer resize.
+            let other = random_grads(rng, N, (d / 2).max(1), 1.0);
+            let mut tmp = vec![0.0; other.d()];
+            gar.aggregate_with_scratch(&other, &mut tmp, &mut scratch)
+                .map_err(|e| e.to_string())?;
+            gar.aggregate_with_scratch(&grads, &mut out2, &mut scratch)
+                .map_err(|e| e.to_string())?;
+            if out1 != out2 {
+                return Err("scratch reuse changed the result".into());
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn gradients_used_matches_theory() {
+    // m̃ accounting used by the slowdown analysis.
+    let cases: Vec<(GarKind, usize)> = vec![
+        (GarKind::Average, N),
+        (GarKind::Median, 1),
+        (GarKind::Krum, 1),
+        (GarKind::MultiKrum, N - F - 2),
+        (GarKind::Bulyan, N - 2 * F - 2 - 2 * F),
+        (GarKind::MultiBulyan, N - 2 * F - 2),
+        (GarKind::TrimmedMean, N - 2 * F),
+    ];
+    for (kind, want) in cases {
+        let gar = kind.instantiate(N, F).unwrap();
+        assert_eq!(gar.gradients_used(), want, "{kind}");
+    }
+}

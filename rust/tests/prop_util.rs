@@ -1,0 +1,176 @@
+//! Property tests for the in-repo substrates (JSON parser, config
+//! parser, PRNG, selection primitives) — the code everything else trusts.
+
+use multibulyan::tensor::{argselect_smallest, coordinate_median, select_k_smallest};
+use multibulyan::util::json::Json;
+use multibulyan::util::proptest::{check, default_cases};
+use multibulyan::util::Rng64;
+
+/// Generate a random JSON value of bounded depth.
+fn random_json(rng: &mut Rng64, depth: usize) -> Json {
+    let choice = if depth == 0 {
+        rng.gen_range_usize(4)
+    } else {
+        rng.gen_range_usize(6)
+    };
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(rng.gen_bool(0.5)),
+        2 => {
+            // Integers round-trip exactly; that's what manifests use.
+            Json::Num(rng.gen_range_i64(-1_000_000, 1_000_000) as f64)
+        }
+        3 => {
+            let len = rng.gen_range_usize(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    // Mix of ASCII, escapes and multibyte.
+                    match rng.gen_range_usize(6) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => 'π',
+                        4 => char::from(b'a' + rng.gen_range_usize(26) as u8),
+                        _ => char::from(b'0' + rng.gen_range_usize(10) as u8),
+                    }
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let len = rng.gen_range_usize(4);
+            Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.gen_range_usize(4);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..len {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn json_roundtrip_random_documents() {
+    check("json-roundtrip", default_cases() * 4, |rng, _| {
+        let doc = random_json(rng, 3);
+        let text = doc.to_string_compact();
+        let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+        if back != doc {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    check("json-no-panic", default_cases() * 4, |rng, _| {
+        let len = rng.gen_range_usize(40);
+        let garbage: String = (0..len)
+            .map(|_| {
+                let pool = b"{}[]\",:0123456789truefalsenul \\\n";
+                char::from(pool[rng.gen_range_usize(pool.len())])
+            })
+            .collect();
+        // Must return Ok or Err, never panic.
+        let _ = Json::parse(&garbage);
+        Ok(())
+    });
+}
+
+#[test]
+fn argselect_agrees_with_full_sort() {
+    check("argselect-vs-sort", default_cases() * 2, |rng, _| {
+        let n = 1 + rng.gen_range_usize(40);
+        let k = rng.gen_range_usize(n + 1);
+        let scores: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+        let picked = argselect_smallest(&scores, k);
+        if picked.len() != k {
+            return Err(format!("len {} != {k}", picked.len()));
+        }
+        let mut sorted = scores.clone();
+        sorted.sort_by(f32::total_cmp);
+        // Values (not indices: ties) must match the k smallest.
+        for (i, &p) in picked.iter().enumerate() {
+            if scores[p] != sorted[i] {
+                return Err(format!("rank {i}: {} != {}", scores[p], sorted[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn select_k_values_are_a_multiset_subset() {
+    check("select-k-multiset", default_cases(), |rng, _| {
+        let n = 1 + rng.gen_range_usize(30);
+        let k = rng.gen_range_usize(n + 1);
+        let values: Vec<f32> = (0..n).map(|_| rng.gen_range_f32(-10.0, 10.0)).collect();
+        let picked = select_k_smallest(&values, k);
+        let mut pool = values;
+        for v in picked {
+            match pool.iter().position(|&x| x == v) {
+                Some(i) => {
+                    pool.swap_remove(i);
+                }
+                None => return Err(format!("{v} not in input")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn median_is_order_statistic() {
+    check("median-order-stat", default_cases(), |rng, _| {
+        let n = 1 + rng.gen_range_usize(25);
+        let values: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+        let med = coordinate_median(&values);
+        let below = values.iter().filter(|&&v| v <= med + 1e-6).count();
+        let above = values.iter().filter(|&&v| v >= med - 1e-6).count();
+        if below * 2 < n || above * 2 < n {
+            return Err(format!("median {med} splits {below}/{above} of {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn config_parser_never_panics_on_garbage() {
+    check("config-no-panic", default_cases() * 2, |rng, _| {
+        let len = rng.gen_range_usize(60);
+        let pool = b"[]= \"\nabc0.5#_x";
+        let garbage: String = (0..len)
+            .map(|_| char::from(pool[rng.gen_range_usize(pool.len())]))
+            .collect();
+        let _ = multibulyan::config::parser::parse(&garbage);
+        Ok(())
+    });
+}
+
+#[test]
+fn rng_streams_reproducible_and_distinct() {
+    check("rng-streams", 8, |rng, case| {
+        let seed = rng.next_u64();
+        let mut a = Rng64::seed_from_u64(seed);
+        let mut b = Rng64::seed_from_u64(seed);
+        let mut c = Rng64::seed_from_u64(seed ^ (case + 1));
+        let mut same_c = 0;
+        for _ in 0..64 {
+            let x = a.next_u64();
+            if x != b.next_u64() {
+                return Err("same seed diverged".into());
+            }
+            if x == c.next_u64() {
+                same_c += 1;
+            }
+        }
+        if same_c > 0 {
+            return Err("different seeds collided".into());
+        }
+        Ok(())
+    });
+}
