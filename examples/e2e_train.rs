@@ -75,6 +75,7 @@ fn main() -> Result<()> {
                 eval_every: (steps / 8).max(1),
                 seed: 1,
             },
+            threads: 0,
             output_dir: None,
         };
         println!("\n=== {label} ({steps} steps) ===");

@@ -45,6 +45,7 @@ fn main() {
                 eval_every: 0,
                 seed: 1,
             },
+            threads: 1,
             output_dir: None,
         };
         let mut cluster = launch(&config, None).unwrap();

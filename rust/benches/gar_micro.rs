@@ -1,14 +1,31 @@
 //! Micro-benchmarks of the GAR building blocks: the pairwise-distance
-//! kernel (the O(n²d) hot spot), Krum scoring from cached distances, and
-//! the per-coordinate median pass — the three loops the perf pass
-//! optimises (EXPERIMENTS.md §Perf).
+//! kernel (the O(n²d) hot spot), Krum scoring from cached distances, the
+//! per-coordinate median pass — the three loops the perf pass optimises
+//! (EXPERIMENTS.md §Perf) — plus the thread-scaling sweep of the sharded
+//! parallel engine (`MB_THREADS=1,2,4` to override the sweep).
 
 use multibulyan::gar::{
-    krum_scores_from_distances, pairwise_sq_distances_into, GarKind, GarScratch,
+    krum_scores_from_distances, pairwise_sq_distances_into, pairwise_sq_distances_sharded,
+    GarKind, GarScratch,
 };
 use multibulyan::metrics::TimingProtocol;
+use multibulyan::runtime::Parallelism;
 use multibulyan::tensor::GradMatrix;
 use multibulyan::util::Rng64;
+
+/// Thread counts to sweep: `MB_THREADS=1,2,4,8` overrides; default 1,2,4.
+fn sweep_thread_counts() -> Vec<usize> {
+    std::env::var("MB_THREADS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .filter(|&t| t >= 1)
+                .collect()
+        })
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4])
+}
 
 fn main() {
     let protocol = TimingProtocol::default();
@@ -53,5 +70,70 @@ fn main() {
         println!(
             "  n={n:<3} d={d:<9} {mean_ms:>10.3} ± {std_ms:<8.3} ms   {gbs:>6.2} GB/s(read)"
         );
+    }
+
+    // -- thread-scaling sweep of the sharded parallel engine -------------
+    let thread_counts = sweep_thread_counts();
+
+    println!("\nsharded pairwise distances, thread sweep (n=11):");
+    for d in [100_000usize, 1_000_000] {
+        let n = 11;
+        let mut rng = Rng64::seed_from_u64(17);
+        let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+        let mut out = vec![0.0f32; n * n];
+        let mut base: Option<(f64, Vec<f32>)> = None;
+        for &threads in &thread_counts {
+            let par = Parallelism::new(threads);
+            let mut partials = Vec::new();
+            let (mean_ms, _) = protocol.measure(|| {
+                pairwise_sq_distances_sharded(&grads, &mut out, &par, &mut partials)
+            });
+            match &base {
+                None => base = Some((mean_ms, out.clone())),
+                Some((base_ms, reference)) => {
+                    assert_eq!(reference, &out, "thread count changed the distances");
+                    println!(
+                        "  d={d:<9} threads={threads:<3} {mean_ms:>10.3} ms   speedup ×{:.2}",
+                        base_ms / mean_ms.max(1e-9)
+                    );
+                    continue;
+                }
+            }
+            println!("  d={d:<9} threads={threads:<3} {mean_ms:>10.3} ms   speedup ×1.00");
+        }
+    }
+
+    println!("\nfull GAR aggregation, thread sweep (n=11, f=2):");
+    for kind in [GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median] {
+        for d in [100_000usize, 1_000_000] {
+            let n = 11;
+            let mut rng = Rng64::seed_from_u64(23 ^ d as u64);
+            let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+            let mut base: Option<(f64, Vec<f32>)> = None;
+            for &threads in &thread_counts {
+                let par = Parallelism::new(threads);
+                let gar = kind.instantiate_parallel(n, 2, &par).unwrap();
+                let mut out = vec![0.0f32; d];
+                let mut scratch = GarScratch::new();
+                let (mean_ms, _) = protocol.measure(|| {
+                    gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
+                        .unwrap()
+                });
+                let speedup = match &base {
+                    None => {
+                        base = Some((mean_ms, out.clone()));
+                        1.0
+                    }
+                    Some((base_ms, reference)) => {
+                        assert_eq!(reference, &out, "{kind}: thread count changed the result");
+                        base_ms / mean_ms.max(1e-9)
+                    }
+                };
+                println!(
+                    "  {:<13} d={d:<9} threads={threads:<3} {mean_ms:>10.3} ms   speedup ×{speedup:.2}",
+                    kind.as_str()
+                );
+            }
+        }
     }
 }

@@ -141,6 +141,7 @@ mod tests {
 
     #[test]
     fn resilient_rules_stay_in_the_cone() {
+        let _env = crate::bench::env_lock();
         std::env::set_var("MB_RESULTS_DIR", std::env::temp_dir().join("mb_cone_test"));
         let cfg = ConeConfig {
             dims: vec![64, 512],

@@ -118,6 +118,7 @@ mod tests {
     fn multibulyan_measures_linear_in_d() {
         // Small but decade-spanning grid; slope should be ≈ 1, certainly
         // far from 2. Generous tolerance to absorb timer noise at small d.
+        let _env = crate::bench::env_lock();
         std::env::set_var(
             "MB_RESULTS_DIR",
             std::env::temp_dir().join("mb_dscaling_test"),

@@ -163,6 +163,7 @@ mod tests {
 
     #[test]
     fn smoke_grid_produces_all_points() {
+        let _env = crate::bench::env_lock();
         std::env::set_var(
             "MB_RESULTS_DIR",
             std::env::temp_dir().join("mb_fig2_test"),

@@ -47,6 +47,16 @@ pub fn fig2_f(n: usize) -> usize {
     (n - 3) / 4
 }
 
+/// Serialises tests that mutate the process-global `MB_RESULTS_DIR`
+/// environment variable. `cargo test` runs tests concurrently in one
+/// process; without this lock the bench tests race on set/remove and
+/// delete each other's result directories mid-run.
+#[cfg(test)]
+pub(crate) fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,6 +74,7 @@ mod tests {
 
     #[test]
     fn csv_writes_under_results_dir() {
+        let _env = env_lock();
         std::env::set_var("MB_RESULTS_DIR", std::env::temp_dir().join("mb_results_test"));
         let p = write_csv("t.csv", "a,b", &["1,2".into()]).unwrap();
         assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b\n1,2\n");

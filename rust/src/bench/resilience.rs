@@ -106,6 +106,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                     eval_every: 0,
                     seed: cfg.seed,
                 },
+                threads: 1,
                 output_dir: None,
             };
             let cluster = launch(&exp, None)?;

@@ -90,6 +90,7 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
             eval_every: 0,
             seed: cfg.seed,
         },
+        threads: 1,
         output_dir: None,
     };
     let cluster = launch(&exp, None)?;
@@ -180,12 +181,133 @@ pub fn run(cfg: &SlowdownConfig, quiet: bool) -> Result<Vec<SlowdownRow>> {
     Ok(rows)
 }
 
+// ---------------------------------------------------------------------------
+// Thread-scaling sweep — the other "slowdown": wall-clock of the
+// aggregation hot path vs the `threads` knob. The paper's §V notes that
+// "multi-Bulyan's parallelisability further adds to its efficiency"; this
+// sweep measures exactly that, and doubles as a guard that the parallel
+// engine returns bit-identical outputs while doing so.
+// ---------------------------------------------------------------------------
+
+/// One (gar, d, threads) measurement of the thread sweep.
+#[derive(Debug, Clone)]
+pub struct ThreadSweepRow {
+    pub gar: GarKind,
+    pub n: usize,
+    pub d: usize,
+    pub threads: usize,
+    pub mean_ms: f64,
+    /// mean_ms(threads = first entry of the sweep) / mean_ms(this row).
+    pub speedup: f64,
+}
+
+/// Measure aggregation wall-time per (gar, d, threads) triple and the
+/// speedup vs the sweep's first thread count (conventionally 1). Also
+/// asserts the parallel outputs are bit-identical to the first run.
+/// Writes `results/thread_sweep.csv`.
+pub fn thread_sweep(
+    n: usize,
+    f: usize,
+    dims: &[usize],
+    thread_counts: &[usize],
+    gars: &[GarKind],
+    protocol: crate::metrics::TimingProtocol,
+    quiet: bool,
+) -> Result<Vec<ThreadSweepRow>> {
+    use crate::gar::GarScratch;
+    use crate::runtime::Parallelism;
+    use crate::tensor::GradMatrix;
+    use crate::util::Rng64;
+
+    anyhow::ensure!(!thread_counts.is_empty(), "thread_sweep: no thread counts");
+    let mut rows = Vec::new();
+    for &kind in gars {
+        anyhow::ensure!(n >= kind.min_n(f), "{kind}: n={n} too small for f={f}");
+        for &d in dims {
+            let mut rng = Rng64::seed_from_u64(0xBEEF ^ d as u64 ^ ((n as u64) << 40));
+            let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
+            let mut base_ms: Option<f64> = None;
+            let mut reference: Option<Vec<f32>> = None;
+            for &threads in thread_counts {
+                let par = Parallelism::new(threads);
+                let gar = kind.instantiate_parallel(n, f, &par)?;
+                let mut out = vec![0.0f32; d];
+                let mut scratch = GarScratch::new();
+                let (mean_ms, _) = protocol.measure(|| {
+                    gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
+                        .expect("aggregation failed");
+                });
+                match &reference {
+                    None => reference = Some(out.clone()),
+                    Some(r) => anyhow::ensure!(
+                        r == &out,
+                        "{kind} d={d}: threads={threads} changed the aggregate"
+                    ),
+                }
+                let base = *base_ms.get_or_insert(mean_ms);
+                let speedup = base / mean_ms.max(1e-9);
+                if !quiet {
+                    println!(
+                        "threads gar={:<13} d={d:<9} threads={threads:<3} {mean_ms:>10.3} ms   \
+                         speedup ×{speedup:.2}",
+                        kind.as_str()
+                    );
+                }
+                rows.push(ThreadSweepRow {
+                    gar: kind,
+                    n,
+                    d,
+                    threads,
+                    mean_ms,
+                    speedup,
+                });
+            }
+        }
+    }
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{},{:.6},{:.4}",
+                r.gar, r.n, r.d, r.threads, r.mean_ms, r.speedup
+            )
+        })
+        .collect();
+    super::write_csv("thread_sweep.csv", "gar,n,d,threads,mean_ms,speedup", &csv)?;
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
+    fn thread_sweep_smoke_outputs_stay_identical() {
+        let _env = crate::bench::env_lock();
+        std::env::set_var(
+            "MB_RESULTS_DIR",
+            std::env::temp_dir().join("mb_thread_sweep_test"),
+        );
+        let rows = thread_sweep(
+            11,
+            2,
+            &[20_000],
+            &[1, 2],
+            &[GarKind::MultiBulyan, GarKind::Median],
+            crate::metrics::TimingProtocol::quick(),
+            true,
+        )
+        .unwrap();
+        // 2 gars × 1 dim × 2 thread counts.
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.mean_ms >= 0.0 && r.speedup > 0.0));
+        std::fs::remove_dir_all(super::super::results_dir()).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+
+    #[test]
     fn plateau_ordering_tracks_m() {
+        let _env = crate::bench::env_lock();
         std::env::set_var(
             "MB_RESULTS_DIR",
             std::env::temp_dir().join("mb_slowdown_test"),

@@ -37,6 +37,10 @@ pub fn default_round_timeout_ms() -> u64 {
     60_000
 }
 
+/// Upper bound on the `threads` knob (0 = auto, 1 = sequential) — shared
+/// by config validation and the CLI paths that build a pool directly.
+pub const MAX_THREADS: usize = 1024;
+
 /// Cluster shape: the `(n, f)` contract of §II-C-c.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
@@ -114,6 +118,11 @@ pub struct ExperimentConfig {
     pub attack: AttackKind,
     pub model: ModelConfig,
     pub train: TrainConfig,
+    /// Server-side aggregation threads: 1 = sequential (default), 0 =
+    /// auto-detect, n > 1 = a shared n-thread pool for the GAR's sharded
+    /// passes. Aggregation results are bit-identical for every setting
+    /// (see `runtime::pool`), so this is purely a latency knob.
+    pub threads: usize,
     /// Where to write metrics CSV (None = stdout summary only).
     pub output_dir: Option<String>,
 }
@@ -137,6 +146,7 @@ impl ExperimentConfig {
                 dir: "artifacts".into(),
             },
             train: TrainConfig::default(),
+            threads: 1,
             output_dir: None,
         }
     }
@@ -260,12 +270,19 @@ impl ExperimentConfig {
                 .unwrap_or(defaults.seed),
         };
 
+        let threads = root
+            .get("threads")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(1);
+
         Ok(Self {
             cluster,
             gar,
             attack,
             model,
             train,
+            threads,
             output_dir: get_str("", "output_dir"),
         })
     }
@@ -305,6 +322,11 @@ impl ExperimentConfig {
         anyhow::ensure!(
             self.cluster.round_timeout_ms >= 1,
             "round_timeout_ms must be ≥ 1"
+        );
+        anyhow::ensure!(
+            self.threads <= MAX_THREADS,
+            "threads must be ≤ {MAX_THREADS} (0 = auto, 1 = sequential), got {}",
+            self.threads
         );
         anyhow::ensure!(self.train.batch_size >= 1, "batch_size must be ≥ 1");
         anyhow::ensure!(self.train.steps >= 1, "steps must be ≥ 1");
@@ -407,6 +429,30 @@ mod tests {
             }
             _ => panic!("wrong model"),
         }
+    }
+
+    #[test]
+    fn threads_knob_parses_and_validates() {
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-bulyan"
+            threads = 4
+            [cluster]
+            n = 11
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.threads, 4);
+        // Default is sequential.
+        assert_eq!(base().threads, 1);
+        let mut cfg = base();
+        cfg.threads = 0; // auto-detect is legal
+        cfg.validate().unwrap();
+        cfg.threads = 100_000;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use crate::config::{ExperimentConfig, ModelConfig};
 use crate::data::{FashionLike, QuadraticProblem, TokenStream};
-use crate::runtime::{ComputeHandle, Manifest};
+use crate::runtime::{ComputeHandle, Manifest, Parallelism};
 use crate::training::LrSchedule;
 use crate::transport::{star, FaultModel};
 use crate::worker::{spawn_workers, GradSource};
@@ -154,8 +154,11 @@ pub fn launch(
         },
         seed,
     };
+    // One pool shared by whatever rules this coordinator runs; results are
+    // bit-identical to sequential for every thread count.
+    let par = Parallelism::new(config.threads);
     let coordinator = Coordinator::new(
-        config.gar.instantiate(n, config.cluster.f)?,
+        config.gar.instantiate_parallel(n, config.cluster.f, &par)?,
         config.attack.instantiate(),
         byz,
         server,
@@ -200,6 +203,30 @@ mod tests {
         let loss = cluster.coordinator.metrics.final_loss().unwrap();
         assert!(loss < 0.01, "loss {loss}");
         cluster.coordinator.shutdown();
+    }
+
+    #[test]
+    fn thread_pool_run_is_bit_identical_to_sequential() {
+        // The `threads` knob is a pure latency knob: a seeded run must
+        // produce bit-identical parameters at every thread count.
+        let run = |threads: usize| -> Vec<f32> {
+            let mut cfg = ExperimentConfig::fig3_default(GarKind::MultiBulyan);
+            cfg.model = ModelConfig::Quadratic {
+                dim: 9_000,
+                noise: 0.2,
+            };
+            cfg.threads = threads;
+            cfg.train.steps = 5;
+            cfg.train.batch_size = 4;
+            let mut cluster = launch(&cfg, None).unwrap();
+            for _ in 0..5 {
+                cluster.coordinator.run_round().unwrap();
+            }
+            let params = cluster.coordinator.params().to_vec();
+            cluster.coordinator.shutdown();
+            params
+        };
+        assert_eq!(run(1), run(4));
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! al. 2014]; the reference point of both the slowdown theorems and
 //! Fig. 3).
 
-use super::{check_shape, Gar, GarScratch};
+use super::{check_shape, sharded_mean_rows_into, Gar, GarScratch};
+use crate::runtime::Parallelism;
 use crate::tensor::GradMatrix;
 use crate::Result;
 
@@ -11,12 +12,22 @@ use crate::Result;
 #[derive(Debug, Clone)]
 pub struct Average {
     n: usize,
+    par: Parallelism,
 }
 
 impl Average {
     pub fn new(n: usize) -> Result<Self> {
         anyhow::ensure!(n >= 1, "average: need at least one worker, got {n}");
-        Ok(Self { n })
+        Ok(Self {
+            n,
+            par: Parallelism::sequential(),
+        })
+    }
+
+    /// Use `par` for the coordinate-sharded O(nd) pass.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 }
 
@@ -41,14 +52,14 @@ impl Gar for Average {
         &self,
         grads: &GradMatrix,
         out: &mut [f32],
-        _scratch: &mut GarScratch,
+        scratch: &mut GarScratch,
     ) -> Result<()> {
         check_shape("average", grads, self.n, out)?;
-        out.fill(0.0);
-        for i in 0..self.n {
-            crate::tensor::add_assign(out, grads.row(i));
-        }
-        crate::tensor::scale(out, 1.0 / self.n as f32);
+        // Coordinates are independent: disjoint ranges per shard, row-sum
+        // order unchanged ⇒ bit-identical to the sequential pass.
+        scratch.indices.clear();
+        scratch.indices.extend(0..self.n);
+        sharded_mean_rows_into(&self.par, grads, &scratch.indices, out);
         Ok(())
     }
 }
@@ -86,5 +97,17 @@ mod tests {
         let g = GradMatrix::from_rows(&rows);
         let out = Average::new(10).unwrap().aggregate(&g).unwrap();
         assert!(out[0] > 1e7);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let g = GradMatrix::from_fn(9, 20_000, |i, j| ((i * 37 + j) % 101) as f32 * 0.017 - 0.5);
+        let seq = Average::new(9).unwrap().aggregate(&g).unwrap();
+        let par = Average::new(9)
+            .unwrap()
+            .with_parallelism(Parallelism::new(4))
+            .aggregate(&g)
+            .unwrap();
+        assert_eq!(seq, par);
     }
 }

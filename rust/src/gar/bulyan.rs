@@ -21,9 +21,17 @@
 //! re-score the shrinking pool from the cached matrix (O(k²) per
 //! iteration), the optimisation the paper's §V-B highlights; total cost is
 //! O(n²d) — linear in `d`, the paper's Theorem 2(ii).
+//!
+//! All three O(d) passes — the distance matrix, each iteration's
+//! MULTI-KRUM average, and the final per-coordinate trimmed average — run
+//! on the rule's [`Parallelism`], sharded so that results stay
+//! bit-identical to the sequential path ("multi-Bulyan's parallelisability
+//! further adds to its efficiency", §V).
 
-use super::krum::krum_scores_from_distances;
-use super::{check_shape, pairwise_sq_distances_into, Gar, GarScratch};
+use super::krum::{distances_via_scratch, krum_scores_from_distances};
+use super::scratch::ShardScratch;
+use super::{check_shape, sharded_mean_rows_into, Gar, GarScratch};
+use crate::runtime::{shard_slice, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::{argselect_smallest, small_median_sorting, GradMatrix};
 use crate::Result;
 
@@ -36,6 +44,7 @@ struct BulyanCore {
     theta: usize,
     /// Per-coordinate kept values, β = θ − 2f.
     beta: usize,
+    par: Parallelism,
 }
 
 impl BulyanCore {
@@ -47,7 +56,13 @@ impl BulyanCore {
         let theta = n - 2 * f - 2;
         let beta = theta - 2 * f;
         debug_assert!(beta >= 1);
-        Ok(Self { n, f, theta, beta })
+        Ok(Self {
+            n,
+            f,
+            theta,
+            beta,
+            par: Parallelism::sequential(),
+        })
     }
 
     /// Run the θ selection iterations.
@@ -56,9 +71,7 @@ impl BulyanCore {
     /// (θ×d MULTI-KRUM averages). Returns nothing; results live in scratch.
     fn select_iterations(&self, grads: &GradMatrix, scratch: &mut GarScratch, multi: bool) {
         let (n, d) = (self.n, grads.d());
-        let dist = scratch.distances_mut(n);
-        pairwise_sq_distances_into(grads, dist);
-        let dist = std::mem::take(&mut scratch.distances);
+        let dist = distances_via_scratch(grads, &self.par, scratch);
 
         scratch.pool.clear();
         scratch.pool.extend(0..n);
@@ -88,12 +101,13 @@ impl BulyanCore {
             let winner = pool[winner_pos];
             scratch.ext[t * d..(t + 1) * d].copy_from_slice(grads.row(winner));
             if multi {
+                // Resolve pool positions to row indices, then reuse the
+                // shared sharded row-average (bit-identical to sequential).
+                let indices = &mut scratch.indices;
+                indices.clear();
+                indices.extend(selected.iter().map(|&p| pool[p]));
                 let agr_row = &mut scratch.agr[t * d..(t + 1) * d];
-                agr_row.fill(0.0);
-                for &p in &selected {
-                    crate::tensor::add_assign(agr_row, grads.row(pool[p]));
-                }
-                crate::tensor::scale(agr_row, 1.0 / selected.len() as f32);
+                sharded_mean_rows_into(&self.par, grads, indices, agr_row);
             }
             pool.swap_remove(winner_pos);
         }
@@ -110,45 +124,59 @@ impl BulyanCore {
     /// and a β-step partial selection sort over reused `(deviation,
     /// value)` pairs — zero allocation, no introselect overhead (the
     /// EXPERIMENTS.md §Perf "coordinate loop" item; the naive version
-    /// allocated an index vector per coordinate).
+    /// allocated an index vector per coordinate). Sharded over disjoint
+    /// coordinate ranges with per-shard buffers.
     fn trimmed_average(&self, d: usize, scratch: &mut GarScratch, multi: bool, out: &mut [f32]) {
         let theta = self.theta;
         let beta = self.beta;
-        scratch.column.clear();
-        scratch.column.resize(theta, 0.0);
-        scratch.pairs.clear();
-        scratch.pairs.resize(theta, (0.0, 0.0));
-        let mut col = std::mem::take(&mut scratch.column);
-        let mut pairs = std::mem::take(&mut scratch.pairs);
+        let ext = std::mem::take(&mut scratch.ext);
+        let agr = std::mem::take(&mut scratch.agr);
 
-        for j in 0..d {
-            for t in 0..theta {
-                col[t] = scratch.ext[t * d + j];
-            }
-            let median = small_median_sorting(&mut col);
-            let src = if multi { &scratch.agr } else { &scratch.ext };
-            for t in 0..theta {
-                let v = src[t * d + j];
-                pairs[t] = ((v - median).abs(), v);
-            }
-            // Partial selection sort: move the β smallest deviations to
-            // the front (β·θ compares; β and θ are both ≤ n ≤ 64 here).
-            let mut acc = 0.0f32;
-            for b in 0..beta {
-                let mut best = b;
-                for t in (b + 1)..theta {
-                    if pairs[t].0 < pairs[best].0 {
-                        best = t;
+        shard_slice(
+            &self.par,
+            out,
+            &mut scratch.shards,
+            ShardScratch::default,
+            MIN_COORDS_PER_SHARD,
+            |offset, range, shard| {
+                shard.column.clear();
+                shard.column.resize(theta, 0.0);
+                shard.pairs.clear();
+                shard.pairs.resize(theta, (0.0, 0.0));
+                let col = &mut shard.column;
+                let pairs = &mut shard.pairs;
+                for (k, o) in range.iter_mut().enumerate() {
+                    let j = offset + k;
+                    for t in 0..theta {
+                        col[t] = ext[t * d + j];
                     }
+                    let median = small_median_sorting(col);
+                    let src = if multi { &agr } else { &ext };
+                    for t in 0..theta {
+                        let v = src[t * d + j];
+                        pairs[t] = ((v - median).abs(), v);
+                    }
+                    // Partial selection sort: move the β smallest
+                    // deviations to the front (β·θ compares; β and θ are
+                    // both ≤ n ≤ 64 here).
+                    let mut acc = 0.0f32;
+                    for b in 0..beta {
+                        let mut best = b;
+                        for t in (b + 1)..theta {
+                            if pairs[t].0 < pairs[best].0 {
+                                best = t;
+                            }
+                        }
+                        pairs.swap(b, best);
+                        acc += pairs[b].1;
+                    }
+                    *o = acc / beta as f32;
                 }
-                pairs.swap(b, best);
-                acc += pairs[b].1;
-            }
-            out[j] = acc / beta as f32;
-        }
+            },
+        );
 
-        scratch.column = col;
-        scratch.pairs = pairs;
+        scratch.ext = ext;
+        scratch.agr = agr;
     }
 
     fn aggregate(
@@ -177,6 +205,12 @@ impl Bulyan {
         Ok(Self {
             core: BulyanCore::new("bulyan", n, f)?,
         })
+    }
+
+    /// Use `par` for the sharded O(n²d)/O(d) passes.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.core.par = par;
+        self
     }
 
     /// θ = n − 2f − 2 selection iterations.
@@ -232,6 +266,12 @@ impl MultiBulyan {
         Ok(Self {
             core: BulyanCore::new("multi-bulyan", n, f)?,
         })
+    }
+
+    /// Use `par` for the sharded O(n²d)/O(d) passes.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.core.par = par;
+        self
     }
 
     pub fn theta(&self) -> usize {
@@ -372,5 +412,27 @@ mod tests {
         mb.aggregate_with_scratch(&grads, &mut c, &mut scratch).unwrap();
         assert_eq!(a, b);
         assert_eq!(b, c);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let (n, f) = fig3_config();
+        let mut rng = Rng64::seed_from_u64(99);
+        let grads = GradMatrix::uniform(n, 30_000, -1.0, 1.0, &mut rng);
+        let cases: Vec<(Box<dyn Gar>, Box<dyn Gar>)> = vec![
+            (
+                Box::new(Bulyan::new(n, f).unwrap()),
+                Box::new(Bulyan::new(n, f).unwrap().with_parallelism(Parallelism::new(4))),
+            ),
+            (
+                Box::new(MultiBulyan::new(n, f).unwrap()),
+                Box::new(MultiBulyan::new(n, f).unwrap().with_parallelism(Parallelism::new(3))),
+            ),
+        ];
+        for (seq, par) in cases {
+            let a = seq.aggregate(&grads).unwrap();
+            let b = par.aggregate(&grads).unwrap();
+            assert_eq!(a, b, "{}", seq.name());
+        }
     }
 }

@@ -6,8 +6,12 @@
 //! is Lemma 1 of the paper — selects the `m = k − f − 2` smallest-scoring
 //! gradients and returns their average, recovering an `m̃/n` slowdown
 //! instead of Krum's `1/n` (Theorem 1).
+//!
+//! The O(n²d) distance pass and the O(nd) final average both run on the
+//! rule's [`Parallelism`] (sharded over `d`; bit-identical to sequential).
 
-use super::{check_shape, pairwise_sq_distances_into, Gar, GarScratch};
+use super::{check_shape, pairwise_sq_distances_sharded, sharded_mean_rows_into, Gar, GarScratch};
+use crate::runtime::Parallelism;
 use crate::tensor::{argselect_smallest, GradMatrix};
 use crate::Result;
 
@@ -56,11 +60,28 @@ pub fn krum_scores_from_distances(
     }
 }
 
+/// Fill `scratch.distances` with the pairwise matrix for `grads`, sharded
+/// over `par`, and hand the buffer out for score computations. Shared by
+/// the Krum family and BULYAN (`bulyan.rs`).
+pub(crate) fn distances_via_scratch(
+    grads: &GradMatrix,
+    par: &Parallelism,
+    scratch: &mut GarScratch,
+) -> Vec<f32> {
+    scratch.distances_mut(grads.n());
+    let mut dist = std::mem::take(&mut scratch.distances);
+    let mut partials = std::mem::take(&mut scratch.partials);
+    pairwise_sq_distances_sharded(grads, &mut dist, par, &mut partials);
+    scratch.partials = partials;
+    dist
+}
+
 /// KRUM: select the single gradient with the smallest score.
 #[derive(Debug, Clone)]
 pub struct Krum {
     n: usize,
     f: usize,
+    par: Parallelism,
 }
 
 impl Krum {
@@ -69,16 +90,24 @@ impl Krum {
             n >= 2 * f + 3,
             "krum: requires n ≥ 2f+3 (got n={n}, f={f})"
         );
-        Ok(Self { n, f })
+        Ok(Self {
+            n,
+            f,
+            par: Parallelism::sequential(),
+        })
+    }
+
+    /// Use `par` for the sharded O(n²d) distance pass.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     /// Index of the Krum winner (exposed for tests and the worker-scoring
     /// diagnostics in the coordinator).
     pub fn select(&self, grads: &GradMatrix, scratch: &mut GarScratch) -> usize {
         let n = self.n;
-        let dist = scratch.distances_mut(n);
-        pairwise_sq_distances_into(grads, dist);
-        let dist = std::mem::take(&mut scratch.distances);
+        let dist = distances_via_scratch(grads, &self.par, scratch);
         let pool: Vec<usize> = (0..n).collect();
         let mut scores = std::mem::take(&mut scratch.scores);
         krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
@@ -127,6 +156,7 @@ pub struct MultiKrum {
     n: usize,
     f: usize,
     m: usize,
+    par: Parallelism,
 }
 
 impl MultiKrum {
@@ -136,7 +166,12 @@ impl MultiKrum {
             n >= 2 * f + 3,
             "multi-krum: requires n ≥ 2f+3 (got n={n}, f={f})"
         );
-        Ok(Self { n, f, m: n - f - 2 })
+        Ok(Self {
+            n,
+            f,
+            m: n - f - 2,
+            par: Parallelism::sequential(),
+        })
     }
 
     /// Construction with an explicit `m ≤ n − f − 2` (slowdown ablation).
@@ -149,7 +184,19 @@ impl MultiKrum {
             (1..=n - f - 2).contains(&m),
             "multi-krum: m must be in [1, n-f-2] (got m={m}, n={n}, f={f})"
         );
-        Ok(Self { n, f, m })
+        Ok(Self {
+            n,
+            f,
+            m,
+            par: Parallelism::sequential(),
+        })
+    }
+
+    /// Use `par` for the sharded O(n²d) distance pass and the final
+    /// average.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     pub fn m(&self) -> usize {
@@ -159,9 +206,7 @@ impl MultiKrum {
     /// Indices of the `m` selected gradients, ascending score order.
     pub fn select(&self, grads: &GradMatrix, scratch: &mut GarScratch) -> Vec<usize> {
         let n = self.n;
-        let dist = scratch.distances_mut(n);
-        pairwise_sq_distances_into(grads, dist);
-        let dist = std::mem::take(&mut scratch.distances);
+        let dist = distances_via_scratch(grads, &self.par, scratch);
         let pool: Vec<usize> = (0..n).collect();
         let mut scores = std::mem::take(&mut scratch.scores);
         krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
@@ -197,11 +242,7 @@ impl Gar for MultiKrum {
     ) -> Result<()> {
         check_shape("multi-krum", grads, self.n, out)?;
         let selected = self.select(grads, scratch);
-        out.fill(0.0);
-        for &i in &selected {
-            crate::tensor::add_assign(out, grads.row(i));
-        }
-        crate::tensor::scale(out, 1.0 / selected.len() as f32);
+        sharded_mean_rows_into(&self.par, grads, &selected, out);
         Ok(())
     }
 }
@@ -209,6 +250,7 @@ impl Gar for MultiKrum {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gar::pairwise_sq_distances_into;
 
     /// n=7, f=1 ⇒ neighbors = 4, m = 4.
     fn cluster_with_outlier() -> GradMatrix {
@@ -299,5 +341,17 @@ mod tests {
         assert!(!sel.contains(&6));
         let out = mk.aggregate(&g).unwrap();
         assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let g = GradMatrix::from_fn(9, 40_000, |i, j| ((i * 11 + j) % 199) as f32 * 0.005 - 0.4);
+        let seq = MultiKrum::new(9, 1).unwrap().aggregate(&g).unwrap();
+        let par = MultiKrum::new(9, 1)
+            .unwrap()
+            .with_parallelism(Parallelism::new(4))
+            .aggregate(&g)
+            .unwrap();
+        assert_eq!(seq, par);
     }
 }

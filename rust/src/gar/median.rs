@@ -4,7 +4,9 @@
 //! equivalent of) a single gradient per step, it forfeits the variance
 //! reduction of averaging — the effect Fig. 3 quantifies.
 
+use super::scratch::ShardScratch;
 use super::{check_shape, Gar, GarScratch};
+use crate::runtime::{shard_slice, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::{median_of_buf, small_median_sorting, GradMatrix};
 use crate::Result;
 
@@ -21,6 +23,7 @@ const SMALL_N: usize = 64;
 pub struct CoordMedian {
     n: usize,
     f: usize,
+    par: Parallelism,
 }
 
 impl CoordMedian {
@@ -29,7 +32,17 @@ impl CoordMedian {
             n >= 2 * f + 1,
             "median: requires n ≥ 2f+1 (got n={n}, f={f})"
         );
-        Ok(Self { n, f })
+        Ok(Self {
+            n,
+            f,
+            par: Parallelism::sequential(),
+        })
+    }
+
+    /// Use `par` for the coordinate-sharded O(nd) pass.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 }
 
@@ -58,22 +71,34 @@ impl Gar for CoordMedian {
         scratch: &mut GarScratch,
     ) -> Result<()> {
         check_shape("median", grads, self.n, out)?;
-        let col = scratch.column_mut(self.n);
-        if self.n <= SMALL_N {
-            for j in 0..grads.d() {
-                for i in 0..self.n {
-                    col[i] = grads.row(i)[j];
+        let n = self.n;
+        let small = n <= SMALL_N;
+        // Each coordinate's median is independent: disjoint ranges per
+        // shard with a per-shard column buffer ⇒ bit-identical to the
+        // sequential pass.
+        shard_slice(
+            &self.par,
+            out,
+            &mut scratch.shards,
+            ShardScratch::default,
+            MIN_COORDS_PER_SHARD,
+            |offset, range, shard| {
+                shard.column.clear();
+                shard.column.resize(n, 0.0);
+                let col = &mut shard.column;
+                for (k, o) in range.iter_mut().enumerate() {
+                    let j = offset + k;
+                    for i in 0..n {
+                        col[i] = grads.row(i)[j];
+                    }
+                    *o = if small {
+                        small_median_sorting(col)
+                    } else {
+                        median_of_buf(col)
+                    };
                 }
-                out[j] = small_median_sorting(col);
-            }
-        } else {
-            for j in 0..grads.d() {
-                for i in 0..self.n {
-                    col[i] = grads.row(i)[j];
-                }
-                out[j] = median_of_buf(col);
-            }
-        }
+            },
+        );
         Ok(())
     }
 }
@@ -118,5 +143,17 @@ mod tests {
     fn requires_majority() {
         assert!(CoordMedian::new(4, 2).is_err());
         assert!(CoordMedian::new(5, 2).is_ok());
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let g = GradMatrix::from_fn(11, 16_000, |i, j| ((i * 13 + j * 7) % 257) as f32 * 0.01);
+        let seq = CoordMedian::new(11, 2).unwrap().aggregate(&g).unwrap();
+        let par = CoordMedian::new(11, 2)
+            .unwrap()
+            .with_parallelism(Parallelism::new(3))
+            .aggregate(&g)
+            .unwrap();
+        assert_eq!(seq, par);
     }
 }

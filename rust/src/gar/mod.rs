@@ -35,10 +35,13 @@ pub use average::Average;
 pub use bulyan::{Bulyan, MultiBulyan};
 pub use krum::{krum_scores_from_distances, Krum, MultiKrum};
 pub use median::CoordMedian;
-pub use pairwise::{pairwise_sq_distances, pairwise_sq_distances_into};
+pub use pairwise::{
+    pairwise_sq_distances, pairwise_sq_distances_into, pairwise_sq_distances_sharded, SHARD_D,
+};
 pub use scratch::GarScratch;
 pub use trimmed_mean::TrimmedMean;
 
+use crate::runtime::Parallelism;
 use crate::tensor::GradMatrix;
 use crate::Result;
 
@@ -78,6 +81,33 @@ pub trait Gar: Send + Sync {
     /// How many of the `n` input gradients influence the output (the `m̃`
     /// of the slowdown theorems; `n` for averaging, 1 for Krum/median).
     fn gradients_used(&self) -> usize;
+}
+
+/// Sharded per-coordinate mean of `rows` of `grads` into `out`: zero, add
+/// the rows in the given order, scale by `1/rows.len()`. The single
+/// implementation behind AVERAGE, MULTI-KRUM's selection average and
+/// BULYAN's per-iteration `G^agr` — one arithmetic definition keeps the
+/// bit-identical parallel/sequential contract from diverging per rule.
+pub(crate) fn sharded_mean_rows_into(
+    par: &Parallelism,
+    grads: &GradMatrix,
+    rows: &[usize],
+    out: &mut [f32],
+) {
+    debug_assert!(!rows.is_empty());
+    let inv = 1.0 / rows.len() as f32;
+    crate::runtime::shard_slice_stateless(
+        par,
+        out,
+        crate::runtime::MIN_COORDS_PER_SHARD,
+        |offset, range| {
+            range.fill(0.0);
+            for &i in rows {
+                crate::tensor::add_assign(range, &grads.row(i)[offset..offset + range.len()]);
+            }
+            crate::tensor::scale(range, inv);
+        },
+    );
 }
 
 /// Validate the common preconditions shared by all rules.
@@ -131,16 +161,33 @@ impl GarKind {
         }
     }
 
-    /// Build the rule for an `(n, f)` contract.
+    /// Build the rule for an `(n, f)` contract (sequential execution).
     pub fn instantiate(self, n: usize, f: usize) -> Result<Box<dyn Gar>> {
+        self.instantiate_parallel(n, f, &Parallelism::sequential())
+    }
+
+    /// Build the rule for an `(n, f)` contract running its O(d) / O(n²d)
+    /// passes on `par` (the `threads` experiment-config knob). Outputs are
+    /// bit-identical to the sequential instantiation for every thread
+    /// count — see `runtime::pool` and `tests/prop_gar.rs`.
+    pub fn instantiate_parallel(
+        self,
+        n: usize,
+        f: usize,
+        par: &Parallelism,
+    ) -> Result<Box<dyn Gar>> {
         Ok(match self {
-            GarKind::Average => Box::new(Average::new(n)?),
-            GarKind::Median => Box::new(CoordMedian::new(n, f)?),
-            GarKind::TrimmedMean => Box::new(TrimmedMean::new(n, f)?),
-            GarKind::Krum => Box::new(Krum::new(n, f)?),
-            GarKind::MultiKrum => Box::new(MultiKrum::new(n, f)?),
-            GarKind::Bulyan => Box::new(Bulyan::new(n, f)?),
-            GarKind::MultiBulyan => Box::new(MultiBulyan::new(n, f)?),
+            GarKind::Average => Box::new(Average::new(n)?.with_parallelism(par.clone())),
+            GarKind::Median => Box::new(CoordMedian::new(n, f)?.with_parallelism(par.clone())),
+            GarKind::TrimmedMean => {
+                Box::new(TrimmedMean::new(n, f)?.with_parallelism(par.clone()))
+            }
+            GarKind::Krum => Box::new(Krum::new(n, f)?.with_parallelism(par.clone())),
+            GarKind::MultiKrum => Box::new(MultiKrum::new(n, f)?.with_parallelism(par.clone())),
+            GarKind::Bulyan => Box::new(Bulyan::new(n, f)?.with_parallelism(par.clone())),
+            GarKind::MultiBulyan => {
+                Box::new(MultiBulyan::new(n, f)?.with_parallelism(par.clone()))
+            }
         })
     }
 

@@ -10,39 +10,120 @@
 //! stays L2-resident. This mirrors the Pallas kernel's HBM↔VMEM schedule
 //! (`python/compile/kernels/pairwise.py`) — see DESIGN.md
 //! §Hardware-Adaptation.
+//!
+//! ## Parallel path
+//!
+//! [`pairwise_sq_distances_sharded`] additionally splits `d` into
+//! fixed-width [`SHARD_D`] chunks. Each chunk produces an independent
+//! partial `n × n` matrix (chunks are claimed dynamically by the pool's
+//! threads), and the partials are reduced into `out` in **ascending chunk
+//! order**. Both the decomposition and the reduction order depend only on
+//! `d` — never on the thread count — so the result is bit-identical for
+//! every `threads` setting, including 1. (f32 addition is not associative;
+//! a thread-count-dependent reduction tree would break the
+//! parallel-vs-sequential equality property that `tests/prop_gar.rs`
+//! enforces.)
 
+use crate::runtime::{run_items, Parallelism};
 use crate::tensor::{sq_distance, GradMatrix};
 
 /// Stripe width in elements. 2048 f32 × n ≤ 39 rows ≈ 320 KiB — fits L2
 /// comfortably while long enough to amortise loop overhead.
 const BLOCK_D: usize = 2048;
 
-/// Compute all pairwise squared distances into `out` (`n*n`, row-major,
-/// symmetric, zero diagonal). No allocation.
-pub fn pairwise_sq_distances_into(grads: &GradMatrix, out: &mut [f32]) {
+/// Parallel chunk width: 8 stripes. Small enough that d = 10⁵ still yields
+/// ~7 chunks (load balance at 4 threads), large enough that the per-chunk
+/// n² partial buffer and claim overhead stay negligible.
+pub const SHARD_D: usize = 8 * BLOCK_D;
+
+/// Accumulate the distance contributions of columns `[start, end)` into
+/// `out` (upper triangle only), stripe-major within the range. `out` must
+/// be zeroed by the caller.
+fn partial_distances_upper(grads: &GradMatrix, start: usize, end: usize, out: &mut [f32]) {
     let n = grads.n();
-    let d = grads.d();
-    assert_eq!(out.len(), n * n, "pairwise: out must be n*n");
-    out.fill(0.0);
-    let mut start = 0;
-    while start < d {
-        let end = (start + BLOCK_D).min(d);
+    let mut s = start;
+    while s < end {
+        let e = (s + BLOCK_D).min(end);
         for i in 0..n {
-            let gi = &grads.row(i)[start..end];
+            let gi = &grads.row(i)[s..e];
             for j in (i + 1)..n {
-                let gj = &grads.row(j)[start..end];
-                let partial = sq_distance(gi, gj);
-                out[i * n + j] += partial;
+                let gj = &grads.row(j)[s..e];
+                out[i * n + j] += sq_distance(gi, gj);
             }
         }
-        start = end;
+        s = e;
     }
-    // Mirror the upper triangle.
+}
+
+/// Mirror the upper triangle into the lower one (diagonal stays 0).
+fn mirror_lower(out: &mut [f32], n: usize) {
     for i in 0..n {
         for j in (i + 1)..n {
             out[j * n + i] = out[i * n + j];
         }
     }
+}
+
+/// Compute all pairwise squared distances into `out` (`n*n`, row-major,
+/// symmetric, zero diagonal), sharding the `d` dimension across `par`.
+///
+/// `partials` is the grow-only per-chunk scratch (⌈d/SHARD_D⌉ · n² floats,
+/// normally `GarScratch::partials`, reused across rounds; the fan-out
+/// additionally allocates a small per-call work-item vector — one entry
+/// per chunk). Results are bit-identical for every thread count; see the
+/// module docs.
+pub fn pairwise_sq_distances_sharded(
+    grads: &GradMatrix,
+    out: &mut [f32],
+    par: &Parallelism,
+    partials: &mut Vec<f32>,
+) {
+    let n = grads.n();
+    let d = grads.d();
+    assert_eq!(out.len(), n * n, "pairwise: out must be n*n");
+    out.fill(0.0);
+    if d == 0 || n == 0 {
+        return;
+    }
+    let nn = n * n;
+    let chunks = (d + SHARD_D - 1) / SHARD_D;
+    partials.clear();
+    partials.resize(chunks * nn, 0.0);
+    {
+        // One work item per chunk, carrying the chunk's disjoint partial
+        // buffer; the pool claims chunks dynamically (load balance).
+        let items: Vec<(usize, &mut [f32])> = partials.chunks_mut(nn).enumerate().collect();
+        run_items(par, items, |_, (c, buf)| {
+            let start = c * SHARD_D;
+            let end = (start + SHARD_D).min(d);
+            partial_distances_upper(grads, start, end, buf);
+        });
+    }
+    // Ordered reduction: fixed ascending-chunk order keeps the result
+    // independent of which thread computed which chunk.
+    for c in 0..chunks {
+        let src = &partials[c * nn..(c + 1) * nn];
+        for (o, s) in out.iter_mut().zip(src) {
+            *o += s;
+        }
+    }
+    mirror_lower(out, n);
+}
+
+/// Compute all pairwise squared distances into `out` (`n*n`, row-major,
+/// symmetric, zero diagonal) on the calling thread. No allocation — the
+/// stripe partials accumulate directly into `out` (left-associated, so
+/// final-bit rounding can differ from the chunk-grouped
+/// [`pairwise_sq_distances_sharded`] at d > [`SHARD_D`]; the GAR hot path
+/// uses the sharded variant exclusively, keeping the bit-identical
+/// contract within it).
+pub fn pairwise_sq_distances_into(grads: &GradMatrix, out: &mut [f32]) {
+    let n = grads.n();
+    let d = grads.d();
+    assert_eq!(out.len(), n * n, "pairwise: out must be n*n");
+    out.fill(0.0);
+    partial_distances_upper(grads, 0, d, out);
+    mirror_lower(out, n);
 }
 
 /// Allocating convenience wrapper around [`pairwise_sq_distances_into`].
@@ -97,6 +178,40 @@ mod tests {
             assert_eq!(d[i * 6 + i], 0.0);
             for j in 0..6 {
                 assert_eq!(d[i * 6 + j], d[j * 6 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_is_bit_identical_across_thread_counts() {
+        // Crosses several SHARD_D boundaries; accumulation order must not
+        // depend on the thread count.
+        let d = 3 * SHARD_D + 517;
+        let g = GradMatrix::from_fn(7, d, |i, j| ((i * 131 + j) % 251) as f32 * 0.013 - 1.5);
+        let n = g.n();
+        let mut seq = vec![0.0f32; n * n];
+        let mut scratch_seq = Vec::new();
+        pairwise_sq_distances_sharded(&g, &mut seq, &Parallelism::sequential(), &mut scratch_seq);
+        for threads in [2usize, 3, 4] {
+            let par = Parallelism::new(threads);
+            let mut out = vec![0.0f32; n * n];
+            let mut scratch = Vec::new();
+            pairwise_sq_distances_sharded(&g, &mut out, &par, &mut scratch);
+            assert_eq!(seq, out, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_scratch_reuse_across_shapes() {
+        let par = Parallelism::new(2);
+        let mut partials = Vec::new();
+        for (n, d) in [(5usize, SHARD_D + 3), (3, 64), (5, 2 * SHARD_D)] {
+            let g = GradMatrix::from_fn(n, d, |i, j| (i + j % 17) as f32 * 0.1);
+            let mut out = vec![0.0f32; n * n];
+            pairwise_sq_distances_sharded(&g, &mut out, &par, &mut partials);
+            let reference = naive(&g);
+            for (a, b) in out.iter().zip(&reference) {
+                assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "n={n} d={d}");
             }
         }
     }

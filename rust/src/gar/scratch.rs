@@ -5,16 +5,41 @@
 //! (buffers are grown on first use and reused afterwards). One scratch may
 //! be shared across different rules — each `get_*` accessor resizes on
 //! demand.
+//!
+//! The parallel engine adds two grow-only members: `partials` (per-chunk
+//! n×n matrices of the sharded pairwise-distance pass) and `shards` (one
+//! [`ShardScratch`] per coordinate-range shard of the per-coordinate
+//! passes), so the large O(d)/O(n²)-sized buffers are reused across
+//! rounds. (The parallel fan-out itself still allocates tiny per-region
+//! bookkeeping — ≤ threads work items per pass; see ROADMAP.)
+
+/// Per-shard working buffers of the coordinate-sharded passes (median /
+/// trimmed-mean columns, BULYAN's deviation pairs). Each shard of
+/// `runtime::shard_slice` owns one, so threads never share hot buffers.
+#[derive(Debug, Default)]
+pub(crate) struct ShardScratch {
+    /// Per-coordinate working column (n or θ values).
+    pub(crate) column: Vec<f32>,
+    /// (deviation, value) pairs for the per-coordinate β-selection.
+    pub(crate) pairs: Vec<(f32, f32)>,
+}
+
+impl ShardScratch {
+    fn capacity_bytes(&self) -> usize {
+        self.column.capacity() * std::mem::size_of::<f32>()
+            + self.pairs.capacity() * std::mem::size_of::<(f32, f32)>()
+    }
+}
 
 /// Grow-only scratch space shared by all GAR implementations.
 #[derive(Debug, Default)]
 pub struct GarScratch {
     /// `n × n` pairwise squared-distance matrix.
     pub(crate) distances: Vec<f32>,
+    /// Per-chunk partial distance matrices of the sharded pairwise pass.
+    pub(crate) partials: Vec<f32>,
     /// Per-worker Krum scores.
     pub(crate) scores: Vec<f32>,
-    /// Per-coordinate working column (n values) for median-style rules.
-    pub(crate) column: Vec<f32>,
     /// Selection pool indices (BULYAN's shrinking candidate set).
     pub(crate) pool: Vec<usize>,
     /// θ × d matrix of per-iteration MULTI-KRUM averages (BULYAN's G^agr).
@@ -27,8 +52,8 @@ pub struct GarScratch {
     pub(crate) indices: Vec<usize>,
     /// Running sum of alive rows (BULYAN's incremental-average trick).
     pub(crate) sumbuf: Vec<f32>,
-    /// (deviation, value) pairs for the per-coordinate β-selection.
-    pub(crate) pairs: Vec<(f32, f32)>,
+    /// One working set per coordinate-range shard.
+    pub(crate) shards: Vec<ShardScratch>,
 }
 
 impl GarScratch {
@@ -43,23 +68,17 @@ impl GarScratch {
         &mut self.distances
     }
 
-    pub(crate) fn column_mut(&mut self, n: usize) -> &mut Vec<f32> {
-        self.column.clear();
-        self.column.resize(n, 0.0);
-        &mut self.column
-    }
-
     /// Total bytes currently held (for the metrics/perf reports).
     pub fn capacity_bytes(&self) -> usize {
         (self.distances.capacity()
+            + self.partials.capacity()
             + self.scores.capacity()
-            + self.column.capacity()
             + self.agr.capacity()
             + self.ext.capacity()
             + self.medians.capacity()
             + self.sumbuf.capacity()) * std::mem::size_of::<f32>()
-            + self.pairs.capacity() * std::mem::size_of::<(f32, f32)>()
             + (self.pool.capacity() + self.indices.capacity()) * std::mem::size_of::<usize>()
+            + self.shards.iter().map(ShardScratch::capacity_bytes).sum::<usize>()
     }
 }
 
@@ -78,5 +97,16 @@ mod tests {
         // No shrink: capacity retained for reuse.
         assert_eq!(s.distances.capacity(), cap);
         assert!(s.capacity_bytes() > 0);
+    }
+
+    #[test]
+    fn shard_scratch_counts_toward_capacity() {
+        let mut s = GarScratch::new();
+        let before = s.capacity_bytes();
+        s.shards.push(ShardScratch {
+            column: Vec::with_capacity(64),
+            pairs: Vec::with_capacity(64),
+        });
+        assert!(s.capacity_bytes() > before);
     }
 }

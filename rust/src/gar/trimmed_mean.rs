@@ -2,7 +2,9 @@
 //! baseline the paper's related-work discusses; included as a comparator
 //! for the resilience and slowdown benches.
 
+use super::scratch::ShardScratch;
 use super::{check_shape, Gar, GarScratch};
+use crate::runtime::{shard_slice, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::{insertion_sort, GradMatrix};
 use crate::Result;
 
@@ -17,6 +19,7 @@ const SMALL_N: usize = 64;
 pub struct TrimmedMean {
     n: usize,
     f: usize,
+    par: Parallelism,
 }
 
 impl TrimmedMean {
@@ -25,7 +28,17 @@ impl TrimmedMean {
             n >= 2 * f + 1,
             "trimmed-mean: requires n ≥ 2f+1 (got n={n}, f={f})"
         );
-        Ok(Self { n, f })
+        Ok(Self {
+            n,
+            f,
+            par: Parallelism::sequential(),
+        })
+    }
+
+    /// Use `par` for the coordinate-sharded O(nd) pass.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 }
 
@@ -53,23 +66,37 @@ impl Gar for TrimmedMean {
         scratch: &mut GarScratch,
     ) -> Result<()> {
         check_shape("trimmed-mean", grads, self.n, out)?;
-        let keep = self.n - 2 * self.f;
-        let col = scratch.column_mut(self.n);
-        for j in 0..grads.d() {
-            for i in 0..self.n {
-                col[i] = grads.row(i)[j];
-            }
-            // Order so that [f, n-f) holds the middle n-2f values.
-            if self.f > 0 {
-                if self.n <= SMALL_N {
-                    insertion_sort(col);
-                } else {
-                    col.select_nth_unstable_by(self.f - 1, f32::total_cmp);
-                    col[self.f..].select_nth_unstable_by(keep - 1, f32::total_cmp);
+        let n = self.n;
+        let f = self.f;
+        let keep = n - 2 * f;
+        shard_slice(
+            &self.par,
+            out,
+            &mut scratch.shards,
+            ShardScratch::default,
+            MIN_COORDS_PER_SHARD,
+            |offset, range, shard| {
+                shard.column.clear();
+                shard.column.resize(n, 0.0);
+                let col = &mut shard.column;
+                for (k, o) in range.iter_mut().enumerate() {
+                    let j = offset + k;
+                    for i in 0..n {
+                        col[i] = grads.row(i)[j];
+                    }
+                    // Order so that [f, n-f) holds the middle n-2f values.
+                    if f > 0 {
+                        if n <= SMALL_N {
+                            insertion_sort(col);
+                        } else {
+                            col.select_nth_unstable_by(f - 1, f32::total_cmp);
+                            col[f..].select_nth_unstable_by(keep - 1, f32::total_cmp);
+                        }
+                    }
+                    *o = col[f..n - f].iter().sum::<f32>() / keep as f32;
                 }
-            }
-            out[j] = col[self.f..self.n - self.f].iter().sum::<f32>() / keep as f32;
-        }
+            },
+        );
         Ok(())
     }
 }
@@ -109,5 +136,17 @@ mod tests {
         let g = GradMatrix::from_rows(&rows);
         let out = TrimmedMean::new(9, 2).unwrap().aggregate(&g).unwrap();
         assert!((0.0..=6.0).contains(&out[0]));
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let g = GradMatrix::from_fn(9, 12_000, |i, j| ((i * 19 + j * 3) % 127) as f32 * 0.02 - 1.0);
+        let seq = TrimmedMean::new(9, 2).unwrap().aggregate(&g).unwrap();
+        let par = TrimmedMean::new(9, 2)
+            .unwrap()
+            .with_parallelism(Parallelism::new(4))
+            .aggregate(&g)
+            .unwrap();
+        assert_eq!(seq, par);
     }
 }

@@ -15,7 +15,34 @@
 //! * **Layer 3 (this crate, request path)** — the rust coordinator: a
 //!   parameter server, simulated worker cluster, Byzantine attack library,
 //!   native GAR implementations, and a PJRT runtime that loads and executes
-//!   the AOT artifacts. Python never runs on the request path.
+//!   the AOT artifacts. Python never runs on the request path. (In the
+//!   offline build the PJRT client is the `runtime::xla_stub` shim:
+//!   artifact execution reports "PJRT unavailable" at runtime while the
+//!   rust-native quadratic workload runs everything end-to-end.)
+//!
+//! ## Parallel aggregation engine
+//!
+//! Every GAR hot loop is sharded across a crate-internal, std-only thread
+//! pool ([`runtime::ThreadPool`] + [`runtime::Parallelism`]):
+//!
+//! * the O(n²d) pairwise-distance pass splits the `d` dimension into
+//!   fixed-width chunks, computes per-chunk partial `n × n` matrices, and
+//!   reduces them in ascending chunk order
+//!   ([`gar::pairwise_sq_distances_sharded`]);
+//! * the O(nd)/O(θd) per-coordinate passes (median, trimmed mean, the
+//!   BULYAN trimmed average, every row-average) split the output vector
+//!   into disjoint coordinate ranges with per-shard scratch buffers
+//!   ([`runtime::shard_slice`]).
+//!
+//! Both decompositions depend only on `d` — never on the thread count —
+//! so aggregation results are **bit-identical** for every `threads`
+//! setting (enforced by `tests/prop_gar.rs`); the knob is purely latency.
+//! It flows from config (`threads = 4` at the top level, or
+//! `--threads 4` on the CLI; `0` auto-detects, `1` — the default — is
+//! sequential) through [`coordinator::launch`] into
+//! [`gar::GarKind::instantiate_parallel`], and the large per-round
+//! buffers are reused via the per-shard members of [`gar::GarScratch`]
+//! (only tiny per-region work-item vectors are allocated per call).
 //!
 //! ## Quick start
 //!

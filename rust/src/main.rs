@@ -84,16 +84,18 @@ USAGE:
   multibulyan train [--config FILE] [--gar G] [--attack A] [--n N] [--f F]
                     [--byzantine B] [--model quadratic|mlp|cnn|transformer]
                     [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
-                    [--eval-every K] [--seed S] [--artifacts DIR]
-                    [--curve-out FILE]
-  multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D]
-  multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|cone>
+                    [--eval-every K] [--seed S] [--threads T]
+                    [--artifacts DIR] [--curve-out FILE]
+  multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
+  multibulyan bench <fig2|fig3|dscaling|slowdown|threads|resilience|cone>
                     [--full] [--artifacts DIR]
   multibulyan artifacts-check [--artifacts DIR]
 
 GARs:    average median trimmed-mean krum multi-krum bulyan multi-bulyan
 Attacks: none sign-flip random-gauss infinity nan little-is-enough
          omniscient mimic zero
+Threads: --threads 1 (sequential, default) | 0 (auto) | N (shared pool);
+         aggregation output is bit-identical for every setting
 ";
 
 fn main() {
@@ -169,10 +171,19 @@ fn cmd_train(args: &Args) -> Result<()> {
                     eval_every: args.parse_or("eval-every", 50)?,
                     seed: args.parse_or("seed", 1)?,
                 },
+                // Default; the shared --threads override below applies
+                // whenever the flag is present.
+                threads: 1,
                 output_dir: None,
             }
         }
     };
+    let mut exp = exp;
+    if let Some(t) = args.get("threads") {
+        exp.threads = t
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--threads {t}: {e}"))?;
+    }
     exp.validate()?;
     let compute = match &exp.model {
         ModelConfig::Artifact { dir, .. } => {
@@ -217,7 +228,14 @@ fn cmd_aggregate(args: &Args) -> Result<()> {
     let n: usize = args.parse_or("n", 11)?;
     let f: usize = args.parse_or("f", 2)?;
     let dim: usize = args.parse_or("dim", 100_000)?;
-    let rule = kind.instantiate(n, f)?;
+    let threads: usize = args.parse_or("threads", 1)?;
+    anyhow::ensure!(
+        threads <= multibulyan::config::MAX_THREADS,
+        "--threads must be ≤ {} (0 = auto, 1 = sequential), got {threads}",
+        multibulyan::config::MAX_THREADS
+    );
+    let par = multibulyan::runtime::Parallelism::new(threads);
+    let rule = kind.instantiate_parallel(n, f, &par)?;
     let mut rng = Rng64::seed_from_u64(0);
     let grads = GradMatrix::uniform(n, dim, 0.0, 1.0, &mut rng);
     let sw = multibulyan::metrics::Stopwatch::start();
@@ -283,6 +301,26 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let cfg = bench::slowdown::SlowdownConfig::default();
             bench::slowdown::run(&cfg, false)?;
         }
+        "threads" => {
+            // Thread-scaling of the aggregation hot path (the ROADMAP
+            // "hot path measurably faster" item). d ∈ {1e5, 1e6} per the
+            // acceptance grid; --full adds the paper-scale 1e7.
+            let dims: Vec<usize> = if full {
+                vec![100_000, 1_000_000, 10_000_000]
+            } else {
+                vec![100_000, 1_000_000]
+            };
+            let threads = [1usize, 2, 4, 8];
+            bench::slowdown::thread_sweep(
+                11,
+                2,
+                &dims,
+                &threads,
+                &[GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median],
+                multibulyan::metrics::TimingProtocol::default(),
+                false,
+            )?;
+        }
         "resilience" => {
             let cfg = bench::resilience::GauntletConfig::default();
             bench::resilience::run(&cfg, false)?;
@@ -292,7 +330,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::cone::run(&cfg, false)?;
         }
         other => anyhow::bail!(
-            "unknown bench '{other}' (fig2|fig3|dscaling|slowdown|resilience|cone)"
+            "unknown bench '{other}' (fig2|fig3|dscaling|slowdown|threads|resilience|cone)"
         ),
     }
     Ok(())

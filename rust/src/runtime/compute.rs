@@ -9,6 +9,10 @@
 //! cast counts/scalars to f32 so one conversion path suffices).
 
 use super::manifest::Manifest;
+// The offline build compiles against the in-tree API shim instead of the
+// real `xla` crate; swap this alias (plus a Cargo dependency) to restore
+// actual PJRT execution. See `runtime::xla_stub` docs.
+use super::xla_stub as xla;
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;

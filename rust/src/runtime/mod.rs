@@ -1,12 +1,15 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
-//! rust request path.
+//! Runtime services: the PJRT artifact executor and the crate's parallel
+//! execution engine ([`pool`] — thread pool + coordinate sharding).
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so all PJRT
 //! state lives on one dedicated **compute thread** ([`ComputeServer`]);
 //! the rest of the system talks to it through a cloneable, `Send + Sync`
-//! [`ComputeHandle`] (std-mpsc request queue + tokio-oneshot responses).
-//! This mirrors the paper's testbed anyway: a single accelerator shared by
-//! all simulated workers, requests serialised at the device.
+//! [`ComputeHandle`] (std-mpsc request queue + per-request std-mpsc reply
+//! channels). This mirrors the paper's testbed anyway: a single
+//! accelerator shared by all simulated workers, requests serialised at the
+//! device. In this offline build the client is the [`xla_stub`] shim:
+//! artifact execution reports "PJRT unavailable" at runtime while the
+//! whole call surface still compiles and validates arguments.
 //!
 //! Artifacts are HLO **text** produced by `python/compile/aot.py`
 //! (serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1 —
@@ -16,9 +19,15 @@
 
 mod compute;
 mod manifest;
+pub mod pool;
+pub(crate) mod xla_stub;
 
 pub use compute::{ArgValue, ComputeHandle, ComputeServer};
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+pub use pool::{
+    run_items, shard_slice, shard_slice_stateless, Parallelism, ThreadPool,
+    MIN_COORDS_PER_SHARD,
+};
 
 /// Read a raw little-endian f32 binary file (initial parameter vectors).
 pub fn read_f32_bin(path: impl AsRef<std::path::Path>) -> crate::Result<Vec<f32>> {

@@ -1,0 +1,504 @@
+//! Crate-internal thread pool + coordinate-sharding helpers — the parallel
+//! aggregation engine (std-only; the offline environment has no rayon).
+//!
+//! Design:
+//!
+//! * [`ThreadPool`] owns `threads − 1` persistent workers; the calling
+//!   thread participates in every parallel region, so `threads = 1` means
+//!   "no pool at all" and the sequential path has zero synchronisation
+//!   overhead.
+//! * The one primitive is [`ThreadPool::run_sharded`]: run `f(0..shards)`
+//!   with dynamic shard claiming (an atomic counter — load-balanced for
+//!   unequal shard costs) and block until every shard has finished.
+//! * [`Parallelism`] is the cheap, cloneable handle the GARs hold: either
+//!   sequential or an `Arc<ThreadPool>` shared by every rule of a
+//!   coordinator (the `threads` experiment-config knob).
+//! * [`shard_slice`] / [`shard_slice_stateless`] split an output slice into
+//!   disjoint contiguous coordinate ranges, one per shard, with an optional
+//!   per-shard scratch state — the shared helper behind every
+//!   per-coordinate GAR pass. Because shards own disjoint ranges and each
+//!   coordinate's arithmetic is untouched, results are **bit-identical**
+//!   to the sequential pass for every thread count (the property
+//!   `rust/tests/prop_gar.rs::parallel_output_bit_identical_to_sequential`
+//!   locks in).
+//!
+//! Reentrancy: a shard function must not call back into the same pool
+//! (`run_sharded` from inside a shard deadlocks on the `active` lock). No
+//! GAR pass nests parallel regions.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Coordinate ranges shorter than this stay sequential: below ~4k f32 the
+/// wakeup + completion handshake costs more than the pass itself.
+pub const MIN_COORDS_PER_SHARD: usize = 4096;
+
+/// Lifetime-erased pointer to the scope's shard function. A raw pointer —
+/// not a reference — so that a worker still holding `Arc<Task>` after the
+/// submitting call returned holds only a (possibly dangling) address, not
+/// a dangling reference; it is dereferenced strictly for claims made while
+/// the submitter blocks on `pending` (see the SAFETY note in
+/// [`ThreadPool::run_sharded`]).
+struct TaskFn(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared `&`-calls from any thread are
+// fine), and the pointer is only dereferenced while the pointee is alive.
+unsafe impl Send for TaskFn {}
+unsafe impl Sync for TaskFn {}
+
+/// One in-flight parallel region.
+struct Task {
+    f: TaskFn,
+    /// Next shard index to claim.
+    next: AtomicUsize,
+    /// Shards not yet completed.
+    pending: AtomicUsize,
+    shards: usize,
+    /// Set when any shard panicked; re-raised on the calling thread.
+    panicked: AtomicBool,
+    /// First panic payload, re-thrown by the caller so the original
+    /// message/location survives the thread hop.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+#[derive(Default)]
+struct PoolState {
+    task: Option<Arc<Task>>,
+    /// Bumped per task so sleeping workers can tell "new task" from
+    /// spurious wakeups.
+    generation: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new task (or shutdown).
+    work_cv: Condvar,
+    /// The caller waits here for `pending == 0`.
+    done_cv: Condvar,
+    /// Serialises parallel regions: one `run_sharded` at a time per pool.
+    active: Mutex<()>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panicked shard is already recorded in `Task::panicked`; lock
+    // poisoning carries no extra information here.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Claim and run shards of `task` until none remain.
+fn run_task(shared: &Shared, task: &Task) {
+    loop {
+        let i = task.next.fetch_add(1, Ordering::Relaxed);
+        if i >= task.shards {
+            break;
+        }
+        // SAFETY: `i < shards`, so this claim was handed out while the
+        // submitting `run_sharded` is still blocked on `pending` — the
+        // pointee is alive for the whole call.
+        let f = unsafe { &*task.f.0 };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            let mut slot = lock(&task.panic_payload);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+            drop(slot);
+            task.panicked.store(true, Ordering::Relaxed);
+        }
+        // AcqRel + the caller's Acquire load form the standard countdown
+        // latch: when the caller observes 0, every shard's writes are
+        // visible to it.
+        if task.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _st = lock(&shared.state);
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_generation = 0u64;
+    loop {
+        let task = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen_generation {
+                    seen_generation = st.generation;
+                    if let Some(task) = st.task.clone() {
+                        break task;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        run_task(&shared, &task);
+    }
+}
+
+/// A fixed-size pool of persistent worker threads (see module docs).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl ThreadPool {
+    /// Spawn a pool executing parallel regions on `threads` threads total
+    /// (`threads − 1` workers + the calling thread).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            active: Mutex::new(()),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gar-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            threads,
+        }
+    }
+
+    /// Total threads participating in a parallel region (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..shards` across the pool; shards are
+    /// claimed dynamically. Blocks until all shards completed. Panics
+    /// (after completion of the region) if any shard panicked.
+    pub fn run_sharded(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        if shards == 0 {
+            return;
+        }
+        if self.workers.is_empty() || shards == 1 {
+            for i in 0..shards {
+                f(i);
+            }
+            return;
+        }
+        let _active = lock(&self.shared.active);
+        // SAFETY: the pointer escapes only into `Task`, and `run_task`
+        // dereferences it exclusively for claims `i < shards` — all of
+        // which complete before the matching `pending` decrement. This
+        // function returns only after observing `pending == 0`, so every
+        // dereference happens while `f` is alive; afterwards workers may
+        // still hold the (now dangling) raw pointer inside `Arc<Task>`,
+        // which is fine — it is never dereferenced again.
+        let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let task = Arc::new(Task {
+            f: TaskFn(f_erased),
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(shards),
+            shards,
+            panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
+        });
+        {
+            let mut st = lock(&self.shared.state);
+            st.generation = st.generation.wrapping_add(1);
+            st.task = Some(Arc::clone(&task));
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is a full participant.
+        run_task(&self.shared, &task);
+        let mut st = lock(&self.shared.state);
+        while task.pending.load(Ordering::Acquire) != 0 {
+            st = self
+                .shared
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        st.task = None;
+        drop(st);
+        if task.panicked.load(Ordering::Relaxed) {
+            // Re-raise the original payload so message/location survive.
+            if let Some(payload) = lock(&task.panic_payload).take() {
+                resume_unwind(payload);
+            }
+            panic!("ThreadPool: a sharded task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+/// The execution-policy handle every GAR holds: sequential, or a shared
+/// [`ThreadPool`]. Cloning shares the pool.
+#[derive(Clone, Debug, Default)]
+pub struct Parallelism {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl Parallelism {
+    /// Single-threaded execution (the default; zero overhead).
+    pub fn sequential() -> Self {
+        Self { pool: None }
+    }
+
+    /// `threads = 0` auto-detects (`available_parallelism`), `1` is
+    /// sequential, `n > 1` builds an `n`-thread pool.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        if threads <= 1 {
+            Self::sequential()
+        } else {
+            Self {
+                pool: Some(Arc::new(ThreadPool::new(threads))),
+            }
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
+    }
+
+    /// Run `f(0..shards)`, on the pool when present, inline otherwise.
+    /// Shard order is unspecified in the pooled case — callers must only
+    /// rely on disjoint shards (results then cannot depend on order).
+    pub fn run_sharded(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        match &self.pool {
+            Some(pool) if shards > 1 => pool.run_sharded(shards, f),
+            _ => {
+                for i in 0..shards {
+                    f(i);
+                }
+            }
+        }
+    }
+}
+
+/// Run `f(index, item)` once per item, distributing the items across the
+/// pool (each item is moved into exactly one call). This is the one
+/// ownership-handoff primitive behind [`shard_slice`] and the pairwise
+/// chunk fan-out: the per-item `Mutex<Option<_>>` is uncontended — it
+/// exists only to move `&mut`-carrying items out of a shared closure.
+pub fn run_items<T: Send>(par: &Parallelism, items: Vec<T>, f: impl Fn(usize, T) + Sync) {
+    if items.is_empty() {
+        return;
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|it| Mutex::new(Some(it))).collect();
+    par.run_sharded(slots.len(), &|i| {
+        let item = lock(&slots[i]).take().expect("work item claimed twice");
+        f(i, item);
+    });
+}
+
+/// Split `out` into at most `par.threads()` contiguous ranges of at least
+/// `min_chunk` coordinates and run `f(offset, range, state)` on each, with
+/// a dedicated `S` per shard (grown on demand via `mk_state` — the
+/// per-shard half of the zero-allocation steady state). Bit-identical to
+/// the sequential pass by construction: each coordinate is computed by
+/// exactly one shard with unchanged arithmetic.
+pub fn shard_slice<S: Send>(
+    par: &Parallelism,
+    out: &mut [f32],
+    states: &mut Vec<S>,
+    mut mk_state: impl FnMut() -> S,
+    min_chunk: usize,
+    f: impl Fn(usize, &mut [f32], &mut S) + Sync,
+) {
+    let len = out.len();
+    if len == 0 {
+        return;
+    }
+    let min_chunk = min_chunk.max(1);
+    // Floor division: never split below `min_chunk` coordinates per shard
+    // (a sub-threshold shard costs more in handshake than it computes).
+    let max_useful = (len / min_chunk).max(1);
+    let shards = par.threads().min(max_useful);
+    while states.len() < shards {
+        states.push(mk_state());
+    }
+    if shards == 1 {
+        f(0, out, &mut states[0]);
+        return;
+    }
+    let chunk_len = (len + shards - 1) / shards;
+    // One work item per shard: (offset, disjoint sub-slice, its state).
+    #[allow(clippy::type_complexity)]
+    let mut items: Vec<(usize, &mut [f32], &mut S)> = Vec::with_capacity(shards);
+    {
+        let mut rest: &mut [f32] = out;
+        let mut offset = 0usize;
+        let mut state_iter = states[..shards].iter_mut();
+        while !rest.is_empty() {
+            let take = chunk_len.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let state = state_iter.next().expect("one state per shard");
+            items.push((offset, head, state));
+            offset += take;
+        }
+    }
+    run_items(par, items, |_, (offset, range, state)| {
+        f(offset, range, state);
+    });
+}
+
+/// [`shard_slice`] without per-shard state.
+pub fn shard_slice_stateless(
+    par: &Parallelism,
+    out: &mut [f32],
+    min_chunk: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    let mut states: Vec<()> = Vec::new();
+    shard_slice(par, out, &mut states, || (), min_chunk, |offset, range, _| {
+        f(offset, range)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_shard_runs_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for shards in [1usize, 2, 3, 7, 64] {
+            let counts: Vec<AtomicU32> = (0..shards).map(|_| AtomicU32::new(0)).collect();
+            pool.run_sharded(shards, &|i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "shard {i} of {shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn borrows_local_data_and_reuses_pool() {
+        let pool = ThreadPool::new(3);
+        let input: Vec<u64> = (0..1000).collect();
+        for _round in 0..5 {
+            let partial: Vec<AtomicU32> = (0..4).map(|_| AtomicU32::new(0)).collect();
+            pool.run_sharded(4, &|s| {
+                let chunk = 250;
+                let sum: u64 = input[s * chunk..(s + 1) * chunk].iter().sum();
+                partial[s].store(sum as u32, Ordering::Relaxed);
+            });
+            let total: u64 = partial
+                .iter()
+                .map(|p| p.load(Ordering::Relaxed) as u64)
+                .sum();
+            assert_eq!(total, 1000 * 999 / 2);
+        }
+    }
+
+    #[test]
+    fn shard_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_sharded(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // The pool must still work afterwards.
+        let ran = AtomicU32::new(0);
+        pool.run_sharded(3, &|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn parallelism_thread_counts() {
+        assert_eq!(Parallelism::sequential().threads(), 1);
+        assert_eq!(Parallelism::new(1).threads(), 1);
+        assert_eq!(Parallelism::new(3).threads(), 3);
+        assert!(Parallelism::new(0).threads() >= 1);
+        // Clones share the pool.
+        let p = Parallelism::new(2);
+        let q = p.clone();
+        assert_eq!(q.threads(), 2);
+    }
+
+    #[test]
+    fn shard_slice_covers_every_coordinate_once() {
+        for threads in [1usize, 2, 4] {
+            let par = Parallelism::new(threads);
+            let mut out = vec![0.0f32; 10_000];
+            let mut states: Vec<u32> = Vec::new();
+            shard_slice(&par, &mut out, &mut states, || 0u32, 128, |offset, range, hits| {
+                *hits += 1;
+                for (k, v) in range.iter_mut().enumerate() {
+                    *v += (offset + k) as f32;
+                }
+            });
+            for (j, v) in out.iter().enumerate() {
+                assert_eq!(*v, j as f32, "threads={threads} coord {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_slice_sequential_below_min_chunk() {
+        let par = Parallelism::new(4);
+        let mut out = vec![0.0f32; 100];
+        let mut states: Vec<u32> = Vec::new();
+        shard_slice(&par, &mut out, &mut states, || 0u32, 4096, |offset, range, _| {
+            assert_eq!(offset, 0);
+            assert_eq!(range.len(), 100);
+        });
+        assert_eq!(states.len(), 1);
+    }
+
+    #[test]
+    fn shard_slice_stateless_matches_sequential_fill() {
+        let par = Parallelism::new(3);
+        let mut a = vec![0.0f32; 5_000];
+        let mut b = vec![0.0f32; 5_000];
+        shard_slice_stateless(&par, &mut a, 512, |offset, range| {
+            for (k, v) in range.iter_mut().enumerate() {
+                *v = ((offset + k) as f32).sin();
+            }
+        });
+        for (j, v) in b.iter_mut().enumerate() {
+            *v = (j as f32).sin();
+        }
+        assert_eq!(a, b);
+    }
+}

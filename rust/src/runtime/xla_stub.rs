@@ -1,0 +1,222 @@
+//! API-compatible shim for the `xla` crate (PJRT bindings).
+//!
+//! The offline build environment ships no `xla`/`xla_extension` crate, so
+//! the compute thread is compiled against this stub instead (see the
+//! `use super::xla_stub as xla;` alias in [`super::compute`]). The shim
+//! reproduces exactly the surface `compute.rs` touches:
+//!
+//! * [`Literal`] is fully functional host-side (typed storage + shape) —
+//!   argument validation and the `ArgValue → Literal` conversion behave as
+//!   they would against the real crate;
+//! * [`PjRtClient::cpu`] returns an error, so every artifact execution
+//!   reports "PJRT unavailable" at runtime instead of failing the build.
+//!   Swapping in the real bindings is a one-line change in `runtime/mod.rs`
+//!   plus a Cargo dependency — no call-site edits.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for `?`/`Display`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Typed element storage for [`Literal`] (public only because the
+/// [`NativeType`] trait mentions it; treat as opaque).
+#[derive(Debug, Clone)]
+pub enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Store {
+    fn len(&self) -> usize {
+        match self {
+            Store::F32(v) => v.len(),
+            Store::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold (`f32`/`i32` — all the AOT
+/// artifacts use).
+pub trait NativeType: Copy + Sized {
+    fn wrap(v: Vec<Self>) -> Store;
+    fn unwrap(s: &Store) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Store {
+        Store::F32(v)
+    }
+
+    fn unwrap(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::F32(v) => Some(v.clone()),
+            Store::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Store {
+        Store::I32(v)
+    }
+
+    fn unwrap(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::I32(v) => Some(v.clone()),
+            Store::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side tensor literal: typed flat storage + dims.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    store: Store,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            store: T::wrap(v.to_vec()),
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match; an empty dims
+    /// list is a scalar, product 1).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.store.len() {
+            return Err(Error::new(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.store.len()
+            )));
+        }
+        Ok(Literal {
+            store: self.store,
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.store.len()
+    }
+
+    /// The stub never produces device tuples (execution is unavailable).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::new("stub literal is not a tuple (PJRT unavailable)"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.store).ok_or_else(|| Error::new("literal dtype mismatch"))
+    }
+}
+
+/// Parsed HLO module (text is retained; nothing interprets it here).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::new(format!("reading {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation wrapper (opaque here).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in this build; the
+/// compute loop degrades to per-request "PJRT unavailable" errors.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::new(
+            "PJRT unavailable: this build uses the in-tree xla stub \
+             (offline environment without the xla_extension bindings); \
+             artifact-backed models cannot execute",
+        ))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::new("PJRT unavailable: cannot compile artifacts"))
+    }
+}
+
+/// Compiled executable handle (never constructed in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::new("PJRT unavailable: cannot execute artifacts"))
+    }
+}
+
+/// Device buffer handle (never constructed in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::new("PJRT unavailable: no device buffers"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.element_count(), 4);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        let scalar = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(scalar.element_count(), 1);
+        assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+}

@@ -158,6 +158,7 @@ fn training_through_pjrt_learns_under_attack() {
             eval_every: 0,
             seed: 1,
         },
+        threads: 1,
         output_dir: None,
     };
     let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();

@@ -38,6 +38,7 @@ fn quadratic_exp(
             eval_every: 0,
             seed: 5,
         },
+        threads: 1,
         output_dir: None,
     }
 }

@@ -8,6 +8,7 @@
 //! family, and the resilience contracts under adversarial rows.
 
 use multibulyan::gar::{Gar, GarKind, GarScratch};
+use multibulyan::runtime::Parallelism;
 use multibulyan::tensor::GradMatrix;
 use multibulyan::util::proptest::{check, default_cases};
 use multibulyan::util::Rng64;
@@ -224,6 +225,67 @@ fn scratch_reuse_is_deterministic() {
                 .map_err(|e| e.to_string())?;
             if out1 != out2 {
                 return Err("scratch reuse changed the result".into());
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn parallel_output_bit_identical_to_sequential() {
+    // The sharded parallel engine must be invisible: for every rule and
+    // every (n, f, d, threads) the aggregate equals the sequential one
+    // **bit for bit** (`==`, not approximately) — the contract that makes
+    // `threads` a pure latency knob. Exercises small d (sharding disabled),
+    // d around the coordinate-shard threshold, and adversarial ±1e30 rows
+    // (whose squared distances overflow to +inf).
+    for kind in GarKind::ALL {
+        check(&format!("parallel-vs-seq/{kind}"), default_cases(), |rng, _| {
+            let f = rng.gen_range_usize(3); // 0..=2
+            let n = kind.min_n(f).max(3) + rng.gen_range_usize(6);
+            // Mix tiny and shard-crossing dimensions.
+            let d = match rng.gen_range_usize(3) {
+                0 => 1 + rng.gen_range_usize(64),
+                1 => 3_000 + rng.gen_range_usize(3_000),
+                _ => 9_000 + rng.gen_range_usize(12_000),
+            };
+            let threads = 2 + rng.gen_range_usize(3); // 2..=4
+            let mut grads = random_grads(rng, n, d, 1.0);
+            if f > 0 && rng.gen_bool(0.5) {
+                // Adversarial magnitude blow-up (the `infinity` attack).
+                for b in 0..f {
+                    let sign = if b % 2 == 0 { 1.0 } else { -1.0 };
+                    grads
+                        .row_mut(n - 1 - b)
+                        .iter_mut()
+                        .for_each(|v| *v = sign * 1e30);
+                }
+            }
+            let seq = kind
+                .instantiate_parallel(n, f, &Parallelism::sequential())
+                .map_err(|e| e.to_string())?;
+            let par = kind
+                .instantiate_parallel(n, f, &Parallelism::new(threads))
+                .map_err(|e| e.to_string())?;
+            let a = seq.aggregate(&grads).map_err(|e| e.to_string())?;
+            let b = par.aggregate(&grads).map_err(|e| e.to_string())?;
+            if a != b {
+                let diverged = a
+                    .iter()
+                    .zip(&b)
+                    .position(|(x, y)| x != y)
+                    .unwrap_or(usize::MAX);
+                return Err(format!(
+                    "n={n} f={f} d={d} threads={threads}: first divergence at coord {diverged}"
+                ));
+            }
+            // Scratch-reuse path must agree with the allocating path too.
+            let mut scratch = GarScratch::new();
+            let mut c = vec![0.0f32; d];
+            par.aggregate_with_scratch(&grads, &mut c, &mut scratch)
+                .map_err(|e| e.to_string())?;
+            if b != c {
+                return Err("parallel scratch reuse changed the result".into());
             }
             Ok(())
         });

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verification + formatting gate.
+#
+#   scripts/verify.sh          # build, test, fmt-check
+#   scripts/verify.sh --quick  # skip the release build (debug test only)
+#
+# The tier-1 contract is `cargo build --release && cargo test -q`; the
+# fmt check rides along so drift is caught where a rustfmt toolchain is
+# installed (it is skipped with a warning where `cargo fmt` is absent,
+# e.g. minimal CI images with cargo but no rustfmt component).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" != "--quick" ]]; then
+    cargo build --release
+fi
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all --check
+else
+    echo "warning: rustfmt not installed; skipping cargo fmt --check" >&2
+fi
+
+echo "verify: OK"
