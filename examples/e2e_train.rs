@@ -76,6 +76,7 @@ fn main() -> Result<()> {
                 seed: 1,
             },
             threads: 0,
+            transport: Default::default(),
             output_dir: None,
         };
         println!("\n=== {label} ({steps} steps) ===");

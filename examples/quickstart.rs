@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         // Auto-detected aggregation threads — results are bit-identical
         // to `threads: 1`, just faster at large d.
         threads: 0,
+        transport: Default::default(),
         output_dir: None,
     };
     println!("\ntraining the quadratic workload with MULTI-BULYAN (n={n}, f={f}, no attack):");

@@ -46,6 +46,7 @@ fn main() {
                 seed: 1,
             },
             threads: 1,
+            transport: Default::default(),
             output_dir: None,
         };
         let mut cluster = launch(&config, None).unwrap();

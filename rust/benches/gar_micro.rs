@@ -2,7 +2,10 @@
 //! kernel (the O(n²d) hot spot), Krum scoring from cached distances, the
 //! per-coordinate median pass — the three loops the perf pass optimises
 //! (EXPERIMENTS.md §Perf) — plus the thread-scaling sweep of the sharded
-//! parallel engine (`MB_THREADS=1,2,4` to override the sweep).
+//! parallel engine (`MB_THREADS=1,2,4` to override the sweep). The
+//! full-GAR thread sweep is `bench::slowdown::thread_sweep` (the same
+//! harness the `bench threads` CLI and the CI perf gate run); this bench
+//! invokes it with the CSV side effect disabled.
 
 use multibulyan::gar::{
     krum_scores_from_distances, pairwise_sq_distances_into, pairwise_sq_distances_sharded,
@@ -104,36 +107,19 @@ fn main() {
     }
 
     println!("\nfull GAR aggregation, thread sweep (n=11, f=2):");
-    for kind in [GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median] {
-        for d in [100_000usize, 1_000_000] {
-            let n = 11;
-            let mut rng = Rng64::seed_from_u64(23 ^ d as u64);
-            let grads = GradMatrix::uniform(n, d, 0.0, 1.0, &mut rng);
-            let mut base: Option<(f64, Vec<f32>)> = None;
-            for &threads in &thread_counts {
-                let par = Parallelism::new(threads);
-                let gar = kind.instantiate_parallel(n, 2, &par).unwrap();
-                let mut out = vec![0.0f32; d];
-                let mut scratch = GarScratch::new();
-                let (mean_ms, _) = protocol.measure(|| {
-                    gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
-                        .unwrap()
-                });
-                let speedup = match &base {
-                    None => {
-                        base = Some((mean_ms, out.clone()));
-                        1.0
-                    }
-                    Some((base_ms, reference)) => {
-                        assert_eq!(reference, &out, "{kind}: thread count changed the result");
-                        base_ms / mean_ms.max(1e-9)
-                    }
-                };
-                println!(
-                    "  {:<13} d={d:<9} threads={threads:<3} {mean_ms:>10.3} ms   speedup ×{speedup:.2}",
-                    kind.as_str()
-                );
-            }
-        }
-    }
+    // One harness, three consumers: this bench, the `bench threads` CLI
+    // and the CI perf gate all run `slowdown::thread_sweep` (which also
+    // asserts thread counts don't change the aggregate). CSV disabled —
+    // writing results/ is the CLI's job, not a micro-bench's.
+    multibulyan::bench::slowdown::thread_sweep(
+        11,
+        2,
+        &[100_000, 1_000_000],
+        &thread_counts,
+        &[GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median],
+        protocol,
+        false,
+        false,
+    )
+    .expect("full-GAR thread sweep failed");
 }

@@ -1,0 +1,316 @@
+//! Perf-baseline gate (`multibulyan bench check`) — the CI tripwire for
+//! the aggregation hot path.
+//!
+//! `bench threads` / `gar_micro` report speedups, but a report nobody
+//! diffs is not a guard: this module runs a **small fixed GAR sweep**
+//! (the same `bench::slowdown::thread_sweep` the reports use, CSV side
+//! effect included so CI can archive `results/thread_sweep.csv`) and
+//! compares each `(gar, d, threads)` mean against a committed baseline
+//! file, failing when any measurement exceeds `baseline × tolerance`.
+//!
+//! The tolerance is deliberately generous (default 3×): shared CI runners
+//! are noisy and the gate exists to catch *algorithmic* regressions — a
+//! de-vectorised kernel, an accidentally-quadratic pass, a serialised
+//! pool — which show up as integer multiples, not percentages. Refresh
+//! the committed numbers with `bench check --update` on a quiet machine.
+//!
+//! Baseline file format (`BENCH_baseline.json` at the repo root):
+//!
+//! ```json
+//! {
+//!   "tolerance": 3.0,
+//!   "entries": [
+//!     {"gar": "multi-krum", "n": 11, "d": 100000, "threads": 1, "mean_ms": 9.0}
+//!   ]
+//! }
+//! ```
+
+use super::slowdown::{thread_sweep, ThreadSweepRow};
+use crate::gar::GarKind;
+use crate::metrics::TimingProtocol;
+use crate::util::json::Json;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Default regression threshold: measured > baseline × tolerance fails.
+pub const DEFAULT_TOLERANCE: f64 = 3.0;
+
+/// The fixed sweep the gate measures — small enough for CI (seconds),
+/// large enough that a hot-loop regression clears the noise floor.
+const GATE_N: usize = 11;
+const GATE_F: usize = 2;
+const GATE_DIMS: &[usize] = &[100_000];
+const GATE_THREADS: &[usize] = &[1, 2];
+const GATE_GARS: &[GarKind] = &[GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median];
+
+/// One `(gar, d, threads)` cell's identity in the baseline file.
+fn cell_key(gar: &str, d: usize, threads: usize) -> String {
+    format!("{gar} d={d} threads={threads}")
+}
+
+/// What a gate run concluded.
+#[derive(Debug)]
+pub struct CheckOutcome {
+    /// Cells measured and found within tolerance.
+    pub passed: usize,
+    /// Human-readable descriptions of cells over tolerance.
+    pub regressions: Vec<String>,
+    /// Measured cells with no baseline entry (stale baseline file).
+    pub missing: Vec<String>,
+    /// Baseline entries the gate sweep no longer measures (dead weight
+    /// the gate would otherwise silently stop enforcing).
+    pub stale: Vec<String>,
+}
+
+impl CheckOutcome {
+    /// Turn a failed gate into a CLI-facing error (nonzero exit).
+    pub fn bail_on_failure(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.regressions.is_empty() && self.missing.is_empty() && self.stale.is_empty(),
+            "bench check FAILED: {} regression(s), {} unbaselined cell(s), \
+             {} stale baseline entr(y/ies) — run `bench check --update` on a \
+             quiet machine to refresh BENCH_baseline.json if the change is \
+             intentional",
+            self.regressions.len(),
+            self.missing.len(),
+            self.stale.len()
+        );
+        Ok(())
+    }
+}
+
+fn run_gate_sweep(quiet: bool) -> Result<Vec<ThreadSweepRow>> {
+    thread_sweep(
+        GATE_N,
+        GATE_F,
+        GATE_DIMS,
+        GATE_THREADS,
+        GATE_GARS,
+        TimingProtocol::default(),
+        quiet,
+        true, // CSV: CI archives results/thread_sweep.csv as an artifact
+    )
+}
+
+/// Parse the baseline file into (tolerance, cell → mean_ms).
+fn load_baseline(path: &Path) -> Result<(f64, BTreeMap<String, f64>)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading baseline {path:?}: {e}"))?;
+    let json = Json::parse(&text)?;
+    let tolerance = match json.field_opt("tolerance") {
+        Some(t) => t.as_f64()?,
+        None => DEFAULT_TOLERANCE,
+    };
+    anyhow::ensure!(
+        tolerance >= 1.0,
+        "baseline tolerance must be ≥ 1.0, got {tolerance}"
+    );
+    let mut cells = BTreeMap::new();
+    for entry in json.field("entries")?.as_arr()? {
+        let gar = entry.field("gar")?.as_str()?.to_string();
+        let n = entry.field("n")?.as_usize()?;
+        let d = entry.field("d")?.as_usize()?;
+        let threads = entry.field("threads")?.as_usize()?;
+        let mean_ms = entry.field("mean_ms")?.as_f64()?;
+        anyhow::ensure!(
+            n == GATE_N,
+            "baseline entry for n={n}; the gate sweep is fixed at n={GATE_N}"
+        );
+        anyhow::ensure!(mean_ms > 0.0, "baseline mean_ms must be > 0");
+        cells.insert(cell_key(&gar, d, threads), mean_ms);
+    }
+    anyhow::ensure!(!cells.is_empty(), "baseline {path:?} has no entries");
+    Ok((tolerance, cells))
+}
+
+/// Run the gate sweep and compare against the committed baseline.
+/// `tolerance_override` (the `--tolerance` flag) wins over the file's.
+pub fn check(path: impl AsRef<Path>, tolerance_override: Option<f64>) -> Result<CheckOutcome> {
+    let path = path.as_ref();
+    let (file_tolerance, baseline) = load_baseline(path)?;
+    let tolerance = tolerance_override.unwrap_or(file_tolerance);
+    let rows = run_gate_sweep(false)?;
+    let mut outcome = CheckOutcome {
+        passed: 0,
+        regressions: Vec::new(),
+        missing: Vec::new(),
+        stale: Vec::new(),
+    };
+    let mut measured_keys = std::collections::BTreeSet::new();
+    for row in &rows {
+        let key = cell_key(row.gar.as_str(), row.d, row.threads);
+        measured_keys.insert(key.clone());
+        match baseline.get(&key) {
+            None => outcome.missing.push(key),
+            Some(&base_ms) => {
+                let limit = base_ms * tolerance;
+                if row.mean_ms > limit {
+                    outcome.regressions.push(format!(
+                        "{key}: {:.3} ms > {limit:.3} ms (baseline {base_ms:.3} ms × {tolerance})",
+                        row.mean_ms
+                    ));
+                } else {
+                    outcome.passed += 1;
+                }
+            }
+        }
+    }
+    // The reverse direction: a committed entry the sweep never measures
+    // is a gate that silently stopped gating.
+    outcome.stale = baseline
+        .keys()
+        .filter(|k| !measured_keys.contains(*k))
+        .cloned()
+        .collect();
+    println!(
+        "bench check: {} cell(s) within {tolerance}× of {path:?}, {} regression(s), \
+         {} missing, {} stale",
+        outcome.passed,
+        outcome.regressions.len(),
+        outcome.missing.len(),
+        outcome.stale.len()
+    );
+    for r in &outcome.regressions {
+        println!("  REGRESSION {r}");
+    }
+    for m in &outcome.missing {
+        println!("  MISSING    {m} (measured but not in baseline)");
+    }
+    for s in &outcome.stale {
+        println!("  STALE      {s} (in baseline but not measured by the gate sweep)");
+    }
+    Ok(outcome)
+}
+
+/// Re-measure the gate sweep and (re)write the baseline file. A
+/// tolerance the maintainer customized in the existing file is
+/// preserved; only a *missing* file falls back to the default — an
+/// existing-but-invalid file is an error (never silently reset a
+/// customized gate).
+pub fn update(path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let tolerance = if path.exists() {
+        load_baseline(path)?.0
+    } else {
+        DEFAULT_TOLERANCE
+    };
+    let rows = run_gate_sweep(false)?;
+    std::fs::write(path, render_baseline(&rows, tolerance))
+        .map_err(|e| anyhow::anyhow!("writing baseline {path:?}: {e}"))?;
+    println!("bench check: baseline rewritten to {path:?} ({} cells)", rows.len());
+    Ok(())
+}
+
+/// Hand-indented JSON so the committed baseline diffs line-per-cell.
+fn render_baseline(rows: &[ThreadSweepRow], tolerance: f64) -> String {
+    let mut out = String::from("{\n");
+    let _ = writeln!(
+        out,
+        "  \"_comment\": \"Perf baseline for `multibulyan bench check` (the CI gate): \
+         a run fails when any gate-sweep cell exceeds mean_ms x tolerance. \
+         Refresh with `bench check --update` on a quiet machine.\","
+    );
+    let _ = writeln!(out, "  \"tolerance\": {tolerance},");
+    out.push_str("  \"entries\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"gar\": \"{}\", \"n\": {}, \"d\": {}, \"threads\": {}, \"mean_ms\": {:.3}}}{comma}",
+            r.gar.as_str(),
+            r.n,
+            r.d,
+            r.threads,
+            r.mean_ms.max(0.001)
+        );
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_rows() -> Vec<ThreadSweepRow> {
+        vec![
+            ThreadSweepRow {
+                gar: GarKind::MultiKrum,
+                n: GATE_N,
+                d: 100_000,
+                threads: 1,
+                mean_ms: 5.0,
+                speedup: 1.0,
+            },
+            ThreadSweepRow {
+                gar: GarKind::Median,
+                n: GATE_N,
+                d: 100_000,
+                threads: 2,
+                mean_ms: 2.0,
+                speedup: 2.5,
+            },
+        ]
+    }
+
+    #[test]
+    fn rendered_baseline_round_trips_through_loader() {
+        let dir = std::env::temp_dir().join("mb_baseline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        std::fs::write(&path, render_baseline(&fake_rows(), 3.0)).unwrap();
+        let (tol, cells) = load_baseline(&path).unwrap();
+        assert_eq!(tol, 3.0);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[&cell_key("multi-krum", 100_000, 1)], 5.0);
+        assert_eq!(cells[&cell_key("median", 100_000, 2)], 2.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loader_rejects_bad_baselines() {
+        let dir = std::env::temp_dir().join("mb_baseline_bad_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"entries\": []}").unwrap();
+        assert!(load_baseline(&path).is_err(), "empty entries must fail");
+        std::fs::write(&path, "{\"tolerance\": 0.5, \"entries\": [{\"gar\": \"median\", \"n\": 11, \"d\": 10, \"threads\": 1, \"mean_ms\": 1.0}]}").unwrap();
+        assert!(load_baseline(&path).is_err(), "tolerance < 1 must fail");
+        assert!(
+            load_baseline(&dir.join("absent.json")).is_err(),
+            "missing file must fail"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn outcome_gates_on_regressions_missing_and_stale_cells() {
+        let clean = || CheckOutcome {
+            passed: 6,
+            regressions: Vec::new(),
+            missing: Vec::new(),
+            stale: Vec::new(),
+        };
+        assert!(clean().bail_on_failure().is_ok());
+        let mut slow = clean();
+        slow.regressions.push("median d=100000 threads=1: slow".into());
+        assert!(slow.bail_on_failure().is_err());
+        let mut unbaselined = clean();
+        unbaselined.missing.push("median d=100000 threads=2".into());
+        assert!(unbaselined.bail_on_failure().is_err());
+        let mut stale = clean();
+        stale.stale.push("krum d=5 threads=9".into());
+        assert!(stale.bail_on_failure().is_err());
+    }
+
+    #[test]
+    fn rendered_baseline_carries_custom_tolerance_and_comment() {
+        let text = render_baseline(&fake_rows(), 1.5);
+        assert!(text.contains("\"tolerance\": 1.5"));
+        assert!(text.contains("_comment"));
+        let json = Json::parse(&text).unwrap();
+        assert_eq!(json.field("tolerance").unwrap().as_f64().unwrap(), 1.5);
+    }
+}

@@ -10,7 +10,9 @@
 //! | slowdown | Theorems 1.ii/2.iii m̃/n slowdown | [`slowdown::run`] |
 //! | resilience | weak/strong resilience under the attack gauntlet | [`resilience::run`] |
 //! | cone | (α,f) cone + √d leeway | [`cone::run`] |
+//! | check | CI perf-baseline gate over the GAR hot path | [`baseline::check`] |
 
+pub mod baseline;
 pub mod cone;
 pub mod dscaling;
 pub mod fig2;

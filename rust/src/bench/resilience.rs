@@ -107,6 +107,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                     seed: cfg.seed,
                 },
                 threads: 1,
+                transport: Default::default(),
                 output_dir: None,
             };
             let cluster = launch(&exp, None)?;

@@ -91,6 +91,7 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
             seed: cfg.seed,
         },
         threads: 1,
+        transport: Default::default(),
         output_dir: None,
     };
     let cluster = launch(&exp, None)?;
@@ -204,7 +205,9 @@ pub struct ThreadSweepRow {
 /// Measure aggregation wall-time per (gar, d, threads) triple and the
 /// speedup vs the sweep's first thread count (conventionally 1). Also
 /// asserts the parallel outputs are bit-identical to the first run.
-/// Writes `results/thread_sweep.csv`.
+/// Writes `results/thread_sweep.csv` when `write_csv` is set (the CSV is
+/// a side effect callers like `benches/gar_micro.rs` opt out of).
+#[allow(clippy::too_many_arguments)]
 pub fn thread_sweep(
     n: usize,
     f: usize,
@@ -213,6 +216,7 @@ pub fn thread_sweep(
     gars: &[GarKind],
     protocol: crate::metrics::TimingProtocol,
     quiet: bool,
+    write_csv: bool,
 ) -> Result<Vec<ThreadSweepRow>> {
     use crate::gar::GarScratch;
     use crate::runtime::Parallelism;
@@ -264,16 +268,18 @@ pub fn thread_sweep(
             }
         }
     }
-    let csv: Vec<String> = rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{},{},{},{},{:.6},{:.4}",
-                r.gar, r.n, r.d, r.threads, r.mean_ms, r.speedup
-            )
-        })
-        .collect();
-    super::write_csv("thread_sweep.csv", "gar,n,d,threads,mean_ms,speedup", &csv)?;
+    if write_csv {
+        let csv: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{},{},{},{},{:.6},{:.4}",
+                    r.gar, r.n, r.d, r.threads, r.mean_ms, r.speedup
+                )
+            })
+            .collect();
+        super::write_csv("thread_sweep.csv", "gar,n,d,threads,mean_ms,speedup", &csv)?;
+    }
     Ok(rows)
 }
 
@@ -296,12 +302,43 @@ mod tests {
             &[GarKind::MultiBulyan, GarKind::Median],
             crate::metrics::TimingProtocol::quick(),
             true,
+            true,
         )
         .unwrap();
         // 2 gars × 1 dim × 2 thread counts.
         assert_eq!(rows.len(), 4);
         assert!(rows.iter().all(|r| r.mean_ms >= 0.0 && r.speedup > 0.0));
+        assert!(
+            super::super::results_dir().join("thread_sweep.csv").exists(),
+            "write_csv = true must produce the CSV"
+        );
         std::fs::remove_dir_all(super::super::results_dir()).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+
+    #[test]
+    fn thread_sweep_csv_side_effect_is_optional() {
+        let _env = crate::bench::env_lock();
+        let dir = std::env::temp_dir().join("mb_thread_sweep_nocsv_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::set_var("MB_RESULTS_DIR", &dir);
+        let rows = thread_sweep(
+            11,
+            2,
+            &[10_000],
+            &[1],
+            &[GarKind::Median],
+            crate::metrics::TimingProtocol::quick(),
+            true,
+            false,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(
+            !dir.join("thread_sweep.csv").exists(),
+            "write_csv = false must not write the CSV"
+        );
+        std::fs::remove_dir_all(&dir).ok();
         std::env::remove_var("MB_RESULTS_DIR");
     }
 

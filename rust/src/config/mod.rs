@@ -27,6 +27,7 @@ pub mod parser;
 
 use crate::attacks::AttackKind;
 use crate::gar::GarKind;
+use crate::transport::TransportKind;
 use crate::Result;
 use parser::Document;
 use std::path::Path;
@@ -58,6 +59,10 @@ pub struct ClusterConfig {
     pub drop_prob: f64,
     /// Round collection timeout in milliseconds (how long the server
     /// waits for stragglers before the last-known-gradient fallback).
+    /// Bounds real thread races only on the `threaded` transport; the
+    /// default `pooled` backend runs its logical workers to completion
+    /// inside collect, so missing gradients there come from `drop_prob`
+    /// (see the `transport` module docs on straggler semantics).
     pub round_timeout_ms: u64,
 }
 
@@ -123,6 +128,12 @@ pub struct ExperimentConfig {
     /// passes. Aggregation results are bit-identical for every setting
     /// (see `runtime::pool`), so this is purely a latency knob.
     pub threads: usize,
+    /// Worker transport backend: `pooled` (default) multiplexes the
+    /// logical workers over the same shared thread pool — the scaling
+    /// path for 100+ workers; `threaded` spawns one OS thread per worker
+    /// (the faithful-asynchrony simulation). Seeded runs produce
+    /// identical results on either backend (see `transport`).
+    pub transport: TransportKind,
     /// Where to write metrics CSV (None = stdout summary only).
     pub output_dir: Option<String>,
 }
@@ -147,6 +158,7 @@ impl ExperimentConfig {
             },
             train: TrainConfig::default(),
             threads: 1,
+            transport: TransportKind::default(),
             output_dir: None,
         }
     }
@@ -275,6 +287,13 @@ impl ExperimentConfig {
             .map(|v| v.as_usize())
             .transpose()?
             .unwrap_or(1);
+        let transport: TransportKind = root
+            .get("transport")
+            .map(|v| v.as_str())
+            .transpose()?
+            .map(str::parse)
+            .transpose()?
+            .unwrap_or_default();
 
         Ok(Self {
             cluster,
@@ -283,6 +302,7 @@ impl ExperimentConfig {
             model,
             train,
             threads,
+            transport,
             output_dir: get_str("", "output_dir"),
         })
     }
@@ -453,6 +473,32 @@ mod tests {
         cfg.validate().unwrap();
         cfg.threads = 100_000;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn transport_knob_parses_and_defaults_to_pooled() {
+        assert_eq!(base().transport, TransportKind::Pooled);
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-bulyan"
+            transport = "threaded"
+            [cluster]
+            n = 11
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Threaded);
+        assert!(ExperimentConfig::from_text(
+            r#"
+            transport = "smoke-signal"
+            [cluster]
+            n = 11
+            "#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -5,8 +5,8 @@ use crate::config::{ExperimentConfig, ModelConfig};
 use crate::data::{FashionLike, QuadraticProblem, TokenStream};
 use crate::runtime::{ComputeHandle, Manifest, Parallelism};
 use crate::training::LrSchedule;
-use crate::transport::{star, FaultModel};
-use crate::worker::{spawn_workers, GradSource};
+use crate::transport::{self, FaultModel, TransportKind};
+use crate::worker::{serve_workers, GradSource};
 use crate::Result;
 use std::sync::Arc;
 use std::time::Duration;
@@ -41,7 +41,20 @@ pub fn launch(
         drop_prob: config.cluster.drop_prob,
         seed,
     };
-    let (server, endpoints) = star(honest, faults);
+    // One pool shared by the GAR passes and (on the pooled transport) the
+    // logical workers; results are bit-identical to sequential for every
+    // thread count.
+    let par = Parallelism::new(config.threads);
+    let (server, endpoints) = transport::build(config.transport, honest, faults, &par);
+    // Intra-gradient coordinate sharding for the quadratic workers: real
+    // OS worker threads may share the aggregation pool (regions
+    // serialise), but pooled logical workers already run *on* it and the
+    // pool is not reentrant — they compute sequentially, the across-worker
+    // fan-out is what saturates the pool there.
+    let worker_par = match config.transport {
+        TransportKind::Threaded => par.clone(),
+        TransportKind::Pooled => Parallelism::sequential(),
+    };
 
     let (initial_params, evaluator) = match &config.model {
         ModelConfig::Quadratic { dim, noise } => {
@@ -52,11 +65,16 @@ pub fn launch(
                 .map(|(i, ep)| {
                     (
                         ep,
-                        GradSource::quadratic(Arc::clone(&problem), i, config.train.batch_size),
+                        GradSource::quadratic_sharded(
+                            Arc::clone(&problem),
+                            i,
+                            config.train.batch_size,
+                            worker_par.clone(),
+                        ),
                     )
                 })
                 .collect();
-            spawn_workers(pairs);
+            serve_workers(pairs);
             (
                 vec![0.0f32; *dim],
                 Evaluator::Quadratic(Arc::clone(&problem)),
@@ -102,7 +120,7 @@ pub fn launch(
                         )
                     })
                     .collect();
-                spawn_workers(pairs);
+                serve_workers(pairs);
                 let evaluator = Evaluator::Lm {
                     handle,
                     artifact: grad_artifact,
@@ -132,7 +150,7 @@ pub fn launch(
                         )
                     })
                     .collect();
-                spawn_workers(pairs);
+                serve_workers(pairs);
                 let evaluator = match &model.eval {
                     Some(eval_artifact) => Evaluator::Artifact {
                         handle,
@@ -154,9 +172,6 @@ pub fn launch(
         },
         seed,
     };
-    // One pool shared by whatever rules this coordinator runs; results are
-    // bit-identical to sequential for every thread count.
-    let par = Parallelism::new(config.threads);
     let coordinator = Coordinator::new(
         config.gar.instantiate_parallel(n, config.cluster.f, &par)?,
         config.attack.instantiate(),
@@ -227,6 +242,34 @@ mod tests {
             params
         };
         assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn transport_is_a_pure_latency_knob() {
+        // Same seed ⇒ bit-identical parameters on either transport (and
+        // at any thread count): gradients are counter-seeded, fault RNGs
+        // are per-worker, and the GAR passes are order-fixed.
+        let run = |transport: TransportKind, threads: usize| -> Vec<f32> {
+            let mut cfg = ExperimentConfig::fig3_default(GarKind::MultiKrum);
+            cfg.model = ModelConfig::Quadratic {
+                dim: 512,
+                noise: 0.3,
+            };
+            cfg.transport = transport;
+            cfg.threads = threads;
+            cfg.train.batch_size = 4;
+            let mut cluster = launch(&cfg, None).unwrap();
+            for _ in 0..6 {
+                cluster.coordinator.run_round().unwrap();
+            }
+            let params = cluster.coordinator.params().to_vec();
+            cluster.coordinator.shutdown();
+            params
+        };
+        let reference = run(TransportKind::Threaded, 1);
+        assert_eq!(reference, run(TransportKind::Pooled, 1));
+        assert_eq!(reference, run(TransportKind::Pooled, 4));
+        assert_eq!(reference, run(TransportKind::Threaded, 2));
     }
 
     #[test]

@@ -159,32 +159,56 @@ impl Coordinator {
         let params = Arc::new(self.params.clone());
         self.server.broadcast(round, params);
 
-        // 2. Collect honest gradients (timeout-bounded).
-        let msgs = self
-            .server
-            .collect(round, honest, self.options.round_timeout);
-        let collected = msgs.len();
+        // 2. Collect honest gradients (timeout-bounded), copying each
+        //    straight into its GradMatrix row and the straggler cache —
+        //    the zero-copy path of `ServerEndpoint::collect_with`, so a
+        //    steady-state round allocates nothing per message.
         let mut have = vec![false; honest];
-        for msg in msgs {
-            anyhow::ensure!(
-                msg.gradient.len() == self.dim(),
-                "worker {} sent gradient of length {} (d = {})",
-                msg.worker,
-                msg.gradient.len(),
+        let mut bad_len: Option<(usize, usize)> = None;
+        {
+            let d = self.params.len();
+            let grads = &mut self.grads;
+            let last_good = &mut self.last_good;
+            let have = &mut have;
+            let bad_len = &mut bad_len;
+            self.server.collect_with(
+                round,
+                honest,
+                self.options.round_timeout,
+                |worker, gradient| {
+                    if gradient.len() != d {
+                        if bad_len.is_none() {
+                            *bad_len = Some((worker, gradient.len()));
+                        }
+                        return;
+                    }
+                    grads.set_row(worker, gradient);
+                    let cache = &mut last_good[worker];
+                    if let Some(buf) = cache {
+                        buf.copy_from_slice(gradient);
+                    } else {
+                        *cache = Some(gradient.to_vec());
+                    }
+                    have[worker] = true;
+                },
+            );
+        }
+        if let Some((worker, len)) = bad_len {
+            anyhow::bail!(
+                "worker {worker} sent gradient of length {len} (d = {})",
                 self.dim()
             );
-            self.grads.set_row(msg.worker, &msg.gradient);
-            self.last_good[msg.worker] = Some(msg.gradient);
-            have[msg.worker] = true;
         }
+        let collected = have.iter().filter(|&&h| h).count();
 
-        // 3. Straggler fallback: last known gradient, else zero.
+        // 3. Straggler fallback: last known gradient, else zero (copied
+        //    row-to-row, no intermediate clone).
         let mut missing = 0;
         for (w, ok) in have.iter().enumerate() {
             if !ok {
                 missing += 1;
-                match self.last_good[w].clone() {
-                    Some(g) => self.grads.set_row(w, &g),
+                match &self.last_good[w] {
+                    Some(g) => self.grads.set_row(w, g),
                     None => self.grads.row_mut(w).fill(0.0),
                 }
             }
@@ -275,8 +299,9 @@ mod tests {
     use crate::attacks::AttackKind;
     use crate::data::QuadraticProblem;
     use crate::gar::GarKind;
-    use crate::transport::{star, FaultModel};
-    use crate::worker::{spawn_workers, GradSource};
+    use crate::runtime::Parallelism;
+    use crate::transport::{build, star, FaultModel, TransportKind};
+    use crate::worker::{serve_workers, GradSource};
 
     fn quadratic_cluster(
         n: usize,
@@ -289,13 +314,20 @@ mod tests {
     ) -> (Coordinator, Arc<QuadraticProblem>) {
         let problem = Arc::new(QuadraticProblem::new(dim, noise, 7));
         let honest = n - byz;
-        let (server, workers) = star(honest, FaultModel::default());
+        // Default backend (pooled) over a 2-thread pool: the coordinator
+        // unit tests double as pooled-runtime round-trip coverage.
+        let (server, workers) = build(
+            TransportKind::default(),
+            honest,
+            FaultModel::default(),
+            &Parallelism::new(2),
+        );
         let pairs = workers
             .into_iter()
             .enumerate()
             .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
             .collect();
-        spawn_workers(pairs);
+        serve_workers(pairs);
         let coordinator = Coordinator::new(
             gar.instantiate(n, f).unwrap(),
             attack.instantiate(),
@@ -417,7 +449,7 @@ mod tests {
             .enumerate()
             .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 4)))
             .collect();
-        spawn_workers(pairs);
+        serve_workers(pairs);
         let mut coord = Coordinator::new(
             GarKind::MultiKrum.instantiate(7, 1).unwrap(),
             None,

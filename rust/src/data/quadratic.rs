@@ -9,7 +9,8 @@
 //! substrate for the `(α,f)`-cone empirical check (the true gradient `g`
 //! is known, so ⟨E GAR, g⟩ is measurable).
 
-use crate::util::Rng64;
+use crate::runtime::{shard_slice_stateless, Parallelism, MIN_COORDS_PER_SHARD};
+use crate::util::{splitmix64, Rng64};
 
 /// The shared problem definition (same on every worker; shards differ by
 /// sample index).
@@ -65,20 +66,56 @@ impl QuadraticProblem {
     /// N(0, noise²/b) perturbation per coordinate — exactly the unbiased,
     /// bounded-variance estimator model of the paper's §II-A, with the
     /// minibatch size `b` controlling the variance like Equation 3.
+    /// Allocating sequential wrapper over
+    /// [`stochastic_gradient_into`](Self::stochastic_gradient_into).
     pub fn stochastic_gradient(
         &self,
         params: &[f32],
         batch_size: usize,
         sample_seed: u64,
     ) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.stochastic_gradient_into(
+            params,
+            batch_size,
+            sample_seed,
+            &Parallelism::sequential(),
+            &mut out,
+        );
+        out
+    }
+
+    /// Fill `out` with a stochastic minibatch gradient, coordinate-sharded
+    /// across `par` (`runtime::shard_slice`). The noise is a *pure
+    /// function of (problem seed, sample seed, coordinate)* — not a
+    /// sequential RNG stream — so the result is bit-identical for every
+    /// thread count and shard layout (the same contract the GAR passes
+    /// keep; see `runtime::pool`).
+    pub fn stochastic_gradient_into(
+        &self,
+        params: &[f32],
+        batch_size: usize,
+        sample_seed: u64,
+        par: &Parallelism,
+        out: &mut Vec<f32>,
+    ) {
         assert!(batch_size >= 1);
-        let mut rng = Rng64::seed_from_u64(self.seed ^ sample_seed.wrapping_mul(0x9E37_79B9));
+        assert_eq!(
+            params.len(),
+            self.dim,
+            "stochastic_gradient: params have wrong dimension"
+        );
         let scale = self.noise / (batch_size as f32).sqrt();
-        let mut g = self.true_gradient(params);
-        for v in g.iter_mut() {
-            *v += scale * rng.gaussian();
-        }
-        g
+        let base = self.seed ^ sample_seed.wrapping_mul(0x9E37_79B9);
+        out.clear();
+        out.resize(self.dim, 0.0);
+        let optimum = &self.optimum;
+        shard_slice_stateless(par, out, MIN_COORDS_PER_SHARD, |offset, range| {
+            for (k, v) in range.iter_mut().enumerate() {
+                let j = offset + k;
+                *v = params[j] - optimum[j] + scale * gaussian_at(base, j as u64);
+            }
+        });
     }
 
     /// Per-coordinate gradient-noise std for a given batch size (σ of the
@@ -86,6 +123,21 @@ impl QuadraticProblem {
     pub fn sigma(&self, batch_size: usize) -> f32 {
         self.noise / (batch_size as f32).sqrt()
     }
+}
+
+/// One standard-normal draw as a pure function of `(seed, index)`: two
+/// splitmix64 outputs → the same 24-bit-uniform Box–Muller conversion as
+/// [`Rng64::gaussian`]. Counter-based, so any coordinate's noise can be
+/// computed by any shard without a shared stream.
+#[inline]
+fn gaussian_at(seed: u64, index: u64) -> f32 {
+    let mut s = seed ^ index.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    let a = splitmix64(&mut s);
+    let b = splitmix64(&mut s);
+    let to_unit = |u: u64| ((u >> 40) as f32) * (1.0 / (1u64 << 24) as f32);
+    let u1 = to_unit(a).max(f32::EPSILON);
+    let u2 = to_unit(b);
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
 }
 
 #[cfg(test)]
@@ -149,5 +201,30 @@ mod tests {
             p.stochastic_gradient(&x, 2, 9),
             p.stochastic_gradient(&x, 2, 10)
         );
+    }
+
+    #[test]
+    fn sharded_gradient_bit_identical_across_thread_counts() {
+        // Large enough to split into several MIN_COORDS_PER_SHARD ranges.
+        let d = 4 * MIN_COORDS_PER_SHARD + 129;
+        let p = QuadraticProblem::new(d, 0.7, 13);
+        let x: Vec<f32> = (0..d).map(|j| (j as f32 * 0.001).sin()).collect();
+        let reference = p.stochastic_gradient(&x, 4, 21);
+        for threads in [2usize, 3, 4] {
+            let par = Parallelism::new(threads);
+            let mut out = Vec::new();
+            p.stochastic_gradient_into(&x, 4, 21, &par, &mut out);
+            assert_eq!(reference, out, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn counter_noise_has_unit_moments() {
+        let draws: Vec<f32> = (0..50_000).map(|j| gaussian_at(0xFEED, j)).collect();
+        let mean = draws.iter().sum::<f32>() / draws.len() as f32;
+        let var = draws.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+            / (draws.len() - 1) as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
     }
 }

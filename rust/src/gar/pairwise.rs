@@ -24,7 +24,7 @@
 //! parallel-vs-sequential equality property that `tests/prop_gar.rs`
 //! enforces.)
 
-use crate::runtime::{run_items, Parallelism};
+use crate::runtime::{run_chunks, Parallelism};
 use crate::tensor::{sq_distance, GradMatrix};
 
 /// Stripe width in elements. 2048 f32 × n ≤ 39 rows ≈ 320 KiB — fits L2
@@ -68,10 +68,10 @@ fn mirror_lower(out: &mut [f32], n: usize) {
 /// symmetric, zero diagonal), sharding the `d` dimension across `par`.
 ///
 /// `partials` is the grow-only per-chunk scratch (⌈d/SHARD_D⌉ · n² floats,
-/// normally `GarScratch::partials`, reused across rounds; the fan-out
-/// additionally allocates a small per-call work-item vector — one entry
-/// per chunk). Results are bit-identical for every thread count; see the
-/// module docs.
+/// normally `GarScratch::partials`, reused across rounds); the fan-out
+/// itself is allocation-free — each pool thread derives its chunk's
+/// disjoint partial buffer from the chunk index (`runtime::run_chunks`).
+/// Results are bit-identical for every thread count; see the module docs.
 pub fn pairwise_sq_distances_sharded(
     grads: &GradMatrix,
     out: &mut [f32],
@@ -86,19 +86,16 @@ pub fn pairwise_sq_distances_sharded(
         return;
     }
     let nn = n * n;
-    let chunks = (d + SHARD_D - 1) / SHARD_D;
+    let chunks = d.div_ceil(SHARD_D);
     partials.clear();
     partials.resize(chunks * nn, 0.0);
-    {
-        // One work item per chunk, carrying the chunk's disjoint partial
-        // buffer; the pool claims chunks dynamically (load balance).
-        let items: Vec<(usize, &mut [f32])> = partials.chunks_mut(nn).enumerate().collect();
-        run_items(par, items, |_, (c, buf)| {
-            let start = c * SHARD_D;
-            let end = (start + SHARD_D).min(d);
-            partial_distances_upper(grads, start, end, buf);
-        });
-    }
+    // One `nn`-sized partial buffer per chunk; the pool claims chunks
+    // dynamically (load balance), zero allocations in the fan-out.
+    run_chunks(par, &mut partials[..chunks * nn], nn, |c, buf| {
+        let start = c * SHARD_D;
+        let end = (start + SHARD_D).min(d);
+        partial_distances_upper(grads, start, end, buf);
+    });
     // Ordered reduction: fixed ascending-chunk order keeps the result
     // independent of which thread computed which chunk.
     for c in 0..chunks {

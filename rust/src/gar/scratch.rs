@@ -10,8 +10,9 @@
 //! n×n matrices of the sharded pairwise-distance pass) and `shards` (one
 //! [`ShardScratch`] per coordinate-range shard of the per-coordinate
 //! passes), so the large O(d)/O(n²)-sized buffers are reused across
-//! rounds. (The parallel fan-out itself still allocates tiny per-region
-//! bookkeeping — ≤ threads work items per pass; see ROADMAP.)
+//! rounds. The parallel fan-out itself is allocation-free: shards derive
+//! their disjoint ranges from the shard index (`runtime::pool`), so the
+//! steady-state round makes no allocation at all.
 
 /// Per-shard working buffers of the coordinate-sharded passes (median /
 /// trimmed-mean columns, BULYAN's deviation pairs). Each shard of

@@ -40,9 +40,23 @@
 //! It flows from config (`threads = 4` at the top level, or
 //! `--threads 4` on the CLI; `0` auto-detects, `1` — the default — is
 //! sequential) through [`coordinator::launch`] into
-//! [`gar::GarKind::instantiate_parallel`], and the large per-round
-//! buffers are reused via the per-shard members of [`gar::GarScratch`]
-//! (only tiny per-region work-item vectors are allocated per call).
+//! [`gar::GarKind::instantiate_parallel`], the large per-round buffers
+//! are reused via the per-shard members of [`gar::GarScratch`], and the
+//! fan-out itself derives each shard's disjoint range from the shard
+//! index — the steady-state round is allocation-free.
+//!
+//! ## Pooled worker runtime
+//!
+//! The simulated cluster ships two transports ([`transport`], the
+//! `transport` config knob): `threaded` (one OS thread + mpsc pair per
+//! worker — faithful asynchrony, caps at a few dozen workers) and the
+//! default `pooled`, which multiplexes `n` *logical* workers over the
+//! same shared thread pool using a per-round broadcast slot plus a
+//! preallocated per-worker gradient arena — zero per-message allocations
+//! and no channels, so experiments run with 128–512 logical workers
+//! in-process. Gradients are counter-seeded per `(round, worker,
+//! coordinate)` and fault RNGs are per-worker, so seeded runs are
+//! bit-identical across transports *and* thread counts.
 //!
 //! ## Quick start
 //!

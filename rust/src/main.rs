@@ -5,10 +5,12 @@
 //! multibulyan train [--config FILE] [--gar G] [--attack A] [--n N] [--f F]
 //!                   [--byzantine B] [--model M] [--steps S] [--batch-size B]
 //!                   [--lr LR] [--momentum MU] [--eval-every K] [--seed S]
+//!                   [--transport threaded|pooled]
 //!                   [--artifacts DIR] [--curve-out FILE]
 //! multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D]
 //! multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|cone> [--full]
 //!                   [--artifacts DIR]
+//! multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
 //! multibulyan artifacts-check [--artifacts DIR]
 //! ```
 
@@ -85,10 +87,12 @@ USAGE:
                     [--byzantine B] [--model quadratic|mlp|cnn|transformer]
                     [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
                     [--eval-every K] [--seed S] [--threads T]
+                    [--transport threaded|pooled]
                     [--artifacts DIR] [--curve-out FILE]
   multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
   multibulyan bench <fig2|fig3|dscaling|slowdown|threads|resilience|cone>
                     [--full] [--artifacts DIR]
+  multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
   multibulyan artifacts-check [--artifacts DIR]
 
 GARs:    average median trimmed-mean krum multi-krum bulyan multi-bulyan
@@ -96,6 +100,9 @@ Attacks: none sign-flip random-gauss infinity nan little-is-enough
          omniscient mimic zero
 Threads: --threads 1 (sequential, default) | 0 (auto) | N (shared pool);
          aggregation output is bit-identical for every setting
+Transport: --transport pooled (default; logical workers multiplexed over
+         the shared pool — scales to 100+ workers) | threaded (one OS
+         thread per worker); seeded runs are identical on either
 ";
 
 fn main() {
@@ -171,9 +178,10 @@ fn cmd_train(args: &Args) -> Result<()> {
                     eval_every: args.parse_or("eval-every", 50)?,
                     seed: args.parse_or("seed", 1)?,
                 },
-                // Default; the shared --threads override below applies
-                // whenever the flag is present.
+                // Defaults; the shared --threads / --transport overrides
+                // below apply whenever the flags are present.
                 threads: 1,
+                transport: Default::default(),
                 output_dir: None,
             }
         }
@@ -183,6 +191,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         exp.threads = t
             .parse()
             .map_err(|e| anyhow::anyhow!("--threads {t}: {e}"))?;
+    }
+    if let Some(t) = args.get("transport") {
+        exp.transport = t.parse()?;
     }
     exp.validate()?;
     let compute = match &exp.model {
@@ -195,14 +206,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let handle = compute.as_ref().map(|(s, m)| (s.handle(), m.clone()));
     println!(
-        "training: gar={} attack={} n={} f={} byz={} steps={} b={}",
+        "training: gar={} attack={} n={} f={} byz={} steps={} b={} transport={}",
         exp.gar,
         exp.attack.label(),
         exp.cluster.n,
         exp.cluster.f,
         exp.byzantine_count(),
         exp.train.steps,
-        exp.train.batch_size
+        exp.train.batch_size,
+        exp.transport
     );
     let cluster = launch(&exp, handle)?;
     let mut coordinator = cluster.coordinator;
@@ -319,7 +331,26 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 &[GarKind::MultiKrum, GarKind::MultiBulyan, GarKind::Median],
                 multibulyan::metrics::TimingProtocol::default(),
                 false,
+                true,
             )?;
+        }
+        "check" => {
+            // The CI perf-baseline gate: run the fixed sweep, compare
+            // against the committed baseline, exit nonzero on regression.
+            let path = args.get_or("baseline", "BENCH_baseline.json");
+            if args.has("update") {
+                bench::baseline::update(&path)?;
+            } else {
+                let tolerance = match args.get("tolerance") {
+                    Some(t) => Some(
+                        t.parse::<f64>()
+                            .map_err(|e| anyhow::anyhow!("--tolerance {t}: {e}"))?,
+                    ),
+                    None => None,
+                };
+                let outcome = bench::baseline::check(&path, tolerance)?;
+                outcome.bail_on_failure()?;
+            }
         }
         "resilience" => {
             let cfg = bench::resilience::GauntletConfig::default();
@@ -330,7 +361,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::cone::run(&cfg, false)?;
         }
         other => anyhow::bail!(
-            "unknown bench '{other}' (fig2|fig3|dscaling|slowdown|threads|resilience|cone)"
+            "unknown bench '{other}' (fig2|fig3|dscaling|slowdown|threads|resilience|cone|check)"
         ),
     }
     Ok(())

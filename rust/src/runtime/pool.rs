@@ -306,19 +306,57 @@ impl Parallelism {
     }
 }
 
-/// Run `f(index, item)` once per item, distributing the items across the
-/// pool (each item is moved into exactly one call). This is the one
-/// ownership-handoff primitive behind [`shard_slice`] and the pairwise
-/// chunk fan-out: the per-item `Mutex<Option<_>>` is uncontended — it
-/// exists only to move `&mut`-carrying items out of a shared closure.
-pub fn run_items<T: Send>(par: &Parallelism, items: Vec<T>, f: impl Fn(usize, T) + Sync) {
-    if items.is_empty() {
+/// A `Send + Sync` raw-pointer wrapper for the disjoint-range fan-outs:
+/// each shard derives its own exclusive sub-range from the shard index, so
+/// no two threads ever touch the same element. Replaces the old
+/// `run_items` per-region work-item/slot vectors — the fan-out itself is
+/// now allocation-free (ROADMAP item).
+///
+/// The pointer is deliberately private behind [`get`](Self::get): shard
+/// closures must capture the *wrapper* (which carries the `Sync` impl),
+/// not the bare `*mut T` — edition-2021 precise capture would otherwise
+/// pull the non-`Sync` pointer field into the closure directly.
+struct SyncMutPtr<T>(*mut T);
+
+impl<T> SyncMutPtr<T> {
+    #[inline]
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+// SAFETY: shared across threads only by the fan-out helpers below, which
+// hand each thread a disjoint element range; `T: Send` makes moving those
+// ranges' exclusive access between threads sound.
+unsafe impl<T: Send> Send for SyncMutPtr<T> {}
+unsafe impl<T: Send> Sync for SyncMutPtr<T> {}
+
+/// Run `f(c, chunk)` for every `chunk_len`-sized chunk of `data` (the last
+/// chunk may be shorter), distributing chunks across the pool with dynamic
+/// claiming. Zero allocation: chunks are derived from the chunk index, not
+/// materialised as work items.
+pub fn run_chunks<T: Send>(
+    par: &Parallelism,
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0, "run_chunks: chunk_len must be ≥ 1");
+    let len = data.len();
+    if len == 0 {
         return;
     }
-    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|it| Mutex::new(Some(it))).collect();
-    par.run_sharded(slots.len(), &|i| {
-        let item = lock(&slots[i]).take().expect("work item claimed twice");
-        f(i, item);
+    let chunks = len.div_ceil(chunk_len);
+    let base = SyncMutPtr(data.as_mut_ptr());
+    par.run_sharded(chunks, &|c| {
+        let start = c * chunk_len;
+        let end = (start + chunk_len).min(len);
+        // SAFETY: chunk `c` exclusively owns `[start, end)` (chunks are
+        // disjoint by construction and `c < chunks` ⇒ `start < len`), and
+        // `run_sharded` blocks until every chunk completed, so `data`
+        // outlives every dereference.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.get().add(start), end - start) };
+        f(c, chunk);
     });
 }
 
@@ -327,7 +365,8 @@ pub fn run_items<T: Send>(par: &Parallelism, items: Vec<T>, f: impl Fn(usize, T)
 /// a dedicated `S` per shard (grown on demand via `mk_state` — the
 /// per-shard half of the zero-allocation steady state). Bit-identical to
 /// the sequential pass by construction: each coordinate is computed by
-/// exactly one shard with unchanged arithmetic.
+/// exactly one shard with unchanged arithmetic; and allocation-free — the
+/// ranges and states are derived from the shard index.
 pub fn shard_slice<S: Send>(
     par: &Parallelism,
     out: &mut [f32],
@@ -352,25 +391,24 @@ pub fn shard_slice<S: Send>(
         f(0, out, &mut states[0]);
         return;
     }
-    let chunk_len = (len + shards - 1) / shards;
-    // One work item per shard: (offset, disjoint sub-slice, its state).
-    #[allow(clippy::type_complexity)]
-    let mut items: Vec<(usize, &mut [f32], &mut S)> = Vec::with_capacity(shards);
-    {
-        let mut rest: &mut [f32] = out;
-        let mut offset = 0usize;
-        let mut state_iter = states[..shards].iter_mut();
-        while !rest.is_empty() {
-            let take = chunk_len.min(rest.len());
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
-            rest = tail;
-            let state = state_iter.next().expect("one state per shard");
-            items.push((offset, head, state));
-            offset += take;
+    let chunk_len = len.div_ceil(shards);
+    let out_ptr = SyncMutPtr(out.as_mut_ptr());
+    let states_ptr = SyncMutPtr(states.as_mut_ptr());
+    par.run_sharded(shards, &|i| {
+        let start = i * chunk_len;
+        if start >= len {
+            // `div_ceil` rounding can leave the last shard(s) empty.
+            return;
         }
-    }
-    run_items(par, items, |_, (offset, range, state)| {
-        f(offset, range, state);
+        let end = (start + chunk_len).min(len);
+        // SAFETY: shard `i` exclusively owns coordinates `[start, end)`
+        // and `states[i]` (`i < shards ≤ states.len()`); both ranges are
+        // disjoint across shards, and `run_sharded` blocks until every
+        // shard completed, so `out`/`states` outlive every dereference.
+        let range =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(start), end - start) };
+        let state = unsafe { &mut *states_ptr.get().add(i) };
+        f(start, range, state);
     });
 }
 
@@ -454,6 +492,25 @@ mod tests {
         let p = Parallelism::new(2);
         let q = p.clone();
         assert_eq!(q.threads(), 2);
+    }
+
+    #[test]
+    fn run_chunks_visits_each_chunk_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let par = Parallelism::new(threads);
+            for (len, chunk_len) in [(10usize, 3usize), (12, 4), (1, 5), (1000, 7)] {
+                let mut data = vec![0u32; len];
+                run_chunks(&par, &mut data, chunk_len, |c, chunk| {
+                    assert!(chunk.len() <= chunk_len);
+                    for v in chunk.iter_mut() {
+                        *v += 1 + c as u32;
+                    }
+                });
+                for (j, v) in data.iter().enumerate() {
+                    assert_eq!(*v, 1 + (j / chunk_len) as u32, "len={len} coord {j}");
+                }
+            }
+        }
     }
 
     #[test]

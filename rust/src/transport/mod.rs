@@ -2,30 +2,51 @@
 //!
 //! The paper's evaluation runs on a single machine; what matters for
 //! Byzantine resilience is the *values* workers send, not the wire. This
-//! module provides the parameter-server ⇄ worker message fabric as
-//! std-mpsc channels between OS threads, with injectable, seeded network
-//! faults (per-message delay and drop) so the coordinator's
-//! timeout/fallback paths are exercised like they would be on a real
-//! deployment (see DESIGN.md §Substitutions).
+//! module provides the parameter-server ⇄ worker message fabric with
+//! injectable, seeded network faults (per-message delay and drop) so the
+//! coordinator's timeout/fallback paths are exercised like they would be
+//! on a real deployment (see DESIGN.md §Substitutions).
 //!
-//! Topology: a star. The server holds one [`ServerEndpoint`]; each worker
-//! thread holds a [`WorkerEndpoint`]. Messages to workers carry the
-//! current parameter vector behind an `Arc` (no per-worker copy of a
-//! 10⁷-float model).
+//! Topology: a star. The server holds one [`ServerEndpoint`]; each logical
+//! worker is represented by a [`WorkerEndpoint`] onto which the caller
+//! installs a [`WorkerBody`] — the per-round gradient computation —
+//! via [`WorkerEndpoint::serve`]. Parameters travel behind an `Arc` (no
+//! per-worker copy of a 10⁷-float model); gradients come back through the
+//! body's [`Emitter`], which applies the [`FaultModel`] on the way up.
+//!
+//! Two interchangeable backends implement the fabric
+//! ([`TransportKind`], the `transport` config knob):
+//!
+//! * **`threaded`** — the classic simulation: one OS thread plus a pair of
+//!   std-mpsc channels per worker. Faithful asynchrony (workers really do
+//!   run concurrently, stragglers really do race the collect timeout) but
+//!   caps realistic experiments at a few dozen workers.
+//! * **`pooled`** (default) — the scaling backend: `n` *logical* workers
+//!   multiplexed over the crate's [`runtime::pool::ThreadPool`]. A round
+//!   uses one shared broadcast slot (round number + `Arc` params) and a
+//!   preallocated per-worker gradient arena with one disjoint slot per
+//!   worker — zero per-message allocations and zero channel sends on the
+//!   hot path, so 128–512 logical workers cost buffers, not OS threads.
+//!   The server *drives* the logical workers inside
+//!   [`ServerEndpoint::collect`]; a worker that would straggle past the
+//!   timeout cannot be preempted mid-computation, so straggler loss is
+//!   modelled via [`FaultModel::drop_prob`] (which exercises the same
+//!   server fallback path).
+//!
+//! Both backends preserve the same observable semantics: broadcast →
+//! collect with timeout, fault-model delay/drop on the worker → server
+//! direction, and stale-round discard. The shared test harness at the
+//! bottom of this file runs the whole transport suite against both.
+//!
+//! [`runtime::pool::ThreadPool`]: crate::runtime::ThreadPool
 
+mod pooled;
+mod threaded;
+
+use crate::runtime::Parallelism;
 use crate::util::Rng64;
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
-
-/// Server → worker messages.
-#[derive(Debug, Clone)]
-pub enum ToWorker {
-    /// Start round `round`: compute a gradient at `params`.
-    Round { round: u64, params: Arc<Vec<f32>> },
-    /// Terminate the worker thread.
-    Shutdown,
-}
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
 
 /// Worker → server message: one gradient proposal.
 #[derive(Debug, Clone)]
@@ -40,7 +61,11 @@ pub struct FromWorker {
 /// same way — a missing gradient).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FaultModel {
-    /// Mean one-way delay, microseconds (jittered U(0.5×, 1.5×)).
+    /// Mean one-way delay, microseconds (jittered U(0.5×, 1.5×)). On the
+    /// threaded backend all workers sleep concurrently; on the pooled
+    /// backend the sleeps occupy the driving pool threads, so per-round
+    /// delay accumulates as ≈ n·delay/threads — prefer the threaded
+    /// backend for experiments about *concurrent* network latency.
     pub delay_us: u64,
     /// Per-message drop probability.
     pub drop_prob: f64,
@@ -48,24 +73,100 @@ pub struct FaultModel {
     pub seed: u64,
 }
 
-/// Worker-side handle.
-pub struct WorkerEndpoint {
-    pub id: usize,
-    rx: mpsc::Receiver<ToWorker>,
-    tx: mpsc::Sender<FromWorker>,
-    faults: FaultModel,
-    rng: Rng64,
+impl FaultModel {
+    /// The per-worker fault RNG — one deterministic stream per worker id,
+    /// identical across backends so a seeded run drops the same messages
+    /// on either transport.
+    fn rng_for(&self, worker: usize) -> Rng64 {
+        Rng64::seed_from_u64(
+            self.seed
+                .wrapping_add(worker as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15),
+        )
+    }
 }
 
-impl WorkerEndpoint {
-    /// Block until the next instruction from the server (None = channel
-    /// closed, treat as shutdown).
-    pub fn recv(&mut self) -> Option<ToWorker> {
-        self.rx.recv().ok()
+/// Which transport backend a cluster runs on (the `transport` config
+/// knob / `--transport` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// One OS thread + one mpsc channel pair per worker.
+    Threaded,
+    /// Logical workers multiplexed over the shared thread pool (default).
+    #[default]
+    Pooled,
+}
+
+impl TransportKind {
+    pub const ALL: [TransportKind; 2] = [TransportKind::Threaded, TransportKind::Pooled];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TransportKind::Threaded => "threaded",
+            TransportKind::Pooled => "pooled",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "threaded" => Ok(TransportKind::Threaded),
+            "pooled" => Ok(TransportKind::Pooled),
+            other => anyhow::bail!("unknown transport '{other}' (threaded|pooled)"),
+        }
+    }
+}
+
+/// The per-round behaviour of a logical worker: called once per broadcast
+/// with the round number and current parameters; responds by calling
+/// [`Emitter::send`] zero or more times (zero = a silent/crashed worker,
+/// handled by the server's timeout/fallback path).
+///
+/// On the threaded backend the body runs on its worker's dedicated OS
+/// thread; on the pooled backend it runs as a task on the shared thread
+/// pool, so it must not submit parallel regions to that same pool
+/// (the pool is not reentrant — see `runtime::pool`).
+pub trait WorkerBody: Send {
+    fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>);
+}
+
+/// The worker-side reply channel handed to [`WorkerBody::on_round`].
+/// Applies the [`FaultModel`] (drop, then jittered delay) before
+/// delivering the gradient to the server's backend-specific sink.
+pub struct Emitter<'a> {
+    worker: usize,
+    faults: FaultModel,
+    rng: &'a mut Rng64,
+    sink: EmitterSink<'a>,
+}
+
+enum EmitterSink<'a> {
+    /// Threaded backend: the worker → server mpsc channel.
+    Channel(&'a std::sync::mpsc::Sender<FromWorker>),
+    /// Pooled backend: this worker's arena slot.
+    Slot(&'a Mutex<pooled::GradSlot>),
+}
+
+impl Emitter<'_> {
+    /// This worker's id (also the shard id used by the data layer).
+    pub fn worker(&self) -> usize {
+        self.worker
     }
 
-    /// Send a gradient back, subject to the fault model.
-    pub fn send(&mut self, round: u64, gradient: Vec<f32>) {
+    /// Send a gradient for `round` back to the server, subject to the
+    /// fault model. The slice is copied at the transport boundary; the
+    /// pooled backend copies into a preallocated arena slot (no
+    /// allocation in the steady state).
+    pub fn send(&mut self, round: u64, gradient: &[f32]) {
         if self.faults.drop_prob > 0.0 && self.rng.gen_bool(self.faults.drop_prob) {
             return; // dropped on the (simulated) wire
         }
@@ -74,191 +175,482 @@ impl WorkerEndpoint {
             let us = (self.faults.delay_us as f32 * jitter) as u64;
             std::thread::sleep(Duration::from_micros(us));
         }
-        let _ = self.tx.send(FromWorker {
-            worker: self.id,
-            round,
-            gradient,
-        });
+        match &self.sink {
+            EmitterSink::Channel(tx) => {
+                let _ = tx.send(FromWorker {
+                    worker: self.worker,
+                    round,
+                    gradient: gradient.to_vec(),
+                });
+            }
+            EmitterSink::Slot(slot) => {
+                let mut s = lock(slot);
+                // Never let an older round overwrite a fresher pending
+                // gradient — the threaded backend delivers both messages
+                // and the server discards only the stale one.
+                if !s.fresh || round >= s.round {
+                    s.round = round;
+                    s.fresh = true;
+                    s.grad.clear();
+                    s.grad.extend_from_slice(gradient);
+                }
+            }
+        }
     }
 }
 
-/// Server-side handle.
+/// Server-side handle: broadcast, collect, shutdown — backend-agnostic.
 pub struct ServerEndpoint {
-    to_workers: Vec<mpsc::Sender<ToWorker>>,
-    from_workers: mpsc::Receiver<FromWorker>,
+    inner: ServerImpl,
+}
+
+enum ServerImpl {
+    Threaded(threaded::Server),
+    Pooled(pooled::Server),
 }
 
 impl ServerEndpoint {
-    /// Broadcast the round-start message to every worker.
-    pub fn broadcast(&self, round: u64, params: Arc<Vec<f32>>) {
-        for tx in &self.to_workers {
-            let _ = tx.send(ToWorker::Round {
-                round,
-                params: Arc::clone(&params),
-            });
+    /// Announce round `round` at `params` to every worker. On the pooled
+    /// backend this only fills the broadcast slot; the logical workers
+    /// run when [`collect`](Self::collect) drives them.
+    pub fn broadcast(&mut self, round: u64, params: std::sync::Arc<Vec<f32>>) {
+        match &mut self.inner {
+            ServerImpl::Threaded(s) => s.broadcast(round, params),
+            ServerImpl::Pooled(s) => s.broadcast(round, params),
         }
     }
 
-    /// Tell every worker to stop.
-    pub fn shutdown(&self) {
-        for tx in &self.to_workers {
-            let _ = tx.send(ToWorker::Shutdown);
+    /// Collect up to `expect` gradients for `round`, calling
+    /// `on_gradient(worker, gradient)` for each as it arrives; returns the
+    /// number delivered. Stale-round gradients are discarded. The threaded
+    /// backend waits up to `timeout` for stragglers; the pooled backend
+    /// runs its logical workers to completion inside this call (see the
+    /// module docs on straggler semantics), so fewer than `expect`
+    /// deliveries mean fault-model drops, not a race.
+    ///
+    /// This is the zero-copy path: `gradient` borrows transport-owned
+    /// memory, so a full round makes no per-message allocation on the
+    /// pooled backend.
+    pub fn collect_with(
+        &mut self,
+        round: u64,
+        expect: usize,
+        timeout: Duration,
+        mut on_gradient: impl FnMut(usize, &[f32]),
+    ) -> usize {
+        match &mut self.inner {
+            ServerImpl::Threaded(s) => s.collect_with(round, expect, timeout, &mut on_gradient),
+            ServerImpl::Pooled(s) => s.collect_with(round, expect, timeout, &mut on_gradient),
         }
     }
 
-    /// Collect up to `expect` gradients for `round`, or until `timeout`.
-    /// Stale-round messages are discarded. Returns messages in arrival
-    /// order (possibly fewer than `expect` on timeout/drops).
+    /// Owned-message convenience wrapper over
+    /// [`collect_with`](Self::collect_with) (allocates per message; the
+    /// coordinator hot path uses `collect_with` directly).
     pub fn collect(&mut self, round: u64, expect: usize, timeout: Duration) -> Vec<FromWorker> {
         let mut got = Vec::with_capacity(expect);
-        let deadline = Instant::now() + timeout;
-        while got.len() < expect {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                break;
-            }
-            match self.from_workers.recv_timeout(remaining) {
-                Ok(msg) if msg.round == round => got.push(msg),
-                Ok(_stale) => continue,
-                Err(_) => break,
-            }
-        }
+        self.collect_with(round, expect, timeout, |worker, gradient| {
+            got.push(FromWorker {
+                worker,
+                round,
+                gradient: gradient.to_vec(),
+            });
+        });
         got
     }
 
+    /// Tell every worker to stop (threaded: join-free thread shutdown;
+    /// pooled: drop the registered bodies so no further round runs them).
+    pub fn shutdown(&self) {
+        match &self.inner {
+            ServerImpl::Threaded(s) => s.shutdown(),
+            ServerImpl::Pooled(s) => s.shutdown(),
+        }
+    }
+
     pub fn num_workers(&self) -> usize {
-        self.to_workers.len()
+        match &self.inner {
+            ServerImpl::Threaded(s) => s.num_workers(),
+            ServerImpl::Pooled(s) => s.num_workers(),
+        }
+    }
+
+    /// Which backend this endpoint runs on.
+    pub fn transport(&self) -> TransportKind {
+        match &self.inner {
+            ServerImpl::Threaded(_) => TransportKind::Threaded,
+            ServerImpl::Pooled(_) => TransportKind::Pooled,
+        }
     }
 }
 
-/// Build a star topology for `n` workers with the given fault model.
-pub fn star(n: usize, faults: FaultModel) -> (ServerEndpoint, Vec<WorkerEndpoint>) {
-    let (up_tx, up_rx) = mpsc::channel::<FromWorker>();
-    let mut to_workers = Vec::with_capacity(n);
-    let mut endpoints = Vec::with_capacity(n);
-    for id in 0..n {
-        let (down_tx, down_rx) = mpsc::channel::<ToWorker>();
-        to_workers.push(down_tx);
-        endpoints.push(WorkerEndpoint {
-            id,
-            rx: down_rx,
-            tx: up_tx.clone(),
-            faults,
-            rng: Rng64::seed_from_u64(
-                faults
-                    .seed
-                    .wrapping_add(id as u64)
-                    .wrapping_mul(0x9E3779B97F4A7C15),
-            ),
-        });
+/// Worker-side handle: install a [`WorkerBody`] to bring the logical
+/// worker online.
+pub struct WorkerEndpoint {
+    inner: EndpointImpl,
+}
+
+enum EndpointImpl {
+    Threaded(threaded::Worker),
+    Pooled(pooled::WorkerHandle),
+}
+
+impl WorkerEndpoint {
+    pub fn id(&self) -> usize {
+        match &self.inner {
+            EndpointImpl::Threaded(w) => w.id(),
+            EndpointImpl::Pooled(w) => w.id(),
+        }
     }
+
+    /// Install `body` and start serving rounds: spawns a dedicated OS
+    /// thread on the threaded backend; registers the body with the shared
+    /// runtime on the pooled backend (no thread).
+    pub fn serve(self, body: impl WorkerBody + 'static) {
+        match self.inner {
+            EndpointImpl::Threaded(w) => w.serve(Box::new(body)),
+            EndpointImpl::Pooled(w) => w.serve(Box::new(body)),
+        }
+    }
+}
+
+/// Build a thread-per-worker star for `n` workers (the `threaded`
+/// backend; see [`build`] for the knob-driven constructor).
+pub fn star(n: usize, faults: FaultModel) -> (ServerEndpoint, Vec<WorkerEndpoint>) {
+    let (server, workers) = threaded::star(n, faults);
     (
         ServerEndpoint {
-            to_workers,
-            from_workers: up_rx,
+            inner: ServerImpl::Threaded(server),
         },
-        endpoints,
+        workers
+            .into_iter()
+            .map(|w| WorkerEndpoint {
+                inner: EndpointImpl::Threaded(w),
+            })
+            .collect(),
     )
+}
+
+/// Build a pooled star for `n` logical workers, multiplexed over `par`
+/// (`Parallelism::sequential()` drives them inline on the server thread —
+/// correct, just serial).
+pub fn star_pooled(
+    n: usize,
+    faults: FaultModel,
+    par: &Parallelism,
+) -> (ServerEndpoint, Vec<WorkerEndpoint>) {
+    let (server, workers) = pooled::star(n, faults, par.clone());
+    (
+        ServerEndpoint {
+            inner: ServerImpl::Pooled(server),
+        },
+        workers
+            .into_iter()
+            .map(|w| WorkerEndpoint {
+                inner: EndpointImpl::Pooled(w),
+            })
+            .collect(),
+    )
+}
+
+/// Build a star on the chosen backend — the one constructor the launcher
+/// uses (`kind` is the `transport` config knob).
+pub fn build(
+    kind: TransportKind,
+    n: usize,
+    faults: FaultModel,
+    par: &Parallelism,
+) -> (ServerEndpoint, Vec<WorkerEndpoint>) {
+    match kind {
+        TransportKind::Threaded => star(n, faults),
+        TransportKind::Pooled => star_pooled(n, faults, par),
+    }
+}
+
+/// Mutex lock that ignores poisoning: a panicked worker body already
+/// surfaced through the pool's panic propagation; the transport state
+/// itself (a gradient buffer + flags) is valid regardless.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    /// A test body: a plain function pointer over (id, round, params,
+    /// emitter) — no closure-inference pitfalls, trivially `Send`.
+    struct TestBody {
+        id: usize,
+        f: fn(usize, u64, &[f32], &mut Emitter<'_>),
+    }
+
+    impl WorkerBody for TestBody {
+        fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
+            (self.f)(self.id, round, params, emit)
+        }
+    }
+
+    /// Build a star on `kind` and install `f` as every worker's body.
+    fn harness(
+        kind: TransportKind,
+        n: usize,
+        faults: FaultModel,
+        f: fn(usize, u64, &[f32], &mut Emitter<'_>),
+    ) -> ServerEndpoint {
+        let (server, workers) = build(kind, n, faults, &Parallelism::new(2));
+        for w in workers {
+            let id = w.id();
+            w.serve(TestBody { id, f });
+        }
+        server
+    }
+
+    /// Run the same scenario on both backends.
+    fn on_both(test: fn(TransportKind)) {
+        for kind in TransportKind::ALL {
+            test(kind);
+        }
+    }
 
     #[test]
     fn round_trip_without_faults() {
-        let (mut server, workers) = star(3, FaultModel::default());
-        for mut w in workers {
-            std::thread::spawn(move || {
-                while let Some(ToWorker::Round { round, params }) = w.recv() {
-                    let g: Vec<f32> = params.iter().map(|p| p + w.id as f32).collect();
-                    w.send(round, g);
-                }
+        on_both(|kind| {
+            let mut server = harness(kind, 3, FaultModel::default(), |id, round, params, emit| {
+                let g: Vec<f32> = params.iter().map(|p| p + id as f32).collect();
+                emit.send(round, &g);
             });
-        }
-        server.broadcast(1, Arc::new(vec![1.0, 2.0]));
-        let got = server.collect(1, 3, Duration::from_secs(5));
-        assert_eq!(got.len(), 3);
-        let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
-        ids.sort_unstable();
-        assert_eq!(ids, vec![0, 1, 2]);
-        server.shutdown();
+            server.broadcast(1, Arc::new(vec![1.0, 2.0]));
+            let got = server.collect(1, 3, Duration::from_secs(5));
+            assert_eq!(got.len(), 3, "{kind}");
+            let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![0, 1, 2], "{kind}");
+            for m in &got {
+                assert_eq!(m.gradient, vec![1.0 + m.worker as f32, 2.0 + m.worker as f32]);
+            }
+            server.shutdown();
+        });
     }
 
     #[test]
     fn stale_rounds_are_discarded() {
-        let (mut server, mut workers) = star(1, FaultModel::default());
-        let mut w = workers.pop().unwrap();
-        std::thread::spawn(move || {
-            if let Some(ToWorker::Round { .. }) = w.recv() {
-                w.send(0, vec![9.0]); // stale
-                w.send(1, vec![1.0]);
-            }
+        on_both(|kind| {
+            let mut server = harness(kind, 1, FaultModel::default(), |_id, _round, _p, emit| {
+                emit.send(0, &[9.0]); // stale
+                emit.send(1, &[1.0]);
+            });
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let got = server.collect(1, 1, Duration::from_secs(5));
+            assert_eq!(got.len(), 1, "{kind}");
+            assert_eq!(got[0].gradient, vec![1.0], "{kind}");
+            server.shutdown();
         });
-        server.broadcast(1, Arc::new(vec![0.0]));
-        let got = server.collect(1, 1, Duration::from_secs(5));
-        assert_eq!(got.len(), 1);
-        assert_eq!(got[0].gradient, vec![1.0]);
+    }
+
+    #[test]
+    fn stale_send_after_current_does_not_clobber() {
+        // Reverse order of stale_rounds_are_discarded: the current-round
+        // gradient must survive a later stale emit on both backends.
+        on_both(|kind| {
+            let mut server = harness(kind, 1, FaultModel::default(), |_id, _round, _p, emit| {
+                emit.send(1, &[1.0]);
+                emit.send(0, &[9.0]); // stale, after the current round
+            });
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let got = server.collect(1, 1, Duration::from_secs(5));
+            assert_eq!(got.len(), 1, "{kind}");
+            assert_eq!(got[0].gradient, vec![1.0], "{kind}");
+            server.shutdown();
+        });
+    }
+
+    #[test]
+    fn body_panic_is_a_crashed_worker_not_a_server_crash() {
+        // A panicking body must take down only its own logical worker
+        // (threaded: the worker thread dies; pooled: the body is
+        // silenced) — the server keeps collecting from the others.
+        on_both(|kind| {
+            let mut server = harness(kind, 3, FaultModel::default(), |id, round, _p, emit| {
+                if id == 1 {
+                    panic!("worker 1 crashed");
+                }
+                emit.send(round, &[id as f32]);
+            });
+            for round in 1..=2u64 {
+                server.broadcast(round, Arc::new(vec![0.0]));
+                let got = server.collect(round, 3, Duration::from_millis(300));
+                let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+                ids.sort_unstable();
+                assert_eq!(ids, vec![0, 2], "{kind} round {round}");
+            }
+            server.shutdown();
+        });
     }
 
     #[test]
     fn full_drop_hits_timeout() {
-        let faults = FaultModel {
-            drop_prob: 1.0,
-            ..Default::default()
-        };
-        let (mut server, workers) = star(2, faults);
-        for mut w in workers {
-            std::thread::spawn(move || {
-                while let Some(ToWorker::Round { round, .. }) = w.recv() {
-                    w.send(round, vec![1.0]);
-                }
+        on_both(|kind| {
+            let faults = FaultModel {
+                drop_prob: 1.0,
+                ..Default::default()
+            };
+            let mut server = harness(kind, 2, faults, |_id, round, _p, emit| {
+                emit.send(round, &[1.0]);
             });
-        }
-        server.broadcast(7, Arc::new(vec![0.0]));
-        let got = server.collect(7, 2, Duration::from_millis(50));
-        assert!(got.is_empty());
+            server.broadcast(7, Arc::new(vec![0.0]));
+            let got = server.collect(7, 2, Duration::from_millis(50));
+            assert!(got.is_empty(), "{kind}");
+            server.shutdown();
+        });
     }
 
     #[test]
     fn delay_is_applied_but_bounded() {
-        let faults = FaultModel {
-            delay_us: 2_000,
-            ..Default::default()
-        };
-        let (mut server, mut workers) = star(1, faults);
-        let mut w = workers.pop().unwrap();
-        std::thread::spawn(move || {
-            while let Some(ToWorker::Round { round, .. }) = w.recv() {
-                w.send(round, vec![1.0]);
-            }
+        on_both(|kind| {
+            let faults = FaultModel {
+                delay_us: 2_000,
+                ..Default::default()
+            };
+            let mut server = harness(kind, 1, faults, |_id, round, _p, emit| {
+                emit.send(round, &[1.0]);
+            });
+            let t0 = Instant::now();
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let got = server.collect(1, 1, Duration::from_secs(5));
+            assert_eq!(got.len(), 1, "{kind}");
+            assert!(t0.elapsed() >= Duration::from_micros(800), "{kind}");
+            server.shutdown();
         });
-        let t0 = Instant::now();
-        server.broadcast(1, Arc::new(vec![0.0]));
-        let got = server.collect(1, 1, Duration::from_secs(5));
-        assert_eq!(got.len(), 1);
-        assert!(t0.elapsed() >= Duration::from_micros(800));
-        server.shutdown();
     }
 
     #[test]
     fn partial_drop_delivers_some() {
-        let faults = FaultModel {
-            drop_prob: 0.5,
-            seed: 3,
-            ..Default::default()
-        };
-        let (mut server, workers) = star(8, faults);
-        for mut w in workers {
-            std::thread::spawn(move || {
-                while let Some(ToWorker::Round { round, .. }) = w.recv() {
-                    w.send(round, vec![w.id as f32]);
-                }
+        on_both(|kind| {
+            let faults = FaultModel {
+                drop_prob: 0.5,
+                seed: 3,
+                ..Default::default()
+            };
+            let mut server = harness(kind, 8, faults, |id, round, _p, emit| {
+                emit.send(round, &[id as f32]);
             });
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let got = server.collect(1, 8, Duration::from_millis(200));
+            assert!(
+                !got.is_empty() && got.len() < 8,
+                "{kind}: got {}",
+                got.len()
+            );
+            server.shutdown();
+        });
+    }
+
+    #[test]
+    fn drop_pattern_is_identical_across_backends() {
+        // Same seed ⇒ the fault RNG drops the same workers' messages on
+        // either backend — seeded experiments are transport-independent.
+        let survivors = |kind: TransportKind| -> Vec<usize> {
+            let faults = FaultModel {
+                drop_prob: 0.4,
+                seed: 11,
+                ..Default::default()
+            };
+            let mut server = harness(kind, 16, faults, |id, round, _p, emit| {
+                emit.send(round, &[id as f32]);
+            });
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let mut ids: Vec<usize> = server
+                .collect(1, 16, Duration::from_millis(500))
+                .iter()
+                .map(|m| m.worker)
+                .collect();
+            server.shutdown();
+            ids.sort_unstable();
+            ids
+        };
+        assert_eq!(
+            survivors(TransportKind::Threaded),
+            survivors(TransportKind::Pooled)
+        );
+    }
+
+    #[test]
+    fn pooled_scales_to_hundreds_of_logical_workers() {
+        // 256 logical workers over a 2-thread pool: the old transport
+        // would need 256 OS threads for this round-trip.
+        let mut server = harness(
+            TransportKind::Pooled,
+            256,
+            FaultModel::default(),
+            |id, round, params, emit| {
+                let g: Vec<f32> = params.iter().map(|p| p * 2.0 + id as f32).collect();
+                emit.send(round, &g);
+            },
+        );
+        for round in 1..=3u64 {
+            server.broadcast(round, Arc::new(vec![1.0, -1.0]));
+            let got = server.collect(round, 256, Duration::from_secs(5));
+            assert_eq!(got.len(), 256, "round {round}");
+            for m in &got {
+                assert_eq!(m.gradient[0], 2.0 + m.worker as f32);
+            }
         }
-        server.broadcast(1, Arc::new(vec![0.0]));
-        let got = server.collect(1, 8, Duration::from_millis(200));
-        assert!(!got.is_empty() && got.len() < 8, "got {}", got.len());
         server.shutdown();
+    }
+
+    #[test]
+    fn pooled_slot_freshness_is_per_round() {
+        // A worker that answers only even rounds must not leak its old
+        // gradient into the next round's collect (fresh flag + round tag).
+        let mut server = harness(
+            TransportKind::Pooled,
+            1,
+            FaultModel::default(),
+            |_id, round, _p, emit| {
+                if round % 2 == 0 {
+                    emit.send(round, &[round as f32]);
+                }
+            },
+        );
+        server.broadcast(1, Arc::new(vec![0.0]));
+        assert!(server.collect(1, 1, Duration::from_millis(10)).is_empty());
+        server.broadcast(2, Arc::new(vec![0.0]));
+        let got = server.collect(2, 1, Duration::from_millis(10));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].gradient, vec![2.0]);
+        server.broadcast(3, Arc::new(vec![0.0]));
+        assert!(server.collect(3, 1, Duration::from_millis(10)).is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn pooled_shutdown_stops_driving_bodies() {
+        let mut server = harness(
+            TransportKind::Pooled,
+            4,
+            FaultModel::default(),
+            |id, round, _p, emit| {
+                emit.send(round, &[id as f32]);
+            },
+        );
+        server.broadcast(1, Arc::new(vec![0.0]));
+        assert_eq!(server.collect(1, 4, Duration::from_millis(10)).len(), 4);
+        server.shutdown();
+        server.broadcast(2, Arc::new(vec![0.0]));
+        assert!(server.collect(2, 4, Duration::from_millis(10)).is_empty());
+    }
+
+    #[test]
+    fn transport_kind_parses_and_displays() {
+        assert_eq!("threaded".parse::<TransportKind>().unwrap(), TransportKind::Threaded);
+        assert_eq!("pooled".parse::<TransportKind>().unwrap(), TransportKind::Pooled);
+        assert!("carrier-pigeon".parse::<TransportKind>().is_err());
+        assert_eq!(TransportKind::default(), TransportKind::Pooled);
+        for kind in TransportKind::ALL {
+            assert_eq!(kind.as_str().parse::<TransportKind>().unwrap(), kind);
+        }
     }
 }

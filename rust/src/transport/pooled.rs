@@ -1,0 +1,214 @@
+//! The pooled batched backend: `n` logical workers multiplexed over the
+//! crate's shared [`ThreadPool`] (via a [`Parallelism`] handle) instead of
+//! `n` OS threads and `2n` mpsc channels.
+//!
+//! Per-round shared state, preallocated once:
+//!
+//! * **broadcast slot** — the server stores `(round, Arc<params>)` on
+//!   [`Server::broadcast`]; nothing is sent anywhere.
+//! * **gradient arena** — one [`GradSlot`] per worker (a reusable `Vec<f32>`
+//!   plus a round tag and freshness flag). Worker `i` writes only slot `i`,
+//!   so slots never contend; the per-slot `Mutex` is uncontended and exists
+//!   to keep the server/worker hand-off safe without `unsafe`.
+//!
+//! [`Server::collect_with`] *drives* the round: it fans the registered
+//! worker bodies out over the pool (`run_sharded`, dynamic claiming — load
+//! balance for uneven gradient costs), each body writes its slot through
+//! the fault-model [`Emitter`](super::Emitter), and the server then scans
+//! the arena. Steady state: zero allocations, zero channel operations,
+//! zero thread spawns per round.
+//!
+//! Because bodies run *on* the pool, a body must not submit nested
+//! parallel regions to the same pool (see `runtime::pool` reentrancy
+//! note) — the launcher hands pooled workers a sequential [`Parallelism`]
+//! for their intra-gradient sharding.
+//!
+//! [`ThreadPool`]: crate::runtime::ThreadPool
+
+use super::{lock, Emitter, EmitterSink, FaultModel, WorkerBody};
+use crate::runtime::Parallelism;
+use crate::util::Rng64;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One worker's arena slot: the last gradient it emitted, tagged with the
+/// round it answers. `fresh` is cleared when the server consumes the slot
+/// so a gradient is delivered at most once (mirrors message consumption).
+pub(super) struct GradSlot {
+    pub(super) round: u64,
+    pub(super) fresh: bool,
+    pub(super) grad: Vec<f32>,
+}
+
+/// A registered logical worker: its body plus its private fault RNG
+/// (seeded identically to the threaded backend's per-thread RNG).
+struct Driver {
+    body: Box<dyn WorkerBody>,
+    rng: Rng64,
+}
+
+/// Per-worker cell. The two Mutexes are uncontended by construction —
+/// exactly one pool task touches worker `i` during a drive, and the
+/// server only reads slots after the drive's completion barrier.
+struct Cell {
+    driver: Mutex<Option<Driver>>,
+    slot: Mutex<GradSlot>,
+}
+
+/// State shared between the server and the worker registration handles.
+struct Runtime {
+    cells: Vec<Cell>,
+    faults: FaultModel,
+    par: Parallelism,
+    shutdown: AtomicBool,
+}
+
+impl Runtime {
+    /// Run every registered body for `round` across the pool and let it
+    /// write its arena slot. Blocks until all logical workers finished.
+    fn drive(&self, round: u64, params: &Arc<Vec<f32>>) {
+        if self.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let params: &[f32] = params;
+        self.par.run_sharded(self.cells.len(), &|i| {
+            let cell = &self.cells[i];
+            let mut guard = lock(&cell.driver);
+            let panicked = match guard.as_mut() {
+                None => false,
+                Some(driver) => {
+                    let Driver { body, rng } = driver;
+                    let mut emit = Emitter {
+                        worker: i,
+                        faults: self.faults,
+                        rng,
+                        sink: EmitterSink::Slot(&cell.slot),
+                    };
+                    catch_unwind(AssertUnwindSafe(|| body.on_round(round, params, &mut emit)))
+                        .is_err()
+                }
+            };
+            if panicked {
+                // Crash-fault semantics, matching the threaded backend
+                // where a panicking body kills only its worker thread:
+                // silence this logical worker permanently and let the
+                // server's missing-gradient fallback handle it.
+                *guard = None;
+            }
+        });
+    }
+}
+
+/// Pooled server half.
+pub(super) struct Server {
+    runtime: Arc<Runtime>,
+    /// The broadcast slot: filled by `broadcast`, consumed (driven) by the
+    /// next `collect_with`. A re-broadcast before a collect supersedes the
+    /// previous round — the synchronous coordinator never does this.
+    pending: Option<(u64, Arc<Vec<f32>>)>,
+}
+
+impl Server {
+    pub(super) fn broadcast(&mut self, round: u64, params: Arc<Vec<f32>>) {
+        self.pending = Some((round, params));
+    }
+
+    pub(super) fn collect_with(
+        &mut self,
+        round: u64,
+        expect: usize,
+        _timeout: Duration,
+        on_gradient: &mut dyn FnMut(usize, &[f32]),
+    ) -> usize {
+        // The logical workers run to completion here, so the timeout has
+        // nothing left to bound: a missing gradient is a fault-model drop
+        // (or a silent body), never an un-preempted straggler.
+        if let Some((r, params)) = self.pending.take() {
+            self.runtime.drive(r, &params);
+        }
+        let mut got = 0;
+        for (i, cell) in self.runtime.cells.iter().enumerate() {
+            if got >= expect {
+                break;
+            }
+            let mut slot = lock(&cell.slot);
+            if slot.fresh && slot.round == round {
+                slot.fresh = false;
+                on_gradient(i, &slot.grad);
+                got += 1;
+            }
+        }
+        got
+    }
+
+    pub(super) fn shutdown(&self) {
+        self.runtime.shutdown.store(true, Ordering::Release);
+        for cell in &self.runtime.cells {
+            lock(&cell.driver).take();
+        }
+    }
+
+    pub(super) fn num_workers(&self) -> usize {
+        self.runtime.cells.len()
+    }
+}
+
+/// Registration handle for one logical worker.
+pub(super) struct WorkerHandle {
+    id: usize,
+    runtime: Arc<Runtime>,
+}
+
+impl WorkerHandle {
+    pub(super) fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Register `body` with the shared runtime (no thread is spawned —
+    /// the server drives the body during `collect`).
+    pub(super) fn serve(self, body: Box<dyn WorkerBody>) {
+        let rng = self.runtime.faults.rng_for(self.id);
+        *lock(&self.runtime.cells[self.id].driver) = Some(Driver { body, rng });
+    }
+}
+
+/// Build the pooled star: the arena and cells are preallocated here; the
+/// gradient buffers themselves grow to `d` on each worker's first emit
+/// and are reused afterwards.
+pub(super) fn star(
+    n: usize,
+    faults: FaultModel,
+    par: Parallelism,
+) -> (Server, Vec<WorkerHandle>) {
+    let cells = (0..n)
+        .map(|_| Cell {
+            driver: Mutex::new(None),
+            slot: Mutex::new(GradSlot {
+                round: 0,
+                fresh: false,
+                grad: Vec::new(),
+            }),
+        })
+        .collect();
+    let runtime = Arc::new(Runtime {
+        cells,
+        faults,
+        par,
+        shutdown: AtomicBool::new(false),
+    });
+    let handles = (0..n)
+        .map(|id| WorkerHandle {
+            id,
+            runtime: Arc::clone(&runtime),
+        })
+        .collect();
+    (
+        Server {
+            runtime,
+            pending: None,
+        },
+        handles,
+    )
+}

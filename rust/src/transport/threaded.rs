@@ -1,0 +1,141 @@
+//! The thread-per-worker backend: one OS thread plus a pair of std-mpsc
+//! channels per worker — the faithful-asynchrony simulation (workers race
+//! the collect timeout for real). See the module docs in
+//! [`super`](crate::transport) for how it compares to the pooled backend.
+
+use super::{Emitter, EmitterSink, FaultModel, FromWorker, WorkerBody};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server → worker messages (internal to this backend; the pooled backend
+/// has no message objects at all).
+enum ToWorker {
+    /// Start round `round`: compute a gradient at `params`.
+    Round { round: u64, params: Arc<Vec<f32>> },
+    /// Terminate the worker thread.
+    Shutdown,
+}
+
+/// Threaded server half.
+pub(super) struct Server {
+    to_workers: Vec<mpsc::Sender<ToWorker>>,
+    from_workers: mpsc::Receiver<FromWorker>,
+}
+
+impl Server {
+    pub(super) fn broadcast(&mut self, round: u64, params: Arc<Vec<f32>>) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Round {
+                round,
+                params: Arc::clone(&params),
+            });
+        }
+    }
+
+    pub(super) fn collect_with(
+        &mut self,
+        round: u64,
+        expect: usize,
+        timeout: Duration,
+        on_gradient: &mut dyn FnMut(usize, &[f32]),
+    ) -> usize {
+        let mut got = 0;
+        let deadline = Instant::now() + timeout;
+        while got < expect {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match self.from_workers.recv_timeout(remaining) {
+                Ok(msg) if msg.round == round => {
+                    on_gradient(msg.worker, &msg.gradient);
+                    got += 1;
+                }
+                Ok(_stale) => continue,
+                Err(_) => break,
+            }
+        }
+        got
+    }
+
+    pub(super) fn shutdown(&self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+    }
+
+    pub(super) fn num_workers(&self) -> usize {
+        self.to_workers.len()
+    }
+}
+
+/// Threaded worker half: holds the channel ends until a body is installed.
+pub(super) struct Worker {
+    id: usize,
+    rx: mpsc::Receiver<ToWorker>,
+    tx: mpsc::Sender<FromWorker>,
+    faults: FaultModel,
+}
+
+impl Worker {
+    pub(super) fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Spawn the dedicated worker thread running `body` for every round
+    /// until shutdown (or until the server side is dropped).
+    pub(super) fn serve(self, mut body: Box<dyn WorkerBody>) {
+        let Worker {
+            id,
+            rx,
+            tx,
+            faults,
+        } = self;
+        let mut rng = faults.rng_for(id);
+        std::thread::Builder::new()
+            .name(format!("worker-{id}"))
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        ToWorker::Round { round, params } => {
+                            let mut emit = Emitter {
+                                worker: id,
+                                faults,
+                                rng: &mut rng,
+                                sink: EmitterSink::Channel(&tx),
+                            };
+                            body.on_round(round, &params, &mut emit);
+                        }
+                        ToWorker::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawning worker thread");
+    }
+}
+
+/// Build the threaded star: n channel pairs, no threads yet (each worker's
+/// thread starts when its body is installed).
+pub(super) fn star(n: usize, faults: FaultModel) -> (Server, Vec<Worker>) {
+    let (up_tx, up_rx) = mpsc::channel::<FromWorker>();
+    let mut to_workers = Vec::with_capacity(n);
+    let mut workers = Vec::with_capacity(n);
+    for id in 0..n {
+        let (down_tx, down_rx) = mpsc::channel::<ToWorker>();
+        to_workers.push(down_tx);
+        workers.push(Worker {
+            id,
+            rx: down_rx,
+            tx: up_tx.clone(),
+            faults,
+        });
+    }
+    (
+        Server {
+            to_workers,
+            from_workers: up_rx,
+        },
+        workers,
+    )
+}

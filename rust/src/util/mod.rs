@@ -7,4 +7,4 @@ pub mod json;
 pub mod proptest;
 pub mod rng;
 
-pub use rng::Rng64;
+pub use rng::{splitmix64, Rng64};

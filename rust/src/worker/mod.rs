@@ -7,6 +7,15 @@
 //! and fast ablations) or an AOT-compiled JAX model executed through the
 //! PJRT compute thread ([`GradSource::Artifact`]).
 //!
+//! A worker's transport-facing half is [`GradWorker`], a
+//! [`WorkerBody`] installed on a [`WorkerEndpoint`] — the same body runs
+//! unchanged on a dedicated OS thread (threaded transport) or as a pool
+//! task of the pooled runtime (see `transport`). It computes into a
+//! reusable buffer, so the quadratic path allocates nothing per round in
+//! the steady state, and the quadratic gradient itself can be
+//! coordinate-sharded across a [`Parallelism`] handle
+//! ([`GradSource::quadratic_sharded`]).
+//!
 //! Byzantine workers are *not* simulated as independent threads: the
 //! paper's threat model is an omniscient coalition that observes every
 //! correct gradient before choosing its own (§II-C). The coordinator
@@ -15,8 +24,8 @@
 //! knowledge — the strongest adversary the GARs must survive.
 
 use crate::data::{shard_indices, Batch, FashionLike, QuadraticProblem, TokenStream, IMAGE_DIM};
-use crate::runtime::{ArgValue, ComputeHandle};
-use crate::transport::{ToWorker, WorkerEndpoint};
+use crate::runtime::{ArgValue, ComputeHandle, Parallelism};
+use crate::transport::{Emitter, WorkerBody, WorkerEndpoint};
 use crate::util::Rng64;
 use crate::Result;
 use std::sync::Arc;
@@ -28,6 +37,11 @@ pub enum GradSource {
         problem: Arc<QuadraticProblem>,
         worker_id: usize,
         batch_size: usize,
+        /// Intra-gradient coordinate sharding (sequential by default; the
+        /// launcher passes the shared pool on the threaded transport —
+        /// pooled logical workers already run *on* that pool, so they
+        /// stay sequential to respect its non-reentrancy).
+        par: Parallelism,
     },
     /// AOT classifier artifact over a FashionLike shard.
     Artifact {
@@ -55,22 +69,29 @@ pub enum GradSource {
 }
 
 impl GradSource {
-    /// Compute `(gradient, minibatch_loss)` at `params` for round `round`.
-    pub fn gradient(&mut self, params: &[f32], round: u64) -> Result<(Vec<f32>, f32)> {
+    /// Compute the gradient at `params` for round `round` into `out`
+    /// (resized as needed, reused across rounds); returns the minibatch
+    /// loss.
+    pub fn gradient_into(
+        &mut self,
+        params: &[f32],
+        round: u64,
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
         match self {
             GradSource::Quadratic {
                 problem,
                 worker_id,
                 batch_size,
+                par,
             } => {
                 // Seed mixes (round, worker) so workers draw independent
                 // minibatches each round, deterministically.
                 let seed = round
                     .wrapping_mul(0x517C_C1B7_2722_0A95)
                     .wrapping_add(*worker_id as u64);
-                let g = problem.stochastic_gradient(params, *batch_size, seed);
-                let loss = problem.loss(params);
-                Ok((g, loss))
+                problem.stochastic_gradient_into(params, *batch_size, seed, par, out);
+                Ok(problem.loss(params))
             }
             GradSource::Artifact {
                 handle,
@@ -92,7 +113,7 @@ impl GradSource {
                     .collect();
                 let mut batch = Batch::new(*batch_size, IMAGE_DIM);
                 dataset.fill_batch(0, &picked, &mut batch);
-                let out = handle.execute(
+                let result = handle.execute(
                     artifact,
                     vec![
                         ArgValue::f32_vec(params.to_vec()),
@@ -100,15 +121,16 @@ impl GradSource {
                         ArgValue::I32(batch.labels, vec![*batch_size]),
                     ],
                 )?;
-                let grad = out
+                let grad = result
                     .first()
                     .cloned()
                     .ok_or_else(|| anyhow::anyhow!("grad artifact returned no outputs"))?;
-                let loss = out
+                let loss = result
                     .get(1)
                     .and_then(|l| l.first().copied())
                     .unwrap_or(f32::NAN);
-                Ok((grad, loss))
+                *out = grad;
+                Ok(loss)
             }
             GradSource::Lm {
                 handle,
@@ -135,7 +157,7 @@ impl GradSource {
                     tokens.extend(inp);
                     targets.extend(tgt);
                 }
-                let out = handle.execute(
+                let result = handle.execute(
                     artifact,
                     vec![
                         ArgValue::f32_vec(params.to_vec()),
@@ -143,25 +165,48 @@ impl GradSource {
                         ArgValue::I32(targets, vec![b, l]),
                     ],
                 )?;
-                let grad = out
+                let grad = result
                     .first()
                     .cloned()
                     .ok_or_else(|| anyhow::anyhow!("lm grad artifact returned no outputs"))?;
-                let loss = out
+                let loss = result
                     .get(1)
                     .and_then(|o| o.first().copied())
                     .unwrap_or(f32::NAN);
-                Ok((grad, loss))
+                *out = grad;
+                Ok(loss)
             }
         }
     }
 
-    /// Quadratic source shortcut used throughout the tests.
+    /// Allocating wrapper over [`gradient_into`](Self::gradient_into):
+    /// `(gradient, minibatch_loss)` at `params` for round `round`.
+    pub fn gradient(&mut self, params: &[f32], round: u64) -> Result<(Vec<f32>, f32)> {
+        let mut out = Vec::new();
+        let loss = self.gradient_into(params, round, &mut out)?;
+        Ok((out, loss))
+    }
+
+    /// Quadratic source shortcut used throughout the tests (sequential
+    /// gradient computation).
     pub fn quadratic(problem: Arc<QuadraticProblem>, worker_id: usize, batch_size: usize) -> Self {
+        Self::quadratic_sharded(problem, worker_id, batch_size, Parallelism::sequential())
+    }
+
+    /// Quadratic source whose O(d) gradient pass is coordinate-sharded
+    /// across `par` (`runtime::shard_slice`; bit-identical to sequential
+    /// for every thread count).
+    pub fn quadratic_sharded(
+        problem: Arc<QuadraticProblem>,
+        worker_id: usize,
+        batch_size: usize,
+        par: Parallelism,
+    ) -> Self {
         GradSource::Quadratic {
             problem,
             worker_id,
             batch_size,
+            par,
         }
     }
 
@@ -212,44 +257,47 @@ impl GradSource {
     }
 }
 
-/// The honest worker loop: answer every round until shutdown. Run this on
-/// a dedicated thread per worker.
-pub fn run_worker(mut endpoint: WorkerEndpoint, mut source: GradSource) {
-    while let Some(msg) = endpoint.recv() {
-        match msg {
-            ToWorker::Round { round, params } => {
-                match source.gradient(&params, round) {
-                    Ok((grad, _loss)) => endpoint.send(round, grad),
-                    // A failed computation is indistinguishable from a
-                    // crashed worker: stay silent, let the server's
-                    // timeout path handle it.
-                    Err(_) => {}
-                }
-            }
-            ToWorker::Shutdown => break,
+/// The honest worker body: answer every round from a [`GradSource`],
+/// reusing one gradient buffer across rounds.
+pub struct GradWorker {
+    source: GradSource,
+    buf: Vec<f32>,
+}
+
+impl GradWorker {
+    pub fn new(source: GradSource) -> Self {
+        Self {
+            source,
+            buf: Vec::new(),
         }
     }
 }
 
-/// Spawn `run_worker` threads for a set of endpoints and sources.
-pub fn spawn_workers(
-    pairs: Vec<(WorkerEndpoint, GradSource)>,
-) -> Vec<std::thread::JoinHandle<()>> {
-    pairs
-        .into_iter()
-        .map(|(ep, src)| {
-            std::thread::Builder::new()
-                .name(format!("worker-{}", ep.id))
-                .spawn(move || run_worker(ep, src))
-                .expect("spawning worker thread")
-        })
-        .collect()
+impl WorkerBody for GradWorker {
+    fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
+        match self.source.gradient_into(params, round, &mut self.buf) {
+            Ok(_loss) => emit.send(round, &self.buf),
+            // A failed computation is indistinguishable from a crashed
+            // worker: stay silent, let the server's timeout path handle
+            // it.
+            Err(_) => {}
+        }
+    }
+}
+
+/// Bring a set of workers online: install a [`GradWorker`] body per
+/// `(endpoint, source)` pair (spawns a thread per worker on the threaded
+/// transport; registers with the shared runtime on the pooled one).
+pub fn serve_workers(pairs: Vec<(WorkerEndpoint, GradSource)>) {
+    for (endpoint, source) in pairs {
+        endpoint.serve(GradWorker::new(source));
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::transport::{star, FaultModel};
+    use crate::transport::{star, star_pooled, FaultModel, TransportKind};
     use std::time::Duration;
 
     #[test]
@@ -261,7 +309,7 @@ mod tests {
             .enumerate()
             .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
             .collect();
-        let _threads = spawn_workers(pairs);
+        serve_workers(pairs);
         let params = Arc::new(vec![0.5f32; 16]);
         server.broadcast(1, Arc::clone(&params));
         let got = server.collect(1, 2, Duration::from_secs(5));
@@ -285,5 +333,31 @@ mod tests {
         let (g3, _) = src.gradient(&p, 6).unwrap();
         assert_eq!(g1, g2);
         assert_ne!(g1, g3);
+    }
+
+    #[test]
+    fn same_worker_sends_identical_gradients_on_both_transports() {
+        // GradWorker + seeded fault RNGs are transport-independent: a
+        // seeded round must deliver bit-identical gradients either way.
+        let run = |kind: TransportKind| -> Vec<Vec<f32>> {
+            let problem = Arc::new(QuadraticProblem::new(32, 0.4, 17));
+            let par = crate::runtime::Parallelism::new(2);
+            let (mut server, workers) = match kind {
+                TransportKind::Threaded => star(3, FaultModel::default()),
+                TransportKind::Pooled => star_pooled(3, FaultModel::default(), &par),
+            };
+            let pairs = workers
+                .into_iter()
+                .enumerate()
+                .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 4)))
+                .collect();
+            serve_workers(pairs);
+            server.broadcast(1, Arc::new(vec![0.25f32; 32]));
+            let mut got = server.collect(1, 3, Duration::from_secs(5));
+            server.shutdown();
+            got.sort_by_key(|m| m.worker);
+            got.into_iter().map(|m| m.gradient).collect()
+        };
+        assert_eq!(run(TransportKind::Threaded), run(TransportKind::Pooled));
     }
 }

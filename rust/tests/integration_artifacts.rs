@@ -159,6 +159,7 @@ fn training_through_pjrt_learns_under_attack() {
             seed: 1,
         },
         threads: 1,
+        transport: Default::default(),
         output_dir: None,
     };
     let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();

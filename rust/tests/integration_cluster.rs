@@ -39,6 +39,7 @@ fn quadratic_exp(
             seed: 5,
         },
         threads: 1,
+        transport: Default::default(),
         output_dir: None,
     }
 }

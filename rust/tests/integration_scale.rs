@@ -1,0 +1,103 @@
+//! Scale tests for the pooled worker runtime: full training round-trips
+//! with 128+ logical workers — cluster sizes the thread-per-worker
+//! transport would need one OS thread each for — including fault-model
+//! drops (exercising the stale-slot discard + last-known-gradient
+//! fallback) and a live Byzantine attack.
+
+use multibulyan::attacks::AttackKind;
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::launch;
+use multibulyan::gar::GarKind;
+use multibulyan::transport::TransportKind;
+
+fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        cluster: ClusterConfig {
+            n,
+            f,
+            actual_byzantine: Some(byz),
+            net_delay_us: 0,
+            drop_prob: 0.0,
+            round_timeout_ms: 60_000,
+        },
+        gar: GarKind::MultiKrum,
+        attack,
+        model: ModelConfig::Quadratic {
+            dim: 64,
+            noise: 0.3,
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.0,
+            steps,
+            batch_size: 8,
+            eval_every: 0,
+            seed: 9,
+        },
+        threads: 2,
+        transport: TransportKind::Pooled,
+        output_dir: None,
+    }
+}
+
+#[test]
+fn pooled_runtime_trains_131_workers_with_drops_and_byzantine_attack() {
+    // 131 workers, 8 of them a sign-flip coalition, 5% gradient drops:
+    // the pooled runtime must keep every round square (straggler
+    // fallback), filter the attack, and converge.
+    let mut exp = pooled_exp(131, 8, 8, AttackKind::SignFlip { scale: 5.0 }, 60);
+    exp.cluster.drop_prob = 0.05;
+    let cluster = launch(&exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut evaluator = cluster.evaluator;
+    coordinator.train(60, 0, &mut evaluator).unwrap();
+    let loss = coordinator.metrics.final_loss().unwrap();
+    let missing = coordinator.metrics.counter("gradients_missing");
+    assert!(coordinator.params().iter().all(|v| v.is_finite()));
+    coordinator.shutdown();
+    // 123 honest workers × 60 rounds × 5% ⇒ hundreds of simulated drops.
+    assert!(missing > 0, "drop injection produced no missing gradients");
+    assert!(
+        loss < 0.01,
+        "131-worker pooled run failed to converge: loss {loss}"
+    );
+}
+
+#[test]
+fn pooled_runtime_handles_512_logical_workers_per_round() {
+    // 512 logical workers in-process — a pure transport-scaling check:
+    // every round must collect all honest gradients with zero drops.
+    let mut exp = pooled_exp(512, 40, 0, AttackKind::None, 2);
+    exp.model = ModelConfig::Quadratic {
+        dim: 32,
+        noise: 0.2,
+    };
+    let cluster = launch(&exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    for _ in 0..2 {
+        let outcome = coordinator.run_round().unwrap();
+        assert_eq!(outcome.collected, 512, "round {}", outcome.round);
+        assert_eq!(outcome.missing, 0);
+    }
+    assert!(coordinator.params().iter().all(|v| v.is_finite()));
+    coordinator.shutdown();
+}
+
+#[test]
+fn pooled_and_threaded_runs_are_bit_identical_at_scale() {
+    // A 64-worker seeded run must land on the same parameters on both
+    // transports (counter-seeded gradients + per-worker fault RNGs).
+    let run = |transport: TransportKind| -> Vec<f32> {
+        let mut exp = pooled_exp(64, 4, 4, AttackKind::SignFlip { scale: 2.0 }, 10);
+        exp.transport = transport;
+        let cluster = launch(&exp, None).unwrap();
+        let mut coordinator = cluster.coordinator;
+        for _ in 0..10 {
+            coordinator.run_round().unwrap();
+        }
+        let params = coordinator.params().to_vec();
+        coordinator.shutdown();
+        params
+    };
+    assert_eq!(run(TransportKind::Pooled), run(TransportKind::Threaded));
+}
