@@ -62,6 +62,7 @@ fn main() -> Result<()> {
                 round_timeout_ms: 60_000,
             },
             gar,
+            pre: Vec::new(),
             attack,
             model: ModelConfig::Artifact {
                 name: "transformer".into(),

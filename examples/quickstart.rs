@@ -46,6 +46,7 @@ fn main() -> Result<()> {
             round_timeout_ms: 60_000,
         },
         gar: GarKind::MultiBulyan,
+        pre: Vec::new(),
         attack: multibulyan::attacks::AttackKind::None,
         model: ModelConfig::Quadratic {
             dim: 1_000,

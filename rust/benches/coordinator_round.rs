@@ -31,6 +31,7 @@ fn main() {
                 round_timeout_ms: 60_000,
             },
             gar,
+            pre: Vec::new(),
             attack: if gar == GarKind::Average {
                 AttackKind::None
             } else {

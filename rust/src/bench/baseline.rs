@@ -243,6 +243,8 @@ mod tests {
                 threads: 1,
                 mean_ms: 5.0,
                 speedup: 1.0,
+                unfused_ms: 5.5,
+                fused_ms: 5.2,
             },
             ThreadSweepRow {
                 gar: GarKind::Median,
@@ -251,6 +253,8 @@ mod tests {
                 threads: 2,
                 mean_ms: 2.0,
                 speedup: 2.5,
+                unfused_ms: 2.4,
+                fused_ms: 2.1,
             },
         ]
     }

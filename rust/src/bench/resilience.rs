@@ -22,6 +22,13 @@ pub struct GauntletRow {
     pub attack: &'static str,
     pub final_loss: f32,
     pub converged: bool,
+    /// Byzantine-filtering precision: the fraction of the GAR's selected
+    /// rows (summed over the run via `MetricsRecorder::selections`) that
+    /// belonged to honest workers. 1.0 = the rule never picked a forged
+    /// row; coordinate-wise rules (median/trimmed-mean/average) report
+    /// all rows each round, so their precision sits at `(n − byz)/n` by
+    /// construction. NaN when nothing was selected.
+    pub selection_precision: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -73,7 +80,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
             "gar \\ attack",
             cfg.attacks
                 .iter()
-                .map(|a| format!("{:>18}", a.label()))
+                .map(|a| format!("{:>24}", a.label()))
                 .collect::<String>()
         );
     }
@@ -93,6 +100,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                     round_timeout_ms: 60_000,
                 },
                 gar,
+                pre: Vec::new(),
                 attack,
                 model: ModelConfig::Quadratic {
                     dim: cfg.dim,
@@ -115,18 +123,31 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
             let mut evaluator = cluster.evaluator;
             coordinator.train(cfg.steps, 0, &mut evaluator)?;
             let final_loss = coordinator.metrics.final_loss().unwrap_or(f32::INFINITY);
+            // Byzantine-filtering precision from the per-worker selection
+            // counts (forged rows occupy indices honest..n).
+            let selections = coordinator.metrics.selections();
+            let honest = cfg.n - byz;
+            let total: u64 = selections.iter().sum();
+            let honest_hits: u64 = selections[..honest.min(selections.len())].iter().sum();
+            let selection_precision = if total == 0 {
+                f64::NAN
+            } else {
+                honest_hits as f64 / total as f64
+            };
             coordinator.shutdown();
             let converged = final_loss.is_finite() && final_loss < cfg.threshold;
             line.push_str(&format!(
-                "{:>11.2e}{:>7}",
+                "{:>12.2e} p={:<4.2}{:>5}",
                 final_loss,
-                if converged { " ok" } else { " FAIL" }
+                selection_precision,
+                if converged { "ok" } else { "FAIL" }
             ));
             rows.push(GauntletRow {
                 gar,
                 attack: attack.label(),
                 final_loss,
                 converged,
+                selection_precision,
             });
         }
         if !quiet {
@@ -137,11 +158,15 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
         .iter()
         .map(|r| {
             format!(
-                "{},{},{},{}",
-                r.gar, r.attack, r.final_loss, r.converged
+                "{},{},{},{},{:.4}",
+                r.gar, r.attack, r.final_loss, r.converged, r.selection_precision
             )
         })
         .collect();
-    super::write_csv("resilience.csv", "gar,attack,final_loss,converged", &csv)?;
+    super::write_csv(
+        "resilience.csv",
+        "gar,attack,final_loss,converged,selection_precision",
+        &csv,
+    )?;
     Ok(rows)
 }

@@ -77,6 +77,7 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
             round_timeout_ms: 60_000,
         },
         gar: GarKind::Average, // placeholder; instance swapped below
+        pre: Vec::new(),
         attack: crate::attacks::AttackKind::None,
         model: ModelConfig::Quadratic {
             dim: cfg.dim,
@@ -200,11 +201,27 @@ pub struct ThreadSweepRow {
     pub mean_ms: f64,
     /// mean_ms(threads = first entry of the sweep) / mean_ms(this row).
     pub speedup: f64,
+    /// Unfused round tail: `aggregate_with_scratch` (select + full-d
+    /// combine) followed by a separate full-d `Sgd::step` pass — the old
+    /// coordinator shape.
+    pub unfused_ms: f64,
+    /// Fused round tail: `select_into` + the coordinator's
+    /// `fused_combine_update` (combine and SGD update in one sharded
+    /// traversal). Output verified bit-identical to the unfused pass.
+    pub fused_ms: f64,
 }
 
 /// Measure aggregation wall-time per (gar, d, threads) triple and the
 /// speedup vs the sweep's first thread count (conventionally 1). Also
 /// asserts the parallel outputs are bit-identical to the first run.
+///
+/// Each cell additionally measures the coordinator round tail both ways —
+/// `unfused_ms` (aggregate into a full-d buffer, then a separate full-d
+/// SGD pass: the pre-redesign shape) vs `fused_ms` (`select_into` + the
+/// fused combine+update traversal the coordinator actually runs) — so the
+/// fusion win is measured, not asserted; the fused aggregate is verified
+/// bit-identical to the unfused one.
+///
 /// Writes `results/thread_sweep.csv` when `write_csv` is set (the CSV is
 /// a side effect callers like `benches/gar_micro.rs` opt out of).
 #[allow(clippy::too_many_arguments)]
@@ -218,9 +235,11 @@ pub fn thread_sweep(
     quiet: bool,
     write_csv: bool,
 ) -> Result<Vec<ThreadSweepRow>> {
-    use crate::gar::GarScratch;
+    use crate::coordinator::fused_combine_update;
+    use crate::gar::{GarScratch, Selection};
     use crate::runtime::Parallelism;
     use crate::tensor::GradMatrix;
+    use crate::training::Sgd;
     use crate::util::Rng64;
 
     anyhow::ensure!(!thread_counts.is_empty(), "thread_sweep: no thread counts");
@@ -248,13 +267,48 @@ pub fn thread_sweep(
                         "{kind} d={d}: threads={threads} changed the aggregate"
                     ),
                 }
+                // Unfused round tail: the measured aggregate above plus a
+                // separate full-d SGD pass.
+                let mut params_u = vec![0.0f32; d];
+                let mut opt_u = Sgd::new(d, 0.05, 0.9)?;
+                let (unfused_ms, _) = protocol.measure(|| {
+                    gar.aggregate_with_scratch(&grads, &mut out, &mut scratch)
+                        .expect("aggregation failed");
+                    opt_u.step(&mut params_u, &out);
+                });
+                // Fused round tail: selection + one combine+update
+                // traversal (what `coordinator::run_round` executes).
+                let mut sel = Selection::default();
+                let mut agg_f = vec![0.0f32; d];
+                let mut params_f = vec![0.0f32; d];
+                let mut opt_f = Sgd::new(d, 0.05, 0.9)?;
+                let (fused_ms, _) = protocol.measure(|| {
+                    gar.select_into(&grads, &mut scratch, &mut sel)
+                        .expect("selection failed");
+                    fused_combine_update(
+                        &par,
+                        &sel,
+                        &grads,
+                        &mut agg_f,
+                        &mut params_f,
+                        &mut opt_f,
+                        &mut scratch.shards,
+                    )
+                    .expect("fused combine failed");
+                });
+                anyhow::ensure!(
+                    agg_f == out,
+                    "{kind} d={d} threads={threads}: fused aggregate diverged"
+                );
                 let base = *base_ms.get_or_insert(mean_ms);
                 let speedup = base / mean_ms.max(1e-9);
                 if !quiet {
                     println!(
                         "threads gar={:<13} d={d:<9} threads={threads:<3} {mean_ms:>10.3} ms   \
-                         speedup ×{speedup:.2}",
-                        kind.as_str()
+                         speedup ×{speedup:.2}   unfused {unfused_ms:>10.3} ms   fused \
+                         {fused_ms:>10.3} ms (×{:.2})",
+                        kind.as_str(),
+                        unfused_ms / fused_ms.max(1e-9)
                     );
                 }
                 rows.push(ThreadSweepRow {
@@ -264,6 +318,8 @@ pub fn thread_sweep(
                     threads,
                     mean_ms,
                     speedup,
+                    unfused_ms,
+                    fused_ms,
                 });
             }
         }
@@ -273,12 +329,16 @@ pub fn thread_sweep(
             .iter()
             .map(|r| {
                 format!(
-                    "{},{},{},{},{:.6},{:.4}",
-                    r.gar, r.n, r.d, r.threads, r.mean_ms, r.speedup
+                    "{},{},{},{},{:.6},{:.4},{:.6},{:.6}",
+                    r.gar, r.n, r.d, r.threads, r.mean_ms, r.speedup, r.unfused_ms, r.fused_ms
                 )
             })
             .collect();
-        super::write_csv("thread_sweep.csv", "gar,n,d,threads,mean_ms,speedup", &csv)?;
+        super::write_csv(
+            "thread_sweep.csv",
+            "gar,n,d,threads,mean_ms,speedup,unfused_ms,fused_ms",
+            &csv,
+        )?;
     }
     Ok(rows)
 }
@@ -308,6 +368,8 @@ mod tests {
         // 2 gars × 1 dim × 2 thread counts.
         assert_eq!(rows.len(), 4);
         assert!(rows.iter().all(|r| r.mean_ms >= 0.0 && r.speedup > 0.0));
+        // The fused/unfused comparison is measured for every cell.
+        assert!(rows.iter().all(|r| r.fused_ms >= 0.0 && r.unfused_ms >= 0.0));
         assert!(
             super::super::results_dir().join("thread_sweep.csv").exists(),
             "write_csv = true must produce the CSV"

@@ -10,7 +10,7 @@
 //! File format: the TOML subset of [`parser`] —
 //!
 //! ```toml
-//! gar = "multi-bulyan"
+//! gar = "multi-bulyan"   # or a pipeline spec: "rmom(0.9)+multi-bulyan"
 //! attack = "little-is-enough"
 //! [cluster]
 //! n = 11
@@ -22,11 +22,17 @@
 //! steps = 600
 //! batch_size = 25
 //! ```
+//!
+//! The `gar` key accepts the full pipeline grammar of
+//! [`crate::gar::GarSpec`]: `(stage "+")* gar`, where the only stage so
+//! far is `rmom(beta)` (resilient momentum, `beta ∈ [0, 1)`); the parsed
+//! stages land in [`ExperimentConfig::pre`] and the terminal rule in
+//! [`ExperimentConfig::gar`].
 
 pub mod parser;
 
 use crate::attacks::AttackKind;
-use crate::gar::GarKind;
+use crate::gar::{GarKind, GarSpec, StageSpec};
 use crate::transport::TransportKind;
 use crate::Result;
 use parser::Document;
@@ -120,6 +126,10 @@ impl Default for TrainConfig {
 pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub gar: GarKind,
+    /// Pre-aggregation stages applied before `gar`'s selection phase, in
+    /// order — the `rmom(0.9)+multi-bulyan` pipeline spec (`gar` key /
+    /// `--gar` flag; see `crate::gar::pipeline`). Empty = plain GAR.
+    pub pre: Vec<StageSpec>,
     pub attack: AttackKind,
     pub model: ModelConfig,
     pub train: TrainConfig,
@@ -151,6 +161,7 @@ impl ExperimentConfig {
                 round_timeout_ms: default_round_timeout_ms(),
             },
             gar,
+            pre: Vec::new(),
             attack: AttackKind::None,
             model: ModelConfig::Artifact {
                 name: "cnn".into(),
@@ -186,7 +197,7 @@ impl ExperimentConfig {
                 .and_then(|v| v.as_str().ok().map(str::to_string))
         };
 
-        let gar: GarKind = root
+        let gar_spec: GarSpec = root
             .get("gar")
             .map(|v| v.as_str())
             .transpose()?
@@ -297,7 +308,8 @@ impl ExperimentConfig {
 
         Ok(Self {
             cluster,
-            gar,
+            gar: gar_spec.kind,
+            pre: gar_spec.stages,
             attack,
             model,
             train,
@@ -305,6 +317,15 @@ impl ExperimentConfig {
             transport,
             output_dir: get_str("", "output_dir"),
         })
+    }
+
+    /// The full aggregation spec (stages + terminal rule) — the value the
+    /// `gar` config key round-trips through.
+    pub fn gar_spec(&self) -> GarSpec {
+        GarSpec {
+            stages: self.pre.clone(),
+            kind: self.gar,
+        }
     }
 
     /// Number of Byzantine workers actually simulated: explicit
@@ -335,6 +356,9 @@ impl ExperimentConfig {
             "cluster has {byz} Byzantine workers but attack = none; \
              set an attack or actual_byzantine = 0"
         );
+        for stage in &self.pre {
+            stage.validate()?;
+        }
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.cluster.drop_prob),
             "drop_prob must be in [0,1]"
@@ -449,6 +473,41 @@ mod tests {
             }
             _ => panic!("wrong model"),
         }
+    }
+
+    #[test]
+    fn gar_pipeline_spec_parses_into_pre_stages() {
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "rmom(0.9)+multi-bulyan"
+            [cluster]
+            n = 11
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.gar, GarKind::MultiBulyan);
+        assert_eq!(
+            cfg.pre,
+            vec![crate::gar::StageSpec::ResilientMomentum { beta: 0.9 }]
+        );
+        assert_eq!(cfg.gar_spec().to_string(), "rmom(0.9)+multi-bulyan");
+        // A plain GAR keeps the pipeline empty.
+        assert!(base().pre.is_empty());
+        // Bad stage parameters are a parse error.
+        assert!(ExperimentConfig::from_text(
+            r#"
+            gar = "rmom(1.5)+multi-bulyan"
+            [cluster]
+            n = 11
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .is_err());
     }
 
     #[test]

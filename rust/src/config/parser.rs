@@ -11,6 +11,22 @@
 //! [section]             # single-level sections
 //! key = 1
 //! ```
+//!
+//! Scalar strings carry their own sub-grammars one level up; the notable
+//! one is the top-level `gar` key, which accepts the aggregation-pipeline
+//! spec parsed by [`crate::gar::GarSpec`]:
+//!
+//! ```text
+//! gar   = "<spec>"
+//! spec  := (stage "+")* rule
+//! stage := "rmom(" beta ")"      # resilient momentum, beta ∈ [0, 1)
+//! rule  := average | median | trimmed-mean | krum | multi-krum
+//!        | bulyan | multi-bulyan
+//! ```
+//!
+//! e.g. `gar = "multi-bulyan"` or `gar = "rmom(0.9)+multi-bulyan"`. This
+//! module only delivers the string; splitting it into stages + terminal
+//! rule happens in `config::ExperimentConfig::from_document`.
 
 use crate::Result;
 use std::collections::BTreeMap;

@@ -172,7 +172,7 @@ pub fn launch(
         },
         seed,
     };
-    let coordinator = Coordinator::new(
+    let mut coordinator = Coordinator::new(
         config.gar.instantiate_parallel(n, config.cluster.f, &par)?,
         config.attack.instantiate(),
         byz,
@@ -182,6 +182,16 @@ pub fn launch(
         config.train.momentum,
         options,
     )?;
+    if !config.pre.is_empty() {
+        // Pre-aggregation pipeline stages (gar = "rmom(0.9)+…"), sharing
+        // the aggregation pool.
+        let stages = config
+            .pre
+            .iter()
+            .map(|s| s.instantiate(&par))
+            .collect::<Result<Vec<_>>>()?;
+        coordinator = coordinator.with_pre_stages(stages);
+    }
 
     Ok(LaunchedCluster {
         coordinator,
@@ -270,6 +280,48 @@ mod tests {
         assert_eq!(reference, run(TransportKind::Pooled, 1));
         assert_eq!(reference, run(TransportKind::Pooled, 4));
         assert_eq!(reference, run(TransportKind::Threaded, 2));
+    }
+
+    #[test]
+    fn resilient_momentum_pipeline_trains_and_stays_deterministic() {
+        // gar = "rmom(0.9)+multi-bulyan": converges under sign-flip and
+        // is bit-identical across thread counts (the momentum stage is
+        // coordinate-sharded like every other pass).
+        let run = |threads: usize| -> (f32, Vec<f32>) {
+            let mut cfg = ExperimentConfig::from_text(
+                r#"
+                gar = "rmom(0.5)+multi-bulyan"
+                attack = "sign-flip"
+                [cluster]
+                n = 11
+                f = 2
+                actual_byzantine = 2
+                [model]
+                kind = "quadratic"
+                dim = 48
+                noise = 0.05
+                [train]
+                learning_rate = 0.2
+                momentum = 0.0
+                steps = 80
+                batch_size = 8
+                seed = 3
+                "#,
+            )
+            .unwrap();
+            cfg.threads = threads;
+            let mut cluster = launch(&cfg, None).unwrap();
+            let mut evaluator = cluster.evaluator;
+            cluster.coordinator.train(80, 10, &mut evaluator).unwrap();
+            let loss = cluster.coordinator.metrics.final_loss().unwrap();
+            let params = cluster.coordinator.params().to_vec();
+            cluster.coordinator.shutdown();
+            (loss, params)
+        };
+        let (loss, params) = run(1);
+        assert!(loss < 1e-2, "rmom+multi-bulyan under sign-flip: loss {loss}");
+        let (_, params4) = run(4);
+        assert_eq!(params, params4, "threads must stay a pure latency knob");
     }
 
     #[test]

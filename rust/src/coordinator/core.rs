@@ -1,17 +1,94 @@
-//! The round loop: broadcast → collect → forge → aggregate → update.
+//! The round loop: broadcast → collect → forge → pre-aggregate → select →
+//! fused combine+update.
+//!
+//! The aggregation tail exploits the two-phase GAR API: `select` runs the
+//! O(n²) decision work once, then [`fused_combine_update`] walks the
+//! coordinate space in a single sharded pass that combines each range
+//! *and* immediately applies the SGD update to it — no separate full-`d`
+//! aggregate-then-step traversal. Because combine and the SGD update are
+//! both coordinate-wise, the fused pass is bit-identical to the old
+//! two-pass path for every thread count and range partition.
 
 use crate::attacks::{Attack, AttackCtx};
-use crate::gar::{Gar, GarScratch};
+use crate::gar::{CombineScratch, Gar, GarScratch, PreAggregate, Selection};
 use crate::metrics::{MetricsRecorder, Stopwatch, TrainPoint};
+use crate::runtime::{shard_zip, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::GradMatrix;
 use crate::training::{LrSchedule, Sgd};
 use crate::transport::ServerEndpoint;
 use crate::util::Rng64;
 use crate::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use super::evaluator::Evaluator;
+
+/// The fused O(d) tail of a round: combine each coordinate range of the
+/// aggregate into `agg` and immediately apply the SGD update to the same
+/// range of `params`/the optimizer velocity — one traversal of the
+/// coordinate space instead of combine-then-step. Non-finite aggregate
+/// coordinates (a GAR bug or an un-filtered NaN attack) are skipped
+/// *per coordinate* — their parameter and velocity entries are left
+/// untouched — and the skip count is returned. The skip decision is
+/// coordinate-local, so results stay bit-identical for every thread
+/// count and partition.
+///
+/// `pub(crate)` so `bench::slowdown` can measure the exact fused pass the
+/// coordinator runs (the fused-vs-unfused comparison column).
+pub(crate) fn fused_combine_update(
+    par: &Parallelism,
+    sel: &Selection,
+    grads: &GradMatrix,
+    agg: &mut [f32],
+    params: &mut [f32],
+    opt: &mut Sgd,
+    shards: &mut Vec<CombineScratch>,
+) -> Result<usize> {
+    sel.validate(grads)?;
+    anyhow::ensure!(
+        agg.len() == grads.d() && params.len() == agg.len(),
+        "fused update: agg/params/d mismatch ({}/{}/{})",
+        agg.len(),
+        params.len(),
+        grads.d()
+    );
+    let lr = opt.lr();
+    let mu = opt.momentum();
+    let velocity = opt.velocity_mut();
+    anyhow::ensure!(
+        velocity.len() == params.len(),
+        "fused update: optimizer dimension {} != d {}",
+        velocity.len(),
+        params.len()
+    );
+    let skipped = AtomicUsize::new(0);
+    shard_zip(
+        par,
+        [agg, params, velocity],
+        shards,
+        CombineScratch::default,
+        MIN_COORDS_PER_SHARD,
+        |offset, [agg_r, p_r, v_r]: [&mut [f32]; 3], cs| {
+            sel.combine_range_unchecked(grads, offset, agg_r, cs);
+            let mut skip = 0usize;
+            for k in 0..agg_r.len() {
+                let g = agg_r[k];
+                if g.is_finite() {
+                    // Exactly `Sgd::step`'s per-coordinate arithmetic.
+                    v_r[k] = mu * v_r[k] + g;
+                    p_r[k] -= lr * v_r[k];
+                } else {
+                    skip += 1;
+                }
+            }
+            if skip > 0 {
+                skipped.fetch_add(skip, Ordering::Relaxed);
+            }
+        },
+    );
+    Ok(skipped.load(Ordering::Relaxed))
+}
 
 /// Tunables not covered by the experiment config.
 #[derive(Debug, Clone)]
@@ -41,8 +118,14 @@ pub struct RoundOutcome {
     pub collected: usize,
     /// Honest gradients substituted from the last-known cache.
     pub missing: usize,
-    /// GAR aggregation wall time, seconds.
+    /// Wall time of the aggregation tail (selection + fused
+    /// combine-and-update), seconds.
     pub agg_seconds: f64,
+    /// Rows the GAR's selection phase picked this round (worker indices;
+    /// forged Byzantine rows sit at `honest..n`). Coordinate-wise rules
+    /// report all rows — see `Selection::selected_rows`. The resilience
+    /// bench derives Byzantine-filtering precision from these.
+    pub selected: Vec<usize>,
 }
 
 /// The parameter server.
@@ -52,12 +135,17 @@ pub struct Coordinator {
     byz: usize,
     gar: Box<dyn Gar>,
     attack: Option<Box<dyn Attack>>,
+    /// Pre-aggregation stages applied (in order) to the proposal matrix
+    /// before the GAR's selection phase — see `gar::pipeline`.
+    pre: Vec<Box<dyn PreAggregate>>,
     server: ServerEndpoint,
     params: Vec<f32>,
     opt: Sgd,
     options: CoordinatorOptions,
     grads: GradMatrix,
     agg: Vec<f32>,
+    /// Reused selection of the round loop (cleared/refilled per round).
+    selection: Selection,
     /// Last successfully received gradient per honest worker (straggler
     /// fallback — reusing a stale gradient keeps the GAR's input square
     /// and is the standard synchronous-PS recovery).
@@ -100,11 +188,13 @@ impl Coordinator {
             byz,
             gar,
             attack,
+            pre: Vec::new(),
             server,
             params: initial_params,
             opt,
             grads: GradMatrix::zeros(n, d),
             agg: vec![0.0; d],
+            selection: Selection::default(),
             last_good: vec![None; n - byz],
             scratch: GarScratch::new(),
             rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
@@ -112,6 +202,14 @@ impl Coordinator {
             metrics: MetricsRecorder::new(n),
             options,
         })
+    }
+
+    /// Install pre-aggregation stages (applied in order each round,
+    /// after Byzantine forging and before the GAR's selection phase) —
+    /// the `gar = "rmom(0.9)+multi-bulyan"` pipeline surface.
+    pub fn with_pre_stages(mut self, stages: Vec<Box<dyn PreAggregate>>) -> Self {
+        self.pre = stages;
+        self
     }
 
     pub fn params(&self) -> &[f32] {
@@ -236,23 +334,56 @@ impl Coordinator {
             }
         }
 
-        // 5. Aggregate (the timed hot path) and update.
-        let sw = Stopwatch::start();
-        self.gar
-            .aggregate_with_scratch(&self.grads, &mut self.agg, &mut self.scratch)?;
-        let agg_seconds = sw.elapsed_s();
-        self.metrics.time("aggregate", agg_seconds);
+        // 5. Pre-aggregation stages (resilient momentum etc.) transform
+        //    the full proposal matrix — Byzantine rows included, which is
+        //    threat-model-equivalent: a coalition controlling its raw
+        //    submissions can realise any momentum stream.
+        if !self.pre.is_empty() {
+            let sw = Stopwatch::start();
+            for stage in &mut self.pre {
+                stage.apply(&mut self.grads, round)?;
+            }
+            self.metrics.time("pre_aggregate", sw.elapsed_s());
+        }
 
+        // 6. Selection: the O(n²) phase, once per round.
+        let sw = Stopwatch::start();
+        let mut sel = std::mem::take(&mut self.selection);
+        self.gar
+            .select_into(&self.grads, &mut self.scratch, &mut sel)?;
+        let select_seconds = sw.elapsed_s();
+        self.metrics.time("select", select_seconds);
+        for &w in sel.selected_rows() {
+            self.metrics.record_selection(w);
+        }
+        let selected = sel.selected_rows().to_vec();
+
+        // 7. Fused combine + SGD update: one sharded pass over the
+        //    coordinate space — no separate full-d aggregate
+        //    materialisation pass. `self.agg` still receives the full
+        //    aggregate (the `last_aggregate` API). Non-finite aggregate
+        //    coordinates (a GAR bug or an un-filtered NaN attack) are
+        //    skipped per coordinate, never applied.
         let lr = self.options.schedule.at((round - 1) as usize);
         self.opt.set_lr(lr);
-        // Defensive: never apply a non-finite update (a GAR bug or an
-        // un-filtered NaN attack would otherwise destroy the model).
-        if self.agg.iter().any(|v| !v.is_finite()) {
+        let sw = Stopwatch::start();
+        let skipped = fused_combine_update(
+            self.gar.parallelism(),
+            &sel,
+            &self.grads,
+            &mut self.agg,
+            &mut self.params,
+            &mut self.opt,
+            &mut self.scratch.shards,
+        )?;
+        let combine_seconds = sw.elapsed_s();
+        self.selection = sel;
+        self.metrics.time("combine_update", combine_seconds);
+        let agg_seconds = select_seconds + combine_seconds;
+        self.metrics.time("aggregate", agg_seconds);
+        if skipped > 0 {
             self.metrics.incr("non_finite_aggregate_skipped");
-        } else {
-            let agg = std::mem::take(&mut self.agg);
-            self.opt.step(&mut self.params, &agg);
-            self.agg = agg;
+            self.metrics.add("non_finite_coords_skipped", skipped as u64);
         }
         self.metrics.incr("rounds");
 
@@ -261,6 +392,7 @@ impl Coordinator {
             collected,
             missing,
             agg_seconds,
+            selected,
         })
     }
 
@@ -471,6 +603,108 @@ mod tests {
         // Zero-gradient fallback: params unchanged.
         assert!(coord.params().iter().all(|&v| v == 0.0));
         coord.shutdown();
+    }
+
+    #[test]
+    fn selected_sums_match_recorder_under_omniscient_attack() {
+        // RoundOutcome::selected, summed per worker over the run, must
+        // equal MetricsRecorder::selections() exactly.
+        let (mut coord, _p) = quadratic_cluster(
+            11,
+            2,
+            2,
+            GarKind::MultiKrum,
+            AttackKind::Omniscient { epsilon: 0.1 },
+            16,
+            0.05,
+        );
+        let mut counts = vec![0u64; 11];
+        for _ in 0..8 {
+            let out = coord.run_round().unwrap();
+            assert!(!out.selected.is_empty());
+            assert!(out.selected.iter().all(|&w| w < 11));
+            for &w in &out.selected {
+                counts[w] += 1;
+            }
+        }
+        assert_eq!(coord.metrics.selections(), &counts[..]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn fused_combine_update_is_bit_identical_to_two_pass() {
+        // The fused pass must equal aggregate_with_scratch followed by
+        // Sgd::step, bit for bit, at every thread count.
+        let (n, f, d) = (11usize, 2usize, 9_000usize);
+        let grads =
+            GradMatrix::from_fn(n, d, |i, j| ((i * 17 + j * 5) % 97) as f32 * 0.02 - 0.9);
+        for kind in [GarKind::MultiBulyan, GarKind::Median, GarKind::MultiKrum] {
+            for threads in [1usize, 3] {
+                let par = Parallelism::new(threads);
+                let gar = kind.instantiate_parallel(n, f, &par).unwrap();
+                let mut scratch = GarScratch::new();
+                let mut agg = vec![0.0f32; d];
+                gar.aggregate_with_scratch(&grads, &mut agg, &mut scratch)
+                    .unwrap();
+                let mut p1 = vec![0.5f32; d];
+                let mut opt1 = Sgd::new(d, 0.1, 0.9).unwrap();
+                opt1.step(&mut p1, &agg);
+
+                let sel = gar.select(&grads, &mut scratch).unwrap();
+                let mut agg2 = vec![0.0f32; d];
+                let mut p2 = vec![0.5f32; d];
+                let mut opt2 = Sgd::new(d, 0.1, 0.9).unwrap();
+                let skipped = fused_combine_update(
+                    &par,
+                    &sel,
+                    &grads,
+                    &mut agg2,
+                    &mut p2,
+                    &mut opt2,
+                    &mut scratch.shards,
+                )
+                .unwrap();
+                assert_eq!(skipped, 0);
+                assert_eq!(agg, agg2, "{kind} threads={threads}: aggregate diverged");
+                assert_eq!(p1, p2, "{kind} threads={threads}: params diverged");
+                assert_eq!(opt1.velocity(), opt2.velocity(), "{kind} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_update_skips_non_finite_coordinates() {
+        // A NaN aggregate coordinate must leave exactly that parameter
+        // (and its velocity) untouched; finite coordinates still update.
+        let d = 8;
+        let mut grads = GradMatrix::zeros(3, d);
+        grads.row_mut(0)[3] = f32::NAN; // poisons coordinate 3 of the mean
+        grads.row_mut(1).fill(1.0);
+        let gar = GarKind::Average.instantiate(3, 0).unwrap();
+        let mut scratch = GarScratch::new();
+        let sel = gar.select(&grads, &mut scratch).unwrap();
+        let mut agg = vec![0.0f32; d];
+        let mut params = vec![1.0f32; d];
+        let mut opt = Sgd::new(d, 0.5, 0.0).unwrap();
+        let skipped = fused_combine_update(
+            &Parallelism::sequential(),
+            &sel,
+            &grads,
+            &mut agg,
+            &mut params,
+            &mut opt,
+            &mut scratch.shards,
+        )
+        .unwrap();
+        assert_eq!(skipped, 1);
+        assert_eq!(params[3], 1.0, "poisoned coordinate must be untouched");
+        assert_eq!(opt.velocity()[3], 0.0);
+        for (j, &v) in params.iter().enumerate() {
+            if j != 3 {
+                assert!(v < 1.0, "coordinate {j} should have been updated");
+                assert!(v.is_finite());
+            }
+        }
     }
 
     #[test]

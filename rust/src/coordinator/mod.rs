@@ -5,8 +5,10 @@
 //! §I): broadcast parameters, collect the honest gradients over the
 //! simulated transport (with timeout + last-known-gradient fallback for
 //! stragglers/drops), let the Byzantine coalition forge its `f` rows
-//! (omniscient threat model, §II-C), aggregate with the configured GAR,
-//! and apply the SGD update. [`launch`] wires a full cluster from an
+//! (omniscient threat model, §II-C), run the pre-aggregation stages, run
+//! the GAR's O(n²) *selection* phase, then apply the fused O(d)
+//! combine+SGD pass (no separate full-d aggregate materialisation).
+//! [`launch`] wires a full cluster from an
 //! [`crate::config::ExperimentConfig`].
 
 mod builder;
@@ -14,5 +16,6 @@ mod core;
 mod evaluator;
 
 pub use builder::{launch, LaunchedCluster};
+pub(crate) use core::fused_combine_update;
 pub use core::{Coordinator, CoordinatorOptions, RoundOutcome};
 pub use evaluator::Evaluator;

@@ -3,7 +3,8 @@
 //! al. 2014]; the reference point of both the slowdown theorems and
 //! Fig. 3).
 
-use super::{check_shape, sharded_mean_rows_into, Gar, GarScratch};
+use super::selection::{CombinePlan, Selection};
+use super::{check_select_shape, Gar, GarScratch};
 use crate::runtime::Parallelism;
 use crate::tensor::GradMatrix;
 use crate::Result;
@@ -24,7 +25,7 @@ impl Average {
         })
     }
 
-    /// Use `par` for the coordinate-sharded O(nd) pass.
+    /// Use `par` for the coordinate-sharded O(nd) combine.
     pub fn with_parallelism(mut self, par: Parallelism) -> Self {
         self.par = par;
         self
@@ -44,22 +45,26 @@ impl Gar for Average {
         0
     }
 
+    fn parallelism(&self) -> &Parallelism {
+        &self.par
+    }
+
     fn gradients_used(&self) -> usize {
         self.n
     }
 
-    fn aggregate_with_scratch(
+    /// "Selection" is trivial: every row, in order. All O(nd) work lives
+    /// in the combine phase (which is why averaging is the parallel
+    /// yardstick of Theorem 2.ii).
+    fn select_into(
         &self,
         grads: &GradMatrix,
-        out: &mut [f32],
-        scratch: &mut GarScratch,
+        _scratch: &mut GarScratch,
+        sel: &mut Selection,
     ) -> Result<()> {
-        check_shape("average", grads, self.n, out)?;
-        // Coordinates are independent: disjoint ranges per shard, row-sum
-        // order unchanged ⇒ bit-identical to the sequential pass.
-        scratch.indices.clear();
-        scratch.indices.extend(0..self.n);
-        sharded_mean_rows_into(&self.par, grads, &scratch.indices, out);
+        check_select_shape("average", grads, self.n)?;
+        sel.reset(CombinePlan::MeanRows, self.n);
+        sel.rows.extend(0..self.n);
         Ok(())
     }
 }
@@ -97,6 +102,16 @@ mod tests {
         let g = GradMatrix::from_rows(&rows);
         let out = Average::new(10).unwrap().aggregate(&g).unwrap();
         assert!(out[0] > 1e7);
+    }
+
+    #[test]
+    fn selection_is_every_row() {
+        let g = GradMatrix::zeros(3, 4);
+        let gar = Average::new(3).unwrap();
+        let mut scratch = GarScratch::new();
+        let sel = gar.select(&g, &mut scratch).unwrap();
+        assert_eq!(sel.selected_rows(), &[0, 1, 2]);
+        assert_eq!(sel.plan(), CombinePlan::MeanRows);
     }
 
     #[test]

@@ -11,31 +11,35 @@
 //!   the single Krum winner, and the final trimmed average runs over the
 //!   θ winners.
 //! * [`MultiBulyan`] — the paper's contribution (Algorithm 1): each
-//!   iteration additionally records the MULTI-KRUM *average* of the
-//!   iteration's selection (`G^agr`), the median is taken over the
-//!   extracted winners (`G^ext`), and the final per-coordinate trimmed
-//!   average runs over `G^agr` — recovering the `m̃/n` slowdown while
-//!   keeping the strong-resilience bound.
+//!   iteration additionally records the MULTI-KRUM *selection* of the
+//!   round, the median is taken over the extracted winners (`G^ext`), and
+//!   the final per-coordinate trimmed average runs over the iteration
+//!   averages (`G^agr`) — recovering the `m̃/n` slowdown while keeping
+//!   the strong-resilience bound.
 //!
 //! Both implementations compute the `n × n` distance matrix **once** and
 //! re-score the shrinking pool from the cached matrix (O(k²) per
 //! iteration), the optimisation the paper's §V-B highlights; total cost is
 //! O(n²d) — linear in `d`, the paper's Theorem 2(ii).
 //!
-//! All three O(d) passes — the distance matrix, each iteration's
-//! MULTI-KRUM average, and the final per-coordinate trimmed average — run
-//! on the rule's [`Parallelism`], sharded so that results stay
-//! bit-identical to the sequential path ("multi-Bulyan's parallelisability
-//! further adds to its efficiency", §V).
+//! The two-phase split is exact here: `select_into` performs the distance
+//! matrix plus the θ pool iterations and records **indices only** (the θ
+//! winners and, for MULTI-BULYAN, each iteration's selected row set); the
+//! entire O(d) tail — G^agr, the per-coordinate median, the β-closest
+//! average — happens in the combine phase (`gar::selection`,
+//! `CombinePlan::BulyanTrim`), per coordinate range, with no θ×d
+//! intermediate matrices at all. Outputs are bit-identical to the old
+//! monolithic path and to the sequential path for every thread count
+//! ("multi-Bulyan's parallelisability further adds to its efficiency", §V).
 
 use super::krum::{distances_via_scratch, krum_scores_from_distances};
-use super::scratch::ShardScratch;
-use super::{check_shape, sharded_mean_rows_into, Gar, GarScratch};
-use crate::runtime::{shard_slice, Parallelism, MIN_COORDS_PER_SHARD};
-use crate::tensor::{argselect_smallest, small_median_sorting, GradMatrix};
+use super::selection::{CombinePlan, Selection};
+use super::{check_select_shape, Gar, GarScratch};
+use crate::runtime::Parallelism;
+use crate::tensor::{argselect_smallest, GradMatrix};
 use crate::Result;
 
-/// Shared BULYAN parameters and buffers logic.
+/// Shared BULYAN parameters and selection logic.
 #[derive(Debug, Clone)]
 struct BulyanCore {
     n: usize,
@@ -65,33 +69,37 @@ impl BulyanCore {
         })
     }
 
-    /// Run the θ selection iterations.
-    ///
-    /// Fills `scratch.ext` (θ×d winners) and — when `multi` — `scratch.agr`
-    /// (θ×d MULTI-KRUM averages). Returns nothing; results live in scratch.
-    fn select_iterations(&self, grads: &GradMatrix, scratch: &mut GarScratch, multi: bool) {
-        let (n, d) = (self.n, grads.d());
+    /// Phase 1: the θ selection iterations over the cached distance
+    /// matrix. Records the per-iteration winners (and, when `multi`, the
+    /// per-iteration MULTI-KRUM row sets) into `sel` — indices only.
+    fn select_into(
+        &self,
+        rule: &'static str,
+        grads: &GradMatrix,
+        scratch: &mut GarScratch,
+        sel: &mut Selection,
+        multi: bool,
+    ) -> Result<()> {
+        check_select_shape(rule, grads, self.n)?;
+        let n = self.n;
         let dist = distances_via_scratch(grads, &self.par, scratch);
 
+        sel.reset(
+            CombinePlan::BulyanTrim {
+                beta: self.beta,
+                multi,
+            },
+            n,
+        );
+        if multi {
+            sel.set_offsets.push(0);
+        }
         scratch.pool.clear();
         scratch.pool.extend(0..n);
-        scratch.ext.clear();
-        scratch.ext.resize(self.theta * d, 0.0);
-        if multi {
-            scratch.agr.clear();
-            scratch.agr.resize(self.theta * d, 0.0);
-        }
         let mut pool = std::mem::take(&mut scratch.pool);
         let mut scores = std::mem::take(&mut scratch.scores);
 
-        // NOTE on a rejected "optimization": computing each round's
-        // average as (running_sum − Σ non-selected)/m would cut the row
-        // reads from m_round to f+2, but the running sum suffers
-        // catastrophic f32 cancellation when a Byzantine row carries
-        // ±1e30-scale values (the `infinity` attack) — the direct sum
-        // over the *selected* rows never touches those. Correctness under
-        // adversarial inputs beats the constant factor here.
-        for t in 0..self.theta {
+        for _t in 0..self.theta {
             let k = pool.len();
             let m_round = k - self.f - 2;
             krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
@@ -99,15 +107,12 @@ impl BulyanCore {
             let selected = argselect_smallest(&scores, m_round.max(1));
             let winner_pos = selected[0];
             let winner = pool[winner_pos];
-            scratch.ext[t * d..(t + 1) * d].copy_from_slice(grads.row(winner));
+            sel.rows.push(winner);
             if multi {
-                // Resolve pool positions to row indices, then reuse the
-                // shared sharded row-average (bit-identical to sequential).
-                let indices = &mut scratch.indices;
-                indices.clear();
-                indices.extend(selected.iter().map(|&p| pool[p]));
-                let agr_row = &mut scratch.agr[t * d..(t + 1) * d];
-                sharded_mean_rows_into(&self.par, grads, indices, agr_row);
+                // Resolve pool positions to row indices; the combine
+                // phase re-derives G^agr from these per coordinate.
+                sel.sets.extend(selected.iter().map(|&p| pool[p]));
+                sel.set_offsets.push(sel.sets.len());
             }
             pool.swap_remove(winner_pos);
         }
@@ -115,81 +120,6 @@ impl BulyanCore {
         scratch.pool = pool;
         scratch.scores = scores;
         scratch.distances = dist;
-    }
-
-    /// Per-coordinate: median of `ext`, then average of the `β` values of
-    /// `src` (`ext` for BULYAN, `agr` for MULTI-BULYAN) closest to it.
-    ///
-    /// Hot loop (runs d times): insertion-sort median over θ ≤ 64 values
-    /// and a β-step partial selection sort over reused `(deviation,
-    /// value)` pairs — zero allocation, no introselect overhead (the
-    /// EXPERIMENTS.md §Perf "coordinate loop" item; the naive version
-    /// allocated an index vector per coordinate). Sharded over disjoint
-    /// coordinate ranges with per-shard buffers.
-    fn trimmed_average(&self, d: usize, scratch: &mut GarScratch, multi: bool, out: &mut [f32]) {
-        let theta = self.theta;
-        let beta = self.beta;
-        let ext = std::mem::take(&mut scratch.ext);
-        let agr = std::mem::take(&mut scratch.agr);
-
-        shard_slice(
-            &self.par,
-            out,
-            &mut scratch.shards,
-            ShardScratch::default,
-            MIN_COORDS_PER_SHARD,
-            |offset, range, shard| {
-                shard.column.clear();
-                shard.column.resize(theta, 0.0);
-                shard.pairs.clear();
-                shard.pairs.resize(theta, (0.0, 0.0));
-                let col = &mut shard.column;
-                let pairs = &mut shard.pairs;
-                for (k, o) in range.iter_mut().enumerate() {
-                    let j = offset + k;
-                    for t in 0..theta {
-                        col[t] = ext[t * d + j];
-                    }
-                    let median = small_median_sorting(col);
-                    let src = if multi { &agr } else { &ext };
-                    for t in 0..theta {
-                        let v = src[t * d + j];
-                        pairs[t] = ((v - median).abs(), v);
-                    }
-                    // Partial selection sort: move the β smallest
-                    // deviations to the front (β·θ compares; β and θ are
-                    // both ≤ n ≤ 64 here).
-                    let mut acc = 0.0f32;
-                    for b in 0..beta {
-                        let mut best = b;
-                        for t in (b + 1)..theta {
-                            if pairs[t].0 < pairs[best].0 {
-                                best = t;
-                            }
-                        }
-                        pairs.swap(b, best);
-                        acc += pairs[b].1;
-                    }
-                    *o = acc / beta as f32;
-                }
-            },
-        );
-
-        scratch.ext = ext;
-        scratch.agr = agr;
-    }
-
-    fn aggregate(
-        &self,
-        rule: &'static str,
-        grads: &GradMatrix,
-        out: &mut [f32],
-        scratch: &mut GarScratch,
-        multi: bool,
-    ) -> Result<()> {
-        check_shape(rule, grads, self.n, out)?;
-        self.select_iterations(grads, scratch, multi);
-        self.trimmed_average(grads.d(), scratch, multi, out);
         Ok(())
     }
 }
@@ -237,17 +167,21 @@ impl Gar for Bulyan {
         self.core.f
     }
 
+    fn parallelism(&self) -> &Parallelism {
+        &self.core.par
+    }
+
     fn gradients_used(&self) -> usize {
         self.core.beta
     }
 
-    fn aggregate_with_scratch(
+    fn select_into(
         &self,
         grads: &GradMatrix,
-        out: &mut [f32],
         scratch: &mut GarScratch,
+        sel: &mut Selection,
     ) -> Result<()> {
-        self.core.aggregate("bulyan", grads, out, scratch, false)
+        self.core.select_into("bulyan", grads, scratch, sel, false)
     }
 }
 
@@ -296,19 +230,24 @@ impl Gar for MultiBulyan {
         self.core.f
     }
 
+    fn parallelism(&self) -> &Parallelism {
+        &self.core.par
+    }
+
     /// m̃ = n − 2f − 2 — each kept coordinate is an average of MULTI-KRUM
     /// averages over ≥ m̃ distinct correct gradients (Theorem 2.iii).
     fn gradients_used(&self) -> usize {
         self.core.theta
     }
 
-    fn aggregate_with_scratch(
+    fn select_into(
         &self,
         grads: &GradMatrix,
-        out: &mut [f32],
         scratch: &mut GarScratch,
+        sel: &mut Selection,
     ) -> Result<()> {
-        self.core.aggregate("multi-bulyan", grads, out, scratch, true)
+        self.core
+            .select_into("multi-bulyan", grads, scratch, sel, true)
     }
 }
 
@@ -329,6 +268,26 @@ mod tests {
         assert_eq!(mb.theta(), n - 2 * f - 2);
         assert_eq!(mb.beta(), mb.theta() - 2 * f);
         assert!(MultiBulyan::new(10, 2).is_err()); // n < 4f+3
+    }
+
+    #[test]
+    fn selection_records_theta_winners_and_sets() {
+        let (n, f) = fig3_config();
+        let mut rng = Rng64::seed_from_u64(11);
+        let grads = GradMatrix::uniform(n, 40, -1.0, 1.0, &mut rng);
+        let mb = MultiBulyan::new(n, f).unwrap();
+        let mut scratch = GarScratch::new();
+        let sel = mb.select(&grads, &mut scratch).unwrap();
+        assert_eq!(sel.selected_rows().len(), mb.theta());
+        // Winners are distinct (each iteration removes its winner).
+        let mut sorted = sel.selected_rows().to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), mb.theta());
+        // Classic BULYAN records winners only.
+        let b = Bulyan::new(n, f).unwrap();
+        let sel_b = b.select(&grads, &mut scratch).unwrap();
+        assert_eq!(sel_b.selected_rows().len(), b.theta());
     }
 
     #[test]

@@ -7,10 +7,13 @@
 //! gradients and returns their average, recovering an `m̃/n` slowdown
 //! instead of Krum's `1/n` (Theorem 1).
 //!
-//! The O(n²d) distance pass and the O(nd) final average both run on the
-//! rule's [`Parallelism`] (sharded over `d`; bit-identical to sequential).
+//! In the two-phase API all the O(n²d) work (distance matrix + scoring)
+//! is the *selection* phase; the combine is a row copy (KRUM) or a
+//! sharded m-row average (MULTI-KRUM) — both callable per coordinate
+//! range, bit-identical to sequential.
 
-use super::{check_shape, pairwise_sq_distances_sharded, sharded_mean_rows_into, Gar, GarScratch};
+use super::selection::{CombinePlan, Selection};
+use super::{check_select_shape, pairwise_sq_distances_sharded, Gar, GarScratch};
 use crate::runtime::Parallelism;
 use crate::tensor::{argselect_smallest, GradMatrix};
 use crate::Result;
@@ -76,6 +79,21 @@ pub(crate) fn distances_via_scratch(
     dist
 }
 
+/// Run the full-pool Krum scoring: distance matrix (sharded over `par`)
+/// plus scores for every row. Shared by KRUM and MULTI-KRUM's selection
+/// phases; `scratch.scores` holds the result on return.
+fn score_full_pool(gar: &str, grads: &GradMatrix, n: usize, f: usize, par: &Parallelism, scratch: &mut GarScratch) -> Result<()> {
+    check_select_shape(gar, grads, n)?;
+    let dist = distances_via_scratch(grads, par, scratch);
+    scratch.pool.clear();
+    scratch.pool.extend(0..n);
+    let mut scores = std::mem::take(&mut scratch.scores);
+    krum_scores_from_distances(&dist, n, &scratch.pool, f, &mut scores);
+    scratch.distances = dist;
+    scratch.scores = scores;
+    Ok(())
+}
+
 /// KRUM: select the single gradient with the smallest score.
 #[derive(Debug, Clone)]
 pub struct Krum {
@@ -102,20 +120,6 @@ impl Krum {
         self.par = par;
         self
     }
-
-    /// Index of the Krum winner (exposed for tests and the worker-scoring
-    /// diagnostics in the coordinator).
-    pub fn select(&self, grads: &GradMatrix, scratch: &mut GarScratch) -> usize {
-        let n = self.n;
-        let dist = distances_via_scratch(grads, &self.par, scratch);
-        let pool: Vec<usize> = (0..n).collect();
-        let mut scores = std::mem::take(&mut scratch.scores);
-        krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
-        let winner = argselect_smallest(&scores, 1)[0];
-        scratch.distances = dist;
-        scratch.scores = scores;
-        winner
-    }
 }
 
 impl Gar for Krum {
@@ -131,19 +135,24 @@ impl Gar for Krum {
         self.f
     }
 
+    fn parallelism(&self) -> &Parallelism {
+        &self.par
+    }
+
     fn gradients_used(&self) -> usize {
         1
     }
 
-    fn aggregate_with_scratch(
+    fn select_into(
         &self,
         grads: &GradMatrix,
-        out: &mut [f32],
         scratch: &mut GarScratch,
+        sel: &mut Selection,
     ) -> Result<()> {
-        check_shape("krum", grads, self.n, out)?;
-        let winner = self.select(grads, scratch);
-        out.copy_from_slice(grads.row(winner));
+        score_full_pool("krum", grads, self.n, self.f, &self.par, scratch)?;
+        let winner = argselect_smallest(&scratch.scores, 1)[0];
+        sel.reset(CombinePlan::CopyRow, self.n);
+        sel.rows.push(winner);
         Ok(())
     }
 }
@@ -202,19 +211,6 @@ impl MultiKrum {
     pub fn m(&self) -> usize {
         self.m
     }
-
-    /// Indices of the `m` selected gradients, ascending score order.
-    pub fn select(&self, grads: &GradMatrix, scratch: &mut GarScratch) -> Vec<usize> {
-        let n = self.n;
-        let dist = distances_via_scratch(grads, &self.par, scratch);
-        let pool: Vec<usize> = (0..n).collect();
-        let mut scores = std::mem::take(&mut scratch.scores);
-        krum_scores_from_distances(&dist, n, &pool, self.f, &mut scores);
-        let selected = argselect_smallest(&scores, self.m);
-        scratch.distances = dist;
-        scratch.scores = scores;
-        selected
-    }
 }
 
 impl Gar for MultiKrum {
@@ -230,19 +226,24 @@ impl Gar for MultiKrum {
         self.f
     }
 
+    fn parallelism(&self) -> &Parallelism {
+        &self.par
+    }
+
     fn gradients_used(&self) -> usize {
         self.m
     }
 
-    fn aggregate_with_scratch(
+    fn select_into(
         &self,
         grads: &GradMatrix,
-        out: &mut [f32],
         scratch: &mut GarScratch,
+        sel: &mut Selection,
     ) -> Result<()> {
-        check_shape("multi-krum", grads, self.n, out)?;
-        let selected = self.select(grads, scratch);
-        sharded_mean_rows_into(&self.par, grads, &selected, out);
+        score_full_pool("multi-krum", grads, self.n, self.f, &self.par, scratch)?;
+        let selected = argselect_smallest(&scratch.scores, self.m);
+        sel.reset(CombinePlan::MeanRows, self.n);
+        sel.rows.extend_from_slice(&selected);
         Ok(())
     }
 }
@@ -266,7 +267,8 @@ mod tests {
         let g = cluster_with_outlier();
         let krum = Krum::new(7, 1).unwrap();
         let mut scratch = GarScratch::new();
-        let winner = krum.select(&g, &mut scratch);
+        let sel = krum.select(&g, &mut scratch).unwrap();
+        let winner = sel.selected_rows()[0];
         assert_ne!(winner, 6);
         let out = krum.aggregate(&g).unwrap();
         assert_eq!(out, g.row(winner));
@@ -278,12 +280,12 @@ mod tests {
         let mk = MultiKrum::new(7, 1).unwrap();
         assert_eq!(mk.m(), 4);
         let mut scratch = GarScratch::new();
-        let sel = mk.select(&g, &mut scratch);
-        assert_eq!(sel.len(), 4);
-        assert!(!sel.contains(&6), "outlier must not be selected");
+        let sel = mk.select(&g, &mut scratch).unwrap();
+        assert_eq!(sel.selected_rows().len(), 4);
+        assert!(!sel.selected_rows().contains(&6), "outlier must not be selected");
         // Output is the average of the selected rows.
         let out = mk.aggregate(&g).unwrap();
-        let expected = g.mean_of_rows(&sel);
+        let expected = g.mean_of_rows(sel.selected_rows());
         for (a, b) in out.iter().zip(&expected) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -295,8 +297,12 @@ mod tests {
         let mut scratch = GarScratch::new();
         let krum_out = Krum::new(7, 1).unwrap().aggregate(&g).unwrap();
         let mk1 = MultiKrum::with_m(7, 1, 1).unwrap();
-        assert_eq!(mk1.select(&g, &mut scratch).len(), 1);
-        assert_eq!(mk1.aggregate(&g).unwrap(), krum_out);
+        let sel = mk1.select(&g, &mut scratch).unwrap();
+        assert_eq!(sel.selected_rows().len(), 1);
+        let out = mk1.aggregate(&g).unwrap();
+        for (a, b) in out.iter().zip(&krum_out) {
+            assert!((a - b).abs() < 1e-6, "m=1 multi-krum must match krum");
+        }
     }
 
     #[test]
@@ -337,8 +343,8 @@ mod tests {
         let g = GradMatrix::from_rows(&rows);
         let mk = MultiKrum::new(7, 1).unwrap();
         let mut scratch = GarScratch::new();
-        let sel = mk.select(&g, &mut scratch);
-        assert!(!sel.contains(&6));
+        let sel = mk.select(&g, &mut scratch).unwrap();
+        assert!(!sel.selected_rows().contains(&6));
         let out = mk.aggregate(&g).unwrap();
         assert!(out.iter().all(|v| v.is_finite()));
     }

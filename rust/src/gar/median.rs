@@ -3,16 +3,17 @@
 //! Weakly Byzantine resilient for `n ≥ 2f+1` but, by keeping (the
 //! equivalent of) a single gradient per step, it forfeits the variance
 //! reduction of averaging — the effect Fig. 3 quantifies.
+//!
+//! There is no O(n²) decision to make: the selection phase is a no-op
+//! recording the `CoordMedian` plan, and all the work happens in the
+//! per-coordinate combine (insertion sort below n = 64, introselect
+//! above — see `gar::selection`).
 
-use super::scratch::ShardScratch;
-use super::{check_shape, Gar, GarScratch};
-use crate::runtime::{shard_slice, Parallelism, MIN_COORDS_PER_SHARD};
-use crate::tensor::{median_of_buf, small_median_sorting, GradMatrix};
+use super::selection::{CombinePlan, Selection};
+use super::{check_select_shape, Gar, GarScratch};
+use crate::runtime::Parallelism;
+use crate::tensor::GradMatrix;
 use crate::Result;
-
-/// Below this n the per-coordinate median uses insertion sort (see
-/// `tensor::select::insertion_sort`); above, introselect.
-const SMALL_N: usize = 64;
 
 /// Coordinate-wise median over the `n` proposed gradients. Even `n`
 /// averages the two central values (the `torch.median`-style convention
@@ -39,7 +40,7 @@ impl CoordMedian {
         })
     }
 
-    /// Use `par` for the coordinate-sharded O(nd) pass.
+    /// Use `par` for the coordinate-sharded O(nd) combine.
     pub fn with_parallelism(mut self, par: Parallelism) -> Self {
         self.par = par;
         self
@@ -59,46 +60,26 @@ impl Gar for CoordMedian {
         self.f
     }
 
+    fn parallelism(&self) -> &Parallelism {
+        &self.par
+    }
+
     /// The median keeps the informational equivalent of one gradient.
     fn gradients_used(&self) -> usize {
         1
     }
 
-    fn aggregate_with_scratch(
+    fn select_into(
         &self,
         grads: &GradMatrix,
-        out: &mut [f32],
-        scratch: &mut GarScratch,
+        _scratch: &mut GarScratch,
+        sel: &mut Selection,
     ) -> Result<()> {
-        check_shape("median", grads, self.n, out)?;
-        let n = self.n;
-        let small = n <= SMALL_N;
-        // Each coordinate's median is independent: disjoint ranges per
-        // shard with a per-shard column buffer ⇒ bit-identical to the
-        // sequential pass.
-        shard_slice(
-            &self.par,
-            out,
-            &mut scratch.shards,
-            ShardScratch::default,
-            MIN_COORDS_PER_SHARD,
-            |offset, range, shard| {
-                shard.column.clear();
-                shard.column.resize(n, 0.0);
-                let col = &mut shard.column;
-                for (k, o) in range.iter_mut().enumerate() {
-                    let j = offset + k;
-                    for i in 0..n {
-                        col[i] = grads.row(i)[j];
-                    }
-                    *o = if small {
-                        small_median_sorting(col)
-                    } else {
-                        median_of_buf(col)
-                    };
-                }
-            },
-        );
+        check_select_shape("median", grads, self.n)?;
+        sel.reset(CombinePlan::CoordMedian, self.n);
+        // Which worker's value wins is decided per coordinate; every row
+        // can reach the output, so the selection reports all of them.
+        sel.rows.extend(0..self.n);
         Ok(())
     }
 }

@@ -4,31 +4,69 @@
 //! SGD step and produces the single `d`-vector the parameter server applies
 //! (Equation 2 of the paper). The rules implemented here:
 //!
-//! | Rule | Resilience | Cost | Requires |
-//! |---|---|---|---|
-//! | [`Average`] | none (one Byzantine worker suffices to break it) | O(nd) | n ≥ 1 |
-//! | [`CoordMedian`] | weak | O(nd) | n ≥ 2f+1 |
-//! | [`TrimmedMean`] | weak | O(nd) | n ≥ 2f+1 |
-//! | [`Krum`] | weak (α,f) | O(n²d) | n ≥ 2f+3 |
-//! | [`MultiKrum`] | weak (α,f), m̃/n slowdown | O(n²d) | n ≥ 2f+3 |
-//! | [`Bulyan`] | strong | O(n²d) | n ≥ 4f+3 |
-//! | [`MultiBulyan`] | strong, m̃/n slowdown | O(n²d) | n ≥ 4f+3 |
+//! | Rule | Resilience | Cost | Requires | Combine plan |
+//! |---|---|---|---|---|
+//! | [`Average`] | none (one Byzantine worker suffices to break it) | O(nd) | n ≥ 1 | mean of all rows |
+//! | [`CoordMedian`] | weak | O(nd) | n ≥ 2f+1 | per-coordinate median |
+//! | [`TrimmedMean`] | weak | O(nd) | n ≥ 2f+1 | per-coordinate trim |
+//! | [`Krum`] | weak (α,f) | O(n²d) | n ≥ 2f+3 | copy the winner row |
+//! | [`MultiKrum`] | weak (α,f), m̃/n slowdown | O(n²d) | n ≥ 2f+3 | mean of m rows |
+//! | [`Bulyan`] | strong | O(n²d) | n ≥ 4f+3 | median-then-β trim (G^ext) |
+//! | [`MultiBulyan`] | strong, m̃/n slowdown | O(n²d) | n ≥ 4f+3 | median-then-β trim (G^agr) |
 //!
-//! All implementations follow Algorithm 1 of the paper; `MultiBulyan` is
-//! literally `BULYAN ∘ MULTI-KRUM` with the distance matrix computed once
-//! and score recomputation done on the cached matrix (the optimisation the
-//! paper's §V-B calls out).
+//! # Two-phase API
 //!
-//! Two entry points per rule: [`Gar::aggregate`] (allocates its scratch)
-//! and [`Gar::aggregate_with_scratch`] (zero-allocation steady state — the
-//! Fig. 2 benchmark path).
+//! Theorem 2(ii) splits a GAR's cost into an O(n²) gradient-*selection*
+//! step and an O(d) coordinate-wise *combination* step that parallelises
+//! like averaging. The [`Gar`] trait mirrors that split:
+//!
+//! * [`Gar::select_into`] / [`Gar::select`] — **phase 1**: all O(n²d)
+//!   decision work (the pairwise distance matrix, Krum scoring, BULYAN's
+//!   iterative extraction) producing a typed [`Selection`]: the selected
+//!   row sets, the per-coordinate trim parameters, and the per-iteration
+//!   structure BULYAN needs. No gradient data is stored — only indices.
+//! * [`Gar::combine`] — **phase 2**: the purely coordinate-wise O(d)
+//!   pass, callable per coordinate range. Combining any partition of
+//!   `0..d` is bit-identical to the one-shot aggregate (enforced by
+//!   `rust/tests/prop_gar.rs`), which is what lets the coordinator fuse
+//!   combination with the SGD update (`coordinator::core`) and lets
+//!   callers overlap combination with collection.
+//!
+//! The legacy one-shot entry points are default methods over the two
+//! phases: [`Gar::aggregate`] (allocates its scratch) and
+//! [`Gar::aggregate_with_scratch`] (zero-allocation steady state — the
+//! Fig. 2 benchmark path, `select_into` + a sharded `combine` over the
+//! full range on the rule's [`Parallelism`]). External behaviour and the
+//! bit-identical parallel/sequential guarantee are unchanged.
+//!
+//! `MultiBulyan` is literally `BULYAN ∘ MULTI-KRUM` with the distance
+//! matrix computed once and score recomputation done on the cached matrix
+//! (the optimisation the paper's §V-B calls out); all implementations
+//! follow Algorithm 1.
+//!
+//! # Pre-aggregation pipeline
+//!
+//! [`pipeline`] composes a GAR with worker-side pre-aggregation stages
+//! (resilient momentum, Farhadkhani et al. 2022). The config/CLI spec
+//! grammar is
+//!
+//! ```text
+//! spec  := (stage "+")* gar
+//! stage := "rmom(" beta ")"          # resilient momentum, beta ∈ [0, 1)
+//! gar   := average | median | trimmed-mean | krum | multi-krum
+//!        | bulyan | multi-bulyan
+//! ```
+//!
+//! e.g. `gar = "rmom(0.9)+multi-bulyan"` — see [`pipeline::GarSpec`].
 
 mod average;
 mod bulyan;
 mod krum;
 mod median;
 mod pairwise;
+pub mod pipeline;
 mod scratch;
+mod selection;
 mod trimmed_mean;
 
 pub use average::Average;
@@ -38,10 +76,12 @@ pub use median::CoordMedian;
 pub use pairwise::{
     pairwise_sq_distances, pairwise_sq_distances_into, pairwise_sq_distances_sharded, SHARD_D,
 };
+pub use pipeline::{GarSpec, PreAggregate, ResilientMomentum, StageSpec};
 pub use scratch::GarScratch;
+pub use selection::{CombinePlan, CombineScratch, Selection};
 pub use trimmed_mean::TrimmedMean;
 
-use crate::runtime::Parallelism;
+use crate::runtime::{shard_slice, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::GradMatrix;
 use crate::Result;
 
@@ -61,6 +101,41 @@ pub trait Gar: Send + Sync {
     /// Number of Byzantine workers tolerated.
     fn f(&self) -> usize;
 
+    /// The execution policy the rule's sharded O(n²d)/O(d) passes run on.
+    fn parallelism(&self) -> &Parallelism;
+
+    /// Phase 1 — run all O(n²) selection work on `grads` (must be
+    /// `n × d`) and record the decisions into `sel` (buffers reused; no
+    /// allocation in the steady state beyond tiny index vectors).
+    fn select_into(
+        &self,
+        grads: &GradMatrix,
+        scratch: &mut GarScratch,
+        sel: &mut Selection,
+    ) -> Result<()>;
+
+    /// Phase 1, allocating convenience: a fresh [`Selection`].
+    fn select(&self, grads: &GradMatrix, scratch: &mut GarScratch) -> Result<Selection> {
+        let mut sel = Selection::default();
+        self.select_into(grads, scratch, &mut sel)?;
+        Ok(sel)
+    }
+
+    /// Phase 2 — combine coordinates `[offset, offset + out.len())` of
+    /// the aggregate from a prior selection. Callable over any partition
+    /// of `0..d`; every partition is bit-identical to the one-shot
+    /// aggregate. The default delegates to [`Selection::combine_range`].
+    fn combine(
+        &self,
+        sel: &Selection,
+        grads: &GradMatrix,
+        offset: usize,
+        out: &mut [f32],
+        cs: &mut CombineScratch,
+    ) -> Result<()> {
+        sel.combine_range(grads, offset, out, cs)
+    }
+
     /// Aggregate `grads` (must be `n × d`) into a fresh `d`-vector.
     fn aggregate(&self, grads: &GradMatrix) -> Result<Vec<f32>> {
         let mut out = vec![0.0f32; grads.d()];
@@ -70,44 +145,48 @@ pub trait Gar: Send + Sync {
     }
 
     /// Aggregate into `out`, reusing `scratch` across calls (no allocation
-    /// after the first round with a given shape).
+    /// after the first round with a given shape): `select_into` followed
+    /// by a `combine` sharded over disjoint coordinate ranges on the
+    /// rule's [`Parallelism`] — bit-identical to sequential for every
+    /// thread count (`rust/tests/prop_gar.rs`).
     fn aggregate_with_scratch(
         &self,
         grads: &GradMatrix,
         out: &mut [f32],
         scratch: &mut GarScratch,
-    ) -> Result<()>;
+    ) -> Result<()> {
+        check_shape(self.name(), grads, self.n(), out)?;
+        let mut sel = std::mem::take(&mut scratch.selection);
+        self.select_into(grads, scratch, &mut sel)?;
+        sel.validate(grads)?;
+        shard_slice(
+            self.parallelism(),
+            out,
+            &mut scratch.shards,
+            CombineScratch::default,
+            MIN_COORDS_PER_SHARD,
+            |offset, range, cs| {
+                sel.combine_range_unchecked(grads, offset, range, cs);
+            },
+        );
+        scratch.selection = sel;
+        Ok(())
+    }
 
     /// How many of the `n` input gradients influence the output (the `m̃`
     /// of the slowdown theorems; `n` for averaging, 1 for Krum/median).
     fn gradients_used(&self) -> usize;
 }
 
-/// Sharded per-coordinate mean of `rows` of `grads` into `out`: zero, add
-/// the rows in the given order, scale by `1/rows.len()`. The single
-/// implementation behind AVERAGE, MULTI-KRUM's selection average and
-/// BULYAN's per-iteration `G^agr` — one arithmetic definition keeps the
-/// bit-identical parallel/sequential contract from diverging per rule.
-pub(crate) fn sharded_mean_rows_into(
-    par: &Parallelism,
-    grads: &GradMatrix,
-    rows: &[usize],
-    out: &mut [f32],
-) {
-    debug_assert!(!rows.is_empty());
-    let inv = 1.0 / rows.len() as f32;
-    crate::runtime::shard_slice_stateless(
-        par,
-        out,
-        crate::runtime::MIN_COORDS_PER_SHARD,
-        |offset, range| {
-            range.fill(0.0);
-            for &i in rows {
-                crate::tensor::add_assign(range, &grads.row(i)[offset..offset + range.len()]);
-            }
-            crate::tensor::scale(range, inv);
-        },
+/// Validate the selection-phase preconditions (no output buffer yet).
+pub(crate) fn check_select_shape(rule: &str, grads: &GradMatrix, n: usize) -> Result<()> {
+    anyhow::ensure!(
+        grads.n() == n,
+        "{rule}: expected {n} gradients, got {}",
+        grads.n()
     );
+    anyhow::ensure!(grads.d() > 0, "{rule}: empty gradients (d = 0)");
+    Ok(())
 }
 
 /// Validate the common preconditions shared by all rules.
@@ -280,6 +359,21 @@ mod tests {
                     "{kind}: expected identical output"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn selection_reports_rows_within_bounds_for_every_rule() {
+        let n = 11;
+        let f = 2;
+        let grads = GradMatrix::from_fn(n, 24, |i, j| ((i * 7 + j * 3) % 13) as f32 * 0.1);
+        for kind in GarKind::ALL {
+            let gar = kind.instantiate(n, f).unwrap();
+            let mut scratch = GarScratch::new();
+            let sel = gar.select(&grads, &mut scratch).unwrap();
+            assert!(!sel.selected_rows().is_empty(), "{kind}");
+            assert!(sel.selected_rows().iter().all(|&r| r < n), "{kind}");
+            assert!(sel.validate(&grads).is_ok(), "{kind}");
         }
     }
 }

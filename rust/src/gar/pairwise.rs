@@ -16,14 +16,19 @@
 //! [`pairwise_sq_distances_sharded`] additionally splits `d` into
 //! fixed-width [`SHARD_D`] chunks. Each chunk produces an independent
 //! partial `n × n` matrix (chunks are claimed dynamically by the pool's
-//! threads), and the partials are reduced into `out` in **ascending chunk
-//! order**. Both the decomposition and the reduction order depend only on
-//! `d` — never on the thread count — so the result is bit-identical for
-//! every `threads` setting, including 1. (f32 addition is not associative;
-//! a thread-count-dependent reduction tree would break the
+//! threads), and the partials are reduced with a **fixed pairwise tree**
+//! whose shape depends only on the chunk count: level `s = 1, 2, 4, …`
+//! folds partial `i + s` into partial `i` for every `i` that is a
+//! multiple of `2s`, each level's folds running in parallel across the
+//! pool. Both the decomposition and the tree shape depend only on `d` —
+//! never on the thread count — so the result is bit-identical for every
+//! `threads` setting, including 1. (f32 addition is not associative; a
+//! thread-count-dependent reduction would break the
 //! parallel-vs-sequential equality property that `tests/prop_gar.rs`
-//! enforces.)
+//! enforces.) The tree replaces the old single-thread ascending fold,
+//! which was O(chunks·n²) on one core — visible at n ≥ 64 (ROADMAP item).
 
+use crate::runtime::pool::SyncMutPtr;
 use crate::runtime::{run_chunks, Parallelism};
 use crate::tensor::{sq_distance, GradMatrix};
 
@@ -96,15 +101,43 @@ pub fn pairwise_sq_distances_sharded(
         let end = (start + SHARD_D).min(d);
         partial_distances_upper(grads, start, end, buf);
     });
-    // Ordered reduction: fixed ascending-chunk order keeps the result
-    // independent of which thread computed which chunk.
-    for c in 0..chunks {
-        let src = &partials[c * nn..(c + 1) * nn];
-        for (o, s) in out.iter_mut().zip(src) {
-            *o += s;
-        }
-    }
+    reduce_partials_tree(par, &mut partials[..chunks * nn], chunks, nn);
+    out.copy_from_slice(&partials[..nn]);
     mirror_lower(out, n);
+}
+
+/// Fold `chunks` consecutive `nn`-sized partial matrices into
+/// `partials[..nn]` with a fixed pairwise tree: level `s` (1, 2, 4, …)
+/// adds partial `i + s` into partial `i` for every `i ≡ 0 (mod 2s)` with
+/// `i + s < chunks`. The tree shape depends only on `chunks`, and every
+/// fold of a level touches a disjoint pair of partials, so the levels
+/// parallelise across `par` while the result stays bit-identical for
+/// every thread count (the old ascending fold reduced all chunks on the
+/// calling thread — O(chunks·n²) serial work).
+fn reduce_partials_tree(par: &Parallelism, partials: &mut [f32], chunks: usize, nn: usize) {
+    debug_assert!(chunks >= 1 && partials.len() >= chunks * nn);
+    let base = SyncMutPtr(partials.as_mut_ptr());
+    let mut s = 1;
+    while s < chunks {
+        // Folds at this level: i = 0, 2s, 4s, … with i + s < chunks.
+        let folds = (chunks - s).div_ceil(2 * s);
+        par.run_sharded(folds, &|k| {
+            let i = k * 2 * s;
+            // SAFETY: fold `k` exclusively owns partials `i` (written) and
+            // `i + s` (read): within a level the (i, i+s) pairs are
+            // disjoint (i is a multiple of 2s, i + s < chunks), and
+            // `run_sharded` blocks until the level completes, so `partials`
+            // outlives every dereference and levels never overlap.
+            unsafe {
+                let dst = std::slice::from_raw_parts_mut(base.get().add(i * nn), nn);
+                let src = std::slice::from_raw_parts(base.get().add((i + s) * nn), nn);
+                for (o, v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        });
+        s *= 2;
+    }
 }
 
 /// Compute all pairwise squared distances into `out` (`n*n`, row-major,
@@ -195,6 +228,36 @@ mod tests {
             let mut scratch = Vec::new();
             pairwise_sq_distances_sharded(&g, &mut out, &par, &mut scratch);
             assert_eq!(seq, out, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tree_reduction_matches_plain_sum_for_any_chunk_count() {
+        // The tree's total per element equals a full sum of the chunk
+        // partials (within f32 tolerance — association differs by design)
+        // and is identical for every thread count (same tree shape).
+        for chunks in [1usize, 2, 3, 4, 5, 7, 8, 13] {
+            let nn = 9;
+            let make = || -> Vec<f32> {
+                (0..chunks * nn)
+                    .map(|i| ((i * 37 + 11) % 101) as f32 * 0.125)
+                    .collect()
+            };
+            let mut seq = make();
+            reduce_partials_tree(&Parallelism::sequential(), &mut seq, chunks, nn);
+            for e in 0..nn {
+                let total: f64 = (0..chunks).map(|c| make()[c * nn + e] as f64).sum();
+                let got = seq[e] as f64;
+                assert!(
+                    (got - total).abs() <= 1e-3 * total.abs().max(1.0),
+                    "chunks={chunks} elem {e}: {got} vs {total}"
+                );
+            }
+            for threads in [2usize, 4] {
+                let mut par = make();
+                reduce_partials_tree(&Parallelism::new(threads), &mut par, chunks, nn);
+                assert_eq!(&seq[..nn], &par[..nn], "chunks={chunks} threads={threads}");
+            }
         }
     }
 

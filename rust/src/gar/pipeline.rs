@@ -1,0 +1,300 @@
+//! Pre-aggregation pipeline: composable stages that transform the `n × d`
+//! proposal matrix *before* the GAR's selection phase runs.
+//!
+//! The two-phase GAR API makes aggregation composable; this module adds
+//! the other half of the composition story — worker-side pre-aggregation
+//! in the style of resilient momentum (Farhadkhani et al., "Byzantine
+//! Machine Learning Made Easy by Resilient Averaging of Momentums", 2022):
+//! each worker submits an exponential moving average of its gradients and
+//! the GAR aggregates *momentums*, which shrinks the honest variance the
+//! Byzantine coalition can hide inside. In this simulator workers are
+//! deterministic, so the per-worker momentum state lives server-side in
+//! the stage (equivalent: a Byzantine worker can realise any momentum
+//! stream by choosing its raw submissions, so the threat model is
+//! unchanged).
+//!
+//! ## Spec grammar (config `gar = "..."`, CLI `--gar`)
+//!
+//! ```text
+//! spec  := (stage "+")* gar
+//! stage := "rmom(" beta ")"          # resilient momentum, beta ∈ [0, 1)
+//! gar   := average | median | trimmed-mean | krum | multi-krum
+//!        | bulyan | multi-bulyan
+//! ```
+//!
+//! Examples: `multi-bulyan` (no stages), `rmom(0.9)+multi-bulyan`,
+//! `rmom(0.99)+multi-krum`. Parsed by [`GarSpec`].
+
+use super::GarKind;
+use crate::runtime::{shard_zip, Parallelism, MIN_COORDS_PER_SHARD};
+use crate::tensor::GradMatrix;
+use crate::Result;
+
+/// A pre-aggregation stage: transforms the proposal matrix in place each
+/// round, before the GAR's `select` phase. Stages may keep per-worker
+/// state across rounds (momentum buffers); they must be deterministic in
+/// `(grads, round)` and coordinate-wise independent so that sharded
+/// execution stays bit-identical to sequential.
+pub trait PreAggregate: Send + Sync {
+    /// Stable stage name for logs/CSV.
+    fn name(&self) -> &'static str;
+
+    /// Transform the `n × d` matrix in place for round `round`.
+    fn apply(&mut self, grads: &mut GradMatrix, round: u64) -> Result<()>;
+}
+
+/// Resilient momentum: per worker `i`, `m_i ← β·m_i + (1−β)·g_i` and the
+/// worker's row is replaced by `m_i`. State is zero-initialised, so round
+/// 1 submits `(1−β)·g` (the standard bias-uncorrected EMA).
+pub struct ResilientMomentum {
+    beta: f32,
+    /// `n × d` momentum state, flat row-major; sized lazily on first
+    /// apply (and re-zeroed if the cluster shape ever changes).
+    state: Vec<f32>,
+    par: Parallelism,
+}
+
+impl ResilientMomentum {
+    pub fn new(beta: f32, par: Parallelism) -> Result<Self> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&beta),
+            "resilient momentum: beta must be in [0, 1), got {beta}"
+        );
+        Ok(Self {
+            beta,
+            state: Vec::new(),
+            par,
+        })
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+}
+
+impl PreAggregate for ResilientMomentum {
+    fn name(&self) -> &'static str {
+        "rmom"
+    }
+
+    fn apply(&mut self, grads: &mut GradMatrix, _round: u64) -> Result<()> {
+        let (n, d) = (grads.n(), grads.d());
+        if self.state.len() != n * d {
+            self.state.clear();
+            self.state.resize(n * d, 0.0);
+        }
+        let beta = self.beta;
+        let keep = 1.0 - beta;
+        // The EMA is pointwise, so it runs as ONE fan-out over the flat
+        // n×d buffers (row boundaries are irrelevant to the arithmetic) —
+        // a single pool barrier per round, not one per worker. Each
+        // element's update is independent, so any partition is
+        // bit-identical to the sequential pass.
+        let mut states: Vec<()> = Vec::new();
+        shard_zip(
+            &self.par,
+            [grads.flat_mut(), &mut self.state[..]],
+            &mut states,
+            || (),
+            MIN_COORDS_PER_SHARD,
+            |_, [g, m]: [&mut [f32]; 2], _| {
+                for k in 0..g.len() {
+                    m[k] = beta * m[k] + keep * g[k];
+                    g[k] = m[k];
+                }
+            },
+        );
+        Ok(())
+    }
+}
+
+/// One parsed pipeline stage — the config/CLI surface of [`PreAggregate`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageSpec {
+    /// `rmom(beta)` — [`ResilientMomentum`].
+    ResilientMomentum { beta: f32 },
+}
+
+impl StageSpec {
+    /// Enforce parameter ranges (also called by config validation for
+    /// programmatically built configs).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            StageSpec::ResilientMomentum { beta } => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(beta),
+                    "rmom: beta must be in [0, 1), got {beta}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the stage, running its sharded passes on `par`.
+    pub fn instantiate(&self, par: &Parallelism) -> Result<Box<dyn PreAggregate>> {
+        match self {
+            StageSpec::ResilientMomentum { beta } => {
+                Ok(Box::new(ResilientMomentum::new(*beta, par.clone())?))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for StageSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageSpec::ResilientMomentum { beta } => write!(f, "rmom({beta})"),
+        }
+    }
+}
+
+impl std::str::FromStr for StageSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let (name, rest) = match s.split_once('(') {
+            Some((name, rest)) => (name.trim(), Some(rest)),
+            None => (s, None),
+        };
+        match name.to_ascii_lowercase().replace('_', "-").as_str() {
+            "rmom" | "resilient-momentum" => {
+                let arg = rest
+                    .and_then(|r| r.strip_suffix(')'))
+                    .ok_or_else(|| anyhow::anyhow!("stage '{s}': expected rmom(beta)"))?;
+                let beta: f32 = arg
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("stage '{s}': bad beta: {e}"))?;
+                let spec = StageSpec::ResilientMomentum { beta };
+                spec.validate()?;
+                Ok(spec)
+            }
+            other => anyhow::bail!(
+                "unknown pre-aggregation stage '{other}' (expected: rmom(beta))"
+            ),
+        }
+    }
+}
+
+/// A full aggregation spec: zero or more pre-aggregation stages applied in
+/// order, then a terminal GAR — e.g. `rmom(0.9)+multi-bulyan`. This is
+/// what the config key `gar = "..."` and the CLI `--gar` flag parse to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GarSpec {
+    pub stages: Vec<StageSpec>,
+    pub kind: GarKind,
+}
+
+impl GarSpec {
+    /// A bare GAR with no stages.
+    pub fn plain(kind: GarKind) -> Self {
+        Self {
+            stages: Vec::new(),
+            kind,
+        }
+    }
+}
+
+impl std::fmt::Display for GarSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for stage in &self.stages {
+            write!(f, "{stage}+")?;
+        }
+        write!(f, "{}", self.kind)
+    }
+}
+
+impl std::str::FromStr for GarSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split('+').map(str::trim).collect();
+        anyhow::ensure!(
+            parts.iter().all(|p| !p.is_empty()),
+            "empty component in GAR spec '{s}'"
+        );
+        let (gar, stages) = parts.split_last().expect("split always yields ≥ 1 part");
+        let kind: GarKind = gar.parse().map_err(|e| {
+            anyhow::anyhow!("GAR spec '{s}': terminal rule: {e}")
+        })?;
+        let stages = stages
+            .iter()
+            .map(|p| p.parse::<StageSpec>())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { stages, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips() {
+        for text in ["multi-bulyan", "rmom(0.9)+multi-bulyan", "rmom(0.5)+rmom(0.9)+krum"] {
+            let spec: GarSpec = text.parse().unwrap();
+            assert_eq!(spec.to_string(), text);
+            let again: GarSpec = spec.to_string().parse().unwrap();
+            assert_eq!(again, spec);
+        }
+        let spec: GarSpec = "rmom(0.9)+multi-bulyan".parse().unwrap();
+        assert_eq!(spec.kind, GarKind::MultiBulyan);
+        assert_eq!(spec.stages, vec![StageSpec::ResilientMomentum { beta: 0.9 }]);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_inputs() {
+        assert!("".parse::<GarSpec>().is_err());
+        assert!("rmom(0.9)".parse::<GarSpec>().is_err()); // stage without GAR
+        assert!("rmom(0.9)+".parse::<GarSpec>().is_err());
+        assert!("+multi-bulyan".parse::<GarSpec>().is_err());
+        assert!("rmom(1.0)+krum".parse::<GarSpec>().is_err()); // beta out of range
+        assert!("rmom(-0.1)+krum".parse::<GarSpec>().is_err());
+        assert!("rmom0.9+krum".parse::<GarSpec>().is_err());
+        assert!("frob(0.9)+krum".parse::<GarSpec>().is_err());
+        assert!("rmom(abc)+krum".parse::<GarSpec>().is_err());
+    }
+
+    #[test]
+    fn momentum_is_the_ema_of_submissions() {
+        let par = Parallelism::sequential();
+        let mut stage = ResilientMomentum::new(0.5, par).unwrap();
+        let mut g1 = GradMatrix::from_rows(&[vec![2.0, 4.0], vec![-2.0, 0.0]]);
+        stage.apply(&mut g1, 1).unwrap();
+        // m_1 = 0.5·0 + 0.5·g = g/2.
+        assert_eq!(g1.row(0), &[1.0, 2.0]);
+        assert_eq!(g1.row(1), &[-1.0, 0.0]);
+        let mut g2 = GradMatrix::from_rows(&[vec![2.0, 4.0], vec![2.0, 4.0]]);
+        stage.apply(&mut g2, 2).unwrap();
+        // m_2 = 0.5·m_1 + 0.5·g.
+        assert_eq!(g2.row(0), &[1.5, 3.0]);
+        assert_eq!(g2.row(1), &[0.5, 2.0]);
+    }
+
+    #[test]
+    fn momentum_sharded_is_bit_identical_to_sequential() {
+        let rounds = 4usize;
+        let run = |threads: usize| -> Vec<f32> {
+            let mut stage =
+                ResilientMomentum::new(0.9, Parallelism::new(threads)).unwrap();
+            let mut last = Vec::new();
+            for r in 0..rounds {
+                let mut g = GradMatrix::from_fn(5, 9_000, |i, j| {
+                    ((i * 31 + j * 7 + r * 13) % 101) as f32 * 0.03 - 1.5
+                });
+                stage.apply(&mut g, r as u64 + 1).unwrap();
+                last = g.flat().to_vec();
+            }
+            last
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn bad_beta_rejected_at_construction() {
+        assert!(ResilientMomentum::new(1.0, Parallelism::sequential()).is_err());
+        assert!(ResilientMomentum::new(-0.5, Parallelism::sequential()).is_err());
+        assert!(StageSpec::ResilientMomentum { beta: 2.0 }.validate().is_err());
+    }
+}

@@ -3,34 +3,19 @@
 //! The parameter server calls its GAR once per round with identical shapes;
 //! [`GarScratch`] lets every rule run allocation-free in the steady state
 //! (buffers are grown on first use and reused afterwards). One scratch may
-//! be shared across different rules — each `get_*` accessor resizes on
-//! demand.
+//! be shared across different rules — each buffer resizes on demand.
 //!
-//! The parallel engine adds two grow-only members: `partials` (per-chunk
-//! n×n matrices of the sharded pairwise-distance pass) and `shards` (one
-//! [`ShardScratch`] per coordinate-range shard of the per-coordinate
-//! passes), so the large O(d)/O(n²)-sized buffers are reused across
-//! rounds. The parallel fan-out itself is allocation-free: shards derive
-//! their disjoint ranges from the shard index (`runtime::pool`), so the
-//! steady-state round makes no allocation at all.
+//! Since the two-phase redesign the *selection* phase stores row indices
+//! only (`selection`, a [`Selection`]) — the old θ×d `G^ext`/`G^agr`
+//! matrices are gone; the combine phase reads the winners straight from
+//! the input matrix per coordinate range. What remains O(n²)-sized is the
+//! distance matrix and its per-chunk partials; the only O(d)-independent
+//! per-shard state is one [`CombineScratch`] per coordinate-range shard
+//! (`shards`). The parallel fan-out itself is allocation-free: shards
+//! derive their disjoint ranges from the shard index (`runtime::pool`),
+//! so a steady-state round makes no allocation at all.
 
-/// Per-shard working buffers of the coordinate-sharded passes (median /
-/// trimmed-mean columns, BULYAN's deviation pairs). Each shard of
-/// `runtime::shard_slice` owns one, so threads never share hot buffers.
-#[derive(Debug, Default)]
-pub(crate) struct ShardScratch {
-    /// Per-coordinate working column (n or θ values).
-    pub(crate) column: Vec<f32>,
-    /// (deviation, value) pairs for the per-coordinate β-selection.
-    pub(crate) pairs: Vec<(f32, f32)>,
-}
-
-impl ShardScratch {
-    fn capacity_bytes(&self) -> usize {
-        self.column.capacity() * std::mem::size_of::<f32>()
-            + self.pairs.capacity() * std::mem::size_of::<(f32, f32)>()
-    }
-}
+use super::selection::{CombineScratch, Selection};
 
 /// Grow-only scratch space shared by all GAR implementations.
 #[derive(Debug, Default)]
@@ -43,18 +28,11 @@ pub struct GarScratch {
     pub(crate) scores: Vec<f32>,
     /// Selection pool indices (BULYAN's shrinking candidate set).
     pub(crate) pool: Vec<usize>,
-    /// θ × d matrix of per-iteration MULTI-KRUM averages (BULYAN's G^agr).
-    pub(crate) agr: Vec<f32>,
-    /// θ × d matrix of per-iteration winners (BULYAN's G^ext).
-    pub(crate) ext: Vec<f32>,
-    /// Per-coordinate medians (BULYAN's M).
-    pub(crate) medians: Vec<f32>,
-    /// Generic index buffer for argselect results.
-    pub(crate) indices: Vec<usize>,
-    /// Running sum of alive rows (BULYAN's incremental-average trick).
-    pub(crate) sumbuf: Vec<f32>,
-    /// One working set per coordinate-range shard.
-    pub(crate) shards: Vec<ShardScratch>,
+    /// The reusable selection of the default `aggregate_with_scratch`
+    /// path (taken, filled by `select_into`, put back).
+    pub(crate) selection: Selection,
+    /// One working set per coordinate-range shard of the combine fan-out.
+    pub(crate) shards: Vec<CombineScratch>,
 }
 
 impl GarScratch {
@@ -71,15 +49,11 @@ impl GarScratch {
 
     /// Total bytes currently held (for the metrics/perf reports).
     pub fn capacity_bytes(&self) -> usize {
-        (self.distances.capacity()
-            + self.partials.capacity()
-            + self.scores.capacity()
-            + self.agr.capacity()
-            + self.ext.capacity()
-            + self.medians.capacity()
-            + self.sumbuf.capacity()) * std::mem::size_of::<f32>()
-            + (self.pool.capacity() + self.indices.capacity()) * std::mem::size_of::<usize>()
-            + self.shards.iter().map(ShardScratch::capacity_bytes).sum::<usize>()
+        (self.distances.capacity() + self.partials.capacity() + self.scores.capacity())
+            * std::mem::size_of::<f32>()
+            + self.pool.capacity() * std::mem::size_of::<usize>()
+            + self.selection.capacity_bytes()
+            + self.shards.iter().map(CombineScratch::capacity_bytes).sum::<usize>()
     }
 }
 
@@ -101,13 +75,13 @@ mod tests {
     }
 
     #[test]
-    fn shard_scratch_counts_toward_capacity() {
+    fn combine_scratch_counts_toward_capacity() {
         let mut s = GarScratch::new();
         let before = s.capacity_bytes();
-        s.shards.push(ShardScratch {
-            column: Vec::with_capacity(64),
-            pairs: Vec::with_capacity(64),
-        });
+        let mut cs = CombineScratch::new();
+        cs.column.reserve(64);
+        cs.pairs.reserve(64);
+        s.shards.push(cs);
         assert!(s.capacity_bytes() > before);
     }
 }

@@ -1,0 +1,453 @@
+//! [`Selection`] — the typed output of a GAR's O(n²) *selection* phase,
+//! and the per-coordinate-range *combine* engine that consumes it.
+//!
+//! The paper's Theorem 2(ii) splits multi-Bulyan's cost into an O(n²)
+//! gradient-selection step and an O(d) coordinate-wise combination step
+//! that "parallelises like averaging". The two-phase [`crate::gar::Gar`]
+//! API makes that split structural: `select` runs every score/distance
+//! decision and returns a `Selection`; [`Selection::combine_range`] then
+//! performs the purely coordinate-wise O(d) pass over any coordinate
+//! range. Because every coordinate's arithmetic is independent of how the
+//! ranges are partitioned, combining over *any* partition of `0..d` is
+//! bit-identical to the one-shot aggregate (the
+//! `select_combine_partition_bit_identical_to_aggregate` property in
+//! `rust/tests/prop_gar.rs`) — which is what lets the coordinator fuse
+//! combination with the SGD update and lets callers overlap combination
+//! with gradient collection.
+//!
+//! A note on a rejected "optimization" (moved here from the old BULYAN
+//! implementation, which materialised G^agr during selection): computing
+//! each iteration's average as (running_sum − Σ non-selected)/m would cut
+//! the row reads from m to f+2, but the running sum suffers catastrophic
+//! f32 cancellation when a Byzantine row carries ±1e30-scale values (the
+//! `infinity` attack) — the direct sum over the *selected* rows never
+//! touches those. Correctness under adversarial inputs beats the constant
+//! factor here.
+
+use crate::tensor::{add_assign, insertion_sort, median_of_buf, scale, small_median_sorting, GradMatrix};
+use crate::Result;
+
+/// Below this n the per-coordinate median / trim uses insertion sort (see
+/// `tensor::select::insertion_sort`); above, introselect.
+const SMALL_N: usize = 64;
+
+/// How the O(d) combine phase consumes a [`Selection`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CombinePlan {
+    /// Coordinate-wise average of `rows` (AVERAGE, MULTI-KRUM).
+    MeanRows,
+    /// Copy the single row in `rows` (KRUM).
+    CopyRow,
+    /// Per-coordinate median over all `n` rows (MEDIAN).
+    CoordMedian,
+    /// Per-coordinate trimmed mean over all `n` rows, dropping the `trim`
+    /// largest and `trim` smallest values (TRIMMED-MEAN).
+    CoordTrimmed { trim: usize },
+    /// BULYAN family: per coordinate, median over the θ winners in `rows`
+    /// (G^ext), then average of the `beta` values closest to it — drawn
+    /// from the per-iteration MULTI-KRUM averages (G^agr, `multi`) or the
+    /// winners themselves (classic BULYAN).
+    BulyanTrim { beta: usize, multi: bool },
+}
+
+/// Reusable per-call working buffers of the combine phase (the
+/// per-coordinate column and deviation pairs). One per concurrent combine
+/// stream — the coordinator keeps one per coordinate-range shard
+/// (`GarScratch::shards`) so threads never share hot buffers.
+#[derive(Debug, Default)]
+pub struct CombineScratch {
+    /// Per-coordinate working column (n or θ values).
+    pub(crate) column: Vec<f32>,
+    /// (deviation, value) pairs for the per-coordinate β-selection.
+    pub(crate) pairs: Vec<(f32, f32)>,
+}
+
+impl CombineScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn capacity_bytes(&self) -> usize {
+        self.column.capacity() * std::mem::size_of::<f32>()
+            + self.pairs.capacity() * std::mem::size_of::<(f32, f32)>()
+    }
+}
+
+/// Everything a GAR's O(n²) selection phase decided, in row indices —
+/// no gradient data. Feed it (with the same `GradMatrix`) to
+/// [`combine_range`](Self::combine_range) to produce any coordinate range
+/// of the aggregate.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    plan: CombinePlan,
+    /// Number of rows the input matrix must have.
+    n: usize,
+    /// Primary selected rows — plan-specific meaning:
+    /// `MeanRows` → the averaged rows (MULTI-KRUM: ascending score);
+    /// `CopyRow` → exactly one row; `CoordMedian`/`CoordTrimmed` → all
+    /// `n` rows (every worker's value can reach the output of some
+    /// coordinate); `BulyanTrim` → the θ extracted winners (G^ext), in
+    /// iteration order.
+    pub(crate) rows: Vec<usize>,
+    /// `BulyanTrim` with `multi`: flattened per-iteration MULTI-KRUM
+    /// selections; iteration `t` owns `sets[set_offsets[t]..set_offsets[t+1]]`.
+    pub(crate) sets: Vec<usize>,
+    pub(crate) set_offsets: Vec<usize>,
+}
+
+impl Default for Selection {
+    fn default() -> Self {
+        Self {
+            plan: CombinePlan::MeanRows,
+            n: 0,
+            rows: Vec::new(),
+            sets: Vec::new(),
+            set_offsets: Vec::new(),
+        }
+    }
+}
+
+impl Selection {
+    /// Clear all buffers and start a fresh selection for an `n`-row input
+    /// under `plan` (grow-only: capacities are retained across rounds).
+    pub(crate) fn reset(&mut self, plan: CombinePlan, n: usize) {
+        self.plan = plan;
+        self.n = n;
+        self.rows.clear();
+        self.sets.clear();
+        self.set_offsets.clear();
+    }
+
+    pub fn plan(&self) -> CombinePlan {
+        self.plan
+    }
+
+    /// Number of input rows the combine phase expects.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The rows this selection reads in the combine phase — the
+    /// "which workers did the rule pick" diagnostic behind
+    /// `MetricsRecorder::record_selection` and `RoundOutcome::selected`.
+    /// Coordinate-wise plans (`CoordMedian`/`CoordTrimmed`) report all
+    /// `n` rows: which worker wins is decided per coordinate.
+    pub fn selected_rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    /// Bytes currently held by the index buffers (metrics/perf reports).
+    pub fn capacity_bytes(&self) -> usize {
+        (self.rows.capacity() + self.sets.capacity() + self.set_offsets.capacity())
+            * std::mem::size_of::<usize>()
+    }
+
+    /// Check this selection is internally consistent and applicable to
+    /// `grads`. The combine fan-outs validate once, then run the
+    /// unchecked per-range engine.
+    pub fn validate(&self, grads: &GradMatrix) -> Result<()> {
+        anyhow::ensure!(
+            grads.n() == self.n,
+            "selection is for n={} rows, matrix has {}",
+            self.n,
+            grads.n()
+        );
+        anyhow::ensure!(
+            self.rows.iter().all(|&r| r < self.n),
+            "selection row index out of range (n={})",
+            self.n
+        );
+        match self.plan {
+            CombinePlan::MeanRows => {
+                anyhow::ensure!(!self.rows.is_empty(), "mean-rows selection is empty");
+            }
+            CombinePlan::CopyRow => {
+                anyhow::ensure!(
+                    self.rows.len() == 1,
+                    "copy-row selection must hold exactly one row, got {}",
+                    self.rows.len()
+                );
+            }
+            CombinePlan::CoordMedian => {
+                anyhow::ensure!(self.n >= 1, "median selection over an empty matrix");
+            }
+            CombinePlan::CoordTrimmed { trim } => {
+                anyhow::ensure!(
+                    self.n > 2 * trim,
+                    "trimmed selection: n={} leaves nothing after trimming {trim} per side",
+                    self.n
+                );
+            }
+            CombinePlan::BulyanTrim { beta, multi } => {
+                let theta = self.rows.len();
+                anyhow::ensure!(theta >= 1, "bulyan selection has no winners");
+                anyhow::ensure!(
+                    (1..=theta).contains(&beta),
+                    "bulyan selection: beta={beta} not in [1, θ={theta}]"
+                );
+                if multi {
+                    anyhow::ensure!(
+                        self.set_offsets.len() == theta + 1
+                            && self.set_offsets[0] == 0
+                            && *self.set_offsets.last().unwrap() == self.sets.len()
+                            && self.set_offsets.windows(2).all(|w| w[0] < w[1]),
+                        "bulyan selection: malformed per-iteration sets"
+                    );
+                    anyhow::ensure!(
+                        self.sets.iter().all(|&r| r < self.n),
+                        "bulyan selection set row out of range"
+                    );
+                } else {
+                    anyhow::ensure!(
+                        self.sets.is_empty() && self.set_offsets.is_empty(),
+                        "classic bulyan selection must not carry G^agr sets"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Combine coordinates `[offset, offset + out.len())` of the aggregate
+    /// into `out`. Pure O(|range|·n) coordinate-wise work; any partition
+    /// of `0..d` into ranges reproduces the one-shot aggregate bit for
+    /// bit (coordinates never interact).
+    pub fn combine_range(
+        &self,
+        grads: &GradMatrix,
+        offset: usize,
+        out: &mut [f32],
+        cs: &mut CombineScratch,
+    ) -> Result<()> {
+        self.validate(grads)?;
+        anyhow::ensure!(
+            offset + out.len() <= grads.d(),
+            "combine range [{offset}, {}) exceeds d={}",
+            offset + out.len(),
+            grads.d()
+        );
+        self.combine_range_unchecked(grads, offset, out, cs);
+        Ok(())
+    }
+
+    /// The per-range combine engine. Callers must have run
+    /// [`validate`](Self::validate) (and the range bound check) first —
+    /// the sharded fan-outs validate once and then call this per shard.
+    pub(crate) fn combine_range_unchecked(
+        &self,
+        grads: &GradMatrix,
+        offset: usize,
+        out: &mut [f32],
+        cs: &mut CombineScratch,
+    ) {
+        let len = out.len();
+        if len == 0 {
+            return;
+        }
+        match self.plan {
+            CombinePlan::CopyRow => {
+                let row = self.rows[0];
+                out.copy_from_slice(&grads.row(row)[offset..offset + len]);
+            }
+            CombinePlan::MeanRows => {
+                // Zero, add the rows in selection order, scale — the
+                // single arithmetic definition behind AVERAGE and
+                // MULTI-KRUM (and bit-identical for every partition).
+                out.fill(0.0);
+                for &i in &self.rows {
+                    add_assign(out, &grads.row(i)[offset..offset + len]);
+                }
+                scale(out, 1.0 / self.rows.len() as f32);
+            }
+            CombinePlan::CoordMedian => {
+                let n = self.n;
+                let small = n <= SMALL_N;
+                cs.column.clear();
+                cs.column.resize(n, 0.0);
+                let col = &mut cs.column;
+                for (k, o) in out.iter_mut().enumerate() {
+                    let j = offset + k;
+                    for i in 0..n {
+                        col[i] = grads.row(i)[j];
+                    }
+                    *o = if small {
+                        small_median_sorting(col)
+                    } else {
+                        median_of_buf(col)
+                    };
+                }
+            }
+            CombinePlan::CoordTrimmed { trim: f } => {
+                let n = self.n;
+                let keep = n - 2 * f;
+                cs.column.clear();
+                cs.column.resize(n, 0.0);
+                let col = &mut cs.column;
+                for (k, o) in out.iter_mut().enumerate() {
+                    let j = offset + k;
+                    for i in 0..n {
+                        col[i] = grads.row(i)[j];
+                    }
+                    // Order so that [f, n-f) holds the middle n-2f values.
+                    if f > 0 {
+                        if n <= SMALL_N {
+                            insertion_sort(col);
+                        } else {
+                            col.select_nth_unstable_by(f - 1, f32::total_cmp);
+                            col[f..].select_nth_unstable_by(keep - 1, f32::total_cmp);
+                        }
+                    }
+                    *o = col[f..n - f].iter().sum::<f32>() / keep as f32;
+                }
+            }
+            CombinePlan::BulyanTrim { beta, multi } => {
+                self.bulyan_trim_range(grads, offset, out, cs, beta, multi);
+            }
+        }
+    }
+
+    /// Per-coordinate BULYAN tail: median of the θ winners, then average
+    /// of the β values (of G^agr when `multi`, of the winners otherwise)
+    /// closest to it. G^agr is computed here, per coordinate, from the
+    /// recorded per-iteration row sets — the selection phase stores no
+    /// gradient data at all, so this pass is callable over any coordinate
+    /// range.
+    ///
+    /// Hot loop (runs per coordinate): insertion-sort median over θ ≤ 64
+    /// values and a β-step partial selection sort over reused
+    /// `(deviation, value)` pairs — zero allocation, no introselect
+    /// overhead.
+    fn bulyan_trim_range(
+        &self,
+        grads: &GradMatrix,
+        offset: usize,
+        out: &mut [f32],
+        cs: &mut CombineScratch,
+        beta: usize,
+        multi: bool,
+    ) {
+        let theta = self.rows.len();
+        cs.column.clear();
+        cs.column.resize(theta, 0.0);
+        cs.pairs.clear();
+        cs.pairs.resize(theta, (0.0, 0.0));
+        let col = &mut cs.column;
+        let pairs = &mut cs.pairs;
+        for (k, o) in out.iter_mut().enumerate() {
+            let j = offset + k;
+            for (t, &w) in self.rows.iter().enumerate() {
+                col[t] = grads.row(w)[j];
+            }
+            // Fill the candidate values before the median sorts `col` in
+            // place. G^agr: zero-accumulate the iteration's rows in
+            // recorded (ascending-score) order, then scale — the same
+            // arithmetic sequence the mean-rows plan uses.
+            if multi {
+                for t in 0..theta {
+                    let set = &self.sets[self.set_offsets[t]..self.set_offsets[t + 1]];
+                    let mut acc = 0.0f32;
+                    for &i in set {
+                        acc += grads.row(i)[j];
+                    }
+                    pairs[t].1 = acc * (1.0 / set.len() as f32);
+                }
+            } else {
+                for t in 0..theta {
+                    pairs[t].1 = col[t];
+                }
+            }
+            let median = small_median_sorting(col);
+            for p in pairs.iter_mut() {
+                p.0 = (p.1 - median).abs();
+            }
+            // Partial selection sort: move the β smallest deviations to
+            // the front (β·θ compares; β and θ are both ≤ n ≤ 64 here).
+            let mut acc = 0.0f32;
+            for b in 0..beta {
+                let mut best = b;
+                for t in (b + 1)..theta {
+                    if pairs[t].0 < pairs[best].0 {
+                        best = t;
+                    }
+                }
+                pairs.swap(b, best);
+                acc += pairs[b].1;
+            }
+            *o = acc / beta as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix() -> GradMatrix {
+        GradMatrix::from_fn(5, 7, |i, j| (i * 10 + j) as f32)
+    }
+
+    fn mean_sel(n: usize, rows: &[usize]) -> Selection {
+        let mut sel = Selection::default();
+        sel.reset(CombinePlan::MeanRows, n);
+        sel.rows.extend_from_slice(rows);
+        sel
+    }
+
+    #[test]
+    fn copy_row_combines_any_partition() {
+        let g = matrix();
+        let mut sel = Selection::default();
+        sel.reset(CombinePlan::CopyRow, 5);
+        sel.rows.push(3);
+        let mut cs = CombineScratch::default();
+        let mut out = vec![0.0; 7];
+        sel.combine_range(&g, 0, &mut out[..4], &mut cs).unwrap();
+        sel.combine_range(&g, 4, &mut out[4..], &mut cs).unwrap();
+        assert_eq!(out, g.row(3));
+        assert_eq!(sel.selected_rows(), &[3]);
+    }
+
+    #[test]
+    fn mean_rows_matches_matrix_mean() {
+        let g = matrix();
+        let sel = mean_sel(5, &[0, 2, 4]);
+        let mut cs = CombineScratch::default();
+        let mut out = vec![0.0; 7];
+        sel.combine_range(&g, 0, &mut out, &mut cs).unwrap();
+        assert_eq!(out, g.mean_of_rows(&[0, 2, 4]));
+    }
+
+    #[test]
+    fn validation_rejects_malformed_selections() {
+        let g = matrix();
+        let mut cs = CombineScratch::default();
+        let mut out = vec![0.0; 7];
+        // Wrong n.
+        let sel = mean_sel(4, &[0]);
+        assert!(sel.combine_range(&g, 0, &mut out, &mut cs).is_err());
+        // Row out of range.
+        let sel = mean_sel(5, &[5]);
+        assert!(sel.combine_range(&g, 0, &mut out, &mut cs).is_err());
+        // Empty mean.
+        let sel = mean_sel(5, &[]);
+        assert!(sel.combine_range(&g, 0, &mut out, &mut cs).is_err());
+        // Range past d.
+        let sel = mean_sel(5, &[0]);
+        assert!(sel.combine_range(&g, 4, &mut out, &mut cs).is_err());
+        // Copy-row with two rows.
+        let mut sel = Selection::default();
+        sel.reset(CombinePlan::CopyRow, 5);
+        sel.rows.extend_from_slice(&[0, 1]);
+        assert!(sel.combine_range(&g, 0, &mut out, &mut cs).is_err());
+    }
+
+    #[test]
+    fn reset_reuses_buffers() {
+        let mut sel = mean_sel(5, &[0, 1, 2]);
+        let cap = sel.rows.capacity();
+        sel.reset(CombinePlan::CoordMedian, 5);
+        assert!(sel.rows.is_empty());
+        assert_eq!(sel.rows.capacity(), cap);
+        assert!(sel.capacity_bytes() > 0);
+    }
+}

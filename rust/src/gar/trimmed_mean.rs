@@ -1,17 +1,17 @@
 //! Coordinate-wise trimmed mean [Yin et al. 2018] — a weakly resilient
 //! baseline the paper's related-work discusses; included as a comparator
 //! for the resilience and slowdown benches.
+//!
+//! Like the median, the rule has no O(n²) decision: selection records the
+//! `CoordTrimmed` plan (the per-coordinate trim parameter `f`), and the
+//! combine drops the `f` largest and `f` smallest values per coordinate
+//! and averages the remaining `n − 2f` (see `gar::selection`).
 
-use super::scratch::ShardScratch;
-use super::{check_shape, Gar, GarScratch};
-use crate::runtime::{shard_slice, Parallelism, MIN_COORDS_PER_SHARD};
-use crate::tensor::{insertion_sort, GradMatrix};
+use super::selection::{CombinePlan, Selection};
+use super::{check_select_shape, Gar, GarScratch};
+use crate::runtime::Parallelism;
+use crate::tensor::GradMatrix;
 use crate::Result;
-
-/// Below this n the per-coordinate pass insertion-sorts the column
-/// instead of double-introselecting (faster for the tiny n of the
-/// parameter-server setting).
-const SMALL_N: usize = 64;
 
 /// Per coordinate: drop the `f` largest and `f` smallest values, average
 /// the remaining `n − 2f`.
@@ -35,7 +35,7 @@ impl TrimmedMean {
         })
     }
 
-    /// Use `par` for the coordinate-sharded O(nd) pass.
+    /// Use `par` for the coordinate-sharded O(nd) combine.
     pub fn with_parallelism(mut self, par: Parallelism) -> Self {
         self.par = par;
         self
@@ -55,48 +55,25 @@ impl Gar for TrimmedMean {
         self.f
     }
 
+    fn parallelism(&self) -> &Parallelism {
+        &self.par
+    }
+
     fn gradients_used(&self) -> usize {
         self.n - 2 * self.f
     }
 
-    fn aggregate_with_scratch(
+    fn select_into(
         &self,
         grads: &GradMatrix,
-        out: &mut [f32],
-        scratch: &mut GarScratch,
+        _scratch: &mut GarScratch,
+        sel: &mut Selection,
     ) -> Result<()> {
-        check_shape("trimmed-mean", grads, self.n, out)?;
-        let n = self.n;
-        let f = self.f;
-        let keep = n - 2 * f;
-        shard_slice(
-            &self.par,
-            out,
-            &mut scratch.shards,
-            ShardScratch::default,
-            MIN_COORDS_PER_SHARD,
-            |offset, range, shard| {
-                shard.column.clear();
-                shard.column.resize(n, 0.0);
-                let col = &mut shard.column;
-                for (k, o) in range.iter_mut().enumerate() {
-                    let j = offset + k;
-                    for i in 0..n {
-                        col[i] = grads.row(i)[j];
-                    }
-                    // Order so that [f, n-f) holds the middle n-2f values.
-                    if f > 0 {
-                        if n <= SMALL_N {
-                            insertion_sort(col);
-                        } else {
-                            col.select_nth_unstable_by(f - 1, f32::total_cmp);
-                            col[f..].select_nth_unstable_by(keep - 1, f32::total_cmp);
-                        }
-                    }
-                    *o = col[f..n - f].iter().sum::<f32>() / keep as f32;
-                }
-            },
-        );
+        check_select_shape("trimmed-mean", grads, self.n)?;
+        sel.reset(CombinePlan::CoordTrimmed { trim: self.f }, self.n);
+        // Which rows get trimmed is decided per coordinate; every row can
+        // reach the output, so the selection reports all of them.
+        sel.rows.extend(0..self.n);
         Ok(())
     }
 }

@@ -20,6 +20,17 @@
 //!   artifact execution reports "PJRT unavailable" at runtime while the
 //!   rust-native quadratic workload runs everything end-to-end.)
 //!
+//! ## Two-phase GAR API
+//!
+//! Every rule splits into an O(n²) **selection** phase
+//! ([`gar::Gar::select`], returning a typed [`gar::Selection`]) and an
+//! O(d) coordinate-wise **combine** phase callable per coordinate range
+//! ([`gar::Gar::combine`]) — the cost split of the paper's Theorem 2(ii)
+//! made structural. The coordinator fuses combine with the SGD update in
+//! one sharded traversal, reports which workers each round selected, and
+//! [`gar::pipeline`] composes rules with pre-aggregation stages
+//! (`gar = "rmom(0.9)+multi-bulyan"` — resilient momentum).
+//!
 //! ## Parallel aggregation engine
 //!
 //! Every GAR hot loop is sharded across a crate-internal, std-only thread
@@ -27,12 +38,12 @@
 //!
 //! * the O(n²d) pairwise-distance pass splits the `d` dimension into
 //!   fixed-width chunks, computes per-chunk partial `n × n` matrices, and
-//!   reduces them in ascending chunk order
-//!   ([`gar::pairwise_sq_distances_sharded`]);
+//!   reduces them with a fixed pairwise tree whose shape depends only on
+//!   the chunk count ([`gar::pairwise_sq_distances_sharded`]);
 //! * the O(nd)/O(θd) per-coordinate passes (median, trimmed mean, the
 //!   BULYAN trimmed average, every row-average) split the output vector
 //!   into disjoint coordinate ranges with per-shard scratch buffers
-//!   ([`runtime::shard_slice`]).
+//!   ([`runtime::shard_slice`] / [`runtime::shard_zip`]).
 //!
 //! Both decompositions depend only on `d` — never on the thread count —
 //! so aggregation results are **bit-identical** for every `threads`

@@ -18,7 +18,7 @@ use multibulyan::attacks::AttackKind;
 use multibulyan::bench;
 use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
 use multibulyan::coordinator::launch;
-use multibulyan::gar::GarKind;
+use multibulyan::gar::{GarKind, GarSpec};
 use multibulyan::runtime::{ComputeServer, Manifest};
 use multibulyan::tensor::GradMatrix;
 use multibulyan::util::Rng64;
@@ -96,6 +96,10 @@ USAGE:
   multibulyan artifacts-check [--artifacts DIR]
 
 GARs:    average median trimmed-mean krum multi-krum bulyan multi-bulyan
+         --gar also accepts a pre-aggregation pipeline spec:
+         (stage+)*rule, stage = rmom(beta) with beta in [0,1) — e.g.
+         --gar 'rmom(0.9)+multi-bulyan' aggregates resilient momentums
+         (train command; `aggregate` times the bare rule only)
 Attacks: none sign-flip random-gauss infinity nan little-is-enough
          omniscient mimic zero
 Threads: --threads 1 (sequential, default) | 0 (auto) | N (shared pool);
@@ -133,7 +137,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let exp = match args.get("config") {
         Some(path) => ExperimentConfig::from_path(path)?,
         None => {
-            let gar: GarKind = args.get_or("gar", "multi-bulyan").parse()?;
+            let gar_spec: GarSpec = args.get_or("gar", "multi-bulyan").parse()?;
             let attack: AttackKind = args.get_or("attack", "none").parse()?;
             let n: usize = args.parse_or("n", 11)?;
             let f: usize = args.parse_or("f", 2)?;
@@ -157,7 +161,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                     drop_prob: 0.0,
                     round_timeout_ms: 60_000,
                 },
-                gar,
+                gar: gar_spec.kind,
+                pre: gar_spec.stages,
                 attack,
                 model: if model == "quadratic" {
                     ModelConfig::Quadratic {
@@ -207,7 +212,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let handle = compute.as_ref().map(|(s, m)| (s.handle(), m.clone()));
     println!(
         "training: gar={} attack={} n={} f={} byz={} steps={} b={} transport={}",
-        exp.gar,
+        exp.gar_spec(),
         exp.attack.label(),
         exp.cluster.n,
         exp.cluster.f,

@@ -25,7 +25,7 @@ pub(crate) mod xla_stub;
 pub use compute::{ArgValue, ComputeHandle, ComputeServer};
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
 pub use pool::{
-    run_chunks, shard_slice, shard_slice_stateless, Parallelism, ThreadPool,
+    run_chunks, shard_slice, shard_slice_stateless, shard_zip, Parallelism, ThreadPool,
     MIN_COORDS_PER_SHARD,
 };
 

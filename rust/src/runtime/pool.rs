@@ -316,11 +316,13 @@ impl Parallelism {
 /// closures must capture the *wrapper* (which carries the `Sync` impl),
 /// not the bare `*mut T` — edition-2021 precise capture would otherwise
 /// pull the non-`Sync` pointer field into the closure directly.
-struct SyncMutPtr<T>(*mut T);
+/// `pub(crate)` for the disjoint-range fan-outs other modules build on
+/// the same pattern (the pairwise tree reduction in `gar::pairwise`).
+pub(crate) struct SyncMutPtr<T>(pub(crate) *mut T);
 
 impl<T> SyncMutPtr<T> {
     #[inline]
-    fn get(&self) -> *mut T {
+    pub(crate) fn get(&self) -> *mut T {
         self.0
     }
 }
@@ -360,22 +362,35 @@ pub fn run_chunks<T: Send>(
     });
 }
 
-/// Split `out` into at most `par.threads()` contiguous ranges of at least
-/// `min_chunk` coordinates and run `f(offset, range, state)` on each, with
-/// a dedicated `S` per shard (grown on demand via `mk_state` — the
-/// per-shard half of the zero-allocation steady state). Bit-identical to
-/// the sequential pass by construction: each coordinate is computed by
-/// exactly one shard with unchanged arithmetic; and allocation-free — the
-/// ranges and states are derived from the shard index.
-pub fn shard_slice<S: Send>(
+/// Split `K` equal-length f32 slices into *matching* disjoint contiguous
+/// ranges — the same partition for every slice, at most `par.threads()`
+/// shards of at least `min_chunk` coordinates — and run
+/// `f(offset, ranges, state)` on each, with a dedicated `S` per shard
+/// (grown on demand via `mk_state` — the per-shard half of the
+/// zero-allocation steady state). Bit-identical to the sequential pass by
+/// construction: each coordinate is computed by exactly one shard with
+/// unchanged arithmetic; and allocation-free — the ranges and states are
+/// derived from the shard index.
+///
+/// The multi-slice form is what the fused combine+update pass needs: one
+/// partition shared by the aggregate, parameter and velocity vectors
+/// (`coordinator::core::fused_combine_update`), and by the gradient/
+/// momentum rows of `gar::pipeline::ResilientMomentum`.
+pub fn shard_zip<const K: usize, S: Send>(
     par: &Parallelism,
-    out: &mut [f32],
+    mut slices: [&mut [f32]; K],
     states: &mut Vec<S>,
     mut mk_state: impl FnMut() -> S,
     min_chunk: usize,
-    f: impl Fn(usize, &mut [f32], &mut S) + Sync,
+    f: impl Fn(usize, [&mut [f32]; K], &mut S) + Sync,
 ) {
-    let len = out.len();
+    if K == 0 {
+        return;
+    }
+    let len = slices[0].len();
+    for s in slices.iter() {
+        assert_eq!(s.len(), len, "shard_zip: slice length mismatch");
+    }
     if len == 0 {
         return;
     }
@@ -388,11 +403,11 @@ pub fn shard_slice<S: Send>(
         states.push(mk_state());
     }
     if shards == 1 {
-        f(0, out, &mut states[0]);
+        f(0, slices, &mut states[0]);
         return;
     }
     let chunk_len = len.div_ceil(shards);
-    let out_ptr = SyncMutPtr(out.as_mut_ptr());
+    let ptrs: [SyncMutPtr<f32>; K] = std::array::from_fn(|s| SyncMutPtr(slices[s].as_mut_ptr()));
     let states_ptr = SyncMutPtr(states.as_mut_ptr());
     par.run_sharded(shards, &|i| {
         let start = i * chunk_len;
@@ -401,15 +416,38 @@ pub fn shard_slice<S: Send>(
             return;
         }
         let end = (start + chunk_len).min(len);
-        // SAFETY: shard `i` exclusively owns coordinates `[start, end)`
-        // and `states[i]` (`i < shards ≤ states.len()`); both ranges are
-        // disjoint across shards, and `run_sharded` blocks until every
-        // shard completed, so `out`/`states` outlive every dereference.
-        let range =
-            unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(start), end - start) };
+        // SAFETY: shard `i` exclusively owns coordinates `[start, end)` of
+        // every slice (the K slices are distinct `&mut` so they cannot
+        // alias each other) and `states[i]` (`i < shards ≤ states.len()`);
+        // all ranges are disjoint across shards, and `run_sharded` blocks
+        // until every shard completed, so the slices and `states` outlive
+        // every dereference.
+        let ranges: [&mut [f32]; K] = std::array::from_fn(|s| unsafe {
+            std::slice::from_raw_parts_mut(ptrs[s].get().add(start), end - start)
+        });
         let state = unsafe { &mut *states_ptr.get().add(i) };
-        f(start, range, state);
+        f(start, ranges, state);
     });
+}
+
+/// Single-slice [`shard_zip`] — the shared helper behind every
+/// per-coordinate GAR pass.
+pub fn shard_slice<S: Send>(
+    par: &Parallelism,
+    out: &mut [f32],
+    states: &mut Vec<S>,
+    mk_state: impl FnMut() -> S,
+    min_chunk: usize,
+    f: impl Fn(usize, &mut [f32], &mut S) + Sync,
+) {
+    shard_zip(
+        par,
+        [out],
+        states,
+        mk_state,
+        min_chunk,
+        |offset, [range]: [&mut [f32]; 1], state| f(offset, range, state),
+    );
 }
 
 /// [`shard_slice`] without per-shard state.
@@ -541,6 +579,51 @@ mod tests {
             assert_eq!(range.len(), 100);
         });
         assert_eq!(states.len(), 1);
+    }
+
+    #[test]
+    fn shard_zip_partitions_match_across_slices() {
+        // The three slices must see the SAME offset partition; every
+        // coordinate visited exactly once per slice.
+        for threads in [1usize, 2, 4] {
+            let par = Parallelism::new(threads);
+            let mut a = vec![0.0f32; 9_000];
+            let mut b = vec![0.0f32; 9_000];
+            let mut c = vec![0.0f32; 9_000];
+            let mut states: Vec<()> = Vec::new();
+            shard_zip(
+                &par,
+                [&mut a, &mut b, &mut c],
+                &mut states,
+                || (),
+                256,
+                |offset, [ra, rb, rc], _| {
+                    assert_eq!(ra.len(), rb.len());
+                    assert_eq!(rb.len(), rc.len());
+                    for k in 0..ra.len() {
+                        let j = (offset + k) as f32;
+                        ra[k] += j;
+                        rb[k] += 2.0 * j;
+                        rc[k] = ra[k] + rb[k];
+                    }
+                },
+            );
+            for j in 0..9_000 {
+                assert_eq!(a[j], j as f32, "threads={threads}");
+                assert_eq!(b[j], 2.0 * j as f32);
+                assert_eq!(c[j], 3.0 * j as f32);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn shard_zip_rejects_ragged_slices() {
+        let par = Parallelism::sequential();
+        let mut a = vec![0.0f32; 10];
+        let mut b = vec![0.0f32; 11];
+        let mut states: Vec<()> = Vec::new();
+        shard_zip(&par, [&mut a, &mut b], &mut states, || (), 1, |_, _, _| {});
     }
 
     #[test]

@@ -41,8 +41,20 @@ impl Sgd {
         self.lr = lr;
     }
 
+    pub fn momentum(&self) -> f32 {
+        self.momentum
+    }
+
     pub fn velocity(&self) -> &[f32] {
         &self.velocity
+    }
+
+    /// Mutable velocity buffer — the fused combine+update pass
+    /// (`coordinator::core::fused_combine_update`) shards it alongside
+    /// the parameter vector; per-coordinate arithmetic is exactly
+    /// [`step`](Self::step)'s, so the fused pass is bit-identical.
+    pub fn velocity_mut(&mut self) -> &mut [f32] {
+        &mut self.velocity
     }
 
     /// One update step in place.

@@ -145,6 +145,7 @@ fn training_through_pjrt_learns_under_attack() {
             round_timeout_ms: 60_000,
         },
         gar: GarKind::MultiBulyan,
+        pre: Vec::new(),
         attack: multibulyan::attacks::AttackKind::SignFlip { scale: 1.0 },
         model: ModelConfig::Artifact {
             name: "mlp".into(),

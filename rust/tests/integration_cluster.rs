@@ -25,6 +25,7 @@ fn quadratic_exp(
             round_timeout_ms: 60_000,
         },
         gar,
+        pre: Vec::new(),
         attack,
         model: ModelConfig::Quadratic {
             dim: 128,

@@ -21,6 +21,7 @@ fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) 
             round_timeout_ms: 60_000,
         },
         gar: GarKind::MultiKrum,
+        pre: Vec::new(),
         attack,
         model: ModelConfig::Quadratic {
             dim: 64,

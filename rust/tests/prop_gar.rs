@@ -7,7 +7,9 @@
 //! affine maps), convex-hull confinement per coordinate for the median
 //! family, and the resilience contracts under adversarial rows.
 
-use multibulyan::gar::{Gar, GarKind, GarScratch};
+use multibulyan::gar::{
+    pairwise_sq_distances_sharded, CombineScratch, Gar, GarKind, GarScratch, SHARD_D,
+};
 use multibulyan::runtime::Parallelism;
 use multibulyan::tensor::GradMatrix;
 use multibulyan::util::proptest::{check, default_cases};
@@ -289,6 +291,82 @@ fn parallel_output_bit_identical_to_sequential() {
             }
             Ok(())
         });
+    }
+}
+
+#[test]
+fn select_combine_partition_bit_identical_to_aggregate() {
+    // The two-phase contract: `select` once, then `combine` over an
+    // ARBITRARY partition of 0..d into contiguous ranges, must reproduce
+    // the one-shot aggregate bit for bit — for all seven rules, including
+    // under adversarial ±1e30 rows. This is what licenses the
+    // coordinator's fused combine+update pass.
+    for kind in GarKind::ALL {
+        check(&format!("select-combine/{kind}"), default_cases(), |rng, _| {
+            let f = rng.gen_range_usize(3); // 0..=2
+            let n = kind.min_n(f).max(3) + rng.gen_range_usize(6);
+            let d = 1 + rng.gen_range_usize(3_000);
+            let mut grads = random_grads(rng, n, d, 1.0);
+            if f > 0 && rng.gen_bool(0.5) {
+                for b in 0..f {
+                    let sign = if b % 2 == 0 { 1.0 } else { -1.0 };
+                    grads
+                        .row_mut(n - 1 - b)
+                        .iter_mut()
+                        .for_each(|v| *v = sign * 1e30);
+                }
+            }
+            let gar = kind.instantiate(n, f).map_err(|e| e.to_string())?;
+            let reference = gar.aggregate(&grads).map_err(|e| e.to_string())?;
+            let mut scratch = GarScratch::new();
+            let sel = gar.select(&grads, &mut scratch).map_err(|e| e.to_string())?;
+            if sel.selected_rows().is_empty() || sel.selected_rows().iter().any(|&r| r >= n) {
+                return Err("selection rows out of range".into());
+            }
+            // Random partition into contiguous ranges (often length 1).
+            let mut out = vec![0.0f32; d];
+            let mut cs = CombineScratch::default();
+            let mut start = 0usize;
+            while start < d {
+                let max_len = d - start;
+                let len = 1 + rng.gen_range_usize(max_len.min(257));
+                gar.combine(&sel, &grads, start, &mut out[start..start + len], &mut cs)
+                    .map_err(|e| e.to_string())?;
+                start += len;
+            }
+            if out != reference {
+                let diverged = out
+                    .iter()
+                    .zip(&reference)
+                    .position(|(x, y)| x != y)
+                    .unwrap_or(usize::MAX);
+                return Err(format!(
+                    "n={n} f={f} d={d}: partitioned combine diverged at coord {diverged}"
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn pairwise_tree_reduction_bit_identical_at_large_n() {
+    // The ISSUE/ROADMAP item behind the tree reduction: at n ∈ {64, 131}
+    // the chunk-partial reduction must stay bit-identical across thread
+    // counts (the tree shape depends only on d, never on threads). d
+    // crosses several SHARD_D chunk boundaries so the tree has real depth.
+    for (n, d) in [(64usize, 2 * SHARD_D + 517), (131, SHARD_D + 13)] {
+        let g = GradMatrix::from_fn(n, d, |i, j| ((i * 131 + j) % 251) as f32 * 0.013 - 1.5);
+        let mut seq = vec![0.0f32; n * n];
+        let mut partials = Vec::new();
+        pairwise_sq_distances_sharded(&g, &mut seq, &Parallelism::sequential(), &mut partials);
+        for threads in [2usize, 4] {
+            let par = Parallelism::new(threads);
+            let mut out = vec![0.0f32; n * n];
+            let mut scratch = Vec::new();
+            pairwise_sq_distances_sharded(&g, &mut out, &par, &mut scratch);
+            assert_eq!(seq, out, "n={n} d={d} threads={threads}");
+        }
     }
 }
 
