@@ -60,6 +60,7 @@ fn main() -> Result<()> {
                 net_delay_us: 0,
                 drop_prob: 0.0,
                 round_timeout_ms: 60_000,
+                ..Default::default()
             },
             gar,
             pre: Vec::new(),
@@ -78,6 +79,7 @@ fn main() -> Result<()> {
             },
             threads: 0,
             transport: Default::default(),
+            collect: Default::default(),
             output_dir: None,
         };
         println!("\n=== {label} ({steps} steps) ===");

@@ -44,6 +44,7 @@ fn main() -> Result<()> {
             net_delay_us: 50,
             drop_prob: 0.0,
             round_timeout_ms: 60_000,
+            ..Default::default()
         },
         gar: GarKind::MultiBulyan,
         pre: Vec::new(),
@@ -64,6 +65,7 @@ fn main() -> Result<()> {
         // to `threads: 1`, just faster at large d.
         threads: 0,
         transport: Default::default(),
+        collect: Default::default(),
         output_dir: None,
     };
     println!("\ntraining the quadratic workload with MULTI-BULYAN (n={n}, f={f}, no attack):");

@@ -29,6 +29,7 @@ fn main() {
                 net_delay_us: 0,
                 drop_prob: 0.0,
                 round_timeout_ms: 60_000,
+                ..Default::default()
             },
             gar,
             pre: Vec::new(),
@@ -48,6 +49,7 @@ fn main() {
             },
             threads: 1,
             transport: Default::default(),
+            collect: Default::default(),
             output_dir: None,
         };
         let mut cluster = launch(&config, None).unwrap();

@@ -8,6 +8,7 @@
 //! | fig3 | Fig. 3 max top-1 accuracy vs batch size | [`fig3::run`] |
 //! | dscaling | Theorem 2.ii O(d) claim | [`dscaling::run`] |
 //! | slowdown | Theorems 1.ii/2.iii m̃/n slowdown | [`slowdown::run`] |
+//! | straggler | first-m vs wait-all round-tail latency under the straggler cost model | [`straggler::run`] |
 //! | resilience | weak/strong resilience under the attack gauntlet | [`resilience::run`] |
 //! | cone | (α,f) cone + √d leeway | [`cone::run`] |
 //! | check | CI perf-baseline gate over the GAR hot path | [`baseline::check`] |
@@ -19,6 +20,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod resilience;
 pub mod slowdown;
+pub mod straggler;
 
 use crate::Result;
 use std::io::Write;

@@ -29,6 +29,14 @@ pub struct GauntletRow {
     /// all rows each round, so their precision sits at `(n − byz)/n` by
     /// construction. NaN when nothing was selected.
     pub selection_precision: f64,
+    /// Selection recall (the Bareilles et al. 2026 selection-quality
+    /// counterpart): the fraction of honest gradient submissions the rule
+    /// actually used — honest selections / (honest workers × rounds).
+    /// 1.0 = no honest gradient was ever filtered out; single-selection
+    /// rules (KRUM, MEDIAN) sit near 1/n by construction. Precision says
+    /// "what we kept was honest", recall says "we kept the honest ones".
+    /// NaN when no round ran.
+    pub selection_recall: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -98,6 +106,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                     net_delay_us: 0,
                     drop_prob: 0.0,
                     round_timeout_ms: 60_000,
+                    ..Default::default()
                 },
                 gar,
                 pre: Vec::new(),
@@ -116,6 +125,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                 },
                 threads: 1,
                 transport: Default::default(),
+                collect: Default::default(),
                 output_dir: None,
             };
             let cluster = launch(&exp, None)?;
@@ -123,9 +133,10 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
             let mut evaluator = cluster.evaluator;
             coordinator.train(cfg.steps, 0, &mut evaluator)?;
             let final_loss = coordinator.metrics.final_loss().unwrap_or(f32::INFINITY);
-            // Byzantine-filtering precision from the per-worker selection
-            // counts (forged rows occupy indices honest..n).
+            // Byzantine-filtering precision/recall from the per-worker
+            // selection counts (forged rows occupy indices honest..n).
             let selections = coordinator.metrics.selections();
+            let rounds = coordinator.metrics.counter("rounds");
             let honest = cfg.n - byz;
             let total: u64 = selections.iter().sum();
             let honest_hits: u64 = selections[..honest.min(selections.len())].iter().sum();
@@ -134,12 +145,19 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
             } else {
                 honest_hits as f64 / total as f64
             };
+            let honest_submissions = honest as u64 * rounds;
+            let selection_recall = if honest_submissions == 0 {
+                f64::NAN
+            } else {
+                honest_hits as f64 / honest_submissions as f64
+            };
             coordinator.shutdown();
             let converged = final_loss.is_finite() && final_loss < cfg.threshold;
             line.push_str(&format!(
-                "{:>12.2e} p={:<4.2}{:>5}",
+                "{:>10.2e} p={:<4.2}r={:<4.2}{:>4}",
                 final_loss,
                 selection_precision,
+                selection_recall,
                 if converged { "ok" } else { "FAIL" }
             ));
             rows.push(GauntletRow {
@@ -148,6 +166,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                 final_loss,
                 converged,
                 selection_precision,
+                selection_recall,
             });
         }
         if !quiet {
@@ -158,14 +177,19 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
         .iter()
         .map(|r| {
             format!(
-                "{},{},{},{},{:.4}",
-                r.gar, r.attack, r.final_loss, r.converged, r.selection_precision
+                "{},{},{},{},{:.4},{:.4}",
+                r.gar,
+                r.attack,
+                r.final_loss,
+                r.converged,
+                r.selection_precision,
+                r.selection_recall
             )
         })
         .collect();
     super::write_csv(
         "resilience.csv",
-        "gar,attack,final_loss,converged,selection_precision",
+        "gar,attack,final_loss,converged,selection_precision,selection_recall",
         &csv,
     )?;
     Ok(rows)

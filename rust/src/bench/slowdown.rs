@@ -75,6 +75,7 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
             net_delay_us: 0,
             drop_prob: 0.0,
             round_timeout_ms: 60_000,
+            ..Default::default()
         },
         gar: GarKind::Average, // placeholder; instance swapped below
         pre: Vec::new(),
@@ -93,6 +94,7 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
         },
         threads: 1,
         transport: Default::default(),
+        collect: Default::default(),
         output_dir: None,
     };
     let cluster = launch(&exp, None)?;

@@ -1,0 +1,243 @@
+//! Straggler-race bench — the paper's m/n headline in wall-clock form:
+//! with a deterministic per-worker compute-cost model (a slow tail of
+//! stragglers), how much round-tail latency does `collect = "first-m"`
+//! shave off versus waiting for every worker?
+//!
+//! Expected shape: under `all`, every round's tail is the stragglers'
+//! cost (real sleeps on the threaded transport, virtual-time slices — and
+//! their real sliced compute — on the pooled one). Under `first-m` the
+//! round returns at the fastest `m = n − f` gradients, the stragglers are
+//! abandoned mid-computation (their remaining work is never executed),
+//! and the tail collapses to the fast tier's cost. Collected/missing
+//! counts are deterministic on both transports whenever the cost gap is
+//! decisive, which this bench's configuration makes sure of.
+//!
+//! Writes `results/straggler.csv` (uploaded as a CI artifact).
+
+use crate::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use crate::coordinator::launch;
+use crate::gar::GarKind;
+use crate::metrics::Stopwatch;
+use crate::transport::{CollectMode, TransportKind};
+use crate::Result;
+
+/// One (collect mode, transport) measurement.
+#[derive(Debug, Clone)]
+pub struct StragglerRow {
+    pub collect: CollectMode,
+    pub transport: TransportKind,
+    pub n: usize,
+    /// Gradients the mode waits for (n, or m = n − f under first-m).
+    pub expect: usize,
+    pub rounds: usize,
+    /// Mean round wall time over the measured rounds, milliseconds.
+    pub mean_round_ms: f64,
+    /// Worst (tail) round wall time, milliseconds.
+    pub max_round_ms: f64,
+    /// Mean `RoundOutcome::collected` per round (deterministic: n under
+    /// `all` with a generous timeout, m under `first-m`).
+    pub mean_collected: f64,
+    /// Mean `RoundOutcome::missing` per round (straggler-cache rounds).
+    pub mean_missing: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StragglerConfig {
+    pub n: usize,
+    pub f: usize,
+    pub dim: usize,
+    /// Measured rounds (one extra warm-up round is run and discarded).
+    pub rounds: usize,
+    /// Baseline simulated compute cost per round, µs.
+    pub base_cost_us: u64,
+    /// Slow-tail size (must stay ≤ f so first-m never needs a straggler).
+    pub stragglers: usize,
+    pub straggler_factor: f64,
+    /// Round timeout, ms — generous, so `all` really waits for the tail.
+    pub timeout_ms: u64,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> Self {
+        Self {
+            n: 48,
+            f: 8,
+            dim: 20_000,
+            rounds: 20,
+            base_cost_us: 1_000,
+            stragglers: 4,
+            straggler_factor: 16.0,
+            timeout_ms: 1_000,
+            threads: 4,
+            seed: 1,
+        }
+    }
+}
+
+pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
+    anyhow::ensure!(
+        cfg.stragglers <= cfg.f,
+        "straggler bench: stragglers ({}) must be ≤ f ({}) so first-m \
+         can always fill its quorum from the fast tier",
+        cfg.stragglers,
+        cfg.f
+    );
+    let mut rows = Vec::new();
+    for transport in TransportKind::ALL {
+        for collect in CollectMode::ALL {
+            let exp = ExperimentConfig {
+                cluster: ClusterConfig {
+                    n: cfg.n,
+                    f: cfg.f,
+                    actual_byzantine: Some(0),
+                    round_timeout_ms: cfg.timeout_ms,
+                    compute_cost_us: cfg.base_cost_us,
+                    stragglers: cfg.stragglers,
+                    straggler_factor: cfg.straggler_factor,
+                    ..Default::default()
+                },
+                gar: GarKind::MultiKrum,
+                pre: Vec::new(),
+                attack: crate::attacks::AttackKind::None,
+                model: ModelConfig::Quadratic {
+                    dim: cfg.dim,
+                    noise: 0.5,
+                },
+                train: TrainConfig {
+                    learning_rate: 0.1,
+                    momentum: 0.0,
+                    steps: cfg.rounds + 1,
+                    batch_size: 8,
+                    eval_every: 0,
+                    seed: cfg.seed,
+                },
+                threads: cfg.threads,
+                transport,
+                collect,
+                output_dir: None,
+            };
+            let expect = match collect {
+                CollectMode::All => cfg.n,
+                CollectMode::FirstM => cfg.n - cfg.f,
+            };
+            let cluster = launch(&exp, None)?;
+            let mut coordinator = cluster.coordinator;
+            // Warm-up round outside the measurement: it grows the
+            // gradient arenas and populates the straggler cache.
+            coordinator.run_round()?;
+            let mut total_ms = 0.0f64;
+            let mut max_ms = 0.0f64;
+            let mut collected = 0u64;
+            let mut missing = 0u64;
+            for _ in 0..cfg.rounds {
+                let sw = Stopwatch::start();
+                let out = coordinator.run_round()?;
+                let ms = sw.elapsed_ms();
+                total_ms += ms;
+                max_ms = max_ms.max(ms);
+                collected += out.collected as u64;
+                missing += out.missing as u64;
+            }
+            coordinator.shutdown();
+            let row = StragglerRow {
+                collect,
+                transport,
+                n: cfg.n,
+                expect,
+                rounds: cfg.rounds,
+                mean_round_ms: total_ms / cfg.rounds as f64,
+                max_round_ms: max_ms,
+                mean_collected: collected as f64 / cfg.rounds as f64,
+                mean_missing: missing as f64 / cfg.rounds as f64,
+            };
+            if !quiet {
+                println!(
+                    "straggler {:<9} {:<8} n={:<4} expect={:<4} mean {:>9.3} ms   \
+                     tail {:>9.3} ms   collected {:>6.1}   missing {:>5.1}",
+                    row.collect,
+                    row.transport,
+                    row.n,
+                    row.expect,
+                    row.mean_round_ms,
+                    row.max_round_ms,
+                    row.mean_collected,
+                    row.mean_missing
+                );
+            }
+            rows.push(row);
+        }
+    }
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{},{},{:.4},{:.4},{:.2},{:.2}",
+                r.collect,
+                r.transport,
+                r.n,
+                r.expect,
+                r.rounds,
+                r.mean_round_ms,
+                r.max_round_ms,
+                r.mean_collected,
+                r.mean_missing
+            )
+        })
+        .collect();
+    super::write_csv(
+        "straggler.csv",
+        "collect,transport,n,expect,rounds,mean_round_ms,max_round_ms,mean_collected,mean_missing",
+        &csv,
+    )?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_bench_counts_are_deterministic() {
+        let _env = crate::bench::env_lock();
+        let dir = std::env::temp_dir().join("mb_straggler_bench_test");
+        std::env::set_var("MB_RESULTS_DIR", &dir);
+        let cfg = StragglerConfig {
+            n: 12,
+            f: 3,
+            dim: 4_000,
+            rounds: 3,
+            base_cost_us: 400,
+            stragglers: 2,
+            straggler_factor: 10.0,
+            timeout_ms: 1_000,
+            threads: 2,
+            seed: 1,
+        };
+        let rows = run(&cfg, true).unwrap();
+        // 2 transports × 2 collect modes.
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.mean_round_ms >= 0.0 && r.max_round_ms >= r.mean_round_ms / 2.0);
+            match r.collect {
+                // Generous timeout: wait-all really gets everyone.
+                CollectMode::All => {
+                    assert_eq!(r.expect, 12);
+                    assert_eq!(r.mean_collected, 12.0, "{} {}", r.collect, r.transport);
+                    assert_eq!(r.mean_missing, 0.0);
+                }
+                // First-m leaves exactly the straggler-free quorum... the
+                // two stragglers lose the race on both transports.
+                CollectMode::FirstM => {
+                    assert_eq!(r.expect, 9);
+                    assert_eq!(r.mean_collected, 9.0, "{} {}", r.collect, r.transport);
+                    assert_eq!(r.mean_missing, 3.0);
+                }
+            }
+        }
+        assert!(dir.join("straggler.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+}

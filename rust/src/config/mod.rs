@@ -33,7 +33,7 @@ pub mod parser;
 
 use crate::attacks::AttackKind;
 use crate::gar::{GarKind, GarSpec, StageSpec};
-use crate::transport::TransportKind;
+use crate::transport::{CollectMode, TransportKind};
 use crate::Result;
 use parser::Document;
 use std::path::Path;
@@ -65,11 +65,37 @@ pub struct ClusterConfig {
     pub drop_prob: f64,
     /// Round collection timeout in milliseconds (how long the server
     /// waits for stragglers before the last-known-gradient fallback).
-    /// Bounds real thread races only on the `threaded` transport; the
-    /// default `pooled` backend runs its logical workers to completion
-    /// inside collect, so missing gradients there come from `drop_prob`
-    /// (see the `transport` module docs on straggler semantics).
+    /// Honoured by both transports: wall-clock on `threaded`, virtual
+    /// time under the pooled backend's time-sliced drive — a worker
+    /// whose simulated compute cost exceeds the timeout
+    /// deterministically misses the round (see the `transport` module
+    /// docs on straggler semantics).
     pub round_timeout_ms: u64,
+    /// Baseline simulated per-round compute cost per worker in
+    /// microseconds (the straggler model; 0 disables it). Virtual time
+    /// on the pooled transport, a real pre-compute sleep on threaded.
+    pub compute_cost_us: u64,
+    /// Number of straggler workers (the first `stragglers` worker ids
+    /// cost `compute_cost_us × straggler_factor` per round).
+    pub stragglers: usize,
+    /// Cost multiplier for stragglers (≥ 1).
+    pub straggler_factor: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            n: 1,
+            f: 0,
+            actual_byzantine: None,
+            net_delay_us: 0,
+            drop_prob: 0.0,
+            round_timeout_ms: default_round_timeout_ms(),
+            compute_cost_us: 0,
+            stragglers: 0,
+            straggler_factor: 1.0,
+        }
+    }
 }
 
 impl ClusterConfig {
@@ -142,8 +168,17 @@ pub struct ExperimentConfig {
     /// logical workers over the same shared thread pool — the scaling
     /// path for 100+ workers; `threaded` spawns one OS thread per worker
     /// (the faithful-asynchrony simulation). Seeded runs produce
-    /// identical results on either backend (see `transport`).
+    /// identical results on either backend, with one caveat: combining
+    /// the straggler cost model and first-m abandonment with a nonzero
+    /// `drop_prob`/`net_delay_us` makes the fault-RNG streams diverge
+    /// between backends (see `transport::ComputeCost`).
     pub transport: TransportKind,
+    /// Collection semantics (`collect` root key / `--collect` flag):
+    /// `all` (default) waits for every honest worker up to the round
+    /// timeout; `first-m` proceeds at the fastest `m = n − f` gradients
+    /// — the paper's synchronous model, the knob that exhibits the m/n
+    /// slowdown. Stragglers fall through the last-good cache.
+    pub collect: CollectMode,
     /// Where to write metrics CSV (None = stdout summary only).
     pub output_dir: Option<String>,
 }
@@ -156,9 +191,7 @@ impl ExperimentConfig {
                 n: 11,
                 f: 2,
                 actual_byzantine: Some(0),
-                net_delay_us: 0,
-                drop_prob: 0.0,
-                round_timeout_ms: default_round_timeout_ms(),
+                ..Default::default()
             },
             gar,
             pre: Vec::new(),
@@ -170,6 +203,7 @@ impl ExperimentConfig {
             train: TrainConfig::default(),
             threads: 1,
             transport: TransportKind::default(),
+            collect: CollectMode::default(),
             output_dir: None,
         }
     }
@@ -242,6 +276,21 @@ impl ExperimentConfig {
                 .map(|v| v.as_u64())
                 .transpose()?
                 .unwrap_or_else(default_round_timeout_ms),
+            compute_cost_us: cluster_sec
+                .get("compute_cost_us")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(0),
+            stragglers: cluster_sec
+                .get("stragglers")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            straggler_factor: cluster_sec
+                .get("straggler_factor")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(1.0),
         };
 
         let model_kind = get_str("model", "kind").unwrap_or_else(|| "quadratic".into());
@@ -305,6 +354,13 @@ impl ExperimentConfig {
             .map(str::parse)
             .transpose()?
             .unwrap_or_default();
+        let collect: CollectMode = root
+            .get("collect")
+            .map(|v| v.as_str())
+            .transpose()?
+            .map(str::parse)
+            .transpose()?
+            .unwrap_or_default();
 
         Ok(Self {
             cluster,
@@ -315,6 +371,7 @@ impl ExperimentConfig {
             train,
             threads,
             transport,
+            collect,
             output_dir: get_str("", "output_dir"),
         })
     }
@@ -366,6 +423,21 @@ impl ExperimentConfig {
         anyhow::ensure!(
             self.cluster.round_timeout_ms >= 1,
             "round_timeout_ms must be ≥ 1"
+        );
+        anyhow::ensure!(
+            self.cluster.stragglers <= n,
+            "stragglers={} exceeds cluster size n={n}",
+            self.cluster.stragglers
+        );
+        anyhow::ensure!(
+            self.cluster.straggler_factor >= 1.0,
+            "straggler_factor must be ≥ 1 (a straggler is never faster), got {}",
+            self.cluster.straggler_factor
+        );
+        anyhow::ensure!(
+            self.cluster.stragglers == 0 || self.cluster.compute_cost_us > 0,
+            "stragglers={} needs compute_cost_us > 0 (the cost model is disabled at 0)",
+            self.cluster.stragglers
         );
         anyhow::ensure!(
             self.threads <= MAX_THREADS,
@@ -558,6 +630,71 @@ mod tests {
             "#,
         )
         .is_err());
+    }
+
+    #[test]
+    fn collect_knob_parses_and_defaults_to_all() {
+        assert_eq!(base().collect, CollectMode::All);
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-bulyan"
+            collect = "first-m"
+            [cluster]
+            n = 11
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.collect, CollectMode::FirstM);
+        assert!(ExperimentConfig::from_text(
+            r#"
+            collect = "fastest"
+            [cluster]
+            n = 11
+            "#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn straggler_cost_model_parses_and_validates() {
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-krum"
+            collect = "first-m"
+            [cluster]
+            n = 7
+            f = 2
+            compute_cost_us = 500
+            stragglers = 2
+            straggler_factor = 10.0
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.compute_cost_us, 500);
+        assert_eq!(cfg.cluster.stragglers, 2);
+        assert_eq!(cfg.cluster.straggler_factor, 10.0);
+        // Defaults: model disabled.
+        assert_eq!(base().cluster.compute_cost_us, 0);
+        assert_eq!(base().cluster.stragglers, 0);
+        // Stragglers without a cost base are meaningless.
+        let mut cfg = base();
+        cfg.cluster.stragglers = 1;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.compute_cost_us = 100;
+        cfg.validate().unwrap();
+        // A "straggler" that is faster than baseline is rejected.
+        cfg.cluster.straggler_factor = 0.5;
+        assert!(cfg.validate().is_err());
+        // More stragglers than workers is rejected.
+        let mut cfg = base();
+        cfg.cluster.compute_cost_us = 100;
+        cfg.cluster.stragglers = 100;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::config::{ExperimentConfig, ModelConfig};
 use crate::data::{FashionLike, QuadraticProblem, TokenStream};
 use crate::runtime::{ComputeHandle, Manifest, Parallelism};
 use crate::training::LrSchedule;
-use crate::transport::{self, FaultModel, TransportKind};
+use crate::transport::{self, ComputeCost, FaultModel, TransportKind};
 use crate::worker::{serve_workers, GradSource};
 use crate::Result;
 use std::sync::Arc;
@@ -40,6 +40,11 @@ pub fn launch(
         delay_us: config.cluster.net_delay_us,
         drop_prob: config.cluster.drop_prob,
         seed,
+        cost: ComputeCost {
+            base_us: config.cluster.compute_cost_us,
+            slow_workers: config.cluster.stragglers,
+            slow_factor: config.cluster.straggler_factor as f32,
+        },
     };
     // One pool shared by the GAR passes and (on the pooled transport) the
     // logical workers; results are bit-identical to sequential for every
@@ -171,6 +176,7 @@ pub fn launch(
             base: config.train.learning_rate,
         },
         seed,
+        collect: config.collect,
     };
     let mut coordinator = Coordinator::new(
         config.gar.instantiate_parallel(n, config.cluster.f, &par)?,

@@ -15,7 +15,7 @@ use crate::metrics::{MetricsRecorder, Stopwatch, TrainPoint};
 use crate::runtime::{shard_zip, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::GradMatrix;
 use crate::training::{LrSchedule, Sgd};
-use crate::transport::ServerEndpoint;
+use crate::transport::{CollectMode, ServerEndpoint};
 use crate::util::Rng64;
 use crate::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -93,11 +93,18 @@ pub(crate) fn fused_combine_update(
 /// Tunables not covered by the experiment config.
 #[derive(Debug, Clone)]
 pub struct CoordinatorOptions {
-    /// How long to wait for a round's gradients before falling back.
+    /// How long to wait for a round's gradients before falling back
+    /// (wall-clock on the threaded transport; virtual time under the
+    /// pooled backend's cost model — see `transport`).
     pub round_timeout: Duration,
     /// LR schedule (defaults to the paper's fixed rate).
     pub schedule: LrSchedule,
     pub seed: u64,
+    /// Collection semantics: wait for every honest worker (`All`,
+    /// default) or return at the fastest `m = n − f` gradients
+    /// (`FirstM`, the paper's synchronous model — stragglers fall
+    /// through the last-good cache).
+    pub collect: CollectMode,
 }
 
 impl Default for CoordinatorOptions {
@@ -106,6 +113,7 @@ impl Default for CoordinatorOptions {
             round_timeout: Duration::from_secs(30),
             schedule: LrSchedule::Fixed { base: 0.1 },
             seed: 1,
+            collect: CollectMode::All,
         }
     }
 }
@@ -114,9 +122,15 @@ impl Default for CoordinatorOptions {
 #[derive(Debug, Clone)]
 pub struct RoundOutcome {
     pub round: u64,
-    /// Honest gradients received before the timeout.
+    /// Honest gradients received this round — bounded by the collection
+    /// deadline on *both* transports (the pooled backend time-slices its
+    /// logical workers against a virtual clock), and by the first-m
+    /// cutoff when `CoordinatorOptions::collect` is `FirstM` (the round
+    /// proceeds as soon as the fastest `m = n − f` gradients arrived).
     pub collected: usize,
-    /// Honest gradients substituted from the last-known cache.
+    /// Honest gradients substituted from the last-known cache (stragglers
+    /// left behind by the deadline or the first-m race, fault-model
+    /// drops, and malformed submissions).
     pub missing: usize,
     /// Wall time of the aggregation tail (selection + fused
     /// combine-and-update), seconds.
@@ -153,6 +167,8 @@ pub struct Coordinator {
     scratch: GarScratch,
     rng: Rng64,
     round: u64,
+    /// First malformed-gradient offender already reported (warn once).
+    warned_malformed: bool,
     pub metrics: MetricsRecorder,
 }
 
@@ -199,6 +215,7 @@ impl Coordinator {
             scratch: GarScratch::new(),
             rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
             round: 0,
+            warned_malformed: false,
             metrics: MetricsRecorder::new(n),
             options,
         })
@@ -247,38 +264,73 @@ impl Coordinator {
         Ok(self)
     }
 
+    /// How many honest gradients a round waits for. `FirstM` is the
+    /// paper's synchronous model: proceed at the fastest `m = n − f`
+    /// gradients. The `byz` forged rows are produced server-side by an
+    /// omniscient coalition that never straggles, so they always count
+    /// toward the quorum — the collection waits for `n − f − byz` honest
+    /// gradients (saturating: a contract-violating `byz > n − f` run
+    /// collects nothing and lives entirely off the fallback cache).
+    fn expect_per_round(&self) -> usize {
+        let honest = self.n - self.byz;
+        match self.options.collect {
+            CollectMode::All => honest,
+            CollectMode::FirstM => (self.n - self.gar.f())
+                .saturating_sub(self.byz)
+                .min(honest),
+        }
+    }
+
+    /// Switch collection semantics between rounds (e.g. one wait-all
+    /// warm-up round to populate the straggler cache, then first-m).
+    pub fn set_collect(&mut self, mode: CollectMode) {
+        self.options.collect = mode;
+    }
+
     /// Drive one synchronous SGD round.
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
         self.round += 1;
         let round = self.round;
         let honest = self.n - self.byz;
+        let expect = self.expect_per_round();
 
         // 1. Broadcast current parameters.
         let params = Arc::new(self.params.clone());
         self.server.broadcast(round, params);
 
-        // 2. Collect honest gradients (timeout-bounded), copying each
-        //    straight into its GradMatrix row and the straggler cache —
-        //    the zero-copy path of `ServerEndpoint::collect_with`, so a
-        //    steady-state round allocates nothing per message.
+        // 2. Collect honest gradients (deadline-bounded, first-m aware),
+        //    copying each straight into its GradMatrix row and the
+        //    straggler cache — the zero-copy path of
+        //    `ServerEndpoint::collect_with`, so a steady-state round
+        //    allocates nothing per message.
         let mut have = vec![false; honest];
         let mut bad_len: Option<(usize, usize)> = None;
+        let mut malformed: u64 = 0;
         {
             let d = self.params.len();
             let grads = &mut self.grads;
             let last_good = &mut self.last_good;
             let have = &mut have;
             let bad_len = &mut bad_len;
+            let malformed = &mut malformed;
             self.server.collect_with(
                 round,
-                honest,
+                expect,
                 self.options.round_timeout,
                 |worker, gradient| {
                     if gradient.len() != d {
+                        // A malformed submission is a dropped message,
+                        // not a reason to abort training: the worker
+                        // falls through the straggler cache below. (A
+                        // single bad actor could otherwise DoS the run.)
+                        // Rejecting it (`false`) also keeps it from
+                        // filling a first-m quorum slot — the transport
+                        // keeps collecting honest gradients instead.
+                        *malformed += 1;
                         if bad_len.is_none() {
                             *bad_len = Some((worker, gradient.len()));
                         }
-                        return;
+                        return false;
                     }
                     grads.set_row(worker, gradient);
                     let cache = &mut last_good[worker];
@@ -288,14 +340,22 @@ impl Coordinator {
                         *cache = Some(gradient.to_vec());
                     }
                     have[worker] = true;
+                    true
                 },
             );
         }
-        if let Some((worker, len)) = bad_len {
-            anyhow::bail!(
-                "worker {worker} sent gradient of length {len} (d = {})",
-                self.dim()
-            );
+        if malformed > 0 {
+            self.metrics.add("gradients_malformed", malformed);
+            if !self.warned_malformed {
+                self.warned_malformed = true;
+                if let Some((worker, len)) = bad_len {
+                    eprintln!(
+                        "warning: worker {worker} sent a gradient of length {len} \
+                         (d = {}); treating malformed gradients as dropped",
+                        self.dim()
+                    );
+                }
+            }
         }
         let collected = have.iter().filter(|&&h| h).count();
 
@@ -472,6 +532,7 @@ mod tests {
                 round_timeout: Duration::from_secs(10),
                 schedule: LrSchedule::Fixed { base: 0.2 },
                 seed: 3,
+                collect: CollectMode::All,
             },
         )
         .unwrap();
@@ -602,6 +663,131 @@ mod tests {
         assert_eq!(coord.metrics.counter("gradients_missing"), 7);
         // Zero-gradient fallback: params unchanged.
         assert!(coord.params().iter().all(|&v| v == 0.0));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn malformed_gradient_is_a_drop_not_a_crash() {
+        // Regression (DoS): a wrong-length gradient used to abort the
+        // whole training run. It must now be treated as a dropped
+        // message — straggler fallback, a `gradients_malformed` count —
+        // and the round must keep aggregating the well-formed rows.
+        use crate::transport::{Emitter, WorkerBody};
+
+        struct BadLenBody;
+        impl WorkerBody for BadLenBody {
+            fn on_round(&mut self, round: u64, _p: &[f32], emit: &mut Emitter<'_>) {
+                emit.send(round, &[1.0, 2.0, 3.0]); // wrong length (d = 8)
+            }
+        }
+
+        let problem = Arc::new(QuadraticProblem::new(8, 0.05, 1));
+        let (server, workers) = star(7, FaultModel::default());
+        for (i, ep) in workers.into_iter().enumerate() {
+            if i == 2 {
+                ep.serve(BadLenBody);
+            } else {
+                ep.serve(crate::worker::GradWorker::new(GradSource::quadratic(
+                    Arc::clone(&problem),
+                    i,
+                    4,
+                )));
+            }
+        }
+        let mut coord = Coordinator::new(
+            GarKind::MultiKrum.instantiate(7, 1).unwrap(),
+            None,
+            0,
+            server,
+            vec![0.0; 8],
+            0.1,
+            0.0,
+            CoordinatorOptions {
+                // Short: the rejected gradient never fills the 7th
+                // wait-all slot, so every round waits this out.
+                round_timeout: Duration::from_millis(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for r in 1..=3u64 {
+            let out = coord.run_round().expect("malformed gradient must not abort");
+            assert_eq!(out.collected, 6, "round {r}");
+            assert_eq!(out.missing, 1, "round {r}");
+        }
+        assert_eq!(coord.metrics.counter("gradients_malformed"), 3);
+        assert_eq!(coord.metrics.counter("gradients_missing"), 3);
+        assert!(coord.params().iter().all(|v| v.is_finite()));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn malformed_gradient_does_not_displace_the_first_m_quorum() {
+        // Under first-m a rejected (wrong-length) gradient must not fill
+        // one of the m quorum slots — the transport keeps collecting
+        // honest gradients past it on both backends.
+        use crate::transport::{Emitter, WorkerBody};
+
+        struct BadLenBody;
+        impl WorkerBody for BadLenBody {
+            fn on_round(&mut self, round: u64, _p: &[f32], emit: &mut Emitter<'_>) {
+                emit.send(round, &[0.0]); // wrong length (d = 8)
+            }
+        }
+
+        for kind in TransportKind::ALL {
+            let problem = Arc::new(QuadraticProblem::new(8, 0.05, 1));
+            let (server, workers) =
+                build(kind, 7, FaultModel::default(), &Parallelism::new(2));
+            for (i, ep) in workers.into_iter().enumerate() {
+                if i == 0 {
+                    // The bad actor sits at the lowest index, where the
+                    // pooled backend delivers it first.
+                    ep.serve(BadLenBody);
+                } else {
+                    ep.serve(crate::worker::GradWorker::new(GradSource::quadratic(
+                        Arc::clone(&problem),
+                        i,
+                        4,
+                    )));
+                }
+            }
+            let mut coord = Coordinator::new(
+                GarKind::MultiKrum.instantiate(7, 1).unwrap(),
+                None,
+                0,
+                server,
+                vec![0.0; 8],
+                0.1,
+                0.0,
+                CoordinatorOptions {
+                    round_timeout: Duration::from_millis(500),
+                    collect: CollectMode::FirstM,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            // m = n − f = 6 = exactly the honest well-formed workers:
+            // all six must be collected despite the rejected delivery.
+            let out = coord.run_round().unwrap();
+            assert_eq!(out.collected, 6, "{kind}");
+            assert_eq!(out.missing, 1, "{kind}");
+            assert_eq!(coord.metrics.counter("gradients_malformed"), 1, "{kind}");
+            coord.shutdown();
+        }
+    }
+
+    #[test]
+    fn first_m_collects_m_and_caches_cover_the_rest() {
+        // n = 7, f = 2, byz = 0 ⇒ first-m waits for the fastest 5; the
+        // two slowest workers fall through the fallback path every round.
+        let (mut coord, _p) =
+            quadratic_cluster(7, 2, 0, GarKind::MultiKrum, AttackKind::None, 32, 0.05);
+        coord.set_collect(CollectMode::FirstM);
+        let out = coord.run_round().unwrap();
+        assert_eq!(out.collected, 5);
+        assert_eq!(out.missing, 2);
+        assert_eq!(coord.metrics.counter("gradients_missing"), 2);
         coord.shutdown();
     }
 

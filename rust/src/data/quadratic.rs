@@ -99,23 +99,50 @@ impl QuadraticProblem {
         par: &Parallelism,
         out: &mut Vec<f32>,
     ) {
+        out.clear();
+        out.resize(self.dim, 0.0);
+        shard_slice_stateless(par, out, MIN_COORDS_PER_SHARD, |offset, range| {
+            self.stochastic_gradient_range(params, batch_size, sample_seed, offset, range);
+        });
+    }
+
+    /// Fill `out` with coordinates `offset .. offset + out.len()` of the
+    /// same stochastic gradient [`stochastic_gradient_into`] computes —
+    /// the per-coordinate formula is a pure function of
+    /// `(problem seed, sample seed, coordinate)`, so any partition of the
+    /// coordinate space (a `shard_slice` fan-out, or the time-sliced
+    /// drive's incremental `StepBody` chunks) is bit-identical to the
+    /// one-shot computation.
+    ///
+    /// [`stochastic_gradient_into`]: Self::stochastic_gradient_into
+    pub fn stochastic_gradient_range(
+        &self,
+        params: &[f32],
+        batch_size: usize,
+        sample_seed: u64,
+        offset: usize,
+        out: &mut [f32],
+    ) {
         assert!(batch_size >= 1);
         assert_eq!(
             params.len(),
             self.dim,
             "stochastic_gradient: params have wrong dimension"
         );
+        assert!(
+            offset + out.len() <= self.dim,
+            "stochastic_gradient_range: range {}..{} out of 0..{}",
+            offset,
+            offset + out.len(),
+            self.dim
+        );
         let scale = self.noise / (batch_size as f32).sqrt();
         let base = self.seed ^ sample_seed.wrapping_mul(0x9E37_79B9);
-        out.clear();
-        out.resize(self.dim, 0.0);
         let optimum = &self.optimum;
-        shard_slice_stateless(par, out, MIN_COORDS_PER_SHARD, |offset, range| {
-            for (k, v) in range.iter_mut().enumerate() {
-                let j = offset + k;
-                *v = params[j] - optimum[j] + scale * gaussian_at(base, j as u64);
-            }
-        });
+        for (k, v) in out.iter_mut().enumerate() {
+            let j = offset + k;
+            *v = params[j] - optimum[j] + scale * gaussian_at(base, j as u64);
+        }
     }
 
     /// Per-coordinate gradient-noise std for a given batch size (σ of the
@@ -216,6 +243,26 @@ mod tests {
             p.stochastic_gradient_into(&x, 4, 21, &par, &mut out);
             assert_eq!(reference, out, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn range_chunks_reassemble_the_full_gradient_bit_identically() {
+        // Any chunking of the coordinate space (here: ragged chunks, the
+        // StepBody drive pattern) must equal the one-shot gradient.
+        let d = 1_037;
+        let p = QuadraticProblem::new(d, 0.6, 23);
+        let x: Vec<f32> = (0..d).map(|j| (j as f32 * 0.01).cos()).collect();
+        let reference = p.stochastic_gradient(&x, 3, 77);
+        let mut out = vec![0.0f32; d];
+        let mut offset = 0;
+        for (step, chunk) in [129usize, 1, 500, 300, 107].iter().enumerate() {
+            let end = (offset + chunk).min(d);
+            p.stochastic_gradient_range(&x, 3, 77, offset, &mut out[offset..end]);
+            offset = end;
+            assert!(offset <= d, "step {step}");
+        }
+        p.stochastic_gradient_range(&x, 3, 77, offset, &mut out[offset..]);
+        assert_eq!(reference, out);
     }
 
     #[test]

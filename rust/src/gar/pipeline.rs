@@ -51,6 +51,11 @@ pub struct ResilientMomentum {
     /// `n × d` momentum state, flat row-major; sized lazily on first
     /// apply (and re-zeroed if the cluster shape ever changes).
     state: Vec<f32>,
+    /// The `(n, d)` the state was sized for. Tracked explicitly — a
+    /// shape change with an equal product (n×d → d×n) must re-zero the
+    /// buffer too, not silently reuse stale momentum laid out for the
+    /// old shape.
+    shape: (usize, usize),
     par: Parallelism,
 }
 
@@ -63,6 +68,7 @@ impl ResilientMomentum {
         Ok(Self {
             beta,
             state: Vec::new(),
+            shape: (0, 0),
             par,
         })
     }
@@ -79,9 +85,10 @@ impl PreAggregate for ResilientMomentum {
 
     fn apply(&mut self, grads: &mut GradMatrix, _round: u64) -> Result<()> {
         let (n, d) = (grads.n(), grads.d());
-        if self.state.len() != n * d {
+        if self.shape != (n, d) {
             self.state.clear();
             self.state.resize(n * d, 0.0);
+            self.shape = (n, d);
         }
         let beta = self.beta;
         let keep = 1.0 - beta;
@@ -289,6 +296,26 @@ mod tests {
             last
         };
         assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn shape_change_with_equal_product_resets_state() {
+        // Regression: 2×6 → 6×2 keeps n·d = 12, so the old
+        // `state.len() != n*d` check skipped the re-zero and round 2 ran
+        // an EMA over momentum laid out for the wrong shape.
+        let mut stage = ResilientMomentum::new(0.5, Parallelism::sequential()).unwrap();
+        let mut g1 = GradMatrix::from_fn(2, 6, |_, _| 2.0);
+        stage.apply(&mut g1, 1).unwrap();
+        assert!(g1.flat().iter().all(|&v| v == 1.0), "m_1 = g/2");
+        let mut g2 = GradMatrix::from_fn(6, 2, |_, _| 2.0);
+        stage.apply(&mut g2, 2).unwrap();
+        // Fresh zero state for the new shape: (1−β)·g = 1.0 everywhere.
+        // Stale reuse would have produced β·1.0 + 0.5·2.0 = 1.5.
+        assert!(
+            g2.flat().iter().all(|&v| v == 1.0),
+            "stale momentum leaked across a shape change: {:?}",
+            &g2.flat()[..4]
+        );
     }
 
     #[test]

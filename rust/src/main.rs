@@ -87,11 +87,11 @@ USAGE:
                     [--byzantine B] [--model quadratic|mlp|cnn|transformer]
                     [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
                     [--eval-every K] [--seed S] [--threads T]
-                    [--transport threaded|pooled]
+                    [--transport threaded|pooled] [--collect first-m|all]
                     [--artifacts DIR] [--curve-out FILE]
   multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
-  multibulyan bench <fig2|fig3|dscaling|slowdown|threads|resilience|cone>
-                    [--full] [--artifacts DIR]
+  multibulyan bench <fig2|fig3|dscaling|slowdown|threads|straggler
+                     |resilience|cone> [--full] [--artifacts DIR]
   multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
   multibulyan artifacts-check [--artifacts DIR]
 
@@ -107,6 +107,10 @@ Threads: --threads 1 (sequential, default) | 0 (auto) | N (shared pool);
 Transport: --transport pooled (default; logical workers multiplexed over
          the shared pool — scales to 100+ workers) | threaded (one OS
          thread per worker); seeded runs are identical on either
+Collect: --collect all (default; wait for every honest worker up to the
+         round timeout) | first-m (the paper's synchronous model —
+         proceed at the fastest m = n − f gradients; stragglers fall
+         through the last-good cache)
 ";
 
 fn main() {
@@ -160,6 +164,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                     net_delay_us: 0,
                     drop_prob: 0.0,
                     round_timeout_ms: 60_000,
+                    ..Default::default()
                 },
                 gar: gar_spec.kind,
                 pre: gar_spec.stages,
@@ -187,6 +192,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 // below apply whenever the flags are present.
                 threads: 1,
                 transport: Default::default(),
+                collect: Default::default(),
                 output_dir: None,
             }
         }
@@ -200,6 +206,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(t) = args.get("transport") {
         exp.transport = t.parse()?;
     }
+    if let Some(c) = args.get("collect") {
+        exp.collect = c.parse()?;
+    }
     exp.validate()?;
     let compute = match &exp.model {
         ModelConfig::Artifact { dir, .. } => {
@@ -211,7 +220,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let handle = compute.as_ref().map(|(s, m)| (s.handle(), m.clone()));
     println!(
-        "training: gar={} attack={} n={} f={} byz={} steps={} b={} transport={}",
+        "training: gar={} attack={} n={} f={} byz={} steps={} b={} transport={} collect={}",
         exp.gar_spec(),
         exp.attack.label(),
         exp.cluster.n,
@@ -219,7 +228,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         exp.byzantine_count(),
         exp.train.steps,
         exp.train.batch_size,
-        exp.transport
+        exp.transport,
+        exp.collect
     );
     let cluster = launch(&exp, handle)?;
     let mut coordinator = cluster.coordinator;
@@ -357,6 +367,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 outcome.bail_on_failure()?;
             }
         }
+        "straggler" => {
+            // First-m vs wait-all round-tail latency under the
+            // deterministic straggler cost model, on both transports.
+            let mut cfg = bench::straggler::StragglerConfig::default();
+            if full {
+                cfg.n = 128;
+                cfg.f = 24;
+                cfg.stragglers = 8;
+                cfg.rounds = 40;
+            }
+            bench::straggler::run(&cfg, false)?;
+        }
         "resilience" => {
             let cfg = bench::resilience::GauntletConfig::default();
             bench::resilience::run(&cfg, false)?;
@@ -366,7 +388,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::cone::run(&cfg, false)?;
         }
         other => anyhow::bail!(
-            "unknown bench '{other}' (fig2|fig3|dscaling|slowdown|threads|resilience|cone|check)"
+            "unknown bench '{other}' \
+             (fig2|fig3|dscaling|slowdown|threads|straggler|resilience|cone|check)"
         ),
     }
     Ok(())

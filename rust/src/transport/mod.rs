@@ -28,10 +28,22 @@
 //!   worker — zero per-message allocations and zero channel sends on the
 //!   hot path, so 128–512 logical workers cost buffers, not OS threads.
 //!   The server *drives* the logical workers inside
-//!   [`ServerEndpoint::collect`]; a worker that would straggle past the
-//!   timeout cannot be preempted mid-computation, so straggler loss is
-//!   modelled via [`FaultModel::drop_prob`] (which exercises the same
-//!   server fallback path).
+//!   [`ServerEndpoint::collect`] with a **time-sliced drive**: bodies
+//!   advance in cost-bounded steps ([`WorkerBody::step_to`]) along a
+//!   virtual clock, gradients are delivered in **completion order** (the
+//!   slice a worker finished in, ties broken by worker index), and the
+//!   drive stops as soon as `expect` gradients arrived or the timeout —
+//!   interpreted in *virtual* microseconds — expires. A straggler under
+//!   the [`ComputeCost`] model is therefore preempted mid-computation
+//!   exactly like a real slow machine racing a deadline, and its
+//!   remaining work is never executed (the first-m latency win is real
+//!   CPU time, not bookkeeping).
+//!
+//! Straggler *races* are driven by the deterministic per-worker
+//! [`ComputeCost`] model: on the pooled backend cost is virtual time (a
+//! seeded run is bit-identical for every thread count), on the threaded
+//! backend the same cost is a real pre-compute sleep, so both backends
+//! leave the same workers behind when the cost gaps are decisive.
 //!
 //! Both backends preserve the same observable semantics: broadcast →
 //! collect with timeout, fault-model delay/drop on the worker → server
@@ -71,6 +83,102 @@ pub struct FaultModel {
     pub drop_prob: f64,
     /// Seed for the fault RNG.
     pub seed: u64,
+    /// Deterministic per-worker simulated compute cost (straggler model).
+    pub cost: ComputeCost,
+}
+
+/// Deterministic per-worker simulated compute-cost model — the straggler
+/// knob. A worker's per-round gradient computation is assigned a cost in
+/// *simulated microseconds*: on the pooled backend the cost is pure
+/// virtual time (the time-sliced drive advances every worker along a
+/// shared virtual clock, so races against the collect deadline are
+/// bit-reproducible for every thread count); on the threaded backend the
+/// same cost is a real `thread::sleep` before the gradient computation,
+/// so stragglers race the wall-clock timeout for real. With decisive cost
+/// gaps both backends leave the same workers behind, keeping seeded runs
+/// transport-independent.
+///
+/// Cross-backend bit-identity caveat: a pooled straggler abandoned
+/// mid-round never reaches `Emitter::send`, so its fault RNG is not
+/// advanced, while the threaded worker eventually emits a (discarded)
+/// stale message and does draw. The two backends therefore stay
+/// bit-identical under the cost model as long as the fault RNG is inert
+/// (`drop_prob = 0` and `delay_us = 0`, the usual straggler-experiment
+/// setting) or no worker is ever abandoned; combining first-m races with
+/// message drops makes the drop *pattern* — not the physics —
+/// backend-dependent.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ComputeCost {
+    /// Baseline per-round compute cost in simulated microseconds
+    /// (0 disables the model entirely: every worker completes in the
+    /// first drive slice, the pre-cost-model behaviour).
+    pub base_us: u64,
+    /// The first `slow_workers` worker ids are stragglers. (Low indices
+    /// are deliberately the slow ones: a collection path that favours
+    /// low-index workers — the pre-time-slice pooled scan did — is
+    /// immediately caught by the cross-backend tests.)
+    pub slow_workers: usize,
+    /// Cost multiplier for stragglers (clamped to ≥ 1).
+    pub slow_factor: f32,
+}
+
+impl ComputeCost {
+    /// Simulated compute cost of one round for `worker`, microseconds.
+    pub fn cost_us_for(&self, worker: usize) -> u64 {
+        if self.base_us == 0 {
+            return 0;
+        }
+        if worker < self.slow_workers {
+            (self.base_us as f64 * f64::from(self.slow_factor.max(1.0))).round() as u64
+        } else {
+            self.base_us
+        }
+    }
+}
+
+/// How many gradients a round's collection waits for (the `collect`
+/// config knob / `--collect` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CollectMode {
+    /// Wait (up to the round timeout) for every honest worker — the
+    /// conservative default; stragglers are only lost to the timeout or
+    /// the fault model.
+    #[default]
+    All,
+    /// The paper's synchronous model (§I, and Blanchard et al. 2017):
+    /// return as soon as the fastest `m = n − f` gradients arrived;
+    /// stragglers fall through the server's last-good cache. This is what
+    /// exhibits the m/n slowdown the paper proves.
+    FirstM,
+}
+
+impl CollectMode {
+    pub const ALL: [CollectMode; 2] = [CollectMode::All, CollectMode::FirstM];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CollectMode::All => "all",
+            CollectMode::FirstM => "first-m",
+        }
+    }
+}
+
+impl std::fmt::Display for CollectMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for CollectMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "all" => Ok(CollectMode::All),
+            "first-m" | "first_m" | "firstm" => Ok(CollectMode::FirstM),
+            other => anyhow::bail!("unknown collect mode '{other}' (first-m|all)"),
+        }
+    }
 }
 
 impl FaultModel {
@@ -137,6 +245,46 @@ impl std::str::FromStr for TransportKind {
 /// (the pool is not reentrant — see `runtime::pool`).
 pub trait WorkerBody: Send {
     fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>);
+
+    /// Cost-bounded stepping — how the pooled backend's time-sliced drive
+    /// runs a body. `target ∈ [0, 1]` is the fraction of this round's
+    /// work the body should have completed when the call returns; it is
+    /// monotone within a round (the drive derives it from the virtual
+    /// clock and the worker's [`ComputeCost`]). A call with a *new*
+    /// `round` abandons any partial work from the previous round (the
+    /// drive may stop stepping a straggler mid-round once enough
+    /// gradients arrived — that abandoned work is never executed).
+    /// `target = 1.0` must finish the round and emit.
+    ///
+    /// The default implementation cannot chunk the computation, so it
+    /// defers *all* work to the completing call (`target ≥ 1.0`): the
+    /// worker still finishes at the right virtual time, and an abandoned
+    /// round costs nothing. Chunkable bodies (the quadratic
+    /// [`GradWorker`](crate::worker::GradWorker)) override this to spread
+    /// the real work across slices.
+    fn step_to(
+        &mut self,
+        round: u64,
+        params: &[f32],
+        emit: &mut Emitter<'_>,
+        target: f64,
+    ) -> StepOutcome {
+        if target >= 1.0 {
+            self.on_round(round, params, emit);
+            StepOutcome::Done
+        } else {
+            StepOutcome::Working
+        }
+    }
+}
+
+/// What one [`WorkerBody::step_to`] call left behind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The round's computation is still in progress; step again.
+    Working,
+    /// The round is finished (and emitted, unless dropped/silent).
+    Done,
 }
 
 /// The worker-side reply channel handed to [`WorkerBody::on_round`].
@@ -222,11 +370,21 @@ impl ServerEndpoint {
 
     /// Collect up to `expect` gradients for `round`, calling
     /// `on_gradient(worker, gradient)` for each as it arrives; returns the
-    /// number delivered. Stale-round gradients are discarded. The threaded
-    /// backend waits up to `timeout` for stragglers; the pooled backend
-    /// runs its logical workers to completion inside this call (see the
-    /// module docs on straggler semantics), so fewer than `expect`
-    /// deliveries mean fault-model drops, not a race.
+    /// number accepted. The callback returns whether it *accepted* the
+    /// gradient — a `false` (e.g. a malformed submission the server
+    /// rejects) consumes the message but does not count toward `expect`,
+    /// so a persistent bad actor cannot displace honest gradients from a
+    /// first-m quorum. Stale-round gradients are discarded. Both
+    /// backends honour the deadline and both return early once `expect`
+    /// gradients were accepted — the first-m race of the paper's
+    /// synchronous model: the threaded backend waits on real messages up
+    /// to the wall-clock `timeout`; the pooled backend time-slices its
+    /// logical workers along a virtual clock, delivers in completion
+    /// order, and interprets `timeout` in *virtual* microseconds against
+    /// the [`ComputeCost`] model (so a seeded race is bit-reproducible —
+    /// a worker whose simulated cost exceeds the timeout
+    /// deterministically misses the round, and a straggler abandoned
+    /// mid-round never executes its remaining work).
     ///
     /// This is the zero-copy path: `gradient` borrows transport-owned
     /// memory, so a full round makes no per-message allocation on the
@@ -236,7 +394,7 @@ impl ServerEndpoint {
         round: u64,
         expect: usize,
         timeout: Duration,
-        mut on_gradient: impl FnMut(usize, &[f32]),
+        mut on_gradient: impl FnMut(usize, &[f32]) -> bool,
     ) -> usize {
         match &mut self.inner {
             ServerImpl::Threaded(s) => s.collect_with(round, expect, timeout, &mut on_gradient),
@@ -245,8 +403,9 @@ impl ServerEndpoint {
     }
 
     /// Owned-message convenience wrapper over
-    /// [`collect_with`](Self::collect_with) (allocates per message; the
-    /// coordinator hot path uses `collect_with` directly).
+    /// [`collect_with`](Self::collect_with) (allocates per message and
+    /// accepts everything; the coordinator hot path uses `collect_with`
+    /// directly).
     pub fn collect(&mut self, round: u64, expect: usize, timeout: Duration) -> Vec<FromWorker> {
         let mut got = Vec::with_capacity(expect);
         self.collect_with(round, expect, timeout, |worker, gradient| {
@@ -255,6 +414,7 @@ impl ServerEndpoint {
                 round,
                 gradient: gradient.to_vec(),
             });
+            true
         });
         got
     }
@@ -641,6 +801,188 @@ mod tests {
         server.shutdown();
         server.broadcast(2, Arc::new(vec![0.0]));
         assert!(server.collect(2, 4, Duration::from_millis(10)).is_empty());
+    }
+
+    #[test]
+    fn first_m_returns_the_fastest_workers_on_both_backends() {
+        // Workers 0 and 1 are 40× stragglers; a first-m collect of 4 out
+        // of 6 must deliver exactly the fast ones — on the pooled backend
+        // by virtual time, on the threaded backend by a real race (the
+        // 40× sleep gap makes the race's outcome deterministic).
+        on_both(|kind| {
+            let faults = FaultModel {
+                cost: ComputeCost {
+                    base_us: 500,
+                    slow_workers: 2,
+                    slow_factor: 40.0,
+                },
+                ..Default::default()
+            };
+            let mut server = harness(kind, 6, faults, |id, round, _p, emit| {
+                emit.send(round, &[id as f32]);
+            });
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let got = server.collect(1, 4, Duration::from_secs(5));
+            let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![2, 3, 4, 5], "{kind}");
+            server.shutdown();
+        });
+    }
+
+    #[test]
+    fn pooled_first_m_is_deterministic_across_thread_counts() {
+        let run = |threads: usize| -> Vec<usize> {
+            let faults = FaultModel {
+                cost: ComputeCost {
+                    base_us: 300,
+                    slow_workers: 3,
+                    slow_factor: 10.0,
+                },
+                ..Default::default()
+            };
+            let (mut server, workers) =
+                star_pooled(8, faults, &Parallelism::new(threads));
+            for w in workers {
+                let id = w.id();
+                w.serve(TestBody {
+                    id,
+                    f: |id, round, _p, emit| emit.send(round, &[id as f32]),
+                });
+            }
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let ids = server
+                .collect(1, 5, Duration::from_secs(5))
+                .iter()
+                .map(|m| m.worker)
+                .collect();
+            server.shutdown();
+            ids
+        };
+        let reference = run(1);
+        assert_eq!(reference, vec![3, 4, 5, 6, 7], "fast tier, index order");
+        assert_eq!(reference, run(2));
+        assert_eq!(reference, run(4));
+    }
+
+    #[test]
+    fn pooled_delivers_in_completion_order_not_index_order() {
+        // Stragglers sit at the LOW indices, so index-order delivery
+        // (the pre-time-slice scan) would lead with them; completion
+        // order must lead with the fast tier.
+        let faults = FaultModel {
+            cost: ComputeCost {
+                base_us: 400,
+                slow_workers: 2,
+                slow_factor: 8.0,
+            },
+            ..Default::default()
+        };
+        let mut server = harness(TransportKind::Pooled, 5, faults, |id, round, _p, emit| {
+            emit.send(round, &[id as f32]);
+        });
+        server.broadcast(1, Arc::new(vec![0.0]));
+        let ids: Vec<usize> = server
+            .collect(1, 5, Duration::from_secs(5))
+            .iter()
+            .map(|m| m.worker)
+            .collect();
+        assert_eq!(ids, vec![2, 3, 4, 0, 1]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn straggler_past_the_timeout_misses_the_round_on_both_backends() {
+        // Wait-all collect with a timeout between the fast tier's cost
+        // (1 ms) and the stragglers' (50 ms): both backends must leave
+        // exactly the stragglers behind — virtually on pooled, by a real
+        // wall-clock race on threaded.
+        on_both(|kind| {
+            let faults = FaultModel {
+                cost: ComputeCost {
+                    base_us: 1_000,
+                    slow_workers: 2,
+                    slow_factor: 50.0,
+                },
+                ..Default::default()
+            };
+            let mut server = harness(kind, 6, faults, |id, round, _p, emit| {
+                emit.send(round, &[id as f32]);
+            });
+            server.broadcast(1, Arc::new(vec![0.0]));
+            let got = server.collect(1, 6, Duration::from_millis(10));
+            let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![2, 3, 4, 5], "{kind}");
+            server.shutdown();
+        });
+    }
+
+    #[test]
+    fn abandoned_round_restarts_cleanly_on_the_next_broadcast() {
+        // Round 1 abandons the straggler mid-computation (first-m met);
+        // round 2 with a long timeout must still get a correct round-2
+        // gradient from it — the partial round-1 work is discarded.
+        let faults = FaultModel {
+            cost: ComputeCost {
+                base_us: 200,
+                slow_workers: 1,
+                slow_factor: 30.0,
+            },
+            ..Default::default()
+        };
+        let mut server = harness(TransportKind::Pooled, 3, faults, |id, round, _p, emit| {
+            emit.send(round, &[round as f32 * 10.0 + id as f32]);
+        });
+        server.broadcast(1, Arc::new(vec![0.0]));
+        let got = server.collect(1, 2, Duration::from_secs(5));
+        let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        server.broadcast(2, Arc::new(vec![0.0]));
+        let got = server.collect(2, 3, Duration::from_secs(5));
+        assert_eq!(got.len(), 3);
+        for m in &got {
+            assert_eq!(m.gradient, vec![20.0 + m.worker as f32], "round-2 value");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn compute_cost_model_is_deterministic_per_worker() {
+        let cost = ComputeCost {
+            base_us: 100,
+            slow_workers: 2,
+            slow_factor: 10.0,
+        };
+        assert_eq!(cost.cost_us_for(0), 1_000);
+        assert_eq!(cost.cost_us_for(1), 1_000);
+        assert_eq!(cost.cost_us_for(2), 100);
+        // base 0 disables the model for every worker.
+        let off = ComputeCost {
+            base_us: 0,
+            slow_workers: 2,
+            slow_factor: 10.0,
+        };
+        assert_eq!(off.cost_us_for(0), 0);
+        // factor below 1 is clamped (a "straggler" is never faster).
+        let clamped = ComputeCost {
+            base_us: 100,
+            slow_workers: 1,
+            slow_factor: 0.5,
+        };
+        assert_eq!(clamped.cost_us_for(0), 100);
+    }
+
+    #[test]
+    fn collect_mode_parses_and_displays() {
+        assert_eq!("first-m".parse::<CollectMode>().unwrap(), CollectMode::FirstM);
+        assert_eq!("all".parse::<CollectMode>().unwrap(), CollectMode::All);
+        assert!("most".parse::<CollectMode>().is_err());
+        assert_eq!(CollectMode::default(), CollectMode::All);
+        for mode in CollectMode::ALL {
+            assert_eq!(mode.as_str().parse::<CollectMode>().unwrap(), mode);
+        }
     }
 
     #[test]

@@ -11,12 +11,33 @@
 //!   so slots never contend; the per-slot `Mutex` is uncontended and exists
 //!   to keep the server/worker hand-off safe without `unsafe`.
 //!
-//! [`Server::collect_with`] *drives* the round: it fans the registered
-//! worker bodies out over the pool (`run_sharded`, dynamic claiming — load
-//! balance for uneven gradient costs), each body writes its slot through
-//! the fault-model [`Emitter`](super::Emitter), and the server then scans
-//! the arena. Steady state: zero allocations, zero channel operations,
-//! zero thread spawns per round.
+//! [`Server::collect_with`] *drives* the round with a **time-sliced
+//! drive**: a virtual clock advances in [`SLICE_US`]-microsecond slices,
+//! and in each slice every still-running worker body is stepped
+//! ([`WorkerBody::step_to`]) to the completed-work fraction its
+//! [`ComputeCost`](super::ComputeCost) implies at the current virtual
+//! time. Bodies that finish a slice emit through the fault-model
+//! [`Emitter`](super::Emitter) and are delivered immediately, in
+//! **completion order** (finishing slice, ties broken by ascending worker
+//! index — the order a real parameter server would see arrivals). The
+//! drive stops as soon as
+//!
+//! * `expect` gradients have been delivered (the first-m race: stragglers
+//!   are abandoned mid-computation and their remaining work is never
+//!   executed), or
+//! * the collect timeout — interpreted in virtual microseconds — expires
+//!   (a worker whose simulated cost exceeds the timeout deterministically
+//!   misses the round), or
+//! * every worker finished.
+//!
+//! Because the clock is virtual and the per-slice step order never feeds
+//! back into the results, a seeded run is bit-identical for every thread
+//! count, and identical to the threaded backend whenever the cost gaps
+//! are decisive. With the cost model disabled (`base_us = 0`) every
+//! worker completes in the first slice and the drive degenerates to the
+//! old run-to-completion fan-out. Steady state: zero allocations, zero
+//! channel operations, zero thread spawns per round (the drive's
+//! `running`/`done` scratch is reused across rounds).
 //!
 //! Because bodies run *on* the pool, a body must not submit nested
 //! parallel regions to the same pool (see `runtime::pool` reentrancy
@@ -24,14 +45,22 @@
 //! for their intra-gradient sharding.
 //!
 //! [`ThreadPool`]: crate::runtime::ThreadPool
+//! [`WorkerBody::step_to`]: super::WorkerBody::step_to
 
-use super::{lock, Emitter, EmitterSink, FaultModel, WorkerBody};
+use super::{lock, Emitter, EmitterSink, FaultModel, StepOutcome, WorkerBody};
 use crate::runtime::Parallelism;
 use crate::util::Rng64;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Virtual-clock granularity of the time-sliced drive, microseconds. One
+/// slice is one pool fan-out over the still-running workers; smaller
+/// slices resolve finer cost differences at more fan-out overhead. Cost
+/// models are expressed in hundreds-to-thousands of µs, so 50 µs keeps
+/// quantisation error under a few percent.
+const SLICE_US: u64 = 50;
 
 /// One worker's arena slot: the last gradient it emitted, tagged with the
 /// round it answers. `fresh` is cleared when the server consumes the slot
@@ -50,8 +79,9 @@ struct Driver {
 }
 
 /// Per-worker cell. The two Mutexes are uncontended by construction —
-/// exactly one pool task touches worker `i` during a drive, and the
-/// server only reads slots after the drive's completion barrier.
+/// exactly one pool task touches worker `i` during a drive slice, and the
+/// server only reads slots between slices (after the slice's completion
+/// barrier).
 struct Cell {
     driver: Mutex<Option<Driver>>,
     slot: Mutex<GradSlot>,
@@ -65,40 +95,15 @@ struct Runtime {
     shutdown: AtomicBool,
 }
 
-impl Runtime {
-    /// Run every registered body for `round` across the pool and let it
-    /// write its arena slot. Blocks until all logical workers finished.
-    fn drive(&self, round: u64, params: &Arc<Vec<f32>>) {
-        if self.shutdown.load(Ordering::Acquire) {
-            return;
-        }
-        let params: &[f32] = params;
-        self.par.run_sharded(self.cells.len(), &|i| {
-            let cell = &self.cells[i];
-            let mut guard = lock(&cell.driver);
-            let panicked = match guard.as_mut() {
-                None => false,
-                Some(driver) => {
-                    let Driver { body, rng } = driver;
-                    let mut emit = Emitter {
-                        worker: i,
-                        faults: self.faults,
-                        rng,
-                        sink: EmitterSink::Slot(&cell.slot),
-                    };
-                    catch_unwind(AssertUnwindSafe(|| body.on_round(round, params, &mut emit)))
-                        .is_err()
-                }
-            };
-            if panicked {
-                // Crash-fault semantics, matching the threaded backend
-                // where a panicking body kills only its worker thread:
-                // silence this logical worker permanently and let the
-                // server's missing-gradient fallback handle it.
-                *guard = None;
-            }
-        });
-    }
+/// The server's reusable drive scratch (no per-round allocation in the
+/// steady state).
+#[derive(Default)]
+struct DriveState {
+    /// Worker ids still computing this round, ascending; compacted as
+    /// workers finish.
+    running: Vec<usize>,
+    /// Per-worker finished flag for the current slice's fan-out.
+    done: Vec<AtomicBool>,
 }
 
 /// Pooled server half.
@@ -108,6 +113,7 @@ pub(super) struct Server {
     /// next `collect_with`. A re-broadcast before a collect supersedes the
     /// previous round — the synchronous coordinator never does this.
     pending: Option<(u64, Arc<Vec<f32>>)>,
+    drive: DriveState,
 }
 
 impl Server {
@@ -119,16 +125,17 @@ impl Server {
         &mut self,
         round: u64,
         expect: usize,
-        _timeout: Duration,
-        on_gradient: &mut dyn FnMut(usize, &[f32]),
+        timeout: Duration,
+        on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
     ) -> usize {
-        // The logical workers run to completion here, so the timeout has
-        // nothing left to bound: a missing gradient is a fault-model drop
-        // (or a silent body), never an un-preempted straggler.
-        if let Some((r, params)) = self.pending.take() {
-            self.runtime.drive(r, &params);
-        }
         let mut got = 0;
+        if let Some((r, params)) = self.pending.take() {
+            got = self.drive_collect(r, &params, round, expect, timeout, on_gradient);
+        }
+        // Sweep any remaining fresh slots for `round` in worker-index
+        // order: completion-order ties past `expect` that a retried
+        // collect may still want, or a collect without a preceding
+        // broadcast. Normally finds nothing.
         for (i, cell) in self.runtime.cells.iter().enumerate() {
             if got >= expect {
                 break;
@@ -136,8 +143,127 @@ impl Server {
             let mut slot = lock(&cell.slot);
             if slot.fresh && slot.round == round {
                 slot.fresh = false;
-                on_gradient(i, &slot.grad);
-                got += 1;
+                if on_gradient(i, &slot.grad) {
+                    got += 1;
+                }
+            }
+        }
+        got
+    }
+
+    /// The time-sliced drive (module docs): run round `drive_round` at
+    /// `params` across the pool, delivering gradients for `collect_round`
+    /// in completion order until `expect` arrived, the virtual deadline
+    /// passed, or everyone finished. Returns the number delivered.
+    fn drive_collect(
+        &mut self,
+        drive_round: u64,
+        params: &Arc<Vec<f32>>,
+        collect_round: u64,
+        expect: usize,
+        timeout: Duration,
+        on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
+    ) -> usize {
+        let rt = Arc::clone(&self.runtime);
+        if rt.shutdown.load(Ordering::Acquire) {
+            return 0;
+        }
+        let n = rt.cells.len();
+        let drive = &mut self.drive;
+        drive.running.clear();
+        drive.running.extend(0..n);
+        while drive.done.len() < n {
+            drive.done.push(AtomicBool::new(false));
+        }
+        let params: &[f32] = params;
+        // The timeout bounds *virtual* time; the wall-clock deadline below
+        // is only a safety net against pathological real compute costs.
+        let virtual_deadline = timeout.as_micros().min(u128::from(u64::MAX)) as u64;
+        let wall_deadline = Instant::now().checked_add(timeout);
+        let mut t_virtual: u64 = 0;
+        let mut got = 0;
+        while !drive.running.is_empty() && got < expect {
+            t_virtual = t_virtual.saturating_add(SLICE_US);
+            {
+                let running = &drive.running[..];
+                let done = &drive.done[..];
+                rt.par.run_sharded(running.len(), &|k| {
+                    let i = running[k];
+                    let cell = &rt.cells[i];
+                    let mut guard = lock(&cell.driver);
+                    let (finished, panicked) = match guard.as_mut() {
+                        // Unregistered or silenced: nothing to drive.
+                        None => (true, false),
+                        Some(driver) => {
+                            let cost = rt.faults.cost.cost_us_for(i);
+                            let target = if cost == 0 {
+                                1.0
+                            } else {
+                                (t_virtual as f64 / cost as f64).min(1.0)
+                            };
+                            let Driver { body, rng } = driver;
+                            let mut emit = Emitter {
+                                worker: i,
+                                faults: rt.faults,
+                                rng,
+                                sink: EmitterSink::Slot(&cell.slot),
+                            };
+                            match catch_unwind(AssertUnwindSafe(|| {
+                                body.step_to(drive_round, params, &mut emit, target)
+                            })) {
+                                Ok(StepOutcome::Done) => (true, false),
+                                Ok(StepOutcome::Working) => (false, false),
+                                Err(_) => (true, true),
+                            }
+                        }
+                    };
+                    if panicked {
+                        // Crash-fault semantics, matching the threaded
+                        // backend where a panicking body kills only its
+                        // worker thread: silence this logical worker
+                        // permanently and let the server's
+                        // missing-gradient fallback handle it.
+                        *guard = None;
+                    }
+                    done[i].store(finished, Ordering::Release);
+                });
+            }
+            // Harvest: deliver this slice's finishers in ascending worker
+            // index (completion order = finishing slice, then index) and
+            // compact `running` in place (`retain` visits front-to-back
+            // and preserves order).
+            {
+                let done = &drive.done;
+                let cells = &rt.cells;
+                drive.running.retain(|&i| {
+                    if !done[i].load(Ordering::Acquire) {
+                        return true;
+                    }
+                    if got < expect {
+                        let mut slot = lock(&cells[i].slot);
+                        if slot.fresh && slot.round == collect_round {
+                            slot.fresh = false;
+                            // A rejected gradient (callback returns
+                            // false) is consumed but does not fill an
+                            // `expect` slot.
+                            if on_gradient(i, &slot.grad) {
+                                got += 1;
+                            }
+                        }
+                    }
+                    false
+                });
+            }
+            if t_virtual >= virtual_deadline {
+                break; // stragglers deterministically miss the round
+            }
+            if rt.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            if let Some(deadline) = wall_deadline {
+                if Instant::now() >= deadline {
+                    break; // wall-clock safety net
+                }
             }
         }
         got
@@ -208,6 +334,7 @@ pub(super) fn star(
         Server {
             runtime,
             pending: None,
+            drive: DriveState::default(),
         },
         handles,
     )

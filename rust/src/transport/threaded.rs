@@ -1,7 +1,10 @@
 //! The thread-per-worker backend: one OS thread plus a pair of std-mpsc
 //! channels per worker — the faithful-asynchrony simulation (workers race
-//! the collect timeout for real). See the module docs in
-//! [`super`](crate::transport) for how it compares to the pooled backend.
+//! the collect timeout for real). The [`ComputeCost`](super::ComputeCost)
+//! model manifests here as a real pre-compute sleep, so a straggler's
+//! race against the wall-clock deadline is physical, not simulated. See
+//! the module docs in [`super`](crate::transport) for how it compares to
+//! the pooled backend.
 
 use super::{Emitter, EmitterSink, FaultModel, FromWorker, WorkerBody};
 use std::sync::mpsc;
@@ -38,7 +41,7 @@ impl Server {
         round: u64,
         expect: usize,
         timeout: Duration,
-        on_gradient: &mut dyn FnMut(usize, &[f32]),
+        on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
     ) -> usize {
         let mut got = 0;
         let deadline = Instant::now() + timeout;
@@ -49,8 +52,11 @@ impl Server {
             }
             match self.from_workers.recv_timeout(remaining) {
                 Ok(msg) if msg.round == round => {
-                    on_gradient(msg.worker, &msg.gradient);
-                    got += 1;
+                    // A rejected gradient (callback returns false) is
+                    // consumed but does not fill an `expect` slot.
+                    if on_gradient(msg.worker, &msg.gradient) {
+                        got += 1;
+                    }
                 }
                 Ok(_stale) => continue,
                 Err(_) => break,
@@ -93,12 +99,19 @@ impl Worker {
             faults,
         } = self;
         let mut rng = faults.rng_for(id);
+        // Simulated compute cost: on this backend the worker really is
+        // slow — it sleeps its cost before computing, racing the server's
+        // wall-clock collect deadline like a genuinely loaded machine.
+        let cost_us = faults.cost.cost_us_for(id);
         std::thread::Builder::new()
             .name(format!("worker-{id}"))
             .spawn(move || {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         ToWorker::Round { round, params } => {
+                            if cost_us > 0 {
+                                std::thread::sleep(Duration::from_micros(cost_us));
+                            }
                             let mut emit = Emitter {
                                 worker: id,
                                 faults,

@@ -25,10 +25,20 @@
 
 use crate::data::{shard_indices, Batch, FashionLike, QuadraticProblem, TokenStream, IMAGE_DIM};
 use crate::runtime::{ArgValue, ComputeHandle, Parallelism};
-use crate::transport::{Emitter, WorkerBody, WorkerEndpoint};
+use crate::transport::{Emitter, StepOutcome, WorkerBody, WorkerEndpoint};
 use crate::util::Rng64;
 use crate::Result;
 use std::sync::Arc;
+
+/// The minibatch seed mixes (round, worker) so workers draw independent
+/// minibatches each round, deterministically — shared by the one-shot and
+/// the time-sliced (chunked) gradient paths, which must agree bit for
+/// bit.
+fn quadratic_round_seed(round: u64, worker_id: usize) -> u64 {
+    round
+        .wrapping_mul(0x517C_C1B7_2722_0A95)
+        .wrapping_add(worker_id as u64)
+}
 
 /// Where a worker's gradients come from.
 pub enum GradSource {
@@ -85,11 +95,7 @@ impl GradSource {
                 batch_size,
                 par,
             } => {
-                // Seed mixes (round, worker) so workers draw independent
-                // minibatches each round, deterministically.
-                let seed = round
-                    .wrapping_mul(0x517C_C1B7_2722_0A95)
-                    .wrapping_add(*worker_id as u64);
+                let seed = quadratic_round_seed(round, *worker_id);
                 problem.stochastic_gradient_into(params, *batch_size, seed, par, out);
                 Ok(problem.loss(params))
             }
@@ -257,11 +263,27 @@ impl GradSource {
     }
 }
 
+/// The cost-bounded stepping cursor of the time-sliced drive (transport
+/// `pooled`): which round is in flight and how many coordinates of the
+/// chunked quadratic gradient have been computed so far. The chunks
+/// partition the coordinate space exactly like a `shard_slice` fan-out
+/// does, and the quadratic noise is counter-seeded per coordinate, so the
+/// incremental computation is bit-identical to the one-shot
+/// [`GradSource::gradient_into`] path.
+#[derive(Default)]
+struct StepBody {
+    round: u64,
+    /// Coordinates `0..done` of `round`'s gradient are computed.
+    done: usize,
+    started: bool,
+}
+
 /// The honest worker body: answer every round from a [`GradSource`],
 /// reusing one gradient buffer across rounds.
 pub struct GradWorker {
     source: GradSource,
     buf: Vec<f32>,
+    step: StepBody,
 }
 
 impl GradWorker {
@@ -269,6 +291,7 @@ impl GradWorker {
         Self {
             source,
             buf: Vec::new(),
+            step: StepBody::default(),
         }
     }
 }
@@ -281,6 +304,64 @@ impl WorkerBody for GradWorker {
             // worker: stay silent, let the server's timeout path handle
             // it.
             Err(_) => {}
+        }
+    }
+
+    fn step_to(
+        &mut self,
+        round: u64,
+        params: &[f32],
+        emit: &mut Emitter<'_>,
+        target: f64,
+    ) -> StepOutcome {
+        // Only the rust-native quadratic source can be preempted
+        // mid-gradient; PJRT-backed artifact executions are atomic, so
+        // they keep the default defer-to-completion stepping.
+        if !matches!(self.source, GradSource::Quadratic { .. }) {
+            return if target >= 1.0 {
+                self.on_round(round, params, emit);
+                StepOutcome::Done
+            } else {
+                StepOutcome::Working
+            };
+        }
+        let GradSource::Quadratic {
+            problem,
+            worker_id,
+            batch_size,
+            ..
+        } = &self.source
+        else {
+            unreachable!("checked above");
+        };
+        let d = problem.dim();
+        if !self.step.started || self.step.round != round {
+            // New round (or an abandoned one): discard partial work.
+            self.step = StepBody {
+                round,
+                done: 0,
+                started: true,
+            };
+            self.buf.clear();
+            self.buf.resize(d, 0.0);
+        }
+        let goal = ((target.clamp(0.0, 1.0) * d as f64).floor() as usize).min(d);
+        if goal > self.step.done {
+            let seed = quadratic_round_seed(round, *worker_id);
+            problem.stochastic_gradient_range(
+                params,
+                *batch_size,
+                seed,
+                self.step.done,
+                &mut self.buf[self.step.done..goal],
+            );
+            self.step.done = goal;
+        }
+        if target >= 1.0 && self.step.done == d {
+            emit.send(round, &self.buf);
+            StepOutcome::Done
+        } else {
+            StepOutcome::Working
         }
     }
 }

@@ -143,6 +143,7 @@ fn training_through_pjrt_learns_under_attack() {
             net_delay_us: 0,
             drop_prob: 0.0,
             round_timeout_ms: 60_000,
+            ..Default::default()
         },
         gar: GarKind::MultiBulyan,
         pre: Vec::new(),
@@ -161,6 +162,7 @@ fn training_through_pjrt_learns_under_attack() {
         },
         threads: 1,
         transport: Default::default(),
+        collect: Default::default(),
         output_dir: None,
     };
     let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();

@@ -23,6 +23,7 @@ fn quadratic_exp(
             net_delay_us: 0,
             drop_prob: 0.0,
             round_timeout_ms: 60_000,
+            ..Default::default()
         },
         gar,
         pre: Vec::new(),
@@ -41,6 +42,7 @@ fn quadratic_exp(
         },
         threads: 1,
         transport: Default::default(),
+        collect: Default::default(),
         output_dir: None,
     }
 }

@@ -19,6 +19,7 @@ fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) 
             net_delay_us: 0,
             drop_prob: 0.0,
             round_timeout_ms: 60_000,
+            ..Default::default()
         },
         gar: GarKind::MultiKrum,
         pre: Vec::new(),
@@ -37,6 +38,7 @@ fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) 
         },
         threads: 2,
         transport: TransportKind::Pooled,
+        collect: Default::default(),
         output_dir: None,
     }
 }

@@ -1,0 +1,154 @@
+//! Straggler-race integration tests for deadline-aware first-m
+//! collection: a seeded run with a deterministic per-worker compute-cost
+//! model must collect the same gradients — and land on bit-identical
+//! parameters — on the time-sliced pooled backend (virtual-time races)
+//! and the threaded backend (real wall-clock races), at every thread
+//! count; stragglers left behind by first-m are recovered through the
+//! last-good cache.
+
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::launch;
+use multibulyan::gar::GarKind;
+use multibulyan::transport::{CollectMode, TransportKind};
+
+fn straggler_exp(
+    n: usize,
+    f: usize,
+    stragglers: usize,
+    collect: CollectMode,
+    transport: TransportKind,
+    threads: usize,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        cluster: ClusterConfig {
+            n,
+            f,
+            actual_byzantine: Some(0),
+            round_timeout_ms: 60_000,
+            // Decisive cost gap: the slow tier is 25× the fast tier, so
+            // the first-m race's outcome is deterministic on both
+            // backends (virtual time on pooled, real sleeps on threaded).
+            compute_cost_us: 300,
+            stragglers,
+            straggler_factor: 25.0,
+            ..Default::default()
+        },
+        gar: GarKind::MultiKrum,
+        pre: Vec::new(),
+        attack: multibulyan::attacks::AttackKind::None,
+        model: ModelConfig::Quadratic {
+            dim: 512,
+            noise: 0.3,
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.0,
+            steps: 6,
+            batch_size: 8,
+            eval_every: 0,
+            seed: 11,
+        },
+        threads,
+        transport,
+        collect,
+        output_dir: None,
+    }
+}
+
+/// Run 6 first-m rounds; return the final parameters and the per-round
+/// (collected, missing) outcome counts.
+fn run_first_m(transport: TransportKind, threads: usize) -> (Vec<f32>, Vec<(usize, usize)>) {
+    // n = 16, f = 3, stragglers = 3 ⇒ the fast tier is exactly the
+    // first-m quorum m = 13: the collected set is cost-determined, not
+    // scheduling-determined, on both backends.
+    let exp = straggler_exp(16, 3, 3, CollectMode::FirstM, transport, threads);
+    let cluster = launch(&exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut outcomes = Vec::new();
+    for _ in 0..6 {
+        let out = coordinator.run_round().unwrap();
+        outcomes.push((out.collected, out.missing));
+    }
+    let params = coordinator.params().to_vec();
+    coordinator.shutdown();
+    (params, outcomes)
+}
+
+#[test]
+fn first_m_runs_are_bit_identical_across_backends_and_thread_counts() {
+    let (ref_params, ref_outcomes) = run_first_m(TransportKind::Threaded, 1);
+    // Every round: the fastest m = 13 collected, the 3 stragglers cached.
+    assert!(ref_outcomes.iter().all(|&(c, m)| c == 13 && m == 3));
+    for threads in [1usize, 2, 4] {
+        let (params, outcomes) = run_first_m(TransportKind::Pooled, threads);
+        assert_eq!(
+            ref_outcomes, outcomes,
+            "pooled threads={threads}: RoundOutcome collected/missing diverged"
+        );
+        assert_eq!(
+            ref_params, params,
+            "pooled threads={threads}: first-m params diverged from threaded"
+        );
+    }
+    let (params, outcomes) = run_first_m(TransportKind::Threaded, 2);
+    assert_eq!(ref_outcomes, outcomes);
+    assert_eq!(ref_params, params, "threaded threads=2 diverged");
+}
+
+#[test]
+fn wait_all_with_cost_model_is_bit_identical_across_backends() {
+    // Under `all` the stragglers finish within the timeout on both
+    // backends, so this exercises the chunked (StepBody) gradient
+    // computation end to end: the pooled stragglers compute their
+    // gradients a few coordinates per slice and must still emit exactly
+    // what the threaded one-shot computation emits.
+    let run = |transport: TransportKind, threads: usize| -> Vec<f32> {
+        let exp = straggler_exp(12, 2, 2, CollectMode::All, transport, threads);
+        let cluster = launch(&exp, None).unwrap();
+        let mut coordinator = cluster.coordinator;
+        for _ in 0..4 {
+            let out = coordinator.run_round().unwrap();
+            assert_eq!(out.collected, 12, "wait-all must get everyone");
+            assert_eq!(out.missing, 0);
+        }
+        let params = coordinator.params().to_vec();
+        coordinator.shutdown();
+        params
+    };
+    let reference = run(TransportKind::Threaded, 1);
+    assert_eq!(reference, run(TransportKind::Pooled, 1));
+    assert_eq!(reference, run(TransportKind::Pooled, 4));
+}
+
+#[test]
+fn straggler_is_left_behind_by_first_m_and_recovered_from_the_last_good_cache() {
+    // Round 1 runs wait-all to let the 30× straggler deliver once (the
+    // cache warm-up); every later round runs first-m, leaves it behind,
+    // and substitutes its cached gradient — training stays healthy.
+    let mut exp = straggler_exp(8, 1, 1, CollectMode::All, TransportKind::Pooled, 2);
+    exp.cluster.straggler_factor = 30.0;
+    exp.model = ModelConfig::Quadratic {
+        dim: 32,
+        noise: 0.1,
+    };
+    let cluster = launch(&exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut evaluator = cluster.evaluator;
+    let out = coordinator.run_round().unwrap();
+    assert_eq!(out.collected, 8, "warm-up round populates the cache");
+    assert_eq!(out.missing, 0);
+    coordinator.set_collect(CollectMode::FirstM);
+    for _ in 0..30 {
+        let out = coordinator.run_round().unwrap();
+        assert_eq!(out.collected, 7, "first-m = n − f = 7");
+        assert_eq!(out.missing, 1, "the straggler falls through the cache");
+    }
+    assert_eq!(coordinator.metrics.counter("gradients_missing"), 30);
+    let (loss, _) = evaluator.evaluate(coordinator.params()).unwrap();
+    assert!(
+        loss.is_finite() && loss < 0.05,
+        "training with one cached straggler must stay healthy: loss {loss}"
+    );
+    assert!(coordinator.params().iter().all(|v| v.is_finite()));
+    coordinator.shutdown();
+}
