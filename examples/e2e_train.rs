@@ -80,6 +80,7 @@ fn main() -> Result<()> {
             threads: 0,
             transport: Default::default(),
             collect: Default::default(),
+            overlap: Default::default(),
             output_dir: None,
         };
         println!("\n=== {label} ({steps} steps) ===");

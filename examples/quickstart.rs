@@ -66,6 +66,7 @@ fn main() -> Result<()> {
         threads: 0,
         transport: Default::default(),
         collect: Default::default(),
+        overlap: Default::default(),
         output_dir: None,
     };
     println!("\ntraining the quadratic workload with MULTI-BULYAN (n={n}, f={f}, no attack):");

@@ -50,6 +50,7 @@ fn main() {
             threads: 1,
             transport: Default::default(),
             collect: Default::default(),
+            overlap: Default::default(),
             output_dir: None,
         };
         let mut cluster = launch(&config, None).unwrap();

@@ -138,20 +138,27 @@ pub fn check(path: impl AsRef<Path>, tolerance_override: Option<f64>) -> Result<
         missing: Vec::new(),
         stale: Vec::new(),
     };
+    // (cell, baseline, measured, status) — the step-summary table rows.
+    let mut table: Vec<(String, Option<f64>, f64, &'static str)> = Vec::new();
     let mut measured_keys = std::collections::BTreeSet::new();
     for row in &rows {
         let key = cell_key(row.gar.as_str(), row.d, row.threads);
         measured_keys.insert(key.clone());
         match baseline.get(&key) {
-            None => outcome.missing.push(key),
+            None => {
+                table.push((key.clone(), None, row.mean_ms, "MISSING"));
+                outcome.missing.push(key);
+            }
             Some(&base_ms) => {
                 let limit = base_ms * tolerance;
                 if row.mean_ms > limit {
+                    table.push((key.clone(), Some(base_ms), row.mean_ms, "FAIL"));
                     outcome.regressions.push(format!(
                         "{key}: {:.3} ms > {limit:.3} ms (baseline {base_ms:.3} ms × {tolerance})",
                         row.mean_ms
                     ));
                 } else {
+                    table.push((key.clone(), Some(base_ms), row.mean_ms, "pass"));
                     outcome.passed += 1;
                 }
             }
@@ -164,6 +171,34 @@ pub fn check(path: impl AsRef<Path>, tolerance_override: Option<f64>) -> Result<
         .filter(|k| !measured_keys.contains(*k))
         .cloned()
         .collect();
+    // Per-cell pass/fail as a step-summary markdown table (GitHub
+    // Actions only; no-op elsewhere).
+    {
+        let mut md = format!(
+            "## bench check — perf gate vs `{}` (tolerance {tolerance}×)\n\n\
+             | cell | baseline ms | measured ms | ratio | status |\n\
+             |---|---:|---:|---:|---|\n",
+            path.display()
+        );
+        for (key, base_ms, measured_ms, status) in &table {
+            match base_ms {
+                Some(b) => {
+                    let _ = writeln!(
+                        md,
+                        "| {key} | {b:.3} | {measured_ms:.3} | {:.2}× | {status} |",
+                        measured_ms / b
+                    );
+                }
+                None => {
+                    let _ = writeln!(md, "| {key} | — | {measured_ms:.3} | — | {status} |");
+                }
+            }
+        }
+        for s in &outcome.stale {
+            let _ = writeln!(md, "| {s} | — | — | — | STALE |");
+        }
+        super::step_summary(&md);
+    }
     println!(
         "bench check: {} cell(s) within {tolerance}× of {path:?}, {} regression(s), \
          {} missing, {} stale",

@@ -51,6 +51,23 @@ pub fn fig2_f(n: usize) -> usize {
     (n - 3) / 4
 }
 
+/// Append a markdown fragment to the GitHub Actions step summary
+/// (`$GITHUB_STEP_SUMMARY`) so bench results are readable on the run
+/// page without downloading artifacts. No-op outside Actions (or if the
+/// file cannot be written — a summary must never fail a bench).
+pub fn step_summary(markdown: &str) {
+    let Some(path) = std::env::var_os("GITHUB_STEP_SUMMARY") else {
+        return;
+    };
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+    {
+        let _ = writeln!(f, "{markdown}");
+    }
+}
+
 /// Serialises tests that mutate the process-global `MB_RESULTS_DIR`
 /// environment variable. `cargo test` runs tests concurrently in one
 /// process; without this lock the bench tests race on set/remove and
@@ -73,6 +90,31 @@ mod tests {
         // n ≥ 4f+3 always holds under this rule.
         for n in (7..=39).step_by(2) {
             assert!(n >= 4 * fig2_f(n) + 3);
+        }
+    }
+
+    #[test]
+    fn step_summary_appends_when_env_set() {
+        let _env = env_lock();
+        let prev = std::env::var_os("GITHUB_STEP_SUMMARY");
+        let dir = std::env::temp_dir().join("mb_step_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("summary.md");
+        std::fs::write(&path, "").unwrap();
+        std::env::set_var("GITHUB_STEP_SUMMARY", &path);
+        step_summary("## table one");
+        step_summary("| a | b |");
+        std::env::remove_var("GITHUB_STEP_SUMMARY");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "## table one\n| a | b |\n");
+        // No env var: a no-op, never an error.
+        step_summary("ignored");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+        std::fs::remove_dir_all(&dir).ok();
+        // Restore whatever the process started with (in CI the verify
+        // job's real step summary is set) rather than deleting it.
+        if let Some(v) = prev {
+            std::env::set_var("GITHUB_STEP_SUMMARY", v);
         }
     }
 

@@ -9,12 +9,36 @@
 //!   leeway of Fig. 1);
 //! * BULYAN / MULTI-BULYAN converge under everything (strong resilience,
 //!   Theorem 2.i) as long as n ≥ 4f+3.
+//!
+//! Besides the run-level `results/resilience.csv`, the gauntlet emits the
+//! per-round selection-quality *curve* (`results/regret_curve.csv`,
+//! round → regret/precision/recall — the Bareilles et al. 2026 lens):
+//! `regret` is the cumulative count of forged rows the rule selected up
+//! to that round, so a flat curve means the rule locked the coalition
+//! out early and a linear curve means it never learned to.
 
 use crate::attacks::AttackKind;
 use crate::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
 use crate::coordinator::launch;
 use crate::gar::GarKind;
 use crate::Result;
+
+/// One per-round point of the selection-quality curve.
+#[derive(Debug, Clone)]
+pub struct RegretPoint {
+    pub gar: GarKind,
+    pub attack: &'static str,
+    /// 1-based round index.
+    pub round: u64,
+    /// Cumulative forged-row selections up to and including this round.
+    pub regret: u64,
+    /// This round's selection precision (honest fraction of the selected
+    /// rows; NaN when the rule selected nothing).
+    pub precision: f64,
+    /// This round's selection recall (fraction of honest submissions the
+    /// rule used).
+    pub recall: f64,
+}
 
 #[derive(Debug, Clone)]
 pub struct GauntletRow {
@@ -82,6 +106,7 @@ impl Default for GauntletConfig {
 
 pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
     let mut rows = Vec::new();
+    let mut curve: Vec<RegretPoint> = Vec::new();
     if !quiet {
         println!(
             "{:<14} {}",
@@ -126,13 +151,36 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                 threads: 1,
                 transport: Default::default(),
                 collect: Default::default(),
+                overlap: Default::default(),
                 output_dir: None,
             };
             let cluster = launch(&exp, None)?;
             let mut coordinator = cluster.coordinator;
             let mut evaluator = cluster.evaluator;
-            coordinator.train(cfg.steps, 0, &mut evaluator)?;
-            let final_loss = coordinator.metrics.final_loss().unwrap_or(f32::INFINITY);
+            // Manual round loop (rather than `train`) so each round's
+            // selection feeds the regret curve.
+            let honest_n = cfg.n - byz;
+            let mut regret = 0u64;
+            for _ in 0..cfg.steps {
+                let out = coordinator.run_round()?;
+                let total = out.selected.len() as u64;
+                let byz_hits = out.selected.iter().filter(|&&w| w >= honest_n).count() as u64;
+                let honest_hits = total - byz_hits;
+                regret += byz_hits;
+                curve.push(RegretPoint {
+                    gar,
+                    attack: attack.label(),
+                    round: out.round,
+                    regret,
+                    precision: if total == 0 {
+                        f64::NAN
+                    } else {
+                        honest_hits as f64 / total as f64
+                    },
+                    recall: honest_hits as f64 / honest_n as f64,
+                });
+            }
+            let (final_loss, _) = evaluator.evaluate(coordinator.params())?;
             // Byzantine-filtering precision/recall from the per-worker
             // selection counts (forged rows occupy indices honest..n).
             let selections = coordinator.metrics.selections();
@@ -192,5 +240,69 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
         "gar,attack,final_loss,converged,selection_precision,selection_recall",
         &csv,
     )?;
+    // The per-round selection-quality curve (regret = cumulative forged
+    // selections) — uploaded as a CI artifact next to the aggregates.
+    let curve_csv: Vec<String> = curve
+        .iter()
+        .map(|p| {
+            format!(
+                "{},{},{},{},{:.4},{:.4}",
+                p.gar, p.attack, p.round, p.regret, p.precision, p.recall
+            )
+        })
+        .collect();
+    super::write_csv(
+        "regret_curve.csv",
+        "gar,attack,round,regret,precision,recall",
+        &curve_csv,
+    )?;
     Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauntlet_emits_per_round_regret_curve() {
+        let _env = crate::bench::env_lock();
+        let dir = std::env::temp_dir().join("mb_resilience_bench_test");
+        std::env::set_var("MB_RESULTS_DIR", &dir);
+        let cfg = GauntletConfig {
+            n: 11,
+            f: 2,
+            dim: 48,
+            noise: 0.3,
+            steps: 4,
+            threshold: 5e-3,
+            seed: 1,
+            gars: vec![GarKind::Average, GarKind::MultiKrum],
+            attacks: vec![AttackKind::None, AttackKind::SignFlip { scale: 10.0 }],
+        };
+        let rows = run(&cfg, true).unwrap();
+        assert_eq!(rows.len(), 4);
+        let text = std::fs::read_to_string(dir.join("regret_curve.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // Header + one point per (gar, attack, round).
+        assert_eq!(lines[0], "gar,attack,round,regret,precision,recall");
+        assert_eq!(lines.len(), 1 + 2 * 2 * 4);
+        // Under no attack there is nothing to regret; regret is
+        // monotone within a cell by construction (cumulative count).
+        for line in &lines[1..] {
+            let cols: Vec<&str> = line.split(',').collect();
+            assert_eq!(cols.len(), 6, "{line}");
+            if cols[1] == "none" {
+                assert_eq!(cols[3], "0", "{line}");
+            }
+        }
+        // Multi-Krum under sign-flip: a real curve with sane precision.
+        let mk: Vec<&&str> = lines
+            .iter()
+            .filter(|l| l.starts_with("multi-krum,sign-flip"))
+            .collect();
+        assert_eq!(mk.len(), 4);
+        assert!(dir.join("resilience.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
 }

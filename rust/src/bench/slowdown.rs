@@ -95,6 +95,7 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
         threads: 1,
         transport: Default::default(),
         collect: Default::default(),
+        overlap: Default::default(),
         output_dir: None,
     };
     let cluster = launch(&exp, None)?;

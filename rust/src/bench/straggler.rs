@@ -1,31 +1,40 @@
 //! Straggler-race bench — the paper's m/n headline in wall-clock form:
 //! with a deterministic per-worker compute-cost model (a slow tail of
 //! stragglers), how much round-tail latency does `collect = "first-m"`
-//! shave off versus waiting for every worker?
+//! shave off versus waiting for every worker — and how much straggler
+//! compute does `overlap = "prefix"` salvage *during* the combine tail?
 //!
 //! Expected shape: under `all`, every round's tail is the stragglers'
 //! cost (real sleeps on the threaded transport, virtual-time slices — and
 //! their real sliced compute — on the pooled one). Under `first-m` the
 //! round returns at the fastest `m = n − f` gradients, the stragglers are
 //! abandoned mid-computation (their remaining work is never executed),
-//! and the tail collapses to the fast tier's cost. Collected/missing
-//! counts are deterministic on both transports whenever the cost gap is
-//! decisive, which this bench's configuration makes sure of.
+//! and the tail collapses to the fast tier's cost. With prefix overlap on
+//! top, the combine+update pass interleaves with further drive slices, so
+//! the abandoned stragglers keep computing while the aggregate is applied
+//! — the salvaged virtual microseconds are the `overlap_saved_us` column
+//! (measured from the coordinator's metrics counter, not asserted).
+//! Collected/missing counts are deterministic on both transports whenever
+//! the cost gap is decisive, which this bench's configuration makes sure
+//! of.
 //!
-//! Writes `results/straggler.csv` (uploaded as a CI artifact).
+//! Writes `results/straggler.csv` (uploaded as a CI artifact) and, under
+//! GitHub Actions, a markdown table into the job's step summary.
 
 use crate::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
-use crate::coordinator::launch;
+use crate::coordinator::{launch, OverlapMode};
 use crate::gar::GarKind;
 use crate::metrics::Stopwatch;
 use crate::transport::{CollectMode, TransportKind};
 use crate::Result;
+use std::fmt::Write as _;
 
-/// One (collect mode, transport) measurement.
+/// One (collect mode, transport, overlap mode) measurement.
 #[derive(Debug, Clone)]
 pub struct StragglerRow {
     pub collect: CollectMode,
     pub transport: TransportKind,
+    pub overlap: OverlapMode,
     pub n: usize,
     /// Gradients the mode waits for (n, or m = n − f under first-m).
     pub expect: usize,
@@ -39,6 +48,9 @@ pub struct StragglerRow {
     pub mean_collected: f64,
     /// Mean `RoundOutcome::missing` per round (straggler-cache rounds).
     pub mean_missing: f64,
+    /// Total virtual µs of straggler drive progress overlapped with the
+    /// combine tail across the measured rounds (prefix overlap only).
+    pub overlap_saved_us: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -76,6 +88,16 @@ impl Default for StragglerConfig {
     }
 }
 
+/// Overlap modes exercised per transport: the prefix path is the pooled
+/// time-sliced drive's feature (threaded falls back to off, so a second
+/// threaded row would duplicate the first).
+fn overlap_modes(transport: TransportKind) -> &'static [OverlapMode] {
+    match transport {
+        TransportKind::Threaded => &[OverlapMode::Off],
+        TransportKind::Pooled => &[OverlapMode::Off, OverlapMode::Prefix],
+    }
+}
+
 pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
     anyhow::ensure!(
         cfg.stragglers <= cfg.f,
@@ -87,111 +109,152 @@ pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
     let mut rows = Vec::new();
     for transport in TransportKind::ALL {
         for collect in CollectMode::ALL {
-            let exp = ExperimentConfig {
-                cluster: ClusterConfig {
+            for &overlap in overlap_modes(transport) {
+                let exp = ExperimentConfig {
+                    cluster: ClusterConfig {
+                        n: cfg.n,
+                        f: cfg.f,
+                        actual_byzantine: Some(0),
+                        round_timeout_ms: cfg.timeout_ms,
+                        compute_cost_us: cfg.base_cost_us,
+                        stragglers: cfg.stragglers,
+                        straggler_factor: cfg.straggler_factor,
+                        ..Default::default()
+                    },
+                    gar: GarKind::MultiKrum,
+                    pre: Vec::new(),
+                    attack: crate::attacks::AttackKind::None,
+                    model: ModelConfig::Quadratic {
+                        dim: cfg.dim,
+                        noise: 0.5,
+                    },
+                    train: TrainConfig {
+                        learning_rate: 0.1,
+                        momentum: 0.0,
+                        steps: cfg.rounds + 1,
+                        batch_size: 8,
+                        eval_every: 0,
+                        seed: cfg.seed,
+                    },
+                    threads: cfg.threads,
+                    transport,
+                    collect,
+                    overlap,
+                    output_dir: None,
+                };
+                let expect = match collect {
+                    CollectMode::All => cfg.n,
+                    CollectMode::FirstM => cfg.n - cfg.f,
+                };
+                let cluster = launch(&exp, None)?;
+                let mut coordinator = cluster.coordinator;
+                // Warm-up round outside the measurement: it grows the
+                // gradient arenas and populates the straggler cache.
+                coordinator.run_round()?;
+                let saved_warmup = coordinator.metrics.counter("overlap_saved_us");
+                let mut total_ms = 0.0f64;
+                let mut max_ms = 0.0f64;
+                let mut collected = 0u64;
+                let mut missing = 0u64;
+                for _ in 0..cfg.rounds {
+                    let sw = Stopwatch::start();
+                    let out = coordinator.run_round()?;
+                    let ms = sw.elapsed_ms();
+                    total_ms += ms;
+                    max_ms = max_ms.max(ms);
+                    collected += out.collected as u64;
+                    missing += out.missing as u64;
+                }
+                let overlap_saved_us =
+                    coordinator.metrics.counter("overlap_saved_us") - saved_warmup;
+                coordinator.shutdown();
+                let row = StragglerRow {
+                    collect,
+                    transport,
+                    overlap,
                     n: cfg.n,
-                    f: cfg.f,
-                    actual_byzantine: Some(0),
-                    round_timeout_ms: cfg.timeout_ms,
-                    compute_cost_us: cfg.base_cost_us,
-                    stragglers: cfg.stragglers,
-                    straggler_factor: cfg.straggler_factor,
-                    ..Default::default()
-                },
-                gar: GarKind::MultiKrum,
-                pre: Vec::new(),
-                attack: crate::attacks::AttackKind::None,
-                model: ModelConfig::Quadratic {
-                    dim: cfg.dim,
-                    noise: 0.5,
-                },
-                train: TrainConfig {
-                    learning_rate: 0.1,
-                    momentum: 0.0,
-                    steps: cfg.rounds + 1,
-                    batch_size: 8,
-                    eval_every: 0,
-                    seed: cfg.seed,
-                },
-                threads: cfg.threads,
-                transport,
-                collect,
-                output_dir: None,
-            };
-            let expect = match collect {
-                CollectMode::All => cfg.n,
-                CollectMode::FirstM => cfg.n - cfg.f,
-            };
-            let cluster = launch(&exp, None)?;
-            let mut coordinator = cluster.coordinator;
-            // Warm-up round outside the measurement: it grows the
-            // gradient arenas and populates the straggler cache.
-            coordinator.run_round()?;
-            let mut total_ms = 0.0f64;
-            let mut max_ms = 0.0f64;
-            let mut collected = 0u64;
-            let mut missing = 0u64;
-            for _ in 0..cfg.rounds {
-                let sw = Stopwatch::start();
-                let out = coordinator.run_round()?;
-                let ms = sw.elapsed_ms();
-                total_ms += ms;
-                max_ms = max_ms.max(ms);
-                collected += out.collected as u64;
-                missing += out.missing as u64;
+                    expect,
+                    rounds: cfg.rounds,
+                    mean_round_ms: total_ms / cfg.rounds as f64,
+                    max_round_ms: max_ms,
+                    mean_collected: collected as f64 / cfg.rounds as f64,
+                    mean_missing: missing as f64 / cfg.rounds as f64,
+                    overlap_saved_us,
+                };
+                if !quiet {
+                    println!(
+                        "straggler {:<9} {:<8} {:<7} n={:<4} expect={:<4} mean {:>9.3} ms   \
+                         tail {:>9.3} ms   collected {:>6.1}   missing {:>5.1}   \
+                         overlap_saved {:>8} µs",
+                        row.collect,
+                        row.transport,
+                        row.overlap,
+                        row.n,
+                        row.expect,
+                        row.mean_round_ms,
+                        row.max_round_ms,
+                        row.mean_collected,
+                        row.mean_missing,
+                        row.overlap_saved_us
+                    );
+                }
+                rows.push(row);
             }
-            coordinator.shutdown();
-            let row = StragglerRow {
-                collect,
-                transport,
-                n: cfg.n,
-                expect,
-                rounds: cfg.rounds,
-                mean_round_ms: total_ms / cfg.rounds as f64,
-                max_round_ms: max_ms,
-                mean_collected: collected as f64 / cfg.rounds as f64,
-                mean_missing: missing as f64 / cfg.rounds as f64,
-            };
-            if !quiet {
-                println!(
-                    "straggler {:<9} {:<8} n={:<4} expect={:<4} mean {:>9.3} ms   \
-                     tail {:>9.3} ms   collected {:>6.1}   missing {:>5.1}",
-                    row.collect,
-                    row.transport,
-                    row.n,
-                    row.expect,
-                    row.mean_round_ms,
-                    row.max_round_ms,
-                    row.mean_collected,
-                    row.mean_missing
-                );
-            }
-            rows.push(row);
         }
     }
     let csv: Vec<String> = rows
         .iter()
         .map(|r| {
             format!(
-                "{},{},{},{},{},{:.4},{:.4},{:.2},{:.2}",
+                "{},{},{},{},{},{},{:.4},{:.4},{:.2},{:.2},{}",
                 r.collect,
                 r.transport,
+                r.overlap,
                 r.n,
                 r.expect,
                 r.rounds,
                 r.mean_round_ms,
                 r.max_round_ms,
                 r.mean_collected,
-                r.mean_missing
+                r.mean_missing,
+                r.overlap_saved_us
             )
         })
         .collect();
     super::write_csv(
         "straggler.csv",
-        "collect,transport,n,expect,rounds,mean_round_ms,max_round_ms,mean_collected,mean_missing",
+        "collect,transport,overlap,n,expect,rounds,mean_round_ms,max_round_ms,\
+         mean_collected,mean_missing,overlap_saved_us",
         &csv,
     )?;
+    super::step_summary(&summary_markdown(&rows));
     Ok(rows)
+}
+
+/// The straggler rows as a GitHub step-summary markdown table.
+fn summary_markdown(rows: &[StragglerRow]) -> String {
+    let mut md = String::from(
+        "## bench straggler — first-m vs wait-all round tail\n\n\
+         | collect | transport | overlap | expect | mean ms | tail ms | \
+         collected | missing | overlap saved µs |\n\
+         |---|---|---|---:|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            md,
+            "| {} | {} | {} | {} | {:.3} | {:.3} | {:.1} | {:.1} | {} |",
+            r.collect,
+            r.transport,
+            r.overlap,
+            r.expect,
+            r.mean_round_ms,
+            r.max_round_ms,
+            r.mean_collected,
+            r.mean_missing,
+            r.overlap_saved_us
+        );
+    }
+    md
 }
 
 #[cfg(test)]
@@ -203,6 +266,11 @@ mod tests {
         let _env = crate::bench::env_lock();
         let dir = std::env::temp_dir().join("mb_straggler_bench_test");
         std::env::set_var("MB_RESULTS_DIR", &dir);
+        // Keep this run's markdown table out of any real CI step summary
+        // (the verify job runs `cargo test` with the variable set).
+        let prev_summary = std::env::var_os("GITHUB_STEP_SUMMARY");
+        std::fs::create_dir_all(&dir).ok();
+        std::env::set_var("GITHUB_STEP_SUMMARY", dir.join("summary.md"));
         let cfg = StragglerConfig {
             n: 12,
             f: 3,
@@ -216,8 +284,8 @@ mod tests {
             seed: 1,
         };
         let rows = run(&cfg, true).unwrap();
-        // 2 transports × 2 collect modes.
-        assert_eq!(rows.len(), 4);
+        // threaded × 2 collect modes × off + pooled × 2 × (off|prefix).
+        assert_eq!(rows.len(), 6);
         for r in &rows {
             assert!(r.mean_round_ms >= 0.0 && r.max_round_ms >= r.mean_round_ms / 2.0);
             match r.collect {
@@ -235,9 +303,35 @@ mod tests {
                     assert_eq!(r.mean_missing, 3.0);
                 }
             }
+            if r.overlap == OverlapMode::Off {
+                assert_eq!(r.overlap_saved_us, 0, "{} {}", r.collect, r.transport);
+            }
         }
+        // The headline claim: prefix overlap on the straggler scenario
+        // reports a nonzero overlap_saved_us (drive progress made while
+        // the combine tail ran).
+        let prefix_first_m = rows
+            .iter()
+            .find(|r| {
+                r.transport == TransportKind::Pooled
+                    && r.collect == CollectMode::FirstM
+                    && r.overlap == OverlapMode::Prefix
+            })
+            .expect("pooled first-m prefix row");
+        assert!(
+            prefix_first_m.overlap_saved_us > 0,
+            "prefix overlap must salvage straggler compute on the straggler scenario"
+        );
         assert!(dir.join("straggler.csv").exists());
+        // The summary table was written to the redirected file.
+        let summary = std::fs::read_to_string(dir.join("summary.md")).unwrap();
+        assert!(summary.contains("bench straggler"));
+        assert!(summary.contains("overlap saved µs"));
         std::fs::remove_dir_all(&dir).ok();
         std::env::remove_var("MB_RESULTS_DIR");
+        match prev_summary {
+            Some(v) => std::env::set_var("GITHUB_STEP_SUMMARY", v),
+            None => std::env::remove_var("GITHUB_STEP_SUMMARY"),
+        }
     }
 }

@@ -32,6 +32,7 @@
 pub mod parser;
 
 use crate::attacks::AttackKind;
+use crate::coordinator::OverlapMode;
 use crate::gar::{GarKind, GarSpec, StageSpec};
 use crate::transport::{CollectMode, TransportKind};
 use crate::Result;
@@ -179,6 +180,19 @@ pub struct ExperimentConfig {
     /// — the paper's synchronous model, the knob that exhibits the m/n
     /// slowdown. Stragglers fall through the last-good cache.
     pub collect: CollectMode,
+    /// Combine/collection overlap (`overlap` root key / `--overlap`
+    /// flag): `off` (default) serialises collect → select → combine;
+    /// `prefix` starts selection at the collection quorum and interleaves
+    /// the combine+update chunks with the remaining drive slices on the
+    /// pooled transport, salvaging late gradients into the straggler
+    /// cache. Each round's selection and parameters are bit-identical
+    /// either way (the round matrix is frozen at the quorum; combine is
+    /// partition-invariant) — but a straggler that *finishes inside the
+    /// overlap window* refreshes the last-good cache, so later rounds
+    /// that fall back to it use a stale gradient where `off` would have
+    /// used an older entry or a zero row. Runs only diverge when such a
+    /// salvage occurs; see `coordinator::OverlapMode`.
+    pub overlap: OverlapMode,
     /// Where to write metrics CSV (None = stdout summary only).
     pub output_dir: Option<String>,
 }
@@ -204,6 +218,7 @@ impl ExperimentConfig {
             threads: 1,
             transport: TransportKind::default(),
             collect: CollectMode::default(),
+            overlap: OverlapMode::default(),
             output_dir: None,
         }
     }
@@ -361,6 +376,13 @@ impl ExperimentConfig {
             .map(str::parse)
             .transpose()?
             .unwrap_or_default();
+        let overlap: OverlapMode = root
+            .get("overlap")
+            .map(|v| v.as_str())
+            .transpose()?
+            .map(str::parse)
+            .transpose()?
+            .unwrap_or_default();
 
         Ok(Self {
             cluster,
@@ -372,6 +394,7 @@ impl ExperimentConfig {
             threads,
             transport,
             collect,
+            overlap,
             output_dir: get_str("", "output_dir"),
         })
     }
@@ -651,6 +674,33 @@ mod tests {
         assert!(ExperimentConfig::from_text(
             r#"
             collect = "fastest"
+            [cluster]
+            n = 11
+            "#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn overlap_knob_parses_and_defaults_to_off() {
+        assert_eq!(base().overlap, OverlapMode::Off);
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-bulyan"
+            collect = "first-m"
+            overlap = "prefix"
+            [cluster]
+            n = 11
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.overlap, OverlapMode::Prefix);
+        assert!(ExperimentConfig::from_text(
+            r#"
+            overlap = "pipelined"
             [cluster]
             n = 11
             "#,

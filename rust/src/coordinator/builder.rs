@@ -177,6 +177,7 @@ pub fn launch(
         },
         seed,
         collect: config.collect,
+        overlap: config.overlap,
     };
     let mut coordinator = Coordinator::new(
         config.gar.instantiate_parallel(n, config.cluster.f, &par)?,

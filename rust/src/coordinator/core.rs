@@ -8,31 +8,147 @@
 //! aggregate-then-step traversal. Because combine and the SGD update are
 //! both coordinate-wise, the fused pass is bit-identical to the old
 //! two-pass path for every thread count and range partition.
+//!
+//! That partition-invariance is also what powers the **streaming
+//! prefix-combine** ([`OverlapMode::Prefix`]): the round freezes its
+//! gradient matrix at the collection quorum (the completion-order
+//! *prefix* of arrivals), selection runs immediately, and the
+//! combine+update tail then walks a fixed coordinate-chunk grid
+//! co-scheduled with further transport drive slices
+//! ([`prefix_combine_update`]) — stragglers keep computing while the
+//! aggregate is applied, and anything that finishes late is salvaged
+//! into the last-good cache without ever touching the current round.
 
 use crate::attacks::{Attack, AttackCtx};
 use crate::gar::{CombineScratch, Gar, GarScratch, PreAggregate, Selection};
 use crate::metrics::{MetricsRecorder, Stopwatch, TrainPoint};
+use crate::runtime::pool::SyncMutPtr;
 use crate::runtime::{shard_zip, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::GradMatrix;
 use crate::training::{LrSchedule, Sgd};
-use crate::transport::{CollectMode, ServerEndpoint};
+use crate::transport::{CollectMode, CollectStatus, ServerEndpoint, TransportKind};
 use crate::util::Rng64;
 use crate::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::evaluator::Evaluator;
 
+/// When the O(d) combine+update tail starts relative to collection (the
+/// `overlap` config knob / `--overlap` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Collect → select → combine strictly in sequence (default).
+    #[default]
+    Off,
+    /// Streaming prefix-combine: selection runs as soon as the collection
+    /// quorum (the completion-order *prefix* of arrivals) lands, and the
+    /// combine+update tail proceeds in coordinate-range chunks
+    /// co-scheduled with further drive slices, so stragglers keep
+    /// computing while the aggregate is applied. A gradient arriving
+    /// after the quorum lands in the last-good straggler cache and never
+    /// perturbs the current round — the current round's `Selection` and
+    /// parameters are bit-identical to [`OverlapMode::Off`] by
+    /// construction (the matrix is frozen at the quorum and combine is
+    /// partition-invariant). Effective on the pooled transport (the
+    /// time-sliced drive); the threaded backend falls back to `Off`.
+    Prefix,
+}
+
+impl OverlapMode {
+    pub const ALL: [OverlapMode; 2] = [OverlapMode::Off, OverlapMode::Prefix];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OverlapMode::Off => "off",
+            OverlapMode::Prefix => "prefix",
+        }
+    }
+}
+
+impl std::fmt::Display for OverlapMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for OverlapMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(OverlapMode::Off),
+            "prefix" => Ok(OverlapMode::Prefix),
+            other => anyhow::bail!("unknown overlap mode '{other}' (off|prefix)"),
+        }
+    }
+}
+
+/// Coordinate chunk of the prefix-overlap combine grid: one chunk is
+/// combined+applied per drive slice. The grid is a fixed function of `d`
+/// — deliberately *not* of the thread count — so the late-acceptance
+/// window (one slice per chunk) is deterministic for every `threads`
+/// setting.
+const OVERLAP_CHUNK: usize = MIN_COORDS_PER_SHARD;
+
+/// Combine one coordinate range of the aggregate and immediately apply
+/// the SGD update to it: exactly `Sgd::step`'s per-coordinate arithmetic
+/// after `Selection::combine_range_unchecked`, with non-finite aggregate
+/// coordinates (a GAR bug or an un-filtered NaN attack) skipped *per
+/// coordinate* — their parameter and velocity entries left untouched.
+/// Returns the skip count. Every decision is coordinate-local, so any
+/// partition of `0..d` into ranges — the fused shard pass, the overlap
+/// chunk grid, sequential — produces bit-identical results.
+#[allow(clippy::too_many_arguments)]
+fn combine_update_range(
+    sel: &Selection,
+    grads: &GradMatrix,
+    offset: usize,
+    agg_r: &mut [f32],
+    p_r: &mut [f32],
+    v_r: &mut [f32],
+    lr: f32,
+    mu: f32,
+    cs: &mut CombineScratch,
+) -> usize {
+    sel.combine_range_unchecked(grads, offset, agg_r, cs);
+    let mut skip = 0usize;
+    for k in 0..agg_r.len() {
+        let g = agg_r[k];
+        if g.is_finite() {
+            v_r[k] = mu * v_r[k] + g;
+            p_r[k] -= lr * v_r[k];
+        } else {
+            skip += 1;
+        }
+    }
+    skip
+}
+
+/// Shape preconditions shared by the fused and prefix-overlap tails.
+fn check_update_shapes(grads: &GradMatrix, agg: &[f32], params: &[f32], opt: &Sgd) -> Result<()> {
+    anyhow::ensure!(
+        agg.len() == grads.d() && params.len() == agg.len(),
+        "fused update: agg/params/d mismatch ({}/{}/{})",
+        agg.len(),
+        params.len(),
+        grads.d()
+    );
+    anyhow::ensure!(
+        opt.velocity().len() == params.len(),
+        "fused update: optimizer dimension {} != d {}",
+        opt.velocity().len(),
+        params.len()
+    );
+    Ok(())
+}
+
 /// The fused O(d) tail of a round: combine each coordinate range of the
 /// aggregate into `agg` and immediately apply the SGD update to the same
 /// range of `params`/the optimizer velocity — one traversal of the
-/// coordinate space instead of combine-then-step. Non-finite aggregate
-/// coordinates (a GAR bug or an un-filtered NaN attack) are skipped
-/// *per coordinate* — their parameter and velocity entries are left
-/// untouched — and the skip count is returned. The skip decision is
-/// coordinate-local, so results stay bit-identical for every thread
-/// count and partition.
+/// coordinate space instead of combine-then-step, sharded across `par`.
+/// Returns the non-finite skip count (see [`combine_update_range`]).
 ///
 /// `pub(crate)` so `bench::slowdown` can measure the exact fused pass the
 /// coordinator runs (the fused-vs-unfused comparison column).
@@ -46,22 +162,10 @@ pub(crate) fn fused_combine_update(
     shards: &mut Vec<CombineScratch>,
 ) -> Result<usize> {
     sel.validate(grads)?;
-    anyhow::ensure!(
-        agg.len() == grads.d() && params.len() == agg.len(),
-        "fused update: agg/params/d mismatch ({}/{}/{})",
-        agg.len(),
-        params.len(),
-        grads.d()
-    );
+    check_update_shapes(grads, agg, params, opt)?;
     let lr = opt.lr();
     let mu = opt.momentum();
     let velocity = opt.velocity_mut();
-    anyhow::ensure!(
-        velocity.len() == params.len(),
-        "fused update: optimizer dimension {} != d {}",
-        velocity.len(),
-        params.len()
-    );
     let skipped = AtomicUsize::new(0);
     shard_zip(
         par,
@@ -70,24 +174,159 @@ pub(crate) fn fused_combine_update(
         CombineScratch::default,
         MIN_COORDS_PER_SHARD,
         |offset, [agg_r, p_r, v_r]: [&mut [f32]; 3], cs| {
-            sel.combine_range_unchecked(grads, offset, agg_r, cs);
-            let mut skip = 0usize;
-            for k in 0..agg_r.len() {
-                let g = agg_r[k];
-                if g.is_finite() {
-                    // Exactly `Sgd::step`'s per-coordinate arithmetic.
-                    v_r[k] = mu * v_r[k] + g;
-                    p_r[k] -= lr * v_r[k];
-                } else {
-                    skip += 1;
-                }
-            }
+            let skip = combine_update_range(sel, grads, offset, agg_r, p_r, v_r, lr, mu, cs);
             if skip > 0 {
                 skipped.fetch_add(skip, Ordering::Relaxed);
             }
         },
     );
     Ok(skipped.load(Ordering::Relaxed))
+}
+
+/// What the prefix-overlap tail did this round (metrics fodder).
+struct PrefixOutcome {
+    /// Non-finite aggregate coordinates skipped.
+    skipped: usize,
+    /// Virtual microseconds of straggler drive progress overlapped with
+    /// the combine+update tail (0 when the drive was already exhausted).
+    saved_us: u64,
+    /// Late gradients accepted into the last-good cache.
+    late_cached: u64,
+    /// Malformed late submissions rejected.
+    late_malformed: u64,
+}
+
+/// The prefix-overlap O(d) tail: walk the fixed [`OVERLAP_CHUNK`] grid,
+/// co-scheduling one combine+update chunk per remaining drive slice (the
+/// transport session must be open, at quorum), so stragglers keep
+/// computing while the aggregate is applied. Late gradients land in
+/// `last_good` **only** — never the frozen round matrix — so the round's
+/// output is bit-identical to [`fused_combine_update`] (combine is
+/// partition-invariant and the SGD arithmetic is coordinate-local). Once
+/// the drive is exhausted (or was never running), the remaining
+/// coordinate tail is drained at full parallelism; the session is closed
+/// before returning.
+#[allow(clippy::too_many_arguments)]
+fn prefix_combine_update(
+    par: &Parallelism,
+    server: &mut ServerEndpoint,
+    sel: &Selection,
+    grads: &GradMatrix,
+    agg: &mut [f32],
+    params: &mut [f32],
+    opt: &mut Sgd,
+    last_good: &mut [Option<Vec<f32>>],
+    shards: &mut Vec<CombineScratch>,
+) -> Result<PrefixOutcome> {
+    sel.validate(grads)?;
+    check_update_shapes(grads, agg, params, opt)?;
+    let d = grads.d();
+    let lr = opt.lr();
+    let mu = opt.momentum();
+    let velocity = opt.velocity_mut();
+    let chunks = d.div_ceil(OVERLAP_CHUNK);
+    let cursor = AtomicUsize::new(0);
+    let skipped = AtomicUsize::new(0);
+    if shards.is_empty() {
+        shards.push(CombineScratch::default());
+    }
+    let cs = Mutex::new(std::mem::take(&mut shards[0]));
+    let agg_ptr = SyncMutPtr(agg.as_mut_ptr());
+    let p_ptr = SyncMutPtr(params.as_mut_ptr());
+    let v_ptr = SyncMutPtr(velocity.as_mut_ptr());
+    let mut late_cached = 0u64;
+    let mut late_malformed = 0u64;
+    let v0 = server.collect_virtual_us();
+    {
+        let aux = |/* one grid chunk per drive slice */| {
+            let c = cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= chunks {
+                return;
+            }
+            let start = c * OVERLAP_CHUNK;
+            let end = (start + OVERLAP_CHUNK).min(d);
+            // SAFETY: chunk `c` exclusively owns coordinates
+            // `[start, end)` of all three vectors — the cursor hands out
+            // each chunk at most once, at most one aux task runs per
+            // drive slice (slices are separated by the fan-out barrier
+            // inside `collect_step_aux`), and the drain pass below only
+            // touches chunks the cursor never handed out. The vectors
+            // outlive the session loop, which completes before this
+            // function returns.
+            let len = end - start;
+            let agg_r = unsafe { std::slice::from_raw_parts_mut(agg_ptr.get().add(start), len) };
+            let p_r = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(start), len) };
+            let v_r = unsafe { std::slice::from_raw_parts_mut(v_ptr.get().add(start), len) };
+            let mut cs = cs.lock().unwrap_or_else(|e| e.into_inner());
+            let skip = combine_update_range(sel, grads, start, agg_r, p_r, v_r, lr, mu, &mut cs);
+            if skip > 0 {
+                skipped.fetch_add(skip, Ordering::Relaxed);
+            }
+        };
+        // Late-acceptance window: lift the quorum cap and keep slicing the
+        // drive — one combine chunk per slice — until the grid is spent or
+        // the drive exhausts. Late arrivals refresh the straggler cache
+        // only; a malformed late submission is rejected like any other.
+        server.collect_extend();
+        while cursor.load(Ordering::Relaxed) < chunks {
+            let status = server.collect_step_aux(
+                &mut |worker, gradient: &[f32]| {
+                    if gradient.len() != d {
+                        late_malformed += 1;
+                        return false;
+                    }
+                    match last_good.get_mut(worker) {
+                        Some(Some(buf)) => buf.copy_from_slice(gradient),
+                        Some(slot) => *slot = Some(gradient.to_vec()),
+                        None => return false,
+                    }
+                    late_cached += 1;
+                    true
+                },
+                Some(&aux),
+            );
+            if status == CollectStatus::Exhausted {
+                break;
+            }
+        }
+    }
+    let saved_us = server.collect_virtual_us().saturating_sub(v0);
+    server.collect_finish();
+    shards[0] = cs.into_inner().unwrap_or_else(|e| e.into_inner());
+    // Drain the coordinate tail the window did not reach, at full
+    // parallelism (any partition of the remainder is bit-identical).
+    let base = (cursor.load(Ordering::Relaxed).min(chunks)) * OVERLAP_CHUNK;
+    if base < d {
+        shard_zip(
+            par,
+            [&mut agg[base..], &mut params[base..], &mut velocity[base..]],
+            shards,
+            CombineScratch::default,
+            MIN_COORDS_PER_SHARD,
+            |offset, [agg_r, p_r, v_r]: [&mut [f32]; 3], cs| {
+                let skip = combine_update_range(
+                    sel,
+                    grads,
+                    base + offset,
+                    agg_r,
+                    p_r,
+                    v_r,
+                    lr,
+                    mu,
+                    cs,
+                );
+                if skip > 0 {
+                    skipped.fetch_add(skip, Ordering::Relaxed);
+                }
+            },
+        );
+    }
+    Ok(PrefixOutcome {
+        skipped: skipped.load(Ordering::Relaxed),
+        saved_us,
+        late_cached,
+        late_malformed,
+    })
 }
 
 /// Tunables not covered by the experiment config.
@@ -105,6 +344,11 @@ pub struct CoordinatorOptions {
     /// (`FirstM`, the paper's synchronous model — stragglers fall
     /// through the last-good cache).
     pub collect: CollectMode,
+    /// Whether the combine+update tail overlaps the remaining collection
+    /// (see [`OverlapMode`]; each round is bit-identical either way, and
+    /// a straggler salvaged by the overlap window only changes *later*
+    /// rounds' fallback).
+    pub overlap: OverlapMode,
 }
 
 impl Default for CoordinatorOptions {
@@ -114,6 +358,7 @@ impl Default for CoordinatorOptions {
             schedule: LrSchedule::Fixed { base: 0.1 },
             seed: 1,
             collect: CollectMode::All,
+            overlap: OverlapMode::Off,
         }
     }
 }
@@ -140,6 +385,12 @@ pub struct RoundOutcome {
     /// report all rows — see `Selection::selected_rows`. The resilience
     /// bench derives Byzantine-filtering precision from these.
     pub selected: Vec<usize>,
+    /// Virtual microseconds of straggler drive progress that ran
+    /// *during* the combine+update tail (`overlap = "prefix"` on the
+    /// pooled transport; 0 otherwise) — the measured serialization win
+    /// of the streaming prefix-combine, also accumulated in the
+    /// `overlap_saved_us` metrics counter.
+    pub overlap_saved_us: u64,
 }
 
 /// The parameter server.
@@ -287,12 +538,24 @@ impl Coordinator {
         self.options.collect = mode;
     }
 
+    /// Switch combine/collection overlap between rounds.
+    pub fn set_overlap(&mut self, mode: OverlapMode) {
+        self.options.overlap = mode;
+    }
+
     /// Drive one synchronous SGD round.
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
         self.round += 1;
         let round = self.round;
         let honest = self.n - self.byz;
         let expect = self.expect_per_round();
+        // Streaming prefix-combine needs the pooled time-sliced drive to
+        // interleave with, and a nonzero quorum to define the prefix (a
+        // contract-violating expect = 0 round lives off the cache on
+        // either path).
+        let overlap = self.options.overlap == OverlapMode::Prefix
+            && self.server.transport() == TransportKind::Pooled
+            && expect > 0;
 
         // 1. Broadcast current parameters.
         let params = Arc::new(self.params.clone());
@@ -300,9 +563,11 @@ impl Coordinator {
 
         // 2. Collect honest gradients (deadline-bounded, first-m aware),
         //    copying each straight into its GradMatrix row and the
-        //    straggler cache — the zero-copy path of
-        //    `ServerEndpoint::collect_with`, so a steady-state round
-        //    allocates nothing per message.
+        //    straggler cache — the zero-copy incremental session of
+        //    `ServerEndpoint`, so a steady-state round allocates nothing
+        //    per message. Under prefix overlap the session is left open
+        //    at the quorum: the combine tail (step 7) keeps slicing the
+        //    drive and salvages late arrivals into the cache.
         let mut have = vec![false; honest];
         let mut bad_len: Option<(usize, usize)> = None;
         let mut malformed: u64 = 0;
@@ -313,36 +578,45 @@ impl Coordinator {
             let have = &mut have;
             let bad_len = &mut bad_len;
             let malformed = &mut malformed;
-            self.server.collect_with(
-                round,
-                expect,
-                self.options.round_timeout,
-                |worker, gradient| {
-                    if gradient.len() != d {
-                        // A malformed submission is a dropped message,
-                        // not a reason to abort training: the worker
-                        // falls through the straggler cache below. (A
-                        // single bad actor could otherwise DoS the run.)
-                        // Rejecting it (`false`) also keeps it from
-                        // filling a first-m quorum slot — the transport
-                        // keeps collecting honest gradients instead.
-                        *malformed += 1;
-                        if bad_len.is_none() {
-                            *bad_len = Some((worker, gradient.len()));
-                        }
-                        return false;
+            let mut accept = |worker: usize, gradient: &[f32]| {
+                if gradient.len() != d {
+                    // A malformed submission is a dropped message,
+                    // not a reason to abort training: the worker
+                    // falls through the straggler cache below. (A
+                    // single bad actor could otherwise DoS the run.)
+                    // Rejecting it (`false`) also keeps it from
+                    // filling a first-m quorum slot — the transport
+                    // keeps collecting honest gradients instead.
+                    *malformed += 1;
+                    if bad_len.is_none() {
+                        *bad_len = Some((worker, gradient.len()));
                     }
-                    grads.set_row(worker, gradient);
-                    let cache = &mut last_good[worker];
-                    if let Some(buf) = cache {
-                        buf.copy_from_slice(gradient);
-                    } else {
-                        *cache = Some(gradient.to_vec());
+                    return false;
+                }
+                grads.set_row(worker, gradient);
+                let cache = &mut last_good[worker];
+                if let Some(buf) = cache {
+                    buf.copy_from_slice(gradient);
+                } else {
+                    *cache = Some(gradient.to_vec());
+                }
+                have[worker] = true;
+                true
+            };
+            if overlap {
+                self.server
+                    .collect_begin(round, expect, self.options.round_timeout);
+                loop {
+                    match self.server.collect_step(&mut accept) {
+                        CollectStatus::Pending => continue,
+                        CollectStatus::Quorum | CollectStatus::Exhausted => break,
                     }
-                    have[worker] = true;
-                    true
-                },
-            );
+                }
+                // Session intentionally left open — see step 7.
+            } else {
+                self.server
+                    .collect_with(round, expect, self.options.round_timeout, accept);
+            }
         }
         if malformed > 0 {
             self.metrics.add("gradients_malformed", malformed);
@@ -418,24 +692,53 @@ impl Coordinator {
         }
         let selected = sel.selected_rows().to_vec();
 
-        // 7. Fused combine + SGD update: one sharded pass over the
-        //    coordinate space — no separate full-d aggregate
-        //    materialisation pass. `self.agg` still receives the full
-        //    aggregate (the `last_aggregate` API). Non-finite aggregate
-        //    coordinates (a GAR bug or an un-filtered NaN attack) are
-        //    skipped per coordinate, never applied.
+        // 7. Combine + SGD update: one pass over the coordinate space —
+        //    no separate full-d aggregate materialisation. `self.agg`
+        //    still receives the full aggregate (the `last_aggregate`
+        //    API). Non-finite aggregate coordinates (a GAR bug or an
+        //    un-filtered NaN attack) are skipped per coordinate, never
+        //    applied. Under prefix overlap the pass walks a fixed chunk
+        //    grid co-scheduled with the still-open collection session
+        //    (late arrivals refresh the straggler cache only); the two
+        //    paths are bit-identical because combine is
+        //    partition-invariant and the update arithmetic is
+        //    coordinate-local.
         let lr = self.options.schedule.at((round - 1) as usize);
         self.opt.set_lr(lr);
         let sw = Stopwatch::start();
-        let skipped = fused_combine_update(
-            self.gar.parallelism(),
-            &sel,
-            &self.grads,
-            &mut self.agg,
-            &mut self.params,
-            &mut self.opt,
-            &mut self.scratch.shards,
-        )?;
+        let mut overlap_saved_us = 0u64;
+        let skipped = if overlap {
+            let out = prefix_combine_update(
+                self.gar.parallelism(),
+                &mut self.server,
+                &sel,
+                &self.grads,
+                &mut self.agg,
+                &mut self.params,
+                &mut self.opt,
+                &mut self.last_good,
+                &mut self.scratch.shards,
+            )?;
+            overlap_saved_us = out.saved_us;
+            self.metrics.add("overlap_saved_us", out.saved_us);
+            if out.late_cached > 0 {
+                self.metrics.add("gradients_late_cached", out.late_cached);
+            }
+            if out.late_malformed > 0 {
+                self.metrics.add("gradients_malformed", out.late_malformed);
+            }
+            out.skipped
+        } else {
+            fused_combine_update(
+                self.gar.parallelism(),
+                &sel,
+                &self.grads,
+                &mut self.agg,
+                &mut self.params,
+                &mut self.opt,
+                &mut self.scratch.shards,
+            )?
+        };
         let combine_seconds = sw.elapsed_s();
         self.selection = sel;
         self.metrics.time("combine_update", combine_seconds);
@@ -453,6 +756,7 @@ impl Coordinator {
             missing,
             agg_seconds,
             selected,
+            overlap_saved_us,
         })
     }
 
@@ -533,6 +837,7 @@ mod tests {
                 schedule: LrSchedule::Fixed { base: 0.2 },
                 seed: 3,
                 collect: CollectMode::All,
+                overlap: OverlapMode::Off,
             },
         )
         .unwrap();
@@ -891,6 +1196,87 @@ mod tests {
                 assert!(v.is_finite());
             }
         }
+    }
+
+    #[test]
+    fn overlap_mode_parses_and_displays() {
+        assert_eq!("off".parse::<OverlapMode>().unwrap(), OverlapMode::Off);
+        assert_eq!("prefix".parse::<OverlapMode>().unwrap(), OverlapMode::Prefix);
+        assert!("eager".parse::<OverlapMode>().is_err());
+        assert_eq!(OverlapMode::default(), OverlapMode::Off);
+        for mode in OverlapMode::ALL {
+            assert_eq!(mode.as_str().parse::<OverlapMode>().unwrap(), mode);
+        }
+    }
+
+    #[test]
+    fn prefix_overlap_rounds_are_bit_identical_to_off() {
+        // The same seeded first-m cluster, run with overlap off and with
+        // prefix overlap, must land on bit-identical parameters: the
+        // round matrix is frozen at the quorum and combine is
+        // partition-invariant. The stragglers' cost (30 ms) dwarfs the
+        // late-acceptance window (3 chunks at d = 9000 ⇒ 150 virtual µs),
+        // so the caches stay identical too and the equality holds across
+        // rounds; the prefix run must also report drive progress
+        // overlapped with the combine tail.
+        let run = |overlap: OverlapMode| -> (Vec<f32>, u64) {
+            let problem = Arc::new(QuadraticProblem::new(9_000, 0.05, 7));
+            let faults = FaultModel {
+                cost: crate::transport::ComputeCost {
+                    base_us: 300,
+                    slow_workers: 2,
+                    slow_factor: 100.0,
+                },
+                ..Default::default()
+            };
+            let (server, workers) =
+                build(TransportKind::Pooled, 7, faults, &Parallelism::new(2));
+            let pairs = workers
+                .into_iter()
+                .enumerate()
+                .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
+                .collect();
+            serve_workers(pairs);
+            let mut coord = Coordinator::new(
+                GarKind::MultiKrum.instantiate(7, 2).unwrap(),
+                None,
+                0,
+                server,
+                vec![0.0; 9_000],
+                0.2,
+                0.0,
+                CoordinatorOptions {
+                    round_timeout: Duration::from_secs(10),
+                    schedule: LrSchedule::Fixed { base: 0.2 },
+                    seed: 3,
+                    collect: CollectMode::FirstM,
+                    overlap,
+                },
+            )
+            .unwrap();
+            let mut saved = 0u64;
+            for _ in 0..4 {
+                let out = coord.run_round().unwrap();
+                assert_eq!(out.collected, 5, "{overlap}: fast-tier quorum");
+                assert_eq!(out.missing, 2, "{overlap}: stragglers cached out");
+                saved += out.overlap_saved_us;
+            }
+            let params = coord.params().to_vec();
+            coord.shutdown();
+            (params, saved)
+        };
+        let (p_off, saved_off) = run(OverlapMode::Off);
+        let (p_prefix, saved_prefix) = run(OverlapMode::Prefix);
+        assert_eq!(p_off, p_prefix, "prefix overlap must not change the model");
+        assert_eq!(saved_off, 0);
+        assert!(
+            saved_prefix > 0,
+            "prefix overlap must report drive progress during the combine tail"
+        );
+        // The straggler cache must be equally (un)populated: no late
+        // arrival fits the window, so no run salvages anything.
+        // (Divergence here would leak into round ≥ 2 parameters, which
+        // the equality above already rules out.)
     }
 
     #[test]

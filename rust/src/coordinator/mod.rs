@@ -17,5 +17,5 @@ mod evaluator;
 
 pub use builder::{launch, LaunchedCluster};
 pub(crate) use core::fused_combine_update;
-pub use core::{Coordinator, CoordinatorOptions, RoundOutcome};
+pub use core::{Coordinator, CoordinatorOptions, OverlapMode, RoundOutcome};
 pub use evaluator::Evaluator;

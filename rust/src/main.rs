@@ -88,6 +88,7 @@ USAGE:
                     [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
                     [--eval-every K] [--seed S] [--threads T]
                     [--transport threaded|pooled] [--collect first-m|all]
+                    [--overlap off|prefix] [--params-checksum]
                     [--artifacts DIR] [--curve-out FILE]
   multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
   multibulyan bench <fig2|fig3|dscaling|slowdown|threads|straggler
@@ -111,6 +112,15 @@ Collect: --collect all (default; wait for every honest worker up to the
          round timeout) | first-m (the paper's synchronous model —
          proceed at the fastest m = n − f gradients; stragglers fall
          through the last-good cache)
+Overlap: --overlap off (default; collect, then select, then combine) |
+         prefix (streaming prefix-combine: select at the first-m quorum
+         and interleave the combine+update chunks with the remaining
+         drive slices on the pooled transport; each round is
+         bit-identical to off, and a straggler finishing inside the
+         overlap window is salvaged into the last-good cache — a
+         fresher fallback for later rounds than off's older-or-zero row)
+         --params-checksum prints an FNV-1a digest of the final
+         parameters (the CI determinism-matrix probe)
 ";
 
 fn main() {
@@ -193,6 +203,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 threads: 1,
                 transport: Default::default(),
                 collect: Default::default(),
+                overlap: Default::default(),
                 output_dir: None,
             }
         }
@@ -209,6 +220,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(c) = args.get("collect") {
         exp.collect = c.parse()?;
     }
+    if let Some(o) = args.get("overlap") {
+        exp.overlap = o.parse()?;
+    }
     exp.validate()?;
     let compute = match &exp.model {
         ModelConfig::Artifact { dir, .. } => {
@@ -220,7 +234,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let handle = compute.as_ref().map(|(s, m)| (s.handle(), m.clone()));
     println!(
-        "training: gar={} attack={} n={} f={} byz={} steps={} b={} transport={} collect={}",
+        "training: gar={} attack={} n={} f={} byz={} steps={} b={} transport={} collect={} \
+         overlap={}",
         exp.gar_spec(),
         exp.attack.label(),
         exp.cluster.n,
@@ -229,7 +244,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         exp.train.steps,
         exp.train.batch_size,
         exp.transport,
-        exp.collect
+        exp.collect,
+        exp.overlap
     );
     let cluster = launch(&exp, handle)?;
     let mut coordinator = cluster.coordinator;
@@ -245,6 +261,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("curve-out") {
         coordinator.metrics.write_curve_csv(path)?;
         println!("curve written to {path}");
+    }
+    if args.has("params-checksum") {
+        // FNV-1a over the little-endian parameter bits: the determinism
+        // matrix in CI diffs this digest across transport × threads ×
+        // overlap legs of the same seeded run.
+        let digest = multibulyan::util::fnv1a(
+            coordinator
+                .params()
+                .iter()
+                .flat_map(|v| v.to_le_bytes()),
+        );
+        println!("params_checksum=0x{digest:016x}");
     }
     coordinator.shutdown();
     Ok(())

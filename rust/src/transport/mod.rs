@@ -47,8 +47,18 @@
 //!
 //! Both backends preserve the same observable semantics: broadcast →
 //! collect with timeout, fault-model delay/drop on the worker → server
-//! direction, and stale-round discard. The shared test harness at the
-//! bottom of this file runs the whole transport suite against both.
+//! direction, and stale-round discard. Collection itself is an
+//! **incremental session** ([`ServerEndpoint::collect_begin`] /
+//! [`collect_step`](ServerEndpoint::collect_step) /
+//! [`collect_finish`](ServerEndpoint::collect_finish)) that yields
+//! accepted gradients in completion order and reports
+//! [`CollectStatus::Quorum`] at the `expect` cap — the one-shot
+//! [`ServerEndpoint::collect_with`] is a wrapper over it, and the
+//! coordinator's prefix-overlap mode keeps the session open past the
+//! quorum to co-schedule combine work with the remaining drive
+//! ([`ServerEndpoint::collect_step_aux`]) and salvage late arrivals.
+//! The shared test harness at the bottom of this file runs the whole
+//! transport suite against both backends.
 //!
 //! [`runtime::pool::ThreadPool`]: crate::runtime::ThreadPool
 
@@ -134,6 +144,24 @@ impl ComputeCost {
             self.base_us
         }
     }
+}
+
+/// Progress report of an incremental collection session (the
+/// `collect_begin`/`collect_step` API of [`ServerEndpoint`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectStatus {
+    /// More progress is possible: workers are still running (pooled) or
+    /// the deadline has not passed (threaded) — step again.
+    Pending,
+    /// The session's quorum cap (`expect` accepted gradients) is met. The
+    /// caller may stop collecting — abandoning stragglers exactly like
+    /// the one-shot `collect_with` — or lift the cap with
+    /// [`ServerEndpoint::collect_extend`] and keep stepping to salvage
+    /// late arrivals while doing other work.
+    Quorum,
+    /// Collection is over below the cap: the timeout expired, every
+    /// worker finished, the channel hung up, or the runtime shut down.
+    Exhausted,
 }
 
 /// How many gradients a round's collection waits for (the `collect`
@@ -368,23 +396,107 @@ impl ServerEndpoint {
         }
     }
 
+    /// Open an incremental collection session for `round`: up to `expect`
+    /// gradients will be accepted before [`collect_step`] reports
+    /// [`CollectStatus::Quorum`], and `timeout` bounds the session
+    /// (wall-clock on the threaded backend; *virtual* microseconds under
+    /// the pooled backend's [`ComputeCost`] model, so a seeded race is
+    /// bit-reproducible). On the pooled backend this consumes the pending
+    /// broadcast — the logical workers run only while the session is
+    /// stepped.
+    ///
+    /// [`collect_step`]: Self::collect_step
+    pub fn collect_begin(&mut self, round: u64, expect: usize, timeout: Duration) {
+        match &mut self.inner {
+            ServerImpl::Threaded(s) => s.collect_begin(round, expect, timeout),
+            ServerImpl::Pooled(s) => s.collect_begin(round, expect, timeout),
+        }
+    }
+
+    /// Advance the open session one step, delivering accepted gradients
+    /// in completion order via `on_gradient` (pooled: one virtual drive
+    /// slice; threaded: one bounded channel wait). The callback returns
+    /// whether it *accepted* the gradient — a `false` (e.g. a malformed
+    /// submission the server rejects) consumes the message but does not
+    /// count toward `expect`, so a persistent bad actor cannot displace
+    /// honest gradients from a first-m quorum. Stale-round gradients are
+    /// discarded. `gradient` borrows transport-owned memory (the
+    /// zero-copy path).
+    pub fn collect_step(
+        &mut self,
+        mut on_gradient: impl FnMut(usize, &[f32]) -> bool,
+    ) -> CollectStatus {
+        self.collect_step_aux(&mut on_gradient, None)
+    }
+
+    /// [`collect_step`](Self::collect_step) with an optional auxiliary
+    /// task co-scheduled alongside the collection's own progress: on the
+    /// pooled backend `aux` runs as one extra task on the drive slice's
+    /// pool fan-out (exactly once per slice — the prefix-overlap combine
+    /// hook); on the threaded backend it runs inline before the channel
+    /// poll. `aux` must be cheap relative to a slice and must not submit
+    /// work to the same pool (reentrancy — see `runtime::pool`).
+    pub fn collect_step_aux(
+        &mut self,
+        on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
+        aux: Option<&(dyn Fn() + Sync)>,
+    ) -> CollectStatus {
+        match &mut self.inner {
+            ServerImpl::Threaded(s) => s.collect_step(on_gradient, aux),
+            ServerImpl::Pooled(s) => s.collect_step(on_gradient, aux),
+        }
+    }
+
+    /// Lift the open session's quorum cap: every subsequent completion is
+    /// delivered (the late-acceptance window of the overlap path). The
+    /// session still ends at its timeout.
+    pub fn collect_extend(&mut self) {
+        match &mut self.inner {
+            ServerImpl::Threaded(s) => s.collect_extend(),
+            ServerImpl::Pooled(s) => s.collect_extend(),
+        }
+    }
+
+    /// The open session's virtual clock, microseconds (pooled backend;
+    /// always 0 on threaded, which has no virtual time). The coordinator
+    /// differences this across the overlap window to report
+    /// `overlap_saved_us`.
+    pub fn collect_virtual_us(&self) -> u64 {
+        match &self.inner {
+            ServerImpl::Threaded(_) => 0,
+            ServerImpl::Pooled(s) => s.collect_virtual_us(),
+        }
+    }
+
+    /// Gradients accepted by the open session so far.
+    pub fn collect_accepted(&self) -> usize {
+        match &self.inner {
+            ServerImpl::Threaded(s) => s.collect_accepted(),
+            ServerImpl::Pooled(s) => s.collect_accepted(),
+        }
+    }
+
+    /// Close the session: remaining stragglers are abandoned (pooled:
+    /// their unexecuted work never runs; threaded: their eventual message
+    /// goes stale) exactly like the end of a one-shot `collect_with`.
+    pub fn collect_finish(&mut self) {
+        match &mut self.inner {
+            ServerImpl::Threaded(s) => s.collect_finish(),
+            ServerImpl::Pooled(s) => s.collect_finish(),
+        }
+    }
+
     /// Collect up to `expect` gradients for `round`, calling
     /// `on_gradient(worker, gradient)` for each as it arrives; returns the
-    /// number accepted. The callback returns whether it *accepted* the
-    /// gradient — a `false` (e.g. a malformed submission the server
-    /// rejects) consumes the message but does not count toward `expect`,
-    /// so a persistent bad actor cannot displace honest gradients from a
-    /// first-m quorum. Stale-round gradients are discarded. Both
-    /// backends honour the deadline and both return early once `expect`
-    /// gradients were accepted — the first-m race of the paper's
-    /// synchronous model: the threaded backend waits on real messages up
-    /// to the wall-clock `timeout`; the pooled backend time-slices its
-    /// logical workers along a virtual clock, delivers in completion
-    /// order, and interprets `timeout` in *virtual* microseconds against
-    /// the [`ComputeCost`] model (so a seeded race is bit-reproducible —
-    /// a worker whose simulated cost exceeds the timeout
-    /// deterministically misses the round, and a straggler abandoned
-    /// mid-round never executes its remaining work).
+    /// number accepted. One-shot wrapper over the incremental session API
+    /// (`collect_begin` + `collect_step` to quorum/exhaustion +
+    /// `collect_finish`), so both paths share one set of collection
+    /// semantics: completion-order delivery, accept/reject callback,
+    /// stale-round discard, deadline honoured on both backends (wall
+    /// clock on threaded, virtual microseconds on pooled — a worker whose
+    /// simulated cost exceeds the timeout deterministically misses the
+    /// round, and a straggler abandoned mid-round never executes its
+    /// remaining work).
     ///
     /// This is the zero-copy path: `gradient` borrows transport-owned
     /// memory, so a full round makes no per-message allocation on the
@@ -396,10 +508,16 @@ impl ServerEndpoint {
         timeout: Duration,
         mut on_gradient: impl FnMut(usize, &[f32]) -> bool,
     ) -> usize {
-        match &mut self.inner {
-            ServerImpl::Threaded(s) => s.collect_with(round, expect, timeout, &mut on_gradient),
-            ServerImpl::Pooled(s) => s.collect_with(round, expect, timeout, &mut on_gradient),
+        self.collect_begin(round, expect, timeout);
+        loop {
+            match self.collect_step(&mut on_gradient) {
+                CollectStatus::Pending => continue,
+                CollectStatus::Quorum | CollectStatus::Exhausted => break,
+            }
         }
+        let got = self.collect_accepted();
+        self.collect_finish();
+        got
     }
 
     /// Owned-message convenience wrapper over
@@ -983,6 +1101,112 @@ mod tests {
         for mode in CollectMode::ALL {
             assert_eq!(mode.as_str().parse::<CollectMode>().unwrap(), mode);
         }
+    }
+
+    #[test]
+    fn incremental_collect_reaches_quorum_then_salvages_late_arrivals() {
+        // Pooled session: quorum at the 2 fast workers, then an extended
+        // late window (aux co-scheduled per slice) harvests the straggler
+        // that a one-shot first-m collect would abandon.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let faults = FaultModel {
+            cost: ComputeCost {
+                base_us: 200,
+                slow_workers: 1,
+                slow_factor: 4.0,
+            },
+            ..Default::default()
+        };
+        let mut server = harness(TransportKind::Pooled, 3, faults, |id, round, _p, emit| {
+            emit.send(round, &[id as f32]);
+        });
+        server.broadcast(1, Arc::new(vec![0.0]));
+        server.collect_begin(1, 2, Duration::from_secs(5));
+        let mut quorum_ids = Vec::new();
+        loop {
+            match server.collect_step(|w, _g| {
+                quorum_ids.push(w);
+                true
+            }) {
+                CollectStatus::Pending => continue,
+                CollectStatus::Quorum => break,
+                CollectStatus::Exhausted => panic!("quorum must be reachable"),
+            }
+        }
+        assert_eq!(quorum_ids, vec![1, 2], "fast tier, completion order");
+        let v_quorum = server.collect_virtual_us();
+        assert!(v_quorum >= 200, "fast tier costs 200 µs of virtual time");
+
+        server.collect_extend();
+        let aux_runs = AtomicUsize::new(0);
+        let aux = |/* one chunk of overlap work */| {
+            aux_runs.fetch_add(1, Ordering::Relaxed);
+        };
+        let mut late_ids = Vec::new();
+        loop {
+            match server.collect_step_aux(
+                &mut |w, _g| {
+                    late_ids.push(w);
+                    true
+                },
+                Some(&aux),
+            ) {
+                CollectStatus::Pending | CollectStatus::Quorum => continue,
+                CollectStatus::Exhausted => break,
+            }
+        }
+        assert_eq!(late_ids, vec![0], "the straggler lands in the late window");
+        assert!(server.collect_virtual_us() > v_quorum, "clock advanced");
+        assert!(aux_runs.load(Ordering::Relaxed) > 0, "aux co-scheduled");
+        assert_eq!(server.collect_accepted(), 3);
+        server.collect_finish();
+        server.shutdown();
+    }
+
+    #[test]
+    fn incremental_collect_matches_one_shot_on_both_backends() {
+        // begin/step/finish must reproduce collect_with's semantics:
+        // same accepted set at quorum, Exhausted at the deadline.
+        on_both(|kind| {
+            let mut server = harness(kind, 4, FaultModel::default(), |id, round, _p, emit| {
+                emit.send(round, &[id as f32]);
+            });
+            server.broadcast(1, Arc::new(vec![0.0]));
+            server.collect_begin(1, 4, Duration::from_secs(5));
+            let mut got = Vec::new();
+            loop {
+                match server.collect_step(|w, _g| {
+                    got.push(w);
+                    true
+                }) {
+                    CollectStatus::Pending => continue,
+                    CollectStatus::Quorum => break,
+                    CollectStatus::Exhausted => panic!("{kind}: expected quorum"),
+                }
+            }
+            assert_eq!(server.collect_accepted(), 4, "{kind}");
+            server.collect_finish();
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1, 2, 3], "{kind}");
+
+            // No broadcast: the session exhausts without delivering.
+            server.collect_begin(2, 1, Duration::from_millis(20));
+            let mut n = 0usize;
+            loop {
+                match server.collect_step(|_w, _g| {
+                    n += 1;
+                    true
+                }) {
+                    CollectStatus::Pending => continue,
+                    CollectStatus::Quorum => panic!("{kind}: nothing was broadcast"),
+                    CollectStatus::Exhausted => break,
+                }
+            }
+            assert_eq!(n, 0, "{kind}");
+            server.collect_finish();
+            server.shutdown();
+        });
     }
 
     #[test]

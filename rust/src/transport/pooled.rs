@@ -11,24 +11,36 @@
 //!   so slots never contend; the per-slot `Mutex` is uncontended and exists
 //!   to keep the server/worker hand-off safe without `unsafe`.
 //!
-//! [`Server::collect_with`] *drives* the round with a **time-sliced
-//! drive**: a virtual clock advances in [`SLICE_US`]-microsecond slices,
-//! and in each slice every still-running worker body is stepped
+//! Collection runs as an **incremental session** (the
+//! `collect_begin`/`collect_step` API of [`super::ServerEndpoint`]): each
+//! step advances the **time-sliced drive** by one [`SLICE_US`]-microsecond
+//! virtual slice, stepping every still-running worker body
 //! ([`WorkerBody::step_to`]) to the completed-work fraction its
 //! [`ComputeCost`](super::ComputeCost) implies at the current virtual
 //! time. Bodies that finish a slice emit through the fault-model
-//! [`Emitter`](super::Emitter) and are delivered immediately, in
+//! [`Emitter`](super::Emitter) and are queued for delivery in
 //! **completion order** (finishing slice, ties broken by ascending worker
-//! index — the order a real parameter server would see arrivals). The
-//! drive stops as soon as
+//! index — the order a real parameter server would see arrivals), then
+//! delivered to the step's callback while the session's quorum cap
+//! (`expect`) has room. The session reports
 //!
-//! * `expect` gradients have been delivered (the first-m race: stragglers
-//!   are abandoned mid-computation and their remaining work is never
-//!   executed), or
-//! * the collect timeout — interpreted in virtual microseconds — expires
-//!   (a worker whose simulated cost exceeds the timeout deterministically
-//!   misses the round), or
-//! * every worker finished.
+//! * `Quorum` as soon as `expect` gradients were accepted (the first-m
+//!   race: the caller may stop here and abandon stragglers
+//!   mid-computation — their remaining work is never executed — or lift
+//!   the cap with `collect_extend` and keep stepping to salvage late
+//!   arrivals), and
+//! * `Exhausted` when the collect timeout — interpreted in virtual
+//!   microseconds — expires (a worker whose simulated cost exceeds the
+//!   timeout deterministically misses the round), or every worker
+//!   finished, or the runtime shut down.
+//!
+//! Each step's slice fan-out can co-schedule **one auxiliary task** (the
+//! `aux` hook): the coordinator's prefix-overlap mode uses it to run one
+//! combine+update chunk on the same pool fan-out that steps the
+//! stragglers, overlapping the O(d) aggregation tail with the remaining
+//! collection. Exactly one aux task per slice keeps the late-acceptance
+//! window a deterministic function of the chunk count — independent of
+//! the thread count.
 //!
 //! Because the clock is virtual and the per-slice step order never feeds
 //! back into the results, a seeded run is bit-identical for every thread
@@ -37,7 +49,7 @@
 //! worker completes in the first slice and the drive degenerates to the
 //! old run-to-completion fan-out. Steady state: zero allocations, zero
 //! channel operations, zero thread spawns per round (the drive's
-//! `running`/`done` scratch is reused across rounds).
+//! `running`/`done`/`ready` scratch is reused across rounds).
 //!
 //! Because bodies run *on* the pool, a body must not submit nested
 //! parallel regions to the same pool (see `runtime::pool` reentrancy
@@ -47,9 +59,10 @@
 //! [`ThreadPool`]: crate::runtime::ThreadPool
 //! [`WorkerBody::step_to`]: super::WorkerBody::step_to
 
-use super::{lock, Emitter, EmitterSink, FaultModel, StepOutcome, WorkerBody};
+use super::{lock, CollectStatus, Emitter, EmitterSink, FaultModel, StepOutcome, WorkerBody};
 use crate::runtime::Parallelism;
 use crate::util::Rng64;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -60,7 +73,7 @@ use std::time::{Duration, Instant};
 /// slices resolve finer cost differences at more fan-out overhead. Cost
 /// models are expressed in hundreds-to-thousands of µs, so 50 µs keeps
 /// quantisation error under a few percent.
-const SLICE_US: u64 = 50;
+pub(crate) const SLICE_US: u64 = 50;
 
 /// One worker's arena slot: the last gradient it emitted, tagged with the
 /// round it answers. `fresh` is cleared when the server consumes the slot
@@ -104,16 +117,46 @@ struct DriveState {
     running: Vec<usize>,
     /// Per-worker finished flag for the current slice's fan-out.
     done: Vec<AtomicBool>,
+    /// Finishers harvested in completion order but not yet delivered
+    /// (delivery is capped at the session's `expect`; `collect_extend`
+    /// lifts the cap so a late window can drain the queue).
+    ready: VecDeque<usize>,
+}
+
+/// One in-flight incremental collection (`collect_begin` ..
+/// `collect_finish`).
+struct Session {
+    /// Round being collected; stale slots are discarded.
+    round: u64,
+    /// Quorum cap: delivery stops consuming finishers once this many were
+    /// accepted. `usize::MAX` after `collect_extend`.
+    expect: usize,
+    /// Collect timeout in virtual microseconds.
+    virtual_deadline: u64,
+    /// Wall-clock safety net against pathological real compute costs.
+    wall_deadline: Option<Instant>,
+    /// The virtual clock, advanced [`SLICE_US`] per step.
+    t_virtual: u64,
+    /// Gradients accepted so far (callback returned `true`).
+    accepted: usize,
+    /// The broadcast being driven (`None`: collect without a preceding
+    /// broadcast — only leftover fresh slots can be delivered).
+    drive: Option<(u64, Arc<Vec<f32>>)>,
+    /// Driving is over (deadline, every worker finished, or shutdown).
+    done: bool,
+    /// The one-time index-order sweep of leftover fresh slots ran.
+    swept: bool,
 }
 
 /// Pooled server half.
 pub(super) struct Server {
     runtime: Arc<Runtime>,
     /// The broadcast slot: filled by `broadcast`, consumed (driven) by the
-    /// next `collect_with`. A re-broadcast before a collect supersedes the
+    /// next collection. A re-broadcast before a collect supersedes the
     /// previous round — the synchronous coordinator never does this.
     pending: Option<(u64, Arc<Vec<f32>>)>,
     drive: DriveState,
+    session: Option<Session>,
 }
 
 impl Server {
@@ -121,73 +164,73 @@ impl Server {
         self.pending = Some((round, params));
     }
 
-    pub(super) fn collect_with(
-        &mut self,
-        round: u64,
-        expect: usize,
-        timeout: Duration,
-        on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
-    ) -> usize {
-        let mut got = 0;
-        if let Some((r, params)) = self.pending.take() {
-            got = self.drive_collect(r, &params, round, expect, timeout, on_gradient);
+    pub(super) fn collect_begin(&mut self, round: u64, expect: usize, timeout: Duration) {
+        let n = self.runtime.cells.len();
+        let broadcast = self.pending.take();
+        self.drive.running.clear();
+        self.drive.ready.clear();
+        if broadcast.is_some() && !self.runtime.shutdown.load(Ordering::Acquire) {
+            self.drive.running.extend(0..n);
         }
-        // Sweep any remaining fresh slots for `round` in worker-index
-        // order: completion-order ties past `expect` that a retried
-        // collect may still want, or a collect without a preceding
-        // broadcast. Normally finds nothing.
-        for (i, cell) in self.runtime.cells.iter().enumerate() {
-            if got >= expect {
-                break;
-            }
-            let mut slot = lock(&cell.slot);
-            if slot.fresh && slot.round == round {
-                slot.fresh = false;
-                if on_gradient(i, &slot.grad) {
-                    got += 1;
-                }
-            }
+        while self.drive.done.len() < n {
+            self.drive.done.push(AtomicBool::new(false));
         }
-        got
+        self.session = Some(Session {
+            round,
+            expect,
+            virtual_deadline: timeout.as_micros().min(u128::from(u64::MAX)) as u64,
+            wall_deadline: Instant::now().checked_add(timeout),
+            t_virtual: 0,
+            accepted: 0,
+            drive: broadcast,
+            done: false,
+            swept: false,
+        });
     }
 
-    /// The time-sliced drive (module docs): run round `drive_round` at
-    /// `params` across the pool, delivering gradients for `collect_round`
-    /// in completion order until `expect` arrived, the virtual deadline
-    /// passed, or everyone finished. Returns the number delivered.
-    fn drive_collect(
+    /// Advance the session by one drive slice, delivering queued/new
+    /// finishers (below the quorum cap) to `on_gradient` — see the module
+    /// docs. `aux`, when present, is co-scheduled as one extra task on the
+    /// slice's pool fan-out (it runs only on slices that actually step
+    /// workers).
+    pub(super) fn collect_step(
         &mut self,
-        drive_round: u64,
-        params: &Arc<Vec<f32>>,
-        collect_round: u64,
-        expect: usize,
-        timeout: Duration,
         on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
-    ) -> usize {
+        aux: Option<&(dyn Fn() + Sync)>,
+    ) -> CollectStatus {
         let rt = Arc::clone(&self.runtime);
-        if rt.shutdown.load(Ordering::Acquire) {
-            return 0;
-        }
-        let n = rt.cells.len();
+        let Some(sess) = self.session.as_mut() else {
+            return CollectStatus::Exhausted;
+        };
         let drive = &mut self.drive;
-        drive.running.clear();
-        drive.running.extend(0..n);
-        while drive.done.len() < n {
-            drive.done.push(AtomicBool::new(false));
+        // Queued finishers from earlier slices first (completion order).
+        deliver_ready(&rt, drive, sess, on_gradient);
+        if sess.accepted >= sess.expect {
+            return CollectStatus::Quorum;
         }
-        let params: &[f32] = params;
-        // The timeout bounds *virtual* time; the wall-clock deadline below
-        // is only a safety net against pathological real compute costs.
-        let virtual_deadline = timeout.as_micros().min(u128::from(u64::MAX)) as u64;
-        let wall_deadline = Instant::now().checked_add(timeout);
-        let mut t_virtual: u64 = 0;
-        let mut got = 0;
-        while !drive.running.is_empty() && got < expect {
-            t_virtual = t_virtual.saturating_add(SLICE_US);
+        // One virtual slice, if anything is still running.
+        if sess.done || drive.running.is_empty() {
+            sess.done = true;
+        } else if rt.shutdown.load(Ordering::Acquire) {
+            sess.done = true;
+        } else if let Some((drive_round, params)) = &sess.drive {
+            sess.t_virtual = sess.t_virtual.saturating_add(SLICE_US);
+            let t_virtual = sess.t_virtual;
+            let drive_round = *drive_round;
             {
                 let running = &drive.running[..];
                 let done = &drive.done[..];
-                rt.par.run_sharded(running.len(), &|k| {
+                let params: &[f32] = params;
+                let extra = usize::from(aux.is_some());
+                rt.par.run_sharded(running.len() + extra, &|k| {
+                    if k >= running.len() {
+                        // The co-scheduled auxiliary task (one per slice;
+                        // the prefix-overlap combine chunk).
+                        if let Some(aux) = aux {
+                            aux();
+                        }
+                        return;
+                    }
                     let i = running[k];
                     let cell = &rt.cells[i];
                     let mut guard = lock(&cell.driver);
@@ -228,45 +271,80 @@ impl Server {
                     done[i].store(finished, Ordering::Release);
                 });
             }
-            // Harvest: deliver this slice's finishers in ascending worker
+            // Harvest: queue this slice's finishers in ascending worker
             // index (completion order = finishing slice, then index) and
             // compact `running` in place (`retain` visits front-to-back
             // and preserves order).
             {
-                let done = &drive.done;
-                let cells = &rt.cells;
-                drive.running.retain(|&i| {
-                    if !done[i].load(Ordering::Acquire) {
-                        return true;
+                let DriveState { running, done, ready } = drive;
+                running.retain(|&i| {
+                    if done[i].load(Ordering::Acquire) {
+                        ready.push_back(i);
+                        false
+                    } else {
+                        true
                     }
-                    if got < expect {
-                        let mut slot = lock(&cells[i].slot);
-                        if slot.fresh && slot.round == collect_round {
-                            slot.fresh = false;
-                            // A rejected gradient (callback returns
-                            // false) is consumed but does not fill an
-                            // `expect` slot.
-                            if on_gradient(i, &slot.grad) {
-                                got += 1;
-                            }
-                        }
-                    }
-                    false
                 });
             }
-            if t_virtual >= virtual_deadline {
-                break; // stragglers deterministically miss the round
+            if drive.running.is_empty() || t_virtual >= sess.virtual_deadline {
+                sess.done = true; // stragglers deterministically miss the round
             }
-            if rt.shutdown.load(Ordering::Acquire) {
-                break;
+            if sess.wall_deadline.is_some_and(|d| Instant::now() >= d) {
+                sess.done = true; // wall-clock safety net
             }
-            if let Some(deadline) = wall_deadline {
-                if Instant::now() >= deadline {
-                    break; // wall-clock safety net
+        } else {
+            // Collect without a preceding broadcast: nothing to drive.
+            sess.done = true;
+        }
+        deliver_ready(&rt, drive, sess, on_gradient);
+        // Once driving is over, sweep any remaining fresh slots for the
+        // round in worker-index order: completion-order ties past the
+        // quorum that a retried or capless collect may still want, or a
+        // collect without a broadcast. Normally finds nothing.
+        if sess.done && !sess.swept && drive.ready.is_empty() {
+            sess.swept = true;
+            for (i, cell) in rt.cells.iter().enumerate() {
+                if sess.accepted >= sess.expect {
+                    break;
+                }
+                let mut slot = lock(&cell.slot);
+                if slot.fresh && slot.round == sess.round {
+                    slot.fresh = false;
+                    if on_gradient(i, &slot.grad) {
+                        sess.accepted += 1;
+                    }
                 }
             }
         }
-        got
+        if sess.accepted >= sess.expect {
+            CollectStatus::Quorum
+        } else if sess.done && drive.ready.is_empty() {
+            CollectStatus::Exhausted
+        } else {
+            CollectStatus::Pending
+        }
+    }
+
+    pub(super) fn collect_extend(&mut self) {
+        if let Some(sess) = self.session.as_mut() {
+            sess.expect = usize::MAX;
+        }
+    }
+
+    pub(super) fn collect_virtual_us(&self) -> u64 {
+        self.session.as_ref().map_or(0, |s| s.t_virtual)
+    }
+
+    pub(super) fn collect_accepted(&self) -> usize {
+        self.session.as_ref().map_or(0, |s| s.accepted)
+    }
+
+    pub(super) fn collect_finish(&mut self) {
+        // Abandon the session: stragglers never execute their remaining
+        // work; undelivered fresh slots go stale at the next broadcast.
+        self.session = None;
+        self.drive.running.clear();
+        self.drive.ready.clear();
     }
 
     pub(super) fn shutdown(&self) {
@@ -278,6 +356,30 @@ impl Server {
 
     pub(super) fn num_workers(&self) -> usize {
         self.runtime.cells.len()
+    }
+}
+
+/// Deliver queued finishers (completion order) while the quorum cap has
+/// room. A rejected gradient (callback returns `false`) is consumed but
+/// does not fill an `expect` slot; a finisher whose slot is stale or
+/// empty (dropped message, silent body) is consumed without a callback.
+fn deliver_ready(
+    rt: &Runtime,
+    drive: &mut DriveState,
+    sess: &mut Session,
+    on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
+) {
+    while sess.accepted < sess.expect {
+        let Some(i) = drive.ready.pop_front() else {
+            break;
+        };
+        let mut slot = lock(&rt.cells[i].slot);
+        if slot.fresh && slot.round == sess.round {
+            slot.fresh = false;
+            if on_gradient(i, &slot.grad) {
+                sess.accepted += 1;
+            }
+        }
     }
 }
 
@@ -335,6 +437,7 @@ pub(super) fn star(
             runtime,
             pending: None,
             drive: DriveState::default(),
+            session: None,
         },
         handles,
     )

@@ -6,10 +6,16 @@
 //! the module docs in [`super`](crate::transport) for how it compares to
 //! the pooled backend.
 
-use super::{Emitter, EmitterSink, FaultModel, FromWorker, WorkerBody};
+use super::{CollectStatus, Emitter, EmitterSink, FaultModel, FromWorker, WorkerBody};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Wall-clock granularity of one incremental collect step: the longest a
+/// single [`Server::collect_step`] blocks on the worker channel before
+/// reporting `Pending` (so an interleaving caller — the prefix-overlap
+/// combine — regains control promptly).
+const STEP: Duration = Duration::from_millis(1);
 
 /// Server → worker messages (internal to this backend; the pooled backend
 /// has no message objects at all).
@@ -20,10 +26,24 @@ enum ToWorker {
     Shutdown,
 }
 
+/// One in-flight incremental collection (`collect_begin` ..
+/// `collect_finish`); the threaded backend has no virtual clock, so the
+/// session is just the deadline bookkeeping around the mpsc channel.
+struct Session {
+    round: u64,
+    /// Quorum cap (`usize::MAX` after `collect_extend`).
+    expect: usize,
+    deadline: Option<Instant>,
+    accepted: usize,
+    /// Every worker sender hung up — no further message can arrive.
+    disconnected: bool,
+}
+
 /// Threaded server half.
 pub(super) struct Server {
     to_workers: Vec<mpsc::Sender<ToWorker>>,
     from_workers: mpsc::Receiver<FromWorker>,
+    session: Option<Session>,
 }
 
 impl Server {
@@ -36,33 +56,83 @@ impl Server {
         }
     }
 
-    pub(super) fn collect_with(
+    pub(super) fn collect_begin(&mut self, round: u64, expect: usize, timeout: Duration) {
+        self.session = Some(Session {
+            round,
+            expect,
+            deadline: Instant::now().checked_add(timeout),
+            accepted: 0,
+            disconnected: false,
+        });
+    }
+
+    /// One wait on the worker channel, delivering at most one accepted
+    /// gradient. Without `aux` the wait blocks up to the session deadline
+    /// (one syscall, exactly the pre-session `collect_with` behaviour);
+    /// with `aux` — which runs inline first, this backend having no pool
+    /// fan-out to co-schedule it on — the wait is capped at [`STEP`] so
+    /// overlapped work keeps alternating with channel polls.
+    pub(super) fn collect_step(
         &mut self,
-        round: u64,
-        expect: usize,
-        timeout: Duration,
         on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
-    ) -> usize {
-        let mut got = 0;
-        let deadline = Instant::now() + timeout;
-        while got < expect {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                break;
-            }
-            match self.from_workers.recv_timeout(remaining) {
-                Ok(msg) if msg.round == round => {
-                    // A rejected gradient (callback returns false) is
-                    // consumed but does not fill an `expect` slot.
-                    if on_gradient(msg.worker, &msg.gradient) {
-                        got += 1;
-                    }
+        aux: Option<&(dyn Fn() + Sync)>,
+    ) -> CollectStatus {
+        let Some(sess) = self.session.as_mut() else {
+            return CollectStatus::Exhausted;
+        };
+        if sess.accepted >= sess.expect {
+            return CollectStatus::Quorum;
+        }
+        if sess.disconnected {
+            return CollectStatus::Exhausted;
+        }
+        let remaining = match sess.deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => STEP,
+        };
+        if remaining.is_zero() {
+            return CollectStatus::Exhausted;
+        }
+        let wait = if let Some(aux) = aux {
+            aux();
+            remaining.min(STEP)
+        } else {
+            remaining
+        };
+        match self.from_workers.recv_timeout(wait) {
+            Ok(msg) if msg.round == sess.round => {
+                // A rejected gradient (callback returns false) is
+                // consumed but does not fill an `expect` slot.
+                if on_gradient(msg.worker, &msg.gradient) {
+                    sess.accepted += 1;
                 }
-                Ok(_stale) => continue,
-                Err(_) => break,
+                if sess.accepted >= sess.expect {
+                    CollectStatus::Quorum
+                } else {
+                    CollectStatus::Pending
+                }
+            }
+            Ok(_stale) => CollectStatus::Pending,
+            Err(mpsc::RecvTimeoutError::Timeout) => CollectStatus::Pending,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                sess.disconnected = true;
+                CollectStatus::Exhausted
             }
         }
-        got
+    }
+
+    pub(super) fn collect_extend(&mut self) {
+        if let Some(sess) = self.session.as_mut() {
+            sess.expect = usize::MAX;
+        }
+    }
+
+    pub(super) fn collect_accepted(&self) -> usize {
+        self.session.as_ref().map_or(0, |s| s.accepted)
+    }
+
+    pub(super) fn collect_finish(&mut self) {
+        self.session = None;
     }
 
     pub(super) fn shutdown(&self) {
@@ -148,6 +218,7 @@ pub(super) fn star(n: usize, faults: FaultModel) -> (Server, Vec<Worker>) {
         Server {
             to_workers,
             from_workers: up_rx,
+            session: None,
         },
         workers,
     )

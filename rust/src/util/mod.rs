@@ -8,3 +8,31 @@ pub mod proptest;
 pub mod rng;
 
 pub use rng::{splitmix64, Rng64};
+
+/// 64-bit FNV-1a over a byte stream — the stable, dependency-free digest
+/// behind `train --params-checksum` (the CI determinism matrix compares
+/// these across transport × threads × overlap legs).
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        hash ^= u64::from(b);
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fnv1a;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a([]), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(*b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(*b"foobar"), 0x85944171f73967e8);
+        // Sensitive to every bit of an f32 stream.
+        let digest = |v: f32| fnv1a(v.to_le_bytes());
+        assert_ne!(digest(0.0), digest(-0.0));
+    }
+}

@@ -163,6 +163,7 @@ fn training_through_pjrt_learns_under_attack() {
         threads: 1,
         transport: Default::default(),
         collect: Default::default(),
+        overlap: Default::default(),
         output_dir: None,
     };
     let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();

@@ -43,6 +43,7 @@ fn quadratic_exp(
         threads: 1,
         transport: Default::default(),
         collect: Default::default(),
+        overlap: Default::default(),
         output_dir: None,
     }
 }

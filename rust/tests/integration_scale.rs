@@ -39,6 +39,7 @@ fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) 
         threads: 2,
         transport: TransportKind::Pooled,
         collect: Default::default(),
+        overlap: Default::default(),
         output_dir: None,
     }
 }

@@ -51,6 +51,7 @@ fn straggler_exp(
         threads,
         transport,
         collect,
+        overlap: Default::default(),
         output_dir: None,
     }
 }

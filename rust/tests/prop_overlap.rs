@@ -1,0 +1,306 @@
+//! Bit-identity properties of the streaming prefix-combine round
+//! (`overlap = "prefix"`).
+//!
+//! The hard invariant: for the same seeded cluster, `overlap = prefix`
+//! produces the same `Selection` and bit-identical parameters as
+//! `overlap = off` — the round matrix is frozen at the first-m quorum and
+//! the combine+update arithmetic is coordinate-local, so the overlap
+//! chunk grid is just another partition of `0..d`. The property is
+//! exercised for all seven GARs and the `rmom(β)+rule` pipelines, under
+//! a decisive straggler cost model and under malformed gradients, across
+//! thread counts.
+//!
+//! The one *deliberate* behavioural difference — a straggler that
+//! finishes inside the overlap window is salvaged into the last-good
+//! cache instead of being thrown away — is pinned down by
+//! `late_gradient_lands_in_cache_and_never_perturbs_the_current_round`:
+//! the current round is untouched (that is the invariant), and the
+//! salvage only shows up as a fresher fallback in *later* rounds.
+
+use multibulyan::attacks::AttackKind;
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::{launch, Coordinator, CoordinatorOptions, OverlapMode};
+use multibulyan::data::QuadraticProblem;
+use multibulyan::gar::{GarKind, StageSpec};
+use multibulyan::runtime::Parallelism;
+use multibulyan::training::LrSchedule;
+use multibulyan::transport::{
+    build, CollectMode, ComputeCost, Emitter, FaultModel, TransportKind, WorkerBody,
+};
+use multibulyan::worker::{GradSource, GradWorker};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// First-m experiment with a decisive straggler tail: the two stragglers
+/// cost 15 ms per round, far beyond both the fast tier (300 µs) and the
+/// prefix late-acceptance window (≤ a few 50 µs slices at d = 6000), so
+/// the collected set, the straggler cache, and therefore every round's
+/// parameters are identical whichever overlap mode runs.
+fn overlap_exp(
+    gar: GarKind,
+    pre: Vec<StageSpec>,
+    overlap: OverlapMode,
+    threads: usize,
+) -> ExperimentConfig {
+    let f = 2;
+    ExperimentConfig {
+        cluster: ClusterConfig {
+            n: 11,
+            f,
+            actual_byzantine: Some(2),
+            round_timeout_ms: 60_000,
+            compute_cost_us: 300,
+            stragglers: 2,
+            straggler_factor: 50.0,
+            ..Default::default()
+        },
+        gar,
+        pre,
+        attack: AttackKind::SignFlip { scale: 5.0 },
+        model: ModelConfig::Quadratic {
+            dim: 6_000,
+            noise: 0.3,
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.0,
+            steps: 5,
+            batch_size: 8,
+            eval_every: 0,
+            seed: 11,
+        },
+        threads,
+        transport: TransportKind::Pooled,
+        collect: CollectMode::FirstM,
+        overlap,
+        output_dir: None,
+    }
+}
+
+fn run_overlap_exp(exp: &ExperimentConfig) -> (Vec<f32>, Vec<(usize, usize)>, u64) {
+    let cluster = launch(exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut outcomes = Vec::new();
+    let mut saved = 0u64;
+    for _ in 0..exp.train.steps {
+        let out = coordinator.run_round().unwrap();
+        outcomes.push((out.collected, out.missing));
+        saved += out.overlap_saved_us;
+    }
+    let params = coordinator.params().to_vec();
+    coordinator.shutdown();
+    (params, outcomes, saved)
+}
+
+#[test]
+fn prefix_overlap_is_bit_identical_for_all_gars_and_pipelines() {
+    let pipelines: [Vec<StageSpec>; 2] = [
+        Vec::new(),
+        vec![StageSpec::ResilientMomentum { beta: 0.5 }],
+    ];
+    for gar in GarKind::ALL {
+        for pre in &pipelines {
+            let (p_off, out_off, saved_off) =
+                run_overlap_exp(&overlap_exp(gar, pre.clone(), OverlapMode::Off, 1));
+            assert_eq!(saved_off, 0, "{gar}: off must never report overlap");
+            for threads in [1usize, 2] {
+                let (p_prefix, out_prefix, _saved) = run_overlap_exp(&overlap_exp(
+                    gar,
+                    pre.clone(),
+                    OverlapMode::Prefix,
+                    threads,
+                ));
+                assert_eq!(
+                    out_off, out_prefix,
+                    "{gar} pre={pre:?} threads={threads}: collected/missing diverged"
+                );
+                assert_eq!(
+                    p_off, p_prefix,
+                    "{gar} pre={pre:?} threads={threads}: prefix overlap changed the model"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prefix_overlap_reports_salvaged_drive_time_on_stragglers() {
+    // The rules whose first-m quorum leaves the stragglers running (f=2
+    // rules: quorum = 7 of 9 honest) must report a nonzero
+    // overlap_saved_us — the drive progress made during the combine tail.
+    let (_p, _o, saved) = run_overlap_exp(&overlap_exp(
+        GarKind::MultiBulyan,
+        Vec::new(),
+        OverlapMode::Prefix,
+        2,
+    ));
+    assert!(saved > 0, "stragglers were running; the window must overlap");
+}
+
+#[test]
+fn prefix_overlap_on_threaded_transport_falls_back_to_off() {
+    // The streaming prefix-combine needs the pooled time-sliced drive;
+    // on the threaded backend the knob must be a no-op, not an error.
+    let run = |overlap: OverlapMode| -> (Vec<f32>, u64) {
+        let mut exp = overlap_exp(GarKind::MultiKrum, Vec::new(), overlap, 2);
+        exp.transport = TransportKind::Threaded;
+        let (params, _outcomes, saved) = run_overlap_exp(&exp);
+        (params, saved)
+    };
+    let (p_off, _) = run(OverlapMode::Off);
+    let (p_prefix, saved) = run(OverlapMode::Prefix);
+    assert_eq!(p_off, p_prefix);
+    assert_eq!(saved, 0, "threaded has no virtual drive to overlap");
+}
+
+/// A worker that instantly emits a wrong-length gradient every round.
+struct BadLenBody;
+impl WorkerBody for BadLenBody {
+    fn on_round(&mut self, round: u64, _p: &[f32], emit: &mut Emitter<'_>) {
+        emit.send(round, &[1.0, 2.0]); // d is 6000 below
+    }
+}
+
+#[test]
+fn prefix_overlap_is_bit_identical_under_malformed_gradients() {
+    // n = 9, f = 3, first-m quorum m = 6. Worker 8 is a fast bad actor
+    // (wrong-length gradient), workers 0–1 are 40× stragglers: the
+    // quorum must fill from the six well-formed fast workers (2–7) on
+    // both paths, the bad actor's rejected submission must not occupy a
+    // slot, and the stragglers (12 ms ≫ the ≤ 100 µs window at
+    // d = 6000) must never reach the cache.
+    let d = 6_000;
+    let run = |overlap: OverlapMode| -> (Vec<f32>, Vec<(usize, usize)>) {
+        let problem = Arc::new(QuadraticProblem::new(d, 0.3, 5));
+        let faults = FaultModel {
+            cost: ComputeCost {
+                base_us: 300,
+                slow_workers: 2,
+                slow_factor: 40.0,
+            },
+            ..Default::default()
+        };
+        let (server, workers) = build(TransportKind::Pooled, 9, faults, &Parallelism::new(2));
+        for (i, ep) in workers.into_iter().enumerate() {
+            if i == 8 {
+                ep.serve(BadLenBody);
+            } else {
+                ep.serve(GradWorker::new(GradSource::quadratic(
+                    Arc::clone(&problem),
+                    i,
+                    8,
+                )));
+            }
+        }
+        let mut coord = Coordinator::new(
+            GarKind::MultiKrum.instantiate(9, 3).unwrap(),
+            None,
+            0,
+            server,
+            vec![0.0; d],
+            0.1,
+            0.0,
+            CoordinatorOptions {
+                round_timeout: Duration::from_secs(10),
+                schedule: LrSchedule::Fixed { base: 0.1 },
+                seed: 7,
+                collect: CollectMode::FirstM,
+                overlap,
+            },
+        )
+        .unwrap();
+        let mut outcomes = Vec::new();
+        for _ in 0..3 {
+            let out = coord.run_round().unwrap();
+            outcomes.push((out.collected, out.missing));
+        }
+        let params = coord.params().to_vec();
+        coord.shutdown();
+        (params, outcomes)
+    };
+    let (p_off, out_off) = run(OverlapMode::Off);
+    let (p_prefix, out_prefix) = run(OverlapMode::Prefix);
+    // Quorum = the 6 well-formed fast workers; 3 missing (2 stragglers +
+    // the bad actor) every round, on both paths.
+    assert!(out_off.iter().all(|&(c, m)| c == 6 && m == 3), "{out_off:?}");
+    assert_eq!(out_off, out_prefix);
+    assert_eq!(p_off, p_prefix, "malformed handling diverged under overlap");
+}
+
+#[test]
+fn late_gradient_lands_in_cache_and_never_perturbs_the_current_round() {
+    // n = 7, f = 1, first-m quorum m = 6 = exactly the fast tier; the
+    // one straggler (1.2 ms) finishes *inside* the prefix window
+    // (20 chunks at d = 80 000 ⇒ up to 1 ms of extra drive after the
+    // 300 µs quorum). Its late gradient must land in the last-good cache
+    // — round 1 stays bit-identical to overlap = off — and only surface
+    // as the round-2 fallback, where overlap = off would have used a
+    // zero row. The GAR is coordinate-wise (trimmed-mean) so the
+    // fallback row's values reach the round-2 aggregate directly: a
+    // zero row and the salvaged stale gradient cannot produce the same
+    // parameters.
+    let exp = |overlap: OverlapMode| -> ExperimentConfig {
+        ExperimentConfig {
+            cluster: ClusterConfig {
+                n: 7,
+                f: 1,
+                actual_byzantine: Some(0),
+                round_timeout_ms: 60_000,
+                compute_cost_us: 300,
+                stragglers: 1,
+                straggler_factor: 4.0,
+                ..Default::default()
+            },
+            gar: GarKind::TrimmedMean,
+            pre: Vec::new(),
+            attack: AttackKind::None,
+            model: ModelConfig::Quadratic {
+                dim: 80_000,
+                noise: 0.3,
+            },
+            train: TrainConfig {
+                learning_rate: 0.1,
+                momentum: 0.0,
+                steps: 2,
+                batch_size: 8,
+                eval_every: 0,
+                seed: 13,
+            },
+            threads: 2,
+            transport: TransportKind::Pooled,
+            collect: CollectMode::FirstM,
+            overlap,
+            output_dir: None,
+        }
+    };
+    let run = |overlap: OverlapMode| -> (Vec<f32>, Vec<f32>, u64, u64) {
+        let cluster = launch(&exp(overlap), None).unwrap();
+        let mut coordinator = cluster.coordinator;
+        let r1 = coordinator.run_round().unwrap();
+        assert_eq!((r1.collected, r1.missing), (6, 1), "{overlap}");
+        let after_r1 = coordinator.params().to_vec();
+        let r2 = coordinator.run_round().unwrap();
+        assert_eq!((r2.collected, r2.missing), (6, 1), "{overlap}");
+        let after_r2 = coordinator.params().to_vec();
+        let late = coordinator.metrics.counter("gradients_late_cached");
+        let saved = coordinator.metrics.counter("overlap_saved_us");
+        coordinator.shutdown();
+        (after_r1, after_r2, late, saved)
+    };
+    let (off_r1, off_r2, off_late, off_saved) = run(OverlapMode::Off);
+    let (pre_r1, pre_r2, pre_late, pre_saved) = run(OverlapMode::Prefix);
+    assert_eq!(off_late, 0);
+    assert_eq!(off_saved, 0);
+    // The current round is never perturbed by the late arrival…
+    assert_eq!(off_r1, pre_r1, "round 1 must be bit-identical");
+    // …which lands in the cache instead (once per round here: the
+    // straggler finishes every round's gradient inside the window)…
+    assert_eq!(pre_late, 2, "one salvaged gradient per round");
+    assert!(pre_saved > 0);
+    // …and surfaces only as the round-2 straggler fallback: off falls
+    // back to a zero row, prefix to the salvaged round-1 gradient.
+    assert_ne!(
+        off_r2, pre_r2,
+        "the salvaged cache entry must replace the zero fallback in round 2"
+    );
+}
