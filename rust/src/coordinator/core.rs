@@ -245,6 +245,9 @@ fn prefix_combine_update(
             }
             let start = c * OVERLAP_CHUNK;
             let end = (start + OVERLAP_CHUNK).min(d);
+            // Shard-range disjointness: the cursor-derived chunk must
+            // stay inside the d-length vectors.
+            crate::strict_assert!(start < d && end <= d);
             // SAFETY: chunk `c` exclusively owns coordinates
             // `[start, end)` of all three vectors — the cursor hands out
             // each chunk at most once, at most one aux task runs per
@@ -632,6 +635,9 @@ impl Coordinator {
             }
         }
         let collected = have.iter().filter(|&&h| h).count();
+        // Quorum-slot accounting: the accept callback fills each worker's
+        // slot at most once and the transports cap delivery at `expect`.
+        crate::strict_assert!(collected <= expect);
 
         // 3. Straggler fallback: last known gradient, else zero (copied
         //    row-to-row, no intermediate clone).

@@ -80,6 +80,8 @@ impl Evaluator {
                         "eval artifact output 0 has length {}, expected {e}",
                         flags.len()
                     );
+                    // LINT: reduce-ok -- counts 0/1 accuracy flags over
+                    // one eval chunk, sequentially in index order.
                     correct += flags[..seen].iter().map(|&v| v as f64).sum::<f64>();
                     loss_sum += out
                         .get(1)

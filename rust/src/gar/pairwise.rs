@@ -116,6 +116,9 @@ pub fn pairwise_sq_distances_sharded(
 /// calling thread — O(chunks·n²) serial work).
 fn reduce_partials_tree(par: &Parallelism, partials: &mut [f32], chunks: usize, nn: usize) {
     debug_assert!(chunks >= 1 && partials.len() >= chunks * nn);
+    // Captured as a plain usize: the closure below must not borrow
+    // `partials` while the raw-pointer fan-out writes through `base`.
+    let partials_len = partials.len();
     let base = SyncMutPtr(partials.as_mut_ptr());
     let mut s = 1;
     while s < chunks {
@@ -123,6 +126,8 @@ fn reduce_partials_tree(par: &Parallelism, partials: &mut [f32], chunks: usize, 
         let folds = (chunks - s).div_ceil(2 * s);
         par.run_sharded(folds, &|k| {
             let i = k * 2 * s;
+            // Shard-range disjointness: both partials of the fold exist.
+            crate::strict_assert!(i + s < chunks && (i + s + 1) * nn <= partials_len);
             // SAFETY: fold `k` exclusively owns partials `i` (written) and
             // `i + s` (read): within a level the (i, i+s) pairs are
             // disjoint (i is a multiple of 2s, i + s < chunks), and

@@ -244,6 +244,12 @@ impl Selection {
         if len == 0 {
             return;
         }
+        // Selection index bounds: the contract the skipped `validate`
+        // would have enforced — every selected row exists in `grads` and
+        // the coordinate range fits. Per-shard call, so feature-gated
+        // rather than a release-mode re-validation.
+        crate::strict_assert!(self.n == grads.n() && offset + len <= grads.d());
+        crate::strict_assert!(self.rows.iter().all(|&r| r < grads.n()));
         match self.plan {
             CombinePlan::CopyRow => {
                 let row = self.rows[0];
@@ -297,6 +303,9 @@ impl Selection {
                             col[f..].select_nth_unstable_by(keep - 1, f32::total_cmp);
                         }
                     }
+                    // LINT: reduce-ok -- per-coordinate column of n ≤ 64
+                    // values, summed sequentially in index order after a
+                    // deterministic partition — not a d-length buffer.
                     *o = col[f..n - f].iter().sum::<f32>() / keep as f32;
                 }
             }

@@ -82,6 +82,15 @@
 //! assert_eq!(aggregated.len(), 1000);
 //! ```
 //!
+//! ## Invariant linter
+//!
+//! The determinism and safety invariants above (pool-only parallelism,
+//! virtual time, fixed reduction trees, audited `unsafe`) are machine
+//! checked by the in-repo [`lint`] pass — `multibulyan lint` walks the
+//! source tree at the token/line level and exits nonzero on violations;
+//! `scripts/verify.sh` and CI run it on every change. See the
+//! "Invariant catalog" section in README.md.
+//!
 //! See `examples/` for end-to-end drivers and `DESIGN.md` for the full
 //! system inventory and experiment index.
 
@@ -91,6 +100,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod gar;
+pub mod lint;
 pub mod metrics;
 pub mod runtime;
 pub mod tensor;

@@ -1,0 +1,481 @@
+//! `multibulyan lint` — the repo-specific invariant linter.
+//!
+//! A std-only, token/line-level static pass (no external parser; `anyhow`
+//! stays the crate's sole dependency) that walks `rust/src`, `rust/tests`
+//! and `examples/` and enforces the determinism and safety invariants the
+//! resilience claims rest on: unsafe blocks audited and confined, no wall
+//! clock in virtual-time paths, pool-only parallelism, no hash-order
+//! iteration in deterministic paths, and no bare float reductions outside
+//! the pairwise tree. The rule catalog lives in [`rules`]; this module is
+//! the scanner (line classification: code vs comment vs test region) and
+//! the driver ([`lint_repo`] / [`lint_source`]).
+//!
+//! The scanner is deliberately not a Rust parser. It tracks just enough
+//! state — line comments, nested block comments, string literals, raw
+//! strings, char literals vs lifetimes — to split every source line into
+//! a *code part* (string contents blanked, comments stripped) and a
+//! *comment part* (where `// SAFETY:` / `// LINT:` / `// lint:allow`
+//! annotations live), and to know whether a line sits inside a
+//! `#[cfg(test)]` region. Rules match tokens in the code part only, so
+//! pattern strings in doc text or string literals never fire.
+
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One diagnostic: a rule violation at `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-relative path, `/`-separated on every platform.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id from the catalog in [`rules::RULES`].
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// The outcome of a lint run over a file set.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// One classified source line: the code part (strings blanked, comments
+/// stripped), the comment part (text of any `//` / `/* */` comment on the
+/// line) and whether the line is inside a `#[cfg(test)]` region.
+#[derive(Debug, Clone)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+    pub in_test: bool,
+}
+
+/// Scanner state carried across lines.
+#[derive(Clone, Copy)]
+enum Mode {
+    /// Plain code.
+    Code,
+    /// Inside a block comment, at the given nesting depth (>= 1).
+    Block(usize),
+    /// Inside a normal `"…"` string literal.
+    Str,
+    /// Inside a raw string `r#"…"#` with the given hash count.
+    RawStr(usize),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If `chars[i..]` starts a raw string opener (`r"`, `r#"`, `br##"`, …
+/// with `i` at the `r`), return the hash count.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<usize> {
+    debug_assert_eq!(chars[i], 'r');
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Does `chars[i..]` close a raw string with `hashes` hashes (`i` at the
+/// closing quote)?
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    debug_assert_eq!(chars[i], '"');
+    let mut j = i + 1;
+    let mut seen = 0;
+    while seen < hashes {
+        if j >= chars.len() || chars[j] != '#' {
+            return false;
+        }
+        seen += 1;
+        j += 1;
+    }
+    true
+}
+
+/// Split a source text into classified [`Line`]s. String/char-literal
+/// contents are blanked (replaced by spaces) in the code part so token
+/// matching never fires on literal text; comment text is collected in the
+/// comment part so annotations are found there and only there.
+pub fn split_lines(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for raw in text.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(chars.len());
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Block(depth) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        comment.push_str("*/");
+                        i += 2;
+                        mode = if depth == 1 {
+                            Mode::Code
+                        } else {
+                            Mode::Block(depth - 1)
+                        };
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        comment.push_str("/*");
+                        i += 2;
+                        mode = Mode::Block(depth + 1);
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        i += 1;
+                        mode = Mode::Code;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i, hashes) {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                        }
+                        i += 1 + hashes;
+                        mode = Mode::Code;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // Line comment: rest of the line is comment text.
+                        comment.push_str(&chars[i..].iter().collect::<String>());
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        comment.push_str("/*");
+                        i += 2;
+                        mode = Mode::Block(1);
+                    } else if c == '"' {
+                        code.push('"');
+                        i += 1;
+                        mode = Mode::Str;
+                    } else if c == 'r'
+                        && (i == 0 || !is_ident_char(chars[i - 1]))
+                        && raw_str_hashes(&chars, i).is_some()
+                    {
+                        let hashes = raw_str_hashes(&chars, i).unwrap();
+                        code.push('r');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                        }
+                        code.push('"');
+                        i += 1 + hashes + 1;
+                        mode = Mode::RawStr(hashes);
+                    } else if c == 'b'
+                        && chars.get(i + 1) == Some(&'"')
+                        && (i == 0 || !is_ident_char(chars[i - 1]))
+                    {
+                        // Byte string literal.
+                        code.push_str("b\"");
+                        i += 2;
+                        mode = Mode::Str;
+                    } else if c == '\'' {
+                        // Char literal vs lifetime. A lifetime is `'ident`
+                        // NOT followed by a closing quote; a char literal
+                        // always closes on the same line in valid Rust.
+                        if chars.get(i + 1) == Some(&'\\') {
+                            // Escaped char literal: find closing quote.
+                            let mut j = i + 2;
+                            if j < chars.len() {
+                                j += 1; // the escaped char itself
+                            }
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            code.push('\'');
+                            for _ in (i + 1)..=j.min(chars.len() - 1) {
+                                code.push(' ');
+                            }
+                            i = (j + 1).min(chars.len());
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            // Simple one-char literal 'x'.
+                            code.push_str("' '");
+                            i += 3;
+                        } else {
+                            // Lifetime (or stray quote): keep as-is.
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // Block comments, raw strings AND normal strings may span lines
+        // (a trailing `\` escapes the newline; an unescaped newline is a
+        // literal one) — `mode` simply carries over to the next line.
+        out.push(Line {
+            code,
+            comment,
+            in_test: false,
+        });
+    }
+    out
+}
+
+/// Mark lines inside `#[cfg(test)]` regions. Tracks brace depth; a
+/// `#[cfg(test)]` attribute arms a pending flag that binds to the next
+/// `{` opened (the `mod tests {` / `fn …() {` body) unless a `;` ends the
+/// item first.
+pub fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: usize = 0;
+    let mut pending = false;
+    let mut region: Option<usize> = None; // depth at which the region closes
+    for line in lines.iter_mut() {
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let mut in_test_here = region.is_some();
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending && region.is_none() {
+                        region = Some(depth);
+                        pending = false;
+                        in_test_here = true;
+                    }
+                }
+                '}' => {
+                    if let Some(rd) = region {
+                        if depth == rd {
+                            region = None;
+                        }
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                ';' => {
+                    if region.is_none() {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.in_test = in_test_here || region.is_some();
+    }
+}
+
+/// Does line `idx` carry annotation `needle` — in its own comment, or in
+/// a comment within `window` lines above it (skipping only blank or
+/// comment-only lines is *not* required: any line's comment counts)?
+pub fn annotated(lines: &[Line], idx: usize, needle: &str, window: usize) -> bool {
+    let start = idx.saturating_sub(window);
+    lines[start..=idx].iter().any(|l| l.comment.contains(needle))
+}
+
+/// Parse a `lint:allow` escape (rule name in parens) out of a comment,
+/// returning the rule name and whether a ` -- <reason>` justification
+/// follows.
+pub fn parse_allow(comment: &str) -> Option<(&str, bool)> {
+    let pos = comment.find("lint:allow(")?;
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim();
+    let tail = &rest[close + 1..];
+    let justified = tail
+        .trim_start()
+        .strip_prefix("--")
+        .is_some_and(|r| !r.trim().is_empty());
+    Some((rule, justified))
+}
+
+/// Is finding `rule` at line `idx` suppressed by a well-formed
+/// `lint:allow` escape — the rule name in parens, then ` -- <reason>` —
+/// on the same line or within two lines above? Malformed escapes (wrong
+/// rule, missing reason) do not suppress — they are themselves findings
+/// (rule `allow-syntax`).
+pub fn escape_allows(lines: &[Line], idx: usize, rule: &str) -> bool {
+    let start = idx.saturating_sub(2);
+    lines[start..=idx].iter().any(|l| {
+        parse_allow(&l.comment).is_some_and(|(r, justified)| r == rule && justified)
+    })
+}
+
+/// Lint one source text under its repo-relative path. Files under
+/// `rust/tests/` are integration tests — wholly test code.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
+    let mut lines = split_lines(text);
+    if rel.starts_with("rust/tests/") {
+        for l in &mut lines {
+            l.in_test = true;
+        }
+    } else {
+        mark_test_regions(&mut lines);
+    }
+    rules::apply(rel, &lines)
+}
+
+/// Directories scanned relative to the repo root.
+pub const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "examples"];
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repo rooted at `root`: walk [`LINT_DIRS`], scan every `.rs`
+/// file, return all findings sorted by (file, line).
+pub fn lint_repo(root: &Path) -> Result<LintReport> {
+    let mut report = LintReport::default();
+    for dir in LINT_DIRS {
+        let abs = root.join(dir);
+        if !abs.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs_files(&abs, &mut files)?;
+        for path in files {
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let rel: String = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            report.findings.extend(lint_source(&rel, &text));
+            report.files_scanned += 1;
+        }
+    }
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scanner_blanks_strings_and_strips_comments() {
+        let lines = split_lines("let x = \"unsafe Instant\"; // trailing note\n");
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("Instant"));
+        assert!(lines[0].code.contains("let x ="));
+        assert!(lines[0].comment.contains("trailing note"));
+    }
+
+    #[test]
+    fn scanner_handles_raw_strings_and_block_comments() {
+        let src = "let s = r#\"thread::spawn\"#;\n/* block\nstill comment HashMap\n*/ let y = 1;\n";
+        let lines = split_lines(src);
+        assert!(!lines[0].code.contains("spawn"));
+        assert!(lines[1].comment.contains("block"));
+        assert!(lines[2].comment.contains("HashMap"));
+        assert!(!lines[2].code.contains("HashMap"));
+        assert!(lines[3].code.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn scanner_keeps_lifetimes_but_blanks_char_literals() {
+        let lines = split_lines("fn f<'a>(x: &'a u8) -> char { 'x' }\n");
+        assert!(lines[0].code.contains("<'a>"));
+        assert!(!lines[0].code.contains("'x'"));
+        let esc = split_lines("let c = '\\n'; let d = unsafe_marker;\n");
+        assert!(esc[0].code.contains("unsafe_marker"));
+    }
+
+    #[test]
+    fn strings_continued_across_lines_stay_blanked() {
+        // A trailing `\` escapes the newline: the literal continues on
+        // the next line, which must not be scanned as code.
+        let src = "let s = \"first \\\nunsafe Instant HashMap\";\nlet t = 1;\n";
+        let lines = split_lines(src);
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(!lines[1].code.contains("HashMap"));
+        assert!(lines[2].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn test_regions_tracked_by_brace_depth() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let mut lines = split_lines(src);
+        mark_test_regions(&mut lines);
+        assert!(!lines[0].in_test);
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn cfg_test_on_item_with_semicolon_does_not_arm_region() {
+        let src = "#[cfg(test)]\nuse std::collections::HashMap;\nfn real() { body(); }\n";
+        let mut lines = split_lines(src);
+        mark_test_regions(&mut lines);
+        assert!(!lines[2].in_test);
+    }
+
+    #[test]
+    fn parse_allow_grammar() {
+        assert_eq!(
+            parse_allow("// lint:allow(wall-clock) -- measured here on purpose"),
+            Some(("wall-clock", true))
+        );
+        assert_eq!(parse_allow("// lint:allow(wall-clock)"), Some(("wall-clock", false)));
+        assert_eq!(parse_allow("// lint:allow(wall-clock) --   "), Some(("wall-clock", false)));
+        assert_eq!(parse_allow("// nothing here"), None);
+    }
+}

@@ -1,0 +1,365 @@
+//! The rule catalog: six repo-specific invariants, each matched at the
+//! token/line level against the classified [`Line`](super::Line)s the
+//! scanner produces. Every rule documents *why* it exists — the invariant
+//! it guards is what the paper's resilience claims rest on, not style.
+
+use super::{annotated, escape_allows, Finding, Line};
+
+/// One catalog entry, surfaced by `multibulyan lint --list`.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+    /// How to annotate a legitimate exception.
+    pub escape: &'static str,
+}
+
+pub const UNSAFE_BLOCK: &str = "unsafe-block";
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const THREAD_SPAWN: &str = "thread-spawn";
+pub const HASH_ITER: &str = "hash-iter";
+pub const FLOAT_REDUCE: &str = "float-reduce";
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: UNSAFE_BLOCK,
+        summary: "unsafe blocks only in audited modules, each with a // SAFETY: argument",
+        escape: "// SAFETY: <disjointness/lifetime argument> within 15 lines above",
+    },
+    RuleInfo {
+        id: WALL_CLOCK,
+        summary: "no std::time::Instant/SystemTime in virtual-time code",
+        escape: "// wall-clock: <why this site really measures wall time> within 3 lines",
+    },
+    RuleInfo {
+        id: THREAD_SPAWN,
+        summary: "no thread::spawn outside runtime/ and transport/ — parallelism goes through the pool",
+        escape: "move the work onto the pool, or lint:allow with a reason",
+    },
+    RuleInfo {
+        id: HASH_ITER,
+        summary: "no HashMap/HashSet iteration in deterministic paths (hash order breaks bit-identity)",
+        escape: "use BTreeMap/BTreeSet, or // LINT: sorted -- <why order cannot leak> within 3 lines",
+    },
+    RuleInfo {
+        id: FLOAT_REDUCE,
+        summary: "no bare .sum()/.fold( float reduction over gradient-length buffers outside the pairwise tree",
+        escape: "use gar::pairwise::reduce_partials_tree, or // LINT: reduce-ok -- <why order-safe> within 3 lines",
+    },
+    RuleInfo {
+        id: ALLOW_SYNTAX,
+        summary: "every lint:allow(<rule>) escape names a real rule and carries a ` -- <reason>` justification",
+        escape: "none — fix the escape",
+    },
+];
+
+/// The only modules allowed to contain `unsafe` blocks (each audited:
+/// raw-pointer shard fan-outs with disjointness proofs).
+pub const UNSAFE_MODULES: &[&str] = &[
+    "rust/src/runtime/pool.rs",
+    "rust/src/coordinator/core.rs",
+    "rust/src/gar/pairwise.rs",
+    "rust/src/transport/pooled.rs",
+];
+
+/// Directory prefixes where `thread::spawn` / `thread::Builder` are
+/// legitimate — everywhere else parallelism must go through the pool.
+pub const SPAWN_MODULES: &[&str] = &["rust/src/runtime/", "rust/src/transport/"];
+
+/// Directory prefixes where the float-reduce rule applies: the numeric
+/// paths where a gradient-length `.sum()` would be order-sensitive.
+pub const FLOAT_REDUCE_SCOPE: &[&str] = &[
+    "rust/src/gar/",
+    "rust/src/tensor/",
+    "rust/src/coordinator/",
+    "rust/src/training/",
+    "rust/src/transport/",
+    "rust/src/worker/",
+    "rust/src/attacks/",
+    "rust/src/metrics/",
+    "rust/src/data/",
+];
+
+/// Files exempt from float-reduce: the designated reducers themselves.
+pub const FLOAT_REDUCE_EXEMPT: &[&str] =
+    &["rust/src/gar/pairwise.rs", "rust/src/tensor/stats.rs"];
+
+/// How far above a line a `// SAFETY:` comment may sit (a multi-line
+/// safety argument above a fan-out call).
+pub const SAFETY_WINDOW: usize = 15;
+/// Window for the short annotations (`wall-clock:`, `LINT: sorted`,
+/// `LINT: reduce-ok`).
+pub const ANNOTATION_WINDOW: usize = 3;
+
+/// Word-boundary containment: `needle` appears in `hay` not embedded in a
+/// larger identifier (so `Instant` does not fire on `Instantiate`).
+fn contains_word(hay: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = hay[start..].find(needle) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || hay[..at]
+                .chars()
+                .next_back()
+                .is_none_or(|c| !(c.is_ascii_alphanumeric() || c == '_'));
+        let after_ok = hay[at + needle.len()..]
+            .chars()
+            .next()
+            .is_none_or(|c| !(c.is_ascii_alphanumeric() || c == '_'));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+/// Does this code line perform a float `.sum()`? Flags bare `.sum()` and
+/// float turbofishes (`.sum::<f32>()`); skips integer turbofishes
+/// (`.sum::<usize>()` etc.), whose order cannot affect the result.
+fn has_float_sum(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(".sum") {
+        let at = start + pos;
+        let rest = &code[at + ".sum".len()..];
+        if let Some(tf) = rest.strip_prefix("::<") {
+            let t = tf.trim_start();
+            if !(t.starts_with('u') || t.starts_with('i')) {
+                return true;
+            }
+        } else if rest.starts_with('(') {
+            return true;
+        }
+        start = at + ".sum".len();
+    }
+    false
+}
+
+fn emit(
+    findings: &mut Vec<Finding>,
+    lines: &[Line],
+    rel: &str,
+    idx: usize,
+    rule: &'static str,
+    message: String,
+) {
+    if !escape_allows(lines, idx, rule) {
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: idx + 1,
+            rule,
+            message,
+        });
+    }
+}
+
+/// Run every rule over a classified file; returns the findings.
+pub fn apply(rel: &str, lines: &[Line]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    check_unsafe_block(rel, lines, &mut findings);
+    check_wall_clock(rel, lines, &mut findings);
+    check_thread_spawn(rel, lines, &mut findings);
+    check_hash_iter(rel, lines, &mut findings);
+    check_float_reduce(rel, lines, &mut findings);
+    check_allow_syntax(rel, lines, &mut findings);
+    findings
+}
+
+/// Rule `unsafe-block`: every `unsafe` keyword in code (tests included —
+/// test unsafe aliases just as hard) must sit in a whitelisted module AND
+/// carry a `// SAFETY:` argument within [`SAFETY_WINDOW`] lines above.
+fn check_unsafe_block(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    for (idx, line) in lines.iter().enumerate() {
+        if !contains_word(&line.code, "unsafe") {
+            continue;
+        }
+        if !UNSAFE_MODULES.contains(&rel) {
+            emit(
+                findings,
+                lines,
+                rel,
+                idx,
+                UNSAFE_BLOCK,
+                format!(
+                    "`unsafe` outside the audited modules ({}); move the raw-pointer work into \
+                     runtime/pool.rs or annotate",
+                    UNSAFE_MODULES.join(", ")
+                ),
+            );
+        } else if !annotated(lines, idx, "SAFETY:", SAFETY_WINDOW) {
+            emit(
+                findings,
+                lines,
+                rel,
+                idx,
+                UNSAFE_BLOCK,
+                "`unsafe` without a // SAFETY: argument on the preceding lines".to_string(),
+            );
+        }
+    }
+}
+
+/// Rule `wall-clock`: `Instant` / `SystemTime` in non-test library code
+/// must carry a per-site `// wall-clock: <reason>` annotation. The pooled
+/// drive runs on a virtual clock; a stray `Instant::now()` there silently
+/// reintroduces scheduling nondeterminism, so even `metrics/timing.rs`
+/// (whose whole job is wall time) annotates each site instead of getting
+/// a blanket module exemption.
+fn check_wall_clock(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    if !rel.starts_with("rust/src/") {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let hit = contains_word(&line.code, "Instant") || contains_word(&line.code, "SystemTime");
+        if hit && !annotated(lines, idx, "wall-clock:", ANNOTATION_WINDOW) {
+            emit(
+                findings,
+                lines,
+                rel,
+                idx,
+                WALL_CLOCK,
+                "wall-clock type in library code without a // wall-clock: <reason> annotation \
+                 (virtual-time paths must not read real time)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Rule `thread-spawn`: `thread::spawn` / `thread::Builder` only under
+/// `runtime/` and `transport/`. Everything else uses the pool, so thread
+/// count and shard layout stay centrally controlled (and deterministic).
+fn check_thread_spawn(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    if SPAWN_MODULES.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        if line.code.contains("thread::spawn") || line.code.contains("thread::Builder") {
+            emit(
+                findings,
+                lines,
+                rel,
+                idx,
+                THREAD_SPAWN,
+                "thread spawn outside runtime/ and transport/ — route the work through \
+                 runtime::pool instead"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Rule `hash-iter`: `HashMap`/`HashSet` in non-test library code must be
+/// either replaced by the BTree variants or annotated `// LINT: sorted`
+/// with an argument that iteration order never reaches an output. The
+/// determinism matrix compares checksums across transports and thread
+/// counts; one hash-ordered iteration breaks it.
+fn check_hash_iter(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    if !rel.starts_with("rust/src/") {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let hit = contains_word(&line.code, "HashMap") || contains_word(&line.code, "HashSet");
+        if hit && !annotated(lines, idx, "LINT: sorted", ANNOTATION_WINDOW) {
+            emit(
+                findings,
+                lines,
+                rel,
+                idx,
+                HASH_ITER,
+                "HashMap/HashSet in a deterministic path — use BTreeMap/BTreeSet or annotate \
+                 // LINT: sorted -- <why iteration order cannot leak>"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Rule `float-reduce`: bare `.sum()` / `.fold(` in the numeric scope
+/// (non-test) must be annotated `// LINT: reduce-ok` unless the file IS a
+/// designated reducer. Gradient-length reductions must go through the
+/// fixed pairwise tree so the result is independent of shard count.
+fn check_float_reduce(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    if !FLOAT_REDUCE_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    if FLOAT_REDUCE_EXEMPT.contains(&rel) {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let hit = has_float_sum(&line.code) || line.code.contains(".fold(");
+        if hit && !annotated(lines, idx, "LINT: reduce-ok", ANNOTATION_WINDOW) {
+            emit(
+                findings,
+                lines,
+                rel,
+                idx,
+                FLOAT_REDUCE,
+                "bare float reduction — use gar::pairwise::reduce_partials_tree for \
+                 gradient-length buffers, or annotate // LINT: reduce-ok -- <why order-safe>"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Rule `allow-syntax`: every `lint:allow` escape must name a rule from
+/// the catalog in its parens and carry a ` -- <reason>` suffix. Malformed
+/// escapes never suppress anything (see [`super::escape_allows`]), so
+/// this rule is what surfaces them instead of letting them rot silently.
+fn check_allow_syntax(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    for (idx, line) in lines.iter().enumerate() {
+        let Some((rule, justified)) = super::parse_allow(&line.comment) else {
+            continue;
+        };
+        if !RULES.iter().any(|r| r.id == rule) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: ALLOW_SYNTAX,
+                message: format!("lint:allow names unknown rule `{rule}`"),
+            });
+        } else if !justified {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: ALLOW_SYNTAX,
+                message: format!(
+                    "lint:allow({rule}) without a ` -- <reason>` justification (and therefore \
+                     suppresses nothing)"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(contains_word("let t = Instant::now();", "Instant"));
+        assert!(!contains_word("fn Instantiate() {}", "Instant"));
+        assert!(!contains_word("my_unsafe_name", "unsafe"));
+        assert!(contains_word("unsafe {", "unsafe"));
+    }
+
+    #[test]
+    fn float_sum_detection() {
+        assert!(has_float_sum("let s = xs.iter().sum::<f32>();"));
+        assert!(has_float_sum("let s: f32 = xs.iter().sum();"));
+        assert!(!has_float_sum("let n = xs.iter().sum::<usize>();"));
+        assert!(!has_float_sum("let n = xs.iter().sum::<u64>();"));
+        assert!(!has_float_sum("m.summary();"));
+    }
+}

@@ -95,6 +95,7 @@ USAGE:
                      |resilience|cone> [--full] [--artifacts DIR]
   multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
   multibulyan artifacts-check [--artifacts DIR]
+  multibulyan lint [--root DIR] [--list]
 
 GARs:    average median trimmed-mean krum multi-krum bulyan multi-bulyan
          --gar also accepts a pre-aggregation pipeline spec:
@@ -121,6 +122,10 @@ Overlap: --overlap off (default; collect, then select, then combine) |
          fresher fallback for later rounds than off's older-or-zero row)
          --params-checksum prints an FNV-1a digest of the final
          parameters (the CI determinism-matrix probe)
+Lint:    `lint` runs the repo-specific invariant linter over rust/src,
+         rust/tests and examples/ (unsafe audit, wall-clock, pool-only
+         parallelism, hash-iteration, float-reduction rules); exits
+         nonzero on findings. --list prints the rule catalog.
 ";
 
 fn main() {
@@ -143,6 +148,7 @@ fn run(argv: &[String]) -> Result<()> {
         "aggregate" => cmd_aggregate(&args),
         "bench" => cmd_bench(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
+        "lint" => cmd_lint(&args),
         other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
     }
 }
@@ -420,6 +426,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
              (fig2|fig3|dscaling|slowdown|threads|straggler|resilience|cone|check)"
         ),
     }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use multibulyan::lint;
+    if args.has("list") {
+        println!("multibulyan lint — rule catalog:");
+        for rule in lint::rules::RULES {
+            println!("  {:<13} {}", rule.id, rule.summary);
+            println!("  {:<13}   escape: {}", "", rule.escape);
+        }
+        return Ok(());
+    }
+    let root = args.get_or("root", ".");
+    let report = lint::lint_repo(std::path::Path::new(&root))?;
+    // Zero files means the walk missed the tree entirely (wrong --root),
+    // which must not masquerade as a clean pass.
+    anyhow::ensure!(
+        report.files_scanned > 0,
+        "lint: no .rs files found under {root:?} (expected {:?}) — wrong --root?",
+        lint::LINT_DIRS
+    );
+    for finding in &report.findings {
+        eprintln!("{finding}");
+    }
+    anyhow::ensure!(
+        report.is_clean(),
+        "lint: {} finding(s) in {} file(s) scanned",
+        report.findings.len(),
+        report.files_scanned
+    );
+    println!(
+        "lint: OK — {} files, {} rules, 0 findings",
+        report.files_scanned,
+        lint::rules::RULES.len()
+    );
     Ok(())
 }
 

@@ -83,6 +83,8 @@ impl MetricsRecorder {
             .iter()
             .map(|p| p.accuracy)
             .filter(|a| a.is_finite())
+            // LINT: reduce-ok -- max over finite values is associative
+            // and commutative; order cannot change the result.
             .fold(f32::NEG_INFINITY, f32::max)
     }
 

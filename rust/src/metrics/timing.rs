@@ -3,17 +3,21 @@
 //! median, report mean and standard deviation of the 5 remaining".
 
 use crate::tensor::{coordinate_median, mean, std_dev};
+// wall-clock: this module IS the measurement substrate — every Instant
+// here times real execution for the Fig. 2 protocol, never scheduling.
 use std::time::Instant;
 
 /// Simple monotonic stopwatch.
 #[derive(Debug)]
 pub struct Stopwatch {
+    // wall-clock: stopwatch epoch — the thing being measured.
     start: Instant,
 }
 
 impl Stopwatch {
     pub fn start() -> Self {
         Self {
+            // wall-clock: reads real time by definition of a stopwatch.
             start: Instant::now(),
         }
     }
@@ -29,6 +33,7 @@ impl Stopwatch {
     }
 
     pub fn restart(&mut self) {
+        // wall-clock: re-arms the measured epoch.
         self.start = Instant::now();
     }
 }

@@ -14,6 +14,8 @@ use super::manifest::Manifest;
 // actual PJRT execution. See `runtime::xla_stub` docs.
 use super::xla_stub as xla;
 use crate::Result;
+// LINT: sorted -- the executable cache below is keyed get/insert only;
+// it is never iterated, so hash order cannot reach any output.
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -167,6 +169,7 @@ fn compute_loop(manifest: Manifest, rx: mpsc::Receiver<Request>) {
     // Client creation can fail only on broken installs; surface the error
     // on every request rather than panicking the thread.
     let client = xla::PjRtClient::cpu();
+    // LINT: sorted -- keyed get/insert only; never iterated.
     let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
 
     while let Ok(req) = rx.recv() {
@@ -197,7 +200,7 @@ fn compute_loop(manifest: Manifest, rx: mpsc::Receiver<Request>) {
 fn get_or_compile<'a>(
     manifest: &Manifest,
     client: &xla::PjRtClient,
-    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>, // LINT: sorted -- keyed access only
     name: &str,
 ) -> Result<&'a xla::PjRtLoadedExecutable> {
     if !cache.contains_key(name) {
@@ -216,7 +219,7 @@ fn get_or_compile<'a>(
 fn run_one(
     manifest: &Manifest,
     client: &xla::PjRtClient,
-    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>, // LINT: sorted -- keyed access only
     name: &str,
     args: &[ArgValue],
 ) -> Result<Vec<Vec<f32>>> {

@@ -353,6 +353,9 @@ pub fn run_chunks<T: Send>(
     par.run_sharded(chunks, &|c| {
         let start = c * chunk_len;
         let end = (start + chunk_len).min(len);
+        // Shard-range disjointness: the derived range must stay in
+        // bounds (ranges for distinct `c` are disjoint by construction).
+        crate::strict_assert!(start < len && end <= len);
         // SAFETY: chunk `c` exclusively owns `[start, end)` (chunks are
         // disjoint by construction and `c < chunks` ⇒ `start < len`), and
         // `run_sharded` blocks until every chunk completed, so `data`
@@ -416,6 +419,11 @@ pub fn shard_zip<const K: usize, S: Send>(
             return;
         }
         let end = (start + chunk_len).min(len);
+        // Shard-range disjointness: shard `i`'s range starts on a chunk
+        // boundary, stays in bounds, and owns state slot `i`. (Captures
+        // `shards`, not `states` — the states Vec is already accessed
+        // through the raw pointer and must not be re-borrowed here.)
+        crate::strict_assert!(start % chunk_len == 0 && end <= len && i < shards);
         // SAFETY: shard `i` exclusively owns coordinates `[start, end)` of
         // every slice (the K slices are distinct `&mut` so they cannot
         // alias each other) and `states[i]` (`i < shards ≤ states.len()`);

@@ -66,6 +66,9 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+// wall-clock: Instant appears in this virtual-clock backend ONLY as the
+// collect safety net (see Session::wall_deadline); the drive itself runs
+// on `t_virtual` and must never read real time.
 use std::time::{Duration, Instant};
 
 /// Virtual-clock granularity of the time-sliced drive, microseconds. One
@@ -133,7 +136,8 @@ struct Session {
     expect: usize,
     /// Collect timeout in virtual microseconds.
     virtual_deadline: u64,
-    /// Wall-clock safety net against pathological real compute costs.
+    // wall-clock: safety net against pathological real compute costs —
+    // the only real-time state in this backend.
     wall_deadline: Option<Instant>,
     /// The virtual clock, advanced [`SLICE_US`] per step.
     t_virtual: u64,
@@ -175,10 +179,15 @@ impl Server {
         while self.drive.done.len() < n {
             self.drive.done.push(AtomicBool::new(false));
         }
+        // Quorum-slot accounting starts from a clean drive: one done flag
+        // per worker, no finisher left over from an abandoned session.
+        crate::strict_assert!(self.drive.done.len() >= n && self.drive.ready.is_empty());
         self.session = Some(Session {
             round,
             expect,
             virtual_deadline: timeout.as_micros().min(u128::from(u64::MAX)) as u64,
+            // wall-clock: arms the safety net; the drive never reads it
+            // except in the one guarded check below.
             wall_deadline: Instant::now().checked_add(timeout),
             t_virtual: 0,
             accepted: 0,
@@ -217,6 +226,10 @@ impl Server {
             sess.t_virtual = sess.t_virtual.saturating_add(SLICE_US);
             let t_virtual = sess.t_virtual;
             let drive_round = *drive_round;
+            // Arena slot ownership: the fan-out below gives pool task `k`
+            // exclusive access to cell `running[k]`, which requires the
+            // running list to be duplicate-free (ascending ⇒ no dups).
+            crate::strict_assert!(drive.running.windows(2).all(|w| w[0] < w[1]));
             {
                 let running = &drive.running[..];
                 let done = &drive.done[..];
@@ -232,6 +245,7 @@ impl Server {
                         return;
                     }
                     let i = running[k];
+                    crate::strict_assert!(i < rt.cells.len());
                     let cell = &rt.cells[i];
                     let mut guard = lock(&cell.driver);
                     let (finished, panicked) = match guard.as_mut() {
@@ -279,6 +293,9 @@ impl Server {
                 let DriveState { running, done, ready } = drive;
                 running.retain(|&i| {
                     if done[i].load(Ordering::Acquire) {
+                        // A worker finishes exactly once — it left
+                        // `running` the slice it was queued.
+                        crate::strict_assert!(!ready.contains(&i));
                         ready.push_back(i);
                         false
                     } else {
@@ -289,8 +306,10 @@ impl Server {
             if drive.running.is_empty() || t_virtual >= sess.virtual_deadline {
                 sess.done = true; // stragglers deterministically miss the round
             }
+            // wall-clock: the safety-net check — the single place the
+            // virtual drive consults real time.
             if sess.wall_deadline.is_some_and(|d| Instant::now() >= d) {
-                sess.done = true; // wall-clock safety net
+                sess.done = true;
             }
         } else {
             // Collect without a preceding broadcast: nothing to drive.
@@ -381,6 +400,8 @@ fn deliver_ready(
             }
         }
     }
+    // Quorum-slot accounting: delivery never overshoots the cap.
+    crate::strict_assert!(sess.accepted <= sess.expect);
 }
 
 /// Registration handle for one logical worker.

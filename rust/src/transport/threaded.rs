@@ -9,6 +9,8 @@
 use super::{CollectStatus, Emitter, EmitterSink, FaultModel, FromWorker, WorkerBody};
 use std::sync::mpsc;
 use std::sync::Arc;
+// wall-clock: this backend has no virtual clock — workers physically
+// race the collect deadline, which is the asynchrony being simulated.
 use std::time::{Duration, Instant};
 
 /// Wall-clock granularity of one incremental collect step: the longest a
@@ -33,6 +35,7 @@ struct Session {
     round: u64,
     /// Quorum cap (`usize::MAX` after `collect_extend`).
     expect: usize,
+    // wall-clock: real deadline the worker threads race.
     deadline: Option<Instant>,
     accepted: usize,
     /// Every worker sender hung up — no further message can arrive.
@@ -60,6 +63,7 @@ impl Server {
         self.session = Some(Session {
             round,
             expect,
+            // wall-clock: arms the physical collect deadline.
             deadline: Instant::now().checked_add(timeout),
             accepted: 0,
             disconnected: false,
@@ -87,6 +91,7 @@ impl Server {
             return CollectStatus::Exhausted;
         }
         let remaining = match sess.deadline {
+            // wall-clock: time left until the physical deadline.
             Some(d) => d.saturating_duration_since(Instant::now()),
             None => STEP,
         };

@@ -9,6 +9,33 @@ pub mod rng;
 
 pub use rng::{splitmix64, Rng64};
 
+/// Invariant check compiled to nothing unless the `strict-invariants`
+/// feature is on (`cargo test --features strict-invariants` in CI).
+///
+/// Unlike `debug_assert!` these stay off in default debug builds — the
+/// pooled-transport tests drive hundreds of virtual rounds and the hot
+/// fan-out closures run per shard per slice, so the checks are a
+/// dedicated CI leg rather than a blanket debug tax. The `if cfg!`
+/// form (not `#[cfg]`) keeps the condition type-checked in every build.
+#[macro_export]
+macro_rules! strict_assert {
+    ($($arg:tt)*) => {
+        if cfg!(feature = "strict-invariants") {
+            assert!($($arg)*);
+        }
+    };
+}
+
+/// [`strict_assert!`] for equality, with the usual both-values message.
+#[macro_export]
+macro_rules! strict_assert_eq {
+    ($($arg:tt)*) => {
+        if cfg!(feature = "strict-invariants") {
+            assert_eq!($($arg)*);
+        }
+    };
+}
+
 /// 64-bit FNV-1a over a byte stream — the stable, dependency-free digest
 /// behind `train --params-checksum` (the CI determinism matrix compares
 /// these across transport × threads × overlap legs).

@@ -1,0 +1,261 @@
+//! Fixture tests for the in-repo invariant linter: one positive (fires)
+//! and one negative (stays quiet) case per rule, the escape grammar, the
+//! directory walk, and the self-check that the real repo lints clean.
+//!
+//! Fixtures are assembled from string literals — the scanner blanks
+//! string contents, so this file can quote forbidden tokens freely; its
+//! own comments, however, must not spell out a malformed allow escape.
+
+use multibulyan::lint::{lint_repo, lint_source, rules, Finding, LINT_DIRS};
+use std::path::Path;
+
+/// Findings for `src` linted as if it were the library file `rel`.
+fn lint_at(rel: &str, src: &str) -> Vec<Finding> {
+    lint_source(rel, src)
+}
+
+fn rules_hit(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------- unsafe
+
+#[test]
+fn unsafe_outside_audited_modules_fires() {
+    let src = "fn f(p: *mut f32) {\n    unsafe { *p = 1.0; }\n}\n";
+    let findings = lint_at("rust/src/gar/krum.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["unsafe-block"]);
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn unsafe_in_audited_module_without_safety_comment_fires() {
+    let src = "fn f(p: *mut f32) {\n    unsafe { *p = 1.0; }\n}\n";
+    let findings = lint_at("rust/src/runtime/pool.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["unsafe-block"]);
+}
+
+#[test]
+fn unsafe_with_safety_comment_in_audited_module_is_quiet() {
+    let src = "fn f(p: *mut f32) {\n    // SAFETY: caller guarantees exclusivity.\n    unsafe { *p = 1.0; }\n}\n";
+    assert!(lint_at("rust/src/runtime/pool.rs", src).is_empty());
+}
+
+#[test]
+fn unsafe_in_string_literal_is_quiet() {
+    let src = "fn f() -> &'static str {\n    \"unsafe is just a word here\"\n}\n";
+    assert!(lint_at("rust/src/gar/krum.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ wall-clock
+
+#[test]
+fn instant_without_annotation_fires() {
+    let src = "use std::time::Instant;\nfn f() {\n    let t = Instant::now();\n    drop(t);\n}\n";
+    let findings = lint_at("rust/src/gar/krum.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["wall-clock", "wall-clock"]);
+}
+
+#[test]
+fn instant_with_wall_clock_annotation_is_quiet() {
+    let src = "// wall-clock: measures the benchmark itself.\nuse std::time::Instant;\nfn f() {\n    // wall-clock: ditto.\n    let t = Instant::now();\n    drop(t);\n}\n";
+    assert!(lint_at("rust/src/gar/krum.rs", src).is_empty());
+}
+
+#[test]
+fn instant_inside_cfg_test_is_quiet() {
+    let src = "#[cfg(test)]\nmod tests {\n    use std::time::Instant;\n}\n";
+    assert!(lint_at("rust/src/gar/krum.rs", src).is_empty());
+}
+
+#[test]
+fn instantiate_identifier_does_not_trip_word_boundary() {
+    let src = "fn instantiate() {}\nstruct Instantiator;\n";
+    assert!(lint_at("rust/src/gar/krum.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------- thread-spawn
+
+#[test]
+fn thread_spawn_outside_runtime_fires() {
+    let src = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+    let findings = lint_at("rust/src/gar/krum.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["thread-spawn"]);
+}
+
+#[test]
+fn thread_builder_outside_runtime_fires() {
+    let src = "fn f() {\n    let b = std::thread::Builder::new();\n    drop(b);\n}\n";
+    let findings = lint_at("examples/quickstart.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["thread-spawn"]);
+}
+
+#[test]
+fn thread_spawn_under_runtime_and_transport_is_quiet() {
+    let src = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+    assert!(lint_at("rust/src/runtime/pool.rs", src).is_empty());
+    assert!(lint_at("rust/src/transport/threaded.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------- hash-iter
+
+#[test]
+fn hashmap_without_annotation_fires() {
+    let src = "use std::collections::HashMap;\nfn f() {\n    let m: HashMap<u32, u32> = HashMap::new();\n    drop(m);\n}\n";
+    let findings = lint_at("rust/src/metrics/recorder.rs", src);
+    assert!(rules_hit(&findings).iter().all(|&r| r == "hash-iter"));
+    assert!(!findings.is_empty());
+}
+
+#[test]
+fn hashmap_with_sorted_annotation_is_quiet() {
+    let src = "// LINT: sorted -- keyed access only; never iterated.\nuse std::collections::HashMap;\nfn f() {\n    // LINT: sorted -- ditto.\n    let m: HashMap<u32, u32> = HashMap::new();\n    drop(m);\n}\n";
+    assert!(lint_at("rust/src/metrics/recorder.rs", src).is_empty());
+}
+
+#[test]
+fn btreemap_is_quiet() {
+    let src = "use std::collections::BTreeMap;\nfn f() {\n    let m: BTreeMap<u32, u32> = BTreeMap::new();\n    drop(m);\n}\n";
+    assert!(lint_at("rust/src/metrics/recorder.rs", src).is_empty());
+}
+
+// ----------------------------------------------------------- float-reduce
+
+#[test]
+fn bare_float_sum_in_scope_fires() {
+    let src = "fn f(xs: &[f32]) -> f32 {\n    xs.iter().sum::<f32>()\n}\n";
+    let findings = lint_at("rust/src/gar/krum.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["float-reduce"]);
+}
+
+#[test]
+fn bare_fold_in_scope_fires() {
+    let src = "fn f(xs: &[f32]) -> f32 {\n    xs.iter().fold(0.0, |a, b| a + b)\n}\n";
+    let findings = lint_at("rust/src/tensor/ops.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["float-reduce"]);
+}
+
+#[test]
+fn annotated_or_exempt_float_reduction_is_quiet() {
+    let annotated = "fn f(xs: &[f32]) -> f32 {\n    // LINT: reduce-ok -- n-length column, sequential index order.\n    xs.iter().sum::<f32>()\n}\n";
+    assert!(lint_at("rust/src/gar/krum.rs", annotated).is_empty());
+    // The designated reducers are exempt wholesale.
+    let bare = "fn f(xs: &[f32]) -> f32 {\n    xs.iter().sum::<f32>()\n}\n";
+    assert!(lint_at("rust/src/gar/pairwise.rs", bare).is_empty());
+    assert!(lint_at("rust/src/tensor/stats.rs", bare).is_empty());
+}
+
+#[test]
+fn integer_sum_is_quiet() {
+    let src = "fn f(xs: &[usize]) -> usize {\n    xs.iter().sum::<usize>()\n}\n";
+    assert!(lint_at("rust/src/gar/krum.rs", src).is_empty());
+    let src64 = "fn f(xs: &[u64]) -> u64 {\n    xs.iter().sum::<u64>()\n}\n";
+    assert!(lint_at("rust/src/coordinator/core.rs", src64).is_empty());
+}
+
+#[test]
+fn out_of_scope_dirs_are_not_checked_for_reductions() {
+    let src = "fn f(xs: &[f32]) -> f32 {\n    xs.iter().sum::<f32>()\n}\n";
+    assert!(lint_at("rust/src/util/rng.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------- allow-syntax
+
+#[test]
+fn well_formed_allow_escape_suppresses_the_finding() {
+    let src = "fn f(xs: &[f32]) -> f32 {\n    // lint:allow(float-reduce) -- scalar diagnostic, not a gradient.\n    xs.iter().sum::<f32>()\n}\n";
+    assert!(lint_at("rust/src/gar/krum.rs", src).is_empty());
+}
+
+#[test]
+fn allow_escape_without_reason_fires_and_suppresses_nothing() {
+    let src = "fn f(xs: &[f32]) -> f32 {\n    // lint:allow(float-reduce)\n    xs.iter().sum::<f32>()\n}\n";
+    let findings = lint_at("rust/src/gar/krum.rs", src);
+    let mut hit = rules_hit(&findings);
+    hit.sort_unstable();
+    assert_eq!(hit, vec!["allow-syntax", "float-reduce"]);
+}
+
+#[test]
+fn allow_escape_with_unknown_rule_fires() {
+    let src = "fn f() {\n    // lint:allow(no-such-rule) -- misremembered the id.\n    let x = 1;\n    drop(x);\n}\n";
+    let findings = lint_at("rust/src/gar/krum.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["allow-syntax"]);
+    assert!(findings[0].message.contains("no-such-rule"));
+}
+
+#[test]
+fn allow_escape_for_a_different_rule_does_not_suppress() {
+    let src = "fn f(xs: &[f32]) -> f32 {\n    // lint:allow(wall-clock) -- names the wrong rule.\n    xs.iter().sum::<f32>()\n}\n";
+    let findings = lint_at("rust/src/gar/krum.rs", src);
+    assert_eq!(rules_hit(&findings), vec!["float-reduce"]);
+}
+
+// ------------------------------------------------------- walk + self-check
+
+#[test]
+fn lint_repo_walks_a_tree_and_reports_file_line_rule() {
+    let dir = std::env::temp_dir().join(format!("mb-lint-fixture-{}", std::process::id()));
+    let src_dir = dir.join("rust/src/gar");
+    std::fs::create_dir_all(&src_dir).unwrap();
+    std::fs::write(
+        src_dir.join("bad.rs"),
+        "fn f(p: *mut f32) {\n    unsafe { *p = 1.0; }\n}\n",
+    )
+    .unwrap();
+    std::fs::write(src_dir.join("good.rs"), "pub fn g() {}\n").unwrap();
+    let report = lint_repo(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+    assert_eq!(report.files_scanned, 2);
+    assert_eq!(report.findings.len(), 1);
+    let f = &report.findings[0];
+    assert_eq!(f.file, "rust/src/gar/bad.rs");
+    assert_eq!(f.line, 2);
+    assert_eq!(f.rule, "unsafe-block");
+}
+
+#[test]
+fn rule_catalog_is_complete() {
+    assert_eq!(rules::RULES.len(), 6);
+    for rule in rules::RULES {
+        assert!(!rule.summary.is_empty(), "{} has no summary", rule.id);
+        assert!(!rule.escape.is_empty(), "{} has no escape doc", rule.id);
+    }
+}
+
+/// The acceptance-criterion self-check: the real repo lints clean.
+#[test]
+fn repo_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report = lint_repo(&root).unwrap();
+    assert!(
+        report.findings.is_empty(),
+        "lint findings on the seed tree:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        report.files_scanned >= 70,
+        "walk looks truncated: only {} files under {:?}",
+        report.files_scanned,
+        LINT_DIRS
+    );
+}
+
+/// Acceptance criterion: the four unsafe-bearing modules pass with real
+/// SAFETY arguments, not allow escapes.
+#[test]
+fn unsafe_modules_carry_no_allow_escapes() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    for rel in rules::UNSAFE_MODULES {
+        let text = std::fs::read_to_string(root.join(rel)).unwrap();
+        assert!(
+            !text.contains("lint:allow"),
+            "{rel} uses an allow escape instead of a SAFETY argument"
+        );
+    }
+}

@@ -17,6 +17,11 @@ if [[ "${1:-}" != "--quick" ]]; then
 fi
 cargo test -q
 
+# Repo-specific invariant linter (unsafe audit, wall-clock, pool-only
+# parallelism, hash-iteration, float-reduction rules). Exits nonzero on
+# any finding; `multibulyan lint --list` prints the rule catalog.
+cargo run -q -- lint
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "fmt: ENFORCED (cargo fmt --all --check)"
     cargo fmt --all --check
