@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Multi-process socket-transport demo: one coordinator + N external
+# `multibulyan worker` processes speaking the MBWP frame protocol
+# (docs/wire-protocol.md) over a Unix domain socket.
+#
+#   examples/socket_cluster.sh             # cargo-built release binary
+#   MULTIBULYAN=path/to/multibulyan examples/socket_cluster.sh
+#
+# The coordinator binds --socket-listen and simulates the Byzantine
+# coalition in-process; each *honest* worker slot is a real OS process
+# that registers over the socket and streams its gradient chunk-wise.
+# The quadratic workload derives every gradient from (dim, noise, seed,
+# worker, round), so the printed params_checksum is bit-identical to
+# the same seeded run on the pooled or threaded transport.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN="${MULTIBULYAN:-target/release/multibulyan}"
+if [[ ! -x "$BIN" ]]; then
+    echo "building $BIN ..." >&2
+    cargo build --release
+fi
+
+# Experiment shape. Honest workers = N - BYZ external processes; the
+# worker flags below MUST match the coordinator's (--dim/--seed/
+# --batch-size here; noise is 0.5 by default on both sides).
+N=7 F=1 BYZ=1
+DIM=200 SEED=7 BATCH=8 STEPS=40
+CHUNK=64   # GradientChunk coordinates per frame (wire-protocol.md §4.3)
+ADDR="unix:${TMPDIR:-/tmp}/multibulyan-demo-$$.sock"
+
+PIDS=()
+cleanup() {
+    for pid in "${PIDS[@]:-}"; do kill "$pid" 2>/dev/null || true; done
+    wait 2>/dev/null || true
+}
+trap cleanup EXIT
+
+HONEST=$((N - BYZ))
+for ((k = 0; k < HONEST; k++)); do
+    "$BIN" worker --connect "$ADDR" --worker-id "$k" \
+        --dim "$DIM" --seed "$SEED" --batch-size "$BATCH" \
+        --chunk "$CHUNK" --retry-ms 10000 &
+    PIDS+=("$!")
+done
+
+# The workers retry until the coordinator binds, so start order is free.
+"$BIN" train --transport socket --socket-listen "$ADDR" \
+    --socket-chunk "$CHUNK" \
+    --gar multi-bulyan --attack sign-flip \
+    --n "$N" --f "$F" --byzantine "$BYZ" \
+    --dim "$DIM" --seed "$SEED" --batch-size "$BATCH" --steps "$STEPS" \
+    --params-checksum
+
+echo "socket_cluster: OK (compare the checksum against:"
+echo "  $BIN train --transport pooled --gar multi-bulyan --attack sign-flip \\"
+echo "      --n $N --f $F --byzantine $BYZ --dim $DIM --seed $SEED \\"
+echo "      --batch-size $BATCH --steps $STEPS --params-checksum)"

@@ -89,11 +89,11 @@ impl Default for StragglerConfig {
 }
 
 /// Overlap modes exercised per transport: the prefix path is the pooled
-/// time-sliced drive's feature (threaded falls back to off, so a second
-/// threaded row would duplicate the first).
+/// time-sliced drive's feature (threaded and socket fall back to off, so
+/// a second row there would duplicate the first).
 fn overlap_modes(transport: TransportKind) -> &'static [OverlapMode] {
     match transport {
-        TransportKind::Threaded => &[OverlapMode::Off],
+        TransportKind::Threaded | TransportKind::Socket => &[OverlapMode::Off],
         TransportKind::Pooled => &[OverlapMode::Off, OverlapMode::Prefix],
     }
 }

@@ -81,6 +81,17 @@ pub struct ClusterConfig {
     pub stragglers: usize,
     /// Cost multiplier for stragglers (≥ 1).
     pub straggler_factor: f64,
+    /// Socket transport only: explicit listen address
+    /// (`tcp:HOST:PORT`, `unix:PATH`, or bare `HOST:PORT`). `Some` means
+    /// worker slots are owned by external `multibulyan worker` processes
+    /// connecting to this address; `None` (default) binds an ephemeral
+    /// loopback port and serves the workers as in-process client
+    /// threads. Ignored by the in-process transports.
+    pub socket_listen: Option<String>,
+    /// Socket transport only: GradientChunk size in f32 coordinates —
+    /// workers stream gradients in pieces of this many values instead of
+    /// materializing full d-length send buffers (wire spec §4.3).
+    pub socket_chunk: usize,
 }
 
 impl Default for ClusterConfig {
@@ -95,6 +106,8 @@ impl Default for ClusterConfig {
             compute_cost_us: 0,
             stragglers: 0,
             straggler_factor: 1.0,
+            socket_listen: None,
+            socket_chunk: crate::transport::socket::DEFAULT_CHUNK,
         }
     }
 }
@@ -306,6 +319,15 @@ impl ExperimentConfig {
                 .map(|v| v.as_f64())
                 .transpose()?
                 .unwrap_or(1.0),
+            socket_listen: cluster_sec
+                .get("socket_listen")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?,
+            socket_chunk: cluster_sec
+                .get("socket_chunk")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(crate::transport::socket::DEFAULT_CHUNK),
         };
 
         let model_kind = get_str("model", "kind").unwrap_or_else(|| "quadratic".into());
@@ -467,6 +489,16 @@ impl ExperimentConfig {
             "threads must be ≤ {MAX_THREADS} (0 = auto, 1 = sequential), got {}",
             self.threads
         );
+        anyhow::ensure!(
+            self.cluster.socket_chunk >= 1,
+            "socket_chunk must be ≥ 1 f32 coordinate per GradientChunk frame"
+        );
+        anyhow::ensure!(
+            self.cluster.socket_listen.is_none() || self.transport == TransportKind::Socket,
+            "cluster.socket_listen is set but transport = {} — external workers \
+             need transport = \"socket\"",
+            self.transport
+        );
         anyhow::ensure!(self.train.batch_size >= 1, "batch_size must be ≥ 1");
         anyhow::ensure!(self.train.steps >= 1, "steps must be ≥ 1");
         anyhow::ensure!(self.train.learning_rate > 0.0, "learning_rate must be > 0");
@@ -532,6 +564,44 @@ mod tests {
             ModelConfig::Quadratic { dim, .. } => assert_eq!(dim, 1000),
             _ => panic!("wrong model"),
         }
+    }
+
+    #[test]
+    fn socket_knobs_parse_and_validate() {
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-krum"
+            transport = "socket"
+            [cluster]
+            n = 7
+            f = 2
+            socket_listen = "tcp:127.0.0.1:7700"
+            socket_chunk = 4096
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Socket);
+        assert_eq!(cfg.cluster.socket_listen.as_deref(), Some("tcp:127.0.0.1:7700"));
+        assert_eq!(cfg.cluster.socket_chunk, 4096);
+        cfg.validate().unwrap();
+
+        // A zero chunk can't frame a gradient.
+        let mut bad = cfg.clone();
+        bad.cluster.socket_chunk = 0;
+        assert!(bad.validate().is_err());
+
+        // An explicit listen address on an in-process transport is a
+        // misconfiguration, not a silent no-op.
+        let mut mismatched = cfg.clone();
+        mismatched.transport = TransportKind::Pooled;
+        assert!(mismatched.validate().is_err());
+
+        // Defaults: no listen address, nonzero chunk.
+        let dflt = ClusterConfig::default();
+        assert_eq!(dflt.socket_listen, None);
+        assert!(dflt.socket_chunk >= 1);
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::config::{ExperimentConfig, ModelConfig};
 use crate::data::{FashionLike, QuadraticProblem, TokenStream};
 use crate::runtime::{ComputeHandle, Manifest, Parallelism};
 use crate::training::LrSchedule;
-use crate::transport::{self, ComputeCost, FaultModel, TransportKind};
+use crate::transport::{self, ComputeCost, FaultModel, SocketOptions, TransportKind};
 use crate::worker::{serve_workers, GradSource};
 use crate::Result;
 use std::sync::Arc;
@@ -16,7 +16,10 @@ use super::evaluator::Evaluator;
 
 /// A running cluster, ready to train.
 pub struct LaunchedCluster {
+    /// The parameter server, already connected to its workers.
     pub coordinator: Coordinator,
+    /// Scores the parameters between training bursts (`train` calls it
+    /// every `eval_every` rounds).
     pub evaluator: Evaluator,
     /// The declared experiment (for reporting).
     pub config: ExperimentConfig,
@@ -50,14 +53,24 @@ pub fn launch(
     // logical workers; results are bit-identical to sequential for every
     // thread count.
     let par = Parallelism::new(config.threads);
-    let (server, endpoints) = transport::build(config.transport, honest, faults, &par);
+    // An explicit listen address means external `multibulyan worker`
+    // processes own the worker slots; without one the socket backend
+    // binds an ephemeral loopback port and serves in-process clients.
+    let socket = SocketOptions {
+        listen: config.cluster.socket_listen.clone(),
+        chunk: config.cluster.socket_chunk,
+        external: config.cluster.socket_listen.is_some(),
+    };
+    let (server, endpoints) =
+        transport::build_cluster(config.transport, honest, faults, &par, &socket)?;
     // Intra-gradient coordinate sharding for the quadratic workers: real
-    // OS worker threads may share the aggregation pool (regions
-    // serialise), but pooled logical workers already run *on* it and the
-    // pool is not reentrant — they compute sequentially, the across-worker
-    // fan-out is what saturates the pool there.
+    // OS worker threads (threaded, socket clients) may share the
+    // aggregation pool (regions serialise), but pooled logical workers
+    // already run *on* it and the pool is not reentrant — they compute
+    // sequentially, the across-worker fan-out is what saturates the pool
+    // there.
     let worker_par = match config.transport {
-        TransportKind::Threaded => par.clone(),
+        TransportKind::Threaded | TransportKind::Socket => par.clone(),
         TransportKind::Pooled => Parallelism::sequential(),
     };
 
@@ -287,6 +300,8 @@ mod tests {
         assert_eq!(reference, run(TransportKind::Pooled, 1));
         assert_eq!(reference, run(TransportKind::Pooled, 4));
         assert_eq!(reference, run(TransportKind::Threaded, 2));
+        assert_eq!(reference, run(TransportKind::Socket, 1));
+        assert_eq!(reference, run(TransportKind::Socket, 2));
     }
 
     #[test]

@@ -57,8 +57,10 @@ pub enum OverlapMode {
 }
 
 impl OverlapMode {
+    /// Every mode, for sweeps and parameterized tests.
     pub const ALL: [OverlapMode; 2] = [OverlapMode::Off, OverlapMode::Prefix];
 
+    /// The config-file/CLI spelling (`FromStr` round-trips it).
     pub fn as_str(self) -> &'static str {
         match self {
             OverlapMode::Off => "off",
@@ -341,6 +343,8 @@ pub struct CoordinatorOptions {
     pub round_timeout: Duration,
     /// LR schedule (defaults to the paper's fixed rate).
     pub schedule: LrSchedule,
+    /// Seed for the coordinator-side RNG (attack forgery draws); worker
+    /// minibatches and fault RNGs are seeded independently per worker.
     pub seed: u64,
     /// Collection semantics: wait for every honest worker (`All`,
     /// default) or return at the fastest `m = n − f` gradients
@@ -369,6 +373,7 @@ impl Default for CoordinatorOptions {
 /// What one round produced (for logs/benches).
 #[derive(Debug, Clone)]
 pub struct RoundOutcome {
+    /// The 1-based round id this outcome describes.
     pub round: u64,
     /// Honest gradients received this round — bounded by the collection
     /// deadline on *both* transports (the pooled backend time-slices its
@@ -423,6 +428,7 @@ pub struct Coordinator {
     round: u64,
     /// First malformed-gradient offender already reported (warn once).
     warned_malformed: bool,
+    /// Per-round counters, timings and curves (summaries, CSV export).
     pub metrics: MetricsRecorder,
 }
 
@@ -483,18 +489,22 @@ impl Coordinator {
         self
     }
 
+    /// The current model parameters.
     pub fn params(&self) -> &[f32] {
         &self.params
     }
 
+    /// Model dimension `d`.
     pub fn dim(&self) -> usize {
         self.params.len()
     }
 
+    /// Rounds completed so far.
     pub fn round(&self) -> u64 {
         self.round
     }
 
+    /// The active GAR's display name (pipeline stages included).
     pub fn gar_name(&self) -> &'static str {
         self.gar.name()
     }

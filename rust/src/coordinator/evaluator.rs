@@ -14,19 +14,29 @@ pub enum Evaluator {
     /// Classifier accuracy+loss over the FashionLike test split via the
     /// AOT eval artifact (fixed chunk size `eval_batch`).
     Artifact {
+        /// PJRT executor for the eval artifact.
         handle: ComputeHandle,
+        /// Eval artifact name in the manifest.
         artifact: String,
+        /// Held-out split provider.
         dataset: Arc<FashionLike>,
+        /// Fixed chunk size the artifact was compiled for.
         eval_batch: usize,
     },
     /// LM held-out loss via the gradient artifact's loss output (the
     /// gradient itself is discarded).
     Lm {
+        /// PJRT executor for the gradient artifact.
         handle: ComputeHandle,
+        /// Gradient artifact name (its loss output is what's scored).
         artifact: String,
+        /// Held-out token sequences (MSB-set stream ids).
         stream: Arc<TokenStream>,
+        /// Sequence length the artifact was compiled for.
         seq_len: usize,
+        /// Sequences per eval batch.
         batch_size: usize,
+        /// Number of eval batches averaged per call.
         batches: usize,
     },
     /// No evaluation (returns NaN/NaN).
@@ -34,6 +44,8 @@ pub enum Evaluator {
 }
 
 impl Evaluator {
+    /// Score `params`: `(loss, accuracy)`; accuracy is NaN for workloads
+    /// without a classification metric.
     pub fn evaluate(&mut self, params: &[f32]) -> Result<(f32, f32)> {
         match self {
             Evaluator::Quadratic(problem) => Ok((problem.loss(params), f32::NAN)),

@@ -11,6 +11,8 @@
 //! [`launch`] wires a full cluster from an
 //! [`crate::config::ExperimentConfig`].
 
+#![deny(missing_docs)]
+
 mod builder;
 mod core;
 mod evaluator;

@@ -58,16 +58,20 @@
 //!
 //! ## Pooled worker runtime
 //!
-//! The simulated cluster ships two transports ([`transport`], the
+//! The simulated cluster ships three transports ([`transport`], the
 //! `transport` config knob): `threaded` (one OS thread + mpsc pair per
-//! worker — faithful asynchrony, caps at a few dozen workers) and the
+//! worker — faithful asynchrony, caps at a few dozen workers); the
 //! default `pooled`, which multiplexes `n` *logical* workers over the
 //! same shared thread pool using a per-round broadcast slot plus a
 //! preallocated per-worker gradient arena — zero per-message allocations
 //! and no channels, so experiments run with 128–512 logical workers
-//! in-process. Gradients are counter-seeded per `(round, worker,
-//! coordinate)` and fault RNGs are per-worker, so seeded runs are
-//! bit-identical across transports *and* thread counts.
+//! in-process; and `socket`, real processes over TCP/Unix sockets
+//! speaking the length-prefixed frame protocol of
+//! `docs/wire-protocol.md` (in-process loopback clients by default,
+//! external `multibulyan worker` processes via `socket_listen`).
+//! Gradients are counter-seeded per `(round, worker, coordinate)` and
+//! fault RNGs are per-worker, so seeded runs are bit-identical across
+//! transports *and* thread counts.
 //!
 //! ## Quick start
 //!

@@ -5,8 +5,11 @@
 //! multibulyan train [--config FILE] [--gar G] [--attack A] [--n N] [--f F]
 //!                   [--byzantine B] [--model M] [--steps S] [--batch-size B]
 //!                   [--lr LR] [--momentum MU] [--eval-every K] [--seed S]
-//!                   [--transport threaded|pooled]
+//!                   [--transport threaded|pooled|socket]
+//!                   [--socket-listen ADDR] [--socket-chunk K]
 //!                   [--artifacts DIR] [--curve-out FILE]
+//! multibulyan worker --connect ADDR --worker-id K [--dim D] [--noise X]
+//!                   [--seed S] [--batch-size B] [--chunk K]
 //! multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D]
 //! multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|cone> [--full]
 //!                   [--artifacts DIR]
@@ -87,9 +90,13 @@ USAGE:
                     [--byzantine B] [--model quadratic|mlp|cnn|transformer]
                     [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
                     [--eval-every K] [--seed S] [--threads T]
-                    [--transport threaded|pooled] [--collect first-m|all]
+                    [--transport threaded|pooled|socket] [--collect first-m|all]
                     [--overlap off|prefix] [--params-checksum]
+                    [--socket-listen ADDR] [--socket-chunk K]
                     [--artifacts DIR] [--curve-out FILE]
+  multibulyan worker --connect ADDR --worker-id K [--dim D] [--noise X]
+                    [--seed S] [--batch-size B] [--chunk K]
+                    [--retry-ms MS]
   multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
   multibulyan bench <fig2|fig3|dscaling|slowdown|threads|straggler
                      |resilience|cone> [--full] [--artifacts DIR]
@@ -108,7 +115,17 @@ Threads: --threads 1 (sequential, default) | 0 (auto) | N (shared pool);
          aggregation output is bit-identical for every setting
 Transport: --transport pooled (default; logical workers multiplexed over
          the shared pool — scales to 100+ workers) | threaded (one OS
-         thread per worker); seeded runs are identical on either
+         thread per worker) | socket (the wire transport of
+         docs/wire-protocol.md over TCP or Unix sockets; workers are
+         in-process client threads by default, or external
+         `multibulyan worker` processes when --socket-listen is given);
+         seeded runs are bit-identical on all three
+Socket:  --socket-listen tcp:HOST:PORT | unix:PATH | HOST:PORT (the
+         coordinator's bind address; implies external worker processes —
+         start one `multibulyan worker --connect ADDR --worker-id K` per
+         honest worker with matching --dim/--noise/--seed/--batch-size)
+         --socket-chunk K streams gradients in K-coordinate GradientChunk
+         frames (default 16384) so no full d-length send buffer exists
 Collect: --collect all (default; wait for every honest worker up to the
          round timeout) | first-m (the paper's synchronous model —
          proceed at the fastest m = n − f gradients; stragglers fall
@@ -145,6 +162,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd {
         "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
         "aggregate" => cmd_aggregate(&args),
         "bench" => cmd_bench(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
@@ -229,6 +247,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(o) = args.get("overlap") {
         exp.overlap = o.parse()?;
     }
+    if let Some(addr) = args.get("socket-listen") {
+        exp.cluster.socket_listen = Some(addr.to_string());
+    }
+    if let Some(c) = args.get("socket-chunk") {
+        exp.cluster.socket_chunk = c
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--socket-chunk {c}: {e}"))?;
+    }
     exp.validate()?;
     let compute = match &exp.model {
         ModelConfig::Artifact { dir, .. } => {
@@ -282,6 +308,56 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     coordinator.shutdown();
     Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    use multibulyan::data::QuadraticProblem;
+    use multibulyan::transport::socket;
+    use multibulyan::worker::{GradSource, GradWorker};
+    use std::sync::Arc;
+
+    let addr = args.get("connect").ok_or_else(|| {
+        anyhow::anyhow!("worker: --connect ADDR is required (tcp:HOST:PORT | unix:PATH | HOST:PORT)")
+    })?;
+    let worker_id: usize = args
+        .get("worker-id")
+        .ok_or_else(|| {
+            anyhow::anyhow!("worker: --worker-id K is required (0-based honest worker index)")
+        })?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--worker-id: {e}"))?;
+    let dim: usize = args.parse_or("dim", 1000)?;
+    let noise: f32 = args.parse_or("noise", 0.5)?;
+    let seed: u64 = args.parse_or("seed", 1)?;
+    let batch_size: usize = args.parse_or("batch-size", 25)?;
+    let chunk: usize = args.parse_or("chunk", socket::DEFAULT_CHUNK)?;
+    let retry_ms: u64 = args.parse_or("retry-ms", 5_000)?;
+    anyhow::ensure!(chunk >= 1, "--chunk must be ≥ 1");
+
+    // Mirror the coordinator's problem construction (ModelConfig::Quadratic
+    // + train.seed in coordinator::launch): gradients are counter-seeded
+    // from (dim, noise, seed, worker, round), so matching flags make this
+    // process bit-identical to an in-process worker thread.
+    let problem = Arc::new(QuadraticProblem::new(dim, noise, seed));
+    let source = GradSource::quadratic(problem, worker_id, batch_size);
+
+    // The coordinator may still be binding its listener; retry for
+    // roughly --retry-ms before giving up.
+    let mut waited = 0u64;
+    let client = loop {
+        match socket::connect(addr, worker_id, chunk) {
+            Ok(c) => break c,
+            Err(e) if waited >= retry_ms => {
+                anyhow::bail!("worker {worker_id}: cannot connect to {addr}: {e:#}")
+            }
+            Err(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                waited += 100;
+            }
+        }
+    };
+    eprintln!("worker {worker_id}: connected to {addr} (dim={dim} chunk={chunk})");
+    client.run_streaming(GradWorker::new(source))
 }
 
 fn cmd_aggregate(args: &Args) -> Result<()> {

@@ -57,13 +57,30 @@
 //! coordinator's prefix-overlap mode keeps the session open past the
 //! quorum to co-schedule combine work with the remaining drive
 //! ([`ServerEndpoint::collect_step_aux`]) and salvage late arrivals.
-//! The shared test harness at the bottom of this file runs the whole
-//! transport suite against both backends.
+//! A third backend leaves the process: **`socket`** ([`socket`] module)
+//! runs workers over TCP or Unix domain sockets speaking the
+//! length-prefixed binary frame protocol specified in
+//! `docs/wire-protocol.md` (magic, version, round id, worker id,
+//! payload kind + length, FNV-1a payload checksum). Gradients stream as
+//! chunk frames, collection mirrors the threaded backend's wall-clock
+//! session, and workers are either in-process client threads
+//! (self-hosted, the test/CI mode) or separate `multibulyan worker`
+//! processes ([`SocketOptions`]). All three backends pass the shared
+//! conformance suite in `rust/tests/transport_conformance.rs` as well
+//! as the test harness at the bottom of this file.
 //!
 //! [`runtime::pool::ThreadPool`]: crate::runtime::ThreadPool
 
+#![deny(missing_docs)]
+
 mod pooled;
+/// The wire transport (`transport = "socket"`): the frame codec, the
+/// server/accept machinery and the worker-side client of
+/// `docs/wire-protocol.md`, over TCP or Unix domain sockets.
+pub mod socket;
 mod threaded;
+
+pub use socket::SocketOptions;
 
 use crate::runtime::Parallelism;
 use crate::util::Rng64;
@@ -73,8 +90,12 @@ use std::time::Duration;
 /// Worker → server message: one gradient proposal.
 #[derive(Debug, Clone)]
 pub struct FromWorker {
+    /// Sending worker's id.
     pub worker: usize,
+    /// Round the gradient was computed for (stale rounds are discarded
+    /// by the collect session).
     pub round: u64,
+    /// The proposed gradient.
     pub gradient: Vec<f32>,
 }
 
@@ -181,8 +202,10 @@ pub enum CollectMode {
 }
 
 impl CollectMode {
+    /// Every collect mode, in display order (test/bench sweeps).
     pub const ALL: [CollectMode; 2] = [CollectMode::All, CollectMode::FirstM];
 
+    /// The knob spelling (`all` / `first-m`).
     pub fn as_str(self) -> &'static str {
         match self {
             CollectMode::All => "all",
@@ -231,15 +254,27 @@ pub enum TransportKind {
     /// Logical workers multiplexed over the shared thread pool (default).
     #[default]
     Pooled,
+    /// Real sockets (TCP/UDS) speaking the `docs/wire-protocol.md`
+    /// frame protocol; workers are in-process client threads or
+    /// separate `multibulyan worker` processes (see [`socket`]).
+    Socket,
 }
 
 impl TransportKind {
-    pub const ALL: [TransportKind; 2] = [TransportKind::Threaded, TransportKind::Pooled];
+    /// Every backend, in display order (test/bench sweeps run the
+    /// shared suites over all of these).
+    pub const ALL: [TransportKind; 3] = [
+        TransportKind::Threaded,
+        TransportKind::Pooled,
+        TransportKind::Socket,
+    ];
 
+    /// The knob spelling (`threaded` / `pooled` / `socket`).
     pub fn as_str(self) -> &'static str {
         match self {
             TransportKind::Threaded => "threaded",
             TransportKind::Pooled => "pooled",
+            TransportKind::Socket => "socket",
         }
     }
 }
@@ -257,7 +292,8 @@ impl std::str::FromStr for TransportKind {
         match s {
             "threaded" => Ok(TransportKind::Threaded),
             "pooled" => Ok(TransportKind::Pooled),
-            other => anyhow::bail!("unknown transport '{other}' (threaded|pooled)"),
+            "socket" => Ok(TransportKind::Socket),
+            other => anyhow::bail!("unknown transport '{other}' (threaded|pooled|socket)"),
         }
     }
 }
@@ -272,6 +308,9 @@ impl std::str::FromStr for TransportKind {
 /// pool, so it must not submit parallel regions to that same pool
 /// (the pool is not reentrant — see `runtime::pool`).
 pub trait WorkerBody: Send {
+    /// Run one round: compute whatever this worker proposes for `round`
+    /// at `params` and deliver it through `emit` (zero sends = a
+    /// silent/crashed worker).
     fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>);
 
     /// Cost-bounded stepping — how the pooled backend's time-sliced drive
@@ -330,6 +369,15 @@ enum EmitterSink<'a> {
     Channel(&'a std::sync::mpsc::Sender<FromWorker>),
     /// Pooled backend: this worker's arena slot.
     Slot(&'a Mutex<pooled::GradSlot>),
+    /// Socket backend: the client connection — the gradient leaves as a
+    /// sequence of GradientChunk frames (`docs/wire-protocol.md` §4.3),
+    /// `scratch` reused as the frame buffer.
+    Frame {
+        stream: &'a mut socket::Stream,
+        worker: u32,
+        chunk: usize,
+        scratch: &'a mut Vec<u8>,
+    },
 }
 
 impl Emitter<'_> {
@@ -351,7 +399,7 @@ impl Emitter<'_> {
             let us = (self.faults.delay_us as f32 * jitter) as u64;
             std::thread::sleep(Duration::from_micros(us));
         }
-        match &self.sink {
+        match &mut self.sink {
             EmitterSink::Channel(tx) => {
                 let _ = tx.send(FromWorker {
                     worker: self.worker,
@@ -371,6 +419,14 @@ impl Emitter<'_> {
                     s.grad.extend_from_slice(gradient);
                 }
             }
+            EmitterSink::Frame {
+                stream,
+                worker,
+                chunk,
+                scratch,
+            } => {
+                socket::send_gradient_frames(stream, *worker, round, gradient, *chunk, scratch);
+            }
         }
     }
 }
@@ -383,6 +439,7 @@ pub struct ServerEndpoint {
 enum ServerImpl {
     Threaded(threaded::Server),
     Pooled(pooled::Server),
+    Socket(socket::Server),
 }
 
 impl ServerEndpoint {
@@ -393,6 +450,7 @@ impl ServerEndpoint {
         match &mut self.inner {
             ServerImpl::Threaded(s) => s.broadcast(round, params),
             ServerImpl::Pooled(s) => s.broadcast(round, params),
+            ServerImpl::Socket(s) => s.broadcast(round, params),
         }
     }
 
@@ -410,6 +468,7 @@ impl ServerEndpoint {
         match &mut self.inner {
             ServerImpl::Threaded(s) => s.collect_begin(round, expect, timeout),
             ServerImpl::Pooled(s) => s.collect_begin(round, expect, timeout),
+            ServerImpl::Socket(s) => s.collect_begin(round, expect, timeout),
         }
     }
 
@@ -444,6 +503,7 @@ impl ServerEndpoint {
         match &mut self.inner {
             ServerImpl::Threaded(s) => s.collect_step(on_gradient, aux),
             ServerImpl::Pooled(s) => s.collect_step(on_gradient, aux),
+            ServerImpl::Socket(s) => s.collect_step(on_gradient, aux),
         }
     }
 
@@ -454,6 +514,7 @@ impl ServerEndpoint {
         match &mut self.inner {
             ServerImpl::Threaded(s) => s.collect_extend(),
             ServerImpl::Pooled(s) => s.collect_extend(),
+            ServerImpl::Socket(s) => s.collect_extend(),
         }
     }
 
@@ -465,6 +526,8 @@ impl ServerEndpoint {
         match &self.inner {
             ServerImpl::Threaded(_) => 0,
             ServerImpl::Pooled(s) => s.collect_virtual_us(),
+            // No virtual clock on real sockets, like threaded.
+            ServerImpl::Socket(_) => 0,
         }
     }
 
@@ -473,6 +536,7 @@ impl ServerEndpoint {
         match &self.inner {
             ServerImpl::Threaded(s) => s.collect_accepted(),
             ServerImpl::Pooled(s) => s.collect_accepted(),
+            ServerImpl::Socket(s) => s.collect_accepted(),
         }
     }
 
@@ -483,6 +547,7 @@ impl ServerEndpoint {
         match &mut self.inner {
             ServerImpl::Threaded(s) => s.collect_finish(),
             ServerImpl::Pooled(s) => s.collect_finish(),
+            ServerImpl::Socket(s) => s.collect_finish(),
         }
     }
 
@@ -543,13 +608,26 @@ impl ServerEndpoint {
         match &self.inner {
             ServerImpl::Threaded(s) => s.shutdown(),
             ServerImpl::Pooled(s) => s.shutdown(),
+            ServerImpl::Socket(s) => s.shutdown(),
         }
     }
 
+    /// Number of logical workers this endpoint was built for (`n`).
     pub fn num_workers(&self) -> usize {
         match &self.inner {
             ServerImpl::Threaded(s) => s.num_workers(),
             ServerImpl::Pooled(s) => s.num_workers(),
+            ServerImpl::Socket(s) => s.num_workers(),
+        }
+    }
+
+    /// The bound listen address of the socket backend (`None` on the
+    /// in-process backends). External `multibulyan worker` processes
+    /// connect here; tests use it to speak raw frames at the server.
+    pub fn socket_addr(&self) -> Option<&str> {
+        match &self.inner {
+            ServerImpl::Socket(s) => Some(s.addr()),
+            _ => None,
         }
     }
 
@@ -558,6 +636,7 @@ impl ServerEndpoint {
         match &self.inner {
             ServerImpl::Threaded(_) => TransportKind::Threaded,
             ServerImpl::Pooled(_) => TransportKind::Pooled,
+            ServerImpl::Socket(_) => TransportKind::Socket,
         }
     }
 }
@@ -571,23 +650,30 @@ pub struct WorkerEndpoint {
 enum EndpointImpl {
     Threaded(threaded::Worker),
     Pooled(pooled::WorkerHandle),
+    Socket(socket::WorkerSlot),
 }
 
 impl WorkerEndpoint {
+    /// This endpoint's logical worker id in `0..n`.
     pub fn id(&self) -> usize {
         match &self.inner {
             EndpointImpl::Threaded(w) => w.id(),
             EndpointImpl::Pooled(w) => w.id(),
+            EndpointImpl::Socket(w) => w.id(),
         }
     }
 
     /// Install `body` and start serving rounds: spawns a dedicated OS
     /// thread on the threaded backend; registers the body with the shared
-    /// runtime on the pooled backend (no thread).
+    /// runtime on the pooled backend (no thread); on the socket backend,
+    /// spawns an in-process client thread that connects over the wire
+    /// (or drops the body when the cluster is `external` — a separate
+    /// `multibulyan worker` process owns this slot instead).
     pub fn serve(self, body: impl WorkerBody + 'static) {
         match self.inner {
             EndpointImpl::Threaded(w) => w.serve(Box::new(body)),
             EndpointImpl::Pooled(w) => w.serve(Box::new(body)),
+            EndpointImpl::Socket(w) => w.serve(Box::new(body)),
         }
     }
 }
@@ -631,8 +717,34 @@ pub fn star_pooled(
     )
 }
 
-/// Build a star on the chosen backend — the one constructor the launcher
-/// uses (`kind` is the `transport` config knob).
+/// Build a socket star for `n` workers: binds the listener (or an
+/// ephemeral loopback TCP port when `opts.listen` is `None`), spawns the
+/// accept loop, and returns worker slots that either launch in-process
+/// client threads (`serve`) or stand for external `multibulyan worker`
+/// processes (`opts.external`). Fails if the address cannot be bound.
+pub fn star_socket(
+    n: usize,
+    faults: FaultModel,
+    opts: &SocketOptions,
+) -> anyhow::Result<(ServerEndpoint, Vec<WorkerEndpoint>)> {
+    let (server, workers) = socket::star(n, faults, opts)?;
+    Ok((
+        ServerEndpoint {
+            inner: ServerImpl::Socket(server),
+        },
+        workers
+            .into_iter()
+            .map(|w| WorkerEndpoint {
+                inner: EndpointImpl::Socket(w),
+            })
+            .collect(),
+    ))
+}
+
+/// Build a star on the chosen backend — the infallible constructor tests
+/// and benches use (`kind` is the `transport` config knob). The socket
+/// arm binds an ephemeral loopback port with default options; use
+/// [`build_cluster`] to pass listen/chunk knobs and surface bind errors.
 pub fn build(
     kind: TransportKind,
     n: usize,
@@ -642,6 +754,25 @@ pub fn build(
     match kind {
         TransportKind::Threaded => star(n, faults),
         TransportKind::Pooled => star_pooled(n, faults, par),
+        TransportKind::Socket => star_socket(n, faults, &SocketOptions::default())
+            .expect("binding an ephemeral loopback socket"),
+    }
+}
+
+/// Knob-driven cluster constructor: like [`build`] but threads the socket
+/// backend's [`SocketOptions`] through and surfaces bind failures instead
+/// of panicking. The in-process backends ignore `socket` and cannot fail.
+pub fn build_cluster(
+    kind: TransportKind,
+    n: usize,
+    faults: FaultModel,
+    par: &Parallelism,
+    socket: &SocketOptions,
+) -> anyhow::Result<(ServerEndpoint, Vec<WorkerEndpoint>)> {
+    match kind {
+        TransportKind::Threaded => Ok(star(n, faults)),
+        TransportKind::Pooled => Ok(star_pooled(n, faults, par)),
+        TransportKind::Socket => star_socket(n, faults, socket),
     }
 }
 
@@ -849,10 +980,9 @@ mod tests {
             ids.sort_unstable();
             ids
         };
-        assert_eq!(
-            survivors(TransportKind::Threaded),
-            survivors(TransportKind::Pooled)
-        );
+        let reference = survivors(TransportKind::Threaded);
+        assert_eq!(reference, survivors(TransportKind::Pooled));
+        assert_eq!(reference, survivors(TransportKind::Socket));
     }
 
     #[test]
@@ -1213,10 +1343,26 @@ mod tests {
     fn transport_kind_parses_and_displays() {
         assert_eq!("threaded".parse::<TransportKind>().unwrap(), TransportKind::Threaded);
         assert_eq!("pooled".parse::<TransportKind>().unwrap(), TransportKind::Pooled);
+        assert_eq!("socket".parse::<TransportKind>().unwrap(), TransportKind::Socket);
         assert!("carrier-pigeon".parse::<TransportKind>().is_err());
         assert_eq!(TransportKind::default(), TransportKind::Pooled);
         for kind in TransportKind::ALL {
             assert_eq!(kind.as_str().parse::<TransportKind>().unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn socket_addr_is_exposed_only_by_the_socket_backend() {
+        on_both(|kind| {
+            let server = harness(kind, 1, FaultModel::default(), |_id, round, _p, emit| {
+                emit.send(round, &[0.0]);
+            });
+            assert_eq!(
+                server.socket_addr().is_some(),
+                kind == TransportKind::Socket,
+                "{kind}"
+            );
+            server.shutdown();
+        });
     }
 }

@@ -1,0 +1,1506 @@
+//! The socket backend: real multi-process workers over a length-prefixed
+//! binary frame protocol (TCP or Unix domain sockets).
+//!
+//! The wire format and the session state machine are specified
+//! normatively in `docs/wire-protocol.md`; the section numbers cited in
+//! comments below (§2, §5.1, §6.3, …) refer to that document, and the
+//! shared conformance suite (`rust/tests/transport_conformance.rs`)
+//! enforces them test-by-test.
+//!
+//! Shape: every frame is a 32-byte header (magic `"MBWP"`, protocol
+//! version, payload kind, round id, worker id, payload length, FNV-1a
+//! payload checksum — §2) followed by the payload. Gradients travel as a
+//! sequence of [`GradientChunk`](PayloadKind::GradientChunk) frames so a
+//! worker never has to materialize a full `d`-length byte buffer per
+//! send (§4.3); the server reassembles them in order and delivers one
+//! [`FromWorker`] per completed gradient. Collection mirrors the
+//! threaded backend exactly: a wall-clock deadline-bounded incremental
+//! session over an mpsc channel fed by per-connection reader threads,
+//! so first-m quorums, accept/reject callbacks and stale-round discard
+//! behave identically on all three backends (§6).
+//!
+//! Two deployment modes (selected by [`SocketOptions`]):
+//!
+//! * **self-hosted** (`external = false`, the default): the server binds
+//!   an ephemeral loopback address (or the configured one) and
+//!   `WorkerEndpoint::serve` spawns an in-process client thread per
+//!   worker — same process, real sockets. This is what the tests and
+//!   the CI determinism legs run.
+//! * **external** (`external = true`): `serve` is a no-op and workers
+//!   are separate processes (`multibulyan worker --connect <addr>
+//!   --worker-id <k>`; see `examples/socket_cluster.sh`).
+//!
+//! Determinism: the client applies the same per-worker [`FaultModel`]
+//! RNG stream and [`ComputeCost`](super::ComputeCost) pre-compute sleep
+//! as the threaded backend (via the shared [`Emitter`]), and f32 values
+//! round-trip bit-exactly through their little-endian encoding (§3), so
+//! a seeded `train --params-checksum` run is bit-identical across
+//! threaded, pooled and socket — the CI determinism matrix diffs all
+//! three.
+
+use super::{lock, CollectStatus, Emitter, EmitterSink, FaultModel, FromWorker, WorkerBody};
+use crate::util::fnv1a;
+use anyhow::Context;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+// wall-clock: this backend talks to real processes over real sockets —
+// the collect deadline is physical time, exactly like `threaded`.
+use std::time::{Duration, Instant};
+
+/// Frame magic, first four bytes of every frame (§2): "MBWP" —
+/// MultiBulyan Wire Protocol.
+pub const MAGIC: [u8; 4] = *b"MBWP";
+
+/// Protocol version carried in every frame header (§5.2). A server
+/// receiving any other version rejects the connection.
+pub const VERSION: u16 = 1;
+
+/// Fixed frame-header length in bytes (§2).
+pub const HEADER_LEN: usize = 32;
+
+/// Upper bound on a frame's payload length (§2); a header claiming more
+/// is rejected before any payload is read.
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// Default number of f32 coordinates per [`PayloadKind::GradientChunk`]
+/// frame (the `socket_chunk` config knob / `--socket-chunk` flag).
+pub const DEFAULT_CHUNK: usize = 16_384;
+
+/// How long one incremental `collect_step` blocks on the reader channel
+/// when aux work interleaves (same contract as the threaded backend).
+const STEP: Duration = Duration::from_millis(1);
+
+/// Read-timeout tick of per-connection reader threads: the granularity
+/// at which a blocked read re-checks the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(50);
+
+/// Poll interval of the non-blocking accept loop.
+const ACCEPT_TICK: Duration = Duration::from_millis(1);
+
+/// Payload kinds (§4). The discriminant is the header's kind byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PayloadKind {
+    /// Worker → server registration (§4.1): worker id in the header,
+    /// empty payload. The server acks with a Hello back.
+    Hello = 1,
+    /// Server → worker round start (§4.2): payload is the full parameter
+    /// vector as little-endian f32s.
+    RoundResult = 2,
+    /// Worker → server gradient piece (§4.3): payload is
+    /// `offset u32 | total u32 | f32 × k`, all little-endian.
+    GradientChunk = 3,
+    /// Server → worker refusal (§4.4): payload is one reason-code byte
+    /// (the `REJECT_*` constants).
+    Reject = 4,
+    /// Either direction: orderly connection teardown (§4.5).
+    Shutdown = 5,
+}
+
+impl PayloadKind {
+    /// Decode a header kind byte; `None` for unknown kinds (§5.3 —
+    /// forward compatibility: the frame is skipped, not fatal).
+    pub fn from_u8(b: u8) -> Option<Self> {
+        match b {
+            1 => Some(PayloadKind::Hello),
+            2 => Some(PayloadKind::RoundResult),
+            3 => Some(PayloadKind::GradientChunk),
+            4 => Some(PayloadKind::Reject),
+            5 => Some(PayloadKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded frame (§2): the header fields that survive decoding plus
+/// the verified payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    /// Payload kind (header byte 6).
+    pub kind: PayloadKind,
+    /// Round id (header bytes 8..16). 0 when not round-scoped.
+    pub round: u64,
+    /// Worker id (header bytes 16..20); `u32::MAX` for server-originated
+    /// broadcast-style frames.
+    pub worker: u32,
+    /// Checksum-verified payload bytes.
+    pub payload: Vec<u8>,
+}
+
+/// Why a frame could not be read (§5). `Checksum`, `BadKind` leave the
+/// stream positioned at the next frame (recoverable); the rest close
+/// the connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// Clean EOF before the first header byte.
+    Closed,
+    /// EOF mid-frame (short header or short payload).
+    Truncated,
+    /// First four bytes were not [`MAGIC`].
+    BadMagic,
+    /// Unsupported protocol version (§5.2).
+    BadVersion(u16),
+    /// Unknown kind byte; the payload was consumed, the stream is still
+    /// in sync (§5.3).
+    BadKind(u8),
+    /// Header claimed a payload longer than [`MAX_PAYLOAD`].
+    Oversize(u32),
+    /// Payload bytes did not hash to the header checksum (§5.1).
+    Checksum {
+        /// Checksum the header claimed.
+        expected: u64,
+        /// FNV-1a of the payload actually received.
+        got: u64,
+    },
+    /// Underlying socket error.
+    Io(ErrorKind),
+    /// The local endpoint is shutting down (reader threads poll the stop
+    /// flag between read ticks).
+    Shutdown,
+}
+
+/// Reject reason (§4.4): payload checksum mismatch.
+pub const REJECT_CHECKSUM: u8 = 1;
+/// Reject reason (§4.4): unknown payload kind.
+pub const REJECT_UNKNOWN_KIND: u8 = 2;
+/// Reject reason (§4.4): unsupported protocol version.
+pub const REJECT_VERSION: u8 = 3;
+/// Reject reason (§4.4): worker id out of the cluster's range.
+pub const REJECT_BAD_WORKER: u8 = 4;
+/// Reject reason (§4.4): another live connection already registered
+/// this worker id (first connection wins — §6.5).
+pub const REJECT_DUPLICATE: u8 = 5;
+/// Reject reason (§4.4): structurally invalid payload or chunk sequence
+/// (bad offset/total bookkeeping, non-f32-aligned length, …).
+pub const REJECT_MALFORMED: u8 = 6;
+
+/// Human-readable name of a Reject reason code (§4.4).
+pub fn reject_reason_str(code: u8) -> &'static str {
+    match code {
+        REJECT_CHECKSUM => "payload checksum mismatch",
+        REJECT_UNKNOWN_KIND => "unknown payload kind",
+        REJECT_VERSION => "unsupported protocol version",
+        REJECT_BAD_WORKER => "worker id out of range",
+        REJECT_DUPLICATE => "worker id already connected",
+        REJECT_MALFORMED => "malformed payload",
+        _ => "unknown reason",
+    }
+}
+
+/// Serialize `frame`'s header into `buf[..HEADER_LEN]` (§2 layout).
+fn write_header(buf: &mut [u8], kind: PayloadKind, round: u64, worker: u32, len: u32, sum: u64) {
+    buf[0..4].copy_from_slice(&MAGIC);
+    buf[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    buf[6] = kind as u8;
+    buf[7] = 0; // reserved, must be 0 (§2)
+    buf[8..16].copy_from_slice(&round.to_le_bytes());
+    buf[16..20].copy_from_slice(&worker.to_le_bytes());
+    buf[20..24].copy_from_slice(&len.to_le_bytes());
+    buf[24..32].copy_from_slice(&sum.to_le_bytes());
+}
+
+/// Encode a frame to bytes: header (with computed checksum) + payload.
+/// `encode` → [`read_frame`] is bit-identity, property-tested (§3).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = vec![0u8; HEADER_LEN];
+    out.extend_from_slice(&frame.payload);
+    let sum = fnv1a(frame.payload.iter().copied());
+    write_header(
+        &mut out[..HEADER_LEN],
+        frame.kind,
+        frame.round,
+        frame.worker,
+        frame.payload.len() as u32,
+        sum,
+    );
+    out
+}
+
+/// Write one encoded frame to `w` and flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    let bytes = encode(frame);
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+/// Read exactly `buf.len()` bytes, preserving partial fills across read
+/// timeouts (std's `read_exact` would lose already-read bytes on a
+/// `WouldBlock`/`TimedOut` tick). Returns `Ok(false)` on a clean EOF
+/// before the first byte; a partial EOF is [`FrameError::Truncated`].
+/// Between ticks, `stop` (if any) is polled so server reader threads
+/// notice shutdown within one [`READ_TICK`].
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    stop: Option<&AtomicBool>,
+) -> Result<bool, FrameError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(false)
+                } else {
+                    Err(FrameError::Truncated)
+                }
+            }
+            Ok(n) => filled += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if stop.is_some_and(|s| s.load(Ordering::SeqCst)) {
+                    return Err(FrameError::Shutdown);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e.kind())),
+        }
+    }
+    Ok(true)
+}
+
+/// Consume and discard `len` payload bytes (keeps the stream in sync
+/// after an unknown-kind header — §5.3).
+fn discard<R: Read>(r: &mut R, mut len: usize, stop: Option<&AtomicBool>) -> Result<(), FrameError> {
+    let mut buf = [0u8; 4096];
+    while len > 0 {
+        let take = len.min(buf.len());
+        if !read_full(r, &mut buf[..take], stop)? {
+            return Err(FrameError::Truncated);
+        }
+        len -= take;
+    }
+    Ok(())
+}
+
+/// Read and validate one frame (§2, §5). Works on any `Read` — sockets
+/// here, byte slices in the codec tests. Error recoverability is as
+/// documented on [`FrameError`].
+pub fn read_frame<R: Read>(r: &mut R, stop: Option<&AtomicBool>) -> Result<Frame, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    if !read_full(r, &mut header, stop)? {
+        return Err(FrameError::Closed);
+    }
+    if header[0..4] != MAGIC {
+        return Err(FrameError::BadMagic);
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(FrameError::BadVersion(version));
+    }
+    let raw_kind = header[6];
+    let round = u64::from_le_bytes(header[8..16].try_into().expect("8-byte slice"));
+    let worker = u32::from_le_bytes(header[16..20].try_into().expect("4-byte slice"));
+    let len = u32::from_le_bytes(header[20..24].try_into().expect("4-byte slice"));
+    let expected = u64::from_le_bytes(header[24..32].try_into().expect("8-byte slice"));
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversize(len));
+    }
+    let Some(kind) = PayloadKind::from_u8(raw_kind) else {
+        discard(r, len as usize, stop)?;
+        return Err(FrameError::BadKind(raw_kind));
+    };
+    let mut payload = vec![0u8; len as usize];
+    if !read_full(r, &mut payload, stop)? {
+        return Err(FrameError::Truncated);
+    }
+    let got = fnv1a(payload.iter().copied());
+    if got != expected {
+        return Err(FrameError::Checksum { expected, got });
+    }
+    Ok(Frame {
+        kind,
+        round,
+        worker,
+        payload,
+    })
+}
+
+/// Encode a parameter vector as a RoundResult payload (§4.2): f32s in
+/// little-endian byte order — the bit-exact round-trip the determinism
+/// matrix depends on.
+pub fn params_payload(params: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(params.len() * 4);
+    for v in params {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a RoundResult payload back to f32s (§4.2).
+pub fn parse_params(payload: &[u8]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        payload.len() % 4 == 0,
+        "RoundResult payload length {} is not a multiple of 4",
+        payload.len()
+    );
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Split a GradientChunk payload into `(offset, total, value_bytes)`
+/// (§4.3); `None` if the length bookkeeping is structurally invalid.
+fn parse_chunk(payload: &[u8]) -> Option<(u32, u32, &[u8])> {
+    if payload.len() < 8 || (payload.len() - 8) % 4 != 0 {
+        return None;
+    }
+    let offset = u32::from_le_bytes(payload[0..4].try_into().ok()?);
+    let total = u32::from_le_bytes(payload[4..8].try_into().ok()?);
+    Some((offset, total, &payload[8..]))
+}
+
+/// Write one GradientChunk frame for `values` at `offset` of a
+/// `total`-coordinate gradient, reusing `scratch` as the frame buffer —
+/// one `write_all` per frame, no full-gradient allocation (§4.3).
+pub fn write_chunk_frame<W: Write>(
+    w: &mut W,
+    worker: u32,
+    round: u64,
+    offset: u32,
+    total: u32,
+    values: &[f32],
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    scratch.clear();
+    scratch.reserve(HEADER_LEN + 8 + values.len() * 4);
+    scratch.extend_from_slice(&[0u8; HEADER_LEN]);
+    scratch.extend_from_slice(&offset.to_le_bytes());
+    scratch.extend_from_slice(&total.to_le_bytes());
+    for v in values {
+        scratch.extend_from_slice(&v.to_le_bytes());
+    }
+    let sum = fnv1a(scratch[HEADER_LEN..].iter().copied());
+    let len = (scratch.len() - HEADER_LEN) as u32;
+    write_header(
+        &mut scratch[..HEADER_LEN],
+        PayloadKind::GradientChunk,
+        round,
+        worker,
+        len,
+        sum,
+    );
+    w.write_all(scratch)?;
+    w.flush()
+}
+
+/// Send one complete gradient as a chunk sequence (§4.3); used by the
+/// shared [`Emitter`] sink. A write error means the server is gone —
+/// the worker falls silent, indistinguishable from a crash (§6.4).
+pub(super) fn send_gradient_frames(
+    stream: &mut Stream,
+    worker: u32,
+    round: u64,
+    gradient: &[f32],
+    chunk: usize,
+    scratch: &mut Vec<u8>,
+) {
+    let chunk = chunk.max(1);
+    let total = gradient.len() as u32;
+    let mut offset = 0usize;
+    loop {
+        let end = (offset + chunk).min(gradient.len());
+        if write_chunk_frame(
+            stream,
+            worker,
+            round,
+            offset as u32,
+            total,
+            &gradient[offset..end],
+            scratch,
+        )
+        .is_err()
+        {
+            return;
+        }
+        offset = end;
+        if offset >= gradient.len() {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Address handling and the TCP/UDS stream abstraction (§1).
+// ---------------------------------------------------------------------
+
+/// A parsed listen/connect address.
+enum AddrSpec {
+    /// `host:port`.
+    Tcp(String),
+    /// Filesystem path of a Unix domain socket.
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+/// Parse `tcp:HOST:PORT`, `unix:PATH`, or bare `HOST:PORT` (§1).
+fn parse_addr(s: &str) -> anyhow::Result<AddrSpec> {
+    if let Some(rest) = s.strip_prefix("tcp:") {
+        return Ok(AddrSpec::Tcp(rest.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix("unix:") {
+        #[cfg(unix)]
+        {
+            return Ok(AddrSpec::Unix(PathBuf::from(rest)));
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = rest;
+            anyhow::bail!("unix socket addresses are not supported on this platform: {s}");
+        }
+    }
+    anyhow::ensure!(
+        s.contains(':'),
+        "socket address '{s}' must be tcp:HOST:PORT, unix:PATH, or HOST:PORT"
+    );
+    Ok(AddrSpec::Tcp(s.to_string()))
+}
+
+/// One connected byte stream: TCP or Unix domain socket, behind a
+/// common `Read`/`Write` face (the codec above is transport-agnostic).
+pub enum Stream {
+    /// TCP connection (Nagle disabled — frames are latency-sensitive).
+    Tcp(TcpStream),
+    /// Unix-domain-socket connection.
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn shutdown_both(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Connect a raw stream to a server address (`tcp:HOST:PORT`,
+/// `unix:PATH`, or bare `HOST:PORT`). Exposed for the conformance
+/// suite's raw-frame tests; worker processes use [`connect`].
+pub fn connect_stream(addr: &str) -> anyhow::Result<Stream> {
+    match parse_addr(addr)? {
+        AddrSpec::Tcp(hostport) => {
+            let s = TcpStream::connect(&hostport)
+                .with_context(|| format!("connecting to tcp:{hostport}"))?;
+            let _ = s.set_nodelay(true);
+            Ok(Stream::Tcp(s))
+        }
+        #[cfg(unix)]
+        AddrSpec::Unix(path) => {
+            let s = UnixStream::connect(&path)
+                .with_context(|| format!("connecting to unix:{}", path.display()))?;
+            Ok(Stream::Unix(s))
+        }
+    }
+}
+
+/// The listening half (server side).
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind; returns the listener and, for UDS, the path to unlink at
+    /// shutdown. A stale socket file from a crashed run is removed
+    /// before binding.
+    fn bind(spec: &AddrSpec) -> anyhow::Result<(Listener, Option<PathBuf>)> {
+        match spec {
+            AddrSpec::Tcp(hostport) => {
+                let l = TcpListener::bind(hostport)
+                    .with_context(|| format!("binding tcp:{hostport}"))?;
+                Ok((Listener::Tcp(l), None))
+            }
+            #[cfg(unix)]
+            AddrSpec::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix:{}", path.display()))?;
+                Ok((Listener::Unix(l, path.clone()), Some(path.clone())))
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                Ok(Stream::Unix(s))
+            }
+        }
+    }
+
+    /// Display form of the bound address, connectable by [`connect`].
+    fn display_addr(&self) -> anyhow::Result<String> {
+        match self {
+            Listener::Tcp(l) => Ok(format!("tcp:{}", l.local_addr()?)),
+            #[cfg(unix)]
+            Listener::Unix(_, path) => Ok(format!("unix:{}", path.display())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Options.
+// ---------------------------------------------------------------------
+
+/// Socket-backend construction knobs (the `[cluster]` config section's
+/// `socket_listen`/`socket_chunk` keys and the corresponding CLI flags).
+#[derive(Debug, Clone)]
+pub struct SocketOptions {
+    /// Listen address (`tcp:HOST:PORT` or `unix:PATH`). `None` binds an
+    /// ephemeral loopback TCP port.
+    pub listen: Option<String>,
+    /// f32 coordinates per GradientChunk frame (≥ 1).
+    pub chunk: usize,
+    /// `true`: workers are external processes and
+    /// `WorkerEndpoint::serve` is a no-op; `false` (default): `serve`
+    /// spawns an in-process client thread per worker.
+    pub external: bool,
+}
+
+impl Default for SocketOptions {
+    fn default() -> Self {
+        Self {
+            listen: None,
+            chunk: DEFAULT_CHUNK,
+            external: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server half.
+// ---------------------------------------------------------------------
+
+/// State shared between the server handle, the accept thread and the
+/// per-connection reader threads. One mutex covers both the connection
+/// table and the pending broadcast so late-joiner replay (§6.5) cannot
+/// race a concurrent `broadcast`.
+struct ServerState {
+    /// Write halves, indexed by worker id (a `Vec`, not a map — no hash
+    /// iteration, and ids are dense by construction).
+    conns: Vec<Option<Stream>>,
+    /// Most recent broadcast, replayed to workers that register after
+    /// it was sent (§6.1).
+    pending: Option<(u64, Arc<Vec<f32>>)>,
+}
+
+struct Shared {
+    n: usize,
+    state: Mutex<ServerState>,
+    tx: mpsc::Sender<FromWorker>,
+    stop: AtomicBool,
+    /// UDS path to unlink at shutdown.
+    cleanup: Option<PathBuf>,
+}
+
+/// One in-flight incremental collection — identical bookkeeping to the
+/// threaded backend's session (§6.2).
+struct Session {
+    round: u64,
+    /// Quorum cap (`usize::MAX` after `collect_extend`).
+    expect: usize,
+    // wall-clock: real deadline that remote worker processes race.
+    deadline: Option<Instant>,
+    accepted: usize,
+    disconnected: bool,
+}
+
+/// Socket server half: owns the reader-channel receiver and the shared
+/// connection state; the accept loop and per-connection readers run on
+/// their own threads.
+pub(super) struct Server {
+    shared: Arc<Shared>,
+    from_workers: mpsc::Receiver<FromWorker>,
+    addr: String,
+    session: Option<Session>,
+}
+
+/// Build a Reject frame (§4.4).
+fn reject_frame(round: u64, worker: u32, reason: u8) -> Frame {
+    Frame {
+        kind: PayloadKind::Reject,
+        round,
+        worker,
+        payload: vec![reason],
+    }
+}
+
+/// Send a Reject to a registered worker through its stored write half
+/// (all server → worker writes are serialized under the state mutex so
+/// frames never interleave mid-frame on one connection).
+fn send_reject(shared: &Shared, worker: usize, round: u64, reason: u8) {
+    let bytes = encode(&reject_frame(round, worker as u32, reason));
+    let mut st = lock(&shared.state);
+    if let Some(conn) = st.conns.get_mut(worker).and_then(|c| c.as_mut()) {
+        let _ = conn.write_all(&bytes);
+        let _ = conn.flush();
+    }
+}
+
+/// In-order reassembly of one worker's chunked gradient (§4.3, §6.3):
+/// chunks must arrive at offset 0 first and strictly in order; a round
+/// change or any bookkeeping violation resets the assembly.
+#[derive(Default)]
+struct ChunkAssembly {
+    round: u64,
+    active: bool,
+    total: usize,
+    buf: Vec<f32>,
+}
+
+enum Feed {
+    Partial,
+    Complete(Vec<f32>),
+    Malformed,
+}
+
+impl ChunkAssembly {
+    fn reset(&mut self) {
+        self.active = false;
+        self.buf.clear();
+    }
+
+    fn feed(&mut self, round: u64, payload: &[u8]) -> Feed {
+        let Some((offset, total, bytes)) = parse_chunk(payload) else {
+            self.reset();
+            return Feed::Malformed;
+        };
+        if !self.active || round != self.round || total as usize != self.total {
+            // A new gradient begins; it must begin at offset 0 (§4.3).
+            if offset != 0 {
+                self.reset();
+                return Feed::Malformed;
+            }
+            self.round = round;
+            self.total = total as usize;
+            self.active = true;
+            self.buf.clear();
+        }
+        if offset as usize != self.buf.len() {
+            self.reset();
+            return Feed::Malformed;
+        }
+        let k = bytes.len() / 4;
+        if self.buf.len() + k > self.total {
+            self.reset();
+            return Feed::Malformed;
+        }
+        self.buf.reserve(k);
+        for c in bytes.chunks_exact(4) {
+            self.buf.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        if self.buf.len() == self.total {
+            self.active = false;
+            Feed::Complete(std::mem::take(&mut self.buf))
+        } else {
+            Feed::Partial
+        }
+    }
+}
+
+/// Per-connection serve loop (§6): Hello handshake + registration, then
+/// frames until EOF/Shutdown/stop. Runs on its own reader thread.
+fn serve_conn(mut stream: Stream, shared: &Shared) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    // Handshake: the first frame must be a well-formed Hello (§6.5).
+    let hello = match read_frame(&mut stream, Some(&shared.stop)) {
+        Ok(f) => f,
+        Err(FrameError::BadVersion(_)) => {
+            let _ = write_frame(&mut stream, &reject_frame(0, u32::MAX, REJECT_VERSION));
+            return;
+        }
+        Err(_) => return,
+    };
+    if hello.kind != PayloadKind::Hello {
+        return;
+    }
+    let worker = hello.worker as usize;
+    {
+        let mut st = lock(&shared.state);
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if worker >= shared.n {
+            drop(st);
+            let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_BAD_WORKER));
+            return;
+        }
+        if st.conns[worker].is_some() {
+            // First connection wins; the newcomer is turned away (§6.5).
+            drop(st);
+            let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_DUPLICATE));
+            return;
+        }
+        let Ok(mut write_half) = stream.try_clone() else {
+            return;
+        };
+        let ack = Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker: hello.worker,
+            payload: Vec::new(),
+        };
+        if write_frame(&mut write_half, &ack).is_err() {
+            return;
+        }
+        // Late-joiner replay: a worker that registers after a broadcast
+        // still gets the current round (§6.1).
+        if let Some((round, params)) = &st.pending {
+            let _ = write_frame(
+                &mut write_half,
+                &Frame {
+                    kind: PayloadKind::RoundResult,
+                    round: *round,
+                    worker: u32::MAX,
+                    payload: params_payload(params),
+                },
+            );
+        }
+        st.conns[worker] = Some(write_half);
+    }
+    let mut asm = ChunkAssembly::default();
+    loop {
+        match read_frame(&mut stream, Some(&shared.stop)) {
+            Ok(f) => match f.kind {
+                PayloadKind::GradientChunk => {
+                    if f.worker as usize != worker {
+                        // A chunk must carry the id this connection
+                        // registered (§6.5).
+                        asm.reset();
+                        send_reject(shared, worker, f.round, REJECT_MALFORMED);
+                        continue;
+                    }
+                    match asm.feed(f.round, &f.payload) {
+                        Feed::Complete(gradient) => {
+                            let _ = shared.tx.send(FromWorker {
+                                worker,
+                                round: f.round,
+                                gradient,
+                            });
+                        }
+                        Feed::Partial => {}
+                        Feed::Malformed => send_reject(shared, worker, f.round, REJECT_MALFORMED),
+                    }
+                }
+                PayloadKind::Shutdown => break,
+                PayloadKind::Hello => {}
+                PayloadKind::RoundResult | PayloadKind::Reject => {
+                    // Server-bound streams must not carry client-bound
+                    // kinds; rejected but not fatal (§5.3).
+                    send_reject(shared, worker, f.round, REJECT_MALFORMED);
+                }
+            },
+            // Recoverable frame errors: the sender is told, the
+            // connection survives, and the bad frame never reaches the
+            // collect session — it cannot occupy a quorum slot (§5.1).
+            Err(FrameError::Checksum { .. }) => send_reject(shared, worker, 0, REJECT_CHECKSUM),
+            Err(FrameError::BadKind(_)) => send_reject(shared, worker, 0, REJECT_UNKNOWN_KIND),
+            Err(FrameError::Shutdown) => break,
+            // Closed/Truncated/BadMagic/BadVersion/Oversize/Io: the
+            // stream cannot be trusted to be in sync — drop it (§5.3).
+            Err(_) => break,
+        }
+    }
+    let mut st = lock(&shared.state);
+    st.conns[worker] = None;
+}
+
+/// Accept loop: non-blocking accept + stop-flag poll, one reader thread
+/// per accepted connection. Owns the listener; dropping it on exit
+/// frees the port/path.
+fn accept_loop(listener: Listener, shared: Arc<Shared>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok(stream) => {
+                let shared = Arc::clone(&shared);
+                let _ = std::thread::Builder::new()
+                    .name("socket-conn".to_string())
+                    .spawn(move || serve_conn(stream, &shared));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_TICK),
+            Err(_) => std::thread::sleep(ACCEPT_TICK),
+        }
+    }
+}
+
+impl Server {
+    /// The bound listen address in [`connect`]-able form.
+    pub(super) fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub(super) fn broadcast(&mut self, round: u64, params: Arc<Vec<f32>>) {
+        let mut st = lock(&self.shared.state);
+        st.pending = Some((round, Arc::clone(&params)));
+        let bytes = encode(&Frame {
+            kind: PayloadKind::RoundResult,
+            round,
+            worker: u32::MAX,
+            payload: params_payload(&params),
+        });
+        for conn in st.conns.iter_mut().flatten() {
+            // A write error means that worker is gone; its reader
+            // thread will notice the EOF and deregister it (§6.4).
+            let _ = conn.write_all(&bytes);
+            let _ = conn.flush();
+        }
+    }
+
+    pub(super) fn collect_begin(&mut self, round: u64, expect: usize, timeout: Duration) {
+        self.session = Some(Session {
+            round,
+            expect,
+            // wall-clock: arms the physical collect deadline (§6.2).
+            deadline: Instant::now().checked_add(timeout),
+            accepted: 0,
+            disconnected: false,
+        });
+    }
+
+    /// One wait on the reader channel, delivering at most one accepted
+    /// gradient — byte-for-byte the threaded backend's session logic
+    /// (§6.2, §6.3): stale rounds are discarded, a rejected gradient
+    /// does not fill an `expect` slot, and `aux` (the prefix-overlap
+    /// hook) runs inline with the wait capped at [`STEP`].
+    pub(super) fn collect_step(
+        &mut self,
+        on_gradient: &mut dyn FnMut(usize, &[f32]) -> bool,
+        aux: Option<&(dyn Fn() + Sync)>,
+    ) -> CollectStatus {
+        let Some(sess) = self.session.as_mut() else {
+            return CollectStatus::Exhausted;
+        };
+        if sess.accepted >= sess.expect {
+            return CollectStatus::Quorum;
+        }
+        if sess.disconnected {
+            return CollectStatus::Exhausted;
+        }
+        let remaining = match sess.deadline {
+            // wall-clock: time left until the physical deadline.
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => STEP,
+        };
+        if remaining.is_zero() {
+            return CollectStatus::Exhausted;
+        }
+        let wait = if let Some(aux) = aux {
+            aux();
+            remaining.min(STEP)
+        } else {
+            remaining
+        };
+        match self.from_workers.recv_timeout(wait) {
+            Ok(msg) if msg.round == sess.round => {
+                if on_gradient(msg.worker, &msg.gradient) {
+                    sess.accepted += 1;
+                }
+                if sess.accepted >= sess.expect {
+                    CollectStatus::Quorum
+                } else {
+                    CollectStatus::Pending
+                }
+            }
+            Ok(_stale) => CollectStatus::Pending,
+            Err(mpsc::RecvTimeoutError::Timeout) => CollectStatus::Pending,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                sess.disconnected = true;
+                CollectStatus::Exhausted
+            }
+        }
+    }
+
+    pub(super) fn collect_extend(&mut self) {
+        if let Some(sess) = self.session.as_mut() {
+            sess.expect = usize::MAX;
+        }
+    }
+
+    pub(super) fn collect_accepted(&self) -> usize {
+        self.session.as_ref().map_or(0, |s| s.accepted)
+    }
+
+    pub(super) fn collect_finish(&mut self) {
+        self.session = None;
+    }
+
+    /// Idempotent: Shutdown frame + socket teardown to every live
+    /// connection, stop the accept/reader threads, unlink a UDS path.
+    pub(super) fn shutdown(&self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut st = lock(&self.shared.state);
+        let bye = encode(&Frame {
+            kind: PayloadKind::Shutdown,
+            round: 0,
+            worker: u32::MAX,
+            payload: Vec::new(),
+        });
+        for conn in st.conns.iter_mut().flatten() {
+            let _ = conn.write_all(&bye);
+            let _ = conn.flush();
+            conn.shutdown_both();
+        }
+        for slot in st.conns.iter_mut() {
+            *slot = None;
+        }
+        st.pending = None;
+        if let Some(path) = &self.shared.cleanup {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    pub(super) fn num_workers(&self) -> usize {
+        self.shared.n
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker half.
+// ---------------------------------------------------------------------
+
+/// Socket worker slot: in self-hosted mode `serve` spawns an in-process
+/// client thread; in external mode the slot is inert (the worker is
+/// another process).
+pub(super) struct WorkerSlot {
+    id: usize,
+    addr: String,
+    faults: FaultModel,
+    chunk: usize,
+    external: bool,
+}
+
+impl WorkerSlot {
+    pub(super) fn id(&self) -> usize {
+        self.id
+    }
+
+    pub(super) fn serve(self, body: Box<dyn WorkerBody>) {
+        if self.external {
+            drop(body);
+            return;
+        }
+        spawn_client(self.addr, self.id, self.faults, self.chunk, body);
+    }
+}
+
+/// Spawn an in-process client thread: connect, handshake, serve rounds
+/// with `body` until Shutdown/EOF. A body panic kills only this thread
+/// — the connection closes, the server sees a crashed worker (§6.4).
+fn spawn_client(addr: String, worker: usize, faults: FaultModel, chunk: usize, mut body: Box<dyn WorkerBody>) {
+    std::thread::Builder::new()
+        .name(format!("socket-worker-{worker}"))
+        .spawn(move || {
+            let Ok(client) = connect(&addr, worker, chunk) else {
+                return;
+            };
+            let _ = client.run(&mut *body, faults);
+        })
+        .expect("spawning socket worker thread");
+}
+
+/// A connected, registered worker-side client (Hello handshake done).
+/// Drive it with [`run`](Self::run) (any [`WorkerBody`], fault-model
+/// aware — the in-process mode) or
+/// [`run_streaming`](Self::run_streaming) (a
+/// [`GradWorker`](crate::worker::GradWorker), chunk-cursor streaming —
+/// the `multibulyan worker` CLI mode).
+pub struct WorkerClient {
+    stream: Stream,
+    worker: u32,
+    chunk: usize,
+}
+
+/// Connect to a server and register as `worker` (§6.5): sends Hello,
+/// waits for the server's Hello ack. `chunk` is the GradientChunk size
+/// used for outgoing gradients.
+pub fn connect(addr: &str, worker: usize, chunk: usize) -> anyhow::Result<WorkerClient> {
+    let mut stream = connect_stream(addr)?;
+    write_frame(
+        &mut stream,
+        &Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker: worker as u32,
+            payload: Vec::new(),
+        },
+    )
+    .map_err(|e| anyhow::anyhow!("worker {worker}: sending Hello to {addr}: {e}"))?;
+    match read_frame(&mut stream, None) {
+        Ok(f) if f.kind == PayloadKind::Hello => Ok(WorkerClient {
+            stream,
+            worker: worker as u32,
+            chunk: chunk.max(1),
+        }),
+        Ok(f) if f.kind == PayloadKind::Reject => anyhow::bail!(
+            "server rejected worker {worker}: {}",
+            reject_reason_str(f.payload.first().copied().unwrap_or(0))
+        ),
+        Ok(f) => anyhow::bail!("worker {worker}: unexpected handshake frame {:?}", f.kind),
+        Err(e) => anyhow::bail!("worker {worker}: handshake with {addr} failed: {e:?}"),
+    }
+}
+
+impl WorkerClient {
+    /// Serve rounds with `body` until the server shuts down or the
+    /// connection closes. Applies the same per-worker fault RNG stream
+    /// and pre-compute cost sleep as the threaded backend — byte-order
+    /// parity is what keeps seeded runs transport-independent.
+    pub fn run(mut self, body: &mut dyn WorkerBody, faults: FaultModel) -> anyhow::Result<()> {
+        let worker = self.worker as usize;
+        let mut rng = faults.rng_for(worker);
+        let cost_us = faults.cost.cost_us_for(worker);
+        let mut scratch = Vec::new();
+        loop {
+            let frame = match read_frame(&mut self.stream, None) {
+                Ok(f) => f,
+                Err(FrameError::Closed) => return Ok(()),
+                Err(e) => anyhow::bail!("worker {worker}: connection lost: {e:?}"),
+            };
+            match frame.kind {
+                PayloadKind::RoundResult => {
+                    let params = parse_params(&frame.payload)?;
+                    if cost_us > 0 {
+                        std::thread::sleep(Duration::from_micros(cost_us));
+                    }
+                    let mut emit = Emitter {
+                        worker,
+                        faults,
+                        rng: &mut rng,
+                        sink: EmitterSink::Frame {
+                            stream: &mut self.stream,
+                            worker: self.worker,
+                            chunk: self.chunk,
+                            scratch: &mut scratch,
+                        },
+                    };
+                    body.on_round(frame.round, &params, &mut emit);
+                }
+                PayloadKind::Shutdown => return Ok(()),
+                // Duplicate acks and server-side rejects of earlier
+                // frames are informational; anything else addressed to
+                // a client is ignored (§5.3).
+                _ => {}
+            }
+        }
+    }
+
+    /// Serve rounds with a [`GradWorker`](crate::worker::GradWorker),
+    /// streaming each gradient chunk as soon as its coordinates are
+    /// computed (`GradWorker::stream_round` — a chunk-sized scratch
+    /// instead of a full d-length buffer per send). No fault model:
+    /// this is the real-process path of the `multibulyan worker` CLI.
+    pub fn run_streaming(mut self, mut worker: crate::worker::GradWorker) -> anyhow::Result<()> {
+        let id = self.worker;
+        let chunk = self.chunk;
+        let mut scratch = Vec::new();
+        loop {
+            let frame = match read_frame(&mut self.stream, None) {
+                Ok(f) => f,
+                Err(FrameError::Closed) => return Ok(()),
+                Err(e) => anyhow::bail!("worker {id}: connection lost: {e:?}"),
+            };
+            match frame.kind {
+                PayloadKind::RoundResult => {
+                    let params = parse_params(&frame.payload)?;
+                    let round = frame.round;
+                    let stream = &mut self.stream;
+                    // A failed gradient computation leaves the worker
+                    // silent for the round (same policy as on_round); a
+                    // partial chunk trail is discarded by the server's
+                    // assembly reset on the next round (§4.3).
+                    let _ = worker.stream_round(round, &params, chunk, &mut |offset, values, total| {
+                        write_chunk_frame(
+                            stream,
+                            id,
+                            round,
+                            offset as u32,
+                            total as u32,
+                            values,
+                            &mut scratch,
+                        )
+                        .is_ok()
+                    });
+                }
+                PayloadKind::Shutdown => return Ok(()),
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Build the socket star: bind per `opts`, start the accept thread,
+/// hand out `n` worker slots (self-hosted client threads or inert
+/// external placeholders — see [`SocketOptions::external`]).
+pub(super) fn star(
+    n: usize,
+    faults: FaultModel,
+    opts: &SocketOptions,
+) -> anyhow::Result<(Server, Vec<WorkerSlot>)> {
+    let spec = match &opts.listen {
+        Some(a) => parse_addr(a)?,
+        None => AddrSpec::Tcp("127.0.0.1:0".to_string()),
+    };
+    let (listener, cleanup) = Listener::bind(&spec)?;
+    let addr = listener.display_addr()?;
+    let (tx, rx) = mpsc::channel::<FromWorker>();
+    let shared = Arc::new(Shared {
+        n,
+        state: Mutex::new(ServerState {
+            conns: (0..n).map(|_| None).collect(),
+            pending: None,
+        }),
+        tx,
+        stop: AtomicBool::new(false),
+        cleanup,
+    });
+    {
+        let shared = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("socket-accept".to_string())
+            .spawn(move || accept_loop(listener, shared))
+            .expect("spawning socket accept thread");
+    }
+    let chunk = opts.chunk.max(1);
+    let workers = (0..n)
+        .map(|id| WorkerSlot {
+            id,
+            addr: addr.clone(),
+            faults,
+            chunk,
+            external: opts.external,
+        })
+        .collect();
+    Ok((
+        Server {
+            shared,
+            from_workers: rx,
+            addr,
+            session: None,
+        },
+        workers,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn roundtrip(frame: &Frame) {
+        let bytes = encode(frame);
+        let got = read_frame(&mut &bytes[..], None).expect("decode");
+        assert_eq!(&got, frame);
+    }
+
+    #[test]
+    fn codec_roundtrips_empty_payload() {
+        roundtrip(&Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker: 7,
+            payload: Vec::new(),
+        });
+    }
+
+    #[test]
+    fn codec_roundtrips_all_kinds_and_sizes() {
+        for (kind, len) in [
+            (PayloadKind::Hello, 0usize),
+            (PayloadKind::RoundResult, 4),
+            (PayloadKind::GradientChunk, 8 + 4 * DEFAULT_CHUNK),
+            (PayloadKind::Reject, 1),
+            (PayloadKind::Shutdown, 0),
+        ] {
+            roundtrip(&Frame {
+                kind,
+                round: u64::MAX,
+                worker: u32::MAX,
+                payload: (0..len).map(|i| i as u8).collect(),
+            });
+        }
+    }
+
+    #[test]
+    fn codec_encode_decode_is_bit_identity_proptested() {
+        // The invariant-catalog property: encode → decode returns the
+        // exact frame for arbitrary header fields and payload bytes.
+        proptest::check("frame-codec-bit-identity", proptest::default_cases(), |rng, _| {
+            let kinds = [
+                PayloadKind::Hello,
+                PayloadKind::RoundResult,
+                PayloadKind::GradientChunk,
+                PayloadKind::Reject,
+                PayloadKind::Shutdown,
+            ];
+            let frame = Frame {
+                kind: kinds[rng.gen_range_usize(kinds.len())],
+                round: rng.next_u64(),
+                worker: rng.next_u64() as u32,
+                payload: (0..rng.gen_range_usize(256)).map(|_| rng.next_u64() as u8).collect(),
+            };
+            let bytes = encode(&frame);
+            let got = read_frame(&mut &bytes[..], None)
+                .map_err(|e| format!("decode failed: {e:?}"))?;
+            if got != frame {
+                return Err(format!("decode mismatch: {got:?} != {frame:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn short_reads_are_closed_or_truncated() {
+        assert_eq!(read_frame(&mut &[][..], None), Err(FrameError::Closed));
+        let bytes = encode(&Frame {
+            kind: PayloadKind::Hello,
+            round: 1,
+            worker: 2,
+            payload: vec![9, 9],
+        });
+        // Short header.
+        assert_eq!(
+            read_frame(&mut &bytes[..10], None),
+            Err(FrameError::Truncated)
+        );
+        // Short payload.
+        assert_eq!(
+            read_frame(&mut &bytes[..bytes.len() - 1], None),
+            Err(FrameError::Truncated)
+        );
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let mut bytes = encode(&Frame {
+            kind: PayloadKind::GradientChunk,
+            round: 3,
+            worker: 1,
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        });
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        assert!(matches!(
+            read_frame(&mut &bytes[..], None),
+            Err(FrameError::Checksum { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_fatal() {
+        let good = encode(&Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker: 0,
+            payload: Vec::new(),
+        });
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert_eq!(read_frame(&mut &bad_magic[..], None), Err(FrameError::BadMagic));
+        let mut bad_version = good;
+        bad_version[4] = 0xFF;
+        bad_version[5] = 0xFF;
+        assert_eq!(
+            read_frame(&mut &bad_version[..], None),
+            Err(FrameError::BadVersion(0xFFFF))
+        );
+    }
+
+    #[test]
+    fn unknown_kind_skips_payload_and_stays_in_sync() {
+        // An unknown-kind frame is consumed whole, so the next frame on
+        // the stream still parses (§5.3 forward compatibility).
+        let mut bytes = vec![0u8; HEADER_LEN];
+        let payload = [7u8; 16];
+        write_header(
+            &mut bytes,
+            PayloadKind::Hello,
+            5,
+            1,
+            payload.len() as u32,
+            fnv1a(payload.iter().copied()),
+        );
+        bytes[6] = 99; // unknown kind byte
+        bytes.extend_from_slice(&payload);
+        let follow = Frame {
+            kind: PayloadKind::Shutdown,
+            round: 8,
+            worker: 2,
+            payload: Vec::new(),
+        };
+        bytes.extend_from_slice(&encode(&follow));
+        let mut r = &bytes[..];
+        assert_eq!(read_frame(&mut r, None), Err(FrameError::BadKind(99)));
+        assert_eq!(read_frame(&mut r, None), Ok(follow));
+    }
+
+    #[test]
+    fn oversize_length_is_rejected_before_payload_read() {
+        let mut bytes = vec![0u8; HEADER_LEN];
+        write_header(&mut bytes, PayloadKind::GradientChunk, 0, 0, MAX_PAYLOAD + 1, 0);
+        assert_eq!(
+            read_frame(&mut &bytes[..], None),
+            Err(FrameError::Oversize(MAX_PAYLOAD + 1))
+        );
+    }
+
+    fn chunk_payload(offset: u32, total: u32, values: &[f32]) -> Vec<u8> {
+        let mut p = Vec::new();
+        p.extend_from_slice(&offset.to_le_bytes());
+        p.extend_from_slice(&total.to_le_bytes());
+        for v in values {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        p
+    }
+
+    #[test]
+    fn chunk_assembly_reassembles_in_order() {
+        let mut asm = ChunkAssembly::default();
+        assert!(matches!(
+            asm.feed(4, &chunk_payload(0, 3, &[1.0, 2.0])),
+            Feed::Partial
+        ));
+        match asm.feed(4, &chunk_payload(2, 3, &[3.0])) {
+            Feed::Complete(g) => assert_eq!(g, vec![1.0, 2.0, 3.0]),
+            _ => panic!("expected completion"),
+        }
+    }
+
+    #[test]
+    fn chunk_assembly_rejects_out_of_order_and_overflow() {
+        let mut asm = ChunkAssembly::default();
+        // New gradient not starting at 0.
+        assert!(matches!(asm.feed(1, &chunk_payload(4, 8, &[0.0])), Feed::Malformed));
+        // Gap in offsets.
+        assert!(matches!(asm.feed(2, &chunk_payload(0, 4, &[0.0])), Feed::Partial));
+        assert!(matches!(asm.feed(2, &chunk_payload(2, 4, &[0.0])), Feed::Malformed));
+        // More values than `total`.
+        assert!(matches!(
+            asm.feed(3, &chunk_payload(0, 1, &[0.0, 0.0])),
+            Feed::Malformed
+        ));
+        // Non-f32-aligned payload.
+        assert!(matches!(asm.feed(4, &[0, 0, 0]), Feed::Malformed));
+    }
+
+    #[test]
+    fn chunk_assembly_round_change_resets() {
+        let mut asm = ChunkAssembly::default();
+        assert!(matches!(asm.feed(1, &chunk_payload(0, 4, &[1.0])), Feed::Partial));
+        // New round abandons the partial gradient (§6.3).
+        match asm.feed(2, &chunk_payload(0, 1, &[9.0])) {
+            Feed::Complete(g) => assert_eq!(g, vec![9.0]),
+            _ => panic!("expected completion"),
+        }
+    }
+
+    #[test]
+    fn params_payload_roundtrips_bit_exactly() {
+        let params = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -1e30, f32::INFINITY];
+        let back = parse_params(&params_payload(&params)).unwrap();
+        for (a, b) in params.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(parse_params(&[0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn addr_parse_accepts_tcp_unix_and_bare_forms() {
+        assert!(matches!(parse_addr("tcp:127.0.0.1:0"), Ok(AddrSpec::Tcp(a)) if a == "127.0.0.1:0"));
+        assert!(matches!(parse_addr("127.0.0.1:9"), Ok(AddrSpec::Tcp(_))));
+        #[cfg(unix)]
+        assert!(matches!(parse_addr("unix:/tmp/mb.sock"), Ok(AddrSpec::Unix(_))));
+        assert!(parse_addr("no-port-here").is_err());
+    }
+}

@@ -54,10 +54,18 @@ mod tests {
 
     #[test]
     fn fnv1a_matches_reference_vectors() {
-        // Published FNV-1a 64-bit test vectors.
+        // Published FNV-1a 64-bit test vectors (Noll's test suite) — the
+        // digest now guards wire-frame integrity (docs/wire-protocol.md
+        // §2), not just determinism diffing, so it must match the
+        // published function exactly, not merely be self-consistent.
         assert_eq!(fnv1a([]), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a(*b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(*b"b"), 0xaf63_df4c_8601_f1a5);
+        assert_eq!(fnv1a(*b"c"), 0xaf63_de4c_8601_eff2);
+        assert_eq!(fnv1a(*b"ab"), 0x089c_4407_b545_986a);
+        assert_eq!(fnv1a(*b"abc"), 0xe71f_a219_0541_574b);
         assert_eq!(fnv1a(*b"foobar"), 0x85944171f73967e8);
+        assert_eq!(fnv1a(*b"chongo was here!\n"), 0x4681_0940_eff5_f915);
         // Sensitive to every bit of an f32 stream.
         let digest = |v: f32| fnv1a(v.to_le_bytes());
         assert_ne!(digest(0.0), digest(-0.0));

@@ -287,12 +287,86 @@ pub struct GradWorker {
 }
 
 impl GradWorker {
+    /// Wrap `source` as a transport-installable body with a reusable
+    /// gradient buffer.
     pub fn new(source: GradSource) -> Self {
         Self {
             source,
             buf: Vec::new(),
             step: StepBody::default(),
         }
+    }
+
+    /// Stream round `round`'s gradient in `chunk`-coordinate pieces
+    /// through `piece(offset, values, total)`, called strictly in offset
+    /// order with `total = d`; an empty gradient still emits one
+    /// `(0, [], 0)` piece. Returns early (without error) when `piece`
+    /// returns `false` — the caller's send path is broken and the round
+    /// is abandoned.
+    ///
+    /// On a quadratic source this reuses the `StepBody` chunking
+    /// recipe: each range is computed with the counter-seeded
+    /// `stochastic_gradient_range` into a chunk-sized scratch, so no
+    /// full d-length buffer is ever materialized and the concatenation
+    /// of pieces is bit-identical to the one-shot
+    /// [`GradSource::gradient_into`] path. Artifact/LM sources execute
+    /// atomically (PJRT), so they compute once and stream the result.
+    pub fn stream_round(
+        &mut self,
+        round: u64,
+        params: &[f32],
+        chunk: usize,
+        piece: &mut dyn FnMut(usize, &[f32], usize) -> bool,
+    ) -> Result<()> {
+        let chunk = chunk.max(1);
+        if let GradSource::Quadratic {
+            problem,
+            worker_id,
+            batch_size,
+            ..
+        } = &self.source
+        {
+            let d = problem.dim();
+            if d == 0 {
+                piece(0, &[], 0);
+                return Ok(());
+            }
+            let seed = quadratic_round_seed(round, *worker_id);
+            self.buf.clear();
+            self.buf.resize(chunk.min(d), 0.0);
+            let mut done = 0usize;
+            while done < d {
+                let len = chunk.min(d - done);
+                problem.stochastic_gradient_range(
+                    params,
+                    *batch_size,
+                    seed,
+                    done,
+                    &mut self.buf[..len],
+                );
+                if !piece(done, &self.buf[..len], d) {
+                    return Ok(());
+                }
+                done += len;
+            }
+            return Ok(());
+        }
+        // Atomic sources: one full computation, then chunk-wise sends.
+        self.source.gradient_into(params, round, &mut self.buf)?;
+        let d = self.buf.len();
+        if d == 0 {
+            piece(0, &[], 0);
+            return Ok(());
+        }
+        let mut done = 0usize;
+        while done < d {
+            let len = chunk.min(d - done);
+            if !piece(done, &self.buf[done..done + len], d) {
+                return Ok(());
+            }
+            done += len;
+        }
+        Ok(())
     }
 }
 
@@ -378,7 +452,7 @@ pub fn serve_workers(pairs: Vec<(WorkerEndpoint, GradSource)>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::transport::{star, star_pooled, FaultModel, TransportKind};
+    use crate::transport::{star, star_pooled, star_socket, FaultModel, SocketOptions, TransportKind};
     use std::time::Duration;
 
     #[test]
@@ -426,6 +500,10 @@ mod tests {
             let (mut server, workers) = match kind {
                 TransportKind::Threaded => star(3, FaultModel::default()),
                 TransportKind::Pooled => star_pooled(3, FaultModel::default(), &par),
+                TransportKind::Socket => {
+                    star_socket(3, FaultModel::default(), &SocketOptions::default())
+                        .expect("loopback bind")
+                }
             };
             let pairs = workers
                 .into_iter()
@@ -439,6 +517,44 @@ mod tests {
             got.sort_by_key(|m| m.worker);
             got.into_iter().map(|m| m.gradient).collect()
         };
-        assert_eq!(run(TransportKind::Threaded), run(TransportKind::Pooled));
+        let reference = run(TransportKind::Threaded);
+        assert_eq!(reference, run(TransportKind::Pooled));
+        assert_eq!(reference, run(TransportKind::Socket));
+    }
+
+    #[test]
+    fn stream_round_is_bit_identical_to_one_shot_for_every_chunk_size() {
+        // The socket worker's chunk-wise send path must reproduce the
+        // one-shot gradient exactly (wire spec §4.3's in-order contract
+        // plus the counter-seeded range recipe).
+        let problem = Arc::new(QuadraticProblem::new(37, 0.3, 5));
+        let p = vec![0.2f32; 37];
+        let one_shot = {
+            let mut src = GradSource::quadratic(Arc::clone(&problem), 2, 6);
+            src.gradient(&p, 9).unwrap().0
+        };
+        for chunk in [1usize, 5, 16, 37, 64] {
+            let mut w = GradWorker::new(GradSource::quadratic(Arc::clone(&problem), 2, 6));
+            let mut streamed = vec![0.0f32; 37];
+            let mut offsets = Vec::new();
+            w.stream_round(9, &p, chunk, &mut |offset, values, total| {
+                assert_eq!(total, 37);
+                offsets.push(offset);
+                streamed[offset..offset + values.len()].copy_from_slice(values);
+                true
+            })
+            .unwrap();
+            assert_eq!(streamed, one_shot, "chunk {chunk}");
+            assert!(offsets.windows(2).all(|w| w[0] < w[1]), "in offset order");
+        }
+        // A false return abandons the round without error.
+        let mut w = GradWorker::new(GradSource::quadratic(Arc::clone(&problem), 2, 6));
+        let mut calls = 0usize;
+        w.stream_round(9, &p, 8, &mut |_o, _v, _t| {
+            calls += 1;
+            false
+        })
+        .unwrap();
+        assert_eq!(calls, 1);
     }
 }

@@ -1,0 +1,513 @@
+//! Shared transport conformance suite — every `ServerEndpoint` backend
+//! (`threaded`, `pooled`, `socket`) must satisfy the same collection
+//! contract, and the socket backend must additionally honor the wire
+//! protocol spec in `docs/wire-protocol.md`. Each test names the spec
+//! section it enforces (§N references are to that document).
+//!
+//! The socket-specific tests drive raw frames from the test thread
+//! against a server in `external` mode (no in-process clients), so the
+//! exact byte sequences of the spec are what crosses the wire.
+
+use multibulyan::runtime::Parallelism;
+use multibulyan::transport::socket::{
+    self, encode, read_frame, write_chunk_frame, write_frame, Frame, FrameError, PayloadKind,
+    HEADER_LEN, REJECT_CHECKSUM, REJECT_DUPLICATE, REJECT_MALFORMED, REJECT_VERSION, VERSION,
+};
+use multibulyan::transport::{
+    build, star_socket, ComputeCost, Emitter, FaultModel, ServerEndpoint, SocketOptions,
+    TransportKind, WorkerBody,
+};
+use multibulyan::util;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A conformance body: a plain function pointer over (id, round, params,
+/// emitter) — trivially `Send`, no closure-inference pitfalls.
+struct Body {
+    id: usize,
+    f: fn(usize, u64, &[f32], &mut Emitter<'_>),
+}
+
+impl WorkerBody for Body {
+    fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
+        (self.f)(self.id, round, params, emit)
+    }
+}
+
+/// Build a star on `kind` and install `f` as every worker's body.
+fn harness(
+    kind: TransportKind,
+    n: usize,
+    faults: FaultModel,
+    f: fn(usize, u64, &[f32], &mut Emitter<'_>),
+) -> ServerEndpoint {
+    let (server, workers) = build(kind, n, faults, &Parallelism::new(2));
+    for w in workers {
+        let id = w.id();
+        w.serve(Body { id, f });
+    }
+    server
+}
+
+/// Run the same scenario on all three backends.
+fn on_all(test: fn(TransportKind)) {
+    for kind in TransportKind::ALL {
+        test(kind);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backend-parameterized contract (threaded, pooled, socket).
+// ---------------------------------------------------------------------
+
+#[test]
+fn round_trip_delivers_every_worker_on_all_backends() {
+    // §6.1 (round lifecycle): broadcast round r, collect n gradients
+    // tagged (worker, r), each byte-exact.
+    on_all(|kind| {
+        let mut server = harness(kind, 4, FaultModel::default(), |id, round, params, emit| {
+            let g: Vec<f32> = params.iter().map(|p| p * 2.0 + id as f32).collect();
+            emit.send(round, &g);
+        });
+        server.broadcast(1, Arc::new(vec![0.5, -1.5]));
+        let got = server.collect(1, 4, Duration::from_secs(5));
+        assert_eq!(got.len(), 4, "{kind}");
+        let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3], "{kind}");
+        for m in &got {
+            assert_eq!(
+                m.gradient,
+                vec![1.0 + m.worker as f32, -3.0 + m.worker as f32],
+                "{kind}"
+            );
+        }
+        server.shutdown();
+    });
+}
+
+#[test]
+fn stale_round_gradients_are_discarded_on_all_backends() {
+    // §6.3 (stale-round discard): a gradient tagged with an old round id
+    // must never be delivered for the current round, regardless of
+    // arrival order relative to the current-round gradient.
+    on_all(|kind| {
+        let mut server = harness(kind, 1, FaultModel::default(), |_id, _round, _p, emit| {
+            emit.send(3, &[9.0]); // stale (current round is 4)
+            emit.send(4, &[1.0]);
+            emit.send(2, &[8.0]); // stale, after the current round
+        });
+        server.broadcast(4, Arc::new(vec![0.0]));
+        let got = server.collect(4, 1, Duration::from_secs(5));
+        assert_eq!(got.len(), 1, "{kind}");
+        assert_eq!(got[0].round, 4, "{kind}");
+        assert_eq!(got[0].gradient, vec![1.0], "{kind}");
+        server.shutdown();
+    });
+}
+
+#[test]
+fn timeout_bounds_first_m_collection_on_all_backends() {
+    // §6.2 (deadlines and first-m): a first-m collect proceeds at the
+    // fastest m workers, and a wait-all collect with a deadline between
+    // the fast tier's cost and the stragglers' leaves exactly the
+    // stragglers behind.
+    on_all(|kind| {
+        let faults = FaultModel {
+            cost: ComputeCost {
+                base_us: 1_000,
+                slow_workers: 2,
+                slow_factor: 50.0,
+            },
+            ..Default::default()
+        };
+        let mut server = harness(kind, 6, faults, |id, round, _p, emit| {
+            emit.send(round, &[id as f32]);
+        });
+        // First-m: the 4 fast workers fill the quorum.
+        server.broadcast(1, Arc::new(vec![0.0]));
+        let got = server.collect(1, 4, Duration::from_secs(5));
+        let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 3, 4, 5], "{kind}: first-m quorum");
+        // Wait-all with a 10 ms deadline: stragglers (50 ms) miss it.
+        server.broadcast(2, Arc::new(vec![0.0]));
+        let got = server.collect(2, 6, Duration::from_millis(10));
+        let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 3, 4, 5], "{kind}: deadline leaves stragglers");
+        server.shutdown();
+    });
+}
+
+#[test]
+fn worker_crash_is_isolated_on_all_backends() {
+    // §6.4 (crash isolation): one worker dying (body panic; on the
+    // socket backend the client thread dies and its connection drops)
+    // must not poison the server or the surviving workers — later rounds
+    // still collect everyone else.
+    on_all(|kind| {
+        let mut server = harness(kind, 3, FaultModel::default(), |id, round, _p, emit| {
+            if id == 1 {
+                panic!("worker 1 crashed");
+            }
+            emit.send(round, &[id as f32]);
+        });
+        for round in 1..=2u64 {
+            server.broadcast(round, Arc::new(vec![0.0]));
+            let got = server.collect(round, 3, Duration::from_millis(300));
+            let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![0, 2], "{kind} round {round}");
+        }
+        server.shutdown();
+    });
+}
+
+#[test]
+fn rejected_gradients_do_not_occupy_quorum_slots_on_all_backends() {
+    // §6.2 (quorum accounting) + §5.1 (rejects don't count): a gradient
+    // the accept callback refuses must not fill one of the m quorum
+    // slots — collection keeps going until m *accepted* gradients.
+    on_all(|kind| {
+        let mut server = harness(kind, 4, FaultModel::default(), |id, round, _p, emit| {
+            emit.send(round, &[id as f32]);
+        });
+        server.broadcast(1, Arc::new(vec![0.0]));
+        let mut accepted = Vec::new();
+        let got = server.collect_with(1, 3, Duration::from_secs(5), |worker, gradient| {
+            if gradient[0] == 0.0 {
+                return false; // reject worker 0's gradient
+            }
+            accepted.push(worker);
+            true
+        });
+        assert_eq!(got, 3, "{kind}: three accepted despite the reject");
+        accepted.sort_unstable();
+        assert_eq!(accepted, vec![1, 2, 3], "{kind}");
+        server.shutdown();
+    });
+}
+
+// ---------------------------------------------------------------------
+// Socket-specific: raw frames against an external-mode server.
+// ---------------------------------------------------------------------
+
+/// Bind an external-mode loopback server for `n` workers (no in-process
+/// clients — the test owns every byte on the wire).
+fn external_server(n: usize, chunk: usize) -> ServerEndpoint {
+    let opts = SocketOptions {
+        listen: None,
+        chunk,
+        external: true,
+    };
+    let (server, _slots) = star_socket(n, FaultModel::default(), &opts).expect("loopback bind");
+    server
+}
+
+/// Raw client handshake (§6.5): connect, send Hello, read the ack.
+fn raw_register(addr: &str, worker: u32) -> socket::Stream {
+    let mut conn = socket::connect_stream(addr).expect("connect");
+    write_frame(
+        &mut conn,
+        &Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker,
+            payload: Vec::new(),
+        },
+    )
+    .expect("hello");
+    let ack = read_frame(&mut conn, None).expect("hello ack");
+    assert_eq!(ack.kind, PayloadKind::Hello);
+    assert_eq!(ack.worker, worker);
+    conn
+}
+
+#[test]
+fn corrupted_checksum_is_rejected_and_the_connection_survives() {
+    // §5.1 (checksum failure): a frame whose payload checksum does not
+    // match draws a Reject(CHECKSUM), never reaches the collect session
+    // (no quorum slot), and the connection stays usable.
+    let mut server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().expect("socket backend").to_string();
+    let mut conn = raw_register(&addr, 0);
+
+    server.broadcast(1, Arc::new(vec![0.5f32; 3]));
+    let rr = read_frame(&mut conn, None).expect("round result");
+    assert_eq!(rr.kind, PayloadKind::RoundResult);
+    assert_eq!(rr.round, 1);
+    assert_eq!(socket::parse_params(&rr.payload).unwrap(), vec![0.5f32; 3]);
+
+    // A well-formed gradient frame with one payload byte flipped after
+    // the checksum was computed.
+    let mut scratch = Vec::new();
+    let mut probe = Vec::new();
+    write_chunk_frame(&mut probe, 0, 1, 0, 3, &[7.0, 7.0, 7.0], &mut scratch).unwrap();
+    probe[HEADER_LEN + 8] ^= 0xFF; // corrupt a gradient byte
+    use std::io::Write;
+    conn.write_all(&probe).unwrap();
+
+    let reject = read_frame(&mut conn, None).expect("reject frame");
+    assert_eq!(reject.kind, PayloadKind::Reject);
+    assert_eq!(reject.payload, vec![REJECT_CHECKSUM]);
+
+    // Same connection, now a valid gradient: it must be the one and only
+    // delivery — the corrupted frame occupied no slot.
+    write_chunk_frame(&mut conn, 0, 1, 0, 3, &[1.0, 2.0, 3.0], &mut scratch).unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].worker, 0);
+    assert_eq!(got[0].gradient, vec![1.0, 2.0, 3.0]);
+    server.shutdown();
+}
+
+#[test]
+fn version_mismatch_draws_reject_version_and_a_close() {
+    // §5.2 (version negotiation): a Hello with an unknown protocol
+    // version is answered with Reject(VERSION) and the connection is
+    // closed — no silent downgrade.
+    let server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut conn = socket::connect_stream(&addr).expect("connect");
+    let mut hello = encode(&Frame {
+        kind: PayloadKind::Hello,
+        round: 0,
+        worker: 0,
+        payload: Vec::new(),
+    });
+    hello[4..6].copy_from_slice(&(VERSION + 1).to_le_bytes());
+    use std::io::Write;
+    conn.write_all(&hello).unwrap();
+
+    let reject = read_frame(&mut conn, None).expect("reject frame");
+    assert_eq!(reject.kind, PayloadKind::Reject);
+    assert_eq!(reject.payload, vec![REJECT_VERSION]);
+    assert_eq!(reject.worker, u32::MAX, "no worker registered yet");
+    assert!(
+        matches!(read_frame(&mut conn, None), Err(FrameError::Closed)),
+        "connection must be closed after a version reject"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn malformed_and_short_frames_never_occupy_a_quorum_slot() {
+    // §5.3 (fatal framing errors) + §6.2 (quorum accounting): a
+    // bad-magic connection and a mid-header hangup are both dropped
+    // without registering anything; a healthy worker on a fresh
+    // connection still fills the quorum alone.
+    let mut server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    use std::io::Write;
+
+    // Bad magic: a full-length garbage header.
+    let mut bad = socket::connect_stream(&addr).expect("connect");
+    bad.write_all(&[0xAAu8; HEADER_LEN]).unwrap();
+    // Short frame: a truncated header, then hangup (drop closes it).
+    let mut short = socket::connect_stream(&addr).expect("connect");
+    short.write_all(&[0x4D, 0x42, 0x57, 0x50, 0x01]).unwrap();
+    drop(short);
+
+    // The healthy client registers and delivers; expect = 1 must be
+    // filled by it, proving neither bad stream consumed the slot.
+    let mut conn = raw_register(&addr, 0);
+    server.broadcast(1, Arc::new(vec![0.0f32]));
+    let rr = read_frame(&mut conn, None).expect("round result");
+    assert_eq!(rr.round, 1);
+    let mut scratch = Vec::new();
+    write_chunk_frame(&mut conn, 0, 1, 0, 1, &[5.0], &mut scratch).unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].gradient, vec![5.0]);
+    server.shutdown();
+}
+
+#[test]
+fn duplicate_worker_registration_first_connection_wins() {
+    // §6.5 (registration state machine): a second Hello claiming an
+    // occupied worker id draws Reject(DUPLICATE) and a close; the first
+    // connection keeps the slot and keeps working.
+    let mut server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut first = raw_register(&addr, 0);
+
+    let mut imposter = socket::connect_stream(&addr).expect("connect");
+    write_frame(
+        &mut imposter,
+        &Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker: 0,
+            payload: Vec::new(),
+        },
+    )
+    .unwrap();
+    let reject = read_frame(&mut imposter, None).expect("reject frame");
+    assert_eq!(reject.kind, PayloadKind::Reject);
+    assert_eq!(reject.payload, vec![REJECT_DUPLICATE]);
+    assert!(matches!(
+        read_frame(&mut imposter, None),
+        Err(FrameError::Closed)
+    ));
+
+    server.broadcast(1, Arc::new(vec![0.25f32]));
+    let rr = read_frame(&mut first, None).expect("round result");
+    assert_eq!(rr.round, 1);
+    let mut scratch = Vec::new();
+    write_chunk_frame(&mut first, 0, 1, 0, 1, &[4.0], &mut scratch).unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].gradient, vec![4.0]);
+    server.shutdown();
+}
+
+#[test]
+fn out_of_order_chunks_are_rejected_then_reassembly_recovers() {
+    // §4.3 (GradientChunk ordering): chunks must start at offset 0 and
+    // arrive strictly in order; a violation draws Reject(MALFORMED) and
+    // resets the assembly, after which a correct in-order gradient on
+    // the same connection is delivered whole.
+    let mut server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut conn = raw_register(&addr, 0);
+    server.broadcast(1, Arc::new(vec![0.0f32; 4]));
+    let _ = read_frame(&mut conn, None).expect("round result");
+
+    let mut scratch = Vec::new();
+    // Offset 2 with no offset-0 predecessor: out of order.
+    write_chunk_frame(&mut conn, 0, 1, 2, 4, &[9.0, 9.0], &mut scratch).unwrap();
+    let reject = read_frame(&mut conn, None).expect("reject frame");
+    assert_eq!(reject.kind, PayloadKind::Reject);
+    assert_eq!(reject.payload, vec![REJECT_MALFORMED]);
+
+    // Correct two-chunk gradient: offsets 0 then 2, totals matching.
+    write_chunk_frame(&mut conn, 0, 1, 0, 4, &[1.0, 2.0], &mut scratch).unwrap();
+    write_chunk_frame(&mut conn, 0, 1, 2, 4, &[3.0, 4.0], &mut scratch).unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].gradient, vec![1.0, 2.0, 3.0, 4.0]);
+    server.shutdown();
+}
+
+#[test]
+fn streamed_chunks_reassemble_bit_identical_to_one_shot() {
+    // §4.3 (chunk-wise streaming): GradWorker::stream_round over a small
+    // chunk size, sent frame by frame over the wire, must reassemble to
+    // the exact gradient the one-shot path computes.
+    use multibulyan::data::QuadraticProblem;
+    use multibulyan::worker::{GradSource, GradWorker};
+
+    let problem = Arc::new(QuadraticProblem::new(11, 0.2, 7));
+    let one_shot = {
+        let mut src = GradSource::quadratic(Arc::clone(&problem), 0, 4);
+        src.gradient(&vec![0.1f32; 11], 1).unwrap().0
+    };
+
+    let mut server = external_server(1, 3);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut conn = raw_register(&addr, 0);
+    server.broadcast(1, Arc::new(vec![0.1f32; 11]));
+    let rr = read_frame(&mut conn, None).expect("round result");
+    let params = socket::parse_params(&rr.payload).unwrap();
+
+    let mut w = GradWorker::new(GradSource::quadratic(Arc::clone(&problem), 0, 4));
+    let mut scratch = Vec::new();
+    let mut frames = 0usize;
+    w.stream_round(1, &params, 3, &mut |offset, values, total| {
+        frames += 1;
+        write_chunk_frame(
+            &mut conn,
+            0,
+            1,
+            offset as u32,
+            total as u32,
+            values,
+            &mut scratch,
+        )
+        .is_ok()
+    })
+    .unwrap();
+    assert_eq!(frames, 4, "11 coordinates in 3-coordinate chunks");
+
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].gradient, one_shot, "bit-identical to one-shot");
+    server.shutdown();
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_domain_socket_round_trip() {
+    // §1 (address forms): `unix:PATH` binds a Unix domain socket; the
+    // full broadcast/collect round lifecycle (§6.1) runs over it with
+    // in-process clients.
+    let path = std::env::temp_dir().join(format!("mb-conformance-{}.sock", std::process::id()));
+    let opts = SocketOptions {
+        listen: Some(format!("unix:{}", path.display())),
+        chunk: 4,
+        external: false,
+    };
+    fn body(id: usize, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
+        let g: Vec<f32> = params.iter().map(|p| p + id as f32).collect();
+        emit.send(round, &g);
+    }
+    let (mut server, workers) =
+        star_socket(2, FaultModel::default(), &opts).expect("uds bind");
+    for w in workers {
+        let id = w.id();
+        w.serve(Body { id, f: body });
+    }
+    server.broadcast(1, Arc::new(vec![1.0; 6]));
+    let got = server.collect(1, 2, Duration::from_secs(5));
+    assert_eq!(got.len(), 2);
+    for m in &got {
+        assert_eq!(m.gradient, vec![1.0 + m.worker as f32; 6]);
+    }
+    server.shutdown();
+    assert!(!path.exists(), "socket file unlinked at shutdown");
+}
+
+// ---------------------------------------------------------------------
+// Invariant catalog: frame-codec determinism (§3).
+// ---------------------------------------------------------------------
+
+#[test]
+fn frame_codec_encode_decode_is_bit_identical_property() {
+    // §3 (codec invariants): for random frames, decode(encode(f)) == f
+    // and encode(decode(bytes)) == bytes — the codec is a bijection on
+    // well-formed frames, so checksums and determinism diffs are
+    // meaningful across processes and architectures.
+    let kinds = [
+        PayloadKind::Hello,
+        PayloadKind::RoundResult,
+        PayloadKind::GradientChunk,
+        PayloadKind::Reject,
+        PayloadKind::Shutdown,
+    ];
+    util::proptest::check(
+        "frame codec bit-identity",
+        util::proptest::default_cases(),
+        |rng, _case| {
+            let kind = kinds[rng.gen_range_usize(kinds.len())];
+            let len = rng.gen_range_usize(257);
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let frame = Frame {
+                kind,
+                round: rng.next_u64(),
+                worker: rng.next_u64() as u32,
+                payload,
+            };
+            let bytes = encode(&frame);
+            let mut cursor = std::io::Cursor::new(bytes.clone());
+            let back = read_frame(&mut cursor, None).map_err(|e| format!("decode: {e:?}"))?;
+            if back != frame {
+                return Err(format!("decode(encode(f)) != f for {frame:?}"));
+            }
+            if encode(&back) != bytes {
+                return Err("encode(decode(bytes)) != bytes".to_string());
+            }
+            Ok(())
+        },
+    );
+}
