@@ -81,6 +81,8 @@ fn main() -> Result<()> {
             transport: Default::default(),
             collect: Default::default(),
             overlap: Default::default(),
+            overlap_window: 1,
+            codec: None,
             output_dir: None,
         };
         println!("\n=== {label} ({steps} steps) ===");

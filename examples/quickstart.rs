@@ -67,6 +67,8 @@ fn main() -> Result<()> {
         transport: Default::default(),
         collect: Default::default(),
         overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
         output_dir: None,
     };
     println!("\ntraining the quadratic workload with MULTI-BULYAN (n={n}, f={f}, no attack):");

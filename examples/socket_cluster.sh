@@ -27,6 +27,12 @@ fi
 N=7 F=1 BYZ=1
 DIM=200 SEED=7 BATCH=8 STEPS=40
 CHUNK=64   # GradientChunk coordinates per frame (wire-protocol.md §4.3)
+# Gradient wire codec (wire-protocol.md §7): off|raw|lossless|fp16|int8|
+# topk. Workers advertise it in their Hello and tag every chunk with it;
+# the coordinator decodes server-side. `raw` (and `lossless`) keep the
+# params_checksum bit-identical to the pooled run; the lossy codecs
+# trade bytes for gradient fidelity (see `multibulyan bench codec`).
+CODEC="${CODEC:-raw}"
 ADDR="unix:${TMPDIR:-/tmp}/multibulyan-demo-$$.sock"
 
 PIDS=()
@@ -40,13 +46,13 @@ HONEST=$((N - BYZ))
 for ((k = 0; k < HONEST; k++)); do
     "$BIN" worker --connect "$ADDR" --worker-id "$k" \
         --dim "$DIM" --seed "$SEED" --batch-size "$BATCH" \
-        --chunk "$CHUNK" --retry-ms 10000 &
+        --chunk "$CHUNK" --codec "$CODEC" --retry-ms 10000 &
     PIDS+=("$!")
 done
 
 # The workers retry until the coordinator binds, so start order is free.
 "$BIN" train --transport socket --socket-listen "$ADDR" \
-    --socket-chunk "$CHUNK" \
+    --socket-chunk "$CHUNK" --codec "$CODEC" \
     --gar multi-bulyan --attack sign-flip \
     --n "$N" --f "$F" --byzantine "$BYZ" \
     --dim "$DIM" --seed "$SEED" --batch-size "$BATCH" --steps "$STEPS" \

@@ -51,6 +51,8 @@ fn main() {
             transport: Default::default(),
             collect: Default::default(),
             overlap: Default::default(),
+            overlap_window: 1,
+            codec: None,
             output_dir: None,
         };
         let mut cluster = launch(&config, None).unwrap();

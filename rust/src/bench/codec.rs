@@ -1,0 +1,426 @@
+//! Codec sweep — what each gradient wire codec costs and buys.
+//!
+//! Two measurements per codec (`crate::codec`):
+//!
+//! * **wire cost**, measured directly on the codec: real per-worker
+//!   quadratic gradients are encoded whole (one chunk) and decoded back,
+//!   giving bytes/round, encode µs and decode µs, plus the compression
+//!   ratio against the raw 4-bytes-per-coordinate baseline;
+//! * **training effect**, measured end to end: a codec × GAR × attack
+//!   grid of seeded runs records rounds-to-target-loss, final loss and
+//!   the selection precision/recall of the resilience gauntlet — so the
+//!   lossy codecs' fidelity cost is visible next to their byte savings
+//!   (top-k error feedback recovering convergence, int8 quantization
+//!   noise, etc.).
+//!
+//! Writes `results/codec.csv` and appends a pass/fail markdown table to
+//! `$GITHUB_STEP_SUMMARY` (the bench-gate acceptance bar: int8 and topk
+//! must cut bytes/round at least 3× vs raw).
+
+use crate::attacks::AttackKind;
+use crate::codec::{decode, encoder, CodecKind};
+use crate::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use crate::coordinator::launch;
+use crate::data::QuadraticProblem;
+use crate::gar::GarKind;
+use crate::metrics::Stopwatch;
+use crate::worker::GradSource;
+use crate::Result;
+use std::sync::Arc;
+
+/// The minimum raw-vs-codec byte ratio the compressive codecs (int8,
+/// topk) must achieve — the bench-gate acceptance bar.
+pub const MIN_COMPRESSIVE_RATIO: f64 = 3.0;
+
+/// Wire cost of one codec: all honest workers' gradients for one round,
+/// averaged over a few rounds (top-k's error-feedback residual warms up).
+#[derive(Debug, Clone)]
+pub struct WireCost {
+    pub bytes_per_round: u64,
+    pub encode_us_per_round: f64,
+    pub decode_us_per_round: f64,
+}
+
+/// One grid cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct CodecRow {
+    pub codec: CodecKind,
+    pub gar: GarKind,
+    pub attack: &'static str,
+    pub bytes_per_round: u64,
+    /// Raw bytes / this codec's bytes (1.0 for raw itself).
+    pub ratio_vs_raw: f64,
+    pub encode_us_per_round: f64,
+    pub decode_us_per_round: f64,
+    /// First round whose evaluated loss dropped below the target
+    /// (−1 = never within the step budget).
+    pub rounds_to_target: i64,
+    pub final_loss: f32,
+    /// Selection precision/recall, derived exactly like
+    /// [`super::resilience`] (honest fraction of selected rows / honest
+    /// submissions used) — reported for every codec so the lossy ones'
+    /// effect on Byzantine filtering is visible.
+    pub selection_precision: f64,
+    pub selection_recall: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CodecBenchConfig {
+    pub n: usize,
+    pub f: usize,
+    pub dim: usize,
+    pub noise: f32,
+    pub steps: usize,
+    /// Loss threshold defining "converged" for rounds-to-target.
+    pub target_loss: f32,
+    pub seed: u64,
+    /// Rounds averaged into the wire-cost measurement.
+    pub wire_rounds: u64,
+    pub gars: Vec<GarKind>,
+    pub attacks: Vec<AttackKind>,
+    pub codecs: Vec<CodecKind>,
+}
+
+impl Default for CodecBenchConfig {
+    fn default() -> Self {
+        Self {
+            n: 11,
+            f: 2,
+            dim: 512,
+            noise: 0.5,
+            steps: 300,
+            target_loss: 5e-3,
+            seed: 1,
+            wire_rounds: 4,
+            gars: vec![GarKind::MultiKrum, GarKind::MultiBulyan],
+            attacks: vec![AttackKind::None, AttackKind::SignFlip { scale: 5.0 }],
+            codecs: CodecKind::ALL.to_vec(),
+        }
+    }
+}
+
+/// Measure one codec's wire cost on `workers` honest quadratic gradient
+/// streams (whole-gradient encode — chunking at block multiples is
+/// byte-identical, see `crate::codec`).
+pub fn measure_wire(
+    kind: CodecKind,
+    dim: usize,
+    noise: f32,
+    seed: u64,
+    workers: usize,
+    batch: usize,
+    rounds: u64,
+) -> Result<WireCost> {
+    let problem = Arc::new(QuadraticProblem::new(dim, noise, seed));
+    let params = vec![0.1f32; dim];
+    let mut sources: Vec<GradSource> = (0..workers)
+        .map(|i| GradSource::quadratic(Arc::clone(&problem), i, batch))
+        .collect();
+    let mut encoders: Vec<_> = (0..workers).map(|_| encoder(kind)).collect();
+    let mut grad = Vec::new();
+    let mut enc = Vec::new();
+    let mut dec = Vec::new();
+    let mut bytes = 0u64;
+    let mut encode_ms = 0.0f64;
+    let mut decode_ms = 0.0f64;
+    for round in 1..=rounds {
+        for (i, src) in sources.iter_mut().enumerate() {
+            src.gradient_into(&params, round, &mut grad)?;
+            let sw = Stopwatch::start();
+            encoders[i].encode(0, &grad, &mut enc);
+            encode_ms += sw.elapsed_ms();
+            bytes += enc.len() as u64;
+            dec.clear();
+            let sw = Stopwatch::start();
+            decode(kind, 0, grad.len(), &enc, &mut dec)?;
+            decode_ms += sw.elapsed_ms();
+            anyhow::ensure!(
+                dec.len() == grad.len(),
+                "{kind:?}: decode returned {} of {} coordinates",
+                dec.len(),
+                grad.len()
+            );
+        }
+    }
+    Ok(WireCost {
+        bytes_per_round: bytes / rounds,
+        encode_us_per_round: encode_ms * 1000.0 / rounds as f64,
+        decode_us_per_round: decode_ms * 1000.0 / rounds as f64,
+    })
+}
+
+pub fn run(cfg: &CodecBenchConfig, quiet: bool) -> Result<Vec<CodecRow>> {
+    let honest_workers = cfg.n - cfg.f;
+    // Wire cost once per codec (it does not depend on gar/attack).
+    let mut wire: Vec<(CodecKind, WireCost)> = Vec::new();
+    for &kind in &cfg.codecs {
+        wire.push((
+            kind,
+            measure_wire(kind, cfg.dim, cfg.noise, cfg.seed, honest_workers, 8, cfg.wire_rounds)?,
+        ));
+    }
+    let raw_bytes = (honest_workers * cfg.dim * 4) as u64;
+
+    let mut rows = Vec::new();
+    for &(kind, ref cost) in &wire {
+        let ratio = raw_bytes as f64 / cost.bytes_per_round.max(1) as f64;
+        for &gar in &cfg.gars {
+            for &attack in &cfg.attacks {
+                let byz = if attack == AttackKind::None { 0 } else { cfg.f };
+                let exp = ExperimentConfig {
+                    cluster: ClusterConfig {
+                        n: cfg.n,
+                        f: cfg.f,
+                        actual_byzantine: Some(byz),
+                        round_timeout_ms: 60_000,
+                        ..Default::default()
+                    },
+                    gar,
+                    pre: Vec::new(),
+                    attack,
+                    model: ModelConfig::Quadratic {
+                        dim: cfg.dim,
+                        noise: cfg.noise,
+                    },
+                    train: TrainConfig {
+                        learning_rate: 0.1,
+                        momentum: 0.0,
+                        steps: cfg.steps,
+                        batch_size: 8,
+                        eval_every: 0,
+                        seed: cfg.seed,
+                    },
+                    threads: 1,
+                    transport: Default::default(),
+                    collect: Default::default(),
+                    overlap: Default::default(),
+                    overlap_window: 1,
+                    codec: Some(kind),
+                    output_dir: None,
+                };
+                let cluster = launch(&exp, None)?;
+                let mut coordinator = cluster.coordinator;
+                let mut evaluator = cluster.evaluator;
+                let mut rounds_to_target = -1i64;
+                for r in 1..=cfg.steps {
+                    coordinator.run_round()?;
+                    let (loss, _) = evaluator.evaluate(coordinator.params())?;
+                    if loss.is_finite() && loss < cfg.target_loss {
+                        rounds_to_target = r as i64;
+                        break;
+                    }
+                }
+                let (final_loss, _) = evaluator.evaluate(coordinator.params())?;
+                let selections = coordinator.metrics.selections();
+                let rounds = coordinator.metrics.counter("rounds");
+                let honest = cfg.n - byz;
+                let total: u64 = selections.iter().sum();
+                let honest_hits: u64 = selections[..honest.min(selections.len())].iter().sum();
+                let selection_precision = if total == 0 {
+                    f64::NAN
+                } else {
+                    honest_hits as f64 / total as f64
+                };
+                let honest_submissions = honest as u64 * rounds;
+                let selection_recall = if honest_submissions == 0 {
+                    f64::NAN
+                } else {
+                    honest_hits as f64 / honest_submissions as f64
+                };
+                coordinator.shutdown();
+                if !quiet {
+                    println!(
+                        "codec={:<9} gar={:<12} attack={:<18} bytes/round={:>8} ({ratio:>5.1}x) \
+                         rounds-to-{:.0e}={:>4} loss={:>10.3e} p={selection_precision:.2} \
+                         r={selection_recall:.2}",
+                        kind.as_str(),
+                        gar.as_str(),
+                        attack.label(),
+                        cost.bytes_per_round,
+                        cfg.target_loss,
+                        rounds_to_target,
+                        final_loss,
+                    );
+                }
+                rows.push(CodecRow {
+                    codec: kind,
+                    gar,
+                    attack: attack.label(),
+                    bytes_per_round: cost.bytes_per_round,
+                    ratio_vs_raw: ratio,
+                    encode_us_per_round: cost.encode_us_per_round,
+                    decode_us_per_round: cost.decode_us_per_round,
+                    rounds_to_target,
+                    final_loss,
+                    selection_precision,
+                    selection_recall,
+                });
+            }
+        }
+    }
+
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{},{:.3},{:.1},{:.1},{},{},{:.4},{:.4}",
+                r.codec.as_str(),
+                r.gar,
+                r.attack,
+                r.bytes_per_round,
+                r.ratio_vs_raw,
+                r.encode_us_per_round,
+                r.decode_us_per_round,
+                r.rounds_to_target,
+                r.final_loss,
+                r.selection_precision,
+                r.selection_recall
+            )
+        })
+        .collect();
+    super::write_csv(
+        "codec.csv",
+        "codec,gar,attack,bytes_per_round,ratio_vs_raw,encode_us_per_round,\
+         decode_us_per_round,rounds_to_target,final_loss,selection_precision,selection_recall",
+        &csv,
+    )?;
+
+    // Step-summary table: one line per codec (wire cost + the acceptance
+    // verdict), then the training grid.
+    let mut md = String::from(
+        "## bench codec\n\n\
+         | codec | bytes/round | vs raw | encode µs | decode µs | ≥3× bar |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for &(kind, ref cost) in &wire {
+        let ratio = raw_bytes as f64 / cost.bytes_per_round.max(1) as f64;
+        let verdict = if matches!(kind, CodecKind::Int8 | CodecKind::TopK) {
+            if ratio >= MIN_COMPRESSIVE_RATIO {
+                "pass"
+            } else {
+                "**FAIL**"
+            }
+        } else {
+            "—"
+        };
+        md.push_str(&format!(
+            "| {} | {} | {:.1}× | {:.1} | {:.1} | {} |\n",
+            kind.as_str(),
+            cost.bytes_per_round,
+            ratio,
+            cost.encode_us_per_round,
+            cost.decode_us_per_round,
+            verdict
+        ));
+    }
+    md.push_str(
+        "\n| codec | gar | attack | rounds→target | final loss | precision | recall |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    for r in &rows {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {:.3e} | {:.2} | {:.2} |\n",
+            r.codec.as_str(),
+            r.gar,
+            r.attack,
+            if r.rounds_to_target < 0 {
+                "never".to_string()
+            } else {
+                r.rounds_to_target.to_string()
+            },
+            r.final_loss,
+            r.selection_precision,
+            r.selection_recall
+        ));
+    }
+    super::step_summary(&md);
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_sweep_writes_csv_and_compressive_codecs_hit_the_bar() {
+        let _env = crate::bench::env_lock();
+        let dir = std::env::temp_dir().join("mb_codec_bench_test");
+        std::env::set_var("MB_RESULTS_DIR", &dir);
+        let cfg = CodecBenchConfig {
+            n: 11,
+            f: 2,
+            dim: 96,
+            noise: 0.3,
+            steps: 3,
+            target_loss: 1e-12, // unreachable in 3 steps: pins "never"
+            seed: 1,
+            wire_rounds: 2,
+            gars: vec![GarKind::MultiKrum],
+            attacks: vec![AttackKind::None],
+            codecs: CodecKind::ALL.to_vec(),
+        };
+        let rows = run(&cfg, true).unwrap();
+        assert_eq!(rows.len(), CodecKind::ALL.len());
+        for r in &rows {
+            assert!(r.bytes_per_round > 0, "{:?}", r.codec);
+            assert!(r.final_loss.is_finite(), "{:?}", r.codec);
+            assert_eq!(r.rounds_to_target, -1, "{:?}", r.codec);
+            // Selection quality is reported for every codec, lossy ones
+            // included (the bench resilience lens).
+            assert!(r.selection_precision > 0.0, "{:?}", r.codec);
+            assert!(r.selection_recall > 0.0, "{:?}", r.codec);
+            match r.codec {
+                // The identity codec's measured bytes are exactly raw.
+                CodecKind::Raw => assert!((r.ratio_vs_raw - 1.0).abs() < 1e-9),
+                // The acceptance bar: compressive codecs cut ≥ 3×.
+                CodecKind::Int8 | CodecKind::TopK => assert!(
+                    r.ratio_vs_raw >= MIN_COMPRESSIVE_RATIO,
+                    "{:?}: ratio {:.2}",
+                    r.codec,
+                    r.ratio_vs_raw
+                ),
+                _ => {}
+            }
+        }
+        let text = std::fs::read_to_string(dir.join("codec.csv")).unwrap();
+        assert!(text.starts_with("codec,gar,attack,bytes_per_round"));
+        assert_eq!(text.lines().count(), 1 + rows.len());
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+
+    #[test]
+    fn lossy_codecs_still_converge_without_attack() {
+        // fp16/int8/topk on the plain quadratic problem: quantization
+        // noise and error feedback must not stop convergence to a loose
+        // target (the end-to-end fidelity claim behind the byte savings).
+        let _env = crate::bench::env_lock();
+        let dir = std::env::temp_dir().join("mb_codec_bench_converge_test");
+        std::env::set_var("MB_RESULTS_DIR", &dir);
+        let cfg = CodecBenchConfig {
+            n: 11,
+            f: 2,
+            dim: 48,
+            noise: 0.05,
+            steps: 120,
+            target_loss: 1e-2,
+            seed: 1,
+            wire_rounds: 1,
+            gars: vec![GarKind::MultiBulyan],
+            attacks: vec![AttackKind::None],
+            codecs: CodecKind::LOSSY.to_vec(),
+        };
+        let rows = run(&cfg, true).unwrap();
+        for r in &rows {
+            assert!(
+                r.rounds_to_target > 0,
+                "{:?}: loss {} never reached {}",
+                r.codec,
+                r.final_loss,
+                cfg.target_loss
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
+    }
+}

@@ -10,10 +10,12 @@
 //! | slowdown | Theorems 1.ii/2.iii m̃/n slowdown | [`slowdown::run`] |
 //! | straggler | first-m vs wait-all round-tail latency under the straggler cost model | [`straggler::run`] |
 //! | resilience | weak/strong resilience under the attack gauntlet | [`resilience::run`] |
+//! | codec | wire-codec bytes/latency/fidelity sweep | [`codec::run`] |
 //! | cone | (α,f) cone + √d leeway | [`cone::run`] |
 //! | check | CI perf-baseline gate over the GAR hot path | [`baseline::check`] |
 
 pub mod baseline;
+pub mod codec;
 pub mod cone;
 pub mod dscaling;
 pub mod fig2;

@@ -152,6 +152,8 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                 transport: Default::default(),
                 collect: Default::default(),
                 overlap: Default::default(),
+                overlap_window: 1,
+                codec: None,
                 output_dir: None,
             };
             let cluster = launch(&exp, None)?;

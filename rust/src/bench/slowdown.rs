@@ -96,6 +96,8 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
         transport: Default::default(),
         collect: Default::default(),
         overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
         output_dir: None,
     };
     let cluster = launch(&exp, None)?;

@@ -140,6 +140,8 @@ pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
                     transport,
                     collect,
                     overlap,
+                    overlap_window: 1,
+                    codec: None,
                     output_dir: None,
                 };
                 let expect = match collect {

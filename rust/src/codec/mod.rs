@@ -1,0 +1,1072 @@
+//! Gradient wire codecs — byte encodings for f32 coordinate ranges.
+//!
+//! At the paper's headline regime (d = 10⁷–10⁹) gradient bytes dominate
+//! every other per-round cost, so the transports compress the worker →
+//! server direction through a common [`Codec`] seam: the socket backend
+//! negotiates a codec at Hello and tags every GradientChunk frame with a
+//! codec id (`docs/wire-protocol.md` §7), while the in-process backends
+//! carry the encoded bytes through the channel message / arena slot and
+//! decode on the server side — all three backends exercise the same
+//! bytes, so the conformance suite covers them together.
+//!
+//! Five codecs ([`CodecKind`], the `codec` config knob):
+//!
+//! * **`raw`** — identity framing: little-endian f32, 4 bytes per
+//!   coordinate. Bit-exact; the determinism-matrix reference.
+//! * **`lossless`** — byte-shuffle (4 byte planes) + run-length/varint
+//!   framing. Bit-exact (a bijection, property-tested below) and small
+//!   on converged/sparse gradients; an incompressible chunk is stored
+//!   verbatim, so the worst case is raw plus one mode byte.
+//! * **`fp16`** — IEEE 754 half precision, round-to-nearest-even,
+//!   2 bytes per coordinate (hand-rolled — no platform or nightly
+//!   `f16` dependence, so the rounding is identical everywhere).
+//! * **`int8`** — blockwise symmetric 8-bit quantization, ~1 byte per
+//!   coordinate: each aligned [`BLOCK`]-coordinate block shares a
+//!   power-of-two scale picked from the block's max magnitude.
+//! * **`topk`** — blockwise top-k sparsification with error feedback:
+//!   each block transmits its `BLOCK/16` largest-magnitude coordinates;
+//!   the untransmitted remainder accumulates in a per-worker residual
+//!   (carried by the encoder, which is why `GradWorker` owns one) and
+//!   rides along on later rounds, so no mass is permanently lost.
+//!
+//! **Determinism contract.** Encoding and decoding are pure byte/f32
+//! functions of their input (plus, for `topk`, the encoder's residual
+//! state): no wall clock, no hashing, no platform-dependent float paths
+//! (quantization scales are exact powers of two built by bit
+//! manipulation — never `powi`, whose 1-ULP slack is documented). Blocks
+//! align to *absolute* coordinate offsets, so an encoder that sees the
+//! gradient in chunks produces the same values as one that sees it whole
+//! whenever the chunk size is a multiple of [`BLOCK`] (the socket
+//! default, 16384, is). One caveat: a NaN coordinate fed to `topk` passes
+//! through the residual *addition*, and IEEE leaves NaN payload
+//! propagation to the platform — every other path is bit-exact.
+//!
+//! **Decode safety.** [`decode`] is fed attacker-controlled bytes on the
+//! socket path, so it validates everything and allocates nothing it was
+//! not promised: a claimed coordinate count more than
+//! [`MAX_DECODE_RATIO`]× the payload size is rejected before any
+//! allocation (the suspicious-ratio guard; every encoding this module
+//! produces stays far under the cap because RLE run lengths are bounded
+//! by [`MAX_RUN`]), and any truncated, malformed or trailing byte is a
+//! [`CodecError`]. The transports surface a failed decode as a rejected
+//! gradient: consumed, never delivered, and never occupying a first-m
+//! quorum slot (socket: `Reject` code 7, `CODEC`).
+
+use anyhow::bail;
+
+/// Quantization/sparsification block size, in f32 coordinates. Blocks
+/// align to absolute coordinate offsets (block `b` covers coordinates
+/// `[b·BLOCK, (b+1)·BLOCK)`), which is what makes chunked encoding agree
+/// with whole-gradient encoding for chunk sizes that are multiples of
+/// this (see the module docs).
+pub const BLOCK: usize = 4096;
+
+/// Decode-side expansion cap: a chunk claiming more coordinates than
+/// `MAX_DECODE_RATIO ×` its payload length is rejected before any
+/// allocation. The honest worst cases sit far below it: an all-zero
+/// `lossless` chunk decodes ≈ 341 coordinates per byte (runs are capped
+/// at [`MAX_RUN`]), and a minimal `topk` block ≈ 512.
+pub const MAX_DECODE_RATIO: usize = 2048;
+
+/// Cap on a single run length in the `lossless` RLE stream. Bounding the
+/// run bounds the decode expansion ratio (see [`MAX_DECODE_RATIO`]); the
+/// encoder splits longer runs, the decoder rejects them.
+pub const MAX_RUN: usize = 4096;
+
+/// Per-block transmitted fraction for `topk`: `len / 16` coordinates
+/// (floor, minimum 1).
+const TOPK_DENOM: usize = 16;
+
+/// Stored-mode threshold for `int8` (2¹²⁰): a block whose max magnitude
+/// reaches it — or that contains a non-finite value — is stored verbatim,
+/// because near `f32::MAX` the reconstruction `q·2^e` could overflow to
+/// infinity. Storing is lossless, so idempotence survives the fallback.
+const INT8_STORED_THRESH: f32 = f32::from_bits(247u32 << 23); // biased exp 120+127
+
+/// Which gradient codec a worker encodes with (the `codec` config knob /
+/// `--codec` CLI flag). At the config level `off` means "no codec stage
+/// installed at all" — byte-identical to `raw` on the wire, which is what
+/// the CI determinism matrix checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodecKind {
+    /// Identity framing: little-endian f32 (default).
+    #[default]
+    Raw,
+    /// Byte-shuffle + RLE/varint lossless framing.
+    Lossless,
+    /// IEEE half-precision quantization (2 bytes per coordinate).
+    Fp16,
+    /// Blockwise symmetric 8-bit quantization (~1 byte per coordinate).
+    Int8,
+    /// Blockwise top-k sparsification with error feedback.
+    TopK,
+}
+
+impl CodecKind {
+    /// Every codec, in display order (test/bench sweeps).
+    pub const ALL: [CodecKind; 5] = [
+        CodecKind::Raw,
+        CodecKind::Lossless,
+        CodecKind::Fp16,
+        CodecKind::Int8,
+        CodecKind::TopK,
+    ];
+
+    /// The lossy codecs (`bench codec` reports selection quality under
+    /// attack for each of these).
+    pub const LOSSY: [CodecKind; 3] = [CodecKind::Fp16, CodecKind::Int8, CodecKind::TopK];
+
+    /// The knob spelling (`raw` / `lossless` / `fp16` / `int8` / `topk`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CodecKind::Raw => "raw",
+            CodecKind::Lossless => "lossless",
+            CodecKind::Fp16 => "fp16",
+            CodecKind::Int8 => "int8",
+            CodecKind::TopK => "topk",
+        }
+    }
+
+    /// Whether `decode(encode(v))` is bit-identical to `v` for every
+    /// input (`raw` and `lossless`).
+    pub fn is_lossless(self) -> bool {
+        matches!(self, CodecKind::Raw | CodecKind::Lossless)
+    }
+
+    /// The on-wire codec id: the GradientChunk `codec` byte and the Hello
+    /// capability byte (`docs/wire-protocol.md` §7).
+    pub fn wire_id(self) -> u8 {
+        match self {
+            CodecKind::Raw => 0,
+            CodecKind::Lossless => 1,
+            CodecKind::Fp16 => 2,
+            CodecKind::Int8 => 3,
+            CodecKind::TopK => 4,
+        }
+    }
+
+    /// Parse an on-wire codec id. `None` means unknown — the server
+    /// answers with `Reject` code `CODEC` (`docs/wire-protocol.md` §7).
+    pub fn from_wire(id: u8) -> Option<CodecKind> {
+        match id {
+            0 => Some(CodecKind::Raw),
+            1 => Some(CodecKind::Lossless),
+            2 => Some(CodecKind::Fp16),
+            3 => Some(CodecKind::Int8),
+            4 => Some(CodecKind::TopK),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for CodecKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for CodecKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "raw" => Ok(CodecKind::Raw),
+            "lossless" => Ok(CodecKind::Lossless),
+            "fp16" => Ok(CodecKind::Fp16),
+            "int8" => Ok(CodecKind::Int8),
+            "topk" | "top-k" => Ok(CodecKind::TopK),
+            other => bail!("unknown codec '{other}' (raw|lossless|fp16|int8|topk)"),
+        }
+    }
+}
+
+/// Why a decode was refused. The message is static and diagnostic-only;
+/// the transports map every decode failure to one rejected gradient
+/// regardless of the reason.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodecError(pub &'static str);
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "codec: {}", self.0)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// A gradient encoder. Stateless for every codec except `topk`, whose
+/// error-feedback residual lives in the encoder — which is why encoders
+/// are per-worker values (each `GradWorker` owns one for the lifetime of
+/// a run) rather than free functions, and why `encode` takes `&mut self`.
+///
+/// `offset` is the absolute coordinate index of `values[0]` within the
+/// full gradient: the block-structured codecs (`int8`, `topk`) align
+/// their blocks to absolute offsets so chunked encoding agrees with
+/// whole-gradient encoding (see [`BLOCK`]).
+///
+/// Decoding is the free function [`decode`]: no codec needs state to
+/// decode (the `topk` residual is encoder-side only), so the server never
+/// holds per-worker codec state.
+pub trait Codec: Send {
+    /// Which codec this is (tags frames on the socket transport and the
+    /// in-process coded messages).
+    fn kind(&self) -> CodecKind;
+
+    /// Encode `values` — starting at absolute coordinate `offset` — into
+    /// `out`, replacing its previous contents.
+    fn encode(&mut self, offset: usize, values: &[f32], out: &mut Vec<u8>);
+}
+
+/// Build a fresh encoder for `kind` (empty residual state for `topk`).
+pub fn encoder(kind: CodecKind) -> Box<dyn Codec> {
+    match kind {
+        CodecKind::Raw => Box::new(Raw),
+        CodecKind::Lossless => Box::new(Lossless {
+            shuffled: Vec::new(),
+            rle: Vec::new(),
+        }),
+        CodecKind::Fp16 => Box::new(Fp16),
+        CodecKind::Int8 => Box::new(Int8),
+        CodecKind::TopK => Box::new(TopK {
+            residual: Vec::new(),
+            order: Vec::new(),
+        }),
+    }
+}
+
+/// Decode `count` coordinates — starting at absolute coordinate `offset`
+/// — from `bytes`, appending them to `out`. On success exactly `count`
+/// values were appended; on error `out` is left exactly as it was.
+/// `bytes` may be attacker-controlled (see the module docs' decode-safety
+/// paragraph): everything is validated, and the suspicious-ratio guard
+/// runs before any allocation.
+pub fn decode(
+    kind: CodecKind,
+    offset: usize,
+    count: usize,
+    bytes: &[u8],
+    out: &mut Vec<f32>,
+) -> Result<(), CodecError> {
+    if count > bytes.len().saturating_mul(MAX_DECODE_RATIO) {
+        return Err(CodecError("suspicious expansion ratio"));
+    }
+    let start = out.len();
+    let result = match kind {
+        CodecKind::Raw => decode_raw(count, bytes, out),
+        CodecKind::Lossless => decode_lossless(count, bytes, out),
+        CodecKind::Fp16 => decode_fp16(count, bytes, out),
+        CodecKind::Int8 => decode_int8(offset, count, bytes, out),
+        CodecKind::TopK => decode_topk(offset, count, bytes, out),
+    };
+    if result.is_err() {
+        out.truncate(start);
+    } else {
+        debug_assert_eq!(out.len(), start + count);
+    }
+    result
+}
+
+// ---------------------------------------------------------------------
+// raw
+// ---------------------------------------------------------------------
+
+/// `raw`: identity framing, little-endian f32.
+struct Raw;
+
+impl Codec for Raw {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Raw
+    }
+
+    fn encode(&mut self, _offset: usize, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(values.len() * 4);
+        for &v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+fn decode_raw(count: usize, bytes: &[u8], out: &mut Vec<f32>) -> Result<(), CodecError> {
+    if Some(bytes.len()) != count.checked_mul(4) {
+        return Err(CodecError("raw: payload length != 4·count"));
+    }
+    out.reserve(count);
+    for le in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([le[0], le[1], le[2], le[3]]));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// lossless: byte-shuffle + RLE/varint
+// ---------------------------------------------------------------------
+
+/// `lossless`: the chunk's f32s are split into their 4 little-endian byte
+/// planes (all byte-0s, then all byte-1s, …) — sign/exponent bytes of
+/// nearby coordinates correlate, so the upper planes are long runs — then
+/// run-length encoded as `(byte, varint run)` pairs with runs capped at
+/// [`MAX_RUN`]. A chunk the pairs do not shrink is stored verbatim behind
+/// the 1-byte mode tag instead.
+struct Lossless {
+    /// Byte-plane scratch, reused across chunks.
+    shuffled: Vec<u8>,
+    /// RLE output scratch, reused across chunks.
+    rle: Vec<u8>,
+}
+
+impl Codec for Lossless {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Lossless
+    }
+
+    fn encode(&mut self, _offset: usize, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        self.shuffled.clear();
+        self.shuffled.reserve(values.len() * 4);
+        for b in 0..4 {
+            for &v in values {
+                self.shuffled.push(v.to_le_bytes()[b]);
+            }
+        }
+        self.rle.clear();
+        rle_encode(&self.shuffled, &mut self.rle);
+        if self.rle.len() < values.len() * 4 {
+            out.reserve(1 + self.rle.len());
+            out.push(1);
+            out.extend_from_slice(&self.rle);
+        } else {
+            out.reserve(1 + values.len() * 4);
+            out.push(0);
+            for &v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// RLE with runs capped at [`MAX_RUN`] (the cap is what bounds the decode
+/// expansion ratio — see [`MAX_DECODE_RATIO`]).
+fn rle_encode(bytes: &[u8], out: &mut Vec<u8>) {
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        let mut run = 1usize;
+        while run < MAX_RUN && i + run < bytes.len() && bytes[i + run] == b {
+            run += 1;
+        }
+        out.push(b);
+        write_varint(run as u64, out);
+        i += run;
+    }
+}
+
+/// LEB128: low 7 bits first, high bit set on continuation bytes.
+fn write_varint(mut v: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// LEB128 decode at `*pos`, advancing it past the varint.
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos).ok_or(CodecError("varint truncated"))?;
+        *pos += 1;
+        v |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err(CodecError("varint overflow"));
+        }
+    }
+}
+
+fn decode_lossless(count: usize, bytes: &[u8], out: &mut Vec<f32>) -> Result<(), CodecError> {
+    let (&mode, body) = bytes
+        .split_first()
+        .ok_or(CodecError("lossless: empty payload"))?;
+    let planes = count
+        .checked_mul(4)
+        .ok_or(CodecError("lossless: count overflow"))?;
+    match mode {
+        0 => {
+            // Stored chunks are plain little-endian f32 (not shuffled).
+            if body.len() != planes {
+                return Err(CodecError("lossless: stored length != 4·count"));
+            }
+            out.reserve(count);
+            for le in body.chunks_exact(4) {
+                out.push(f32::from_le_bytes([le[0], le[1], le[2], le[3]]));
+            }
+            Ok(())
+        }
+        1 => {
+            let mut shuffled = Vec::with_capacity(planes);
+            let mut pos = 0usize;
+            while shuffled.len() < planes {
+                let b = *body.get(pos).ok_or(CodecError("lossless: truncated run"))?;
+                pos += 1;
+                let run = read_varint(body, &mut pos)? as usize;
+                if run == 0 || run > MAX_RUN {
+                    return Err(CodecError("lossless: run length out of range"));
+                }
+                if shuffled.len() + run > planes {
+                    return Err(CodecError("lossless: run overruns the chunk"));
+                }
+                let grown = shuffled.len() + run;
+                shuffled.resize(grown, b);
+            }
+            if pos != body.len() {
+                return Err(CodecError("lossless: trailing bytes"));
+            }
+            out.reserve(count);
+            for i in 0..count {
+                out.push(f32::from_le_bytes([
+                    shuffled[i],
+                    shuffled[count + i],
+                    shuffled[2 * count + i],
+                    shuffled[3 * count + i],
+                ]));
+            }
+            Ok(())
+        }
+        _ => Err(CodecError("lossless: unknown mode")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// fp16: hand-rolled IEEE 754 binary16, round-to-nearest-even
+// ---------------------------------------------------------------------
+
+/// `fp16`: per-coordinate IEEE half precision, u16 LE on the wire.
+struct Fp16;
+
+impl Codec for Fp16 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Fp16
+    }
+
+    fn encode(&mut self, _offset: usize, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(values.len() * 2);
+        for &v in values {
+            out.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+        }
+    }
+}
+
+fn decode_fp16(count: usize, bytes: &[u8], out: &mut Vec<f32>) -> Result<(), CodecError> {
+    if Some(bytes.len()) != count.checked_mul(2) {
+        return Err(CodecError("fp16: payload length != 2·count"));
+    }
+    out.reserve(count);
+    for le in bytes.chunks_exact(2) {
+        out.push(f16_to_f32(u16::from_le_bytes([le[0], le[1]])));
+    }
+    Ok(())
+}
+
+/// f32 → binary16, round-to-nearest-even. NaN collapses to the canonical
+/// quiet NaN `0x7E00` (payload and sign dropped — deterministic); values
+/// beyond the half range (±65504, e.g. ±1e30) overflow to ±infinity.
+fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        return if man == 0 { sign | 0x7C00 } else { 0x7E00 };
+    }
+    let e = exp - 127; // unbiased
+    if e > 15 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // Normal half: drop 13 mantissa bits with RNE; a carry out of the
+        // mantissa correctly bumps the exponent (up to ±inf at e = 15).
+        let m = man >> 13;
+        let rem = man & 0x1FFF;
+        let mut h = sign | (((e + 15) as u16) << 10) | m as u16;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    if e < -25 {
+        return sign; // below half of the smallest subnormal → ±0
+    }
+    // Subnormal half: add the implicit bit, shift out 13 + deficit, RNE.
+    let full = man | 0x80_0000;
+    let shift = (13 + (-14 - e)) as u32;
+    let m = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut h = sign | m as u16;
+    if rem > half || (rem == half && (m & 1) == 1) {
+        h += 1;
+    }
+    h
+}
+
+/// binary16 → f32 (exact — every half value is representable). Any NaN
+/// half decodes to the canonical quiet NaN `0x7FC00000`.
+fn f16_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = u32::from(h >> 10) & 0x1F;
+    let man = u32::from(h & 0x3FF);
+    let bits = if exp == 0x1F {
+        if man == 0 {
+            sign | 0x7F80_0000
+        } else {
+            0x7FC0_0000
+        }
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half: normalize into an f32 normal.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3FF) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13) // 112 = 127 - 15
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------
+// int8: blockwise symmetric power-of-two quantization
+// ---------------------------------------------------------------------
+
+/// `int8`: per aligned block, a mode byte (1 = quantized, 0 = stored
+/// f32), then for mode 1 an exponent `e` (i16 LE) and one i8 per
+/// coordinate: `q = round(v / 2^e).clamp(-127, 127)` with the smallest
+/// `e ≥ -126` such that `127·2^e ≥ max|v|`. The scale is an exact power
+/// of two, so `q·2^e` is exact in f32 and quantize→dequantize is
+/// idempotent on the grid.
+struct Int8;
+
+impl Codec for Int8 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Int8
+    }
+
+    fn encode(&mut self, offset: usize, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        let mut i = 0usize;
+        while i < values.len() {
+            let abs = offset + i;
+            let len = (BLOCK - abs % BLOCK).min(values.len() - i);
+            encode_int8_block(&values[i..i + len], out);
+            i += len;
+        }
+    }
+}
+
+fn encode_int8_block(block: &[f32], out: &mut Vec<u8>) {
+    let mut maxabs = 0.0f32;
+    let mut quantizable = true;
+    for &v in block {
+        if !v.is_finite() {
+            quantizable = false;
+            break;
+        }
+        let a = v.abs();
+        if a > maxabs {
+            maxabs = a;
+        }
+    }
+    if !quantizable || maxabs >= INT8_STORED_THRESH {
+        out.push(0);
+        for &v in block {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        return;
+    }
+    let e = int8_exponent(maxabs);
+    let scale = pow2(e);
+    out.push(1);
+    out.extend_from_slice(&(e as i16).to_le_bytes());
+    for &v in block {
+        // Division by an exact power of two, then round half away from
+        // zero (`f32::round`) — both fully determined by IEEE semantics.
+        let q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+        out.push(q as u8);
+    }
+}
+
+/// The smallest exponent `e ≥ -126` with `127·2^e ≥ maxabs` (`maxabs`
+/// finite and below [`INT8_STORED_THRESH`]). Found by a ≤ 3-step search
+/// up from the estimate `exponent(maxabs) − 7` — no float logarithm,
+/// whose libm implementation the determinism contract must not depend on.
+fn int8_exponent(maxabs: f32) -> i32 {
+    if maxabs == 0.0 {
+        return -126;
+    }
+    let biased = ((maxabs.to_bits() >> 23) & 0xFF) as i32;
+    let mut e = (biased - 127 - 7).max(-126);
+    while 127.0 * pow2(e) < maxabs {
+        e += 1;
+    }
+    e
+}
+
+/// 2^e as f32 for normal exponents `e ∈ [-126, 127]`, built exactly by
+/// bit manipulation (`f32::powi` documents 1-ULP slack — not
+/// deterministic enough for a codec).
+fn pow2(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e));
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+fn decode_int8(
+    offset: usize,
+    count: usize,
+    bytes: &[u8],
+    out: &mut Vec<f32>,
+) -> Result<(), CodecError> {
+    let mut pos = 0usize;
+    let mut i = 0usize;
+    while i < count {
+        let abs = offset + i;
+        let len = (BLOCK - abs % BLOCK).min(count - i);
+        let mode = *bytes
+            .get(pos)
+            .ok_or(CodecError("int8: truncated block header"))?;
+        pos += 1;
+        match mode {
+            0 => {
+                let data = bytes
+                    .get(pos..pos + len * 4)
+                    .ok_or(CodecError("int8: truncated stored block"))?;
+                for le in data.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([le[0], le[1], le[2], le[3]]));
+                }
+                pos += len * 4;
+            }
+            1 => {
+                let eb = bytes
+                    .get(pos..pos + 2)
+                    .ok_or(CodecError("int8: truncated exponent"))?;
+                let e = i32::from(i16::from_le_bytes([eb[0], eb[1]]));
+                if !(-126..=127).contains(&e) {
+                    return Err(CodecError("int8: exponent out of range"));
+                }
+                pos += 2;
+                let data = bytes
+                    .get(pos..pos + len)
+                    .ok_or(CodecError("int8: truncated block"))?;
+                let scale = pow2(e);
+                for &qb in data {
+                    out.push(f32::from(qb as i8) * scale);
+                }
+                pos += len;
+            }
+            _ => return Err(CodecError("int8: unknown block mode")),
+        }
+        i += len;
+    }
+    if pos != bytes.len() {
+        return Err(CodecError("int8: trailing bytes"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// topk: blockwise sparsification with error feedback
+// ---------------------------------------------------------------------
+
+/// `topk`: per aligned block of `L` coordinates, `m = min(L, max(1,
+/// L/16))` entries `(local index u16 LE, value f32 LE)` preceded by `m`
+/// (u16 LE), sorted by ascending index. Selection is by descending `|a|`
+/// (`total_cmp`, so even NaN ordering is deterministic), ties by
+/// ascending index, where `a = value + residual`; a selected coordinate
+/// transmits `a` and zeroes its residual, an unselected one banks `a` for
+/// the next round (error feedback — the untransmitted mass is delayed,
+/// not lost).
+struct TopK {
+    /// Error-feedback residual, indexed by absolute coordinate and grown
+    /// on demand. This is the per-worker state: each worker owns one
+    /// encoder for the lifetime of a run.
+    residual: Vec<f32>,
+    /// Selection scratch: local indices of the current block.
+    order: Vec<usize>,
+}
+
+impl Codec for TopK {
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopK
+    }
+
+    fn encode(&mut self, offset: usize, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        let end = offset + values.len();
+        if self.residual.len() < end {
+            self.residual.resize(end, 0.0);
+        }
+        let TopK { residual, order } = self;
+        let mut i = 0usize;
+        while i < values.len() {
+            let abs = offset + i;
+            let len = (BLOCK - abs % BLOCK).min(values.len() - i);
+            topk_encode_block(
+                &mut residual[abs..abs + len],
+                order,
+                &values[i..i + len],
+                out,
+            );
+            i += len;
+        }
+    }
+}
+
+fn topk_encode_block(res: &mut [f32], order: &mut Vec<usize>, block: &[f32], out: &mut Vec<u8>) {
+    // a = this round's value plus the banked residual, accumulated in
+    // place: what is not selected below simply stays banked.
+    for (r, &v) in res.iter_mut().zip(block) {
+        *r += v;
+    }
+    let m = (block.len() / TOPK_DENOM).max(1).min(block.len());
+    order.clear();
+    order.extend(0..block.len());
+    // Deterministic despite the "unstable" partition: the comparator is a
+    // total order (total_cmp, ties by index).
+    order.select_nth_unstable_by(m - 1, |&i, &j| {
+        let (ai, aj) = (res[i].abs(), res[j].abs());
+        aj.total_cmp(&ai).then(i.cmp(&j))
+    });
+    order.truncate(m);
+    order.sort_unstable();
+    out.extend_from_slice(&(m as u16).to_le_bytes());
+    for &i in order.iter() {
+        out.extend_from_slice(&(i as u16).to_le_bytes());
+        out.extend_from_slice(&res[i].to_le_bytes());
+        res[i] = 0.0; // transmitted: the residual is spent
+    }
+}
+
+fn decode_topk(
+    offset: usize,
+    count: usize,
+    bytes: &[u8],
+    out: &mut Vec<f32>,
+) -> Result<(), CodecError> {
+    let mut pos = 0usize;
+    let mut i = 0usize;
+    while i < count {
+        let abs = offset + i;
+        let len = (BLOCK - abs % BLOCK).min(count - i);
+        let mb = bytes
+            .get(pos..pos + 2)
+            .ok_or(CodecError("topk: truncated block header"))?;
+        let m = usize::from(u16::from_le_bytes([mb[0], mb[1]]));
+        pos += 2;
+        if m > len {
+            return Err(CodecError("topk: more entries than coordinates"));
+        }
+        let base = out.len();
+        out.resize(base + len, 0.0);
+        let mut prev: Option<usize> = None;
+        for _ in 0..m {
+            let eb = bytes
+                .get(pos..pos + 6)
+                .ok_or(CodecError("topk: truncated entry"))?;
+            let idx = usize::from(u16::from_le_bytes([eb[0], eb[1]]));
+            if idx >= len || prev.is_some_and(|p| idx <= p) {
+                return Err(CodecError("topk: entry indices not strictly increasing"));
+            }
+            prev = Some(idx);
+            out[base + idx] = f32::from_le_bytes([eb[2], eb[3], eb[4], eb[5]]);
+            pos += 6;
+        }
+        i += len;
+    }
+    if pos != bytes.len() {
+        return Err(CodecError("topk: trailing bytes"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Rng64};
+
+    /// Adversarially mixed coordinates: arbitrary bit patterns (NaN, ±inf,
+    /// subnormals), exact zeros, ±1e30, and ordinary small values.
+    fn gen_values(rng: &mut Rng64, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| match rng.gen_range_usize(8) {
+                0 => f32::from_bits(rng.next_u64() as u32),
+                1 => 0.0,
+                2 => 1e30,
+                3 => -1e30,
+                _ => (rng.gen_f32() - 0.5) * 4.0,
+            })
+            .collect()
+    }
+
+    fn round_trip(kind: CodecKind, offset: usize, values: &[f32]) -> Vec<f32> {
+        let mut enc = encoder(kind);
+        let mut bytes = Vec::new();
+        enc.encode(offset, values, &mut bytes);
+        let mut back = Vec::new();
+        decode(kind, offset, values.len(), &bytes, &mut back).expect("well-formed encode");
+        back
+    }
+
+    fn bits(values: &[f32]) -> Vec<u32> {
+        values.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn codec_kind_parses_and_displays() {
+        assert_eq!("raw".parse::<CodecKind>().unwrap(), CodecKind::Raw);
+        assert_eq!("topk".parse::<CodecKind>().unwrap(), CodecKind::TopK);
+        assert_eq!(CodecKind::default(), CodecKind::Raw);
+        for kind in CodecKind::ALL {
+            assert_eq!(kind.as_str().parse::<CodecKind>().unwrap(), kind);
+            assert_eq!(CodecKind::from_wire(kind.wire_id()), Some(kind));
+        }
+        let err = "gzip".parse::<CodecKind>().unwrap_err().to_string();
+        assert!(
+            err.contains("raw|lossless|fp16|int8|topk"),
+            "error must list the valid names: {err}"
+        );
+        // "off" is a config-level spelling (no codec stage), not a codec.
+        assert!("off".parse::<CodecKind>().is_err());
+        assert_eq!(CodecKind::from_wire(9), None);
+    }
+
+    #[test]
+    fn lossless_codecs_round_trip_bit_identical_property() {
+        // Invariant catalog: codec determinism — raw and lossless are
+        // bijections on every bit pattern, including NaN payloads, ±1e30
+        // and non-finite coordinates, at arbitrary chunk sizes/offsets.
+        proptest::check(
+            "raw/lossless bijection",
+            proptest::default_cases(),
+            |rng, _case| {
+                let len = rng.gen_range_usize(300);
+                let offset = rng.gen_range_usize(3) * BLOCK + rng.gen_range_usize(40);
+                let values = gen_values(rng, len);
+                for kind in [CodecKind::Raw, CodecKind::Lossless] {
+                    let back = round_trip(kind, offset, &values);
+                    if bits(&back) != bits(&values) {
+                        return Err(format!("{kind}: decode(encode(v)) != v (len {len})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn quantize_dequantize_is_idempotent_property() {
+        // Satellite invariant: one lossy pass projects onto the codec's
+        // grid; a second pass is the identity on the grid, bit for bit.
+        proptest::check(
+            "lossy idempotence",
+            proptest::default_cases(),
+            |rng, _case| {
+                let len = 1 + rng.gen_range_usize(200);
+                let offset = rng.gen_range_usize(2) * BLOCK;
+                let values = gen_values(rng, len);
+                for kind in CodecKind::LOSSY {
+                    let once = round_trip(kind, offset, &values);
+                    let twice = round_trip(kind, offset, &once);
+                    if bits(&twice) != bits(&once) {
+                        return Err(format!("{kind}: second pass moved grid values"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn chunked_encoding_agrees_with_whole_gradient_at_block_boundaries() {
+        // The absolute-offset block alignment: splitting the gradient at
+        // BLOCK multiples and encoding each piece (with one encoder, so
+        // topk residual state carries over) decodes to exactly the values
+        // of a whole-gradient encode by a fresh encoder.
+        let mut rng = Rng64::seed_from_u64(0xB10C);
+        let values = gen_values(&mut rng, BLOCK + 123);
+        for kind in CodecKind::ALL {
+            let whole = round_trip(kind, 0, &values);
+            let mut enc = encoder(kind);
+            let mut pieces = Vec::new();
+            for (start, piece) in [(0, &values[..BLOCK]), (BLOCK, &values[BLOCK..])] {
+                let mut bytes = Vec::new();
+                enc.encode(start, piece, &mut bytes);
+                decode(kind, start, piece.len(), &bytes, &mut pieces).unwrap();
+            }
+            assert_eq!(bits(&pieces), bits(&whole), "{kind}");
+        }
+    }
+
+    #[test]
+    fn decode_never_panics_on_garbage_and_leaves_out_untouched_on_error() {
+        proptest::check("garbage decode", proptest::default_cases(), |rng, _case| {
+            let blen = rng.gen_range_usize(80);
+            let bytes: Vec<u8> = (0..blen).map(|_| rng.next_u64() as u8).collect();
+            let count = rng.gen_range_usize(200);
+            let offset = rng.gen_range_usize(2) * BLOCK;
+            for kind in CodecKind::ALL {
+                let mut out = vec![7.0f32; 3];
+                match decode(kind, offset, count, &bytes, &mut out) {
+                    Ok(()) => {
+                        if out.len() != 3 + count {
+                            return Err(format!("{kind}: Ok but appended wrong count"));
+                        }
+                    }
+                    Err(_) => {
+                        if out != vec![7.0f32; 3] {
+                            return Err(format!("{kind}: Err mutated out"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn suspicious_ratio_guard_rejects_before_allocating() {
+        // A 2-byte payload claiming 10 000 coordinates is a zip bomb: the
+        // guard fires for every codec, before any allocation.
+        for kind in CodecKind::ALL {
+            let mut out = Vec::new();
+            let err = decode(kind, 0, 10_000, &[1u8, 0], &mut out).unwrap_err();
+            assert_eq!(err, CodecError("suspicious expansion ratio"), "{kind}");
+            assert!(out.is_empty(), "{kind}");
+        }
+        // ... while an honest all-zero lossless chunk of the default
+        // socket chunk size stays under the cap (runs are MAX_RUN-capped).
+        let zeros = vec![0.0f32; 16_384];
+        let mut enc = encoder(CodecKind::Lossless);
+        let mut bytes = Vec::new();
+        enc.encode(0, &zeros, &mut bytes);
+        assert!(bytes.len() * MAX_DECODE_RATIO >= zeros.len(), "guard-safe");
+        assert!(bytes.len() < 100, "compresses hard: {} bytes", bytes.len());
+        let mut back = Vec::new();
+        decode(CodecKind::Lossless, 0, zeros.len(), &bytes, &mut back).unwrap();
+        assert_eq!(bits(&back), bits(&zeros));
+    }
+
+    #[test]
+    fn fp16_reference_vectors() {
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.5), 0xC100);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // half::MAX
+        assert_eq!(f32_to_f16(65520.0), 0x7C00); // rounds up to +inf
+        assert_eq!(f32_to_f16(1e30), 0x7C00);
+        assert_eq!(f32_to_f16(-1e30), 0xFC00);
+        assert_eq!(f32_to_f16(f32::NAN), 0x7E00); // canonical
+        assert_eq!(f32_to_f16(6e-8), 0x0001); // smallest subnormal
+        assert_eq!(f16_to_f32(0x3C00).to_bits(), 1.0f32.to_bits());
+        assert_eq!(f16_to_f32(0x0001), 5.960_464_5e-8);
+        assert_eq!(f16_to_f32(0x7E01).to_bits(), 0x7FC0_0000); // NaN canon
+        assert_eq!(f16_to_f32(0xFC00), f32::NEG_INFINITY);
+        // ±0 keep their sign through the round trip.
+        assert_eq!(f16_to_f32(f32_to_f16(-0.0)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn int8_grid_is_exact_and_extremes_fall_back_to_stored() {
+        // 127·2^-6 ≈ 1.98 covers max|v| = 1.0, so e = -6 and 1.0 → q=64
+        // reconstructs exactly; 0.25 → q=16 likewise.
+        let back = round_trip(CodecKind::Int8, 0, &[1.0, -0.5, 0.25, 0.0]);
+        assert_eq!(back, vec![1.0, -0.5, 0.25, 0.0]);
+        // Non-finite and near-MAX blocks are stored verbatim (lossless).
+        let wild = [f32::INFINITY, f32::MAX, -1e38, f32::NAN, 2.0];
+        let back = round_trip(CodecKind::Int8, 0, &wild);
+        assert_eq!(bits(&back), bits(&wild));
+    }
+
+    #[test]
+    fn topk_transmits_the_largest_and_banks_the_rest() {
+        // 32 coordinates → m = 2. Round 1 sends the two largest; the
+        // remaining mass waits in the residual and rides out on round 2
+        // even though the round-2 input is all zero (error feedback).
+        let mut values = vec![0.0f32; 32];
+        values[4] = 10.0;
+        values[9] = -9.0;
+        values[20] = 1.0;
+        values[21] = 1.0;
+        let mut enc = encoder(CodecKind::TopK);
+        let mut bytes = Vec::new();
+        enc.encode(0, &values, &mut bytes);
+        assert_eq!(bytes.len(), 2 + 2 * 6, "m=2 entries");
+        let mut r1 = Vec::new();
+        decode(CodecKind::TopK, 0, 32, &bytes, &mut r1).unwrap();
+        let mut want = vec![0.0f32; 32];
+        want[4] = 10.0;
+        want[9] = -9.0;
+        assert_eq!(r1, want);
+
+        enc.encode(0, &vec![0.0f32; 32], &mut bytes);
+        let mut r2 = Vec::new();
+        decode(CodecKind::TopK, 0, 32, &bytes, &mut r2).unwrap();
+        let mut want2 = vec![0.0f32; 32];
+        want2[20] = 1.0;
+        want2[21] = 1.0;
+        assert_eq!(r2, want2, "banked residual transmitted next round");
+    }
+
+    #[test]
+    fn topk_rejects_unsorted_and_out_of_range_entries() {
+        // m=2, idx 5 then idx 3: not strictly increasing.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&2u16.to_le_bytes());
+        bad.extend_from_slice(&5u16.to_le_bytes());
+        bad.extend_from_slice(&1.0f32.to_le_bytes());
+        bad.extend_from_slice(&3u16.to_le_bytes());
+        bad.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut out = Vec::new();
+        assert!(decode(CodecKind::TopK, 0, 32, &bad, &mut out).is_err());
+        assert!(out.is_empty());
+        // idx beyond the block length.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&1u16.to_le_bytes());
+        bad.extend_from_slice(&40u16.to_le_bytes());
+        bad.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode(CodecKind::TopK, 0, 32, &bad, &mut out).is_err());
+    }
+
+    #[test]
+    fn lossy_codecs_cut_bytes_at_least_3x_on_smooth_gradients() {
+        // The acceptance-criteria ratio at the codec layer: int8 ≈ 4×,
+        // topk ≈ 10×+ vs raw's 4 bytes/coordinate on a typical smooth
+        // (finite, similar-magnitude) gradient.
+        let mut rng = Rng64::seed_from_u64(42);
+        let values: Vec<f32> = (0..2 * BLOCK).map(|_| rng.gen_f32() - 0.5).collect();
+        let raw_len = values.len() * 4;
+        for kind in [CodecKind::Int8, CodecKind::TopK] {
+            let mut enc = encoder(kind);
+            let mut bytes = Vec::new();
+            enc.encode(0, &values, &mut bytes);
+            assert!(
+                bytes.len() * 3 <= raw_len,
+                "{kind}: {} bytes vs raw {raw_len}",
+                bytes.len()
+            );
+        }
+    }
+}

@@ -206,6 +206,22 @@ pub struct ExperimentConfig {
     /// used an older entry or a zero row. Runs only diverge when such a
     /// salvage occurs; see `coordinator::OverlapMode`.
     pub overlap: OverlapMode,
+    /// Prefix-overlap pacing (`overlap_window` root key /
+    /// `--overlap-window` flag, ≥ 1): how many combine grid chunks each
+    /// drive slice claims. The default 1 is the original
+    /// one-aux-task-per-slice behaviour — the longest late-acceptance
+    /// window; larger values drain the combine tail in fewer slices.
+    /// Pure pacing: parameters are bit-identical for every value (the
+    /// chunk grid never changes). Ignored when `overlap = "off"`.
+    pub overlap_window: usize,
+    /// Gradient wire codec (`codec` root key / `--codec` flag):
+    /// `None`/`"off"`/`"raw"` sends raw f32 frames; `"lossless"` is a
+    /// bit-exact compressed encoding; `"fp16"`, `"int8"` and `"topk"`
+    /// are lossy (quantization / sparsification with error feedback).
+    /// Applied on every transport — in-process backends carry encoded
+    /// byte payloads, the socket backend negotiates the codec at Hello
+    /// (wire spec §7). See `crate::codec`.
+    pub codec: Option<crate::codec::CodecKind>,
     /// Where to write metrics CSV (None = stdout summary only).
     pub output_dir: Option<String>,
 }
@@ -232,6 +248,8 @@ impl ExperimentConfig {
             transport: TransportKind::default(),
             collect: CollectMode::default(),
             overlap: OverlapMode::default(),
+            overlap_window: 1,
+            codec: None,
             output_dir: None,
         }
     }
@@ -405,6 +423,18 @@ impl ExperimentConfig {
             .map(str::parse)
             .transpose()?
             .unwrap_or_default();
+        let overlap_window = root
+            .get("overlap_window")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(1);
+        // "off" (and absence) disable the codec; anything else must be a
+        // known codec name — CodecKind's FromStr lists the valid ones.
+        let codec = match root.get("codec").map(|v| v.as_str()).transpose()? {
+            None => None,
+            Some("off") => None,
+            Some(name) => Some(name.parse::<crate::codec::CodecKind>()?),
+        };
 
         Ok(Self {
             cluster,
@@ -417,6 +447,8 @@ impl ExperimentConfig {
             transport,
             collect,
             overlap,
+            overlap_window,
+            codec,
             output_dir: get_str("", "output_dir"),
         })
     }
@@ -498,6 +530,10 @@ impl ExperimentConfig {
             "cluster.socket_listen is set but transport = {} — external workers \
              need transport = \"socket\"",
             self.transport
+        );
+        anyhow::ensure!(
+            self.overlap_window >= 1,
+            "overlap_window must be ≥ 1 combine chunk per drive slice"
         );
         anyhow::ensure!(self.train.batch_size >= 1, "batch_size must be ≥ 1");
         anyhow::ensure!(self.train.steps >= 1, "steps must be ≥ 1");
@@ -776,6 +812,59 @@ mod tests {
             "#,
         )
         .is_err());
+    }
+
+    #[test]
+    fn overlap_window_knob_parses_and_validates() {
+        assert_eq!(base().overlap_window, 1);
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-bulyan"
+            collect = "first-m"
+            overlap = "prefix"
+            overlap_window = 8
+            [cluster]
+            n = 11
+            f = 2
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.overlap_window, 8);
+        // A zero window would stall the prefix tail forever.
+        let mut cfg = base();
+        cfg.overlap_window = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn codec_knob_parses_and_rejects_unknown_names() {
+        use crate::codec::CodecKind;
+        assert_eq!(base().codec, None);
+        let parse = |name: &str| {
+            ExperimentConfig::from_text(&format!(
+                r#"
+                gar = "multi-bulyan"
+                codec = "{name}"
+                [cluster]
+                n = 11
+                f = 2
+                [model]
+                kind = "quadratic"
+                "#,
+            ))
+        };
+        assert_eq!(parse("off").unwrap().codec, None);
+        assert_eq!(parse("raw").unwrap().codec, Some(CodecKind::Raw));
+        assert_eq!(parse("lossless").unwrap().codec, Some(CodecKind::Lossless));
+        assert_eq!(parse("fp16").unwrap().codec, Some(CodecKind::Fp16));
+        assert_eq!(parse("int8").unwrap().codec, Some(CodecKind::Int8));
+        assert_eq!(parse("topk").unwrap().codec, Some(CodecKind::TopK));
+        // Unknown names fail with the valid spellings in the message.
+        let err = parse("gzip").unwrap_err().to_string();
+        assert!(err.contains("unknown codec 'gzip'"), "{err}");
+        assert!(err.contains("raw|lossless|fp16|int8|topk"), "{err}");
     }
 
     #[test]

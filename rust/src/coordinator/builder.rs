@@ -6,7 +6,7 @@ use crate::data::{FashionLike, QuadraticProblem, TokenStream};
 use crate::runtime::{ComputeHandle, Manifest, Parallelism};
 use crate::training::LrSchedule;
 use crate::transport::{self, ComputeCost, FaultModel, SocketOptions, TransportKind};
-use crate::worker::{serve_workers, GradSource};
+use crate::worker::{serve_workers_coded, GradSource};
 use crate::Result;
 use std::sync::Arc;
 use std::time::Duration;
@@ -60,6 +60,7 @@ pub fn launch(
         listen: config.cluster.socket_listen.clone(),
         chunk: config.cluster.socket_chunk,
         external: config.cluster.socket_listen.is_some(),
+        codec: config.codec.unwrap_or_default(),
     };
     let (server, endpoints) =
         transport::build_cluster(config.transport, honest, faults, &par, &socket)?;
@@ -92,7 +93,7 @@ pub fn launch(
                     )
                 })
                 .collect();
-            serve_workers(pairs);
+            serve_workers_coded(pairs, config.codec);
             (
                 vec![0.0f32; *dim],
                 Evaluator::Quadratic(Arc::clone(&problem)),
@@ -138,7 +139,7 @@ pub fn launch(
                         )
                     })
                     .collect();
-                serve_workers(pairs);
+                serve_workers_coded(pairs, config.codec);
                 let evaluator = Evaluator::Lm {
                     handle,
                     artifact: grad_artifact,
@@ -168,7 +169,7 @@ pub fn launch(
                         )
                     })
                     .collect();
-                serve_workers(pairs);
+                serve_workers_coded(pairs, config.codec);
                 let evaluator = match &model.eval {
                     Some(eval_artifact) => Evaluator::Artifact {
                         handle,
@@ -191,6 +192,7 @@ pub fn launch(
         seed,
         collect: config.collect,
         overlap: config.overlap,
+        overlap_window: config.overlap_window,
     };
     let mut coordinator = Coordinator::new(
         config.gar.instantiate_parallel(n, config.cluster.f, &par)?,

@@ -199,8 +199,9 @@ struct PrefixOutcome {
 }
 
 /// The prefix-overlap O(d) tail: walk the fixed [`OVERLAP_CHUNK`] grid,
-/// co-scheduling one combine+update chunk per remaining drive slice (the
-/// transport session must be open, at quorum), so stragglers keep
+/// co-scheduling up to `window` combine+update chunks per remaining drive
+/// slice (the transport session must be open, at quorum;
+/// `CoordinatorOptions::overlap_window`, default 1), so stragglers keep
 /// computing while the aggregate is applied. Late gradients land in
 /// `last_good` **only** — never the frozen round matrix — so the round's
 /// output is bit-identical to [`fused_combine_update`] (combine is
@@ -219,9 +220,11 @@ fn prefix_combine_update(
     opt: &mut Sgd,
     last_good: &mut [Option<Vec<f32>>],
     shards: &mut Vec<CombineScratch>,
+    window: usize,
 ) -> Result<PrefixOutcome> {
     sel.validate(grads)?;
     check_update_shapes(grads, agg, params, opt)?;
+    let window = window.max(1);
     let d = grads.d();
     let lr = opt.lr();
     let mu = opt.momentum();
@@ -240,32 +243,38 @@ fn prefix_combine_update(
     let mut late_malformed = 0u64;
     let v0 = server.collect_virtual_us();
     {
-        let aux = |/* one grid chunk per drive slice */| {
-            let c = cursor.fetch_add(1, Ordering::Relaxed);
-            if c >= chunks {
-                return;
-            }
-            let start = c * OVERLAP_CHUNK;
-            let end = (start + OVERLAP_CHUNK).min(d);
-            // Shard-range disjointness: the cursor-derived chunk must
-            // stay inside the d-length vectors.
-            crate::strict_assert!(start < d && end <= d);
-            // SAFETY: chunk `c` exclusively owns coordinates
-            // `[start, end)` of all three vectors — the cursor hands out
-            // each chunk at most once, at most one aux task runs per
-            // drive slice (slices are separated by the fan-out barrier
-            // inside `collect_step_aux`), and the drain pass below only
-            // touches chunks the cursor never handed out. The vectors
-            // outlive the session loop, which completes before this
-            // function returns.
-            let len = end - start;
-            let agg_r = unsafe { std::slice::from_raw_parts_mut(agg_ptr.get().add(start), len) };
-            let p_r = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(start), len) };
-            let v_r = unsafe { std::slice::from_raw_parts_mut(v_ptr.get().add(start), len) };
-            let mut cs = cs.lock().unwrap_or_else(|e| e.into_inner());
-            let skip = combine_update_range(sel, grads, start, agg_r, p_r, v_r, lr, mu, &mut cs);
-            if skip > 0 {
-                skipped.fetch_add(skip, Ordering::Relaxed);
+        let aux = |/* up to `window` grid chunks per drive slice */| {
+            for _ in 0..window {
+                let c = cursor.fetch_add(1, Ordering::Relaxed);
+                if c >= chunks {
+                    return;
+                }
+                let start = c * OVERLAP_CHUNK;
+                let end = (start + OVERLAP_CHUNK).min(d);
+                // Shard-range disjointness: the cursor-derived chunk must
+                // stay inside the d-length vectors.
+                crate::strict_assert!(start < d && end <= d);
+                // SAFETY: chunk `c` exclusively owns coordinates
+                // `[start, end)` of all three vectors — the cursor hands
+                // out each chunk at most once (the window loop claims
+                // each of its chunks through the same fetch_add), at
+                // most one aux task runs per drive slice (slices are
+                // separated by the fan-out barrier inside
+                // `collect_step_aux`), and the drain pass below only
+                // touches chunks the cursor never handed out. The
+                // vectors outlive the session loop, which completes
+                // before this function returns.
+                let len = end - start;
+                let agg_r =
+                    unsafe { std::slice::from_raw_parts_mut(agg_ptr.get().add(start), len) };
+                let p_r = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(start), len) };
+                let v_r = unsafe { std::slice::from_raw_parts_mut(v_ptr.get().add(start), len) };
+                let mut cs = cs.lock().unwrap_or_else(|e| e.into_inner());
+                let skip =
+                    combine_update_range(sel, grads, start, agg_r, p_r, v_r, lr, mu, &mut cs);
+                if skip > 0 {
+                    skipped.fetch_add(skip, Ordering::Relaxed);
+                }
             }
         };
         // Late-acceptance window: lift the quorum cap and keep slicing the
@@ -356,6 +365,14 @@ pub struct CoordinatorOptions {
     /// a straggler salvaged by the overlap window only changes *later*
     /// rounds' fallback).
     pub overlap: OverlapMode,
+    /// How many combine grid chunks the prefix overlap applies per drive
+    /// slice (`overlap_window` config knob, ≥ 1). The default 1 keeps
+    /// the original one-aux-task-per-slice pacing — maximum straggler
+    /// salvage; larger windows drain the combine grid faster at the cost
+    /// of a shorter late-acceptance window. Bit-identity is unaffected
+    /// (the grid itself never changes, only how many chunks each slice
+    /// claims).
+    pub overlap_window: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -366,6 +383,7 @@ impl Default for CoordinatorOptions {
             seed: 1,
             collect: CollectMode::All,
             overlap: OverlapMode::Off,
+            overlap_window: 1,
         }
     }
 }
@@ -734,6 +752,7 @@ impl Coordinator {
                 &mut self.opt,
                 &mut self.last_good,
                 &mut self.scratch.shards,
+                self.options.overlap_window,
             )?;
             overlap_saved_us = out.saved_us;
             self.metrics.add("overlap_saved_us", out.saved_us);
@@ -854,6 +873,7 @@ mod tests {
                 seed: 3,
                 collect: CollectMode::All,
                 overlap: OverlapMode::Off,
+                overlap_window: 1,
             },
         )
         .unwrap();
@@ -1234,8 +1254,10 @@ mod tests {
         // late-acceptance window (3 chunks at d = 9000 ⇒ 150 virtual µs),
         // so the caches stay identical too and the equality holds across
         // rounds; the prefix run must also report drive progress
-        // overlapped with the combine tail.
-        let run = |overlap: OverlapMode| -> (Vec<f32>, u64) {
+        // overlapped with the combine tail. The `overlap_window` knob
+        // (chunks claimed per drive slice) only re-buckets the same grid,
+        // so every window value must land on the same parameters too.
+        let run = |overlap: OverlapMode, window: usize| -> (Vec<f32>, u64) {
             let problem = Arc::new(QuadraticProblem::new(9_000, 0.05, 7));
             let faults = FaultModel {
                 cost: crate::transport::ComputeCost {
@@ -1267,6 +1289,7 @@ mod tests {
                     seed: 3,
                     collect: CollectMode::FirstM,
                     overlap,
+                    overlap_window: window,
                 },
             )
             .unwrap();
@@ -1281,14 +1304,18 @@ mod tests {
             coord.shutdown();
             (params, saved)
         };
-        let (p_off, saved_off) = run(OverlapMode::Off);
-        let (p_prefix, saved_prefix) = run(OverlapMode::Prefix);
+        let (p_off, saved_off) = run(OverlapMode::Off, 1);
+        let (p_prefix, saved_prefix) = run(OverlapMode::Prefix, 1);
         assert_eq!(p_off, p_prefix, "prefix overlap must not change the model");
         assert_eq!(saved_off, 0);
         assert!(
             saved_prefix > 0,
             "prefix overlap must report drive progress during the combine tail"
         );
+        for window in [2usize, 8, 1024] {
+            let (p_w, _) = run(OverlapMode::Prefix, window);
+            assert_eq!(p_off, p_w, "overlap_window={window} must not change the model");
+        }
         // The straggler cache must be equally (un)populated: no late
         // arrival fits the window, so no run salvages anything.
         // (Divergence here would leak into round ≥ 2 parameters, which

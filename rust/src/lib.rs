@@ -100,6 +100,7 @@
 
 pub mod attacks;
 pub mod bench;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -78,6 +78,7 @@ pub const FLOAT_REDUCE_SCOPE: &[&str] = &[
     "rust/src/attacks/",
     "rust/src/metrics/",
     "rust/src/data/",
+    "rust/src/codec/",
 ];
 
 /// Files exempt from float-reduce: the designated reducers themselves.

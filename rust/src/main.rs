@@ -5,14 +5,14 @@
 //! multibulyan train [--config FILE] [--gar G] [--attack A] [--n N] [--f F]
 //!                   [--byzantine B] [--model M] [--steps S] [--batch-size B]
 //!                   [--lr LR] [--momentum MU] [--eval-every K] [--seed S]
-//!                   [--transport threaded|pooled|socket]
+//!                   [--transport threaded|pooled|socket] [--codec C]
 //!                   [--socket-listen ADDR] [--socket-chunk K]
 //!                   [--artifacts DIR] [--curve-out FILE]
 //! multibulyan worker --connect ADDR --worker-id K [--dim D] [--noise X]
-//!                   [--seed S] [--batch-size B] [--chunk K]
+//!                   [--seed S] [--batch-size B] [--chunk K] [--codec C]
 //! multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D]
-//! multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|cone> [--full]
-//!                   [--artifacts DIR]
+//! multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|codec|cone>
+//!                   [--full] [--artifacts DIR]
 //! multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
 //! multibulyan artifacts-check [--artifacts DIR]
 //! ```
@@ -91,15 +91,17 @@ USAGE:
                     [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
                     [--eval-every K] [--seed S] [--threads T]
                     [--transport threaded|pooled|socket] [--collect first-m|all]
-                    [--overlap off|prefix] [--params-checksum]
+                    [--overlap off|prefix] [--overlap-window W]
+                    [--codec off|raw|lossless|fp16|int8|topk]
+                    [--params-checksum]
                     [--socket-listen ADDR] [--socket-chunk K]
                     [--artifacts DIR] [--curve-out FILE]
   multibulyan worker --connect ADDR --worker-id K [--dim D] [--noise X]
                     [--seed S] [--batch-size B] [--chunk K]
-                    [--retry-ms MS]
+                    [--codec off|raw|lossless|fp16|int8|topk] [--retry-ms MS]
   multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
   multibulyan bench <fig2|fig3|dscaling|slowdown|threads|straggler
-                     |resilience|cone> [--full] [--artifacts DIR]
+                     |resilience|codec|cone> [--full] [--artifacts DIR]
   multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
   multibulyan artifacts-check [--artifacts DIR]
   multibulyan lint [--root DIR] [--list]
@@ -137,8 +139,20 @@ Overlap: --overlap off (default; collect, then select, then combine) |
          bit-identical to off, and a straggler finishing inside the
          overlap window is salvaged into the last-good cache — a
          fresher fallback for later rounds than off's older-or-zero row)
+         --overlap-window W claims W combine chunks per drive slice
+         (default 1 — the longest late-acceptance window; any value is
+         bit-identical, the knob only paces the prefix tail)
          --params-checksum prints an FNV-1a digest of the final
          parameters (the CI determinism-matrix probe)
+Codec:   --codec off (default; raw f32 gradient frames) | raw (identity
+         encoding through the codec path — bit-identical to off) |
+         lossless (byte-shuffle + RLE, bit-exact) | fp16 | int8 (per-block
+         quantization) | topk (top-k sparsification with per-worker error
+         feedback). Lossy codecs trade gradient fidelity for bytes on the
+         wire — see `bench codec` and docs/wire-protocol.md §7. The
+         worker command's --codec must be accepted by the coordinator
+         (Hello capability negotiation); unknown names are rejected
+         up front with the valid list
 Lint:    `lint` runs the repo-specific invariant linter over rust/src,
          rust/tests and examples/ (unsafe audit, wall-clock, pool-only
          parallelism, hash-iteration, float-reduction rules); exits
@@ -228,6 +242,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 transport: Default::default(),
                 collect: Default::default(),
                 overlap: Default::default(),
+                overlap_window: 1,
+                codec: None,
                 output_dir: None,
             }
         }
@@ -246,6 +262,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(o) = args.get("overlap") {
         exp.overlap = o.parse()?;
+    }
+    if let Some(w) = args.get("overlap-window") {
+        exp.overlap_window = w
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--overlap-window {w}: {e}"))?;
+    }
+    if let Some(c) = args.get("codec") {
+        exp.codec = match c {
+            "off" => None,
+            _ => Some(c.parse()?),
+        };
     }
     if let Some(addr) = args.get("socket-listen") {
         exp.cluster.socket_listen = Some(addr.to_string());
@@ -267,7 +294,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let handle = compute.as_ref().map(|(s, m)| (s.handle(), m.clone()));
     println!(
         "training: gar={} attack={} n={} f={} byz={} steps={} b={} transport={} collect={} \
-         overlap={}",
+         overlap={} codec={}",
         exp.gar_spec(),
         exp.attack.label(),
         exp.cluster.n,
@@ -277,7 +304,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         exp.train.batch_size,
         exp.transport,
         exp.collect,
-        exp.overlap
+        exp.overlap,
+        exp.codec.map_or("off", |c| c.as_str())
     );
     let cluster = launch(&exp, handle)?;
     let mut coordinator = cluster.coordinator;
@@ -333,6 +361,10 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let chunk: usize = args.parse_or("chunk", socket::DEFAULT_CHUNK)?;
     let retry_ms: u64 = args.parse_or("retry-ms", 5_000)?;
     anyhow::ensure!(chunk >= 1, "--chunk must be ≥ 1");
+    let codec = match args.get("codec") {
+        None | Some("off") => None,
+        Some(name) => Some(name.parse::<multibulyan::codec::CodecKind>()?),
+    };
 
     // Mirror the coordinator's problem construction (ModelConfig::Quadratic
     // + train.seed in coordinator::launch): gradients are counter-seeded
@@ -345,7 +377,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // roughly --retry-ms before giving up.
     let mut waited = 0u64;
     let client = loop {
-        match socket::connect(addr, worker_id, chunk) {
+        match socket::connect(addr, worker_id, chunk, codec.unwrap_or_default()) {
             Ok(c) => break c,
             Err(e) if waited >= retry_ms => {
                 anyhow::bail!("worker {worker_id}: cannot connect to {addr}: {e:#}")
@@ -356,8 +388,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
             }
         }
     };
-    eprintln!("worker {worker_id}: connected to {addr} (dim={dim} chunk={chunk})");
-    client.run_streaming(GradWorker::new(source))
+    eprintln!(
+        "worker {worker_id}: connected to {addr} (dim={dim} chunk={chunk} codec={})",
+        codec.unwrap_or_default().as_str()
+    );
+    client.run_streaming(GradWorker::with_codec(source, codec))
 }
 
 fn cmd_aggregate(args: &Args) -> Result<()> {
@@ -493,13 +528,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let cfg = bench::resilience::GauntletConfig::default();
             bench::resilience::run(&cfg, false)?;
         }
+        "codec" => {
+            // Codec × GAR × attack sweep: bytes/round, encode/decode µs,
+            // rounds-to-target-loss and selection precision/recall per
+            // wire codec; --full widens the grid to the whole gauntlet.
+            let mut cfg = bench::codec::CodecBenchConfig::default();
+            if full {
+                cfg.attacks = {
+                    let mut a = vec![multibulyan::attacks::AttackKind::None];
+                    a.extend(multibulyan::attacks::AttackKind::gauntlet());
+                    a
+                };
+            }
+            bench::codec::run(&cfg, false)?;
+        }
         "cone" => {
             let cfg = bench::cone::ConeConfig::default();
             bench::cone::run(&cfg, false)?;
         }
         other => anyhow::bail!(
             "unknown bench '{other}' \
-             (fig2|fig3|dscaling|slowdown|threads|straggler|resilience|cone|check)"
+             (fig2|fig3|dscaling|slowdown|threads|straggler|resilience|codec|cone|check)"
         ),
     }
     Ok(())

@@ -95,8 +95,26 @@ pub struct FromWorker {
     /// Round the gradient was computed for (stale rounds are discarded
     /// by the collect session).
     pub round: u64,
-    /// The proposed gradient.
+    /// The proposed gradient (empty when `coded` carries the payload).
     pub gradient: Vec<f32>,
+    /// Set when the gradient crossed the transport in encoded form
+    /// ([`Emitter::send_coded`] with a non-raw codec): the server decodes
+    /// it at delivery and rejects a failing payload without letting it
+    /// occupy a first-m quorum slot.
+    pub coded: Option<CodedGradient>,
+}
+
+/// An encoded gradient payload in flight (the threaded backend's channel
+/// message; the pooled backend stores the same triple in its arena slot
+/// and the socket backend tags each GradientChunk frame instead).
+#[derive(Debug, Clone)]
+pub struct CodedGradient {
+    /// Codec the bytes were produced by (decides [`crate::codec::decode`]).
+    pub codec: crate::codec::CodecKind,
+    /// Number of f32 coordinates the payload must decode to.
+    pub count: usize,
+    /// The encoded payload.
+    pub bytes: Vec<u8>,
 }
 
 /// Network fault model (applied on the worker → server direction, where a
@@ -391,13 +409,8 @@ impl Emitter<'_> {
     /// pooled backend copies into a preallocated arena slot (no
     /// allocation in the steady state).
     pub fn send(&mut self, round: u64, gradient: &[f32]) {
-        if self.faults.drop_prob > 0.0 && self.rng.gen_bool(self.faults.drop_prob) {
+        if !self.faults_pass() {
             return; // dropped on the (simulated) wire
-        }
-        if self.faults.delay_us > 0 {
-            let jitter = self.rng.gen_range_f32(0.5, 1.5);
-            let us = (self.faults.delay_us as f32 * jitter) as u64;
-            std::thread::sleep(Duration::from_micros(us));
         }
         match &mut self.sink {
             EmitterSink::Channel(tx) => {
@@ -405,6 +418,7 @@ impl Emitter<'_> {
                     worker: self.worker,
                     round,
                     gradient: gradient.to_vec(),
+                    coded: None,
                 });
             }
             EmitterSink::Slot(slot) => {
@@ -415,6 +429,7 @@ impl Emitter<'_> {
                 if !s.fresh || round >= s.round {
                     s.round = round;
                     s.fresh = true;
+                    s.coded = None;
                     s.grad.clear();
                     s.grad.extend_from_slice(gradient);
                 }
@@ -428,6 +443,84 @@ impl Emitter<'_> {
                 socket::send_gradient_frames(stream, *worker, round, gradient, *chunk, scratch);
             }
         }
+    }
+
+    /// [`send`](Self::send) through a gradient codec (the `codec` config
+    /// knob): `None` or a raw encoder is plain `send`; otherwise the
+    /// gradient crosses the transport encoded and the server decodes it
+    /// at delivery. The fault model is applied *before* encoding so a
+    /// dropped message never advances stateful codec state (the `topk`
+    /// error-feedback residual banks a dropped round's values only when
+    /// the encoder actually ran — a drop leaves the residual untouched,
+    /// exactly like a worker that never got to send).
+    pub fn send_coded(
+        &mut self,
+        round: u64,
+        gradient: &[f32],
+        codec: Option<&mut dyn crate::codec::Codec>,
+    ) {
+        let Some(codec) = codec else {
+            return self.send(round, gradient);
+        };
+        if codec.kind() == crate::codec::CodecKind::Raw {
+            return self.send(round, gradient);
+        }
+        if !self.faults_pass() {
+            return; // dropped on the (simulated) wire, pre-encode
+        }
+        match &mut self.sink {
+            EmitterSink::Channel(tx) => {
+                let mut bytes = Vec::new();
+                codec.encode(0, gradient, &mut bytes);
+                let _ = tx.send(FromWorker {
+                    worker: self.worker,
+                    round,
+                    gradient: Vec::new(),
+                    coded: Some(CodedGradient {
+                        codec: codec.kind(),
+                        count: gradient.len(),
+                        bytes,
+                    }),
+                });
+            }
+            EmitterSink::Slot(slot) => {
+                let mut s = lock(slot);
+                // Same freshness rule as `send`; the encoded bytes land in
+                // the slot's `enc` buffer and are decoded into `grad` by
+                // the server at delivery.
+                if !s.fresh || round >= s.round {
+                    s.round = round;
+                    s.fresh = true;
+                    s.grad.clear();
+                    codec.encode(0, gradient, &mut s.enc);
+                    s.coded = Some((codec.kind(), gradient.len()));
+                }
+            }
+            EmitterSink::Frame {
+                stream,
+                worker,
+                chunk,
+                scratch,
+            } => {
+                socket::send_gradient_frames_coded(
+                    stream, *worker, round, gradient, *chunk, codec, scratch,
+                );
+            }
+        }
+    }
+
+    /// Apply the fault model: `false` means the message is dropped;
+    /// otherwise the (jittered) delay has been slept out.
+    fn faults_pass(&mut self) -> bool {
+        if self.faults.drop_prob > 0.0 && self.rng.gen_bool(self.faults.drop_prob) {
+            return false;
+        }
+        if self.faults.delay_us > 0 {
+            let jitter = self.rng.gen_range_f32(0.5, 1.5);
+            let us = (self.faults.delay_us as f32 * jitter) as u64;
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        true
     }
 }
 
@@ -596,6 +689,7 @@ impl ServerEndpoint {
                 worker,
                 round,
                 gradient: gradient.to_vec(),
+                coded: None,
             });
             true
         });

@@ -81,10 +81,34 @@ pub(crate) const SLICE_US: u64 = 50;
 /// One worker's arena slot: the last gradient it emitted, tagged with the
 /// round it answers. `fresh` is cleared when the server consumes the slot
 /// so a gradient is delivered at most once (mirrors message consumption).
+/// Under a non-raw gradient codec ([`super::Emitter::send_coded`])
+/// the payload lands encoded in `enc` (tagged by `coded`) and the server
+/// decodes it into `grad` in place at delivery — both buffers are arena
+/// memory, reused across rounds.
 pub(super) struct GradSlot {
     pub(super) round: u64,
     pub(super) fresh: bool,
     pub(super) grad: Vec<f32>,
+    /// Encoded payload buffer (empty on the raw path).
+    pub(super) enc: Vec<u8>,
+    /// `Some((codec, coordinate count))` when `enc` carries the payload.
+    pub(super) coded: Option<(crate::codec::CodecKind, usize)>,
+}
+
+/// Consume a fresh slot: clears `fresh` and, when the payload crossed
+/// encoded, decodes it into `grad` in place. Returns whether `grad` now
+/// holds a deliverable gradient — a payload that fails decode is consumed
+/// *silently* (no callback, no quorum slot), the in-process analogue of
+/// the socket transport's CODEC reject.
+fn slot_gradient(slot: &mut GradSlot) -> bool {
+    slot.fresh = false;
+    match slot.coded.take() {
+        None => true,
+        Some((codec, count)) => {
+            slot.grad.clear();
+            crate::codec::decode(codec, 0, count, &slot.enc, &mut slot.grad).is_ok()
+        }
+    }
 }
 
 /// A registered logical worker: its body plus its private fault RNG
@@ -327,11 +351,12 @@ impl Server {
                     break;
                 }
                 let mut slot = lock(&cell.slot);
-                if slot.fresh && slot.round == sess.round {
-                    slot.fresh = false;
-                    if on_gradient(i, &slot.grad) {
-                        sess.accepted += 1;
-                    }
+                if slot.fresh
+                    && slot.round == sess.round
+                    && slot_gradient(&mut slot)
+                    && on_gradient(i, &slot.grad)
+                {
+                    sess.accepted += 1;
                 }
             }
         }
@@ -393,11 +418,12 @@ fn deliver_ready(
             break;
         };
         let mut slot = lock(&rt.cells[i].slot);
-        if slot.fresh && slot.round == sess.round {
-            slot.fresh = false;
-            if on_gradient(i, &slot.grad) {
-                sess.accepted += 1;
-            }
+        if slot.fresh
+            && slot.round == sess.round
+            && slot_gradient(&mut slot)
+            && on_gradient(i, &slot.grad)
+        {
+            sess.accepted += 1;
         }
     }
     // Quorum-slot accounting: delivery never overshoots the cap.
@@ -438,6 +464,8 @@ pub(super) fn star(
                 round: 0,
                 fresh: false,
                 grad: Vec::new(),
+                enc: Vec::new(),
+                coded: None,
             }),
         })
         .collect();

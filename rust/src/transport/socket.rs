@@ -57,8 +57,10 @@ use std::time::{Duration, Instant};
 pub const MAGIC: [u8; 4] = *b"MBWP";
 
 /// Protocol version carried in every frame header (§5.2). A server
-/// receiving any other version rejects the connection.
-pub const VERSION: u16 = 1;
+/// receiving any other version rejects the connection. Version 2 added
+/// gradient-codec negotiation (§7): a Hello capability byte, and a
+/// `count`/`codec` prefix on every GradientChunk payload.
+pub const VERSION: u16 = 2;
 
 /// Fixed frame-header length in bytes (§2).
 pub const HEADER_LEN: usize = 32;
@@ -86,14 +88,17 @@ const ACCEPT_TICK: Duration = Duration::from_millis(1);
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum PayloadKind {
-    /// Worker → server registration (§4.1): worker id in the header,
-    /// empty payload. The server acks with a Hello back.
+    /// Worker → server registration (§4.1): worker id in the header;
+    /// the payload is empty (codec `raw`, §7) or one codec capability
+    /// byte. The server acks with a Hello back.
     Hello = 1,
     /// Server → worker round start (§4.2): payload is the full parameter
     /// vector as little-endian f32s.
     RoundResult = 2,
-    /// Worker → server gradient piece (§4.3): payload is
-    /// `offset u32 | total u32 | f32 × k`, all little-endian.
+    /// Worker → server gradient piece (§4.3, §7): payload is
+    /// `offset u32 | total u32 | count u32 | codec u8 | encoded bytes`,
+    /// integers little-endian; `count` is the number of f32 coordinates
+    /// the encoded bytes decode to.
     GradientChunk = 3,
     /// Server → worker refusal (§4.4): payload is one reason-code byte
     /// (the `REJECT_*` constants).
@@ -178,6 +183,12 @@ pub const REJECT_DUPLICATE: u8 = 5;
 /// Reject reason (§4.4): structurally invalid payload or chunk sequence
 /// (bad offset/total bookkeeping, non-f32-aligned length, …).
 pub const REJECT_MALFORMED: u8 = 6;
+/// Reject reason (§4.4, §7): unknown codec id, a chunk codec other than
+/// the negotiated one (or `raw`), or an encoded payload that failed
+/// decode — including the suspicious-expansion-ratio guard. The chunk
+/// never reaches the collect session, so it cannot occupy a first-m
+/// quorum slot.
+pub const REJECT_CODEC: u8 = 7;
 
 /// Human-readable name of a Reject reason code (§4.4).
 pub fn reject_reason_str(code: u8) -> &'static str {
@@ -188,6 +199,7 @@ pub fn reject_reason_str(code: u8) -> &'static str {
         REJECT_BAD_WORKER => "worker id out of range",
         REJECT_DUPLICATE => "worker id already connected",
         REJECT_MALFORMED => "malformed payload",
+        REJECT_CODEC => "codec negotiation or decode failure",
         _ => "unknown reason",
     }
 }
@@ -343,20 +355,27 @@ pub fn parse_params(payload: &[u8]) -> anyhow::Result<Vec<f32>> {
         .collect())
 }
 
-/// Split a GradientChunk payload into `(offset, total, value_bytes)`
-/// (§4.3); `None` if the length bookkeeping is structurally invalid.
-fn parse_chunk(payload: &[u8]) -> Option<(u32, u32, &[u8])> {
-    if payload.len() < 8 || (payload.len() - 8) % 4 != 0 {
+/// Length of the GradientChunk payload prefix (§4.3):
+/// `offset u32 | total u32 | count u32 | codec u8`.
+const CHUNK_PREFIX: usize = 13;
+
+/// Split a GradientChunk payload into
+/// `(offset, total, count, codec_id, encoded_bytes)` (§4.3, §7);
+/// `None` if the payload is too short to carry the prefix.
+fn parse_chunk(payload: &[u8]) -> Option<(u32, u32, u32, u8, &[u8])> {
+    if payload.len() < CHUNK_PREFIX {
         return None;
     }
     let offset = u32::from_le_bytes(payload[0..4].try_into().ok()?);
     let total = u32::from_le_bytes(payload[4..8].try_into().ok()?);
-    Some((offset, total, &payload[8..]))
+    let count = u32::from_le_bytes(payload[8..12].try_into().ok()?);
+    let codec = payload[12];
+    Some((offset, total, count, codec, &payload[CHUNK_PREFIX..]))
 }
 
-/// Write one GradientChunk frame for `values` at `offset` of a
-/// `total`-coordinate gradient, reusing `scratch` as the frame buffer —
-/// one `write_all` per frame, no full-gradient allocation (§4.3).
+/// Write one raw-codec GradientChunk frame for `values` at `offset` of
+/// a `total`-coordinate gradient, reusing `scratch` as the frame buffer
+/// — one `write_all` per frame, no full-gradient allocation (§4.3).
 pub fn write_chunk_frame<W: Write>(
     w: &mut W,
     worker: u32,
@@ -367,13 +386,52 @@ pub fn write_chunk_frame<W: Write>(
     scratch: &mut Vec<u8>,
 ) -> std::io::Result<()> {
     scratch.clear();
-    scratch.reserve(HEADER_LEN + 8 + values.len() * 4);
+    scratch.reserve(HEADER_LEN + CHUNK_PREFIX + values.len() * 4);
     scratch.extend_from_slice(&[0u8; HEADER_LEN]);
     scratch.extend_from_slice(&offset.to_le_bytes());
     scratch.extend_from_slice(&total.to_le_bytes());
+    scratch.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    scratch.push(crate::codec::CodecKind::Raw.wire_id());
     for v in values {
         scratch.extend_from_slice(&v.to_le_bytes());
     }
+    finish_chunk_frame(w, worker, round, scratch)
+}
+
+/// Write one GradientChunk frame whose value bytes were already encoded
+/// by `codec` (`count` coordinates at absolute `offset`) — the §7 coded
+/// path of [`send_gradient_frames_coded`] and `WorkerClient::run_streaming`.
+#[allow(clippy::too_many_arguments)] // mirrors the §4.3 payload prefix field-for-field
+pub fn write_coded_chunk_frame<W: Write>(
+    w: &mut W,
+    worker: u32,
+    round: u64,
+    offset: u32,
+    total: u32,
+    count: u32,
+    codec: u8,
+    encoded: &[u8],
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    scratch.clear();
+    scratch.reserve(HEADER_LEN + CHUNK_PREFIX + encoded.len());
+    scratch.extend_from_slice(&[0u8; HEADER_LEN]);
+    scratch.extend_from_slice(&offset.to_le_bytes());
+    scratch.extend_from_slice(&total.to_le_bytes());
+    scratch.extend_from_slice(&count.to_le_bytes());
+    scratch.push(codec);
+    scratch.extend_from_slice(encoded);
+    finish_chunk_frame(w, worker, round, scratch)
+}
+
+/// Checksum + header over an assembled chunk payload in `scratch`
+/// (header space already reserved at the front), then write and flush.
+fn finish_chunk_frame<W: Write>(
+    w: &mut W,
+    worker: u32,
+    round: u64,
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<()> {
     let sum = fnv1a(scratch[HEADER_LEN..].iter().copied());
     let len = (scratch.len() - HEADER_LEN) as u32;
     write_header(
@@ -388,8 +446,8 @@ pub fn write_chunk_frame<W: Write>(
     w.flush()
 }
 
-/// Send one complete gradient as a chunk sequence (§4.3); used by the
-/// shared [`Emitter`] sink. A write error means the server is gone —
+/// Send one complete gradient as a raw chunk sequence (§4.3); used by
+/// the shared [`Emitter`] sink. A write error means the server is gone —
 /// the worker falls silent, indistinguishable from a crash (§6.4).
 pub(super) fn send_gradient_frames(
     stream: &mut Stream,
@@ -411,6 +469,50 @@ pub(super) fn send_gradient_frames(
             offset as u32,
             total,
             &gradient[offset..end],
+            scratch,
+        )
+        .is_err()
+        {
+            return;
+        }
+        offset = end;
+        if offset >= gradient.len() {
+            break;
+        }
+    }
+}
+
+/// Send one complete gradient as a coded chunk sequence (§7): each chunk
+/// is encoded at its absolute coordinate offset, so the server-side
+/// decode reassembles the exact values a whole-gradient encode would
+/// have produced as long as the chunk size is a multiple of
+/// [`crate::codec::BLOCK`] (the default [`DEFAULT_CHUNK`] is).
+pub(super) fn send_gradient_frames_coded(
+    stream: &mut Stream,
+    worker: u32,
+    round: u64,
+    gradient: &[f32],
+    chunk: usize,
+    codec: &mut dyn crate::codec::Codec,
+    scratch: &mut Vec<u8>,
+) {
+    let chunk = chunk.max(1);
+    let total = gradient.len() as u32;
+    let id = codec.kind().wire_id();
+    let mut enc = Vec::new();
+    let mut offset = 0usize;
+    loop {
+        let end = (offset + chunk).min(gradient.len());
+        codec.encode(offset, &gradient[offset..end], &mut enc);
+        if write_coded_chunk_frame(
+            stream,
+            worker,
+            round,
+            offset as u32,
+            total,
+            (end - offset) as u32,
+            id,
+            &enc,
             scratch,
         )
         .is_err()
@@ -634,6 +736,10 @@ pub struct SocketOptions {
     /// `WorkerEndpoint::serve` is a no-op; `false` (default): `serve`
     /// spawns an in-process client thread per worker.
     pub external: bool,
+    /// Gradient codec the in-process clients announce at Hello (§7) —
+    /// the `codec` config knob. External worker processes negotiate
+    /// their own capability via `multibulyan worker --codec`.
+    pub codec: crate::codec::CodecKind,
 }
 
 impl Default for SocketOptions {
@@ -642,6 +748,7 @@ impl Default for SocketOptions {
             listen: None,
             chunk: DEFAULT_CHUNK,
             external: false,
+            codec: crate::codec::CodecKind::Raw,
         }
     }
 }
@@ -718,7 +825,9 @@ fn send_reject(shared: &Shared, worker: usize, round: u64, reason: u8) {
 
 /// In-order reassembly of one worker's chunked gradient (§4.3, §6.3):
 /// chunks must arrive at offset 0 first and strictly in order; a round
-/// change or any bookkeeping violation resets the assembly.
+/// change or any bookkeeping violation resets the assembly. Encoded
+/// chunks (§7) are decoded straight into the assembly buffer — the
+/// server never materializes the encoded gradient.
 #[derive(Default)]
 struct ChunkAssembly {
     round: u64,
@@ -731,6 +840,10 @@ enum Feed {
     Partial,
     Complete(Vec<f32>),
     Malformed,
+    /// Unknown codec id, a codec other than the negotiated one (or
+    /// `raw`), or a payload that failed decode (§7) — rejected with
+    /// [`REJECT_CODEC`], never reaching the collect session.
+    Codec,
 }
 
 impl ChunkAssembly {
@@ -739,34 +852,53 @@ impl ChunkAssembly {
         self.buf.clear();
     }
 
-    fn feed(&mut self, round: u64, payload: &[u8]) -> Feed {
-        let Some((offset, total, bytes)) = parse_chunk(payload) else {
+    fn feed(&mut self, round: u64, payload: &[u8], negotiated: crate::codec::CodecKind) -> Feed {
+        let Some((offset, total, count, codec_id, bytes)) = parse_chunk(payload) else {
             self.reset();
             return Feed::Malformed;
         };
-        if !self.active || round != self.round || total as usize != self.total {
+        let Some(codec) = crate::codec::CodecKind::from_wire(codec_id) else {
+            self.reset();
+            return Feed::Codec;
+        };
+        // A chunk may use only the Hello-negotiated codec; `raw` is
+        // always acceptable (§7).
+        if codec != negotiated && codec != crate::codec::CodecKind::Raw {
+            self.reset();
+            return Feed::Codec;
+        }
+        let (offset, total, count) = (offset as usize, total as usize, count as usize);
+        // Allocation guard: the claimed coordinate counts are bounded by
+        // what a maximal raw payload could carry before `reserve` runs —
+        // a tiny encoded frame cannot command a huge allocation (the
+        // per-payload expansion itself is bounded by the codec layer's
+        // suspicious-ratio guard).
+        if count > MAX_PAYLOAD as usize / 4 || total > MAX_PAYLOAD as usize / 4 {
+            self.reset();
+            return Feed::Malformed;
+        }
+        if codec == crate::codec::CodecKind::Raw && bytes.len() != count * 4 {
+            self.reset();
+            return Feed::Malformed;
+        }
+        if !self.active || round != self.round || total != self.total {
             // A new gradient begins; it must begin at offset 0 (§4.3).
             if offset != 0 {
                 self.reset();
                 return Feed::Malformed;
             }
             self.round = round;
-            self.total = total as usize;
+            self.total = total;
             self.active = true;
             self.buf.clear();
         }
-        if offset as usize != self.buf.len() {
+        if offset != self.buf.len() || self.buf.len() + count > self.total {
             self.reset();
             return Feed::Malformed;
         }
-        let k = bytes.len() / 4;
-        if self.buf.len() + k > self.total {
+        if crate::codec::decode(codec, offset, count, bytes, &mut self.buf).is_err() {
             self.reset();
-            return Feed::Malformed;
-        }
-        self.buf.reserve(k);
-        for c in bytes.chunks_exact(4) {
-            self.buf.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            return Feed::Codec;
         }
         if self.buf.len() == self.total {
             self.active = false;
@@ -795,6 +927,24 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
         return;
     }
     let worker = hello.worker as usize;
+    // Codec negotiation (§7): an empty Hello payload is codec `raw`
+    // (what every pre-§7 client sends); one byte is a capability id.
+    // Anything else — unknown id or an overlong payload — is rejected
+    // with REJECT_CODEC and the connection is closed.
+    let negotiated = match hello.payload.as_slice() {
+        [] => crate::codec::CodecKind::Raw,
+        [id] => match crate::codec::CodecKind::from_wire(*id) {
+            Some(kind) => kind,
+            None => {
+                let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_CODEC));
+                return;
+            }
+        },
+        _ => {
+            let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_CODEC));
+            return;
+        }
+    };
     {
         let mut st = lock(&shared.state);
         if shared.stop.load(Ordering::SeqCst) {
@@ -850,16 +1000,21 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
                         send_reject(shared, worker, f.round, REJECT_MALFORMED);
                         continue;
                     }
-                    match asm.feed(f.round, &f.payload) {
+                    match asm.feed(f.round, &f.payload, negotiated) {
                         Feed::Complete(gradient) => {
                             let _ = shared.tx.send(FromWorker {
                                 worker,
                                 round: f.round,
                                 gradient,
+                                coded: None,
                             });
                         }
                         Feed::Partial => {}
                         Feed::Malformed => send_reject(shared, worker, f.round, REJECT_MALFORMED),
+                        // The §7 rule: a codec failure is rejected like a
+                        // malformed chunk — consumed, answered, and never
+                        // delivered, so it cannot occupy a quorum slot.
+                        Feed::Codec => send_reject(shared, worker, f.round, REJECT_CODEC),
                     }
                 }
                 PayloadKind::Shutdown => break,
@@ -1058,6 +1213,7 @@ pub(super) struct WorkerSlot {
     faults: FaultModel,
     chunk: usize,
     external: bool,
+    codec: crate::codec::CodecKind,
 }
 
 impl WorkerSlot {
@@ -1070,18 +1226,25 @@ impl WorkerSlot {
             drop(body);
             return;
         }
-        spawn_client(self.addr, self.id, self.faults, self.chunk, body);
+        spawn_client(self.addr, self.id, self.faults, self.chunk, self.codec, body);
     }
 }
 
 /// Spawn an in-process client thread: connect, handshake, serve rounds
 /// with `body` until Shutdown/EOF. A body panic kills only this thread
 /// — the connection closes, the server sees a crashed worker (§6.4).
-fn spawn_client(addr: String, worker: usize, faults: FaultModel, chunk: usize, mut body: Box<dyn WorkerBody>) {
+fn spawn_client(
+    addr: String,
+    worker: usize,
+    faults: FaultModel,
+    chunk: usize,
+    codec: crate::codec::CodecKind,
+    mut body: Box<dyn WorkerBody>,
+) {
     std::thread::Builder::new()
         .name(format!("socket-worker-{worker}"))
         .spawn(move || {
-            let Ok(client) = connect(&addr, worker, chunk) else {
+            let Ok(client) = connect(&addr, worker, chunk, codec) else {
                 return;
             };
             let _ = client.run(&mut *body, faults);
@@ -1101,10 +1264,16 @@ pub struct WorkerClient {
     chunk: usize,
 }
 
-/// Connect to a server and register as `worker` (§6.5): sends Hello,
-/// waits for the server's Hello ack. `chunk` is the GradientChunk size
-/// used for outgoing gradients.
-pub fn connect(addr: &str, worker: usize, chunk: usize) -> anyhow::Result<WorkerClient> {
+/// Connect to a server and register as `worker` (§6.5): sends Hello
+/// carrying the codec capability byte (§7), waits for the server's
+/// Hello ack. `chunk` is the GradientChunk size used for outgoing
+/// gradients.
+pub fn connect(
+    addr: &str,
+    worker: usize,
+    chunk: usize,
+    codec: crate::codec::CodecKind,
+) -> anyhow::Result<WorkerClient> {
     let mut stream = connect_stream(addr)?;
     write_frame(
         &mut stream,
@@ -1112,7 +1281,7 @@ pub fn connect(addr: &str, worker: usize, chunk: usize) -> anyhow::Result<Worker
             kind: PayloadKind::Hello,
             round: 0,
             worker: worker as u32,
-            payload: Vec::new(),
+            payload: vec![codec.wire_id()],
         },
     )
     .map_err(|e| anyhow::anyhow!("worker {worker}: sending Hello to {addr}: {e}"))?;
@@ -1178,12 +1347,17 @@ impl WorkerClient {
     /// Serve rounds with a [`GradWorker`](crate::worker::GradWorker),
     /// streaming each gradient chunk as soon as its coordinates are
     /// computed (`GradWorker::stream_round` — a chunk-sized scratch
-    /// instead of a full d-length buffer per send). No fault model:
-    /// this is the real-process path of the `multibulyan worker` CLI.
+    /// instead of a full d-length buffer per send), encoding each chunk
+    /// through the worker's configured codec (§7). No fault model: this
+    /// is the real-process path of the `multibulyan worker` CLI.
     pub fn run_streaming(mut self, mut worker: crate::worker::GradWorker) -> anyhow::Result<()> {
         let id = self.worker;
         let chunk = self.chunk;
         let mut scratch = Vec::new();
+        let mut enc = Vec::new();
+        // The encoder moves out of the GradWorker so the stream closure
+        // below can borrow it alongside the worker's own `&mut self`.
+        let mut codec = worker.take_codec();
         loop {
             let frame = match read_frame(&mut self.stream, None) {
                 Ok(f) => f,
@@ -1195,21 +1369,41 @@ impl WorkerClient {
                     let params = parse_params(&frame.payload)?;
                     let round = frame.round;
                     let stream = &mut self.stream;
+                    let codec = &mut codec;
+                    let enc = &mut enc;
+                    let scratch = &mut scratch;
                     // A failed gradient computation leaves the worker
                     // silent for the round (same policy as on_round); a
                     // partial chunk trail is discarded by the server's
                     // assembly reset on the next round (§4.3).
                     let _ = worker.stream_round(round, &params, chunk, &mut |offset, values, total| {
-                        write_chunk_frame(
-                            stream,
-                            id,
-                            round,
-                            offset as u32,
-                            total as u32,
-                            values,
-                            &mut scratch,
-                        )
-                        .is_ok()
+                        match codec.as_deref_mut() {
+                            None => write_chunk_frame(
+                                stream,
+                                id,
+                                round,
+                                offset as u32,
+                                total as u32,
+                                values,
+                                scratch,
+                            )
+                            .is_ok(),
+                            Some(c) => {
+                                c.encode(offset, values, enc);
+                                write_coded_chunk_frame(
+                                    stream,
+                                    id,
+                                    round,
+                                    offset as u32,
+                                    total as u32,
+                                    values.len() as u32,
+                                    c.kind().wire_id(),
+                                    enc,
+                                    scratch,
+                                )
+                                .is_ok()
+                            }
+                        }
                     });
                 }
                 PayloadKind::Shutdown => return Ok(()),
@@ -1259,6 +1453,7 @@ pub(super) fn star(
             faults,
             chunk,
             external: opts.external,
+            codec: opts.codec,
         })
         .collect();
     Ok((
@@ -1434,10 +1629,14 @@ mod tests {
         );
     }
 
+    use crate::codec::CodecKind;
+
     fn chunk_payload(offset: u32, total: u32, values: &[f32]) -> Vec<u8> {
         let mut p = Vec::new();
         p.extend_from_slice(&offset.to_le_bytes());
         p.extend_from_slice(&total.to_le_bytes());
+        p.extend_from_slice(&(values.len() as u32).to_le_bytes());
+        p.push(CodecKind::Raw.wire_id());
         for v in values {
             p.extend_from_slice(&v.to_le_bytes());
         }
@@ -1448,10 +1647,10 @@ mod tests {
     fn chunk_assembly_reassembles_in_order() {
         let mut asm = ChunkAssembly::default();
         assert!(matches!(
-            asm.feed(4, &chunk_payload(0, 3, &[1.0, 2.0])),
+            asm.feed(4, &chunk_payload(0, 3, &[1.0, 2.0]), CodecKind::Raw),
             Feed::Partial
         ));
-        match asm.feed(4, &chunk_payload(2, 3, &[3.0])) {
+        match asm.feed(4, &chunk_payload(2, 3, &[3.0]), CodecKind::Raw) {
             Feed::Complete(g) => assert_eq!(g, vec![1.0, 2.0, 3.0]),
             _ => panic!("expected completion"),
         }
@@ -1461,28 +1660,111 @@ mod tests {
     fn chunk_assembly_rejects_out_of_order_and_overflow() {
         let mut asm = ChunkAssembly::default();
         // New gradient not starting at 0.
-        assert!(matches!(asm.feed(1, &chunk_payload(4, 8, &[0.0])), Feed::Malformed));
-        // Gap in offsets.
-        assert!(matches!(asm.feed(2, &chunk_payload(0, 4, &[0.0])), Feed::Partial));
-        assert!(matches!(asm.feed(2, &chunk_payload(2, 4, &[0.0])), Feed::Malformed));
-        // More values than `total`.
         assert!(matches!(
-            asm.feed(3, &chunk_payload(0, 1, &[0.0, 0.0])),
+            asm.feed(1, &chunk_payload(4, 8, &[0.0]), CodecKind::Raw),
             Feed::Malformed
         ));
-        // Non-f32-aligned payload.
-        assert!(matches!(asm.feed(4, &[0, 0, 0]), Feed::Malformed));
+        // Gap in offsets.
+        assert!(matches!(
+            asm.feed(2, &chunk_payload(0, 4, &[0.0]), CodecKind::Raw),
+            Feed::Partial
+        ));
+        assert!(matches!(
+            asm.feed(2, &chunk_payload(2, 4, &[0.0]), CodecKind::Raw),
+            Feed::Malformed
+        ));
+        // More values than `total`.
+        assert!(matches!(
+            asm.feed(3, &chunk_payload(0, 1, &[0.0, 0.0]), CodecKind::Raw),
+            Feed::Malformed
+        ));
+        // Payload too short for the chunk prefix.
+        assert!(matches!(asm.feed(4, &[0, 0, 0], CodecKind::Raw), Feed::Malformed));
+        // Raw value bytes disagreeing with the declared count.
+        let mut lying = chunk_payload(0, 2, &[1.0, 2.0]);
+        lying.truncate(lying.len() - 1);
+        assert!(matches!(asm.feed(5, &lying, CodecKind::Raw), Feed::Malformed));
     }
 
     #[test]
     fn chunk_assembly_round_change_resets() {
         let mut asm = ChunkAssembly::default();
-        assert!(matches!(asm.feed(1, &chunk_payload(0, 4, &[1.0])), Feed::Partial));
+        assert!(matches!(
+            asm.feed(1, &chunk_payload(0, 4, &[1.0]), CodecKind::Raw),
+            Feed::Partial
+        ));
         // New round abandons the partial gradient (§6.3).
-        match asm.feed(2, &chunk_payload(0, 1, &[9.0])) {
+        match asm.feed(2, &chunk_payload(0, 1, &[9.0]), CodecKind::Raw) {
             Feed::Complete(g) => assert_eq!(g, vec![9.0]),
             _ => panic!("expected completion"),
         }
+    }
+
+    /// Build a coded chunk payload for `values` at `offset` of `total`
+    /// through a real encoder (the §7 format).
+    fn coded_payload(
+        codec: &mut dyn crate::codec::Codec,
+        offset: u32,
+        total: u32,
+        values: &[f32],
+    ) -> Vec<u8> {
+        let mut enc = Vec::new();
+        codec.encode(offset as usize, values, &mut enc);
+        let mut p = Vec::new();
+        p.extend_from_slice(&offset.to_le_bytes());
+        p.extend_from_slice(&total.to_le_bytes());
+        p.extend_from_slice(&(values.len() as u32).to_le_bytes());
+        p.push(codec.kind().wire_id());
+        p.extend_from_slice(&enc);
+        p
+    }
+
+    #[test]
+    fn chunk_assembly_decodes_negotiated_codec_chunks() {
+        let mut enc = crate::codec::encoder(CodecKind::Lossless);
+        let mut asm = ChunkAssembly::default();
+        let values = [0.0f32, -1.5, 3.25, f32::INFINITY];
+        match asm.feed(
+            1,
+            &coded_payload(enc.as_mut(), 0, 4, &values),
+            CodecKind::Lossless,
+        ) {
+            Feed::Complete(g) => {
+                assert_eq!(g.len(), 4);
+                for (a, b) in g.iter().zip(values.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "lossless bit round-trip");
+                }
+            }
+            _ => panic!("expected completion"),
+        }
+    }
+
+    #[test]
+    fn chunk_assembly_rejects_codec_violations_as_codec_not_malformed() {
+        let mut asm = ChunkAssembly::default();
+        // Unknown codec id.
+        let mut p = chunk_payload(0, 1, &[1.0]);
+        p[12] = 250;
+        assert!(matches!(asm.feed(1, &p, CodecKind::Raw), Feed::Codec));
+        // A codec the connection did not negotiate (fp16 under raw).
+        let mut fp16 = crate::codec::encoder(CodecKind::Fp16);
+        let p = coded_payload(fp16.as_mut(), 0, 2, &[1.0, 2.0]);
+        assert!(matches!(asm.feed(2, &p, CodecKind::Raw), Feed::Codec));
+        // Negotiated codec but an undecodable payload: claim far more
+        // coordinates than the bytes can honestly expand to.
+        let mut p = Vec::new();
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&1_000_000u32.to_le_bytes());
+        p.extend_from_slice(&1_000_000u32.to_le_bytes());
+        p.push(CodecKind::Lossless.wire_id());
+        p.extend_from_slice(&[1, 0]);
+        assert!(matches!(asm.feed(3, &p, CodecKind::Lossless), Feed::Codec));
+        // Raw chunks are always acceptable on a lossy-negotiated
+        // connection (§7).
+        assert!(matches!(
+            asm.feed(4, &chunk_payload(0, 1, &[1.0]), CodecKind::Int8),
+            Feed::Complete(_)
+        ));
     }
 
     #[test]

@@ -47,6 +47,8 @@ pub(super) struct Server {
     to_workers: Vec<mpsc::Sender<ToWorker>>,
     from_workers: mpsc::Receiver<FromWorker>,
     session: Option<Session>,
+    /// Reusable decode buffer for encoded messages (`FromWorker::coded`).
+    decode_scratch: Vec<f32>,
 }
 
 impl Server {
@@ -107,8 +109,25 @@ impl Server {
         match self.from_workers.recv_timeout(wait) {
             Ok(msg) if msg.round == sess.round => {
                 // A rejected gradient (callback returns false) is
-                // consumed but does not fill an `expect` slot.
-                if on_gradient(msg.worker, &msg.gradient) {
+                // consumed but does not fill an `expect` slot — and
+                // neither does an encoded payload that fails decode (the
+                // in-process analogue of the socket CODEC reject).
+                let accepted = match &msg.coded {
+                    None => on_gradient(msg.worker, &msg.gradient),
+                    Some(c) => {
+                        self.decode_scratch.clear();
+                        crate::codec::decode(
+                            c.codec,
+                            0,
+                            c.count,
+                            &c.bytes,
+                            &mut self.decode_scratch,
+                        )
+                        .is_ok()
+                            && on_gradient(msg.worker, &self.decode_scratch)
+                    }
+                };
+                if accepted {
                     sess.accepted += 1;
                 }
                 if sess.accepted >= sess.expect {
@@ -224,6 +243,7 @@ pub(super) fn star(n: usize, faults: FaultModel) -> (Server, Vec<Worker>) {
             to_workers,
             from_workers: up_rx,
             session: None,
+            decode_scratch: Vec::new(),
         },
         workers,
     )

@@ -284,17 +284,41 @@ pub struct GradWorker {
     source: GradSource,
     buf: Vec<f32>,
     step: StepBody,
+    /// Wire codec for outgoing gradients (`None` = raw f32 frames). A
+    /// stateful codec (top-k error feedback) lives here so the residual
+    /// persists across rounds, per worker.
+    codec: Option<Box<dyn crate::codec::Codec>>,
 }
 
 impl GradWorker {
     /// Wrap `source` as a transport-installable body with a reusable
     /// gradient buffer.
     pub fn new(source: GradSource) -> Self {
+        Self::with_codec(source, None)
+    }
+
+    /// Like [`new`](Self::new), but encoding outgoing gradients with
+    /// `codec`. `None` and `Some(Raw)` both mean uncoded frames — raw is
+    /// the identity, so skipping the encoder keeps the pre-codec fast
+    /// path byte-for-byte.
+    pub fn with_codec(source: GradSource, codec: Option<crate::codec::CodecKind>) -> Self {
+        let codec = match codec {
+            None | Some(crate::codec::CodecKind::Raw) => None,
+            Some(kind) => Some(crate::codec::encoder(kind)),
+        };
         Self {
             source,
             buf: Vec::new(),
             step: StepBody::default(),
+            codec,
         }
+    }
+
+    /// Move the codec out of the body (the socket streaming loop encodes
+    /// chunk-by-chunk itself, borrowing the body mutably at the same
+    /// time).
+    pub fn take_codec(&mut self) -> Option<Box<dyn crate::codec::Codec>> {
+        self.codec.take()
     }
 
     /// Stream round `round`'s gradient in `chunk`-coordinate pieces
@@ -373,7 +397,7 @@ impl GradWorker {
 impl WorkerBody for GradWorker {
     fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
         match self.source.gradient_into(params, round, &mut self.buf) {
-            Ok(_loss) => emit.send(round, &self.buf),
+            Ok(_loss) => emit.send_coded(round, &self.buf, self.codec.as_deref_mut()),
             // A failed computation is indistinguishable from a crashed
             // worker: stay silent, let the server's timeout path handle
             // it.
@@ -432,7 +456,7 @@ impl WorkerBody for GradWorker {
             self.step.done = goal;
         }
         if target >= 1.0 && self.step.done == d {
-            emit.send(round, &self.buf);
+            emit.send_coded(round, &self.buf, self.codec.as_deref_mut());
             StepOutcome::Done
         } else {
             StepOutcome::Working
@@ -444,8 +468,17 @@ impl WorkerBody for GradWorker {
 /// `(endpoint, source)` pair (spawns a thread per worker on the threaded
 /// transport; registers with the shared runtime on the pooled one).
 pub fn serve_workers(pairs: Vec<(WorkerEndpoint, GradSource)>) {
+    serve_workers_coded(pairs, None);
+}
+
+/// [`serve_workers`] with an outgoing gradient codec: every body gets its
+/// own encoder instance (stateful codecs keep per-worker residuals).
+pub fn serve_workers_coded(
+    pairs: Vec<(WorkerEndpoint, GradSource)>,
+    codec: Option<crate::codec::CodecKind>,
+) {
     for (endpoint, source) in pairs {
-        endpoint.serve(GradWorker::new(source));
+        endpoint.serve(GradWorker::with_codec(source, codec));
     }
 }
 

@@ -164,6 +164,8 @@ fn training_through_pjrt_learns_under_attack() {
         transport: Default::default(),
         collect: Default::default(),
         overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
         output_dir: None,
     };
     let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();

@@ -44,6 +44,8 @@ fn quadratic_exp(
         transport: Default::default(),
         collect: Default::default(),
         overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
         output_dir: None,
     }
 }

@@ -40,6 +40,8 @@ fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) 
         transport: TransportKind::Pooled,
         collect: Default::default(),
         overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
         output_dir: None,
     }
 }

@@ -52,6 +52,8 @@ fn straggler_exp(
         transport,
         collect,
         overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
         output_dir: None,
     }
 }

@@ -73,6 +73,8 @@ fn overlap_exp(
         transport: TransportKind::Pooled,
         collect: CollectMode::FirstM,
         overlap,
+        overlap_window: 1,
+        codec: None,
         output_dir: None,
     }
 }
@@ -120,6 +122,26 @@ fn prefix_overlap_is_bit_identical_for_all_gars_and_pipelines() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn overlap_window_is_a_pure_pacing_knob() {
+    // `overlap_window` (combine chunks claimed per drive slice) only
+    // re-buckets the same fixed chunk grid — every value must land on
+    // the same collected/missing counts and bit-identical parameters.
+    let (p_off, out_off, _) = run_overlap_exp(&overlap_exp(
+        GarKind::MultiBulyan,
+        Vec::new(),
+        OverlapMode::Off,
+        2,
+    ));
+    for window in [1usize, 2, 16, 1024] {
+        let mut exp = overlap_exp(GarKind::MultiBulyan, Vec::new(), OverlapMode::Prefix, 2);
+        exp.overlap_window = window;
+        let (p_w, out_w, _) = run_overlap_exp(&exp);
+        assert_eq!(out_off, out_w, "window={window}: collected/missing diverged");
+        assert_eq!(p_off, p_w, "window={window} changed the model");
     }
 }
 
@@ -206,6 +228,7 @@ fn prefix_overlap_is_bit_identical_under_malformed_gradients() {
                 seed: 7,
                 collect: CollectMode::FirstM,
                 overlap,
+                overlap_window: 1,
             },
         )
         .unwrap();
@@ -270,6 +293,8 @@ fn late_gradient_lands_in_cache_and_never_perturbs_the_current_round() {
             transport: TransportKind::Pooled,
             collect: CollectMode::FirstM,
             overlap,
+            overlap_window: 1,
+            codec: None,
             output_dir: None,
         }
     };

@@ -8,10 +8,12 @@
 //! against a server in `external` mode (no in-process clients), so the
 //! exact byte sequences of the spec are what crosses the wire.
 
+use multibulyan::codec::{encoder, Codec, CodecKind};
 use multibulyan::runtime::Parallelism;
 use multibulyan::transport::socket::{
-    self, encode, read_frame, write_chunk_frame, write_frame, Frame, FrameError, PayloadKind,
-    HEADER_LEN, REJECT_CHECKSUM, REJECT_DUPLICATE, REJECT_MALFORMED, REJECT_VERSION, VERSION,
+    self, encode, read_frame, write_chunk_frame, write_coded_chunk_frame, write_frame, Frame,
+    FrameError, PayloadKind, HEADER_LEN, REJECT_CHECKSUM, REJECT_CODEC, REJECT_DUPLICATE,
+    REJECT_MALFORMED, REJECT_VERSION, VERSION,
 };
 use multibulyan::transport::{
     build, star_socket, ComputeCost, Emitter, FaultModel, ServerEndpoint, SocketOptions,
@@ -31,6 +33,35 @@ struct Body {
 impl WorkerBody for Body {
     fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
         (self.f)(self.id, round, params, emit)
+    }
+}
+
+/// A body that emits through a gradient codec (`None` = plain send):
+/// gradient is `params * 2 + id`, the same shape as [`Body`] scenarios.
+struct CodedBody {
+    id: usize,
+    codec: Option<Box<dyn Codec>>,
+}
+
+impl WorkerBody for CodedBody {
+    fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
+        let g: Vec<f32> = params.iter().map(|p| p * 2.0 + self.id as f32).collect();
+        emit.send_coded(round, &g, self.codec.as_deref_mut());
+    }
+}
+
+/// A broken encoder: claims fp16 but emits a truncated payload (fp16
+/// needs 2 bytes per coordinate), so every server-side decode fails.
+struct BadCodec;
+
+impl Codec for BadCodec {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Fp16
+    }
+
+    fn encode(&mut self, _offset: usize, _values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.push(0xEE);
     }
 }
 
@@ -189,6 +220,69 @@ fn rejected_gradients_do_not_occupy_quorum_slots_on_all_backends() {
     });
 }
 
+#[test]
+fn lossless_coded_gradients_cross_every_backend_bit_identical() {
+    // §7 (codec integration): a worker encoding with the lossless codec
+    // must deliver byte-exact gradients on every backend — threaded and
+    // pooled decode at server-side delivery, the socket backend decodes
+    // negotiated coded chunks at reassembly.
+    for kind in TransportKind::ALL {
+        let (mut server, workers) = match kind {
+            TransportKind::Socket => star_socket(
+                3,
+                FaultModel::default(),
+                &SocketOptions {
+                    listen: None,
+                    chunk: socket::DEFAULT_CHUNK,
+                    external: false,
+                    codec: CodecKind::Lossless,
+                },
+            )
+            .expect("loopback bind"),
+            _ => build(kind, 3, FaultModel::default(), &Parallelism::new(2)),
+        };
+        for w in workers {
+            let id = w.id();
+            w.serve(CodedBody {
+                id,
+                codec: Some(encoder(CodecKind::Lossless)),
+            });
+        }
+        server.broadcast(1, Arc::new(vec![0.5, -1.5, 3.25]));
+        let got = server.collect(1, 3, Duration::from_secs(5));
+        assert_eq!(got.len(), 3, "{kind}");
+        for m in &got {
+            let id = m.worker as f32;
+            assert_eq!(m.gradient, vec![1.0 + id, -3.0 + id, 6.5 + id], "{kind}");
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn undecodable_coded_gradient_never_occupies_a_quorum_slot_on_any_backend() {
+    // §7 + §6.2 (quorum accounting): worker 0's encoder emits garbage —
+    // threaded/pooled reject it at server-side decode, the socket
+    // backend rejects the mistagged chunk against its raw-negotiated
+    // connection — and a first-m collect of 3 out of 4 is still filled
+    // by the three honest workers; the bad payload takes no slot.
+    for kind in TransportKind::ALL {
+        let (mut server, workers) = build(kind, 4, FaultModel::default(), &Parallelism::new(2));
+        for w in workers {
+            let id = w.id();
+            let codec: Option<Box<dyn Codec>> =
+                if id == 0 { Some(Box::new(BadCodec)) } else { None };
+            w.serve(CodedBody { id, codec });
+        }
+        server.broadcast(1, Arc::new(vec![2.0]));
+        let got = server.collect(1, 3, Duration::from_secs(5));
+        let mut ids: Vec<usize> = got.iter().map(|m| m.worker).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3], "{kind}");
+        server.shutdown();
+    }
+}
+
 // ---------------------------------------------------------------------
 // Socket-specific: raw frames against an external-mode server.
 // ---------------------------------------------------------------------
@@ -200,6 +294,7 @@ fn external_server(n: usize, chunk: usize) -> ServerEndpoint {
         listen: None,
         chunk,
         external: true,
+        codec: CodecKind::Raw,
     };
     let (server, _slots) = star_socket(n, FaultModel::default(), &opts).expect("loopback bind");
     server
@@ -390,6 +485,110 @@ fn out_of_order_chunks_are_rejected_then_reassembly_recovers() {
     server.shutdown();
 }
 
+/// Raw client handshake advertising a codec capability byte (§7).
+fn raw_register_coded(addr: &str, worker: u32, codec: CodecKind) -> socket::Stream {
+    let mut conn = socket::connect_stream(addr).expect("connect");
+    write_frame(
+        &mut conn,
+        &Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker,
+            payload: vec![codec.wire_id()],
+        },
+    )
+    .expect("hello");
+    let ack = read_frame(&mut conn, None).expect("hello ack");
+    assert_eq!(ack.kind, PayloadKind::Hello);
+    assert_eq!(ack.worker, worker);
+    conn
+}
+
+#[test]
+fn unknown_hello_codec_capability_draws_reject_codec_and_a_close() {
+    // §7 (codec negotiation): a Hello advertising an unknown codec id —
+    // or an overlong capability payload — is answered with Reject(CODEC)
+    // and the connection is closed; no silent fallback to raw.
+    let server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    for payload in [vec![200u8], vec![0u8, 0u8]] {
+        let mut conn = socket::connect_stream(&addr).expect("connect");
+        write_frame(
+            &mut conn,
+            &Frame {
+                kind: PayloadKind::Hello,
+                round: 0,
+                worker: 0,
+                payload,
+            },
+        )
+        .unwrap();
+        let reject = read_frame(&mut conn, None).expect("reject frame");
+        assert_eq!(reject.kind, PayloadKind::Reject);
+        assert_eq!(reject.payload, vec![REJECT_CODEC]);
+        assert!(
+            matches!(read_frame(&mut conn, None), Err(FrameError::Closed)),
+            "connection must be closed after a capability reject"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn undecodable_coded_chunk_draws_reject_codec_then_recovery() {
+    // §7 (coded chunks): an encoded payload that fails decode draws
+    // Reject(CODEC), occupies no quorum slot (§6.2), and the connection
+    // stays usable — a valid coded gradient on the same connection is
+    // the one and only delivery.
+    let mut server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut conn = raw_register_coded(&addr, 0, CodecKind::Fp16);
+
+    server.broadcast(1, Arc::new(vec![0.0f32; 3]));
+    let rr = read_frame(&mut conn, None).expect("round result");
+    assert_eq!(rr.kind, PayloadKind::RoundResult);
+
+    let mut scratch = Vec::new();
+    // Truncated fp16 payload: 3 coordinates need 6 bytes, not 1.
+    write_coded_chunk_frame(
+        &mut conn,
+        0,
+        1,
+        0,
+        3,
+        3,
+        CodecKind::Fp16.wire_id(),
+        &[0xEE],
+        &mut scratch,
+    )
+    .unwrap();
+    let reject = read_frame(&mut conn, None).expect("reject frame");
+    assert_eq!(reject.kind, PayloadKind::Reject);
+    assert_eq!(reject.payload, vec![REJECT_CODEC]);
+
+    // Same connection, a valid fp16 gradient (values exactly
+    // representable in fp16, so the decode is bit-exact).
+    let mut enc = Vec::new();
+    encoder(CodecKind::Fp16).encode(0, &[1.0, -2.5, 0.75], &mut enc);
+    write_coded_chunk_frame(
+        &mut conn,
+        0,
+        1,
+        0,
+        3,
+        3,
+        CodecKind::Fp16.wire_id(),
+        &enc,
+        &mut scratch,
+    )
+    .unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].worker, 0);
+    assert_eq!(got[0].gradient, vec![1.0, -2.5, 0.75]);
+    server.shutdown();
+}
+
 #[test]
 fn streamed_chunks_reassemble_bit_identical_to_one_shot() {
     // §4.3 (chunk-wise streaming): GradWorker::stream_round over a small
@@ -447,6 +646,7 @@ fn unix_domain_socket_round_trip() {
         listen: Some(format!("unix:{}", path.display())),
         chunk: 4,
         external: false,
+        codec: CodecKind::Raw,
     };
     fn body(id: usize, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
         let g: Vec<f32> = params.iter().map(|p| p + id as f32).collect();
