@@ -83,6 +83,7 @@ fn main() -> Result<()> {
             overlap: Default::default(),
             overlap_window: 1,
             codec: None,
+            groups: 1,
             output_dir: None,
         };
         println!("\n=== {label} ({steps} steps) ===");

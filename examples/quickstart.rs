@@ -69,6 +69,7 @@ fn main() -> Result<()> {
         overlap: Default::default(),
         overlap_window: 1,
         codec: None,
+        groups: 1,
         output_dir: None,
     };
     println!("\ntraining the quadratic workload with MULTI-BULYAN (n={n}, f={f}, no attack):");

@@ -50,7 +50,9 @@ for ((k = 0; k < HONEST; k++)); do
     PIDS+=("$!")
 done
 
-# The workers retry until the coordinator binds, so start order is free.
+# The workers retry with bounded exponential backoff (50 ms doubling to
+# a 2 s cap, --retry-ms total) until the coordinator binds, so start
+# order is free and the startup race is benign.
 "$BIN" train --transport socket --socket-listen "$ADDR" \
     --socket-chunk "$CHUNK" --codec "$CODEC" \
     --gar multi-bulyan --attack sign-flip \

@@ -53,6 +53,7 @@ fn main() {
             overlap: Default::default(),
             overlap_window: 1,
             codec: None,
+            groups: 1,
             output_dir: None,
         };
         let mut cluster = launch(&config, None).unwrap();

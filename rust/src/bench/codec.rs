@@ -196,6 +196,7 @@ pub fn run(cfg: &CodecBenchConfig, quiet: bool) -> Result<Vec<CodecRow>> {
                     overlap: Default::default(),
                     overlap_window: 1,
                     codec: Some(kind),
+                    groups: 1,
                     output_dir: None,
                 };
                 let cluster = launch(&exp, None)?;

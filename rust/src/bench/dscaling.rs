@@ -4,9 +4,21 @@
 //! Fixed n, sweep d over decades, fit the log–log slope of aggregation
 //! time vs d. A slope ≈ 1.0 is linear; robust alternatives from classical
 //! statistics (PCA-based, §I footnote 2) would show ≥ 2.
+//!
+//! Two harnesses share the fit:
+//!
+//! * [`run`] (`bench dscaling`) times the bare GAR hot path over a
+//!   pre-materialized n×d matrix — the Theorem 2.ii microbench.
+//! * [`run_dscale`] (`bench dscale`) times whole end-to-end rounds
+//!   through the two-level grouped coordinator (workers → streaming
+//!   group reduction → root GAR → parameter update) and *gates* the
+//!   fitted slope on linearity. This is the CI probe that the
+//!   hierarchical collection path stays O(d) all the way to d = 10⁷ —
+//!   a superlinear slope (an accidental n×d materialization, a
+//!   quadratic reassembly path) fails the bench, not just a dashboard.
 
 use crate::gar::{GarKind, GarScratch};
-use crate::metrics::TimingProtocol;
+use crate::metrics::{Stopwatch, TimingProtocol};
 use crate::tensor::GradMatrix;
 use crate::Result;
 use crate::util::Rng64;
@@ -93,6 +105,183 @@ pub fn run(n: usize, dims: &[usize], gars: &[GarKind], quiet: bool) -> Result<Ve
     Ok(results)
 }
 
+/// `bench dscale` — the end-to-end grouped-collection sweep.
+#[derive(Debug, Clone)]
+pub struct DscaleConfig {
+    /// Cluster size (small on purpose: the sweep measures per-coordinate
+    /// cost, not fan-out; n=9 keeps even the d=10⁷ point DRAM-resident).
+    pub n: usize,
+    /// Declared Byzantine bound (no workers actually attack here).
+    pub f: usize,
+    /// Two-level group count (> 1 so the streamed hierarchy is the path
+    /// under test).
+    pub groups: usize,
+    /// Dimensions swept, ascending.
+    pub dims: Vec<usize>,
+    /// Untimed warm-up rounds per point (allocator + problem setup).
+    pub warmup: usize,
+    /// Timed rounds per point.
+    pub rounds: usize,
+    /// Accepted fitted log-log slope band; outside it the bench exits
+    /// nonzero (1.0 = exactly linear in d).
+    pub slope_min: f64,
+    pub slope_max: f64,
+}
+
+impl DscaleConfig {
+    /// CI grid: d to 3·10⁶ in one decade-and-a-half, one timed round per
+    /// point.
+    pub fn default_sweep() -> Self {
+        Self {
+            n: 9,
+            f: 1,
+            groups: 3,
+            dims: vec![100_000, 300_000, 1_000_000, 3_000_000],
+            warmup: 1,
+            rounds: 1,
+            slope_min: 0.7,
+            slope_max: 1.35,
+        }
+    }
+
+    /// `--full`: extend the sweep to the paper-scale d = 10⁷ point.
+    pub fn full_sweep() -> Self {
+        let mut cfg = Self::default_sweep();
+        cfg.dims.push(10_000_000);
+        cfg
+    }
+}
+
+/// One `bench dscale` measurement.
+#[derive(Debug, Clone)]
+pub struct DscalePoint {
+    pub d: usize,
+    /// Mean wall-clock per full round (broadcast → streamed group
+    /// reduction → root GAR → update), ms.
+    pub round_ms: f64,
+    /// High-water resident floats inside the group reducer for this run
+    /// (the `group_reducer_peak_floats` counter) — the streamed-memory
+    /// half of the story: it grows O(groups·d + n·block), never n×d.
+    pub peak_floats: u64,
+}
+
+/// `bench dscale` result: the sweep plus the fitted log-log slope.
+#[derive(Debug, Clone)]
+pub struct DscaleResult {
+    pub points: Vec<DscalePoint>,
+    pub slope: f64,
+}
+
+/// Run the end-to-end grouped d-sweep and gate the slope on linearity.
+///
+/// Each point launches a fresh grouped cluster (trimmed-mean over
+/// `cfg.groups` group rows, quadratic workload of dimension d on the
+/// pooled transport), runs `warmup` untimed and `rounds` timed rounds,
+/// and records mean ms/round. Writes `results/dscale.csv`, appends a
+/// step-summary table in CI, and bails if the fitted slope leaves
+/// `[slope_min, slope_max]`.
+pub fn run_dscale(cfg: &DscaleConfig, quiet: bool) -> Result<DscaleResult> {
+    use crate::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+    anyhow::ensure!(cfg.dims.len() >= 2, "dscale needs ≥ 2 dims to fit a slope");
+    anyhow::ensure!(cfg.rounds >= 1, "dscale needs ≥ 1 timed round per point");
+    let mut points = Vec::new();
+    for &d in &cfg.dims {
+        let exp = ExperimentConfig {
+            cluster: ClusterConfig {
+                n: cfg.n,
+                f: cfg.f,
+                actual_byzantine: Some(0),
+                ..Default::default()
+            },
+            gar: GarKind::TrimmedMean,
+            pre: Vec::new(),
+            attack: crate::attacks::AttackKind::None,
+            model: ModelConfig::Quadratic { dim: d, noise: 0.1 },
+            train: TrainConfig {
+                steps: cfg.warmup + cfg.rounds,
+                batch_size: 5,
+                eval_every: 0,
+                ..TrainConfig::default()
+            },
+            threads: 1,
+            transport: Default::default(),
+            collect: Default::default(),
+            overlap: Default::default(),
+            overlap_window: 1,
+            codec: None,
+            groups: cfg.groups,
+            output_dir: None,
+        };
+        let cluster = crate::coordinator::launch(&exp, None)?;
+        let mut coordinator = cluster.coordinator;
+        for _ in 0..cfg.warmup {
+            coordinator.run_round()?;
+        }
+        let sw = Stopwatch::start();
+        for _ in 0..cfg.rounds {
+            coordinator.run_round()?;
+        }
+        let round_ms = sw.elapsed_ms() / cfg.rounds as f64;
+        let peak_floats = coordinator.metrics.counter("group_reducer_peak_floats");
+        coordinator.shutdown();
+        if !quiet {
+            println!(
+                "dscale d={d:<9} round {round_ms:10.3} ms  reducer peak {peak_floats} floats"
+            );
+        }
+        points.push(DscalePoint {
+            d,
+            round_ms,
+            peak_floats,
+        });
+    }
+    let slope = loglog_slope(
+        &points
+            .iter()
+            .map(|p| (p.d as f64, p.round_ms.max(1e-6)))
+            .collect::<Vec<_>>(),
+    );
+    let ok = slope >= cfg.slope_min && slope <= cfg.slope_max;
+    if !quiet {
+        println!(
+            "dscale log-log slope = {slope:.3} (gate [{:.2}, {:.2}]) — {}",
+            cfg.slope_min,
+            cfg.slope_max,
+            if ok { "linear in d" } else { "VIOLATION" }
+        );
+    }
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| format!("{},{:.6},{},{:.4}", p.d, p.round_ms, p.peak_floats, slope))
+        .collect();
+    super::write_csv("dscale.csv", "d,round_ms,peak_floats,slope", &rows)?;
+    let mut md = String::from(
+        "## bench dscale — grouped end-to-end O(d) gate\n\n\
+         | d | round ms | reducer peak floats |\n|---:|---:|---:|\n",
+    );
+    for p in &points {
+        md.push_str(&format!(
+            "| {} | {:.3} | {} |\n",
+            p.d, p.round_ms, p.peak_floats
+        ));
+    }
+    md.push_str(&format!(
+        "\nfitted log-log slope **{slope:.3}** (gate [{:.2}, {:.2}]): {}\n",
+        cfg.slope_min,
+        cfg.slope_max,
+        if ok { "✅ linear" } else { "❌ violation" }
+    ));
+    super::step_summary(&md);
+    anyhow::ensure!(
+        ok,
+        "dscale: fitted log-log slope {slope:.3} outside the linear band \
+         [{:.2}, {:.2}] — the grouped collection path is no longer O(d)",
+        cfg.slope_min,
+        cfg.slope_max
+    );
+    Ok(DscaleResult { points, slope })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +301,41 @@ mod tests {
             })
             .collect();
         assert!((loglog_slope(&pts) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dscale_harness_runs_grouped_end_to_end() {
+        let _env = crate::bench::env_lock();
+        std::env::set_var("MB_RESULTS_DIR", std::env::temp_dir().join("mb_dscale_test"));
+        // Tiny dims keep the test fast; the slope band is opened wide
+        // because timer noise dominates at this scale — the real gate
+        // runs at bench scale in CI. What this pins is the plumbing:
+        // grouped launch, streamed rounds, peak accounting, CSV.
+        let cfg = DscaleConfig {
+            dims: vec![5_000, 50_000, 500_000],
+            slope_min: -1.0,
+            slope_max: 5.0,
+            ..DscaleConfig::default_sweep()
+        };
+        let res = run_dscale(&cfg, true).unwrap();
+        assert_eq!(res.points.len(), 3);
+        for p in &res.points {
+            // The reducer really ran (nonzero high-water mark) and never
+            // came close to materializing the flat n×d matrix.
+            assert!(p.peak_floats > 0);
+            assert!(
+                (p.peak_floats as usize) < cfg.n * p.d,
+                "peak {} floats vs flat n·d = {}",
+                p.peak_floats,
+                cfg.n * p.d
+            );
+        }
+        let csv =
+            std::fs::read_to_string(crate::bench::results_dir().join("dscale.csv")).unwrap();
+        assert!(csv.starts_with("d,round_ms,peak_floats,slope"));
+        assert_eq!(csv.lines().count(), 4);
+        std::fs::remove_dir_all(crate::bench::results_dir()).ok();
+        std::env::remove_var("MB_RESULTS_DIR");
     }
 
     #[test]

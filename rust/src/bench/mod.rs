@@ -7,6 +7,7 @@
 //! | fig2 | Fig. 2 aggregation time vs (n, d) | [`fig2::run`] |
 //! | fig3 | Fig. 3 max top-1 accuracy vs batch size | [`fig3::run`] |
 //! | dscaling | Theorem 2.ii O(d) claim | [`dscaling::run`] |
+//! | dscale | grouped end-to-end O(d) gate to d = 10⁷ (CI-enforced slope band) | [`dscaling::run_dscale`] |
 //! | slowdown | Theorems 1.ii/2.iii m̃/n slowdown | [`slowdown::run`] |
 //! | straggler | first-m vs wait-all round-tail latency under the straggler cost model | [`straggler::run`] |
 //! | resilience | weak/strong resilience under the attack gauntlet | [`resilience::run`] |

@@ -154,6 +154,7 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                 overlap: Default::default(),
                 overlap_window: 1,
                 codec: None,
+                groups: 1,
                 output_dir: None,
             };
             let cluster = launch(&exp, None)?;

@@ -98,6 +98,7 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
         overlap: Default::default(),
         overlap_window: 1,
         codec: None,
+        groups: 1,
         output_dir: None,
     };
     let cluster = launch(&exp, None)?;

@@ -142,6 +142,7 @@ pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
                     overlap,
                     overlap_window: 1,
                     codec: None,
+                    groups: 1,
                     output_dir: None,
                 };
                 let expect = match collect {

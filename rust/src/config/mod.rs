@@ -222,6 +222,18 @@ pub struct ExperimentConfig {
     /// byte payloads, the socket backend negotiates the codec at Hello
     /// (wire spec §7). See `crate::codec`.
     pub codec: Option<crate::codec::CodecKind>,
+    /// Two-level aggregation (`groups` root key / `--groups` flag, ≥ 1):
+    /// partition the `n` workers into this many groups, stream-reduce each
+    /// group's gradients into one vector per group, and run the GAR over
+    /// the `groups` group rows instead of the `n` worker rows — the
+    /// hierarchy that scales collection to 10k workers without an n×d
+    /// matrix. `1` (default) is the flat single-level path, bit-identical
+    /// to omitting the knob. `groups > 1` requires `collect = "all"`,
+    /// `overlap = "off"` and no codec, and the GAR must satisfy its
+    /// resilience precondition at the group level (see `validate()`).
+    /// Equivalent to a leading `group(g)` stage in the `gar` pipeline
+    /// spec; if both are given they must agree.
+    pub groups: usize,
     /// Where to write metrics CSV (None = stdout summary only).
     pub output_dir: Option<String>,
 }
@@ -250,6 +262,7 @@ impl ExperimentConfig {
             overlap: OverlapMode::default(),
             overlap_window: 1,
             codec: None,
+            groups: 1,
             output_dir: None,
         }
     }
@@ -435,6 +448,11 @@ impl ExperimentConfig {
             Some("off") => None,
             Some(name) => Some(name.parse::<crate::codec::CodecKind>()?),
         };
+        let groups = root
+            .get("groups")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(1);
 
         Ok(Self {
             cluster,
@@ -449,6 +467,7 @@ impl ExperimentConfig {
             overlap,
             overlap_window,
             codec,
+            groups,
             output_dir: get_str("", "output_dir"),
         })
     }
@@ -460,6 +479,20 @@ impl ExperimentConfig {
             stages: self.pre.clone(),
             kind: self.gar,
         }
+    }
+
+    /// The number of aggregation groups actually in effect: the
+    /// `group(g)` pipeline stage when the `gar` spec carries one, else
+    /// the root `groups` key (default 1 = flat). `validate()` rejects a
+    /// misplaced/duplicated stage and any disagreement between the two
+    /// spellings, so after validation this is the single source of truth
+    /// the launcher reads.
+    pub fn effective_groups(&self) -> usize {
+        self.gar_spec()
+            .group_stage()
+            .ok()
+            .flatten()
+            .unwrap_or(self.groups)
     }
 
     /// Number of Byzantine workers actually simulated: explicit
@@ -492,6 +525,55 @@ impl ExperimentConfig {
         );
         for stage in &self.pre {
             stage.validate()?;
+        }
+        // Two-level aggregation: a `group(g)` stage must be the leading
+        // stage (at most once) and agree with the root `groups` key.
+        let spec_groups = self.gar_spec().group_stage()?;
+        if let Some(g) = spec_groups {
+            anyhow::ensure!(
+                self.groups == 1 || self.groups == g,
+                "group({g}) pipeline stage disagrees with root key groups = {} — \
+                 set one of the two, or make them equal",
+                self.groups
+            );
+        }
+        let groups = self.effective_groups();
+        anyhow::ensure!(groups >= 1, "groups must be ≥ 1 (1 = flat aggregation)");
+        anyhow::ensure!(
+            groups <= n,
+            "groups={groups} exceeds cluster size n={n} — each group needs ≥ 1 worker"
+        );
+        if groups > 1 {
+            anyhow::ensure!(
+                self.collect == CollectMode::All,
+                "groups={groups} requires collect = \"all\" — group reduction \
+                 consumes every honest gradient; first-m abandonment would \
+                 leave partial group sums (got collect = {})",
+                self.collect
+            );
+            anyhow::ensure!(
+                self.overlap == OverlapMode::Off,
+                "groups={groups} requires overlap = \"off\" — the prefix \
+                 overlap freezes an n×d round matrix that grouped streaming \
+                 collection never materializes"
+            );
+            anyhow::ensure!(
+                self.codec.is_none(),
+                "groups={groups} is incompatible with a gradient codec — \
+                 lossy/encoded frames cannot be group-reduced server-side \
+                 (set codec = \"off\")"
+            );
+            // GroupMap enforces the partition shape (every group non-empty,
+            // Byzantine groups ≤ honest remainder, …).
+            crate::gar::GroupMap::new(n, byz, groups)?;
+            let root_f = crate::gar::group::root_f_for(n, f, groups);
+            let min_g = self.gar.min_n(root_f);
+            anyhow::ensure!(
+                groups >= min_g,
+                "root GAR {} with f_root={root_f} (scaled from f={f} over \
+                 {groups} groups) requires groups ≥ {min_g}, got {groups}",
+                self.gar
+            );
         }
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.cluster.drop_prob),
@@ -865,6 +947,80 @@ mod tests {
         let err = parse("gzip").unwrap_err().to_string();
         assert!(err.contains("unknown codec 'gzip'"), "{err}");
         assert!(err.contains("raw|lossless|fp16|int8|topk"), "{err}");
+    }
+
+    #[test]
+    fn groups_knob_parses_and_gates_validate() {
+        // Default is flat single-level aggregation.
+        assert_eq!(base().groups, 1);
+        assert_eq!(base().effective_groups(), 1);
+        base().validate().unwrap();
+
+        let grouped = |extra: &str| {
+            ExperimentConfig::from_text(&format!(
+                r#"
+                gar = "trimmed-mean"
+                groups = 4
+                {extra}
+                [cluster]
+                n = 12
+                f = 1
+                [model]
+                kind = "quadratic"
+                "#,
+            ))
+        };
+        let cfg = grouped("").unwrap();
+        assert_eq!(cfg.groups, 4);
+        assert_eq!(cfg.effective_groups(), 4);
+
+        // The pipeline spelling (`group(4)+…`) lands in `pre` and is the
+        // same knob.
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "group(4)+trimmed-mean"
+            [cluster]
+            n = 12
+            f = 1
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.groups, 1);
+        assert_eq!(cfg.effective_groups(), 4);
+        assert_eq!(cfg.gar_spec().to_string(), "group(4)+trimmed-mean");
+
+        // Disagreement between the two spellings is rejected.
+        assert!(ExperimentConfig::from_text(
+            r#"
+            gar = "group(4)+trimmed-mean"
+            groups = 8
+            [cluster]
+            n = 12
+            f = 1
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .is_err());
+
+        // groups > 1 gates: collect = all, overlap = off, no codec.
+        assert!(grouped("collect = \"first-m\"").is_err());
+        assert!(grouped("codec = \"lossless\"").is_err());
+        let mut cfg = grouped("").unwrap();
+        cfg.overlap = OverlapMode::Prefix;
+        assert!(cfg.validate().is_err());
+
+        // More groups than workers is rejected.
+        let mut cfg = grouped("").unwrap();
+        cfg.groups = 13;
+        assert!(cfg.validate().is_err());
+        // The root GAR quorum scales too: multi-bulyan over 4 groups with
+        // f_root = 1 needs ≥ 7 groups.
+        let mut cfg = grouped("").unwrap();
+        cfg.gar = GarKind::MultiBulyan;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -62,7 +62,7 @@ pub fn launch(
         external: config.cluster.socket_listen.is_some(),
         codec: config.codec.unwrap_or_default(),
     };
-    let (server, endpoints) =
+    let (mut server, endpoints) =
         transport::build_cluster(config.transport, honest, faults, &par, &socket)?;
     // Intra-gradient coordinate sharding for the quadratic workers: real
     // OS worker threads (threaded, socket clients) may share the
@@ -194,24 +194,49 @@ pub fn launch(
         overlap: config.overlap,
         overlap_window: config.overlap_window,
     };
-    let mut coordinator = Coordinator::new(
-        config.gar.instantiate_parallel(n, config.cluster.f, &par)?,
-        config.attack.instantiate(),
-        byz,
-        server,
-        initial_params,
-        config.train.learning_rate,
-        config.train.momentum,
-        options,
-    )?;
-    if !config.pre.is_empty() {
-        // Pre-aggregation pipeline stages (gar = "rmom(0.9)+…"), sharing
-        // the aggregation pool.
-        let stages = config
-            .pre
-            .iter()
-            .map(|s| s.instantiate(&par))
-            .collect::<Result<Vec<_>>>()?;
+    let groups = config.effective_groups();
+    let mut coordinator = if groups > 1 {
+        // Two-level hierarchy: workers stream-reduce into `groups` group
+        // rows (transport-side where the backend supports it), and the
+        // root GAR — instantiated over g rows with the scaled Byzantine
+        // bound f_root — aggregates the group vectors. `validate()` has
+        // already checked the partition shape and the root quorum.
+        let map = crate::gar::GroupMap::new(n, byz, groups)?;
+        let root_f = crate::gar::group::root_f_for(n, config.cluster.f, groups);
+        let reducer = Arc::new(crate::gar::GroupReducer::new(map, initial_params.len()));
+        server.install_group_reducer(Arc::clone(&reducer));
+        Coordinator::new_grouped(
+            config.gar.instantiate_parallel(groups, root_f, &par)?,
+            config.attack.instantiate(),
+            server,
+            initial_params,
+            config.train.learning_rate,
+            config.train.momentum,
+            options,
+            reducer,
+        )?
+    } else {
+        Coordinator::new(
+            config.gar.instantiate_parallel(n, config.cluster.f, &par)?,
+            config.attack.instantiate(),
+            byz,
+            server,
+            initial_params,
+            config.train.learning_rate,
+            config.train.momentum,
+            options,
+        )?
+    };
+    // Pre-aggregation pipeline stages (gar = "rmom(0.9)+…"), sharing the
+    // aggregation pool. A leading group(g) stage is the collection layer
+    // consumed above, not a matrix stage — it never instantiates.
+    let stages = config
+        .pre
+        .iter()
+        .filter(|s| !matches!(s, crate::gar::StageSpec::GroupAggregate { .. }))
+        .map(|s| s.instantiate(&par))
+        .collect::<Result<Vec<_>>>()?;
+    if !stages.is_empty() {
         coordinator = coordinator.with_pre_stages(stages);
     }
 

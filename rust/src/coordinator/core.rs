@@ -18,9 +18,19 @@
 //! ([`prefix_combine_update`]) — stragglers keep computing while the
 //! aggregate is applied, and anything that finishes late is salvaged
 //! into the last-good cache without ever touching the current round.
+//!
+//! With `groups > 1` the round runs the **two-level hierarchy** instead
+//! (see `gar::group`): collection streams every worker's gradient
+//! block-by-block into a per-group pairwise reduction, the proposal
+//! matrix shrinks to `g × d` group means, the Byzantine coalition forges
+//! group rows, and the root GAR's O(g²) selection carries group
+//! provenance so metrics still attribute to worker ids. Peak resident
+//! gradient memory on that path is O(g·d + n·block) — the full `n × d`
+//! matrix is never materialised.
 
 use crate::attacks::{Attack, AttackCtx};
-use crate::gar::{CombineScratch, Gar, GarScratch, PreAggregate, Selection};
+use crate::gar::group::FullIngest;
+use crate::gar::{CombineScratch, Gar, GarScratch, GroupMap, GroupReducer, PreAggregate, Selection};
 use crate::metrics::{MetricsRecorder, Stopwatch, TrainPoint};
 use crate::runtime::pool::SyncMutPtr;
 use crate::runtime::{shard_zip, Parallelism, MIN_COORDS_PER_SHARD};
@@ -419,6 +429,21 @@ pub struct RoundOutcome {
     pub overlap_saved_us: u64,
 }
 
+/// Two-level aggregation state (`groups > 1`): the worker → group
+/// partition, the streaming per-block reducer the transports feed, and
+/// the high-water mark already exported to metrics. When present, the
+/// coordinator runs [`Coordinator::run_round`]'s grouped variant: the
+/// proposal matrix is `g × d` group rows (never `n × d`), the straggler
+/// cache is per *group*, and selection metrics attribute through the
+/// [`Selection`]'s group provenance back to worker ids.
+struct GroupState {
+    map: Arc<GroupMap>,
+    reducer: Arc<GroupReducer>,
+    /// Last `group_reducer_peak_floats` value pushed to metrics (the
+    /// counter tracks the running maximum via deltas).
+    peak_floats: u64,
+}
+
 /// The parameter server.
 pub struct Coordinator {
     n: usize,
@@ -444,6 +469,8 @@ pub struct Coordinator {
     scratch: GarScratch,
     rng: Rng64,
     round: u64,
+    /// Two-level aggregation (`groups > 1`) — `None` on the flat path.
+    grouping: Option<GroupState>,
     /// First malformed-gradient offender already reported (warn once).
     warned_malformed: bool,
     /// Per-round counters, timings and curves (summaries, CSV export).
@@ -493,6 +520,90 @@ impl Coordinator {
             scratch: GarScratch::new(),
             rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
             round: 0,
+            grouping: None,
+            warned_malformed: false,
+            metrics: MetricsRecorder::new(n),
+            options,
+        })
+    }
+
+    /// Two-level coordinator (`groups > 1`): `gar` is the **root** rule
+    /// over `g = reducer.map().groups()` rows, `server` spans the
+    /// `n − byz` honest *workers*, and the `reducer` (already installed
+    /// on the transport where the backend ingests worker-side) streams
+    /// each honest group's mean block-by-block — the coordinator never
+    /// materialises an `n × d` matrix. Requires `collect = all` and
+    /// `overlap = off` (the grouped round defines its own collection
+    /// semantics; config validation enforces the same gates).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_grouped(
+        gar: Box<dyn Gar>,
+        attack: Option<Box<dyn Attack>>,
+        server: ServerEndpoint,
+        initial_params: Vec<f32>,
+        lr: f32,
+        momentum: f32,
+        options: CoordinatorOptions,
+        reducer: Arc<GroupReducer>,
+    ) -> Result<Self> {
+        let map = Arc::clone(reducer.map());
+        let (n, byz, g) = (map.n(), map.byz(), map.groups());
+        anyhow::ensure!(
+            gar.n() == g,
+            "grouped coordinator: root GAR is over {} rows; expected g = {g}",
+            gar.n()
+        );
+        anyhow::ensure!(
+            server.num_workers() == n - byz,
+            "transport has {} honest workers; expected n − byz = {}",
+            server.num_workers(),
+            n - byz
+        );
+        anyhow::ensure!(
+            byz == 0 || attack.is_some(),
+            "byz={byz} workers but no attack configured"
+        );
+        anyhow::ensure!(
+            !initial_params.is_empty() && reducer.d() == initial_params.len(),
+            "grouped coordinator: reducer is for d = {}, params have d = {}",
+            reducer.d(),
+            initial_params.len()
+        );
+        anyhow::ensure!(
+            options.collect == CollectMode::All,
+            "groups > 1 requires collect = all (first-m quorums are defined \
+             over workers, not group rows)"
+        );
+        anyhow::ensure!(
+            options.overlap == OverlapMode::Off,
+            "groups > 1 requires overlap = off (the grouped round has no \
+             frozen prefix matrix to overlap against)"
+        );
+        let d = initial_params.len();
+        let opt = Sgd::new(d, lr, momentum)?;
+        Ok(Self {
+            n,
+            byz,
+            gar,
+            attack,
+            pre: Vec::new(),
+            server,
+            params: initial_params,
+            opt,
+            grads: GradMatrix::zeros(g, d),
+            agg: vec![0.0; d],
+            selection: Selection::default(),
+            // Per *group* straggler cache: a group none of whose members
+            // delivered this round falls back to its last good mean.
+            last_good: vec![None; map.honest_groups()],
+            scratch: GarScratch::new(),
+            rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
+            round: 0,
+            grouping: Some(GroupState {
+                map,
+                reducer,
+                peak_floats: 0,
+            }),
             warned_malformed: false,
             metrics: MetricsRecorder::new(n),
             options,
@@ -576,6 +687,9 @@ impl Coordinator {
 
     /// Drive one synchronous SGD round.
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
+        if self.grouping.is_some() {
+            return self.run_round_grouped();
+        }
         self.round += 1;
         let round = self.round;
         let honest = self.n - self.byz;
@@ -792,6 +906,219 @@ impl Coordinator {
             agg_seconds,
             selected,
             overlap_saved_us,
+        })
+    }
+
+    /// One round of the two-level hierarchy (`groups > 1`): broadcast →
+    /// stream-collect into the group reducer → finalize `g × d` group
+    /// means (per-group straggler fallback) → forge Byzantine *group*
+    /// rows → pre-aggregate → root select (stamped with group
+    /// provenance) → fused combine+update. Peak resident gradient memory
+    /// is the reducer's O(g·d + n·block) arena — no `n × d` matrix
+    /// exists on this path.
+    fn run_round_grouped(&mut self) -> Result<RoundOutcome> {
+        let (map, reducer) = {
+            let gs = self.grouping.as_ref().expect("checked by run_round");
+            (Arc::clone(&gs.map), Arc::clone(&gs.reducer))
+        };
+        self.round += 1;
+        let round = self.round;
+        let honest = self.n - self.byz;
+        let gh = map.honest_groups();
+        let gb = map.byz_groups();
+        let d = self.params.len();
+
+        // 1. Open the reducer's round and broadcast the parameters.
+        reducer.begin_round(round);
+        let params = Arc::new(self.params.clone());
+        self.server.broadcast(round, params);
+
+        // 2. Collect every honest worker (collect = all, enforced at
+        //    construction). Deliveries arrive in two shapes: an *empty*
+        //    slice is a grouped-mode notification from a backend that
+        //    already ingested worker-side (pooled emitter, socket chunk
+        //    reassembly) — confirmed against the reducer; a full d-length
+        //    slice is the threaded backend's channel delivery, ingested
+        //    here. Either way no row buffer is written.
+        let mut have = vec![false; honest];
+        let mut bad_len: Option<(usize, usize)> = None;
+        let mut malformed: u64 = 0;
+        {
+            let have = &mut have;
+            let bad_len = &mut bad_len;
+            let malformed = &mut malformed;
+            let reducer = &*reducer;
+            let accept = |worker: usize, gradient: &[f32]| -> bool {
+                if worker >= have.len() {
+                    return false;
+                }
+                if gradient.is_empty() {
+                    // d ≥ 1 (validated), so an empty slice can only be
+                    // the transport-side ingest notification.
+                    if reducer.delivered(worker, round) {
+                        have[worker] = true;
+                        return true;
+                    }
+                    *malformed += 1;
+                    false
+                } else if gradient.len() == d {
+                    match reducer.ingest_full(worker, round, gradient) {
+                        FullIngest::Accepted => {
+                            have[worker] = true;
+                            true
+                        }
+                        FullIngest::BadLen | FullIngest::Stale => {
+                            *malformed += 1;
+                            false
+                        }
+                    }
+                } else {
+                    *malformed += 1;
+                    if bad_len.is_none() {
+                        *bad_len = Some((worker, gradient.len()));
+                    }
+                    false
+                }
+            };
+            self.server
+                .collect_with(round, honest, self.options.round_timeout, accept);
+        }
+        if malformed > 0 {
+            self.metrics.add("gradients_malformed", malformed);
+            if !self.warned_malformed {
+                self.warned_malformed = true;
+                if let Some((worker, len)) = bad_len {
+                    eprintln!(
+                        "warning: worker {worker} sent a gradient of length {len} \
+                         (d = {}); treating malformed gradients as dropped",
+                        self.dim()
+                    );
+                }
+            }
+        }
+        let collected = have.iter().filter(|&&h| h).count();
+        let missing = honest - collected;
+        self.metrics.add("gradients_missing", missing as u64);
+
+        // 3. Close the streams: each honest group's per-block mean lands
+        //    in its row of the g × d matrix; a group with no contribution
+        //    at all falls back to its last good mean (else stays zero).
+        //    A partially-delivered group is already correct — the block
+        //    means rescale by the delivered count.
+        let contributed = reducer.finalize_into(&mut self.grads);
+        crate::strict_assert_eq!(contributed.len(), gh);
+        let mut groups_missing = 0u64;
+        for (k, ok) in contributed.iter().enumerate() {
+            if *ok {
+                let row = self.grads.row(k);
+                let cache = &mut self.last_good[k];
+                if let Some(buf) = cache {
+                    buf.copy_from_slice(row);
+                } else {
+                    *cache = Some(row.to_vec());
+                }
+            } else {
+                groups_missing += 1;
+                if let Some(g) = &self.last_good[k] {
+                    self.grads.set_row(k, g);
+                }
+            }
+        }
+        if groups_missing > 0 {
+            self.metrics.add("groups_missing", groups_missing);
+        }
+
+        // 4. The Byzantine coalition forges its *group* rows with full
+        //    knowledge of the honest group means — the omniscient threat
+        //    model lifted one level (a coalition owning whole groups can
+        //    emit any group-mean it likes).
+        if gb > 0 {
+            let attack = self.attack.as_ref().expect("checked in new_grouped()");
+            let correct = self.grads.gather_rows(&(0..gh).collect::<Vec<_>>());
+            let ctx = AttackCtx::new(&correct, gb, map.groups());
+            let forged = attack.forge(&ctx, &mut self.rng)?;
+            anyhow::ensure!(
+                forged.n() == gb && forged.d() == d,
+                "attack '{}' forged a {}×{} matrix; expected {}×{}",
+                attack.name(),
+                forged.n(),
+                forged.d(),
+                gb,
+                d
+            );
+            for b in 0..gb {
+                self.grads.set_row(gh + b, forged.row(b));
+            }
+        }
+
+        // 5. Pre-aggregation stages over the g × d group rows (per-group
+        //    resilient momentum — the Farhadkhani composition applied at
+        //    the hierarchy's root).
+        if !self.pre.is_empty() {
+            let sw = Stopwatch::start();
+            for stage in &mut self.pre {
+                stage.apply(&mut self.grads, round)?;
+            }
+            self.metrics.time("pre_aggregate", sw.elapsed_s());
+        }
+
+        // 6. Root selection over g rows — O(g²), the whole point of the
+        //    hierarchy — stamped with group provenance so per-worker
+        //    metrics survive the indirection.
+        let sw = Stopwatch::start();
+        let mut sel = std::mem::take(&mut self.selection);
+        self.gar
+            .select_into(&self.grads, &mut self.scratch, &mut sel)?;
+        sel.set_group_provenance(Arc::clone(&map));
+        let select_seconds = sw.elapsed_s();
+        self.metrics.time("select", select_seconds);
+        let selected = sel.attributed_workers();
+        for &w in &selected {
+            self.metrics.record_selection(w);
+        }
+
+        // 7. Fused combine + SGD update over the selected group rows.
+        let lr = self.options.schedule.at((round - 1) as usize);
+        self.opt.set_lr(lr);
+        let sw = Stopwatch::start();
+        let skipped = fused_combine_update(
+            self.gar.parallelism(),
+            &sel,
+            &self.grads,
+            &mut self.agg,
+            &mut self.params,
+            &mut self.opt,
+            &mut self.scratch.shards,
+        )?;
+        let combine_seconds = sw.elapsed_s();
+        self.selection = sel;
+        self.metrics.time("combine_update", combine_seconds);
+        let agg_seconds = select_seconds + combine_seconds;
+        self.metrics.time("aggregate", agg_seconds);
+        if skipped > 0 {
+            self.metrics.incr("non_finite_aggregate_skipped");
+            self.metrics.add("non_finite_coords_skipped", skipped as u64);
+        }
+        self.metrics.incr("rounds");
+
+        // Export the reducer's high-water mark as a running maximum (the
+        // memory-bound observable behind the O(g·d + n·block) claim).
+        let peak = reducer.peak_resident_floats() as u64;
+        if let Some(gs) = self.grouping.as_mut() {
+            if peak > gs.peak_floats {
+                self.metrics
+                    .add("group_reducer_peak_floats", peak - gs.peak_floats);
+                gs.peak_floats = peak;
+            }
+        }
+
+        Ok(RoundOutcome {
+            round,
+            collected,
+            missing,
+            agg_seconds,
+            selected,
+            overlap_saved_us: 0,
         })
     }
 

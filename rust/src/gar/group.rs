@@ -1,0 +1,749 @@
+//! Two-level hierarchical aggregation: the group layer.
+//!
+//! The paper's O(n²) selection cost is paid over whatever row count the
+//! root GAR sees. This module shrinks that count from `n` workers to
+//! `g` *groups*: workers are partitioned into contiguous groups, each
+//! group pre-reduces its members' gradients to one mean vector as the
+//! gradients **stream in**, and the root GAR's `select`/`combine` runs
+//! over the `g` group rows (the two-level composition of Farhadkhani et
+//! al. 2022 — aggregating means of honest subsets preserves the
+//! resilience argument as long as the root rule tolerates
+//! `f_root = ⌈f·g/n⌉` Byzantine rows).
+//!
+//! ## Determinism: the fixed positional pairwise tree
+//!
+//! IEEE f32 addition is commutative but not associative, so a group sum
+//! naively accumulated in arrival order would differ between transports
+//! and thread counts. [`GroupReducer`] therefore merges member
+//! contributions over a **fixed-shape balanced positional tree**: member
+//! `p` of a group is leaf `(level 0, index p)`; whenever a node's
+//! sibling `(level, index ^ 1)` is present the pair merges eagerly into
+//! `(level + 1, index >> 1)`, always adding the odd-index operand into
+//! the even-index operand. The post-ingest slot state is a *canonical*
+//! function of the set of delivered leaves (eager merging leaves exactly
+//! the maximal complete aligned subtrees), and the finalize pass
+//! promotes leftovers bottom-up in fixed `(level, index)` order with
+//! pass-through for absent siblings — so the group value is a pure
+//! function of **which** members delivered, never of arrival order,
+//! thread count, or transport. `rust/tests/prop_groups.rs` pins this
+//! across all three transports.
+//!
+//! ## Streaming: per-block trees and the memory bound
+//!
+//! Reduction happens per [`BLOCK`]-coordinate block (the codec block
+//! grid), so the socket transport can feed chunks into the tree as they
+//! arrive instead of reassembling whole gradients, and the pooled
+//! transport's per-worker arena degenerates to an empty delivery
+//! notification. Resident gradient memory is the live tree partials
+//! plus at most one partial block staged per worker — O(g·d·log s +
+//! n·block) against the flat path's O(n·d) — and the reducer keeps an
+//! exact float ledger ([`GroupReducer::peak_resident_floats`]) that the
+//! strict-invariants build cross-checks at every finalize.
+//!
+//! A member whose connection dies mid-gradient leaves its already
+//! merged prefix blocks in the trees (streaming cannot un-merge);
+//! per-block delivery counts make that case well defined — each block's
+//! mean divides by the leaves *that block* received. Under complete
+//! delivery every block count equals the member count and the value is
+//! the plain member mean. The worker still counts as missing for
+//! fallback/metrics purposes (its leaf never completed).
+
+use crate::codec::BLOCK;
+use crate::tensor::GradMatrix;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// How the cluster's workers are partitioned into groups.
+///
+/// Honest workers `0..n−byz` land in `honest_groups` contiguous,
+/// near-equal groups `0..honest_groups`; the simulated Byzantine ids
+/// `n−byz..n` land in the trailing `byz_groups = ⌈byz·g/n⌉` groups, so a
+/// forged *group row* stands for a coalition-controlled group exactly
+/// like a forged worker row does on the flat path.
+#[derive(Debug)]
+pub struct GroupMap {
+    n: usize,
+    byz: usize,
+    groups: usize,
+    byz_groups: usize,
+    /// Per worker (all `n`): its group id.
+    of_worker: Vec<usize>,
+    /// Per group: member worker ids, ascending and contiguous.
+    members: Vec<Vec<usize>>,
+}
+
+impl GroupMap {
+    /// Partition `n` workers (`byz` of them Byzantine) into `groups`
+    /// groups. Fails when a side of the partition would produce an
+    /// empty group.
+    pub fn new(n: usize, byz: usize, groups: usize) -> Result<Arc<Self>> {
+        anyhow::ensure!(groups >= 1, "groups must be ≥ 1, got {groups}");
+        anyhow::ensure!(groups <= n, "groups = {groups} exceeds n = {n}");
+        anyhow::ensure!(byz <= n, "byzantine count {byz} exceeds n = {n}");
+        let honest = n - byz;
+        let byz_groups = byz_groups_for(n, byz, groups);
+        let honest_groups = groups - byz_groups;
+        anyhow::ensure!(
+            honest_groups >= 1 && honest_groups <= honest,
+            "groups = {groups} with byz = {byz} leaves {honest_groups} honest group(s) \
+             for {honest} honest worker(s)"
+        );
+        let mut of_worker = vec![0usize; n];
+        let mut members = Vec::with_capacity(groups);
+        for k in 0..honest_groups {
+            let start = k * honest / honest_groups;
+            let end = (k + 1) * honest / honest_groups;
+            for w in start..end {
+                of_worker[w] = k;
+            }
+            members.push((start..end).collect());
+        }
+        for j in 0..byz_groups {
+            let start = honest + j * byz / byz_groups;
+            let end = honest + (j + 1) * byz / byz_groups;
+            for w in start..end {
+                of_worker[w] = honest_groups + j;
+            }
+            members.push((start..end).collect());
+        }
+        debug_assert!(members.iter().all(|m| !m.is_empty()));
+        Ok(Arc::new(Self {
+            n,
+            byz,
+            groups,
+            byz_groups,
+            of_worker,
+            members,
+        }))
+    }
+
+    /// Total worker count (honest + Byzantine).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Byzantine worker count.
+    pub fn byz(&self) -> usize {
+        self.byz
+    }
+
+    /// Total group count `g` — the root GAR's row count.
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// Leading groups holding honest workers.
+    pub fn honest_groups(&self) -> usize {
+        self.groups - self.byz_groups
+    }
+
+    /// Trailing groups standing for the Byzantine coalition.
+    pub fn byz_groups(&self) -> usize {
+        self.byz_groups
+    }
+
+    /// The group holding `worker`.
+    pub fn group_of(&self, worker: usize) -> usize {
+        self.of_worker[worker]
+    }
+
+    /// `worker`'s leaf position within its group's pairwise tree.
+    pub fn position(&self, worker: usize) -> usize {
+        worker - self.members[self.of_worker[worker]][0]
+    }
+
+    /// Member worker ids of group `g`, ascending.
+    pub fn members(&self, g: usize) -> &[usize] {
+        &self.members[g]
+    }
+}
+
+/// `⌈byz·g/n⌉` — group-level Byzantine budget for a `(n, byz)` cluster
+/// partitioned into `g` groups (0 when `byz` is 0).
+pub fn byz_groups_for(n: usize, byz: usize, groups: usize) -> usize {
+    (byz * groups).div_ceil(n.max(1))
+}
+
+/// `⌈f·g/n⌉` — the declared tolerance the root GAR must be instantiated
+/// with when `f` of `n` workers translate to `g` groups.
+pub fn root_f_for(n: usize, f: usize, groups: usize) -> usize {
+    (f * groups).div_ceil(n.max(1))
+}
+
+/// Outcome of feeding a whole gradient into the reducer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FullIngest {
+    /// Merged; the worker counts as delivered.
+    Accepted,
+    /// Wrong length — rejected without touching the trees.
+    BadLen,
+    /// Not the round being collected — ignored.
+    Stale,
+}
+
+/// Outcome of feeding one in-order chunk into the reducer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkIngest {
+    /// Merged up to the chunk's end; more chunks expected.
+    Accepted,
+    /// This chunk completed the worker's gradient.
+    Completed,
+    /// Offset not in order / length overrun — rejected.
+    Malformed,
+    /// Not the round being collected — ignored.
+    Stale,
+}
+
+/// One block's merge state: live tree nodes keyed `(level, index)` plus
+/// the number of leaves merged so far. `BTreeMap` (not hash) so the
+/// finalize sweep iterates in the fixed `(level, index)` order the
+/// determinism argument needs.
+#[derive(Default)]
+struct BlockAcc {
+    slots: BTreeMap<(u32, u32), Vec<f32>>,
+    count: usize,
+}
+
+/// Per-round mutable state, behind the reducer's single mutex.
+struct ReducerInner {
+    round: u64,
+    /// Per honest worker: floats ingested so far this round.
+    cursor: Vec<usize>,
+    /// Per honest worker: the round `cursor` counts for.
+    worker_round: Vec<u64>,
+    /// Per honest worker: completed a full gradient this round.
+    delivered: Vec<bool>,
+    /// Per honest worker: the staged prefix of its current block
+    /// (chunks need not be block-aligned; always `< block length`).
+    stage: Vec<Vec<f32>>,
+    /// Per honest group × block: the pairwise-tree state.
+    groups: Vec<Vec<BlockAcc>>,
+    /// Float ledger: live floats across all slots and stages.
+    resident: usize,
+    /// High-water mark of `resident` since construction.
+    peak: usize,
+}
+
+/// Streaming, order-independent group pre-reducer — see the module docs
+/// for the tree construction and its determinism/memory contracts.
+/// Shared by the transports (chunk/full ingest) and the coordinator
+/// (finalize), so all methods take `&self` and serialize internally.
+pub struct GroupReducer {
+    map: Arc<GroupMap>,
+    d: usize,
+    nblocks: usize,
+    inner: Mutex<ReducerInner>,
+}
+
+impl GroupReducer {
+    /// Reducer for `d`-coordinate gradients under `map`'s partition.
+    pub fn new(map: Arc<GroupMap>, d: usize) -> Self {
+        let honest = map.n() - map.byz();
+        let nblocks = d.div_ceil(BLOCK).max(1);
+        let honest_groups = map.honest_groups();
+        let inner = ReducerInner {
+            round: 0,
+            cursor: vec![0; honest],
+            worker_round: vec![0; honest],
+            delivered: vec![false; honest],
+            stage: (0..honest).map(|_| Vec::new()).collect(),
+            groups: (0..honest_groups)
+                .map(|_| (0..nblocks).map(|_| BlockAcc::default()).collect())
+                .collect(),
+            resident: 0,
+            peak: 0,
+        };
+        Self {
+            map,
+            d,
+            nblocks,
+            inner: Mutex::new(inner),
+        }
+    }
+
+    /// Gradient length this reducer was built for.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The worker → group partition.
+    pub fn map(&self) -> &Arc<GroupMap> {
+        &self.map
+    }
+
+    /// Start collecting `round`: drops any partial state of the previous
+    /// round and resets the per-worker cursors.
+    pub fn begin_round(&self, round: u64) {
+        let mut inner = self.lock();
+        inner.round = round;
+        for c in inner.cursor.iter_mut() {
+            *c = 0;
+        }
+        for f in inner.delivered.iter_mut() {
+            *f = false;
+        }
+        for s in inner.stage.iter_mut() {
+            s.clear();
+            s.shrink_to_fit();
+        }
+        for g in inner.groups.iter_mut() {
+            for b in g.iter_mut() {
+                b.slots.clear();
+                b.count = 0;
+            }
+        }
+        inner.resident = 0;
+    }
+
+    /// Feed a whole `d`-length gradient from `worker` — the
+    /// threaded-transport / coordinator-side ingest path. Iterates the
+    /// block grid through the same tree merge the chunk path uses, so
+    /// the two paths are bit-identical.
+    pub fn ingest_full(&self, worker: usize, round: u64, gradient: &[f32]) -> FullIngest {
+        if gradient.len() != self.d {
+            return FullIngest::BadLen;
+        }
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        if round != inner.round {
+            return FullIngest::Stale;
+        }
+        if inner.delivered[worker] {
+            // Duplicate delivery (retried round): first one wins.
+            return FullIngest::Accepted;
+        }
+        // A full ingest supersedes any staged chunk prefix.
+        self.reset_worker(inner, worker, round);
+        let (group, pos) = (self.map.group_of(worker), self.map.position(worker));
+        for b in 0..self.nblocks {
+            let lo = b * BLOCK;
+            let hi = (lo + BLOCK).min(self.d);
+            if lo >= hi {
+                break;
+            }
+            let leaf = gradient[lo..hi].to_vec();
+            inner.resident += leaf.len();
+            merge_leaf(&mut inner.groups[group][b], 0, pos as u32, leaf, &mut inner.resident);
+        }
+        inner.cursor[worker] = self.d;
+        inner.delivered[worker] = true;
+        inner.peak = inner.peak.max(inner.resident);
+        FullIngest::Accepted
+    }
+
+    /// Feed the next in-order chunk of `worker`'s round-`round` gradient
+    /// (`offset` must equal the floats ingested so far; a new round
+    /// starts at 0). Completed blocks merge into the group tree
+    /// immediately; at most one partial block stays staged per worker.
+    pub fn ingest_chunk(
+        &self,
+        worker: usize,
+        round: u64,
+        offset: usize,
+        data: &[f32],
+    ) -> ChunkIngest {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        if round != inner.round {
+            return ChunkIngest::Stale;
+        }
+        if inner.worker_round[worker] != round {
+            if offset != 0 {
+                return ChunkIngest::Malformed;
+            }
+            self.reset_worker(inner, worker, round);
+        }
+        if offset != inner.cursor[worker] || offset + data.len() > self.d {
+            return ChunkIngest::Malformed;
+        }
+        let (group, pos) = (self.map.group_of(worker), self.map.position(worker));
+        let mut rest = data;
+        while !rest.is_empty() {
+            let cur = inner.cursor[worker];
+            let block = cur / BLOCK;
+            let block_lo = block * BLOCK;
+            let block_len = (block_lo + BLOCK).min(self.d) - block_lo;
+            let staged = cur - block_lo;
+            crate::strict_assert_eq!(staged, inner.stage[worker].len());
+            let take = (block_len - staged).min(rest.len());
+            inner.stage[worker].extend_from_slice(&rest[..take]);
+            inner.resident += take;
+            inner.cursor[worker] = cur + take;
+            rest = &rest[take..];
+            if staged + take == block_len {
+                let leaf = std::mem::take(&mut inner.stage[worker]);
+                merge_leaf(
+                    &mut inner.groups[group][block],
+                    0,
+                    pos as u32,
+                    leaf,
+                    &mut inner.resident,
+                );
+            }
+        }
+        inner.peak = inner.peak.max(inner.resident);
+        if inner.cursor[worker] == self.d {
+            inner.delivered[worker] = true;
+            ChunkIngest::Completed
+        } else {
+            ChunkIngest::Accepted
+        }
+    }
+
+    /// Whether `worker` completed a full gradient for `round` — the
+    /// check behind the empty-slice delivery notifications the pooled
+    /// and socket backends emit in grouped mode.
+    pub fn delivered(&self, worker: usize, round: u64) -> bool {
+        let inner = self.lock();
+        inner.round == round && inner.delivered[worker]
+    }
+
+    /// Close the round: write each honest group's per-block mean into
+    /// row `g` of `grads` (`honest_groups × d` or larger) and empty the
+    /// trees. Returns, per honest group, whether any block received a
+    /// contribution (a group with none needs the caller's fallback).
+    pub fn finalize_into(&self, grads: &mut GradMatrix) -> Vec<bool> {
+        let honest_groups = self.map.honest_groups();
+        assert!(grads.n() >= honest_groups && grads.d() == self.d);
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let mut contributed = vec![false; honest_groups];
+        for g in 0..honest_groups {
+            let row = grads.row_mut(g);
+            for b in 0..self.nblocks {
+                let lo = b * BLOCK;
+                let hi = (lo + BLOCK).min(self.d);
+                if lo >= hi {
+                    break;
+                }
+                // Split-borrow: the block state out of `inner.groups`,
+                // the ledger stays addressable.
+                let acc = std::mem::take(&mut inner.groups[g][b]);
+                let (root, count, freed) = finalize_block(acc);
+                inner.resident -= freed;
+                let out = &mut row[lo..hi];
+                match root {
+                    Some(root) if count > 0 => {
+                        contributed[g] = true;
+                        let inv = 1.0f32 / count as f32;
+                        for (o, v) in out.iter_mut().zip(root.iter()) {
+                            *o = v * inv;
+                        }
+                        inner.resident -= root.len();
+                    }
+                    _ => out.fill(0.0),
+                }
+            }
+        }
+        // Ledger cross-check: every slot is gone; only staged partial
+        // blocks of never-completed workers may remain resident.
+        crate::strict_assert_eq!(
+            inner.resident,
+            inner.stage.iter().map(|s| s.len()).sum::<usize>()
+        );
+        contributed
+    }
+
+    /// High-water mark of resident gradient floats (tree partials +
+    /// staged partial blocks) since construction — the arena-accounting
+    /// probe behind the O(g·d + n·block) memory claim.
+    pub fn peak_resident_floats(&self) -> usize {
+        self.lock().peak
+    }
+
+    /// Currently resident gradient floats.
+    pub fn resident_floats(&self) -> usize {
+        self.lock().resident
+    }
+
+    fn reset_worker(&self, inner: &mut ReducerInner, worker: usize, round: u64) {
+        inner.resident -= inner.stage[worker].len();
+        inner.stage[worker].clear();
+        inner.cursor[worker] = 0;
+        inner.worker_round[worker] = round;
+        inner.delivered[worker] = false;
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ReducerInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Eagerly merge a leaf (or promoted node) into a block tree: while the
+/// sibling `(level, idx ^ 1)` is live, fold the pair — odd index added
+/// into even index, so the operand order is position-fixed — and carry
+/// the result to `(level + 1, idx >> 1)`.
+fn merge_leaf(acc: &mut BlockAcc, level: u32, idx: u32, buf: Vec<f32>, resident: &mut usize) {
+    if level == 0 {
+        acc.count += 1;
+    }
+    let (mut level, mut idx, mut buf) = (level, idx, buf);
+    loop {
+        let Some(other) = acc.slots.remove(&(level, idx ^ 1)) else {
+            // Double delivery of a leaf position is excluded by the
+            // per-worker cursor, so the landing slot must be free.
+            crate::strict_assert!(!acc.slots.contains_key(&(level, idx)));
+            acc.slots.insert((level, idx), buf);
+            return;
+        };
+        *resident -= other.len();
+        let (mut lo, hi) = if idx % 2 == 0 { (buf, other) } else { (other, buf) };
+        for k in 0..hi.len() {
+            lo[k] += hi[k];
+        }
+        buf = lo;
+        level += 1;
+        idx >>= 1;
+    }
+}
+
+/// Collapse a block's leftover nodes bottom-up in `(level, index)`
+/// order, passing lone nodes through absent siblings, until one root
+/// remains. Returns `(root, leaf count, floats freed by merges)`.
+fn finalize_block(acc: BlockAcc) -> (Option<Vec<f32>>, usize, usize) {
+    let BlockAcc { mut slots, count } = acc;
+    let mut freed = 0usize;
+    while slots.len() > 1 {
+        let &(level, idx) = slots.keys().next().expect("len > 1");
+        let buf = slots.remove(&(level, idx)).expect("just seen");
+        let parent = (level + 1, idx >> 1);
+        match slots.get_mut(&parent) {
+            Some(dst) => {
+                // The occupant rose from the lower-index subtree (the
+                // sweep is ascending), so occupant += incoming keeps the
+                // left-to-right operand order.
+                for k in 0..buf.len() {
+                    dst[k] += buf[k];
+                }
+                freed += buf.len();
+            }
+            None => {
+                slots.insert(parent, buf);
+            }
+        }
+    }
+    let root = slots.into_values().next();
+    (root, count, freed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad_for(worker: usize, d: usize) -> Vec<f32> {
+        (0..d)
+            .map(|j| ((worker * 31 + j * 7) % 101) as f32 * 0.25 - 12.0)
+            .collect()
+    }
+
+    fn finalize(r: &GroupReducer, honest_groups: usize) -> (GradMatrix, Vec<bool>) {
+        let mut m = GradMatrix::zeros(honest_groups, r.d());
+        let c = r.finalize_into(&mut m);
+        (m, c)
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_total() {
+        let map = GroupMap::new(16, 2, 8).unwrap();
+        assert_eq!(map.honest_groups(), 7);
+        assert_eq!(map.byz_groups(), 1);
+        let mut seen = vec![false; 16];
+        for g in 0..map.groups() {
+            for &w in map.members(g) {
+                assert!(!seen[w]);
+                seen[w] = true;
+                assert_eq!(map.group_of(w), g);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Byzantine ids live in the trailing groups only.
+        assert!(map.members(7).iter().all(|&w| w >= 14));
+    }
+
+    #[test]
+    fn partition_rejects_degenerate_shapes() {
+        assert!(GroupMap::new(4, 0, 5).is_err()); // more groups than workers
+        assert!(GroupMap::new(4, 4, 2).is_err()); // no honest group left
+        assert!(GroupMap::new(8, 0, 0).is_err());
+    }
+
+    #[test]
+    fn group_value_is_arrival_order_independent() {
+        // 5 members, d spanning two blocks (tail block shorter): every
+        // ingest order and chunking must produce bit-identical means.
+        let d = BLOCK + 37;
+        let map = GroupMap::new(5, 0, 1).unwrap();
+        let reference = {
+            let r = GroupReducer::new(Arc::clone(&map), d);
+            r.begin_round(1);
+            for w in 0..5 {
+                assert_eq!(r.ingest_full(w, 1, &grad_for(w, d)), FullIngest::Accepted);
+            }
+            finalize(&r, 1).0.row(0).to_vec()
+        };
+        let orders: [[usize; 5]; 4] =
+            [[4, 3, 2, 1, 0], [2, 0, 4, 1, 3], [1, 4, 0, 3, 2], [3, 1, 4, 2, 0]];
+        for order in orders {
+            let r = GroupReducer::new(Arc::clone(&map), d);
+            r.begin_round(1);
+            for &w in &order {
+                r.ingest_full(w, 1, &grad_for(w, d));
+            }
+            assert_eq!(finalize(&r, 1).0.row(0), &reference[..], "order {order:?}");
+        }
+        // Interleaved chunk streaming at an unaligned chunk size.
+        let r = GroupReducer::new(Arc::clone(&map), d);
+        r.begin_round(1);
+        let chunk = 1000usize;
+        let grads: Vec<Vec<f32>> = (0..5).map(|w| grad_for(w, d)).collect();
+        let mut offsets = [0usize; 5];
+        loop {
+            let mut progressed = false;
+            for w in (0..5).rev() {
+                let off = offsets[w];
+                if off < d {
+                    let hi = (off + chunk).min(d);
+                    let out = r.ingest_chunk(w, 1, off, &grads[w][off..hi]);
+                    assert!(matches!(out, ChunkIngest::Accepted | ChunkIngest::Completed));
+                    offsets[w] = hi;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert_eq!(finalize(&r, 1).0.row(0), &reference[..]);
+    }
+
+    #[test]
+    fn mean_matches_direct_average_and_missing_members_rescale() {
+        let d = 96;
+        let map = GroupMap::new(4, 0, 1).unwrap();
+        let r = GroupReducer::new(Arc::clone(&map), d);
+        r.begin_round(3);
+        for w in [0usize, 2, 3] {
+            r.ingest_full(w, 3, &grad_for(w, d));
+        }
+        let (m, contributed) = finalize(&r, 1);
+        assert_eq!(contributed, vec![true]);
+        for j in 0..d {
+            let want: f32 = (grad_for(0, d)[j] + grad_for(2, d)[j] + grad_for(3, d)[j]) / 3.0;
+            assert!((m.row(0)[j] - want).abs() < 1e-5, "coord {j}");
+        }
+    }
+
+    #[test]
+    fn stale_malformed_and_empty_groups_are_handled() {
+        let d = 64;
+        let map = GroupMap::new(4, 0, 2).unwrap();
+        let r = GroupReducer::new(Arc::clone(&map), d);
+        r.begin_round(2);
+        assert_eq!(r.ingest_full(0, 1, &grad_for(0, d)), FullIngest::Stale);
+        assert_eq!(r.ingest_full(0, 2, &vec![0.0; d - 1]), FullIngest::BadLen);
+        assert_eq!(r.ingest_chunk(0, 2, 5, &[1.0; 4]), ChunkIngest::Malformed);
+        assert!(!r.delivered(0, 2));
+        // Group 1 delivers, group 0 stays silent.
+        r.ingest_full(2, 2, &grad_for(2, d));
+        r.ingest_full(3, 2, &grad_for(3, d));
+        let (m, contributed) = finalize(&r, 2);
+        assert_eq!(contributed, vec![false, true]);
+        assert!(m.row(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mid_stream_death_contributes_prefix_blocks_only() {
+        // Worker 1 dies after its first block: that block's mean divides
+        // by 2, the tail divides by 1 — and the worker is not delivered.
+        let d = BLOCK + 10;
+        let map = GroupMap::new(2, 0, 1).unwrap();
+        let r = GroupReducer::new(Arc::clone(&map), d);
+        r.begin_round(1);
+        let (g0, g1) = (grad_for(0, d), grad_for(1, d));
+        r.ingest_full(0, 1, &g0);
+        assert_eq!(r.ingest_chunk(1, 1, 0, &g1[..BLOCK]), ChunkIngest::Accepted);
+        assert!(!r.delivered(1, 1));
+        let (m, contributed) = finalize(&r, 1);
+        assert_eq!(contributed, vec![true]);
+        assert!((m.row(0)[0] - (g0[0] + g1[0]) / 2.0).abs() < 1e-6);
+        assert!((m.row(0)[BLOCK] - g0[BLOCK]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chunked_ingest_is_bit_identical_to_full_ingest() {
+        let d = 2 * BLOCK + 123;
+        let map = GroupMap::new(3, 0, 1).unwrap();
+        let full = {
+            let r = GroupReducer::new(Arc::clone(&map), d);
+            r.begin_round(7);
+            for w in 0..3 {
+                r.ingest_full(w, 7, &grad_for(w, d));
+            }
+            finalize(&r, 1).0.row(0).to_vec()
+        };
+        for chunk in [1usize, 64, BLOCK, BLOCK + 1, d] {
+            let r = GroupReducer::new(Arc::clone(&map), d);
+            r.begin_round(7);
+            for w in 0..3 {
+                let g = grad_for(w, d);
+                let mut off = 0;
+                while off < d {
+                    let hi = (off + chunk).min(d);
+                    r.ingest_chunk(w, 7, off, &g[off..hi]);
+                    off = hi;
+                }
+                assert!(r.delivered(w, 7));
+            }
+            assert_eq!(finalize(&r, 1).0.row(0), &full[..], "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn arena_accounting_never_approaches_the_flat_matrix() {
+        // The satellite memory check: n = 512 workers, d = 1e5, g = 8.
+        // In-order full-gradient ingest keeps at most a binary counter of
+        // partials per group; the ledger's high-water mark must stay
+        // within the O(g·d·log s + n·block) budget and far under the
+        // flat path's n·d arena.
+        let (n, d, g) = (512usize, 100_000usize, 8usize);
+        let map = GroupMap::new(n, 0, g).unwrap();
+        let r = GroupReducer::new(Arc::clone(&map), d);
+        r.begin_round(1);
+        let grad = vec![0.5f32; d];
+        for w in 0..n {
+            assert_eq!(r.ingest_full(w, 1, &grad), FullIngest::Accepted);
+        }
+        let s = n / g; // members per group
+        let levels = usize::BITS as usize - s.leading_zeros() as usize; // ⌈log2 s⌉ + 1
+        let budget = g * d * (levels + 1) + n * BLOCK;
+        let peak = r.peak_resident_floats();
+        assert!(peak <= budget, "peak {peak} floats exceeds budget {budget}");
+        assert!(peak * 4 < n * d, "peak {peak} is not ≪ n·d = {}", n * d);
+        let mut m = GradMatrix::zeros(g, d);
+        let contributed = r.finalize_into(&mut m);
+        assert!(contributed.iter().all(|&c| c));
+        assert!(m.flat().iter().all(|&v| (v - 0.5).abs() < 1e-6));
+        assert_eq!(r.resident_floats(), 0);
+    }
+
+    #[test]
+    fn rounds_reset_state() {
+        let d = 32;
+        let map = GroupMap::new(2, 0, 1).unwrap();
+        let r = GroupReducer::new(Arc::clone(&map), d);
+        r.begin_round(1);
+        r.ingest_chunk(0, 1, 0, &grad_for(0, d)[..16]);
+        r.begin_round(2);
+        assert_eq!(r.resident_floats(), 0);
+        r.ingest_full(0, 2, &grad_for(0, d));
+        r.ingest_full(1, 2, &grad_for(1, d));
+        assert!(r.delivered(0, 2) && r.delivered(1, 2));
+        let (m, c) = finalize(&r, 1);
+        assert_eq!(c, vec![true]);
+        let want: Vec<f32> = (0..d)
+            .map(|j| (grad_for(0, d)[j] + grad_for(1, d)[j]) / 2.0)
+            .collect();
+        assert_eq!(m.row(0), &want[..]);
+    }
+}

@@ -61,6 +61,7 @@
 
 mod average;
 mod bulyan;
+pub mod group;
 mod krum;
 mod median;
 mod pairwise;
@@ -71,6 +72,7 @@ mod trimmed_mean;
 
 pub use average::Average;
 pub use bulyan::{Bulyan, MultiBulyan};
+pub use group::{GroupMap, GroupReducer};
 pub use krum::{krum_scores_from_distances, Krum, MultiKrum};
 pub use median::CoordMedian;
 pub use pairwise::{

@@ -18,12 +18,22 @@
 //! ```text
 //! spec  := (stage "+")* gar
 //! stage := "rmom(" beta ")"          # resilient momentum, beta ∈ [0, 1)
+//!        | "group(" g ")"            # two-level aggregation, g ≥ 1 groups
 //! gar   := average | median | trimmed-mean | krum | multi-krum
 //!        | bulyan | multi-bulyan
 //! ```
 //!
 //! Examples: `multi-bulyan` (no stages), `rmom(0.9)+multi-bulyan`,
-//! `rmom(0.99)+multi-krum`. Parsed by [`GarSpec`].
+//! `group(8)+rmom(0.9)+multi-krum`. Parsed by [`GarSpec`].
+//!
+//! `group(g)` is special: it is the *collection* layer, not a matrix
+//! transform — the coordinator partitions workers into `g` groups and
+//! streams each group's mean through [`crate::gar::group::GroupReducer`]
+//! before any matrix stage runs, so the launcher extracts it (it must
+//! come first in the spec) instead of instantiating it, and every stage
+//! after it — including `rmom` — operates on the `g × d` *group-row*
+//! matrix (per-group momentum). It is equivalent to the config root key
+//! `groups = g`.
 
 use super::GarKind;
 use crate::runtime::{shard_zip, Parallelism, MIN_COORDS_PER_SHARD};
@@ -46,6 +56,18 @@ pub trait PreAggregate: Send + Sync {
 /// Resilient momentum: per worker `i`, `m_i ← β·m_i + (1−β)·g_i` and the
 /// worker's row is replaced by `m_i`. State is zero-initialised, so round
 /// 1 submits `(1−β)·g` (the standard bias-uncorrected EMA).
+///
+/// **Re-zero-on-shape-change policy (deliberate):** the momentum state
+/// is an `n × d` buffer whose row `i` means "worker `i`'s EMA" (or, in
+/// two-level mode, "group `i`'s EMA"). If the matrix shape ever changes
+/// — a different worker count, a different model, or a change of group
+/// membership under `group(g)` — every row's identity is void, so the
+/// whole buffer re-zeroes and the EMA restarts rather than silently
+/// attributing one entity's momentum to another. The check compares the
+/// `(n, d)` *pair*, not the product: `n×d → d×n` (and any equal-product
+/// regrouping, e.g. `group(4) → group(8)` at `g·d` constant) must also
+/// re-zero. Pinned by `shape_change_with_equal_product_resets_state`
+/// and `group_membership_change_rezeros_even_at_equal_product` below.
 pub struct ResilientMomentum {
     beta: f32,
     /// `n × d` momentum state, flat row-major; sized lazily on first
@@ -120,6 +142,11 @@ impl PreAggregate for ResilientMomentum {
 pub enum StageSpec {
     /// `rmom(beta)` — [`ResilientMomentum`].
     ResilientMomentum { beta: f32 },
+    /// `group(g)` — two-level aggregation: partition workers into `g`
+    /// groups whose streamed means become the matrix rows. Not a matrix
+    /// transform — the launcher extracts it (see module docs) and wires
+    /// [`crate::gar::group::GroupReducer`] into the transport instead.
+    GroupAggregate { groups: usize },
 }
 
 impl StageSpec {
@@ -133,6 +160,12 @@ impl StageSpec {
                     "rmom: beta must be in [0, 1), got {beta}"
                 );
             }
+            StageSpec::GroupAggregate { groups } => {
+                anyhow::ensure!(
+                    *groups >= 1,
+                    "group: need at least 1 group, got {groups}"
+                );
+            }
         }
         Ok(())
     }
@@ -143,6 +176,11 @@ impl StageSpec {
             StageSpec::ResilientMomentum { beta } => {
                 Ok(Box::new(ResilientMomentum::new(*beta, par.clone())?))
             }
+            StageSpec::GroupAggregate { groups } => anyhow::bail!(
+                "group({groups}) is the collection layer, applied by the \
+                 coordinator during streaming collection — it cannot be \
+                 instantiated as a matrix stage (launcher bug)"
+            ),
         }
     }
 }
@@ -151,6 +189,7 @@ impl std::fmt::Display for StageSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             StageSpec::ResilientMomentum { beta } => write!(f, "rmom({beta})"),
+            StageSpec::GroupAggregate { groups } => write!(f, "group({groups})"),
         }
     }
 }
@@ -177,8 +216,20 @@ impl std::str::FromStr for StageSpec {
                 spec.validate()?;
                 Ok(spec)
             }
+            "group" | "group-aggregate" => {
+                let arg = rest
+                    .and_then(|r| r.strip_suffix(')'))
+                    .ok_or_else(|| anyhow::anyhow!("stage '{s}': expected group(g)"))?;
+                let groups: usize = arg
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("stage '{s}': bad group count: {e}"))?;
+                let spec = StageSpec::GroupAggregate { groups };
+                spec.validate()?;
+                Ok(spec)
+            }
             other => anyhow::bail!(
-                "unknown pre-aggregation stage '{other}' (expected: rmom(beta))"
+                "unknown pre-aggregation stage '{other}' (expected: rmom(beta) or group(g))"
             ),
         }
     }
@@ -200,6 +251,40 @@ impl GarSpec {
             stages: Vec::new(),
             kind,
         }
+    }
+
+    /// The `group(g)` stage, if present. Because grouping is the
+    /// collection layer (it decides what the matrix *rows are*), it must
+    /// be the first stage and appear at most once; any other placement is
+    /// rejected here so both config validation and the launcher share one
+    /// rule.
+    pub fn group_stage(&self) -> Result<Option<usize>> {
+        let mut found = None;
+        for (i, stage) in self.stages.iter().enumerate() {
+            if let StageSpec::GroupAggregate { groups } = stage {
+                anyhow::ensure!(
+                    i == 0,
+                    "GAR spec '{self}': group({groups}) must be the first \
+                     stage — it defines the matrix rows every later stage \
+                     operates on"
+                );
+                anyhow::ensure!(
+                    found.is_none(),
+                    "GAR spec '{self}': group(...) may appear at most once"
+                );
+                found = Some(*groups);
+            }
+        }
+        Ok(found)
+    }
+
+    /// The stages the coordinator instantiates as matrix transforms —
+    /// everything except `group(g)`, which the launcher wires into the
+    /// transport instead.
+    pub fn matrix_stages(&self) -> impl Iterator<Item = &StageSpec> {
+        self.stages
+            .iter()
+            .filter(|s| !matches!(s, StageSpec::GroupAggregate { .. }))
     }
 }
 
@@ -315,6 +400,60 @@ mod tests {
             g2.flat().iter().all(|&v| v == 1.0),
             "stale momentum leaked across a shape change: {:?}",
             &g2.flat()[..4]
+        );
+    }
+
+    #[test]
+    fn group_stage_round_trips_and_is_position_checked() {
+        for text in [
+            "group(8)+multi-bulyan",
+            "group(4)+rmom(0.9)+trimmed-mean",
+            "group(1)+krum",
+        ] {
+            let spec: GarSpec = text.parse().unwrap();
+            assert_eq!(spec.to_string(), text);
+            assert!(spec.group_stage().unwrap().is_some());
+        }
+        let spec: GarSpec = "group(4)+rmom(0.9)+trimmed-mean".parse().unwrap();
+        assert_eq!(spec.group_stage().unwrap(), Some(4));
+        assert_eq!(
+            spec.matrix_stages().copied().collect::<Vec<_>>(),
+            vec![StageSpec::ResilientMomentum { beta: 0.9 }]
+        );
+        let flat: GarSpec = "rmom(0.9)+krum".parse().unwrap();
+        assert_eq!(flat.group_stage().unwrap(), None);
+
+        assert!("group(0)+krum".parse::<GarSpec>().is_err());
+        assert!("group()+krum".parse::<GarSpec>().is_err());
+        assert!("group(2.5)+krum".parse::<GarSpec>().is_err());
+        // Parses, but placement is rejected by group_stage().
+        let misplaced: GarSpec = "rmom(0.9)+group(4)+krum".parse().unwrap();
+        assert!(misplaced.group_stage().is_err());
+        let doubled: GarSpec = "group(4)+group(4)+krum".parse().unwrap();
+        assert!(doubled.group_stage().is_err());
+        // And instantiating group(g) as a matrix stage is a launcher bug.
+        assert!(StageSpec::GroupAggregate { groups: 4 }
+            .instantiate(&Parallelism::sequential())
+            .is_err());
+    }
+
+    #[test]
+    fn group_membership_change_rezeros_even_at_equal_product() {
+        // Satellite: under group(g) the rows are *group* means, so a
+        // regrouping that changes g (here 4×6 → 6×4 at equal g·d) makes
+        // every momentum row refer to a different member set. The EMA
+        // must restart from zero, not attribute group 0's old momentum
+        // to the new group 0.
+        let mut stage = ResilientMomentum::new(0.5, Parallelism::sequential()).unwrap();
+        let mut r1 = GradMatrix::from_fn(4, 6, |_, _| 2.0);
+        stage.apply(&mut r1, 1).unwrap();
+        assert!(r1.flat().iter().all(|&v| v == 1.0), "m_1 = g/2");
+        let mut r2 = GradMatrix::from_fn(6, 4, |_, _| 2.0);
+        stage.apply(&mut r2, 2).unwrap();
+        assert!(
+            r2.flat().iter().all(|&v| v == 1.0),
+            "regrouping at equal product must re-zero momentum: {:?}",
+            &r2.flat()[..4]
         );
     }
 

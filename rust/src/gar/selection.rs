@@ -93,6 +93,14 @@ pub struct Selection {
     /// selections; iteration `t` owns `sets[set_offsets[t]..set_offsets[t+1]]`.
     pub(crate) sets: Vec<usize>,
     pub(crate) set_offsets: Vec<usize>,
+    /// Group provenance under two-level aggregation: when the selection
+    /// ran over group rows rather than worker rows, the partition that
+    /// produced them — so precision/recall metrics can attribute a
+    /// selected group back to its underlying workers
+    /// ([`attributed_workers`](Self::attributed_workers)). `None` on the
+    /// flat path. Cleared by every `reset`, so the owning coordinator
+    /// re-stamps it after each `select_into`.
+    groups: Option<std::sync::Arc<super::group::GroupMap>>,
 }
 
 impl Default for Selection {
@@ -103,6 +111,7 @@ impl Default for Selection {
             rows: Vec::new(),
             sets: Vec::new(),
             set_offsets: Vec::new(),
+            groups: None,
         }
     }
 }
@@ -116,6 +125,40 @@ impl Selection {
         self.rows.clear();
         self.sets.clear();
         self.set_offsets.clear();
+        self.groups = None;
+    }
+
+    /// Stamp the selection with the worker → group partition its rows
+    /// were aggregated under (two-level mode).
+    pub fn set_group_provenance(&mut self, map: std::sync::Arc<super::group::GroupMap>) {
+        self.groups = Some(map);
+    }
+
+    /// The group partition behind this selection's rows, if it ran over
+    /// group rows.
+    pub fn group_provenance(&self) -> Option<&std::sync::Arc<super::group::GroupMap>> {
+        self.groups.as_ref()
+    }
+
+    /// The *worker* ids this selection attributes to: on the flat path,
+    /// [`selected_rows`](Self::selected_rows) verbatim; under group
+    /// provenance, the union of the selected groups' members, ascending —
+    /// which keeps selection precision/recall metrics expressed in
+    /// workers no matter which level the GAR ran at.
+    pub fn attributed_workers(&self) -> Vec<usize> {
+        match &self.groups {
+            None => self.rows.clone(),
+            Some(map) => {
+                let mut workers: Vec<usize> = self
+                    .rows
+                    .iter()
+                    .flat_map(|&g| map.members(g).iter().copied())
+                    .collect();
+                workers.sort_unstable();
+                workers.dedup();
+                workers
+            }
+        }
     }
 
     pub fn plan(&self) -> CombinePlan {

@@ -11,7 +11,7 @@
 //! multibulyan worker --connect ADDR --worker-id K [--dim D] [--noise X]
 //!                   [--seed S] [--batch-size B] [--chunk K] [--codec C]
 //! multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D]
-//! multibulyan bench <fig2|fig3|dscaling|slowdown|resilience|codec|cone>
+//! multibulyan bench <fig2|fig3|dscaling|dscale|slowdown|resilience|codec|cone>
 //!                   [--full] [--artifacts DIR]
 //! multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
 //! multibulyan artifacts-check [--artifacts DIR]
@@ -91,7 +91,7 @@ USAGE:
                     [--steps S] [--batch-size B] [--lr LR] [--momentum MU]
                     [--eval-every K] [--seed S] [--threads T]
                     [--transport threaded|pooled|socket] [--collect first-m|all]
-                    [--overlap off|prefix] [--overlap-window W]
+                    [--overlap off|prefix] [--overlap-window W] [--groups G]
                     [--codec off|raw|lossless|fp16|int8|topk]
                     [--params-checksum]
                     [--socket-listen ADDR] [--socket-chunk K]
@@ -100,7 +100,7 @@ USAGE:
                     [--seed S] [--batch-size B] [--chunk K]
                     [--codec off|raw|lossless|fp16|int8|topk] [--retry-ms MS]
   multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
-  multibulyan bench <fig2|fig3|dscaling|slowdown|threads|straggler
+  multibulyan bench <fig2|fig3|dscaling|dscale|slowdown|threads|straggler
                      |resilience|codec|cone> [--full] [--artifacts DIR]
   multibulyan bench check [--baseline FILE] [--tolerance X] [--update]
   multibulyan artifacts-check [--artifacts DIR]
@@ -144,6 +144,16 @@ Overlap: --overlap off (default; collect, then select, then combine) |
          bit-identical, the knob only paces the prefix tail)
          --params-checksum prints an FNV-1a digest of the final
          parameters (the CI determinism-matrix probe)
+Groups:  --groups G (default 1 = flat) partitions the n workers into G
+         groups; gradients stream-reduce group-wise in 4096-coordinate
+         blocks (no n×d matrix is ever materialized) and the GAR runs
+         over the G group rows with the scaled Byzantine bound
+         f_root = ceil(f·G/n). Requires --collect all, --overlap off
+         and --codec off; --groups 1 is bit-identical to omitting the
+         flag. Equivalent spelling: a leading group(G) pipeline stage,
+         e.g. --gar 'group(8)+trimmed-mean'. `bench dscale` sweeps the
+         grouped end-to-end round to d = 10^7 and gates the fitted
+         log-log slope on linearity (the CI memory/scaling probe)
 Codec:   --codec off (default; raw f32 gradient frames) | raw (identity
          encoding through the codec path — bit-identical to off) |
          lossless (byte-shuffle + RLE, bit-exact) | fp16 | int8 (per-block
@@ -244,6 +254,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 overlap: Default::default(),
                 overlap_window: 1,
                 codec: None,
+                groups: 1,
                 output_dir: None,
             }
         }
@@ -273,6 +284,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             "off" => None,
             _ => Some(c.parse()?),
         };
+    }
+    if let Some(g) = args.get("groups") {
+        exp.groups = g
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--groups {g}: {e}"))?;
     }
     if let Some(addr) = args.get("socket-listen") {
         exp.cluster.socket_listen = Some(addr.to_string());
@@ -373,18 +389,26 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let problem = Arc::new(QuadraticProblem::new(dim, noise, seed));
     let source = GradSource::quadratic(problem, worker_id, batch_size);
 
-    // The coordinator may still be binding its listener; retry for
-    // roughly --retry-ms before giving up.
+    // The coordinator may still be binding its listener (the
+    // examples/socket_cluster.sh startup race); retry with bounded
+    // exponential backoff — 50 ms doubling to a 2 s cap — until roughly
+    // --retry-ms total has elapsed, then give up with the last error.
     let mut waited = 0u64;
+    let mut backoff_ms = 50u64;
     let client = loop {
         match socket::connect(addr, worker_id, chunk, codec.unwrap_or_default()) {
             Ok(c) => break c,
             Err(e) if waited >= retry_ms => {
-                anyhow::bail!("worker {worker_id}: cannot connect to {addr}: {e:#}")
+                anyhow::bail!(
+                    "worker {worker_id}: cannot connect to {addr} \
+                     after {waited} ms of retries: {e:#}"
+                )
             }
             Err(_) => {
-                std::thread::sleep(std::time::Duration::from_millis(100));
-                waited += 100;
+                let sleep_ms = backoff_ms.min(retry_ms.saturating_sub(waited).max(1));
+                std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+                waited += sleep_ms;
+                backoff_ms = (backoff_ms * 2).min(2_000);
             }
         }
     };
@@ -469,6 +493,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 false,
             )?;
         }
+        "dscale" => {
+            // End-to-end grouped-collection d-sweep: one streamed round
+            // per dimension through the full coordinator stack, with the
+            // fitted log-log slope gated on linearity (the O(d) curve the
+            // two-level hierarchy promises). --full extends to d = 10^7.
+            let cfg = if full {
+                bench::dscaling::DscaleConfig::full_sweep()
+            } else {
+                bench::dscaling::DscaleConfig::default_sweep()
+            };
+            bench::dscaling::run_dscale(&cfg, false)?;
+        }
         "slowdown" => {
             let cfg = bench::slowdown::SlowdownConfig::default();
             bench::slowdown::run(&cfg, false)?;
@@ -548,7 +584,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown bench '{other}' \
-             (fig2|fig3|dscaling|slowdown|threads|straggler|resilience|codec|cone|check)"
+             (fig2|fig3|dscaling|dscale|slowdown|threads|straggler|resilience|codec|cone|check)"
         ),
     }
     Ok(())

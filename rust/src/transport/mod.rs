@@ -380,6 +380,13 @@ pub struct Emitter<'a> {
     faults: FaultModel,
     rng: &'a mut Rng64,
     sink: EmitterSink<'a>,
+    /// Two-level mode (pooled backend, `groups > 1`): gradients are
+    /// folded into the per-group reduction slots of this
+    /// [`GroupReducer`](crate::gar::GroupReducer) instead of being
+    /// buffered per worker; the arena slot then carries only an empty
+    /// "delivered" notification. `None` on the flat path and on the
+    /// threaded/socket backends (which ingest at the server side).
+    group: Option<&'a crate::gar::GroupReducer>,
 }
 
 enum EmitterSink<'a> {
@@ -411,6 +418,27 @@ impl Emitter<'_> {
     pub fn send(&mut self, round: u64, gradient: &[f32]) {
         if !self.faults_pass() {
             return; // dropped on the (simulated) wire
+        }
+        if let (Some(reducer), EmitterSink::Slot(slot)) = (self.group, &self.sink) {
+            // Two-level mode: the gradient group-reduces block-by-block
+            // inside the shared reducer (never buffered per worker), and
+            // the worker's arena slot becomes an *empty* fresh marker so
+            // the completion-order delivery machinery still fires — the
+            // coordinator recognises the empty slice as a grouped-mode
+            // notification and checks `GroupReducer::delivered` instead.
+            // A stale-round submission leaves the slot alone, exactly
+            // like the flat freshness rule below discards it.
+            let outcome = reducer.ingest_full(self.worker, round, gradient);
+            if !matches!(outcome, crate::gar::group::FullIngest::Stale) {
+                let mut s = lock(slot);
+                if !s.fresh || round >= s.round {
+                    s.round = round;
+                    s.fresh = true;
+                    s.coded = None;
+                    s.grad.clear();
+                }
+            }
+            return;
         }
         match &mut self.sink {
             EmitterSink::Channel(tx) => {
@@ -703,6 +731,27 @@ impl ServerEndpoint {
             ServerImpl::Threaded(s) => s.shutdown(),
             ServerImpl::Pooled(s) => s.shutdown(),
             ServerImpl::Socket(s) => s.shutdown(),
+        }
+    }
+
+    /// Install the two-level [`GroupReducer`](crate::gar::GroupReducer)
+    /// (`groups > 1`): from the next collection on, worker gradients
+    /// group-reduce block-by-block inside the reducer and the per-worker
+    /// delivery carries an *empty* slice as the "this worker delivered"
+    /// notification — the coordinator checks
+    /// [`GroupReducer::delivered`](crate::gar::GroupReducer::delivered)
+    /// and reads the `g × d` result via
+    /// [`GroupReducer::finalize_into`](crate::gar::GroupReducer::finalize_into).
+    /// On the pooled backend the ingest happens at the worker's emitter
+    /// (the arena slot shrinks to a marker); on the socket backend at
+    /// chunk reassembly (whole gradients are never buffered); on the
+    /// threaded backend this is a no-op — the channel already owns the
+    /// vector, so the coordinator ingests full gradients at delivery.
+    pub fn install_group_reducer(&mut self, reducer: std::sync::Arc<crate::gar::GroupReducer>) {
+        match &mut self.inner {
+            ServerImpl::Threaded(_) => {}
+            ServerImpl::Pooled(s) => s.install_group_reducer(reducer),
+            ServerImpl::Socket(s) => s.install_group_reducer(reducer),
         }
     }
 

@@ -133,6 +133,11 @@ struct Runtime {
     faults: FaultModel,
     par: Parallelism,
     shutdown: AtomicBool,
+    /// Two-level mode (`groups > 1`): installed by the launcher via
+    /// [`super::ServerEndpoint::install_group_reducer`]. When set, worker
+    /// emits fold into the reducer's per-group slots and the arena slot
+    /// carries only an empty "delivered" marker (see [`super::Emitter`]).
+    group: Mutex<Option<Arc<crate::gar::GroupReducer>>>,
 }
 
 /// The server's reusable drive scratch (no per-round allocation in the
@@ -258,6 +263,11 @@ impl Server {
                 let running = &drive.running[..];
                 let done = &drive.done[..];
                 let params: &[f32] = params;
+                // Two-level mode: clone the reducer handle once per slice
+                // (outside the fan-out) so every task shares it without
+                // touching the runtime's mutex on the hot path.
+                let group = lock(&rt.group).clone();
+                let group = group.as_deref();
                 let extra = usize::from(aux.is_some());
                 rt.par.run_sharded(running.len() + extra, &|k| {
                     if k >= running.len() {
@@ -288,6 +298,7 @@ impl Server {
                                 faults: rt.faults,
                                 rng,
                                 sink: EmitterSink::Slot(&cell.slot),
+                                group,
                             };
                             match catch_unwind(AssertUnwindSafe(|| {
                                 body.step_to(drive_round, params, &mut emit, target)
@@ -391,6 +402,10 @@ impl Server {
         self.drive.ready.clear();
     }
 
+    pub(super) fn install_group_reducer(&mut self, reducer: Arc<crate::gar::GroupReducer>) {
+        *lock(&self.runtime.group) = Some(reducer);
+    }
+
     pub(super) fn shutdown(&self) {
         self.runtime.shutdown.store(true, Ordering::Release);
         for cell in &self.runtime.cells {
@@ -474,6 +489,7 @@ pub(super) fn star(
         faults,
         par,
         shutdown: AtomicBool::new(false),
+        group: Mutex::new(None),
     });
     let handles = (0..n)
         .map(|id| WorkerHandle {

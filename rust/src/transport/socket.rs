@@ -777,6 +777,13 @@ struct Shared {
     stop: AtomicBool,
     /// UDS path to unlink at shutdown.
     cleanup: Option<PathBuf>,
+    /// Two-level mode (`groups > 1`): installed by the launcher via
+    /// [`super::ServerEndpoint::install_group_reducer`]. When set, each
+    /// GradientChunk frame's coordinates fold straight into the
+    /// reducer's per-group slots at reassembly — a whole gradient is
+    /// never buffered per worker — and completion is announced to the
+    /// collect session as an *empty* [`FromWorker`].
+    group: Mutex<Option<Arc<crate::gar::GroupReducer>>>,
 }
 
 /// One in-flight incremental collection — identical bookkeeping to the
@@ -909,6 +916,64 @@ impl ChunkAssembly {
     }
 }
 
+/// What [`feed_grouped`] left behind — [`Feed`] plus the grouped-mode
+/// outcomes that have no flat-path analogue.
+enum GroupFeed {
+    /// Chunk folded into the reducer; more chunks expected.
+    Accepted,
+    /// This worker's gradient completed — announce with an empty
+    /// [`FromWorker`].
+    Completed,
+    Malformed,
+    /// Stale round (or duplicate completion) — silently consumed, like
+    /// the flat session's stale discard.
+    Stale,
+    /// Codec violation, rejected with [`REJECT_CODEC`].
+    Codec,
+}
+
+/// Grouped-mode chunk path (§6.3 under `groups > 1`): decode one
+/// GradientChunk's coordinates into `scratch` (chunk-sized, reused) and
+/// fold them into the [`GroupReducer`](crate::gar::GroupReducer) at the
+/// worker's in-order cursor. Mirrors [`ChunkAssembly::feed`]'s wire
+/// validation; the in-order/bounds bookkeeping lives in the reducer.
+fn feed_grouped(
+    scratch: &mut Vec<f32>,
+    round: u64,
+    payload: &[u8],
+    negotiated: crate::codec::CodecKind,
+    reducer: &crate::gar::GroupReducer,
+    worker: usize,
+) -> GroupFeed {
+    use crate::gar::group::ChunkIngest;
+    let Some((offset, _total, count, codec_id, bytes)) = parse_chunk(payload) else {
+        return GroupFeed::Malformed;
+    };
+    let Some(codec) = crate::codec::CodecKind::from_wire(codec_id) else {
+        return GroupFeed::Codec;
+    };
+    if codec != negotiated && codec != crate::codec::CodecKind::Raw {
+        return GroupFeed::Codec;
+    }
+    let (offset, count) = (offset as usize, count as usize);
+    if count > MAX_PAYLOAD as usize / 4 {
+        return GroupFeed::Malformed;
+    }
+    if codec == crate::codec::CodecKind::Raw && bytes.len() != count * 4 {
+        return GroupFeed::Malformed;
+    }
+    scratch.clear();
+    if crate::codec::decode(codec, 0, count, bytes, scratch).is_err() {
+        return GroupFeed::Codec;
+    }
+    match reducer.ingest_chunk(worker, round, offset, scratch) {
+        ChunkIngest::Accepted => GroupFeed::Accepted,
+        ChunkIngest::Completed => GroupFeed::Completed,
+        ChunkIngest::Malformed => GroupFeed::Malformed,
+        ChunkIngest::Stale => GroupFeed::Stale,
+    }
+}
+
 /// Per-connection serve loop (§6): Hello handshake + registration, then
 /// frames until EOF/Shutdown/stop. Runs on its own reader thread.
 fn serve_conn(mut stream: Stream, shared: &Shared) {
@@ -989,6 +1054,7 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
         st.conns[worker] = Some(write_half);
     }
     let mut asm = ChunkAssembly::default();
+    let mut gscratch: Vec<f32> = Vec::new();
     loop {
         match read_frame(&mut stream, Some(&shared.stop)) {
             Ok(f) => match f.kind {
@@ -998,6 +1064,38 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
                         // registered (§6.5).
                         asm.reset();
                         send_reject(shared, worker, f.round, REJECT_MALFORMED);
+                        continue;
+                    }
+                    // Two-level mode: fold the chunk into the group
+                    // reducer as it arrives instead of reassembling the
+                    // whole gradient (the clone is one Arc bump per
+                    // frame; the reducer itself is shared).
+                    let group = lock(&shared.group).clone();
+                    if let Some(reducer) = group {
+                        match feed_grouped(
+                            &mut gscratch,
+                            f.round,
+                            &f.payload,
+                            negotiated,
+                            &reducer,
+                            worker,
+                        ) {
+                            GroupFeed::Completed => {
+                                let _ = shared.tx.send(FromWorker {
+                                    worker,
+                                    round: f.round,
+                                    gradient: Vec::new(),
+                                    coded: None,
+                                });
+                            }
+                            GroupFeed::Accepted | GroupFeed::Stale => {}
+                            GroupFeed::Malformed => {
+                                send_reject(shared, worker, f.round, REJECT_MALFORMED)
+                            }
+                            GroupFeed::Codec => {
+                                send_reject(shared, worker, f.round, REJECT_CODEC)
+                            }
+                        }
                         continue;
                     }
                     match asm.feed(f.round, &f.payload, negotiated) {
@@ -1082,6 +1180,10 @@ impl Server {
             let _ = conn.write_all(&bytes);
             let _ = conn.flush();
         }
+    }
+
+    pub(super) fn install_group_reducer(&mut self, reducer: Arc<crate::gar::GroupReducer>) {
+        *lock(&self.shared.group) = Some(reducer);
     }
 
     pub(super) fn collect_begin(&mut self, round: u64, expect: usize, timeout: Duration) {
@@ -1332,6 +1434,10 @@ impl WorkerClient {
                             chunk: self.chunk,
                             scratch: &mut scratch,
                         },
+                        // Two-level mode ingests server-side at chunk
+                        // reassembly on this backend; the client always
+                        // streams plain frames.
+                        group: None,
                     };
                     body.on_round(frame.round, &params, &mut emit);
                 }
@@ -1437,6 +1543,7 @@ pub(super) fn star(
         tx,
         stop: AtomicBool::new(false),
         cleanup,
+        group: Mutex::new(None),
     });
     {
         let shared = Arc::clone(&shared);

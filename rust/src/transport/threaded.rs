@@ -211,6 +211,11 @@ impl Worker {
                                 faults,
                                 rng: &mut rng,
                                 sink: EmitterSink::Channel(&tx),
+                                // Two-level mode ingests server-side on
+                                // this backend (the channel already owns
+                                // the vector) — see ServerEndpoint::
+                                // install_group_reducer.
+                                group: None,
                             };
                             body.on_round(round, &params, &mut emit);
                         }

@@ -166,6 +166,7 @@ fn training_through_pjrt_learns_under_attack() {
         overlap: Default::default(),
         overlap_window: 1,
         codec: None,
+        groups: 1,
         output_dir: None,
     };
     let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();

@@ -46,6 +46,7 @@ fn quadratic_exp(
         overlap: Default::default(),
         overlap_window: 1,
         codec: None,
+        groups: 1,
         output_dir: None,
     }
 }

@@ -42,6 +42,7 @@ fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) 
         overlap: Default::default(),
         overlap_window: 1,
         codec: None,
+        groups: 1,
         output_dir: None,
     }
 }

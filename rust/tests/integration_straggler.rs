@@ -54,6 +54,7 @@ fn straggler_exp(
         overlap: Default::default(),
         overlap_window: 1,
         codec: None,
+        groups: 1,
         output_dir: None,
     }
 }

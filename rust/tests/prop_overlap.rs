@@ -75,6 +75,7 @@ fn overlap_exp(
         overlap,
         overlap_window: 1,
         codec: None,
+        groups: 1,
         output_dir: None,
     }
 }
@@ -295,6 +296,7 @@ fn late_gradient_lands_in_cache_and_never_perturbs_the_current_round() {
             overlap,
             overlap_window: 1,
             codec: None,
+            groups: 1,
             output_dir: None,
         }
     };
