@@ -85,6 +85,8 @@ fn main() -> Result<()> {
             codec: None,
             groups: 1,
             output_dir: None,
+            journal: None,
+            crash_after_round: None,
         };
         println!("\n=== {label} ({steps} steps) ===");
         let cluster = launch(&config, Some((server.handle(), manifest.clone())))?;

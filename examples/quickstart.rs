@@ -71,6 +71,8 @@ fn main() -> Result<()> {
         codec: None,
         groups: 1,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     };
     println!("\ntraining the quadratic workload with MULTI-BULYAN (n={n}, f={f}, no attack):");
     let cluster = launch(&config, None)?;

@@ -55,10 +55,13 @@ fn main() {
             codec: None,
             groups: 1,
             output_dir: None,
+            journal: None,
+            crash_after_round: None,
         };
         let mut cluster = launch(&config, None).unwrap();
         let (mean_ms, std_ms) = protocol.measure(|| {
-            cluster.coordinator.run_round().unwrap();
+            let view = cluster.coordinator.next_view();
+            cluster.coordinator.run_round(&view).unwrap();
         });
         // Fraction of the round spent inside the GAR itself.
         let agg_ms = cluster

@@ -198,13 +198,16 @@ pub fn run(cfg: &CodecBenchConfig, quiet: bool) -> Result<Vec<CodecRow>> {
                     codec: Some(kind),
                     groups: 1,
                     output_dir: None,
+                    journal: None,
+                    crash_after_round: None,
                 };
                 let cluster = launch(&exp, None)?;
                 let mut coordinator = cluster.coordinator;
                 let mut evaluator = cluster.evaluator;
                 let mut rounds_to_target = -1i64;
                 for r in 1..=cfg.steps {
-                    coordinator.run_round()?;
+                    let view = coordinator.next_view();
+                    coordinator.run_round(&view)?;
                     let (loss, _) = evaluator.evaluate(coordinator.params())?;
                     if loss.is_finite() && loss < cfg.target_loss {
                         rounds_to_target = r as i64;

@@ -211,15 +211,19 @@ pub fn run_dscale(cfg: &DscaleConfig, quiet: bool) -> Result<DscaleResult> {
             codec: None,
             groups: cfg.groups,
             output_dir: None,
+            journal: None,
+            crash_after_round: None,
         };
         let cluster = crate::coordinator::launch(&exp, None)?;
         let mut coordinator = cluster.coordinator;
         for _ in 0..cfg.warmup {
-            coordinator.run_round()?;
+            let view = coordinator.next_view();
+            coordinator.run_round(&view)?;
         }
         let sw = Stopwatch::start();
         for _ in 0..cfg.rounds {
-            coordinator.run_round()?;
+            let view = coordinator.next_view();
+            coordinator.run_round(&view)?;
         }
         let round_ms = sw.elapsed_ms() / cfg.rounds as f64;
         let peak_floats = coordinator.metrics.counter("group_reducer_peak_floats");

@@ -156,6 +156,8 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
                 codec: None,
                 groups: 1,
                 output_dir: None,
+                journal: None,
+                crash_after_round: None,
             };
             let cluster = launch(&exp, None)?;
             let mut coordinator = cluster.coordinator;
@@ -165,7 +167,8 @@ pub fn run(cfg: &GauntletConfig, quiet: bool) -> Result<Vec<GauntletRow>> {
             let honest_n = cfg.n - byz;
             let mut regret = 0u64;
             for _ in 0..cfg.steps {
-                let out = coordinator.run_round()?;
+                let view = coordinator.next_view();
+                let out = coordinator.run_round(&view)?;
                 let total = out.selected.len() as u64;
                 let byz_hits = out.selected.iter().filter(|&&w| w >= honest_n).count() as u64;
                 let honest_hits = total - byz_hits;

@@ -100,16 +100,20 @@ fn plateau_loss(cfg: &SlowdownConfig, gar: Box<dyn Gar>) -> Result<f64> {
         codec: None,
         groups: 1,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     };
     let cluster = launch(&exp, None)?;
     let mut coordinator = cluster.coordinator.with_gar(gar)?;
     let mut evaluator = cluster.evaluator;
     for _ in 0..cfg.burn_in {
-        coordinator.run_round()?;
+        let view = coordinator.next_view();
+        coordinator.run_round(&view)?;
     }
     let mut acc = 0.0f64;
     for _ in 0..cfg.window {
-        coordinator.run_round()?;
+        let view = coordinator.next_view();
+        coordinator.run_round(&view)?;
         let (loss, _) = evaluator.evaluate(coordinator.params())?;
         acc += loss as f64;
     }

@@ -144,6 +144,8 @@ pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
                     codec: None,
                     groups: 1,
                     output_dir: None,
+                    journal: None,
+                    crash_after_round: None,
                 };
                 let expect = match collect {
                     CollectMode::All => cfg.n,
@@ -153,7 +155,8 @@ pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
                 let mut coordinator = cluster.coordinator;
                 // Warm-up round outside the measurement: it grows the
                 // gradient arenas and populates the straggler cache.
-                coordinator.run_round()?;
+                let view = coordinator.next_view();
+                coordinator.run_round(&view)?;
                 let saved_warmup = coordinator.metrics.counter("overlap_saved_us");
                 let mut total_ms = 0.0f64;
                 let mut max_ms = 0.0f64;
@@ -161,7 +164,8 @@ pub fn run(cfg: &StragglerConfig, quiet: bool) -> Result<Vec<StragglerRow>> {
                 let mut missing = 0u64;
                 for _ in 0..cfg.rounds {
                     let sw = Stopwatch::start();
-                    let out = coordinator.run_round()?;
+                    let view = coordinator.next_view();
+                    let out = coordinator.run_round(&view)?;
                     let ms = sw.elapsed_ms();
                     total_ms += ms;
                     max_ms = max_ms.max(ms);

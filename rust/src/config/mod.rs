@@ -92,6 +92,18 @@ pub struct ClusterConfig {
     /// workers stream gradients in pieces of this many values instead of
     /// materializing full d-length send buffers (wire spec §4.3).
     pub socket_chunk: usize,
+    /// Scripted churn: round (1-based) at which the first
+    /// `churn_workers` honest workers leave the cluster. 0 (default)
+    /// disables churn. The coordinator shrinks the membership view,
+    /// re-shards the data assignment and re-instantiates the GAR at the
+    /// reduced size (quorum permitting — see `validate()`).
+    pub churn_leave_round: u64,
+    /// Scripted churn: how many honest workers (ids `0..churn_workers`)
+    /// leave at `churn_leave_round`.
+    pub churn_workers: usize,
+    /// Scripted churn: round at which the departed workers rejoin.
+    /// 0 = never. Must be > `churn_leave_round` when set.
+    pub churn_rejoin_round: u64,
 }
 
 impl Default for ClusterConfig {
@@ -108,6 +120,9 @@ impl Default for ClusterConfig {
             straggler_factor: 1.0,
             socket_listen: None,
             socket_chunk: crate::transport::socket::DEFAULT_CHUNK,
+            churn_leave_round: 0,
+            churn_workers: 0,
+            churn_rejoin_round: 0,
         }
     }
 }
@@ -236,6 +251,20 @@ pub struct ExperimentConfig {
     pub groups: usize,
     /// Where to write metrics CSV (None = stdout summary only).
     pub output_dir: Option<String>,
+    /// Durable round-journal path (`journal` root key / `--journal`
+    /// flag). When set, every committed round appends one checksummed
+    /// record (params checksum + selection + membership view + metrics)
+    /// to this file, fsync'd before the round is reported. Re-launching
+    /// with the same journal resumes from the last committed round by
+    /// verified deterministic replay — bit-identical to an uninterrupted
+    /// run. `None` (default) disables durability.
+    pub journal: Option<String>,
+    /// Fault-injection knob (`crash_after_round` root key /
+    /// `--crash-after-round` flag): abort the process immediately after
+    /// committing this round to the journal — the hook the
+    /// crash-recovery CI leg uses to prove exactly-once round semantics.
+    /// Requires `journal`.
+    pub crash_after_round: Option<u64>,
 }
 
 impl ExperimentConfig {
@@ -264,6 +293,8 @@ impl ExperimentConfig {
             codec: None,
             groups: 1,
             output_dir: None,
+            journal: None,
+            crash_after_round: None,
         }
     }
 
@@ -359,6 +390,21 @@ impl ExperimentConfig {
                 .map(|v| v.as_usize())
                 .transpose()?
                 .unwrap_or(crate::transport::socket::DEFAULT_CHUNK),
+            churn_leave_round: cluster_sec
+                .get("churn_leave_round")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(0),
+            churn_workers: cluster_sec
+                .get("churn_workers")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            churn_rejoin_round: cluster_sec
+                .get("churn_rejoin_round")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(0),
         };
 
         let model_kind = get_str("model", "kind").unwrap_or_else(|| "quadratic".into());
@@ -453,6 +499,10 @@ impl ExperimentConfig {
             .map(|v| v.as_usize())
             .transpose()?
             .unwrap_or(1);
+        let crash_after_round = root
+            .get("crash_after_round")
+            .map(|v| v.as_u64())
+            .transpose()?;
 
         Ok(Self {
             cluster,
@@ -469,6 +519,8 @@ impl ExperimentConfig {
             codec,
             groups,
             output_dir: get_str("", "output_dir"),
+            journal: get_str("", "journal"),
+            crash_after_round,
         })
     }
 
@@ -597,6 +649,50 @@ impl ExperimentConfig {
             self.cluster.stragglers == 0 || self.cluster.compute_cost_us > 0,
             "stragglers={} needs compute_cost_us > 0 (the cost model is disabled at 0)",
             self.cluster.stragglers
+        );
+        // Scripted churn: both halves of the knob must be set, the
+        // shrunken fleet must still satisfy the GAR's quorum, and rejoin
+        // (if any) must come after the departure.
+        let churn_on = self.cluster.churn_leave_round > 0 || self.cluster.churn_workers > 0;
+        if churn_on {
+            anyhow::ensure!(
+                self.cluster.churn_leave_round > 0 && self.cluster.churn_workers > 0,
+                "scripted churn needs both churn_leave_round ≥ 1 and churn_workers ≥ 1 \
+                 (got leave_round={}, workers={})",
+                self.cluster.churn_leave_round,
+                self.cluster.churn_workers
+            );
+            let honest = n - byz;
+            anyhow::ensure!(
+                self.cluster.churn_workers <= honest,
+                "churn_workers={} exceeds the {honest} honest workers",
+                self.cluster.churn_workers
+            );
+            let shrunk = n - self.cluster.churn_workers;
+            anyhow::ensure!(
+                shrunk >= min_n,
+                "churn_workers={} shrinks the cluster to {shrunk} < min_n({f}) = {min_n} \
+                 for GAR {} — the view change would break the quorum",
+                self.cluster.churn_workers,
+                self.gar
+            );
+            anyhow::ensure!(
+                self.cluster.churn_rejoin_round == 0
+                    || self.cluster.churn_rejoin_round > self.cluster.churn_leave_round,
+                "churn_rejoin_round={} must be 0 (never) or > churn_leave_round={}",
+                self.cluster.churn_rejoin_round,
+                self.cluster.churn_leave_round
+            );
+            anyhow::ensure!(
+                self.effective_groups() == 1,
+                "scripted churn requires flat aggregation (groups = 1): the grouped \
+                 path pins a full partition of all n workers"
+            );
+        }
+        anyhow::ensure!(
+            self.crash_after_round.is_none() || self.journal.is_some(),
+            "crash_after_round needs a journal — the crash-injection hook exists \
+             to exercise recovery, which requires `journal` to be set"
         );
         anyhow::ensure!(
             self.threads <= MAX_THREADS,
@@ -1060,6 +1156,68 @@ mod tests {
         cfg.cluster.compute_cost_us = 100;
         cfg.cluster.stragglers = 100;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn churn_and_journal_knobs_parse_and_validate() {
+        let cfg = ExperimentConfig::from_text(
+            r#"
+            gar = "multi-krum"
+            journal = "run.mbj"
+            crash_after_round = 4
+            [cluster]
+            n = 9
+            f = 1
+            churn_leave_round = 3
+            churn_workers = 2
+            churn_rejoin_round = 6
+            [model]
+            kind = "quadratic"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.churn_leave_round, 3);
+        assert_eq!(cfg.cluster.churn_workers, 2);
+        assert_eq!(cfg.cluster.churn_rejoin_round, 6);
+        assert_eq!(cfg.journal.as_deref(), Some("run.mbj"));
+        assert_eq!(cfg.crash_after_round, Some(4));
+
+        // Defaults: churn off, no journal.
+        assert_eq!(base().cluster.churn_leave_round, 0);
+        assert_eq!(base().cluster.churn_workers, 0);
+        assert_eq!(base().journal, None);
+        assert_eq!(base().crash_after_round, None);
+
+        // Half-set churn is a misconfiguration, not a silent no-op.
+        let mut half = cfg.clone();
+        half.cluster.churn_workers = 0;
+        assert!(half.validate().is_err());
+
+        // The shrunken fleet must still satisfy the quorum: multi-krum
+        // with f=1 needs n ≥ 5, so losing 5 of 9 is rejected.
+        let mut deep = cfg.clone();
+        deep.cluster.churn_workers = 5;
+        assert!(deep.validate().is_err());
+
+        // Rejoin, when scheduled, must come after the departure.
+        let mut bad_rejoin = cfg.clone();
+        bad_rejoin.cluster.churn_rejoin_round = 3;
+        assert!(bad_rejoin.validate().is_err());
+        bad_rejoin.cluster.churn_rejoin_round = 0; // never — fine
+        bad_rejoin.validate().unwrap();
+
+        // Churn is a flat-path knob: the grouped partition is static.
+        let mut grouped = cfg.clone();
+        grouped.gar = GarKind::TrimmedMean;
+        grouped.groups = 3;
+        assert!(grouped.validate().is_err());
+
+        // Crash injection without a journal has nothing to recover.
+        let mut crash_only = base();
+        crash_only.crash_after_round = Some(2);
+        assert!(crash_only.validate().is_err());
+        crash_only.journal = Some("run.mbj".into());
+        crash_only.validate().unwrap();
     }
 
     #[test]

@@ -39,6 +39,11 @@ pub fn launch(
     let honest = n - byz;
     let seed = config.train.seed;
 
+    let churn = transport::ChurnModel {
+        leave_round: config.cluster.churn_leave_round,
+        leave_workers: config.cluster.churn_workers,
+        rejoin_round: config.cluster.churn_rejoin_round,
+    };
     let faults = FaultModel {
         delay_us: config.cluster.net_delay_us,
         drop_prob: config.cluster.drop_prob,
@@ -48,6 +53,7 @@ pub fn launch(
             slow_workers: config.cluster.stragglers,
             slow_factor: config.cluster.straggler_factor as f32,
         },
+        churn,
     };
     // One pool shared by the GAR passes and (on the pooled transport) the
     // logical workers; results are bit-identical to sequential for every
@@ -193,52 +199,60 @@ pub fn launch(
         collect: config.collect,
         overlap: config.overlap,
         overlap_window: config.overlap_window,
-    };
-    let groups = config.effective_groups();
-    let mut coordinator = if groups > 1 {
-        // Two-level hierarchy: workers stream-reduce into `groups` group
-        // rows (transport-side where the backend supports it), and the
-        // root GAR — instantiated over g rows with the scaled Byzantine
-        // bound f_root — aggregates the group vectors. `validate()` has
-        // already checked the partition shape and the root quorum.
-        let map = crate::gar::GroupMap::new(n, byz, groups)?;
-        let root_f = crate::gar::group::root_f_for(n, config.cluster.f, groups);
-        let reducer = Arc::new(crate::gar::GroupReducer::new(map, initial_params.len()));
-        server.install_group_reducer(Arc::clone(&reducer));
-        Coordinator::new_grouped(
-            config.gar.instantiate_parallel(groups, root_f, &par)?,
-            config.attack.instantiate(),
-            server,
-            initial_params,
-            config.train.learning_rate,
-            config.train.momentum,
-            options,
-            reducer,
-        )?
-    } else {
-        Coordinator::new(
-            config.gar.instantiate_parallel(n, config.cluster.f, &par)?,
-            config.attack.instantiate(),
-            byz,
-            server,
-            initial_params,
-            config.train.learning_rate,
-            config.train.momentum,
-            options,
-        )?
+        churn,
+        journal: config.journal.as_ref().map(std::path::PathBuf::from),
+        crash_after_round: config.crash_after_round,
     };
     // Pre-aggregation pipeline stages (gar = "rmom(0.9)+…"), sharing the
     // aggregation pool. A leading group(g) stage is the collection layer
-    // consumed above, not a matrix stage — it never instantiates.
+    // consumed by the grouped builder, not a matrix stage — it never
+    // instantiates.
     let stages = config
         .pre
         .iter()
         .filter(|s| !matches!(s, crate::gar::StageSpec::GroupAggregate { .. }))
         .map(|s| s.instantiate(&par))
         .collect::<Result<Vec<_>>>()?;
-    if !stages.is_empty() {
-        coordinator = coordinator.with_pre_stages(stages);
-    }
+    let groups = config.effective_groups();
+    let coordinator = if groups > 1 {
+        // Two-level hierarchy: workers stream-reduce into `groups` group
+        // rows (transport-side where the backend supports it), and the
+        // root GAR — instantiated over g rows with the scaled Byzantine
+        // bound f_root — aggregates the group vectors. `validate()` has
+        // already checked the partition shape and the root quorum; the
+        // builder re-checks every cross-knob constraint once more at
+        // build time (the single validation point).
+        let map = crate::gar::GroupMap::new(n, byz, groups)?;
+        let root_f = crate::gar::group::root_f_for(n, config.cluster.f, groups);
+        let reducer = Arc::new(crate::gar::GroupReducer::new(map, initial_params.len()));
+        server.install_group_reducer(Arc::clone(&reducer));
+        Coordinator::builder(config.gar.instantiate_parallel(groups, root_f, &par)?)
+            .attack(config.attack.instantiate(), byz)
+            .options(options)
+            .pre_stages(stages)
+            .grouped(reducer)
+            .build(
+                server,
+                initial_params,
+                config.train.learning_rate,
+                config.train.momentum,
+            )?
+    } else {
+        // The flat path is always launched elastic: the factory lets a
+        // round re-instantiate the rule when scripted churn or a live
+        // (socket) departure shrinks the membership view.
+        Coordinator::builder(config.gar.instantiate_parallel(n, config.cluster.f, &par)?)
+            .attack(config.attack.instantiate(), byz)
+            .options(options)
+            .pre_stages(stages)
+            .elastic(config.gar, par.clone())
+            .build(
+                server,
+                initial_params,
+                config.train.learning_rate,
+                config.train.momentum,
+            )?
+    };
 
     Ok(LaunchedCluster {
         coordinator,
@@ -292,7 +306,8 @@ mod tests {
             cfg.train.batch_size = 4;
             let mut cluster = launch(&cfg, None).unwrap();
             for _ in 0..5 {
-                cluster.coordinator.run_round().unwrap();
+                let view = cluster.coordinator.next_view();
+                cluster.coordinator.run_round(&view).unwrap();
             }
             let params = cluster.coordinator.params().to_vec();
             cluster.coordinator.shutdown();
@@ -317,7 +332,8 @@ mod tests {
             cfg.train.batch_size = 4;
             let mut cluster = launch(&cfg, None).unwrap();
             for _ in 0..6 {
-                cluster.coordinator.run_round().unwrap();
+                let view = cluster.coordinator.next_view();
+                cluster.coordinator.run_round(&view).unwrap();
             }
             let params = cluster.coordinator.params().to_vec();
             cluster.coordinator.shutdown();

@@ -30,20 +30,25 @@
 
 use crate::attacks::{Attack, AttackCtx};
 use crate::gar::group::FullIngest;
-use crate::gar::{CombineScratch, Gar, GarScratch, GroupMap, GroupReducer, PreAggregate, Selection};
+use crate::gar::{
+    CombineScratch, Gar, GarKind, GarScratch, GroupMap, GroupReducer, PreAggregate, Selection,
+};
 use crate::metrics::{MetricsRecorder, Stopwatch, TrainPoint};
 use crate::runtime::pool::SyncMutPtr;
 use crate::runtime::{shard_zip, Parallelism, MIN_COORDS_PER_SHARD};
 use crate::tensor::GradMatrix;
 use crate::training::{LrSchedule, Sgd};
-use crate::transport::{CollectMode, CollectStatus, ServerEndpoint, TransportKind};
+use crate::transport::{ChurnModel, CollectMode, CollectStatus, ServerEndpoint, TransportKind};
 use crate::util::Rng64;
 use crate::Result;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::evaluator::Evaluator;
+use super::journal::{Journal, RoundRecord};
+use super::membership::MembershipView;
 
 /// When the O(d) combine+update tail starts relative to collection (the
 /// `overlap` config knob / `--overlap` CLI flag).
@@ -383,6 +388,26 @@ pub struct CoordinatorOptions {
     /// (the grid itself never changes, only how many chunks each slice
     /// claims).
     pub overlap_window: usize,
+    /// Scripted membership churn (`churn_*` config knobs): the same
+    /// [`ChurnModel`] the transport's fault injection silences workers
+    /// with. [`Coordinator::next_view`] derives each round's
+    /// [`MembershipView`] from this schedule, so the pooled/threaded
+    /// backends exercise elastic rounds deterministically. Requires an
+    /// elastic GAR factory ([`CoordinatorBuilder::elastic`]) when
+    /// non-static; incompatible with `groups > 1`.
+    pub churn: ChurnModel,
+    /// Append-only round-journal path (`journal` config knob /
+    /// `--journal` CLI flag). When set, every completed round fsyncs a
+    /// [`RoundRecord`]; restarting over an existing journal replays
+    /// committed rounds deterministically, verifying each parameter
+    /// checksum against the journal (divergence is a hard error) before
+    /// committing new rounds — exactly-once round semantics.
+    pub journal: Option<PathBuf>,
+    /// Crash injection for the recovery-replay determinism leg
+    /// (`--crash-after-round`): abort the process immediately after the
+    /// given round commits to the journal, simulating a coordinator
+    /// crash mid-run.
+    pub crash_after_round: Option<u64>,
 }
 
 impl Default for CoordinatorOptions {
@@ -394,6 +419,9 @@ impl Default for CoordinatorOptions {
             collect: CollectMode::All,
             overlap: OverlapMode::Off,
             overlap_window: 1,
+            churn: ChurnModel::default(),
+            journal: None,
+            crash_after_round: None,
         }
     }
 }
@@ -471,25 +499,202 @@ pub struct Coordinator {
     round: u64,
     /// Two-level aggregation (`groups > 1`) — `None` on the flat path.
     grouping: Option<GroupState>,
+    /// Elastic GAR factory: re-instantiates the rule at `n' = active +
+    /// byz` when a shrunken [`MembershipView`] arrives. `None` means the
+    /// fleet is frozen — a shrunken view is a hard error.
+    elastic: Option<(GarKind, Parallelism)>,
+    /// Cached GAR instance for the current shrunken fleet size (avoids
+    /// re-instantiating while the view is stable).
+    elastic_gar: Option<Box<dyn Gar>>,
+    /// Append-only round-journal (verified replay + exactly-once commit).
+    journal: Option<Journal>,
+    /// The previous round's member set (original ids) — view-change
+    /// detection for the `membership_view_changes` metric.
+    prev_workers: Vec<usize>,
     /// First malformed-gradient offender already reported (warn once).
     warned_malformed: bool,
     /// Per-round counters, timings and curves (summaries, CSV export).
     pub metrics: MetricsRecorder,
 }
 
-impl Coordinator {
-    /// `server` must be a star over exactly `n − byz` honest workers.
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        gar: Box<dyn Gar>,
-        attack: Option<Box<dyn Attack>>,
-        byz: usize,
+/// The single validated construction path for [`Coordinator`] — every
+/// knob cross-constraint is checked once, in [`CoordinatorBuilder::build`],
+/// instead of scattered across constructors and post-hoc mutators:
+///
+/// - `grouped` ⟹ `collect = all` ∧ `overlap = off` ∧ no churn ∧ no
+///   elastic factory (the grouped round defines its own collection
+///   semantics over a full fleet);
+/// - a non-static [`CoordinatorOptions::churn`] schedule ⟹ an
+///   [`elastic`](CoordinatorBuilder::elastic) GAR factory, and the
+///   shrunken fleet must keep the rule's quorum (`n' ≥ min_n(f)`);
+/// - `byz > 0` ⟹ an attack; the transport must span exactly the honest
+///   workers.
+///
+/// `builder::launch` is the only config → coordinator path; there are no
+/// post-construction mutators (`set_collect` / `set_overlap` are gone).
+pub struct CoordinatorBuilder {
+    gar: Box<dyn Gar>,
+    attack: Option<Box<dyn Attack>>,
+    byz: usize,
+    options: CoordinatorOptions,
+    pre: Vec<Box<dyn PreAggregate>>,
+    reducer: Option<Arc<GroupReducer>>,
+    elastic: Option<(GarKind, Parallelism)>,
+}
+
+impl CoordinatorBuilder {
+    /// The omniscient Byzantine coalition: `byz` forged rows produced by
+    /// `attack`. `byz > 0` requires `attack` to be `Some` (checked at
+    /// [`build`](Self::build)). In grouped mode the Byzantine count
+    /// comes from the group map and `byz` set here is ignored.
+    pub fn attack(mut self, attack: Option<Box<dyn Attack>>, byz: usize) -> Self {
+        self.attack = attack;
+        self.byz = byz;
+        self
+    }
+
+    /// Replace the default [`CoordinatorOptions`].
+    pub fn options(mut self, options: CoordinatorOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Install pre-aggregation stages (applied in order each round,
+    /// after Byzantine forging and before the GAR's selection phase) —
+    /// the `gar = "rmom(0.9)+multi-bulyan"` pipeline surface.
+    pub fn pre_stages(mut self, stages: Vec<Box<dyn PreAggregate>>) -> Self {
+        self.pre = stages;
+        self
+    }
+
+    /// Two-level aggregation (`groups > 1`): the builder's GAR becomes
+    /// the **root** rule over `g = reducer.map().groups()` rows and the
+    /// `reducer` (already installed on the transport where the backend
+    /// ingests worker-side) streams each honest group's mean
+    /// block-by-block — the coordinator never materialises an `n × d`
+    /// matrix.
+    pub fn grouped(mut self, reducer: Arc<GroupReducer>) -> Self {
+        self.reducer = Some(reducer);
+        self
+    }
+
+    /// Enable elastic membership: when a round's [`MembershipView`] is
+    /// shrunken (scripted churn, a socket Goodbye, or a crash-detected
+    /// departure), the coordinator re-instantiates `kind` at
+    /// `n' = active + byz` on `par` and re-shards rows by view rank.
+    /// Without a factory a shrunken view is a hard error — the fleet is
+    /// frozen, exactly the pre-elastic contract.
+    pub fn elastic(mut self, kind: GarKind, par: Parallelism) -> Self {
+        self.elastic = Some((kind, par));
+        self
+    }
+
+    /// Validate every cross-knob constraint and construct the
+    /// [`Coordinator`]. `server` must be a star over exactly the honest
+    /// workers (`n − byz`, or the group map's honest count in grouped
+    /// mode).
+    pub fn build(
+        self,
         server: ServerEndpoint,
         initial_params: Vec<f32>,
         lr: f32,
         momentum: f32,
-        options: CoordinatorOptions,
-    ) -> Result<Self> {
+    ) -> Result<Coordinator> {
+        let Self {
+            gar,
+            attack,
+            byz,
+            options,
+            pre,
+            reducer,
+            elastic,
+        } = self;
+        let d = initial_params.len();
+        anyhow::ensure!(
+            options.overlap_window >= 1,
+            "overlap_window must be ≥ 1 (got {})",
+            options.overlap_window
+        );
+        if let Some(reducer) = reducer {
+            // Grouped construction: byz comes from the map; the flat-only
+            // knobs must be off — checked here, once, not at mutation
+            // sites (there are none any more).
+            let map = Arc::clone(reducer.map());
+            let (n, byz, g) = (map.n(), map.byz(), map.groups());
+            anyhow::ensure!(
+                gar.n() == g,
+                "grouped coordinator: root GAR is over {} rows; expected g = {g}",
+                gar.n()
+            );
+            anyhow::ensure!(
+                server.num_workers() == n - byz,
+                "transport has {} honest workers; expected n − byz = {}",
+                server.num_workers(),
+                n - byz
+            );
+            anyhow::ensure!(
+                byz == 0 || attack.is_some(),
+                "byz={byz} workers but no attack configured"
+            );
+            anyhow::ensure!(
+                !initial_params.is_empty() && reducer.d() == d,
+                "grouped coordinator: reducer is for d = {}, params have d = {d}",
+                reducer.d(),
+            );
+            anyhow::ensure!(
+                options.collect == CollectMode::All,
+                "groups > 1 requires collect = all (first-m quorums are defined \
+                 over workers, not group rows)"
+            );
+            anyhow::ensure!(
+                options.overlap == OverlapMode::Off,
+                "groups > 1 requires overlap = off (the grouped round has no \
+                 frozen prefix matrix to overlap against)"
+            );
+            anyhow::ensure!(
+                options.churn == ChurnModel::default(),
+                "groups > 1 requires a static fleet (churn is a flat-path knob)"
+            );
+            anyhow::ensure!(
+                elastic.is_none(),
+                "groups > 1 is incompatible with an elastic GAR factory"
+            );
+            let opt = Sgd::new(d, lr, momentum)?;
+            let journal = options.journal.as_ref().map(Journal::open).transpose()?;
+            let honest = n - byz;
+            return Ok(Coordinator {
+                n,
+                byz,
+                gar,
+                attack,
+                pre,
+                server,
+                params: initial_params,
+                opt,
+                grads: GradMatrix::zeros(g, d),
+                agg: vec![0.0; d],
+                selection: Selection::default(),
+                // Per *group* straggler cache: a group none of whose
+                // members delivered this round falls back to its last
+                // good mean.
+                last_good: vec![None; map.honest_groups()],
+                scratch: GarScratch::new(),
+                rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
+                round: 0,
+                grouping: Some(GroupState {
+                    map,
+                    reducer,
+                    peak_floats: 0,
+                }),
+                elastic: None,
+                elastic_gar: None,
+                journal,
+                prev_workers: (0..honest).collect(),
+                warned_malformed: false,
+                metrics: MetricsRecorder::new(n),
+                options,
+            });
+        }
         let n = gar.n();
         anyhow::ensure!(byz <= n, "byzantine count {byz} > n {n}");
         anyhow::ensure!(
@@ -502,120 +707,79 @@ impl Coordinator {
             byz == 0 || attack.is_some(),
             "byz={byz} workers but no attack configured"
         );
-        let d = initial_params.len();
+        let honest = n - byz;
+        if options.churn != ChurnModel::default() {
+            anyhow::ensure!(
+                elastic.is_some(),
+                "churn is scripted but no elastic GAR factory is configured \
+                 (CoordinatorBuilder::elastic)"
+            );
+            anyhow::ensure!(
+                options.churn.leave_workers <= honest,
+                "churn removes {} workers but only {honest} honest workers exist",
+                options.churn.leave_workers
+            );
+        }
+        if let Some((kind, _)) = &elastic {
+            // The deepest scripted shrink must keep the rule's quorum;
+            // live (socket) departures below the quorum fail at the
+            // round that observes them.
+            let c = options.churn;
+            if c.leave_workers > 0 && c.leave_round > 0 {
+                let active = honest - c.leave_workers;
+                anyhow::ensure!(active >= 1, "churn leaves no honest workers");
+                anyhow::ensure!(
+                    active + byz >= kind.min_n(gar.f()),
+                    "churn shrinks the fleet to n' = {} < min_n(f) = {} for {}",
+                    active + byz,
+                    kind.min_n(gar.f()),
+                    kind.as_str()
+                );
+            }
+        }
         let opt = Sgd::new(d, lr, momentum)?;
-        Ok(Self {
+        let journal = options.journal.as_ref().map(Journal::open).transpose()?;
+        Ok(Coordinator {
             n,
             byz,
             gar,
             attack,
-            pre: Vec::new(),
+            pre,
             server,
             params: initial_params,
             opt,
             grads: GradMatrix::zeros(n, d),
             agg: vec![0.0; d],
             selection: Selection::default(),
-            last_good: vec![None; n - byz],
+            last_good: vec![None; honest],
             scratch: GarScratch::new(),
             rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
             round: 0,
             grouping: None,
+            elastic,
+            elastic_gar: None,
+            journal,
+            prev_workers: (0..honest).collect(),
             warned_malformed: false,
             metrics: MetricsRecorder::new(n),
             options,
         })
     }
+}
 
-    /// Two-level coordinator (`groups > 1`): `gar` is the **root** rule
-    /// over `g = reducer.map().groups()` rows, `server` spans the
-    /// `n − byz` honest *workers*, and the `reducer` (already installed
-    /// on the transport where the backend ingests worker-side) streams
-    /// each honest group's mean block-by-block — the coordinator never
-    /// materialises an `n × d` matrix. Requires `collect = all` and
-    /// `overlap = off` (the grouped round defines its own collection
-    /// semantics; config validation enforces the same gates).
-    #[allow(clippy::too_many_arguments)]
-    pub fn new_grouped(
-        gar: Box<dyn Gar>,
-        attack: Option<Box<dyn Attack>>,
-        server: ServerEndpoint,
-        initial_params: Vec<f32>,
-        lr: f32,
-        momentum: f32,
-        options: CoordinatorOptions,
-        reducer: Arc<GroupReducer>,
-    ) -> Result<Self> {
-        let map = Arc::clone(reducer.map());
-        let (n, byz, g) = (map.n(), map.byz(), map.groups());
-        anyhow::ensure!(
-            gar.n() == g,
-            "grouped coordinator: root GAR is over {} rows; expected g = {g}",
-            gar.n()
-        );
-        anyhow::ensure!(
-            server.num_workers() == n - byz,
-            "transport has {} honest workers; expected n − byz = {}",
-            server.num_workers(),
-            n - byz
-        );
-        anyhow::ensure!(
-            byz == 0 || attack.is_some(),
-            "byz={byz} workers but no attack configured"
-        );
-        anyhow::ensure!(
-            !initial_params.is_empty() && reducer.d() == initial_params.len(),
-            "grouped coordinator: reducer is for d = {}, params have d = {}",
-            reducer.d(),
-            initial_params.len()
-        );
-        anyhow::ensure!(
-            options.collect == CollectMode::All,
-            "groups > 1 requires collect = all (first-m quorums are defined \
-             over workers, not group rows)"
-        );
-        anyhow::ensure!(
-            options.overlap == OverlapMode::Off,
-            "groups > 1 requires overlap = off (the grouped round has no \
-             frozen prefix matrix to overlap against)"
-        );
-        let d = initial_params.len();
-        let opt = Sgd::new(d, lr, momentum)?;
-        Ok(Self {
-            n,
-            byz,
+impl Coordinator {
+    /// Start building a coordinator around `gar` (the full-fleet rule;
+    /// in grouped mode, the root rule). See [`CoordinatorBuilder`].
+    pub fn builder(gar: Box<dyn Gar>) -> CoordinatorBuilder {
+        CoordinatorBuilder {
             gar,
-            attack,
+            attack: None,
+            byz: 0,
+            options: CoordinatorOptions::default(),
             pre: Vec::new(),
-            server,
-            params: initial_params,
-            opt,
-            grads: GradMatrix::zeros(g, d),
-            agg: vec![0.0; d],
-            selection: Selection::default(),
-            // Per *group* straggler cache: a group none of whose members
-            // delivered this round falls back to its last good mean.
-            last_good: vec![None; map.honest_groups()],
-            scratch: GarScratch::new(),
-            rng: Rng64::seed_from_u64(options.seed ^ 0xC0FF_EE00),
-            round: 0,
-            grouping: Some(GroupState {
-                map,
-                reducer,
-                peak_floats: 0,
-            }),
-            warned_malformed: false,
-            metrics: MetricsRecorder::new(n),
-            options,
-        })
-    }
-
-    /// Install pre-aggregation stages (applied in order each round,
-    /// after Byzantine forging and before the GAR's selection phase) —
-    /// the `gar = "rmom(0.9)+multi-bulyan"` pipeline surface.
-    pub fn with_pre_stages(mut self, stages: Vec<Box<dyn PreAggregate>>) -> Self {
-        self.pre = stages;
-        self
+            reducer: None,
+            elastic: None,
+        }
     }
 
     /// The current model parameters.
@@ -654,6 +818,11 @@ impl Coordinator {
             self.n
         );
         self.gar = gar;
+        // A custom rule has no `GarKind` to re-instantiate at a shrunken
+        // fleet size: drop the elastic factory so a shrunken view errors
+        // instead of silently running the wrong rule.
+        self.elastic = None;
+        self.elastic_gar = None;
         Ok(self)
     }
 
@@ -674,22 +843,353 @@ impl Coordinator {
         }
     }
 
-    /// Switch collection semantics between rounds (e.g. one wait-all
-    /// warm-up round to populate the straggler cache, then first-m).
-    pub fn set_collect(&mut self, mode: CollectMode) {
-        self.options.collect = mode;
-    }
-
-    /// Switch combine/collection overlap between rounds.
-    pub fn set_overlap(&mut self, mode: OverlapMode) {
-        self.options.overlap = mode;
-    }
-
-    /// Drive one synchronous SGD round.
-    pub fn run_round(&mut self) -> Result<RoundOutcome> {
+    /// The membership view the *next* round should run under: the full
+    /// honest fleet minus workers absent under the scripted
+    /// [`CoordinatorOptions::churn`] schedule, minus live departures the
+    /// transport has observed (socket Goodbye / crash-detected
+    /// disconnects). The scripted part is deterministic; pass the result
+    /// to [`Self::run_round`]. Grouped mode always returns the full view
+    /// (a silent group member is handled by the per-group fallback).
+    pub fn next_view(&self) -> MembershipView {
+        let round = self.round + 1;
+        let honest = self.n - self.byz;
         if self.grouping.is_some() {
-            return self.run_round_grouped();
+            return MembershipView::full(round, honest, self.gar.f());
         }
+        let departed = self.server.departed_workers();
+        let workers: Vec<usize> = (0..honest)
+            .filter(|&w| self.options.churn.present(w, round))
+            .filter(|w| departed.binary_search(w).is_err())
+            .collect();
+        MembershipView {
+            round,
+            workers,
+            f: self.gar.f(),
+        }
+    }
+
+    /// The full fixed-fleet view for the next round, ignoring churn and
+    /// departures — benches and tests that want the frozen-fleet path
+    /// unconditionally.
+    pub fn full_view(&self) -> MembershipView {
+        MembershipView::full(self.round + 1, self.n - self.byz, self.gar.f())
+    }
+
+    /// Drive one synchronous SGD round under `view` — the single round
+    /// entry for flat, elastic, and grouped execution. `view.round` must
+    /// be `self.round() + 1`. A full view routes the unchanged
+    /// fixed-fleet path (bit-identical to the frozen-fleet API — see
+    /// `tests/prop_membership.rs`); a shrunken view re-shards the round
+    /// (see [`MembershipView`]); grouped mode requires a full view. When
+    /// a journal is configured, a round the journal already committed is
+    /// *verified* against its recorded parameter checksum (warm-restart
+    /// replay; divergence is a hard error) and a new round is committed
+    /// before this returns — exactly-once round semantics.
+    pub fn run_round(&mut self, view: &MembershipView) -> Result<RoundOutcome> {
+        anyhow::ensure!(
+            view.round == self.round + 1,
+            "membership view is for round {}, coordinator is at round {}",
+            view.round,
+            self.round
+        );
+        let honest = self.n - self.byz;
+        let outcome = if self.grouping.is_some() {
+            anyhow::ensure!(
+                view.is_full(honest),
+                "groups > 1 requires a full membership view \
+                 (round {}: {} of {honest} workers present)",
+                view.round,
+                view.active()
+            );
+            self.run_round_grouped()?
+        } else {
+            view.validate(honest)?;
+            anyhow::ensure!(
+                view.f == self.gar.f(),
+                "membership view declares f = {}, the rule tolerates f = {}",
+                view.f,
+                self.gar.f()
+            );
+            if view.workers != self.prev_workers {
+                self.metrics.incr("membership_view_changes");
+                self.prev_workers = view.workers.clone();
+            }
+            if view.is_full(honest) {
+                // Restore the full-fleet matrix shape if the fleet just
+                // grew back (a rejoin); pre stages re-zero on the shape
+                // change — the deliberate rmom policy (see ensure_rows).
+                self.ensure_rows(self.n);
+                self.run_round_flat()?
+            } else {
+                self.run_round_elastic(view)?
+            }
+        };
+        self.journal_tail(view, &outcome)?;
+        Ok(outcome)
+    }
+
+    /// Reshape the proposal matrix to `rows` rows. Pre-aggregation
+    /// stages detect the (n, d) change mechanically and re-zero their
+    /// state (see `gar::pipeline`) — counted here as the *deliberate*
+    /// `ResilientMomentum` re-zero policy: Farhadkhani et al.'s
+    /// momentum-then-aggregate composition is re-entered from a clean
+    /// state rather than mixing momentum across fleets.
+    fn ensure_rows(&mut self, rows: usize) {
+        if self.grads.n() != rows {
+            self.grads = GradMatrix::zeros(rows, self.dim());
+            if !self.pre.is_empty() {
+                self.metrics.incr("membership_rezeros");
+            }
+        }
+    }
+
+    /// The journal tail of a round: verify (replayed round) or commit
+    /// (new round), then apply crash injection.
+    fn journal_tail(&mut self, view: &MembershipView, out: &RoundOutcome) -> Result<()> {
+        let Some(journal) = self.journal.as_mut() else {
+            return Ok(());
+        };
+        let digest = crate::util::fnv1a(self.params.iter().flat_map(|v| v.to_le_bytes()));
+        if out.round <= journal.last_committed() {
+            // Warm restart: this round was committed by the interrupted
+            // run. The deterministic re-execution must reproduce it bit
+            // for bit — verified, never re-committed (exactly-once).
+            let expected = journal
+                .expected_checksum(out.round)
+                .expect("round ≤ last_committed has a record");
+            anyhow::ensure!(
+                digest == expected,
+                "replay divergence at round {}: params checksum {digest:#018x} \
+                 != journalled {expected:#018x} (journal {})",
+                out.round,
+                journal.path().display()
+            );
+            self.metrics.incr("journal_replayed");
+        } else {
+            journal.commit(RoundRecord {
+                round: out.round,
+                params_checksum: digest,
+                f: view.f as u32,
+                workers: view.workers.iter().map(|&w| w as u32).collect(),
+                selected: out.selected.iter().map(|&w| w as u32).collect(),
+                collected: out.collected as u32,
+                missing: out.missing as u32,
+            })?;
+            self.metrics.incr("journal_committed");
+        }
+        if self.options.crash_after_round == Some(out.round) {
+            // Crash injection for the recovery-replay determinism leg:
+            // the record above is already fsync'd, so a restarted run
+            // resumes (replays) through exactly this round.
+            eprintln!(
+                "crash injection: aborting after round {} (journal {})",
+                out.round,
+                journal.path().display()
+            );
+            std::process::abort();
+        }
+        Ok(())
+    }
+
+    /// A shrunken-view round — the elastic path. Active workers compact
+    /// to matrix rows by view rank, the GAR is re-instantiated at
+    /// `n' = active + byz` (the quorum `n' ≥ min_n(f)` is revalidated
+    /// here and by the rule's constructor), the straggler cache stays
+    /// per *original* id, and selected rows map back to original ids in
+    /// the outcome and metrics. Prefix overlap is a full-fleet
+    /// optimisation; this path always runs the fused tail.
+    fn run_round_elastic(&mut self, view: &MembershipView) -> Result<RoundOutcome> {
+        let Some((kind, par)) = self.elastic.clone() else {
+            anyhow::bail!(
+                "round {}: membership shrank to {} of {} honest workers but no \
+                 elastic GAR factory is configured (CoordinatorBuilder::elastic)",
+                view.round,
+                view.active(),
+                self.n - self.byz
+            );
+        };
+        self.round += 1;
+        let round = self.round;
+        let active = view.active();
+        let n_eff = active + self.byz;
+        let f = self.gar.f();
+        anyhow::ensure!(
+            n_eff >= kind.min_n(f),
+            "round {round}: fleet shrank to n' = {n_eff} < min_n(f) = {} for {}",
+            kind.min_n(f),
+            kind.as_str()
+        );
+        if self.elastic_gar.as_ref().map(|g| g.n()) != Some(n_eff) {
+            self.elastic_gar = Some(kind.instantiate_parallel(n_eff, f, &par)?);
+        }
+        self.ensure_rows(n_eff);
+        let d = self.dim();
+
+        // 1. Broadcast: every connected worker still receives the round
+        //    (absent workers are silent by churn/departure, not
+        //    unaddressed); a non-member that delivers anyway is rejected
+        //    in step 2.
+        let params = Arc::new(self.params.clone());
+        self.server.broadcast(round, params);
+
+        // 2. Collect the active members, compacting original ids to view
+        //    ranks. The first-m quorum shrinks with the fleet:
+        //    m' = (n' − f) − byz, capped at the active count.
+        let expect = match self.options.collect {
+            CollectMode::All => active,
+            CollectMode::FirstM => (n_eff - f).saturating_sub(self.byz).min(active),
+        };
+        let mut have = vec![false; active];
+        let mut non_member = 0u64;
+        let mut malformed = 0u64;
+        {
+            let grads = &mut self.grads;
+            let last_good = &mut self.last_good;
+            let have = &mut have;
+            let non_member = &mut non_member;
+            let malformed = &mut malformed;
+            let accept = |worker: usize, gradient: &[f32]| {
+                let Some(rank) = view.rank(worker) else {
+                    // A raced delivery from a departed worker: never a
+                    // quorum slot, never a matrix row.
+                    *non_member += 1;
+                    return false;
+                };
+                if gradient.len() != d {
+                    *malformed += 1;
+                    return false;
+                }
+                grads.set_row(rank, gradient);
+                let cache = &mut last_good[worker];
+                if let Some(buf) = cache {
+                    buf.copy_from_slice(gradient);
+                } else {
+                    *cache = Some(gradient.to_vec());
+                }
+                have[rank] = true;
+                true
+            };
+            self.server
+                .collect_with(round, expect, self.options.round_timeout, accept);
+        }
+        if non_member > 0 {
+            self.metrics.add("gradients_non_member", non_member);
+        }
+        if malformed > 0 {
+            self.metrics.add("gradients_malformed", malformed);
+        }
+        let collected = have.iter().filter(|&&h| h).count();
+        crate::strict_assert!(collected <= expect);
+
+        // 3. Straggler fallback per *original* id: a member that stayed
+        //    silent falls back to its own last good gradient, else zero.
+        let mut missing = 0;
+        for (rank, ok) in have.iter().enumerate() {
+            if !ok {
+                missing += 1;
+                let w = view.workers[rank];
+                match &self.last_good[w] {
+                    Some(g) => self.grads.set_row(rank, g),
+                    None => self.grads.row_mut(rank).fill(0.0),
+                }
+            }
+        }
+        self.metrics.add("gradients_missing", missing as u64);
+
+        // 4. Byzantine forging at the shrunken size — the coalition is
+        //    assumed fully present (the worst case), its rows at
+        //    active..n'.
+        if self.byz > 0 {
+            let attack = self.attack.as_ref().expect("checked at build()");
+            let correct = self.grads.gather_rows(&(0..active).collect::<Vec<_>>());
+            let ctx = AttackCtx::new(&correct, self.byz, n_eff);
+            let forged = attack.forge(&ctx, &mut self.rng)?;
+            anyhow::ensure!(
+                forged.n() == self.byz && forged.d() == d,
+                "attack '{}' forged a {}×{} matrix; expected {}×{}",
+                attack.name(),
+                forged.n(),
+                forged.d(),
+                self.byz,
+                d
+            );
+            for b in 0..self.byz {
+                self.grads.set_row(active + b, forged.row(b));
+            }
+        }
+
+        // 5. Pre-aggregation over the shrunken matrix (rmom state was
+        //    deliberately re-zeroed by the shape change, if any).
+        if !self.pre.is_empty() {
+            let sw = Stopwatch::start();
+            for stage in &mut self.pre {
+                stage.apply(&mut self.grads, round)?;
+            }
+            self.metrics.time("pre_aggregate", sw.elapsed_s());
+        }
+
+        // 6. Selection with the shrunken rule; selected rows map back to
+        //    original worker ids (Byzantine pseudo-ids keep their
+        //    full-fleet slots honest..n so metrics stay comparable
+        //    across views).
+        let honest = self.n - self.byz;
+        let gar = self.elastic_gar.as_deref().expect("instantiated above");
+        let sw = Stopwatch::start();
+        let mut sel = std::mem::take(&mut self.selection);
+        gar.select_into(&self.grads, &mut self.scratch, &mut sel)?;
+        let select_seconds = sw.elapsed_s();
+        self.metrics.time("select", select_seconds);
+        let selected: Vec<usize> = sel
+            .selected_rows()
+            .iter()
+            .map(|&r| {
+                if r < active {
+                    view.workers[r]
+                } else {
+                    honest + (r - active)
+                }
+            })
+            .collect();
+        for &w in &selected {
+            self.metrics.record_selection(w);
+        }
+
+        // 7. Fused combine + SGD update (never overlapped on this path).
+        let lr = self.options.schedule.at((round - 1) as usize);
+        self.opt.set_lr(lr);
+        let sw = Stopwatch::start();
+        let skipped = fused_combine_update(
+            gar.parallelism(),
+            &sel,
+            &self.grads,
+            &mut self.agg,
+            &mut self.params,
+            &mut self.opt,
+            &mut self.scratch.shards,
+        )?;
+        let combine_seconds = sw.elapsed_s();
+        self.selection = sel;
+        self.metrics.time("combine_update", combine_seconds);
+        let agg_seconds = select_seconds + combine_seconds;
+        self.metrics.time("aggregate", agg_seconds);
+        if skipped > 0 {
+            self.metrics.incr("non_finite_aggregate_skipped");
+            self.metrics.add("non_finite_coords_skipped", skipped as u64);
+        }
+        self.metrics.incr("rounds");
+
+        Ok(RoundOutcome {
+            round,
+            collected,
+            missing,
+            agg_seconds,
+            selected,
+            overlap_saved_us: 0,
+        })
+    }
+
+    /// The unchanged fixed-fleet round — a full membership view.
+    fn run_round_flat(&mut self) -> Result<RoundOutcome> {
         self.round += 1;
         let round = self.round;
         let honest = self.n - self.byz;
@@ -798,7 +1298,7 @@ impl Coordinator {
         // 4. Byzantine coalition forges its rows with full knowledge of
         //    the honest proposals.
         if self.byz > 0 {
-            let attack = self.attack.as_ref().expect("checked in new()");
+            let attack = self.attack.as_ref().expect("checked in builder build()");
             let correct = self.grads.gather_rows(&(0..honest).collect::<Vec<_>>());
             let ctx = AttackCtx::new(&correct, self.byz, self.n);
             let forged = attack.forge(&ctx, &mut self.rng)?;
@@ -1033,7 +1533,7 @@ impl Coordinator {
         //    model lifted one level (a coalition owning whole groups can
         //    emit any group-mean it likes).
         if gb > 0 {
-            let attack = self.attack.as_ref().expect("checked in new_grouped()");
+            let attack = self.attack.as_ref().expect("checked in builder build()");
             let correct = self.grads.gather_rows(&(0..gh).collect::<Vec<_>>());
             let ctx = AttackCtx::new(&correct, gb, map.groups());
             let forged = attack.forge(&ctx, &mut self.rng)?;
@@ -1123,7 +1623,10 @@ impl Coordinator {
     }
 
     /// Run `steps` rounds, evaluating every `eval_every` (0 = only at the
-    /// end). Records the training curve in `self.metrics`.
+    /// end). Records the training curve in `self.metrics`. Each round
+    /// runs under [`Self::next_view`] — scripted churn and live
+    /// departures shrink the fleet mid-run; a journal (if configured)
+    /// verifies replayed rounds and commits new ones.
     pub fn train(
         &mut self,
         steps: usize,
@@ -1131,7 +1634,8 @@ impl Coordinator {
         evaluator: &mut Evaluator,
     ) -> Result<()> {
         for step in 0..steps {
-            self.run_round()?;
+            let view = self.next_view();
+            self.run_round(&view)?;
             let is_last = step + 1 == steps;
             if is_last || (eval_every > 0 && (step + 1) % eval_every == 0) {
                 let (loss, acc) = evaluator.evaluate(&self.params)?;
@@ -1161,6 +1665,14 @@ mod tests {
     use crate::transport::{build, star, FaultModel, TransportKind};
     use crate::worker::{serve_workers, GradSource};
 
+    /// Drive one round under the coordinator's own next view (what the
+    /// train loop does) — the standard test step.
+    fn run_next(coord: &mut Coordinator) -> crate::Result<RoundOutcome> {
+        let view = coord.next_view();
+        coord.run_round(&view)
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn quadratic_cluster(
         n: usize,
         f: usize,
@@ -1169,6 +1681,7 @@ mod tests {
         attack: AttackKind,
         dim: usize,
         noise: f32,
+        collect: CollectMode,
     ) -> (Coordinator, Arc<QuadraticProblem>) {
         let problem = Arc::new(QuadraticProblem::new(dim, noise, 7));
         let honest = n - byz;
@@ -1186,32 +1699,33 @@ mod tests {
             .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
             .collect();
         serve_workers(pairs);
-        let coordinator = Coordinator::new(
-            gar.instantiate(n, f).unwrap(),
-            attack.instantiate(),
-            byz,
-            server,
-            vec![0.0; dim],
-            0.2,
-            0.0,
-            CoordinatorOptions {
+        let coordinator = Coordinator::builder(gar.instantiate(n, f).unwrap())
+            .attack(attack.instantiate(), byz)
+            .options(CoordinatorOptions {
                 round_timeout: Duration::from_secs(10),
                 schedule: LrSchedule::Fixed { base: 0.2 },
                 seed: 3,
-                collect: CollectMode::All,
-                overlap: OverlapMode::Off,
-                overlap_window: 1,
-            },
-        )
-        .unwrap();
+                collect,
+                ..Default::default()
+            })
+            .build(server, vec![0.0; dim], 0.2, 0.0)
+            .unwrap();
         (coordinator, problem)
     }
 
     #[test]
     fn byzantine_free_round_runs() {
-        let (mut coord, _p) =
-            quadratic_cluster(7, 1, 0, GarKind::MultiKrum, AttackKind::None, 32, 0.05);
-        let out = coord.run_round().unwrap();
+        let (mut coord, _p) = quadratic_cluster(
+            7,
+            1,
+            0,
+            GarKind::MultiKrum,
+            AttackKind::None,
+            32,
+            0.05,
+            CollectMode::All,
+        );
+        let out = run_next(&mut coord).unwrap();
         assert_eq!(out.collected, 7);
         assert_eq!(out.missing, 0);
         assert!(out.agg_seconds >= 0.0);
@@ -1220,8 +1734,16 @@ mod tests {
 
     #[test]
     fn training_converges_without_byzantine() {
-        let (mut coord, problem) =
-            quadratic_cluster(7, 1, 0, GarKind::MultiKrum, AttackKind::None, 32, 0.05);
+        let (mut coord, problem) = quadratic_cluster(
+            7,
+            1,
+            0,
+            GarKind::MultiKrum,
+            AttackKind::None,
+            32,
+            0.05,
+            CollectMode::All,
+        );
         let mut eval = Evaluator::Quadratic(Arc::clone(&problem));
         coord.train(60, 10, &mut eval).unwrap();
         let final_loss = coord.metrics.final_loss().unwrap();
@@ -1239,6 +1761,7 @@ mod tests {
             AttackKind::SignFlip { scale: 10.0 },
             32,
             0.05,
+            CollectMode::All,
         );
         let mut eval = Evaluator::Quadratic(Arc::clone(&problem));
         coord.train(60, 10, &mut eval).unwrap();
@@ -1257,14 +1780,23 @@ mod tests {
             AttackKind::SignFlip { scale: 10.0 },
             32,
             0.05,
+            CollectMode::All,
         );
         let mut eval = Evaluator::Quadratic(Arc::clone(&problem));
         coord.train(30, 10, &mut eval).unwrap();
         let byz_loss = coord.metrics.final_loss().unwrap();
         coord.shutdown();
 
-        let (mut clean, problem2) =
-            quadratic_cluster(11, 0, 0, GarKind::Average, AttackKind::None, 32, 0.05);
+        let (mut clean, problem2) = quadratic_cluster(
+            11,
+            0,
+            0,
+            GarKind::Average,
+            AttackKind::None,
+            32,
+            0.05,
+            CollectMode::All,
+        );
         let mut eval2 = Evaluator::Quadratic(Arc::clone(&problem2));
         clean.train(30, 10, &mut eval2).unwrap();
         let clean_loss = clean.metrics.final_loss().unwrap();
@@ -1286,9 +1818,10 @@ mod tests {
             AttackKind::Infinity { nan: true },
             16,
             0.05,
+            CollectMode::All,
         );
         for _ in 0..10 {
-            coord.run_round().unwrap();
+            run_next(&mut coord).unwrap();
         }
         assert!(coord.params().iter().all(|v| v.is_finite()));
         coord.shutdown();
@@ -1311,21 +1844,14 @@ mod tests {
             .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 4)))
             .collect();
         serve_workers(pairs);
-        let mut coord = Coordinator::new(
-            GarKind::MultiKrum.instantiate(7, 1).unwrap(),
-            None,
-            0,
-            server,
-            vec![0.0; 8],
-            0.1,
-            0.0,
-            CoordinatorOptions {
+        let mut coord = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 1).unwrap())
+            .options(CoordinatorOptions {
                 round_timeout: Duration::from_millis(100),
                 ..Default::default()
-            },
-        )
-        .unwrap();
-        let out = coord.run_round().unwrap();
+            })
+            .build(server, vec![0.0; 8], 0.1, 0.0)
+            .unwrap();
+        let out = run_next(&mut coord).unwrap();
         assert_eq!(out.collected, 0);
         assert_eq!(out.missing, 7);
         assert_eq!(coord.metrics.counter("gradients_missing"), 7);
@@ -1362,24 +1888,17 @@ mod tests {
                 )));
             }
         }
-        let mut coord = Coordinator::new(
-            GarKind::MultiKrum.instantiate(7, 1).unwrap(),
-            None,
-            0,
-            server,
-            vec![0.0; 8],
-            0.1,
-            0.0,
-            CoordinatorOptions {
+        let mut coord = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 1).unwrap())
+            .options(CoordinatorOptions {
                 // Short: the rejected gradient never fills the 7th
                 // wait-all slot, so every round waits this out.
                 round_timeout: Duration::from_millis(100),
                 ..Default::default()
-            },
-        )
-        .unwrap();
+            })
+            .build(server, vec![0.0; 8], 0.1, 0.0)
+            .unwrap();
         for r in 1..=3u64 {
-            let out = coord.run_round().expect("malformed gradient must not abort");
+            let out = run_next(&mut coord).expect("malformed gradient must not abort");
             assert_eq!(out.collected, 6, "round {r}");
             assert_eq!(out.missing, 1, "round {r}");
         }
@@ -1420,24 +1939,17 @@ mod tests {
                     )));
                 }
             }
-            let mut coord = Coordinator::new(
-                GarKind::MultiKrum.instantiate(7, 1).unwrap(),
-                None,
-                0,
-                server,
-                vec![0.0; 8],
-                0.1,
-                0.0,
-                CoordinatorOptions {
+            let mut coord = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 1).unwrap())
+                .options(CoordinatorOptions {
                     round_timeout: Duration::from_millis(500),
                     collect: CollectMode::FirstM,
                     ..Default::default()
-                },
-            )
-            .unwrap();
+                })
+                .build(server, vec![0.0; 8], 0.1, 0.0)
+                .unwrap();
             // m = n − f = 6 = exactly the honest well-formed workers:
             // all six must be collected despite the rejected delivery.
-            let out = coord.run_round().unwrap();
+            let out = run_next(&mut coord).unwrap();
             assert_eq!(out.collected, 6, "{kind}");
             assert_eq!(out.missing, 1, "{kind}");
             assert_eq!(coord.metrics.counter("gradients_malformed"), 1, "{kind}");
@@ -1449,10 +1961,19 @@ mod tests {
     fn first_m_collects_m_and_caches_cover_the_rest() {
         // n = 7, f = 2, byz = 0 ⇒ first-m waits for the fastest 5; the
         // two slowest workers fall through the fallback path every round.
-        let (mut coord, _p) =
-            quadratic_cluster(7, 2, 0, GarKind::MultiKrum, AttackKind::None, 32, 0.05);
-        coord.set_collect(CollectMode::FirstM);
-        let out = coord.run_round().unwrap();
+        // (Collection semantics are a construction-time knob now — the
+        // post-hoc `set_collect` mutator no longer exists.)
+        let (mut coord, _p) = quadratic_cluster(
+            7,
+            2,
+            0,
+            GarKind::MultiKrum,
+            AttackKind::None,
+            32,
+            0.05,
+            CollectMode::FirstM,
+        );
+        let out = run_next(&mut coord).unwrap();
         assert_eq!(out.collected, 5);
         assert_eq!(out.missing, 2);
         assert_eq!(coord.metrics.counter("gradients_missing"), 2);
@@ -1471,10 +1992,11 @@ mod tests {
             AttackKind::Omniscient { epsilon: 0.1 },
             16,
             0.05,
+            CollectMode::All,
         );
         let mut counts = vec![0u64; 11];
         for _ in 0..8 {
-            let out = coord.run_round().unwrap();
+            let out = run_next(&mut coord).unwrap();
             assert!(!out.selected.is_empty());
             assert!(out.selected.iter().all(|&w| w < 11));
             for &w in &out.selected {
@@ -1602,27 +2124,21 @@ mod tests {
                 .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
                 .collect();
             serve_workers(pairs);
-            let mut coord = Coordinator::new(
-                GarKind::MultiKrum.instantiate(7, 2).unwrap(),
-                None,
-                0,
-                server,
-                vec![0.0; 9_000],
-                0.2,
-                0.0,
-                CoordinatorOptions {
+            let mut coord = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 2).unwrap())
+                .options(CoordinatorOptions {
                     round_timeout: Duration::from_secs(10),
                     schedule: LrSchedule::Fixed { base: 0.2 },
                     seed: 3,
                     collect: CollectMode::FirstM,
                     overlap,
                     overlap_window: window,
-                },
-            )
-            .unwrap();
+                    ..Default::default()
+                })
+                .build(server, vec![0.0; 9_000], 0.2, 0.0)
+                .unwrap();
             let mut saved = 0u64;
             for _ in 0..4 {
-                let out = coord.run_round().unwrap();
+                let out = run_next(&mut coord).unwrap();
                 assert_eq!(out.collected, 5, "{overlap}: fast-tier quorum");
                 assert_eq!(out.missing, 2, "{overlap}: stragglers cached out");
                 saved += out.overlap_saved_us;
@@ -1651,13 +2167,195 @@ mod tests {
 
     #[test]
     fn with_gar_swaps_rule() {
-        let (coord, _p) =
-            quadratic_cluster(7, 1, 0, GarKind::MultiKrum, AttackKind::None, 8, 0.05);
+        let (coord, _p) = quadratic_cluster(
+            7,
+            1,
+            0,
+            GarKind::MultiKrum,
+            AttackKind::None,
+            8,
+            0.05,
+            CollectMode::All,
+        );
         let swapped = coord
             .with_gar(GarKind::Median.instantiate(7, 1).unwrap())
             .unwrap();
         assert_eq!(swapped.gar_name(), "median");
         let bad = GarKind::Median.instantiate(9, 1).unwrap();
         assert!(swapped.with_gar(bad).is_err());
+    }
+
+    #[test]
+    fn scripted_churn_shrinks_and_rejoins() {
+        // Workers 0..2 leave at round 2 and rejoin at round 4: the view
+        // shrinks to 5, the GAR re-instantiates at n' = 5 (multi-krum
+        // min_n(1) = 5), and the full-fleet path resumes on rejoin.
+        let churn = ChurnModel {
+            leave_round: 2,
+            leave_workers: 2,
+            rejoin_round: 4,
+        };
+        let problem = Arc::new(QuadraticProblem::new(16, 0.05, 7));
+        let faults = FaultModel {
+            churn,
+            ..Default::default()
+        };
+        let par = Parallelism::new(2);
+        let (server, workers) = build(TransportKind::default(), 7, faults, &par);
+        let pairs = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
+            .collect();
+        serve_workers(pairs);
+        let mut coord =
+            Coordinator::builder(GarKind::MultiKrum.instantiate_parallel(7, 1, &par).unwrap())
+                .options(CoordinatorOptions {
+                    round_timeout: Duration::from_secs(10),
+                    churn,
+                    ..Default::default()
+                })
+                .elastic(GarKind::MultiKrum, par.clone())
+                .build(server, vec![0.0; 16], 0.1, 0.0)
+                .unwrap();
+        let expected_active = [7usize, 5, 5, 7];
+        for (i, &active) in expected_active.iter().enumerate() {
+            let view = coord.next_view();
+            assert_eq!(view.active(), active, "round {}", i + 1);
+            let out = coord.run_round(&view).unwrap();
+            assert_eq!(out.collected, active, "round {}", i + 1);
+            assert_eq!(out.missing, 0, "round {}", i + 1);
+            assert!(
+                out.selected.iter().all(|&w| view.contains(w)),
+                "round {}: selected {:?} outside view {:?}",
+                i + 1,
+                out.selected,
+                view.workers
+            );
+        }
+        // leave (round 2) + rejoin (round 4).
+        assert_eq!(coord.metrics.counter("membership_view_changes"), 2);
+        assert!(coord.params().iter().all(|v| v.is_finite()));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn journal_replay_after_interruption_is_bit_identical() {
+        let path =
+            std::env::temp_dir().join(format!("mb_core_journal_{}.mbj", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let run = |journal: Option<PathBuf>, steps: usize| -> (Vec<f32>, u64, u64) {
+            let problem = Arc::new(QuadraticProblem::new(16, 0.05, 7));
+            let (server, workers) = build(
+                TransportKind::default(),
+                7,
+                FaultModel::default(),
+                &Parallelism::new(2),
+            );
+            let pairs = workers
+                .into_iter()
+                .enumerate()
+                .map(|(i, ep)| (ep, GradSource::quadratic(Arc::clone(&problem), i, 8)))
+                .collect();
+            serve_workers(pairs);
+            let mut coord = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 1).unwrap())
+                .options(CoordinatorOptions {
+                    round_timeout: Duration::from_secs(10),
+                    journal,
+                    ..Default::default()
+                })
+                .build(server, vec![0.0; 16], 0.1, 0.0)
+                .unwrap();
+            for _ in 0..steps {
+                run_next(&mut coord).unwrap();
+            }
+            let params = coord.params().to_vec();
+            let replayed = coord.metrics.counter("journal_replayed");
+            let committed = coord.metrics.counter("journal_committed");
+            coord.shutdown();
+            (params, replayed, committed)
+        };
+        // Interrupted run: 3 rounds committed, then the coordinator is
+        // dropped (every record is fsync'd at commit, so there is no
+        // flush path to miss on the way out — the crash case).
+        let (_params, replayed, committed) = run(Some(path.clone()), 3);
+        assert_eq!((replayed, committed), (0, 3));
+        // Resumed run over the same journal: verifies rounds 1..=3
+        // against their recorded checksums, then commits 4..=6.
+        let (resumed, replayed, committed) = run(Some(path.clone()), 6);
+        assert_eq!((replayed, committed), (3, 3));
+        // Uninterrupted reference run.
+        let (reference, _, _) = run(None, 6);
+        assert_eq!(resumed, reference, "recovery replay must be bit-identical");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shrunken_view_needs_an_elastic_factory() {
+        let (mut coord, _p) = quadratic_cluster(
+            7,
+            1,
+            0,
+            GarKind::MultiKrum,
+            AttackKind::None,
+            8,
+            0.05,
+            CollectMode::All,
+        );
+        let mut view = coord.next_view();
+        view.workers.remove(0);
+        let err = coord.run_round(&view).unwrap_err().to_string();
+        assert!(err.contains("elastic"), "{err}");
+        // The failed round must not have advanced the counter.
+        assert_eq!(coord.round(), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn builder_cross_knob_validation() {
+        // Churn without an elastic factory is rejected at build time.
+        let (server, _workers) = star(7, FaultModel::default());
+        let churn = ChurnModel {
+            leave_round: 2,
+            leave_workers: 1,
+            rejoin_round: 0,
+        };
+        let err = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 1).unwrap())
+            .options(CoordinatorOptions {
+                churn,
+                ..Default::default()
+            })
+            .build(server, vec![0.0; 8], 0.1, 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("elastic"), "{err}");
+
+        // A scripted shrink below the rule's quorum is rejected too:
+        // multi-krum min_n(1) = 5, but 7 − 3 = 4.
+        let (server, _workers) = star(7, FaultModel::default());
+        let churn = ChurnModel {
+            leave_round: 2,
+            leave_workers: 3,
+            rejoin_round: 0,
+        };
+        let err = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 1).unwrap())
+            .options(CoordinatorOptions {
+                churn,
+                ..Default::default()
+            })
+            .elastic(GarKind::MultiKrum, Parallelism::sequential())
+            .build(server, vec![0.0; 8], 0.1, 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("min_n"), "{err}");
+
+        // byz > 0 without an attack is still rejected.
+        let (server, _workers) = star(6, FaultModel::default());
+        let err = Coordinator::builder(GarKind::MultiKrum.instantiate(7, 1).unwrap())
+            .attack(None, 1)
+            .build(server, vec![0.0; 8], 0.1, 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("attack"), "{err}");
     }
 }

@@ -1,0 +1,463 @@
+//! The durable round-journal — crash-safe coordinator state.
+//!
+//! An append-only file of framed round records (one fsync'd frame per
+//! committed round) that lets a restarted coordinator prove it is
+//! resuming the *same* run: on restart, rounds up to the journal's
+//! last committed round are re-executed deterministically and each
+//! replayed round's params checksum is **verified** against the journal
+//! (a mismatch — wrong seed, wrong config, edited journal — is a hard
+//! error, never a silent divergence); only genuinely new rounds append.
+//! Because every layer below the coordinator is deterministic (see
+//! `docs/architecture.md`), verified replay reconstructs the full
+//! in-memory state — optimizer velocity, momentum-stage state,
+//! straggler caches — that a params snapshot could not capture, and an
+//! interrupted-then-resumed run is bit-identical to an uninterrupted
+//! one (CI's crash-recovery determinism leg).
+//!
+//! ## On-disk format (normative copy in `docs/wire-protocol.md` §8)
+//!
+//! The file reuses the MBWP framing discipline: little-endian fixed
+//! width fields, one FNV-1a-checksummed frame per record.
+//!
+//! ```text
+//! file   := header record*
+//! header := "MBJR" version:u16 reserved:u16          (8 bytes)
+//! record := payload_len:u32 payload checksum:u64     (checksum = FNV-1a of payload)
+//! payload := round:u64 params_checksum:u64 f:u32
+//!            n_workers:u32 worker_id:u32 ×n_workers
+//!            n_selected:u32 selected_row:u32 ×n_selected
+//!            collected:u32 missing:u32
+//! ```
+//!
+//! **Torn-tail rule:** an *incomplete* trailing frame (the coordinator
+//! died mid-write) is truncated away on open — the journal recovers to
+//! the last fully committed round. A *complete* frame whose checksum
+//! does not match is corruption, not a torn write, and fails `open`
+//! hard. **Exactly-once rule:** `commit` only accepts round
+//! `last_committed + 1`; re-committing an already-journalled round is
+//! an error, which is what makes the injected-crash recovery test
+//! meaningful.
+
+use crate::util::fnv1a;
+use crate::Result;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Journal file magic (`header` above).
+pub const JOURNAL_MAGIC: [u8; 4] = *b"MBJR";
+
+/// Journal format version.
+pub const JOURNAL_VERSION: u16 = 1;
+
+/// Largest accepted record payload (a torn length field can claim
+/// anything; a real record is a few KiB even at n = 10⁴ workers).
+const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// One committed round: everything needed to verify a deterministic
+/// replay and to audit what the round did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundRecord {
+    /// 1-based round id.
+    pub round: u64,
+    /// FNV-1a over the post-round model parameters' LE bytes (the same
+    /// digest `train --params-checksum` prints).
+    pub params_checksum: u64,
+    /// Byzantine tolerance in force for the round.
+    pub f: u32,
+    /// The round's membership view (original honest worker ids,
+    /// ascending).
+    pub workers: Vec<u32>,
+    /// Worker ids the GAR's selection phase picked (original ids, as
+    /// reported in `RoundOutcome::selected` — elastic rounds map matrix
+    /// rows back before committing).
+    pub selected: Vec<u32>,
+    /// Honest gradients received before the quorum/deadline.
+    pub collected: u32,
+    /// Honest slots that fell through the straggler cache.
+    pub missing: u32,
+}
+
+impl RoundRecord {
+    fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(36 + 4 * (self.workers.len() + self.selected.len()));
+        p.extend_from_slice(&self.round.to_le_bytes());
+        p.extend_from_slice(&self.params_checksum.to_le_bytes());
+        p.extend_from_slice(&self.f.to_le_bytes());
+        p.extend_from_slice(&(self.workers.len() as u32).to_le_bytes());
+        for w in &self.workers {
+            p.extend_from_slice(&w.to_le_bytes());
+        }
+        p.extend_from_slice(&(self.selected.len() as u32).to_le_bytes());
+        for s in &self.selected {
+            p.extend_from_slice(&s.to_le_bytes());
+        }
+        p.extend_from_slice(&self.collected.to_le_bytes());
+        p.extend_from_slice(&self.missing.to_le_bytes());
+        p
+    }
+
+    fn decode(payload: &[u8]) -> Result<Self> {
+        let mut c = Cursor { buf: payload, at: 0 };
+        let round = c.u64()?;
+        let params_checksum = c.u64()?;
+        let f = c.u32()?;
+        let nw = c.u32()? as usize;
+        let mut workers = Vec::with_capacity(nw.min(1 << 16));
+        for _ in 0..nw {
+            workers.push(c.u32()?);
+        }
+        let ns = c.u32()? as usize;
+        let mut selected = Vec::with_capacity(ns.min(1 << 16));
+        for _ in 0..ns {
+            selected.push(c.u32()?);
+        }
+        let collected = c.u32()?;
+        let missing = c.u32()?;
+        anyhow::ensure!(
+            c.at == payload.len(),
+            "journal record has {} trailing bytes",
+            payload.len() - c.at
+        );
+        Ok(Self {
+            round,
+            params_checksum,
+            f,
+            workers,
+            selected,
+            collected,
+            missing,
+        })
+    }
+}
+
+/// Bounds-checked little-endian reader over a record payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        anyhow::ensure!(
+            self.at + n <= self.buf.len(),
+            "journal record truncated inside a field"
+        );
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// The append-only round-journal (see the module docs for the format
+/// and the recovery rules).
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+    records: Vec<RoundRecord>,
+    /// Bytes dropped by torn-tail recovery on open (0 for a clean file).
+    truncated_bytes: u64,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, replaying every committed
+    /// record. An incomplete trailing frame is truncated away (torn
+    /// write — the commit never completed); a complete frame with a bad
+    /// checksum, a bad magic/version, or a non-contiguous round sequence
+    /// fails hard.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("journal {}: {e}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        if bytes.is_empty() {
+            let mut header = Vec::with_capacity(8);
+            header.extend_from_slice(&JOURNAL_MAGIC);
+            header.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+            header.extend_from_slice(&0u16.to_le_bytes());
+            file.write_all(&header)?;
+            file.sync_data()?;
+            return Ok(Self {
+                file,
+                path,
+                records: Vec::new(),
+                truncated_bytes: 0,
+            });
+        }
+        anyhow::ensure!(
+            bytes.len() >= 8 && bytes[..4] == JOURNAL_MAGIC,
+            "journal {}: bad magic (not a journal file)",
+            path.display()
+        );
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        anyhow::ensure!(
+            version == JOURNAL_VERSION,
+            "journal {}: version {version} (this build speaks {JOURNAL_VERSION})",
+            path.display()
+        );
+        let mut records: Vec<RoundRecord> = Vec::new();
+        let mut good = 8usize; // offset past the last fully-committed record
+        let mut at = 8usize;
+        loop {
+            if at == bytes.len() {
+                break; // clean tail
+            }
+            // Frame = len:u32 payload checksum:u64. Anything that runs
+            // past EOF — a partial length field, a length claiming more
+            // bytes than remain, a missing checksum — is a torn tail.
+            if at + 4 > bytes.len() {
+                break;
+            }
+            let len = u32::from_le_bytes(bytes[at..at + 4].try_into().expect("4 bytes"));
+            if len > MAX_PAYLOAD {
+                break; // torn length field
+            }
+            let len = len as usize;
+            if at + 4 + len + 8 > bytes.len() {
+                break;
+            }
+            let payload = &bytes[at + 4..at + 4 + len];
+            let sum = u64::from_le_bytes(
+                bytes[at + 4 + len..at + 4 + len + 8]
+                    .try_into()
+                    .expect("8 bytes"),
+            );
+            // A *complete* frame with a bad checksum is corruption, not
+            // a torn write — refuse to resume from a lying journal.
+            anyhow::ensure!(
+                fnv1a(payload.iter().copied()) == sum,
+                "journal {}: record at offset {at} fails its checksum \
+                 (corrupt journal; refusing to resume)",
+                path.display()
+            );
+            let rec = RoundRecord::decode(payload)?;
+            let expect = records.last().map_or(1, |r: &RoundRecord| r.round + 1);
+            anyhow::ensure!(
+                rec.round == expect,
+                "journal {}: round {} follows round {} (gap or reorder)",
+                path.display(),
+                rec.round,
+                expect - 1
+            );
+            at += 4 + len + 8;
+            good = at;
+            records.push(rec);
+        }
+        let truncated_bytes = (bytes.len() - good) as u64;
+        if truncated_bytes > 0 {
+            // Torn tail: drop the partial frame so the next commit
+            // appends a clean one.
+            file.set_len(good as u64)?;
+            file.sync_data()?;
+        }
+        file.seek(SeekFrom::End(0))?;
+        Ok(Self {
+            file,
+            path,
+            records,
+            truncated_bytes,
+        })
+    }
+
+    /// The journal's path (for logs and the CI artifact upload).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Last committed round (0 when the journal is empty).
+    pub fn last_committed(&self) -> u64 {
+        self.records.last().map_or(0, |r| r.round)
+    }
+
+    /// Bytes discarded by torn-tail recovery when the journal was
+    /// opened (0 for a cleanly closed file).
+    pub fn truncated_bytes(&self) -> u64 {
+        self.truncated_bytes
+    }
+
+    /// The committed record for `round`, if any.
+    pub fn record(&self, round: u64) -> Option<&RoundRecord> {
+        if round == 0 || round > self.last_committed() {
+            return None;
+        }
+        self.records.get((round - 1) as usize)
+    }
+
+    /// The committed params checksum for `round`, if any — what a
+    /// replayed round must reproduce bit-exactly.
+    pub fn expected_checksum(&self, round: u64) -> Option<u64> {
+        self.record(round).map(|r| r.params_checksum)
+    }
+
+    /// Durably append one round. Exactly-once: the record's round must
+    /// be `last_committed + 1` — a crashed-and-resumed coordinator that
+    /// replays committed rounds verifies them against
+    /// [`Journal::expected_checksum`] instead of re-committing. The
+    /// frame is flushed and `fsync`'d before this returns; a crash at
+    /// any point leaves either the old tail or the full new frame.
+    pub fn commit(&mut self, rec: RoundRecord) -> Result<()> {
+        anyhow::ensure!(
+            rec.round == self.last_committed() + 1,
+            "journal {}: commit for round {} but last committed is {} \
+             (exactly-once: only round {} may commit)",
+            self.path.display(),
+            rec.round,
+            self.last_committed(),
+            self.last_committed() + 1
+        );
+        let payload = rec.encode();
+        let mut frame = Vec::with_capacity(12 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&fnv1a(payload.iter().copied()).to_le_bytes());
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        self.records.push(rec);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mb_journal_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn rec(round: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            params_checksum: 0xDEAD_BEEF ^ round,
+            f: 1,
+            workers: vec![0, 1, 2, 4],
+            selected: vec![0, 2],
+            collected: 4,
+            missing: 0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_reopen() {
+        let path = tmp("roundtrip.mbjr");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            assert_eq!(j.last_committed(), 0);
+            j.commit(rec(1)).unwrap();
+            j.commit(rec(2)).unwrap();
+            j.commit(rec(3)).unwrap();
+        }
+        let j = Journal::open(&path).unwrap();
+        assert_eq!(j.last_committed(), 3);
+        assert_eq!(j.truncated_bytes(), 0);
+        assert_eq!(j.record(2), Some(&rec(2)));
+        assert_eq!(j.expected_checksum(3), Some(0xDEAD_BEEF ^ 3));
+        assert_eq!(j.record(4), None);
+        assert_eq!(j.record(0), None);
+    }
+
+    #[test]
+    fn commit_is_exactly_once() {
+        let path = tmp("exactly_once.mbjr");
+        let _ = std::fs::remove_file(&path);
+        let mut j = Journal::open(&path).unwrap();
+        j.commit(rec(1)).unwrap();
+        // Re-committing round 1 or skipping to round 3 both violate the
+        // gapless exactly-once contract.
+        assert!(j.commit(rec(1)).is_err());
+        assert!(j.commit(rec(3)).is_err());
+        j.commit(rec(2)).unwrap();
+        assert_eq!(j.last_committed(), 2);
+    }
+
+    #[test]
+    fn torn_tail_recovers_to_last_committed() {
+        let path = tmp("torn_tail.mbjr");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.commit(rec(1)).unwrap();
+            j.commit(rec(2)).unwrap();
+        }
+        // Simulate a crash mid-append: chop the file inside record 2's
+        // frame.
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        let j = Journal::open(&path).unwrap();
+        assert_eq!(j.last_committed(), 1);
+        assert!(j.truncated_bytes() > 0);
+        assert_eq!(j.record(2), None);
+        // The torn bytes were physically truncated: a fresh reopen sees
+        // a clean single-record file and the next commit appends round 2.
+        let mut j = Journal::open(&path).unwrap();
+        assert_eq!(j.truncated_bytes(), 0);
+        j.commit(rec(2)).unwrap();
+        assert_eq!(Journal::open(&path).unwrap().last_committed(), 2);
+    }
+
+    #[test]
+    fn torn_length_field_is_a_torn_tail() {
+        let path = tmp("torn_len.mbjr");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.commit(rec(1)).unwrap();
+        }
+        // Append 3 stray bytes — not even a whole length field.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xFF, 0xFF, 0xFF]);
+        std::fs::write(&path, &bytes).unwrap();
+        let j = Journal::open(&path).unwrap();
+        assert_eq!(j.last_committed(), 1);
+        assert_eq!(j.truncated_bytes(), 3);
+    }
+
+    #[test]
+    fn corrupt_checksum_is_a_hard_error() {
+        let path = tmp("corrupt.mbjr");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.commit(rec(1)).unwrap();
+            j.commit(rec(2)).unwrap();
+        }
+        // Flip a byte inside record 1's payload: the frame is complete,
+        // so this is corruption, not a torn tail — open must refuse.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8 + 4 + 2] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Journal::open(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let path = tmp("bad_magic.mbjr");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00").unwrap();
+        assert!(Journal::open(&path).unwrap_err().to_string().contains("magic"));
+        let path = tmp("bad_version.mbjr");
+        let mut h = Vec::new();
+        h.extend_from_slice(&JOURNAL_MAGIC);
+        h.extend_from_slice(&7u16.to_le_bytes());
+        h.extend_from_slice(&0u16.to_le_bytes());
+        std::fs::write(&path, &h).unwrap();
+        assert!(Journal::open(&path).unwrap_err().to_string().contains("version"));
+    }
+}

@@ -1,0 +1,153 @@
+//! Per-round cluster membership — the elastic-fleet surface.
+//!
+//! A [`MembershipView`] names the honest workers expected to
+//! participate in one round. The coordinator computes the next round's
+//! view from the scripted churn model ([`crate::transport::ChurnModel`],
+//! the pooled/threaded backends) and from live departure tracking
+//! (Goodbye frames and crash-detected disconnects on the socket
+//! backend, `ServerEndpoint::departed_workers`), then passes it to
+//! [`crate::Coordinator::run_round`].
+//!
+//! **Determinism contract:** a *full* view routes the round through the
+//! unchanged fixed-fleet path, bit for bit — elasticity costs nothing
+//! until a worker actually leaves (property-tested in
+//! `rust/tests/prop_membership.rs` across every GAR × transport ×
+//! thread count). A *shrunken* view re-shards the round: active workers
+//! are compacted to matrix rows by view rank, the GAR is
+//! re-instantiated at `n' = active + byz` (construction revalidates the
+//! quorum `n' ≥ min_n(f)`), and any shape change re-zeros
+//! `ResilientMomentum` state deliberately (Farhadkhani et al.'s
+//! momentum-then-aggregate composition is re-entered from a clean
+//! state rather than mixing momentum across fleets).
+
+use crate::Result;
+
+/// The honest workers expected to participate in one round.
+///
+/// `workers` holds *original* worker ids (the launch-time numbering —
+/// ids are never renumbered by churn), strictly ascending. `f` is the
+/// declared Byzantine tolerance the round's GAR must honour.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipView {
+    /// The 1-based round this view applies to.
+    pub round: u64,
+    /// Original ids of the honest workers present this round, strictly
+    /// ascending.
+    pub workers: Vec<usize>,
+    /// Byzantine tolerance `f` in force for this round.
+    pub f: usize,
+}
+
+impl MembershipView {
+    /// The full fixed-fleet view: every honest worker `0..n_honest`
+    /// present. Rounds driven with a full view are bit-identical to the
+    /// pre-elastic fixed-fleet path.
+    pub fn full(round: u64, n_honest: usize, f: usize) -> Self {
+        Self {
+            round,
+            workers: (0..n_honest).collect(),
+            f,
+        }
+    }
+
+    /// Number of honest workers present.
+    pub fn active(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Whether every honest worker of an `n_honest`-strong fleet is
+    /// present (the view degenerates to the fixed-fleet path).
+    pub fn is_full(&self, n_honest: usize) -> bool {
+        self.workers.len() == n_honest
+            && self.workers.iter().copied().eq(0..n_honest)
+    }
+
+    /// Whether `worker` (original id) participates this round.
+    pub fn contains(&self, worker: usize) -> bool {
+        self.workers.binary_search(&worker).is_ok()
+    }
+
+    /// The matrix row (view rank) assigned to `worker` this round, or
+    /// `None` for a non-member. Rank compaction is the elastic
+    /// re-shard: row `r` of the round's proposal matrix is the `r`-th
+    /// present worker in ascending id order, a pure function of the
+    /// view — identical across transports and thread counts.
+    pub fn rank(&self, worker: usize) -> Option<usize> {
+        self.workers.binary_search(&worker).ok()
+    }
+
+    /// Check the view is well-formed for an `n_honest`-strong fleet:
+    /// strictly ascending ids, all `< n_honest`, at least one present.
+    pub fn validate(&self, n_honest: usize) -> Result<()> {
+        anyhow::ensure!(
+            !self.workers.is_empty(),
+            "membership view for round {} is empty",
+            self.round
+        );
+        anyhow::ensure!(
+            self.workers.windows(2).all(|w| w[0] < w[1]),
+            "membership view for round {} is not strictly ascending",
+            self.round
+        );
+        let max = *self.workers.last().expect("non-empty");
+        anyhow::ensure!(
+            max < n_honest,
+            "membership view for round {} names worker {max} \
+             (fleet has {n_honest} honest workers)",
+            self.round
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_view_is_full() {
+        let v = MembershipView::full(1, 5, 1);
+        assert!(v.is_full(5));
+        assert_eq!(v.active(), 5);
+        assert!(v.contains(4));
+        assert_eq!(v.rank(3), Some(3));
+        v.validate(5).unwrap();
+    }
+
+    #[test]
+    fn shrunken_view_ranks_compact() {
+        let v = MembershipView {
+            round: 3,
+            workers: vec![0, 2, 4],
+            f: 1,
+        };
+        assert!(!v.is_full(5));
+        assert!(!v.contains(1));
+        assert_eq!(v.rank(2), Some(1));
+        assert_eq!(v.rank(4), Some(2));
+        assert_eq!(v.rank(3), None);
+        v.validate(5).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_malformed_views() {
+        let empty = MembershipView {
+            round: 1,
+            workers: vec![],
+            f: 1,
+        };
+        assert!(empty.validate(4).is_err());
+        let unsorted = MembershipView {
+            round: 1,
+            workers: vec![2, 1],
+            f: 1,
+        };
+        assert!(unsorted.validate(4).is_err());
+        let oob = MembershipView {
+            round: 1,
+            workers: vec![0, 7],
+            f: 1,
+        };
+        assert!(oob.validate(4).is_err());
+    }
+}

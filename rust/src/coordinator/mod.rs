@@ -10,14 +10,25 @@
 //! combine+SGD pass (no separate full-d aggregate materialisation).
 //! [`launch`] wires a full cluster from an
 //! [`crate::config::ExperimentConfig`].
+//!
+//! Elasticity and durability ride on two sibling modules: a per-round
+//! [`MembershipView`] names the workers expected this round (a full
+//! view is bit-identical to the fixed-fleet path), and an append-only
+//! [`Journal`] makes committed rounds durable so an interrupted run
+//! resumes — via verified deterministic replay — bit-identical to an
+//! uninterrupted one.
 
 #![deny(missing_docs)]
 
 mod builder;
 mod core;
 mod evaluator;
+mod journal;
+mod membership;
 
 pub use builder::{launch, LaunchedCluster};
 pub(crate) use core::fused_combine_update;
-pub use core::{Coordinator, CoordinatorOptions, OverlapMode, RoundOutcome};
+pub use core::{Coordinator, CoordinatorBuilder, CoordinatorOptions, OverlapMode, RoundOutcome};
 pub use evaluator::Evaluator;
+pub use journal::{Journal, RoundRecord};
+pub use membership::MembershipView;

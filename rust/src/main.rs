@@ -94,11 +94,15 @@ USAGE:
                     [--overlap off|prefix] [--overlap-window W] [--groups G]
                     [--codec off|raw|lossless|fp16|int8|topk]
                     [--params-checksum]
+                    [--journal FILE] [--crash-after-round R]
+                    [--churn-leave-round R] [--churn-workers W]
+                    [--churn-rejoin-round R]
                     [--socket-listen ADDR] [--socket-chunk K]
                     [--artifacts DIR] [--curve-out FILE]
   multibulyan worker --connect ADDR --worker-id K [--dim D] [--noise X]
                     [--seed S] [--batch-size B] [--chunk K]
                     [--codec off|raw|lossless|fp16|int8|topk] [--retry-ms MS]
+                    [--rejoin]
   multibulyan aggregate [--gar G] [--n N] [--f F] [--dim D] [--threads T]
   multibulyan bench <fig2|fig3|dscaling|dscale|slowdown|threads|straggler
                      |resilience|codec|cone> [--full] [--artifacts DIR]
@@ -163,6 +167,26 @@ Codec:   --codec off (default; raw f32 gradient frames) | raw (identity
          worker command's --codec must be accepted by the coordinator
          (Hello capability negotiation); unknown names are rejected
          up front with the valid list
+Journal: --journal FILE appends one checksummed record per committed
+         round (params digest, selection, membership view, metrics) to
+         an append-only round-journal, fsync'd before the round is
+         reported. Re-running with the same --journal resumes from the
+         last committed round by verified deterministic replay —
+         bit-identical to an uninterrupted run (the CI crash-recovery
+         probe diffs --params-checksum across the two). A torn tail
+         (crash mid-write) is truncated on open; a corrupt committed
+         record is a hard error. --crash-after-round R aborts the
+         process right after committing round R (fault injection for
+         the recovery leg; requires --journal)
+Churn:   --churn-leave-round R drops the first --churn-workers W honest
+         workers from the membership view at round R (1-based); they
+         rejoin at --churn-rejoin-round (0 = never). Each view change
+         revalidates the GAR quorum, re-shards the data assignment and
+         re-instantiates the rule at the shrunken size; flat path only
+         (--groups 1). External socket workers leave live instead: a
+         Goodbye frame or crash shrinks the next view, and a worker
+         process restarted with --rejoin reclaims its slot
+         (docs/wire-protocol.md §8)
 Lint:    `lint` runs the repo-specific invariant linter over rust/src,
          rust/tests and examples/ (unsafe audit, wall-clock, pool-only
          parallelism, hash-iteration, float-reduction rules); exits
@@ -256,6 +280,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 codec: None,
                 groups: 1,
                 output_dir: None,
+                journal: None,
+                crash_after_round: None,
             }
         }
     };
@@ -297,6 +323,27 @@ fn cmd_train(args: &Args) -> Result<()> {
         exp.cluster.socket_chunk = c
             .parse()
             .map_err(|e| anyhow::anyhow!("--socket-chunk {c}: {e}"))?;
+    }
+    if let Some(p) = args.get("journal") {
+        exp.journal = Some(p.to_string());
+    }
+    if args.has("crash-after-round") {
+        exp.crash_after_round = Some(args.parse_or("crash-after-round", 0u64)?);
+    }
+    if let Some(r) = args.get("churn-leave-round") {
+        exp.cluster.churn_leave_round = r
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--churn-leave-round {r}: {e}"))?;
+    }
+    if let Some(w) = args.get("churn-workers") {
+        exp.cluster.churn_workers = w
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--churn-workers {w}: {e}"))?;
+    }
+    if let Some(r) = args.get("churn-rejoin-round") {
+        exp.cluster.churn_rejoin_round = r
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--churn-rejoin-round {r}: {e}"))?;
     }
     exp.validate()?;
     let compute = match &exp.model {
@@ -376,6 +423,10 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let batch_size: usize = args.parse_or("batch-size", 25)?;
     let chunk: usize = args.parse_or("chunk", socket::DEFAULT_CHUNK)?;
     let retry_ms: u64 = args.parse_or("retry-ms", 5_000)?;
+    // A restarted worker process reclaims its slot: the rejoin bit in the
+    // Hello flags byte tells the coordinator to evict the dead incumbent
+    // connection instead of rejecting the duplicate (wire spec §8).
+    let rejoin = args.has("rejoin");
     anyhow::ensure!(chunk >= 1, "--chunk must be ≥ 1");
     let codec = match args.get("codec") {
         None | Some("off") => None,
@@ -396,7 +447,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let mut waited = 0u64;
     let mut backoff_ms = 50u64;
     let client = loop {
-        match socket::connect(addr, worker_id, chunk, codec.unwrap_or_default()) {
+        match socket::connect_opts(addr, worker_id, chunk, codec.unwrap_or_default(), rejoin) {
             Ok(c) => break c,
             Err(e) if waited >= retry_ms => {
                 anyhow::bail!(

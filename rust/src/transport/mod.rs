@@ -134,6 +134,53 @@ pub struct FaultModel {
     pub seed: u64,
     /// Deterministic per-worker simulated compute cost (straggler model).
     pub cost: ComputeCost,
+    /// Scripted membership churn (elastic-cluster simulation): workers
+    /// the model marks absent for a round emit nothing that round, like
+    /// a cleanly departed machine. See [`ChurnModel`].
+    pub churn: ChurnModel,
+}
+
+/// Scripted join/leave churn for the in-process backends — the
+/// deterministic counterpart of the socket backend's live
+/// Goodbye/crash-detected departure tracking. The first `leave_workers`
+/// worker ids leave the cluster at `leave_round` (inclusive) and, if
+/// `rejoin_round` is nonzero, rejoin at `rejoin_round` (inclusive).
+/// The zero value (`Default`) scripts no churn at all.
+///
+/// Enforcement is at the [`Emitter`]: an absent worker's `send` /
+/// `send_coded` is suppressed *before* the fault RNG draws (a departed
+/// machine does not roll dice), uniformly across all three backends'
+/// in-process workers. The coordinator receives the same model through
+/// its options and derives each round's `MembershipView` from it, so
+/// collection never waits out the timeout for a scripted absentee.
+/// Low worker ids are deliberately the leavers, mirroring
+/// [`ComputeCost::slow_workers`]: a path that silently favours
+/// low-index workers gets caught immediately.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChurnModel {
+    /// First round (1-based, inclusive) the leavers are absent;
+    /// 0 scripts no churn.
+    pub leave_round: u64,
+    /// How many workers (ids `0..leave_workers`) leave.
+    pub leave_workers: usize,
+    /// First round (inclusive) the leavers are back; 0 = never.
+    pub rejoin_round: u64,
+}
+
+impl ChurnModel {
+    /// Whether this model scripts no churn at all (every worker present
+    /// in every round — the fixed-fleet fast path).
+    pub fn is_static(&self) -> bool {
+        self.leave_round == 0 || self.leave_workers == 0
+    }
+
+    /// Whether `worker` participates in `round`.
+    pub fn present(&self, worker: usize, round: u64) -> bool {
+        if self.is_static() || worker >= self.leave_workers {
+            return true;
+        }
+        round < self.leave_round || (self.rejoin_round != 0 && round >= self.rejoin_round)
+    }
 }
 
 /// Deterministic per-worker simulated compute-cost model — the straggler
@@ -416,6 +463,9 @@ impl Emitter<'_> {
     /// pooled backend copies into a preallocated arena slot (no
     /// allocation in the steady state).
     pub fn send(&mut self, round: u64, gradient: &[f32]) {
+        if !self.faults.churn.present(self.worker, round) {
+            return; // scripted churn: departed this round, no RNG draw
+        }
         if !self.faults_pass() {
             return; // dropped on the (simulated) wire
         }
@@ -492,6 +542,9 @@ impl Emitter<'_> {
         };
         if codec.kind() == crate::codec::CodecKind::Raw {
             return self.send(round, gradient);
+        }
+        if !self.faults.churn.present(self.worker, round) {
+            return; // scripted churn: departed this round, no RNG draw
         }
         if !self.faults_pass() {
             return; // dropped on the (simulated) wire, pre-encode
@@ -761,6 +814,21 @@ impl ServerEndpoint {
             ServerImpl::Threaded(s) => s.num_workers(),
             ServerImpl::Pooled(s) => s.num_workers(),
             ServerImpl::Socket(s) => s.num_workers(),
+        }
+    }
+
+    /// Worker ids the transport knows to have *departed*: on the socket
+    /// backend these are workers that sent a Goodbye frame or whose
+    /// connection died after registration (crash-detected) and have not
+    /// re-Hello'd; sorted ascending. The in-process backends always
+    /// return an empty list — their scripted churn is a [`ChurnModel`]
+    /// the coordinator already holds, not a discovered fact. The
+    /// coordinator subtracts these ids when deriving the next round's
+    /// `MembershipView`.
+    pub fn departed_workers(&self) -> Vec<usize> {
+        match &self.inner {
+            ServerImpl::Threaded(_) | ServerImpl::Pooled(_) => Vec::new(),
+            ServerImpl::Socket(s) => s.departed_workers(),
         }
     }
 
@@ -1491,6 +1559,75 @@ mod tests {
         assert_eq!(TransportKind::default(), TransportKind::Pooled);
         for kind in TransportKind::ALL {
             assert_eq!(kind.as_str().parse::<TransportKind>().unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn churn_model_presence_schedule() {
+        let none = ChurnModel::default();
+        assert!(none.is_static());
+        assert!(none.present(0, 1) && none.present(7, 999));
+        let leave = ChurnModel {
+            leave_round: 3,
+            leave_workers: 2,
+            rejoin_round: 0,
+        };
+        assert!(leave.present(0, 2) && leave.present(1, 2));
+        assert!(!leave.present(0, 3) && !leave.present(1, 100));
+        assert!(leave.present(2, 3), "only the first leave_workers leave");
+        let rejoin = ChurnModel {
+            leave_round: 3,
+            leave_workers: 1,
+            rejoin_round: 5,
+        };
+        assert!(rejoin.present(0, 2));
+        assert!(!rejoin.present(0, 3) && !rejoin.present(0, 4));
+        assert!(rejoin.present(0, 5) && rejoin.present(0, 6));
+    }
+
+    #[test]
+    fn scripted_churn_silences_departed_workers_on_every_backend() {
+        // Workers 0..2 leave at round 2 and rejoin at round 4: the
+        // emitter must suppress exactly their sends in rounds 2–3 on all
+        // three backends, without perturbing the others.
+        on_both(|kind| {
+            let faults = FaultModel {
+                churn: ChurnModel {
+                    leave_round: 2,
+                    leave_workers: 2,
+                    rejoin_round: 4,
+                },
+                ..Default::default()
+            };
+            let mut server = harness(kind, 4, faults, |id, round, _p, emit| {
+                emit.send(round, &[id as f32]);
+            });
+            let present = |server: &mut ServerEndpoint, round: u64, expect: usize| {
+                server.broadcast(round, Arc::new(vec![0.0]));
+                let mut ids: Vec<usize> = server
+                    .collect(round, expect, Duration::from_millis(300))
+                    .iter()
+                    .map(|m| m.worker)
+                    .collect();
+                ids.sort_unstable();
+                ids
+            };
+            assert_eq!(present(&mut server, 1, 4), vec![0, 1, 2, 3], "{kind}");
+            assert_eq!(present(&mut server, 2, 2), vec![2, 3], "{kind}");
+            assert_eq!(present(&mut server, 3, 2), vec![2, 3], "{kind}");
+            assert_eq!(present(&mut server, 4, 4), vec![0, 1, 2, 3], "{kind}");
+            server.shutdown();
+        });
+    }
+
+    #[test]
+    fn departed_workers_is_empty_on_in_process_backends() {
+        for kind in [TransportKind::Threaded, TransportKind::Pooled] {
+            let server = harness(kind, 2, FaultModel::default(), |_id, round, _p, emit| {
+                emit.send(round, &[0.0]);
+            });
+            assert!(server.departed_workers().is_empty(), "{kind}");
+            server.shutdown();
         }
     }
 

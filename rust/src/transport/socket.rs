@@ -59,8 +59,11 @@ pub const MAGIC: [u8; 4] = *b"MBWP";
 /// Protocol version carried in every frame header (§5.2). A server
 /// receiving any other version rejects the connection. Version 2 added
 /// gradient-codec negotiation (§7): a Hello capability byte, and a
-/// `count`/`codec` prefix on every GradientChunk payload.
-pub const VERSION: u16 = 2;
+/// `count`/`codec` prefix on every GradientChunk payload. Version 3
+/// added elastic membership (§8): the Goodbye frame, crash-detected
+/// departure tracking, and an optional Hello flags byte whose bit 0
+/// requests a rejoin (evicting a stale registration for the same id).
+pub const VERSION: u16 = 3;
 
 /// Fixed frame-header length in bytes (§2).
 pub const HEADER_LEN: usize = 32;
@@ -105,6 +108,12 @@ pub enum PayloadKind {
     Reject = 4,
     /// Either direction: orderly connection teardown (§4.5).
     Shutdown = 5,
+    /// Worker → server orderly departure (§8.1, v3): the worker leaves
+    /// the cluster but the run continues without it. Empty payload; the
+    /// server marks the id departed (see
+    /// [`super::ServerEndpoint::departed_workers`]) and frees its
+    /// registration slot so a later Hello can rejoin.
+    Goodbye = 6,
 }
 
 impl PayloadKind {
@@ -117,6 +126,7 @@ impl PayloadKind {
             3 => Some(PayloadKind::GradientChunk),
             4 => Some(PayloadKind::Reject),
             5 => Some(PayloadKind::Shutdown),
+            6 => Some(PayloadKind::Goodbye),
             _ => None,
         }
     }
@@ -768,6 +778,16 @@ struct ServerState {
     /// Most recent broadcast, replayed to workers that register after
     /// it was sent (§6.1).
     pending: Option<(u64, Arc<Vec<f32>>)>,
+    /// Departure flags (§8.1): set on an orderly Goodbye or a
+    /// crash-detected disconnect, cleared when the id re-registers.
+    /// Surfaced through [`super::ServerEndpoint::departed_workers`] so
+    /// the coordinator can shrink the next round's membership view.
+    departed: Vec<bool>,
+    /// Registration generation per worker id. A reader thread records
+    /// the generation it registered under and only deregisters/marks
+    /// departure if it is still the current holder — an evicted stale
+    /// reader (§8.2 rejoin) must not clobber its replacement.
+    generation: Vec<u64>,
 }
 
 struct Shared {
@@ -992,24 +1012,35 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
         return;
     }
     let worker = hello.worker as usize;
-    // Codec negotiation (§7): an empty Hello payload is codec `raw`
-    // (what every pre-§7 client sends); one byte is a capability id.
-    // Anything else — unknown id or an overlong payload — is rejected
-    // with REJECT_CODEC and the connection is closed.
-    let negotiated = match hello.payload.as_slice() {
-        [] => crate::codec::CodecKind::Raw,
-        [id] => match crate::codec::CodecKind::from_wire(*id) {
-            Some(kind) => kind,
-            None => {
+    // Codec negotiation (§7) + membership flags (§8.2): an empty Hello
+    // payload is codec `raw` (what every pre-§7 client sends); one byte
+    // is a capability id; two bytes add a v3 flags byte whose bit 0
+    // requests a rejoin. An unknown codec id or overlong payload is
+    // rejected with REJECT_CODEC; reserved flag bits with
+    // REJECT_MALFORMED. Either way the connection is closed.
+    let (negotiated, rejoin) = match hello.payload.as_slice() {
+        [] => (crate::codec::CodecKind::Raw, false),
+        [id] | [id, _] => {
+            let Some(kind) = crate::codec::CodecKind::from_wire(*id) else {
                 let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_CODEC));
                 return;
+            };
+            match hello.payload.get(1) {
+                None => (kind, false),
+                Some(flags) if flags & !0x01 == 0 => (kind, flags & 0x01 != 0),
+                Some(_) => {
+                    let _ =
+                        write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_MALFORMED));
+                    return;
+                }
             }
-        },
+        }
         _ => {
             let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_CODEC));
             return;
         }
     };
+    let my_generation;
     {
         let mut st = lock(&shared.state);
         if shared.stop.load(Ordering::SeqCst) {
@@ -1021,10 +1052,30 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
             return;
         }
         if st.conns[worker].is_some() {
-            // First connection wins; the newcomer is turned away (§6.5).
-            drop(st);
-            let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_DUPLICATE));
-            return;
+            // An incumbent holds this id. A rejoin Hello (§8.2) evicts
+            // it deterministically; otherwise the incumbent's liveness
+            // is probed with a Hello ping (informational to clients,
+            // §5.3) — a dead incumbent whose EOF has not yet been
+            // observed is evicted, a live one wins and the newcomer is
+            // turned away (§6.5).
+            let evict = rejoin || {
+                let conn = st.conns[worker].as_mut().expect("incumbent checked above");
+                let ping = encode(&Frame {
+                    kind: PayloadKind::Hello,
+                    round: 0,
+                    worker: hello.worker,
+                    payload: Vec::new(),
+                });
+                conn.write_all(&ping).and_then(|()| conn.flush()).is_err()
+            };
+            if !evict {
+                drop(st);
+                let _ = write_frame(&mut stream, &reject_frame(0, hello.worker, REJECT_DUPLICATE));
+                return;
+            }
+            if let Some(old) = st.conns[worker].take() {
+                old.shutdown_both();
+            }
         }
         let Ok(mut write_half) = stream.try_clone() else {
             return;
@@ -1052,6 +1103,11 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
             );
         }
         st.conns[worker] = Some(write_half);
+        // Registration clears any earlier departure and bumps the
+        // generation so a stale evicted reader cannot deregister us.
+        st.departed[worker] = false;
+        st.generation[worker] = st.generation[worker].wrapping_add(1);
+        my_generation = st.generation[worker];
     }
     let mut asm = ChunkAssembly::default();
     let mut gscratch: Vec<f32> = Vec::new();
@@ -1116,6 +1172,9 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
                     }
                 }
                 PayloadKind::Shutdown => break,
+                // Orderly departure (§8.1): fall through to the exit
+                // cleanup below, which marks the id departed.
+                PayloadKind::Goodbye => break,
                 PayloadKind::Hello => {}
                 PayloadKind::RoundResult | PayloadKind::Reject => {
                     // Server-bound streams must not carry client-bound
@@ -1135,7 +1194,15 @@ fn serve_conn(mut stream: Stream, shared: &Shared) {
         }
     }
     let mut st = lock(&shared.state);
-    st.conns[worker] = None;
+    if st.generation[worker] == my_generation {
+        st.conns[worker] = None;
+        if !shared.stop.load(Ordering::SeqCst) {
+            // Goodbye or crash-detected disconnect (§8.1): the id is
+            // reported by `departed_workers` until it re-registers. A
+            // cluster-wide shutdown is not a departure.
+            st.departed[worker] = true;
+        }
+    }
 }
 
 /// Accept loop: non-blocking accept + stop-flag poll, one reader thread
@@ -1294,6 +1361,18 @@ impl Server {
     pub(super) fn num_workers(&self) -> usize {
         self.shared.n
     }
+
+    /// Worker ids that left the cluster — orderly Goodbye or
+    /// crash-detected disconnect (§8.1) — and have not re-registered.
+    /// Ascending by construction (index order of the flag vector).
+    pub(super) fn departed_workers(&self) -> Vec<usize> {
+        let st = lock(&self.shared.state);
+        st.departed
+            .iter()
+            .enumerate()
+            .filter_map(|(id, gone)| gone.then_some(id))
+            .collect()
+    }
 }
 
 impl Drop for Server {
@@ -1376,14 +1455,34 @@ pub fn connect(
     chunk: usize,
     codec: crate::codec::CodecKind,
 ) -> anyhow::Result<WorkerClient> {
+    connect_opts(addr, worker, chunk, codec, false)
+}
+
+/// Like [`connect`], with `rejoin` setting bit 0 of the v3 Hello flags
+/// byte (§8.2): the server deterministically evicts a stale
+/// registration for this worker id instead of answering
+/// `REJECT_DUPLICATE`. This is the path a crashed-and-restarted
+/// external worker takes (`multibulyan worker --rejoin`).
+pub fn connect_opts(
+    addr: &str,
+    worker: usize,
+    chunk: usize,
+    codec: crate::codec::CodecKind,
+    rejoin: bool,
+) -> anyhow::Result<WorkerClient> {
     let mut stream = connect_stream(addr)?;
+    let payload = if rejoin {
+        vec![codec.wire_id(), 0x01]
+    } else {
+        vec![codec.wire_id()]
+    };
     write_frame(
         &mut stream,
         &Frame {
             kind: PayloadKind::Hello,
             round: 0,
             worker: worker as u32,
-            payload: vec![codec.wire_id()],
+            payload,
         },
     )
     .map_err(|e| anyhow::anyhow!("worker {worker}: sending Hello to {addr}: {e}"))?;
@@ -1517,6 +1616,22 @@ impl WorkerClient {
             }
         }
     }
+
+    /// Orderly departure (§8.1): send a Goodbye frame and close the
+    /// connection. The server marks this id departed — the run
+    /// continues without it — and the slot is free for a later rejoin.
+    pub fn goodbye(mut self) -> anyhow::Result<()> {
+        write_frame(
+            &mut self.stream,
+            &Frame {
+                kind: PayloadKind::Goodbye,
+                round: 0,
+                worker: self.worker,
+                payload: Vec::new(),
+            },
+        )
+        .map_err(|e| anyhow::anyhow!("worker {}: sending Goodbye: {e}", self.worker))
+    }
 }
 
 /// Build the socket star: bind per `opts`, start the accept thread,
@@ -1539,6 +1654,8 @@ pub(super) fn star(
         state: Mutex::new(ServerState {
             conns: (0..n).map(|_| None).collect(),
             pending: None,
+            departed: vec![false; n],
+            generation: vec![0; n],
         }),
         tx,
         stop: AtomicBool::new(false),
@@ -1603,6 +1720,7 @@ mod tests {
             (PayloadKind::GradientChunk, 8 + 4 * DEFAULT_CHUNK),
             (PayloadKind::Reject, 1),
             (PayloadKind::Shutdown, 0),
+            (PayloadKind::Goodbye, 0),
         ] {
             roundtrip(&Frame {
                 kind,
@@ -1624,6 +1742,7 @@ mod tests {
                 PayloadKind::GradientChunk,
                 PayloadKind::Reject,
                 PayloadKind::Shutdown,
+                PayloadKind::Goodbye,
             ];
             let frame = Frame {
                 kind: kinds[rng.gen_range_usize(kinds.len())],

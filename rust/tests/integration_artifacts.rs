@@ -168,6 +168,8 @@ fn training_through_pjrt_learns_under_attack() {
         codec: None,
         groups: 1,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     };
     let cluster = launch(&exp, Some((server.handle(), manifest))).unwrap();
     let mut coordinator = cluster.coordinator;

@@ -48,6 +48,8 @@ fn quadratic_exp(
         codec: None,
         groups: 1,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     }
 }
 

@@ -1,0 +1,217 @@
+//! End-to-end tests for the durable round-journal: warm restart via
+//! verified deterministic replay, exactly-once round semantics, and the
+//! recovery failure modes (replay divergence, corrupt record, torn
+//! tail). The crash-*injection* variant of the same property — a real
+//! `--crash-after-round` abort followed by a resumed process — runs in
+//! the CI recovery leg (`.github/workflows/ci.yml`); here the
+//! interruption is simulated by dropping the coordinator mid-run, which
+//! exercises the identical journal state machine without killing the
+//! test harness.
+
+use multibulyan::attacks::AttackKind;
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::{launch, Coordinator, Journal};
+use multibulyan::gar::GarKind;
+use multibulyan::transport::TransportKind;
+use multibulyan::util;
+use std::path::PathBuf;
+
+const TRANSPORTS: [TransportKind; 3] = [
+    TransportKind::Threaded,
+    TransportKind::Pooled,
+    TransportKind::Socket,
+];
+
+fn exp(transport: TransportKind, journal: Option<&PathBuf>, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        cluster: ClusterConfig {
+            n: 7,
+            f: 1,
+            actual_byzantine: Some(1),
+            ..Default::default()
+        },
+        gar: GarKind::MultiKrum,
+        pre: Vec::new(),
+        attack: AttackKind::SignFlip { scale: 5.0 },
+        model: ModelConfig::Quadratic {
+            dim: 32,
+            noise: 0.3,
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.0,
+            steps: 6,
+            batch_size: 8,
+            eval_every: 0,
+            seed,
+        },
+        threads: 2,
+        transport,
+        collect: Default::default(),
+        overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
+        groups: 1,
+        output_dir: None,
+        journal: journal.map(|p| p.display().to_string()),
+        crash_after_round: None,
+    }
+}
+
+fn journal_path(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "mb_it_journal_{tag}_{}.mbjr",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Run `rounds` view-driven rounds and return the final parameters.
+fn drive(coordinator: &mut Coordinator, rounds: usize) -> Vec<f32> {
+    for _ in 0..rounds {
+        let view = coordinator.next_view();
+        coordinator.run_round(&view).unwrap();
+    }
+    coordinator.params().to_vec()
+}
+
+#[test]
+fn interrupted_run_resumes_bit_identically_on_every_transport() {
+    for transport in TRANSPORTS {
+        let path = journal_path(&format!("resume_{transport}"));
+
+        // Reference: 6 uninterrupted rounds, no journal.
+        let cluster = launch(&exp(transport, None, 29), None).unwrap();
+        let mut coordinator = cluster.coordinator;
+        let reference = drive(&mut coordinator, 6);
+        coordinator.shutdown();
+
+        // Interrupted run: 3 journalled rounds, then the process "dies"
+        // (coordinator dropped without finishing).
+        let cluster = launch(&exp(transport, Some(&path), 29), None).unwrap();
+        let mut coordinator = cluster.coordinator;
+        let at_crash = drive(&mut coordinator, 3);
+        assert_eq!(coordinator.metrics.counter("journal_committed"), 3);
+        assert_eq!(coordinator.metrics.counter("journal_replayed"), 0);
+        coordinator.shutdown();
+
+        // The journal alone carries the restart point.
+        let journal = Journal::open(&path).unwrap();
+        assert_eq!(journal.last_committed(), 3, "{transport}");
+        assert_eq!(journal.truncated_bytes(), 0);
+        let rec = journal.record(3).unwrap();
+        assert_eq!(rec.round, 3);
+        assert_eq!(rec.workers, (0..6u32).collect::<Vec<_>>());
+        assert_eq!(rec.collected, 6);
+        assert_eq!(rec.missing, 0);
+        assert_eq!(
+            rec.params_checksum,
+            util::fnv1a(at_crash.iter().flat_map(|v| v.to_le_bytes())),
+            "{transport}: journalled checksum must match the params at \
+             the interruption point"
+        );
+        drop(journal);
+
+        // Resume: rounds 1..=3 re-execute under verification (replayed,
+        // never re-committed — exactly-once), rounds 4..=6 commit.
+        let cluster = launch(&exp(transport, Some(&path), 29), None).unwrap();
+        let mut coordinator = cluster.coordinator;
+        let resumed = drive(&mut coordinator, 6);
+        assert_eq!(coordinator.metrics.counter("journal_replayed"), 3);
+        assert_eq!(coordinator.metrics.counter("journal_committed"), 3);
+        coordinator.shutdown();
+        assert_eq!(
+            resumed, reference,
+            "{transport}: interrupted-then-resumed run must be \
+             bit-identical to the uninterrupted run"
+        );
+        let journal = Journal::open(&path).unwrap();
+        assert_eq!(journal.last_committed(), 6);
+        assert_eq!(
+            journal.expected_checksum(6).unwrap(),
+            util::fnv1a(reference.iter().flat_map(|v| v.to_le_bytes()))
+        );
+        drop(journal);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn replay_divergence_is_a_hard_error() {
+    // A journal from seed 29 resumed under seed 30: round 1 re-executes
+    // to different parameters, the checksum verification refuses to
+    // continue — a warm restart never silently forks the trajectory.
+    let path = journal_path("diverge");
+    let cluster = launch(&exp(TransportKind::Pooled, Some(&path), 29), None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    drive(&mut coordinator, 2);
+    coordinator.shutdown();
+
+    let cluster = launch(&exp(TransportKind::Pooled, Some(&path), 30), None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let view = coordinator.next_view();
+    let err = coordinator.run_round(&view).unwrap_err().to_string();
+    assert!(
+        err.contains("replay divergence"),
+        "wrong error for a diverging replay: {err}"
+    );
+    coordinator.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_record_refuses_resume_end_to_end() {
+    // Flip one payload byte of the first committed record: the frame is
+    // complete, so this is corruption — `launch` (via `Journal::open`)
+    // must hard-error, not truncate-and-carry-on.
+    let path = journal_path("corrupt");
+    let cluster = launch(&exp(TransportKind::Pooled, Some(&path), 29), None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    drive(&mut coordinator, 2);
+    coordinator.shutdown();
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[14] ^= 0xFF; // inside record 1's payload (header is 8 bytes, len 4)
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = launch(&exp(TransportKind::Pooled, Some(&path), 29), None)
+        .err()
+        .expect("corrupt journal must refuse to launch")
+        .to_string();
+    assert!(err.contains("checksum"), "wrong corrupt-journal error: {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn torn_tail_is_truncated_and_resume_continues() {
+    // A partial frame after the last committed record — the shape a
+    // mid-write crash leaves behind — is dropped on open, and the resume
+    // still lands on the uninterrupted run's bits.
+    let path = journal_path("torn");
+    let cluster = launch(&exp(TransportKind::Pooled, None, 29), None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let reference = drive(&mut coordinator, 6);
+    coordinator.shutdown();
+
+    let cluster = launch(&exp(TransportKind::Pooled, Some(&path), 29), None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    drive(&mut coordinator, 3);
+    coordinator.shutdown();
+
+    // Torn tail: a length field claiming 64 payload bytes, then EOF.
+    use std::io::Write;
+    let mut file = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+    file.write_all(&64u32.to_le_bytes()).unwrap();
+    file.write_all(&[0xAB; 10]).unwrap();
+    drop(file);
+
+    let cluster = launch(&exp(TransportKind::Pooled, Some(&path), 29), None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let resumed = drive(&mut coordinator, 6);
+    assert_eq!(coordinator.metrics.counter("journal_replayed"), 3);
+    assert_eq!(coordinator.metrics.counter("journal_committed"), 3);
+    coordinator.shutdown();
+    assert_eq!(resumed, reference);
+    let _ = std::fs::remove_file(&path);
+}

@@ -44,6 +44,8 @@ fn pooled_exp(n: usize, f: usize, byz: usize, attack: AttackKind, steps: usize) 
         codec: None,
         groups: 1,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     }
 }
 
@@ -82,7 +84,8 @@ fn pooled_runtime_handles_512_logical_workers_per_round() {
     let cluster = launch(&exp, None).unwrap();
     let mut coordinator = cluster.coordinator;
     for _ in 0..2 {
-        let outcome = coordinator.run_round().unwrap();
+        let view = coordinator.next_view();
+        let outcome = coordinator.run_round(&view).unwrap();
         assert_eq!(outcome.collected, 512, "round {}", outcome.round);
         assert_eq!(outcome.missing, 0);
     }
@@ -100,7 +103,8 @@ fn pooled_and_threaded_runs_are_bit_identical_at_scale() {
         let cluster = launch(&exp, None).unwrap();
         let mut coordinator = cluster.coordinator;
         for _ in 0..10 {
-            coordinator.run_round().unwrap();
+            let view = coordinator.next_view();
+            coordinator.run_round(&view).unwrap();
         }
         let params = coordinator.params().to_vec();
         coordinator.shutdown();

@@ -7,9 +7,16 @@
 //! last-good cache.
 
 use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
-use multibulyan::coordinator::launch;
+use multibulyan::coordinator::{launch, Coordinator, CoordinatorOptions, Evaluator};
+use multibulyan::data::QuadraticProblem;
 use multibulyan::gar::GarKind;
-use multibulyan::transport::{CollectMode, TransportKind};
+use multibulyan::runtime::Parallelism;
+use multibulyan::transport::{
+    build, CollectMode, Emitter, FaultModel, TransportKind, WorkerBody,
+};
+use multibulyan::worker::{GradSource, GradWorker};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn straggler_exp(
     n: usize,
@@ -56,6 +63,8 @@ fn straggler_exp(
         codec: None,
         groups: 1,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     }
 }
 
@@ -70,7 +79,8 @@ fn run_first_m(transport: TransportKind, threads: usize) -> (Vec<f32>, Vec<(usiz
     let mut coordinator = cluster.coordinator;
     let mut outcomes = Vec::new();
     for _ in 0..6 {
-        let out = coordinator.run_round().unwrap();
+        let view = coordinator.next_view();
+        let out = coordinator.run_round(&view).unwrap();
         outcomes.push((out.collected, out.missing));
     }
     let params = coordinator.params().to_vec();
@@ -111,7 +121,8 @@ fn wait_all_with_cost_model_is_bit_identical_across_backends() {
         let cluster = launch(&exp, None).unwrap();
         let mut coordinator = cluster.coordinator;
         for _ in 0..4 {
-            let out = coordinator.run_round().unwrap();
+            let view = coordinator.next_view();
+            let out = coordinator.run_round(&view).unwrap();
             assert_eq!(out.collected, 12, "wait-all must get everyone");
             assert_eq!(out.missing, 0);
         }
@@ -124,27 +135,59 @@ fn wait_all_with_cost_model_is_bit_identical_across_backends() {
     assert_eq!(reference, run(TransportKind::Pooled, 4));
 }
 
+/// Delivers normally in round 1, then goes silent for good — the
+/// deterministic stand-in for a worker that straggles past every later
+/// deadline (no sleeps, no races).
+struct WarmupThenSilent(GradWorker);
+impl WorkerBody for WarmupThenSilent {
+    fn on_round(&mut self, round: u64, params: &[f32], emit: &mut Emitter<'_>) {
+        if round == 1 {
+            self.0.on_round(round, params, emit);
+        }
+    }
+}
+
 #[test]
-fn straggler_is_left_behind_by_first_m_and_recovered_from_the_last_good_cache() {
-    // Round 1 runs wait-all to let the 30× straggler deliver once (the
-    // cache warm-up); every later round runs first-m, leaves it behind,
-    // and substitutes its cached gradient — training stays healthy.
-    let mut exp = straggler_exp(8, 1, 1, CollectMode::All, TransportKind::Pooled, 2);
-    exp.cluster.straggler_factor = 30.0;
-    exp.model = ModelConfig::Quadratic {
-        dim: 32,
-        noise: 0.1,
-    };
-    let cluster = launch(&exp, None).unwrap();
-    let mut coordinator = cluster.coordinator;
-    let mut evaluator = cluster.evaluator;
-    let out = coordinator.run_round().unwrap();
+fn straggler_is_left_behind_by_the_deadline_and_recovered_from_the_last_good_cache() {
+    // Collection semantics are a construction-time knob now (the post-hoc
+    // `set_collect` mutator no longer exists), so the cache warm-up is
+    // scripted at the worker instead: worker 7 delivers once in round 1
+    // and never again. Wait-all collects everyone in round 1 (populating
+    // the cache), and every later round times out at 7 gradients and
+    // substitutes the cached round-1 gradient — training stays healthy.
+    let d = 32;
+    let problem = Arc::new(QuadraticProblem::new(d, 0.1, 11));
+    let (server, workers) = build(
+        TransportKind::Threaded,
+        8,
+        FaultModel::default(),
+        &Parallelism::new(1),
+    );
+    for (i, ep) in workers.into_iter().enumerate() {
+        let inner = GradWorker::new(GradSource::quadratic(Arc::clone(&problem), i, 8));
+        if i == 7 {
+            ep.serve(WarmupThenSilent(inner));
+        } else {
+            ep.serve(inner);
+        }
+    }
+    let mut coordinator = Coordinator::builder(GarKind::MultiKrum.instantiate(8, 1).unwrap())
+        .options(CoordinatorOptions {
+            round_timeout: Duration::from_millis(40),
+            collect: CollectMode::All,
+            ..Default::default()
+        })
+        .build(server, vec![0.0; d], 0.1, 0.0)
+        .unwrap();
+    let mut evaluator = Evaluator::Quadratic(Arc::clone(&problem));
+    let view = coordinator.next_view();
+    let out = coordinator.run_round(&view).unwrap();
     assert_eq!(out.collected, 8, "warm-up round populates the cache");
     assert_eq!(out.missing, 0);
-    coordinator.set_collect(CollectMode::FirstM);
     for _ in 0..30 {
-        let out = coordinator.run_round().unwrap();
-        assert_eq!(out.collected, 7, "first-m = n − f = 7");
+        let view = coordinator.next_view();
+        let out = coordinator.run_round(&view).unwrap();
+        assert_eq!(out.collected, 7, "the silent worker misses the deadline");
         assert_eq!(out.missing, 1, "the straggler falls through the cache");
     }
     assert_eq!(coordinator.metrics.counter("gradients_missing"), 30);

@@ -259,3 +259,35 @@ fn unsafe_modules_carry_no_allow_escapes() {
         );
     }
 }
+
+/// Acceptance criterion: the journal + membership modules sit inside
+/// the full catalog's scope (they live under `rust/src/coordinator/`,
+/// a float-reduce directory — the durable-recovery path must be as
+/// deterministic as the aggregation it replays) and carry zero
+/// escapes of any kind.
+#[test]
+fn journal_and_membership_modules_are_in_scope_with_zero_escapes() {
+    for rel in [
+        "rust/src/coordinator/journal.rs",
+        "rust/src/coordinator/membership.rs",
+    ] {
+        assert!(
+            rules::FLOAT_REDUCE_SCOPE
+                .iter()
+                .any(|p| rel.starts_with(p)),
+            "{rel} fell out of the float-reduce scope"
+        );
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let text = std::fs::read_to_string(root.join(rel)).unwrap();
+        assert!(
+            !text.contains("lint:allow") && !text.contains("LINT:"),
+            "{rel} uses a lint escape; the journal/membership layer \
+             must pass the catalog clean"
+        );
+        let findings = lint_source(rel, &text);
+        assert!(
+            findings.is_empty(),
+            "{rel} has lint findings: {findings:?}"
+        );
+    }
+}

@@ -69,6 +69,8 @@ fn base_exp(
         codec: None,
         groups,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     }
 }
 
@@ -77,7 +79,8 @@ fn run_rounds(exp: &ExperimentConfig, steps: usize) -> (Vec<f32>, u64) {
     let cluster = launch(exp, None).unwrap();
     let mut coordinator = cluster.coordinator;
     for _ in 0..steps {
-        let out = coordinator.run_round().unwrap();
+        let view = coordinator.next_view();
+        let out = coordinator.run_round(&view).unwrap();
         assert_eq!(out.missing, 0, "no worker may go missing in these runs");
     }
     let params = coordinator.params().to_vec();

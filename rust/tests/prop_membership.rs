@@ -1,0 +1,241 @@
+//! Property tests for elastic membership (`MembershipView` /
+//! `Coordinator::run_round(&view)`).
+//!
+//! Three invariants are pinned here:
+//!
+//! 1. **A full view is the frozen-fleet path, bit for bit.** Driving
+//!    rounds with `next_view()` on a static fleet (no churn, no
+//!    departures) lands on exactly the parameters of the
+//!    `full_view()`-driven frozen-fleet reference — across all seven
+//!    GARs, all three transport backends and every thread count.
+//!    Elasticity costs nothing until a worker actually leaves.
+//! 2. **Scripted churn is deterministic.** A leave-then-rejoin schedule
+//!    produces bit-identical parameters on all three transports and
+//!    every thread count, shrinks collection to the active fleet
+//!    (never waiting out the timeout for a scripted absentee), and
+//!    fires the membership metrics — two view changes, and one
+//!    deliberate `ResilientMomentum` re-zero per shape change.
+//! 3. **View misuse is a hard error, not a silent degradation**: stale
+//!    round numbers, an `f` mismatch, a shrink below the GAR's
+//!    `min_n(f)` quorum, and a shrunken view in grouped mode all
+//!    refuse to run.
+
+use multibulyan::attacks::AttackKind;
+use multibulyan::config::{ClusterConfig, ExperimentConfig, ModelConfig, TrainConfig};
+use multibulyan::coordinator::{launch, MembershipView};
+use multibulyan::gar::{GarKind, StageSpec};
+use multibulyan::transport::TransportKind;
+
+const TRANSPORTS: [TransportKind; 3] = [
+    TransportKind::Threaded,
+    TransportKind::Pooled,
+    TransportKind::Socket,
+];
+
+fn base_exp(
+    gar: GarKind,
+    pre: Vec<StageSpec>,
+    transport: TransportKind,
+    threads: usize,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        cluster: ClusterConfig {
+            n: 7,
+            f: 1,
+            actual_byzantine: Some(1),
+            ..Default::default()
+        },
+        gar,
+        pre,
+        attack: AttackKind::SignFlip { scale: 5.0 },
+        model: ModelConfig::Quadratic {
+            dim: 48,
+            noise: 0.3,
+        },
+        train: TrainConfig {
+            learning_rate: 0.1,
+            momentum: 0.0,
+            steps: 2,
+            batch_size: 8,
+            eval_every: 0,
+            seed: 23,
+        },
+        threads,
+        transport,
+        collect: Default::default(),
+        overlap: Default::default(),
+        overlap_window: 1,
+        codec: None,
+        groups: 1,
+        output_dir: None,
+        journal: None,
+        crash_after_round: None,
+    }
+}
+
+#[test]
+fn full_view_reproduces_the_frozen_fleet_path_for_every_gar() {
+    // n = 7, f = 1 admits every rule (bulyan's 4f+3 = 7 is the tightest
+    // quorum). The reference run drives `full_view()` — the frozen-fleet
+    // path by construction; every other run drives `next_view()` — the
+    // elastic entry, which on a static fleet must resolve to the same
+    // full view and the same bits.
+    for gar in GarKind::ALL {
+        let reference = {
+            let exp = base_exp(gar, Vec::new(), TransportKind::Pooled, 1);
+            let cluster = launch(&exp, None).unwrap();
+            let mut coordinator = cluster.coordinator;
+            for _ in 0..2 {
+                let view = coordinator.full_view();
+                coordinator.run_round(&view).unwrap();
+            }
+            let params = coordinator.params().to_vec();
+            coordinator.shutdown();
+            params
+        };
+        for transport in TRANSPORTS {
+            for threads in [1usize, 2, 4] {
+                let exp = base_exp(gar, Vec::new(), transport, threads);
+                let cluster = launch(&exp, None).unwrap();
+                let mut coordinator = cluster.coordinator;
+                for _ in 0..2 {
+                    let view = coordinator.next_view();
+                    // Static fleet: the elastic entry and the frozen
+                    // fleet see the very same view.
+                    assert_eq!(view, coordinator.full_view());
+                    coordinator.run_round(&view).unwrap();
+                }
+                assert_eq!(
+                    coordinator.metrics.counter("membership_view_changes"),
+                    0,
+                    "{gar} {transport} threads={threads}: static fleet \
+                     must record no view change"
+                );
+                assert_eq!(
+                    reference,
+                    coordinator.params(),
+                    "{gar} {transport} threads={threads}: next_view() run \
+                     diverged from the frozen-fleet reference"
+                );
+                coordinator.shutdown();
+            }
+        }
+    }
+}
+
+/// n = 9, f = 1, no actual attackers: workers 0 and 1 leave at round 3
+/// and rejoin at round 5 (low ids leave — see `ChurnModel`). Krum's
+/// quorum 2f+3 = 5 holds at the shrunken n' = 7.
+fn churn_exp(transport: TransportKind, threads: usize) -> ExperimentConfig {
+    let mut exp = base_exp(
+        GarKind::Krum,
+        vec![StageSpec::ResilientMomentum { beta: 0.9 }],
+        transport,
+        threads,
+    );
+    exp.cluster.n = 9;
+    exp.cluster.actual_byzantine = Some(0);
+    exp.cluster.churn_leave_round = 3;
+    exp.cluster.churn_workers = 2;
+    exp.cluster.churn_rejoin_round = 5;
+    exp.attack = AttackKind::None;
+    exp
+}
+
+#[test]
+fn scripted_churn_shrinks_rejoins_and_stays_bit_identical_across_backends() {
+    let mut reference: Option<Vec<f32>> = None;
+    for transport in TRANSPORTS {
+        for threads in [1usize, 2, 4] {
+            let exp = churn_exp(transport, threads);
+            let cluster = launch(&exp, None).unwrap();
+            let mut coordinator = cluster.coordinator;
+            for round in 1..=6u64 {
+                let view = coordinator.next_view();
+                let expected_active = if (3..5).contains(&round) { 7 } else { 9 };
+                assert_eq!(
+                    view.active(),
+                    expected_active,
+                    "{transport} threads={threads} round {round}"
+                );
+                let out = coordinator.run_round(&view).unwrap();
+                // Collection tracks the view: a scripted absentee is not
+                // waited for (no timeout expiry, no missing slot).
+                assert_eq!(out.collected, expected_active);
+                assert_eq!(out.missing, 0);
+                // Selected ids are members (original ids, never
+                // renumbered): workers 0 and 1 are not selectable while
+                // absent.
+                for w in &out.selected {
+                    assert!(view.contains(*w), "round {round} selected non-member {w}");
+                }
+            }
+            // Shrink + regrow = two view changes, and each shape change
+            // deliberately re-zeros the ResilientMomentum state.
+            assert_eq!(coordinator.metrics.counter("membership_view_changes"), 2);
+            assert_eq!(coordinator.metrics.counter("membership_rezeros"), 2);
+            let params = coordinator.params().to_vec();
+            assert!(params.iter().all(|v| v.is_finite()));
+            coordinator.shutdown();
+            match &reference {
+                None => reference = Some(params),
+                Some(r) => assert_eq!(
+                    r, &params,
+                    "{transport} threads={threads}: churn run diverged \
+                     (the elastic re-shard must be a pure function of the \
+                      view, independent of backend and thread count)"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn view_misuse_is_a_hard_error() {
+    // MultiKrum n = 7, f = 1: quorum min_n = 2f+3 = 5.
+    let exp = base_exp(GarKind::MultiKrum, Vec::new(), TransportKind::Pooled, 1);
+    let cluster = launch(&exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+
+    // Stale round number.
+    let view = coordinator.next_view();
+    coordinator.run_round(&view).unwrap();
+    let err = coordinator.run_round(&view).unwrap_err().to_string();
+    assert!(err.contains("round"), "stale view: {err}");
+
+    // Declared-f mismatch.
+    let mut view = coordinator.next_view();
+    view.f = 2;
+    let err = coordinator.run_round(&view).unwrap_err().to_string();
+    assert!(err.contains("f = 2"), "f mismatch: {err}");
+
+    // Quorum violation: 3 active + 1 byz = 4 < min_n = 5.
+    let mut view = coordinator.next_view();
+    view.workers.truncate(3);
+    let err = coordinator.run_round(&view).unwrap_err().to_string();
+    assert!(err.contains("min_n"), "quorum violation: {err}");
+
+    // Malformed view: not strictly ascending.
+    let mut view = coordinator.next_view();
+    view.workers.swap(0, 1);
+    assert!(coordinator.run_round(&view).is_err());
+    coordinator.shutdown();
+
+    // Grouped mode admits only full views.
+    let mut exp = base_exp(GarKind::TrimmedMean, Vec::new(), TransportKind::Pooled, 1);
+    exp.cluster.n = 12;
+    exp.cluster.f = 1;
+    exp.cluster.actual_byzantine = Some(0);
+    exp.attack = AttackKind::None;
+    exp.groups = 3;
+    let cluster = launch(&exp, None).unwrap();
+    let mut coordinator = cluster.coordinator;
+    let mut view = coordinator.next_view();
+    view.workers.pop();
+    let err = coordinator.run_round(&view).unwrap_err().to_string();
+    assert!(err.contains("full membership view"), "grouped shrink: {err}");
+    let full = coordinator.next_view();
+    assert!(MembershipView::full(full.round, 12, 1) == full);
+    coordinator.run_round(&full).unwrap();
+    coordinator.shutdown();
+}

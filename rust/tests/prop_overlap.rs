@@ -77,6 +77,8 @@ fn overlap_exp(
         codec: None,
         groups: 1,
         output_dir: None,
+        journal: None,
+        crash_after_round: None,
     }
 }
 
@@ -86,7 +88,8 @@ fn run_overlap_exp(exp: &ExperimentConfig) -> (Vec<f32>, Vec<(usize, usize)>, u6
     let mut outcomes = Vec::new();
     let mut saved = 0u64;
     for _ in 0..exp.train.steps {
-        let out = coordinator.run_round().unwrap();
+        let view = coordinator.next_view();
+        let out = coordinator.run_round(&view).unwrap();
         outcomes.push((out.collected, out.missing));
         saved += out.overlap_saved_us;
     }
@@ -215,27 +218,22 @@ fn prefix_overlap_is_bit_identical_under_malformed_gradients() {
                 )));
             }
         }
-        let mut coord = Coordinator::new(
-            GarKind::MultiKrum.instantiate(9, 3).unwrap(),
-            None,
-            0,
-            server,
-            vec![0.0; d],
-            0.1,
-            0.0,
-            CoordinatorOptions {
+        let mut coord = Coordinator::builder(GarKind::MultiKrum.instantiate(9, 3).unwrap())
+            .options(CoordinatorOptions {
                 round_timeout: Duration::from_secs(10),
                 schedule: LrSchedule::Fixed { base: 0.1 },
                 seed: 7,
                 collect: CollectMode::FirstM,
                 overlap,
                 overlap_window: 1,
-            },
-        )
-        .unwrap();
+                ..Default::default()
+            })
+            .build(server, vec![0.0; d], 0.1, 0.0)
+            .unwrap();
         let mut outcomes = Vec::new();
         for _ in 0..3 {
-            let out = coord.run_round().unwrap();
+            let view = coord.next_view();
+            let out = coord.run_round(&view).unwrap();
             outcomes.push((out.collected, out.missing));
         }
         let params = coord.params().to_vec();
@@ -298,15 +296,19 @@ fn late_gradient_lands_in_cache_and_never_perturbs_the_current_round() {
             codec: None,
             groups: 1,
             output_dir: None,
+            journal: None,
+            crash_after_round: None,
         }
     };
     let run = |overlap: OverlapMode| -> (Vec<f32>, Vec<f32>, u64, u64) {
         let cluster = launch(&exp(overlap), None).unwrap();
         let mut coordinator = cluster.coordinator;
-        let r1 = coordinator.run_round().unwrap();
+        let view = coordinator.next_view();
+        let r1 = coordinator.run_round(&view).unwrap();
         assert_eq!((r1.collected, r1.missing), (6, 1), "{overlap}");
         let after_r1 = coordinator.params().to_vec();
-        let r2 = coordinator.run_round().unwrap();
+        let view = coordinator.next_view();
+        let r2 = coordinator.run_round(&view).unwrap();
         assert_eq!((r2.collected, r2.missing), (6, 1), "{overlap}");
         let after_r2 = coordinator.params().to_vec();
         let late = coordinator.metrics.counter("gradients_late_cached");

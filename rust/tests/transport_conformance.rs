@@ -419,10 +419,12 @@ fn malformed_and_short_frames_never_occupy_a_quorum_slot() {
 }
 
 #[test]
-fn duplicate_worker_registration_first_connection_wins() {
-    // §6.5 (registration state machine): a second Hello claiming an
-    // occupied worker id draws Reject(DUPLICATE) and a close; the first
-    // connection keeps the slot and keeps working.
+fn duplicate_worker_registration_live_incumbent_wins() {
+    // §6.5 (registration state machine, v3): a plain second Hello
+    // claiming an occupied worker id probes the incumbent with a Hello
+    // ping; a live incumbent wins — the newcomer draws Reject(DUPLICATE)
+    // and a close, and the incumbent (after reading the informational
+    // ping) keeps the slot and keeps working.
     let mut server = external_server(1, socket::DEFAULT_CHUNK);
     let addr = server.socket_addr().unwrap().to_string();
     let mut first = raw_register(&addr, 0);
@@ -446,6 +448,12 @@ fn duplicate_worker_registration_first_connection_wins() {
         Err(FrameError::Closed)
     ));
 
+    // The incumbent received the liveness probe — an informational Hello
+    // ping clients must tolerate (§8.2).
+    let ping = read_frame(&mut first, None).expect("liveness probe");
+    assert_eq!(ping.kind, PayloadKind::Hello);
+    assert_eq!(ping.worker, 0);
+
     server.broadcast(1, Arc::new(vec![0.25f32]));
     let rr = read_frame(&mut first, None).expect("round result");
     assert_eq!(rr.round, 1);
@@ -454,6 +462,178 @@ fn duplicate_worker_registration_first_connection_wins() {
     let got = server.collect(1, 1, Duration::from_secs(5));
     assert_eq!(got.len(), 1);
     assert_eq!(got[0].gradient, vec![4.0]);
+    server.shutdown();
+}
+
+/// Raw v3 handshake with a flags byte: payload `[codec, flags]` (§8.2).
+fn raw_register_flags(addr: &str, worker: u32, flags: u8) -> socket::Stream {
+    let mut conn = socket::connect_stream(addr).expect("connect");
+    write_frame(
+        &mut conn,
+        &Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker,
+            payload: vec![CodecKind::Raw.wire_id(), flags],
+        },
+    )
+    .expect("hello");
+    let ack = read_frame(&mut conn, None).expect("hello ack");
+    assert_eq!(ack.kind, PayloadKind::Hello);
+    assert_eq!(ack.worker, worker);
+    conn
+}
+
+#[test]
+fn rejoin_hello_evicts_the_incumbent_deterministically() {
+    // §8.2 (rejoin): a Hello whose flags byte sets bit 0 claims the slot
+    // unconditionally — the incumbent connection is shut down without a
+    // liveness probe (the operator asserted the restart) and the new
+    // connection carries the id from then on. This is the fix for the
+    // crashed-and-restarted external worker whose dead connection the
+    // server has not yet reaped: first-connection-wins would turn the
+    // restarted process away forever.
+    let mut server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut first = raw_register(&addr, 0);
+
+    let mut second = raw_register_flags(&addr, 0, 0x01);
+
+    // The evicted incumbent's connection is closed by the server.
+    assert!(
+        matches!(read_frame(&mut first, None), Err(FrameError::Closed)),
+        "evicted incumbent must observe a close"
+    );
+
+    // The new connection owns the slot: it gets the round and its
+    // gradient is the delivery.
+    server.broadcast(1, Arc::new(vec![0.0f32]));
+    let rr = read_frame(&mut second, None).expect("round result");
+    assert_eq!(rr.kind, PayloadKind::RoundResult);
+    assert_eq!(rr.round, 1);
+    let mut scratch = Vec::new();
+    write_chunk_frame(&mut second, 0, 1, 0, 1, &[6.0], &mut scratch).unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].worker, 0);
+    assert_eq!(got[0].gradient, vec![6.0]);
+    assert_eq!(
+        server.departed_workers(),
+        Vec::<usize>::new(),
+        "an evicted-and-replaced id is present, not departed"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn reserved_hello_flag_bits_draw_reject_malformed() {
+    // §8.2: the flags byte has exactly one defined bit; a Hello setting
+    // any reserved bit is malformed — no silent ignore that would make
+    // future flag assignments ambiguous.
+    let server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut conn = socket::connect_stream(&addr).expect("connect");
+    write_frame(
+        &mut conn,
+        &Frame {
+            kind: PayloadKind::Hello,
+            round: 0,
+            worker: 0,
+            payload: vec![CodecKind::Raw.wire_id(), 0x02],
+        },
+    )
+    .unwrap();
+    let reject = read_frame(&mut conn, None).expect("reject frame");
+    assert_eq!(reject.kind, PayloadKind::Reject);
+    assert_eq!(reject.payload, vec![REJECT_MALFORMED]);
+    assert!(matches!(read_frame(&mut conn, None), Err(FrameError::Closed)));
+    server.shutdown();
+}
+
+#[test]
+fn crashed_worker_rejoins_with_a_plain_hello() {
+    // §6.4 + §8.1/§8.2: an abrupt disconnect (process death) marks the
+    // id departed, and once the server has reaped the EOF a restarted
+    // worker re-registers with a plain Hello — no rejoin flag needed.
+    // (In the un-reaped window the restart would instead win the §6.5
+    // probe arbitration or force the slot with the rejoin flag; those
+    // branches are pinned by the two tests above.)
+    let mut server = external_server(1, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let first = raw_register(&addr, 0);
+    drop(first); // crash: no Goodbye, no Shutdown — just EOF
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        if server.departed_workers() == vec![0] {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "crash-detected disconnect never surfaced in departed_workers()"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let mut back = raw_register(&addr, 0);
+    assert_eq!(server.departed_workers(), Vec::<usize>::new());
+    server.broadcast(1, Arc::new(vec![0.0f32]));
+    let rr = read_frame(&mut back, None).expect("round result");
+    assert_eq!(rr.round, 1);
+    let mut scratch = Vec::new();
+    write_chunk_frame(&mut back, 0, 1, 0, 1, &[5.0], &mut scratch).unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].gradient, vec![5.0]);
+    server.shutdown();
+}
+
+#[test]
+fn goodbye_marks_departure_and_frees_the_slot_for_rejoin() {
+    // §8.1 (orderly departure): a Goodbye frame deregisters the sender —
+    // the id shows up in `departed_workers()` so the coordinator can
+    // shrink the next membership view — and the slot is free for a later
+    // Hello, which clears the departure flag again.
+    let mut server = external_server(2, socket::DEFAULT_CHUNK);
+    let addr = server.socket_addr().unwrap().to_string();
+    let mut w0 = raw_register(&addr, 0);
+    let _w1 = raw_register(&addr, 1);
+
+    write_frame(
+        &mut w0,
+        &Frame {
+            kind: PayloadKind::Goodbye,
+            round: 0,
+            worker: 0,
+            payload: Vec::new(),
+        },
+    )
+    .unwrap();
+    // The reader thread processes the Goodbye asynchronously.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        if server.departed_workers() == vec![0] {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "Goodbye never surfaced in departed_workers()"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Rejoin on a fresh connection: the departure flag clears and the
+    // worker delivers again.
+    let mut back = raw_register(&addr, 0);
+    assert_eq!(server.departed_workers(), Vec::<usize>::new());
+    server.broadcast(1, Arc::new(vec![0.0f32]));
+    let rr = read_frame(&mut back, None).expect("round result");
+    assert_eq!(rr.round, 1);
+    let mut scratch = Vec::new();
+    write_chunk_frame(&mut back, 0, 1, 0, 1, &[3.0], &mut scratch).unwrap();
+    let got = server.collect(1, 1, Duration::from_secs(5));
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].worker, 0);
     server.shutdown();
 }
 
@@ -684,6 +864,7 @@ fn frame_codec_encode_decode_is_bit_identical_property() {
         PayloadKind::GradientChunk,
         PayloadKind::Reject,
         PayloadKind::Shutdown,
+        PayloadKind::Goodbye,
     ];
     util::proptest::check(
         "frame codec bit-identity",
